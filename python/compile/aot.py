@@ -1,0 +1,112 @@
+"""AOT compiler: lower every Layer-2 entry point to HLO text artifacts.
+
+Interchange format is **HLO text**, not ``lowered.compile().serialize()``:
+jax >= 0.5 emits HloModuleProto with 64-bit instruction ids which the
+``xla`` crate's xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``);
+the HLO *text* parser reassigns ids and round-trips cleanly
+(see /opt/xla-example/README.md).
+
+Outputs (under ``--out-dir``, default ``../artifacts``):
+  * ``<name>.hlo.txt``  per entry point in :func:`compile.model.entry_points`
+  * ``manifest.json``   shapes/dtypes per artifact + the ModelConfig, read by
+                        the Rust runtime to construct input literals.
+
+Run once at build time (``make artifacts``); Python never runs on the
+request path.
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+import sys
+
+import jax
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (id-reassigning path)."""
+    from jax._src.lib import xla_client as xc
+
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_entry(fn, arg_specs) -> str:
+    return to_hlo_text(jax.jit(fn).lower(*arg_specs))
+
+
+def build_manifest(cfg: model.ModelConfig, entries) -> dict:
+    manifest = {
+        "config": dataclasses.asdict(cfg),
+        "artifacts": {},
+    }
+    for name, (_fn, specs) in entries.items():
+        manifest["artifacts"][name] = {
+            "file": f"{name}.hlo.txt",
+            "inputs": [
+                {"shape": list(s.shape), "dtype": str(s.dtype)} for s in specs
+            ],
+        }
+    return manifest
+
+
+def main(argv=None) -> int:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--out-dir", default=None, help="artifact directory")
+    # Back-compat with the scaffold Makefile: --out <file> sets out-dir.
+    p.add_argument("--out", default=None, help=argparse.SUPPRESS)
+    p.add_argument("--vocab", type=int, default=model.DEFAULT_CONFIG.vocab)
+    p.add_argument("--q", type=int, default=model.DEFAULT_CONFIG.q)
+    p.add_argument("--t", type=int, default=model.DEFAULT_CONFIG.t)
+    p.add_argument(
+        "--map-batch", type=int, default=model.DEFAULT_CONFIG.map_batch
+    )
+    p.add_argument(
+        "--keys-per-file",
+        type=int,
+        default=model.DEFAULT_CONFIG.keys_per_file,
+    )
+    args = p.parse_args(argv)
+
+    out_dir = args.out_dir
+    if out_dir is None and args.out is not None:
+        out_dir = os.path.dirname(os.path.abspath(args.out))
+    if out_dir is None:
+        out_dir = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+    out_dir = os.path.abspath(out_dir)
+    os.makedirs(out_dir, exist_ok=True)
+
+    cfg = model.ModelConfig(
+        vocab=args.vocab,
+        q=args.q,
+        t=args.t,
+        map_batch=args.map_batch,
+        keys_per_file=args.keys_per_file,
+    )
+    entries = model.entry_points(cfg)
+
+    for name, (fn, specs) in entries.items():
+        text = lower_entry(fn, specs)
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"aot: wrote {path} ({len(text)} chars)")
+
+    manifest = build_manifest(cfg, entries)
+    mpath = os.path.join(out_dir, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    print(f"aot: wrote {mpath}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

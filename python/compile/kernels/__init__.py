@@ -1,0 +1,13 @@
+"""Layer-1 Pallas kernels for hetcdc.
+
+All kernels are authored for TPU-style tiling (VMEM-resident blocks, MXU
+matmul shapes) but are lowered with ``interpret=True`` so the emitted HLO
+runs on the CPU PJRT client used by the Rust runtime (real-TPU lowering
+emits Mosaic custom-calls the CPU plugin cannot execute).
+
+Kernels:
+  * :mod:`matmul_kernel` -- tiled matmul, the Map-stage projection hot spot.
+  * :mod:`histogram_kernel` -- bucketed key histogram (TeraSort Map).
+  * :mod:`xor_kernel` -- bitwise XOR combine (the coded-shuffle primitive).
+  * :mod:`ref` -- pure-jnp oracles used by pytest as correctness ground truth.
+"""

@@ -1,0 +1,92 @@
+"""Tiled Pallas matmul: the Map-stage projection hot spot.
+
+The hetcdc Map function for the WordCount/feature workload computes, per
+file ``n``, the intermediate-value matrix ``V[:, n] = W @ counts[:, n]``
+(eq. (1) of the paper with ``g_{q,n}`` realized as a linear feature
+projection).  Batched over files this is a single matmul
+``IV[QT, B] = W[QT, V] @ C[V, B]`` -- the compute hot spot of the Map phase.
+
+TPU mapping (see DESIGN.md section "Hardware adaptation"):
+
+* blocks of ``(bm, bk) x (bk, bn)`` live in VMEM; the default 128 tile
+  matches the MXU systolic array (128x128);
+* the grid iterates ``(m, n, k)`` with ``k`` innermost so the f32 scratch
+  accumulator stays VMEM-resident across the contraction;
+* ``BlockSpec`` index maps express the HBM->VMEM schedule a CUDA kernel
+  would express with threadblocks + shared-memory staging.
+
+VMEM footprint per step (f32): ``bm*bk + bk*bn + 2*bm*bn`` words; with the
+default 128 tiles that is 256 KiB -- well under the ~16 MiB/core budget,
+leaving room for double buffering.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BLOCK = 128
+
+
+def _matmul_kernel(a_ref, b_ref, o_ref, acc_ref):
+    """One (bm, bn) output tile; accumulates over the k-grid axis."""
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(
+        a_ref[...], b_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(pl.program_id(2) == pl.num_programs(2) - 1)
+    def _store():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def matmul(
+    a: jax.Array,
+    b: jax.Array,
+    *,
+    bm: int = DEFAULT_BLOCK,
+    bn: int = DEFAULT_BLOCK,
+    bk: int = DEFAULT_BLOCK,
+    interpret: bool = True,
+) -> jax.Array:
+    """``a @ b`` via a Pallas kernel tiled ``(bm, bn, bk)``.
+
+    Shapes must tile evenly after clamping each block to the full dimension;
+    callers with ragged sizes should pad (the AOT entry points use fixed,
+    even shapes recorded in the artifact manifest).
+    """
+    m, k = a.shape
+    k2, n = b.shape
+    if k != k2:
+        raise ValueError(f"contraction mismatch: {a.shape} @ {b.shape}")
+    bm, bn, bk = min(bm, m), min(bn, n), min(bk, k)
+    if m % bm or n % bn or k % bk:
+        raise ValueError(
+            f"shapes ({m},{k})x({k},{n}) do not tile by ({bm},{bn},{bk})"
+        )
+    grid = (m // bm, n // bn, k // bk)
+    return pl.pallas_call(
+        _matmul_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), a.dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(a, b)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk"))
+def matmul_jit(a, b, bm=DEFAULT_BLOCK, bn=DEFAULT_BLOCK, bk=DEFAULT_BLOCK):
+    return matmul(a, b, bm=bm, bn=bn, bk=bk)

@@ -1,0 +1,37 @@
+"""Pure-jnp oracles for every Pallas kernel (pytest ground truth)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def matmul_ref(a: jax.Array, b: jax.Array) -> jax.Array:
+    """Reference for :func:`matmul_kernel.matmul`."""
+    return jnp.dot(a, b, preferred_element_type=jnp.float32).astype(a.dtype)
+
+
+def histogram_ref(keys: jax.Array, bounds: jax.Array) -> jax.Array:
+    """Reference for :func:`histogram_kernel.histogram`.
+
+    Per-row counts of keys in half-open buckets ``[bounds[i], bounds[i+1])``.
+    """
+    lo = bounds[:-1]
+    hi = bounds[1:]
+    in_bucket = (keys[:, :, None] >= lo[None, None, :]) & (
+        keys[:, :, None] < hi[None, None, :]
+    )
+    return jnp.sum(in_bucket.astype(jnp.int32), axis=1)
+
+
+def xor_ref(a: jax.Array, b: jax.Array) -> jax.Array:
+    """Reference for :func:`xor_kernel.xor_combine`."""
+    return jnp.bitwise_xor(a, b)
+
+
+def xor_reduce_ref(stack: jax.Array) -> jax.Array:
+    """Reference for :func:`xor_reduce_kernel.xor_reduce`."""
+    out = stack[0]
+    for i in range(1, stack.shape[0]):
+        out = jnp.bitwise_xor(out, stack[i])
+    return out

@@ -1,0 +1,60 @@
+"""Pallas bitwise-XOR kernel: the coded-shuffle combining primitive.
+
+The paper's Shuffle phase broadcasts XORs of intermediate values
+(eqs. (8)-(10)): node 1 sends ``v_{3,a} XOR v_{2,b}`` so that two receivers
+each recover their missing IV from one transmission.  This kernel is that
+combiner expressed over int32 lanes (IV payloads are bit-exact byte blocks;
+the Rust hot path views them as ``u64`` words -- see ``coding/xor.rs`` --
+and cross-checks against this kernel's artifact in integration tests).
+
+TPU mapping: pure VPU elementwise op on (8, 128)-lane int32 tiles; blocks
+stream HBM->VMEM with no reuse, so the kernel is bandwidth-bound and the
+block size only needs to be large enough to amortize grid overhead.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_ROWS = 8
+
+
+def _xor_kernel(a_ref, b_ref, o_ref):
+    o_ref[...] = jax.lax.bitwise_xor(a_ref[...], b_ref[...])
+
+
+def xor_combine(
+    a: jax.Array,
+    b: jax.Array,
+    *,
+    block_rows: int = DEFAULT_BLOCK_ROWS,
+    interpret: bool = True,
+) -> jax.Array:
+    """Elementwise ``a ^ b`` for equal-shape int32 2-D arrays."""
+    if a.shape != b.shape:
+        raise ValueError(f"shape mismatch {a.shape} vs {b.shape}")
+    rows, cols = a.shape
+    br = min(block_rows, rows)
+    if rows % br:
+        raise ValueError(f"rows {rows} do not tile by {br}")
+    grid = (rows // br,)
+    return pl.pallas_call(
+        _xor_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((br, cols), lambda i: (i, 0)),
+            pl.BlockSpec((br, cols), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((br, cols), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(a.shape, a.dtype),
+        interpret=interpret,
+    )(a, b)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows",))
+def xor_combine_jit(a, b, block_rows=DEFAULT_BLOCK_ROWS):
+    return xor_combine(a, b, block_rows=block_rows)

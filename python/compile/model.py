@@ -1,0 +1,148 @@
+"""Layer-2 JAX model: the Map/Reduce compute graphs of the hetcdc job.
+
+The paper (eq. (1)) decomposes each output function as
+``phi_q = h_q(g_{q,1}(w_1), ..., g_{q,N}(w_N))``.  This module defines the
+concrete ``g`` (Map) and ``h`` (Reduce) graphs used by the framework's two
+built-in workloads, each calling the Layer-1 Pallas kernels so that the
+kernels lower into the same HLO module:
+
+* **WordCount / feature projection** -- ``map_project``: per-file token-count
+  vectors are projected by a weight matrix into the ``Q x T`` intermediate
+  values; ``reduce_sum`` merges IVs across files (``h_q`` = sum).
+* **TeraSort range partition** -- ``map_histogram``: per-file keys are
+  bucketed against splitter boundaries into per-reducer count vectors.
+* **Coded shuffle combiner** -- ``xor_blocks``: the XOR encoder of
+  eqs. (8)-(10), exported so integration tests can cross-check the Rust
+  hot-path XOR bit-for-bit against the XLA artifact.
+
+Every public function returns a 1-tuple: the AOT path lowers with
+``return_tuple=True`` and the Rust runtime unwraps with ``to_tuple1``.
+
+Python here is build-time only: these graphs are lowered once by
+:mod:`compile.aot` into ``artifacts/*.hlo.txt`` and executed from Rust via
+PJRT; nothing in this package runs on the request path.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import matmul_kernel, histogram_kernel, xor_kernel, xor_reduce_kernel
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Static shapes baked into the AOT artifacts (see manifest.json).
+
+    Attributes:
+      vocab:       feature dimension V of the WordCount Map projection.
+      q:           number of reduce functions Q (== K nodes by default).
+      t:           IV length T per (function, file) pair, in f32 words.
+      map_batch:   files per Map invocation B (ragged tails are zero-padded;
+                   zero columns produce zero IVs which are harmless to sum).
+      keys_per_file: D, keys per TeraSort file.
+      xor_rows/xor_cols: block shape of the XOR-combiner artifact.
+    """
+
+    vocab: int = 256
+    q: int = 3
+    t: int = 32
+    map_batch: int = 16
+    keys_per_file: int = 512
+    reduce_batch: int = 16
+    xor_rows: int = 8
+    xor_cols: int = 128
+    xor_layers: int = 3
+
+    @property
+    def qt(self) -> int:
+        return self.q * self.t
+
+
+DEFAULT_CONFIG = ModelConfig()
+
+
+def map_project(w: jax.Array, counts: jax.Array):
+    """WordCount Map: ``IV[QT, B] = W[QT, V] @ counts[V, B]``.
+
+    Column ``n`` of the result, reshaped ``(Q, T)``, is the stack of
+    intermediate values ``v_{1,n}, ..., v_{Q,n}`` for file ``n``.
+    """
+    return (matmul_kernel.matmul(w, counts),)
+
+
+def map_histogram(keys: jax.Array, bounds: jax.Array):
+    """TeraSort Map: per-file bucket counts ``[B, QT]`` (int32).
+
+    Row ``n`` reshaped ``(Q, T)`` gives ``v_{q,n}`` = counts of file ``n``'s
+    keys in reducer ``q``'s ``T`` sub-ranges.
+    """
+    return (histogram_kernel.histogram(keys, bounds),)
+
+
+def reduce_sum(ivs: jax.Array):
+    """Reduce ``h_q``: merge a block of per-file IVs ``[RB, T] -> [T]``.
+
+    The Rust reduce phase folds file IVs in blocks of ``RB`` (padding the
+    tail with zeros), chaining partial sums, so one fixed-shape artifact
+    serves any N.
+    """
+    return (jnp.sum(ivs, axis=0),)
+
+
+def xor_blocks(a: jax.Array, b: jax.Array):
+    """Coded-shuffle combiner: elementwise ``a ^ b`` over int32 blocks."""
+    return (xor_kernel.xor_combine(a, b),)
+
+
+def xor_reduce(stack: jax.Array):
+    """Multi-way multicast encoder: XOR-fold ``stack[R, B, C] -> [B, C]``
+    (the (r+1)-group encoder of the homogeneous scheme [2])."""
+    return (xor_reduce_kernel.xor_reduce(stack),)
+
+
+def entry_points(cfg: ModelConfig = DEFAULT_CONFIG):
+    """AOT entry points: name -> (function, example argument shapes).
+
+    The shape specs drive both :mod:`compile.aot` lowering and the manifest
+    the Rust runtime reads to build input literals.
+    """
+    f32, i32 = jnp.float32, jnp.int32
+    return {
+        "map_project": (
+            map_project,
+            (
+                jax.ShapeDtypeStruct((cfg.qt, cfg.vocab), f32),
+                jax.ShapeDtypeStruct((cfg.vocab, cfg.map_batch), f32),
+            ),
+        ),
+        "map_histogram": (
+            map_histogram,
+            (
+                jax.ShapeDtypeStruct((cfg.map_batch, cfg.keys_per_file), i32),
+                jax.ShapeDtypeStruct((cfg.qt + 1,), i32),
+            ),
+        ),
+        "reduce_sum": (
+            reduce_sum,
+            (jax.ShapeDtypeStruct((cfg.reduce_batch, cfg.t), f32),),
+        ),
+        "xor_blocks": (
+            xor_blocks,
+            (
+                jax.ShapeDtypeStruct((cfg.xor_rows, cfg.xor_cols), i32),
+                jax.ShapeDtypeStruct((cfg.xor_rows, cfg.xor_cols), i32),
+            ),
+        ),
+        "xor_reduce": (
+            xor_reduce,
+            (
+                jax.ShapeDtypeStruct(
+                    (cfg.xor_layers, cfg.xor_rows, cfg.xor_cols), i32
+                ),
+            ),
+        ),
+    }

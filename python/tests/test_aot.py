@@ -1,0 +1,62 @@
+"""AOT pipeline: artifacts are emitted, parseable-looking, and manifested."""
+
+import json
+import os
+
+import pytest
+
+from compile import aot, model
+
+
+@pytest.fixture(scope="module")
+def built(tmp_path_factory):
+    out = tmp_path_factory.mktemp("artifacts")
+    rc = aot.main(["--out-dir", str(out), "--vocab", "64", "--q", "3", "--t", "8",
+                   "--map-batch", "4", "--keys-per-file", "32"])
+    assert rc == 0
+    return out
+
+
+class TestAotOutputs:
+    def test_all_artifacts_emitted(self, built):
+        for name in model.entry_points():
+            assert (built / f"{name}.hlo.txt").exists()
+        assert (built / "manifest.json").exists()
+
+    def test_hlo_text_headers(self, built):
+        for name in model.entry_points():
+            text = (built / f"{name}.hlo.txt").read_text()
+            assert text.startswith("HloModule"), name
+            assert "ENTRY" in text, name
+
+    def test_entry_layout_mentions_tuple_output(self, built):
+        # return_tuple=True => the entry computation returns a tuple; the
+        # Rust runtime unwraps with to_tuple1.
+        text = (built / "map_project.hlo.txt").read_text()
+        header = text.splitlines()[0]
+        assert "->(" in header.replace(" ", ""), header
+
+    def test_manifest_matches_entry_points(self, built):
+        manifest = json.loads((built / "manifest.json").read_text())
+        cfg = model.ModelConfig(vocab=64, q=3, t=8, map_batch=4, keys_per_file=32)
+        eps = model.entry_points(cfg)
+        assert set(manifest["artifacts"]) == set(eps)
+        for name, (_fn, specs) in eps.items():
+            entry = manifest["artifacts"][name]
+            assert entry["file"] == f"{name}.hlo.txt"
+            got = [tuple(i["shape"]) for i in entry["inputs"]]
+            want = [tuple(s.shape) for s in specs]
+            assert got == want, name
+
+    def test_manifest_records_config(self, built):
+        manifest = json.loads((built / "manifest.json").read_text())
+        assert manifest["config"]["vocab"] == 64
+        assert manifest["config"]["q"] == 3
+        assert manifest["config"]["t"] == 8
+
+    def test_no_mosaic_custom_calls(self, built):
+        # interpret=True must lower to plain HLO the CPU PJRT client can run.
+        for name in model.entry_points():
+            text = (built / f"{name}.hlo.txt").read_text()
+            assert "tpu_custom_call" not in text, name
+            assert "mosaic" not in text.lower(), name

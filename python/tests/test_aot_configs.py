@@ -1,0 +1,50 @@
+"""AOT lowering works for non-default shape configs (the `aot.py` flags a
+deployment would actually change), and the kernels stay correct there."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot, model
+from compile.kernels import ref
+
+
+# A deployment-shaped variant: more reducers, shorter IVs, small batch.
+VARIANT = model.ModelConfig(
+    vocab=128, q=4, t=16, map_batch=8, keys_per_file=64, reduce_batch=8
+)
+
+
+class TestVariantLowering:
+    @pytest.mark.parametrize("name", sorted(model.entry_points(VARIANT)))
+    def test_each_entry_point_lowers_to_hlo(self, name):
+        fn, specs = model.entry_points(VARIANT)[name]
+        text = aot.lower_entry(fn, specs)
+        assert text.startswith("HloModule")
+        assert "ENTRY" in text
+        assert "mosaic" not in text.lower()
+
+    def test_variant_map_project_numerics(self):
+        cfg = VARIANT
+        w = jax.random.normal(jax.random.PRNGKey(0), (cfg.qt, cfg.vocab), jnp.float32)
+        c = jax.random.normal(jax.random.PRNGKey(1), (cfg.vocab, cfg.map_batch), jnp.float32)
+        (ivs,) = model.map_project(w, c)
+        np.testing.assert_allclose(ivs, ref.matmul_ref(w, c), rtol=1e-4, atol=1e-4)
+
+    def test_variant_histogram_numerics(self):
+        cfg = VARIANT
+        keys = jax.random.randint(
+            jax.random.PRNGKey(2), (cfg.map_batch, cfg.keys_per_file), 0, 1 << 20, jnp.int32
+        )
+        bounds = jnp.linspace(0, 1 << 20, cfg.qt + 1).astype(jnp.int32)
+        (counts,) = model.map_histogram(keys, bounds)
+        np.testing.assert_array_equal(counts, ref.histogram_ref(keys, bounds))
+
+    def test_manifest_for_variant(self):
+        entries = model.entry_points(VARIANT)
+        manifest = aot.build_manifest(VARIANT, entries)
+        assert manifest["config"]["q"] == 4
+        assert manifest["config"]["t"] == 16
+        got = [tuple(i["shape"]) for i in manifest["artifacts"]["map_project"]["inputs"]]
+        assert got == [(64, 128), (128, 8)]

@@ -1,0 +1,101 @@
+"""Pallas histogram kernel vs oracle; TeraSort Map-stage invariants."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import histogram_kernel, ref
+
+
+def _keys(shape, seed, lo=0, hi=1000):
+    return jax.random.randint(jax.random.PRNGKey(seed), shape, lo, hi, jnp.int32)
+
+
+def _uniform_bounds(qt, width):
+    return jnp.arange(qt + 1, dtype=jnp.int32) * width
+
+
+class TestHistogramBasic:
+    def test_default_artifact_shape(self):
+        keys = _keys((16, 512), 0)
+        bounds = _uniform_bounds(96, 11)
+        np.testing.assert_array_equal(
+            histogram_kernel.histogram(keys, bounds),
+            ref.histogram_ref(keys, bounds),
+        )
+
+    def test_all_keys_in_one_bucket(self):
+        keys = jnp.full((8, 32), 5, jnp.int32)
+        bounds = jnp.array([0, 10, 20, 30], jnp.int32)
+        out = histogram_kernel.histogram(keys, bounds)
+        np.testing.assert_array_equal(out[:, 0], jnp.full((8,), 32, jnp.int32))
+        np.testing.assert_array_equal(out[:, 1:], jnp.zeros((8, 2), jnp.int32))
+
+    def test_keys_outside_all_buckets_dropped(self):
+        keys = jnp.array([[-5, 100, 100, 3]], jnp.int32)
+        bounds = jnp.array([0, 4, 8], jnp.int32)
+        out = histogram_kernel.histogram(keys, bounds, bb=1)
+        np.testing.assert_array_equal(out, jnp.array([[1, 0]], jnp.int32))
+
+    def test_boundary_half_open(self):
+        # key == bounds[i] lands in bucket i; key == bounds[i+1] does not.
+        keys = jnp.array([[0, 4, 7, 8]], jnp.int32)
+        bounds = jnp.array([0, 4, 8], jnp.int32)
+        out = histogram_kernel.histogram(keys, bounds, bb=1)
+        # 0 -> [0,4); 4,7 -> [4,8); 8 == bounds[-1] is excluded.
+        np.testing.assert_array_equal(out, jnp.array([[1, 2]], jnp.int32))
+
+    def test_total_count_preserved_when_covering(self):
+        keys = _keys((8, 256), 1, 0, 999)
+        bounds = _uniform_bounds(10, 100)  # covers [0, 1000)
+        out = histogram_kernel.histogram(keys, bounds)
+        np.testing.assert_array_equal(
+            jnp.sum(out, axis=1), jnp.full((8,), 256, jnp.int32)
+        )
+
+    def test_multi_block_batch(self):
+        keys = _keys((32, 64), 2)
+        bounds = _uniform_bounds(16, 64)
+        out = histogram_kernel.histogram(keys, bounds, bb=4)
+        np.testing.assert_array_equal(out, ref.histogram_ref(keys, bounds))
+
+    def test_ragged_batch_raises(self):
+        with pytest.raises(ValueError, match="does not tile"):
+            histogram_kernel.histogram(_keys((10, 8), 0), _uniform_bounds(4, 10), bb=4)
+
+    def test_jit_wrapper(self):
+        keys = _keys((8, 64), 3)
+        bounds = _uniform_bounds(8, 125)
+        np.testing.assert_array_equal(
+            histogram_kernel.histogram_jit(keys, bounds),
+            histogram_kernel.histogram(keys, bounds),
+        )
+
+
+class TestHistogramProperty:
+    @settings(max_examples=12, deadline=None)
+    @given(
+        b=st.sampled_from([1, 2, 4, 8]),
+        d=st.sampled_from([16, 64, 128]),
+        qt=st.sampled_from([4, 16, 96]),
+        seed=st.integers(0, 2**16),
+    )
+    def test_matches_ref(self, b, d, qt, seed):
+        keys = _keys((b, d), seed, -50, 5000)
+        # Non-uniform, sorted, possibly-empty buckets.
+        raw = jax.random.randint(
+            jax.random.PRNGKey(seed + 1), (qt + 1,), -100, 5100, jnp.int32
+        )
+        bounds = jnp.sort(raw)
+        out = histogram_kernel.histogram(keys, bounds, bb=min(b, 8))
+        np.testing.assert_array_equal(out, ref.histogram_ref(keys, bounds))
+
+    @settings(max_examples=8, deadline=None)
+    @given(seed=st.integers(0, 2**16))
+    def test_counts_sum_to_keys_under_cover(self, seed):
+        keys = _keys((4, 128), seed, 0, 2**20)
+        bounds = jnp.linspace(0, 2**20, 33).astype(jnp.int32)
+        out = histogram_kernel.histogram(keys, bounds, bb=4)
+        assert int(jnp.sum(out)) == 4 * 128

@@ -1,0 +1,113 @@
+"""Pallas matmul kernel vs pure-jnp oracle (the core L1 correctness signal)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import matmul_kernel, ref
+
+
+def _rand(shape, seed, dtype=jnp.float32):
+    return jax.random.normal(jax.random.PRNGKey(seed), shape, dtype)
+
+
+class TestMatmulBasic:
+    def test_default_artifact_shape(self):
+        a = _rand((96, 256), 0)
+        b = _rand((256, 16), 1)
+        np.testing.assert_allclose(
+            matmul_kernel.matmul(a, b), ref.matmul_ref(a, b), rtol=1e-5, atol=1e-5
+        )
+
+    def test_square_mxu_tile(self):
+        a = _rand((128, 128), 2)
+        b = _rand((128, 128), 3)
+        np.testing.assert_allclose(
+            matmul_kernel.matmul(a, b), ref.matmul_ref(a, b), rtol=1e-5, atol=1e-5
+        )
+
+    def test_multi_tile_all_axes(self):
+        a = _rand((64, 96), 4)
+        b = _rand((96, 64), 5)
+        out = matmul_kernel.matmul(a, b, bm=32, bn=32, bk=32)
+        np.testing.assert_allclose(out, ref.matmul_ref(a, b), rtol=1e-5, atol=1e-5)
+
+    def test_k_accumulation_over_many_steps(self):
+        # k-grid of 8 steps exercises the scratch accumulator init/store.
+        a = _rand((16, 256), 6)
+        b = _rand((256, 16), 7)
+        out = matmul_kernel.matmul(a, b, bm=16, bn=16, bk=32)
+        np.testing.assert_allclose(out, ref.matmul_ref(a, b), rtol=1e-5, atol=1e-5)
+
+    def test_identity(self):
+        eye = jnp.eye(64, dtype=jnp.float32)
+        b = _rand((64, 32), 8)
+        np.testing.assert_allclose(
+            matmul_kernel.matmul(eye, b), b, rtol=1e-6, atol=1e-6
+        )
+
+    def test_zeros(self):
+        a = jnp.zeros((32, 32), jnp.float32)
+        b = _rand((32, 32), 9)
+        np.testing.assert_array_equal(
+            matmul_kernel.matmul(a, b), jnp.zeros((32, 32), jnp.float32)
+        )
+
+    def test_vector_like_batch_one(self):
+        a = _rand((96, 256), 10)
+        b = _rand((256, 1), 11)
+        np.testing.assert_allclose(
+            matmul_kernel.matmul(a, b), ref.matmul_ref(a, b), rtol=1e-5, atol=1e-5
+        )
+
+    def test_contraction_mismatch_raises(self):
+        with pytest.raises(ValueError, match="contraction mismatch"):
+            matmul_kernel.matmul(_rand((8, 16), 0), _rand((8, 8), 1))
+
+    def test_ragged_tiling_raises(self):
+        with pytest.raises(ValueError, match="do not tile"):
+            matmul_kernel.matmul(_rand((10, 16), 0), _rand((16, 8), 1), bm=4)
+
+    def test_jit_wrapper_matches_eager(self):
+        a = _rand((32, 64), 12)
+        b = _rand((64, 32), 13)
+        np.testing.assert_allclose(
+            matmul_kernel.matmul_jit(a, b, bm=32, bn=32, bk=32),
+            matmul_kernel.matmul(a, b, bm=32, bn=32, bk=32),
+            rtol=0,
+            atol=0,
+        )
+
+
+# Hypothesis sweep: random even-tiling shapes and block sizes.
+_dims = st.sampled_from([8, 16, 32, 48, 64, 96])
+_blocks = st.sampled_from([8, 16, 32, 128])
+
+
+class TestMatmulProperty:
+    @settings(max_examples=12, deadline=None)
+    @given(m=_dims, k=_dims, n=_dims, bm=_blocks, bn=_blocks, bk=_blocks, seed=st.integers(0, 2**16))
+    def test_matches_ref_on_even_tilings(self, m, k, n, bm, bn, bk, seed):
+        bm, bn, bk = min(bm, m), min(bn, n), min(bk, k)
+        if m % bm or n % bn or k % bk:
+            return  # only even tilings are supported (AOT uses fixed shapes)
+        a = _rand((m, k), seed)
+        b = _rand((k, n), seed + 1)
+        out = matmul_kernel.matmul(a, b, bm=bm, bn=bn, bk=bk)
+        np.testing.assert_allclose(out, ref.matmul_ref(a, b), rtol=1e-4, atol=1e-4)
+
+    @settings(max_examples=6, deadline=None)
+    @given(seed=st.integers(0, 2**16))
+    def test_linearity(self, seed):
+        # matmul(W, x + y) == matmul(W, x) + matmul(W, y): the property the
+        # coded pipeline relies on (Reduce-of-Map == Map-of-summed-counts).
+        w = _rand((32, 64), seed)
+        x = _rand((64, 8), seed + 1)
+        y = _rand((64, 8), seed + 2)
+        lhs = matmul_kernel.matmul(w, x + y, bm=32, bn=8, bk=32)
+        rhs = matmul_kernel.matmul(w, x, bm=32, bn=8, bk=32) + matmul_kernel.matmul(
+            w, y, bm=32, bn=8, bk=32
+        )
+        np.testing.assert_allclose(lhs, rhs, rtol=1e-4, atol=1e-4)

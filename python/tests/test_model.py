@@ -1,0 +1,114 @@
+"""Layer-2 model graphs: shapes, semantics, and pipeline-level invariants."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import model
+from compile.kernels import ref
+
+
+CFG = model.DEFAULT_CONFIG
+
+
+def _rand(shape, seed, dtype=jnp.float32):
+    return jax.random.normal(jax.random.PRNGKey(seed), shape, dtype)
+
+
+class TestEntryPoints:
+    def test_all_entry_points_present(self):
+        eps = model.entry_points()
+        assert set(eps) == {
+            "map_project",
+            "map_histogram",
+            "reduce_sum",
+            "xor_blocks",
+            "xor_reduce",
+        }
+
+    def test_entry_point_specs_are_consistent(self):
+        eps = model.entry_points()
+        w_spec, c_spec = eps["map_project"][1]
+        assert w_spec.shape == (CFG.qt, CFG.vocab)
+        assert c_spec.shape == (CFG.vocab, CFG.map_batch)
+        k_spec, b_spec = eps["map_histogram"][1]
+        assert k_spec.shape == (CFG.map_batch, CFG.keys_per_file)
+        assert b_spec.shape == (CFG.qt + 1,)
+
+    def test_custom_config_propagates(self):
+        cfg = model.ModelConfig(vocab=64, q=4, t=8, map_batch=4, keys_per_file=32)
+        eps = model.entry_points(cfg)
+        assert eps["map_project"][1][0].shape == (32, 64)
+        assert eps["map_histogram"][1][1].shape == (33,)
+
+
+class TestMapProject:
+    def test_column_semantics(self):
+        # Column n of the IV matrix is W @ counts[:, n] -- per-file Map.
+        w = _rand((CFG.qt, CFG.vocab), 0)
+        counts = _rand((CFG.vocab, CFG.map_batch), 1)
+        (ivs,) = model.map_project(w, counts)
+        assert ivs.shape == (CFG.qt, CFG.map_batch)
+        for n in (0, CFG.map_batch - 1):
+            np.testing.assert_allclose(
+                ivs[:, n], w @ counts[:, n], rtol=1e-4, atol=1e-4
+            )
+
+    def test_zero_padding_is_harmless(self):
+        # Padding the file batch with zero columns yields zero IVs, so the
+        # Rust runtime can pad ragged tails safely.
+        w = _rand((CFG.qt, CFG.vocab), 2)
+        counts = _rand((CFG.vocab, CFG.map_batch), 3)
+        padded = counts.at[:, CFG.map_batch // 2 :].set(0.0)
+        (ivs,) = model.map_project(w, padded)
+        np.testing.assert_array_equal(
+            ivs[:, CFG.map_batch // 2 :],
+            jnp.zeros((CFG.qt, CFG.map_batch - CFG.map_batch // 2)),
+        )
+
+
+class TestReduceSum:
+    def test_matches_sum(self):
+        ivs = _rand((CFG.reduce_batch, CFG.t), 4)
+        (out,) = model.reduce_sum(ivs)
+        np.testing.assert_allclose(out, jnp.sum(ivs, axis=0), rtol=1e-6)
+
+    def test_chained_partial_sums_equal_full_sum(self):
+        # The Rust reduce phase folds blocks of RB files, carrying the
+        # partial sum in row 0 of the next block.
+        n_files = 3 * CFG.reduce_batch - 5
+        ivs = _rand((n_files, CFG.t), 5)
+        acc = jnp.zeros((CFG.t,), jnp.float32)
+        i = 0
+        while i < n_files:
+            blk = ivs[i : i + CFG.reduce_batch]
+            pad = CFG.reduce_batch - blk.shape[0]
+            if pad:
+                blk = jnp.pad(blk, ((0, pad), (0, 0)))
+            (s,) = model.reduce_sum(blk)
+            acc = acc + s
+            i += CFG.reduce_batch
+        np.testing.assert_allclose(acc, jnp.sum(ivs, axis=0), rtol=1e-4, atol=1e-4)
+
+
+class TestPipelineInvariant:
+    def test_reduce_of_map_equals_map_of_sum(self):
+        """The end-to-end WordCount identity the engine verifies against:
+        sum_n W @ c_n == W @ (sum_n c_n); linear Map commutes with Reduce."""
+        w = _rand((CFG.qt, CFG.vocab), 6)
+        counts = jnp.abs(_rand((CFG.vocab, CFG.map_batch), 7))
+        (ivs,) = model.map_project(w, counts)
+        lhs = jnp.sum(ivs, axis=1)
+        rhs = w @ jnp.sum(counts, axis=1)
+        np.testing.assert_allclose(lhs, rhs, rtol=1e-4, atol=1e-4)
+
+    def test_histogram_map_reduce_counts_total(self):
+        keys = jax.random.randint(
+            jax.random.PRNGKey(8), (CFG.map_batch, CFG.keys_per_file), 0, 960, jnp.int32
+        )
+        bounds = jnp.arange(CFG.qt + 1, dtype=jnp.int32) * 10  # covers [0, 960)
+        (counts,) = model.map_histogram(keys, bounds)
+        assert counts.shape == (CFG.map_batch, CFG.qt)
+        # Reduce across files preserves the global key count.
+        assert int(jnp.sum(counts)) == CFG.map_batch * CFG.keys_per_file
+        np.testing.assert_array_equal(counts, ref.histogram_ref(keys, bounds))

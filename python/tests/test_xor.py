@@ -1,0 +1,84 @@
+"""Pallas XOR-combiner kernel: oracle equality + algebraic invariants.
+
+These are the invariants the coded shuffle relies on: a receiver recovers
+``v_a = (v_a ^ v_b) ^ v_b`` (involution), and encoding order is irrelevant
+(commutativity/associativity).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import xor_kernel, ref
+
+
+def _blk(shape, seed):
+    return jax.random.randint(
+        jax.random.PRNGKey(seed), shape, -(2**31), 2**31 - 1, jnp.int32
+    )
+
+
+class TestXorBasic:
+    def test_default_artifact_shape(self):
+        a, b = _blk((8, 128), 0), _blk((8, 128), 1)
+        np.testing.assert_array_equal(
+            xor_kernel.xor_combine(a, b), ref.xor_ref(a, b)
+        )
+
+    def test_self_xor_is_zero(self):
+        a = _blk((8, 64), 2)
+        np.testing.assert_array_equal(
+            xor_kernel.xor_combine(a, a), jnp.zeros_like(a)
+        )
+
+    def test_xor_zero_is_identity(self):
+        a = _blk((8, 64), 3)
+        np.testing.assert_array_equal(
+            xor_kernel.xor_combine(a, jnp.zeros_like(a)), a
+        )
+
+    def test_decode_roundtrip(self):
+        # Node 1 sends X = v3a ^ v2b; node 2 recovers v2b = X ^ v3a.
+        v3a, v2b = _blk((8, 128), 4), _blk((8, 128), 5)
+        x = xor_kernel.xor_combine(v3a, v2b)
+        np.testing.assert_array_equal(xor_kernel.xor_combine(x, v3a), v2b)
+        np.testing.assert_array_equal(xor_kernel.xor_combine(x, v2b), v3a)
+
+    def test_multi_block_rows(self):
+        a, b = _blk((32, 16), 6), _blk((32, 16), 7)
+        out = xor_kernel.xor_combine(a, b, block_rows=8)
+        np.testing.assert_array_equal(out, ref.xor_ref(a, b))
+
+    def test_shape_mismatch_raises(self):
+        with pytest.raises(ValueError, match="shape mismatch"):
+            xor_kernel.xor_combine(_blk((8, 8), 0), _blk((8, 16), 1))
+
+    def test_ragged_rows_raises(self):
+        with pytest.raises(ValueError, match="do not tile"):
+            xor_kernel.xor_combine(_blk((10, 8), 0), _blk((10, 8), 1), block_rows=4)
+
+
+class TestXorProperty:
+    @settings(max_examples=10, deadline=None)
+    @given(
+        rows=st.sampled_from([1, 4, 8, 16]),
+        cols=st.sampled_from([8, 32, 128]),
+        seed=st.integers(0, 2**16),
+    )
+    def test_matches_ref(self, rows, cols, seed):
+        a, b = _blk((rows, cols), seed), _blk((rows, cols), seed + 1)
+        out = xor_kernel.xor_combine(a, b, block_rows=min(rows, 8))
+        np.testing.assert_array_equal(out, ref.xor_ref(a, b))
+
+    @settings(max_examples=8, deadline=None)
+    @given(seed=st.integers(0, 2**16))
+    def test_commutative_associative(self, seed):
+        a, b, c = _blk((4, 32), seed), _blk((4, 32), seed + 1), _blk((4, 32), seed + 2)
+        x = xor_kernel.xor_combine
+        np.testing.assert_array_equal(x(a, b, block_rows=4), x(b, a, block_rows=4))
+        np.testing.assert_array_equal(
+            x(x(a, b, block_rows=4), c, block_rows=4),
+            x(a, x(b, c, block_rows=4), block_rows=4),
+        )

@@ -1,0 +1,79 @@
+"""Multi-way XOR reduce kernel: oracle equality + coding-theoretic use."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import xor_reduce_kernel, ref
+
+
+def _stack(shape, seed):
+    return jax.random.randint(
+        jax.random.PRNGKey(seed), shape, -(2**31), 2**31 - 1, jnp.int32
+    )
+
+
+class TestXorReduceBasic:
+    def test_default_artifact_shape(self):
+        s = _stack((3, 8, 128), 0)
+        np.testing.assert_array_equal(
+            xor_reduce_kernel.xor_reduce(s), ref.xor_reduce_ref(s)
+        )
+
+    def test_single_layer_is_identity(self):
+        s = _stack((1, 8, 32), 1)
+        np.testing.assert_array_equal(xor_reduce_kernel.xor_reduce(s), s[0])
+
+    def test_even_layer_count_of_same_block_is_zero(self):
+        block = _stack((1, 8, 16), 2)[0]
+        s = jnp.stack([block, block, block, block])
+        np.testing.assert_array_equal(
+            xor_reduce_kernel.xor_reduce(s), jnp.zeros_like(block)
+        )
+
+    def test_receiver_cancellation(self):
+        # Receiver knows layers 1..r-1; XOR of the message with them
+        # recovers layer 0 — the multicast decode of [2].
+        s = _stack((4, 8, 64), 3)
+        msg = xor_reduce_kernel.xor_reduce(s)
+        known = ref.xor_reduce_ref(s[1:])
+        np.testing.assert_array_equal(jnp.bitwise_xor(msg, known), s[0])
+
+    def test_multi_block_rows(self):
+        s = _stack((2, 32, 16), 4)
+        out = xor_reduce_kernel.xor_reduce(s, block_rows=8)
+        np.testing.assert_array_equal(out, ref.xor_reduce_ref(s))
+
+    def test_bad_rank_raises(self):
+        with pytest.raises(ValueError, match="expected"):
+            xor_reduce_kernel.xor_reduce(_stack((8, 16), 0))
+
+    def test_ragged_rows_raises(self):
+        with pytest.raises(ValueError, match="do not tile"):
+            xor_reduce_kernel.xor_reduce(_stack((2, 10, 8), 0), block_rows=4)
+
+
+class TestXorReduceProperty:
+    @settings(max_examples=10, deadline=None)
+    @given(
+        r=st.integers(1, 5),
+        rows=st.sampled_from([1, 4, 8]),
+        cols=st.sampled_from([8, 32, 128]),
+        seed=st.integers(0, 2**16),
+    )
+    def test_matches_ref(self, r, rows, cols, seed):
+        s = _stack((r, rows, cols), seed)
+        out = xor_reduce_kernel.xor_reduce(s, block_rows=min(rows, 8))
+        np.testing.assert_array_equal(out, ref.xor_reduce_ref(s))
+
+    @settings(max_examples=8, deadline=None)
+    @given(seed=st.integers(0, 2**16))
+    def test_layer_order_invariance(self, seed):
+        s = _stack((3, 4, 16), seed)
+        perm = s[jnp.array([2, 0, 1])]
+        np.testing.assert_array_equal(
+            xor_reduce_kernel.xor_reduce(s, block_rows=4),
+            xor_reduce_kernel.xor_reduce(perm, block_rows=4),
+        )

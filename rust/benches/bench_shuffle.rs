@@ -1,0 +1,184 @@
+//! E6/E7 — end-to-end coded vs uncoded shuffle on the simulated
+//! heterogeneous cluster (the CodedTeraSort-style evaluation [10] that the
+//! paper's introduction motivates).
+//!
+//! E6: TeraSort on an EC2-like 3-node cluster — measured shuffle bytes,
+//! simulated phase times, and the coded/uncoded ratio vs theory.
+//! E7: WordCount — fraction of job time spent shuffling (the §I 33–70%
+//! motivation) with and without coding.
+
+use hetcdc::bench::{bench_fn, section, table, Bench};
+use hetcdc::engine::{Engine, NativeBackend, PlacementStrategy, XlaBackend};
+use hetcdc::model::cluster::ClusterSpec;
+use hetcdc::model::job::{JobSpec, ShuffleMode};
+use hetcdc::runtime::Runtime;
+use hetcdc::theory::load;
+use hetcdc::util::stats::fmt_bytes;
+
+fn run(
+    cluster: &ClusterSpec,
+    job: &JobSpec,
+    strategy: &PlacementStrategy,
+    mode: ShuffleMode,
+) -> hetcdc::engine::RunReport {
+    let mut be = NativeBackend;
+    let r = Engine::new(cluster, job, &mut be)
+        .run(strategy, mode)
+        .expect("engine");
+    assert!(r.verified, "oracle verification failed");
+    r
+}
+
+fn main() {
+    let n = 60u64;
+    let cluster = ClusterSpec::ec2_like_3node(n);
+    let p = cluster.params3(n).unwrap();
+
+    section("E6: TeraSort, EC2-like heterogeneous 3-node cluster");
+    println!(
+        "cluster: {:?} storage={:?} N={n}",
+        cluster.nodes.iter().map(|x| x.name.as_str()).collect::<Vec<_>>(),
+        cluster.storage()
+    );
+    let job = JobSpec::terasort(n);
+    let coded = run(&cluster, &job, &PlacementStrategy::OptimalK3, ShuffleMode::Coded);
+    let uncoded = run(&cluster, &job, &PlacementStrategy::OptimalK3, ShuffleMode::Uncoded);
+    let rows = vec![
+        vec![
+            "coded (Theorem 1)".into(),
+            format!("{}", coded.load_equations),
+            fmt_bytes(coded.payload_bytes as f64),
+            format!("{}", coded.messages),
+            format!("{:.4}s", coded.shuffle_time_s),
+            format!("{:.4}s", coded.job_time_s),
+        ],
+        vec![
+            "uncoded".into(),
+            format!("{}", uncoded.load_equations),
+            fmt_bytes(uncoded.payload_bytes as f64),
+            format!("{}", uncoded.messages),
+            format!("{:.4}s", uncoded.shuffle_time_s),
+            format!("{:.4}s", uncoded.job_time_s),
+        ],
+    ];
+    table(
+        &["mode", "load (IV eq)", "payload", "msgs", "shuffle t", "job t"],
+        &rows,
+    );
+    println!(
+        "\nload ratio uncoded/coded = {:.3} (theory {:.3}); shuffle-time speedup {:.2}x",
+        uncoded.load_equations / coded.load_equations,
+        load::uncoded(&p) / load::lstar(&p),
+        uncoded.shuffle_time_s / coded.shuffle_time_s,
+    );
+    assert_eq!(coded.load_equations, load::lstar(&p));
+    assert_eq!(uncoded.load_equations, load::uncoded(&p));
+
+    section("E7: WordCount — shuffle fraction of job time (the §I 33–70% story)");
+    let wjob = JobSpec::wordcount(n);
+    let wc = run(&cluster, &wjob, &PlacementStrategy::OptimalK3, ShuffleMode::Coded);
+    let wu = run(&cluster, &wjob, &PlacementStrategy::OptimalK3, ShuffleMode::Uncoded);
+    table(
+        &["mode", "map t", "shuffle t", "shuffle % of job"],
+        &vec![
+            vec![
+                "coded".into(),
+                format!("{:.4}s", wc.map_time_s),
+                format!("{:.4}s", wc.shuffle_time_s),
+                format!("{:.0}%", 100.0 * wc.shuffle_fraction()),
+            ],
+            vec![
+                "uncoded".into(),
+                format!("{:.4}s", wu.map_time_s),
+                format!("{:.4}s", wu.shuffle_time_s),
+                format!("{:.0}%", 100.0 * wu.shuffle_fraction()),
+            ],
+        ],
+    );
+
+    section("homogeneous baseline (Li et al. [2]), K=3 r=2, N=60");
+    let hcluster = ClusterSpec::homogeneous(3, 40, 750.0);
+    let hjob = JobSpec::terasort(60);
+    let hc = run(&hcluster, &hjob, &PlacementStrategy::Homogeneous, ShuffleMode::Coded);
+    let hu = run(&hcluster, &hjob, &PlacementStrategy::Homogeneous, ShuffleMode::Uncoded);
+    println!(
+        "coded {} vs uncoded {} IV equations (theory: {} vs {})",
+        hc.load_equations,
+        hu.load_equations,
+        hetcdc::theory::homogeneous::load_at_r(3, 2, 60),
+        60,
+    );
+
+    section("E10 (ablation): heterogeneity-aware vs storage-oblivious placement");
+    // The §I motivation ([13]): homogeneous-assumption algorithms lose
+    // badly on heterogeneous clusters. Oblivious = provision all nodes to
+    // min storage, run the homogeneous scheme.
+    let mut arows = Vec::new();
+    for storage in [[4u64, 8, 12], [6, 7, 7], [4, 12, 12], [5, 10, 12]] {
+        let mut cl = ClusterSpec::homogeneous(3, 1, 1000.0);
+        for (node, &m) in cl.nodes.iter_mut().zip(storage.iter()) {
+            node.storage = m;
+        }
+        let jb = JobSpec::terasort(12);
+        let aware = run(&cl, &jb, &PlacementStrategy::OptimalK3, ShuffleMode::Coded);
+        let obliv = run(&cl, &jb, &PlacementStrategy::Oblivious, ShuffleMode::Coded);
+        arows.push(vec![
+            format!("{storage:?}"),
+            format!("{}", aware.load_equations),
+            format!("{}", obliv.load_equations),
+            format!("{:.2}x", obliv.load_equations / aware.load_equations.max(1e-12)),
+        ]);
+    }
+    table(
+        &["storage (N=12)", "aware L (Thm 1)", "oblivious L", "penalty"],
+        &arows,
+    );
+
+    // XLA backend, if artifacts are present: the production path.
+    match Runtime::load(Runtime::default_dir()) {
+        Ok(mut rt) => {
+            section("E6b: same TeraSort job through the XLA/PJRT backend");
+            let m = rt.manifest.clone();
+            let mut xjob = JobSpec::terasort(n);
+            xjob.t = m.t;
+            xjob.keys_per_file = m.keys_per_file;
+            let mut be = XlaBackend::new(&mut rt);
+            let r = Engine::new(&cluster, &xjob, &mut be)
+                .run(&PlacementStrategy::OptimalK3, ShuffleMode::Coded)
+                .expect("xla engine");
+            assert!(r.verified);
+            println!(
+                "XLA coded load {} (== native {}), exact integer match: max_abs_err = {}",
+                r.load_equations, coded.load_equations, r.max_abs_err
+            );
+            let xcfg = Bench {
+                measure: std::time::Duration::from_millis(2000),
+                ..Bench::default()
+            };
+            bench_fn("terasort N=60 coded e2e (XLA backend)", &xcfg, || {
+                let mut be = XlaBackend::new(&mut rt);
+                Engine::new(&cluster, &xjob, &mut be)
+                    .run(&PlacementStrategy::OptimalK3, ShuffleMode::Coded)
+                    .expect("xla engine")
+                    .payload_bytes
+            });
+        }
+        Err(e) => println!("\n[skipping XLA section: {e}]"),
+    }
+
+    section("timing (native backend, end-to-end jobs)");
+    let cfg = Bench {
+        measure: std::time::Duration::from_millis(1500),
+        ..Bench::default()
+    };
+    bench_fn("terasort N=60 coded e2e", &cfg, || {
+        run(&cluster, &job, &PlacementStrategy::OptimalK3, ShuffleMode::Coded).payload_bytes
+    });
+    bench_fn("terasort N=60 uncoded e2e", &cfg, || {
+        run(&cluster, &job, &PlacementStrategy::OptimalK3, ShuffleMode::Uncoded).payload_bytes
+    });
+    let wjob2 = JobSpec::wordcount(n);
+    bench_fn("wordcount N=60 coded e2e", &cfg, || {
+        run(&cluster, &wjob2, &PlacementStrategy::OptimalK3, ShuffleMode::Coded).payload_bytes
+    });
+}

@@ -1,0 +1,82 @@
+//! E9 — §V LP scaling (Remark 7): problem size, pivot counts, and solve
+//! time as K grows, plus raw simplex throughput on random LPs.
+
+use hetcdc::bench::{bench_fn, section, table, Bench};
+use hetcdc::lp::{solve, Cmp, Lp};
+use hetcdc::placement::lp_general::{build_lp, perfect_collections, solve_general};
+use hetcdc::theory::params::ParamsK;
+use hetcdc::util::rng::Xoshiro256;
+use std::time::Instant;
+
+fn main() {
+    section("E9: §V LP size and solve time vs K (Remark 7)");
+    let cap = 4096;
+    let mut rows = Vec::new();
+    for k in 3..=6usize {
+        // Heterogeneous storage ramp covering N.
+        let n = 12u64;
+        let m: Vec<u64> = (0..k).map(|i| 3 + (i as u64 * 7) % (n - 3)).collect();
+        let p = match ParamsK::new(m.clone(), n) {
+            Ok(p) => p,
+            Err(_) => continue,
+        };
+        let model = build_lp::<f64>(&p, cap);
+        let t0 = Instant::now();
+        let sol = solve_general(&p, cap).expect("LP solve");
+        let dt = t0.elapsed();
+        let colls: usize = (2..k.saturating_sub(1))
+            .map(|j| perfect_collections(k, j, cap).0.len())
+            .sum();
+        rows.push(vec![
+            k.to_string(),
+            format!("{m:?}"),
+            model.lp.n_vars.to_string(),
+            model.lp.constraints.len().to_string(),
+            colls.to_string(),
+            sol.pivots.to_string(),
+            format!("{:.2?}", dt),
+            format!("{:.2}", sol.load),
+        ]);
+    }
+    table(
+        &["K", "storage", "vars", "constraints", "collections", "pivots", "time", "load"],
+        &rows,
+    );
+
+    section("perfect-collection enumeration");
+    let cfg = Bench::default();
+    for (k, j) in [(4usize, 2usize), (5, 2), (6, 2), (6, 3)] {
+        let (colls, dropped) = perfect_collections(k, j, cap);
+        println!("C'_{j} for K={k}: {} collections (dropped {dropped})", colls.len());
+        bench_fn(&format!("enumerate C'_{j} K={k}"), &cfg, || {
+            perfect_collections(k, j, cap).0.len()
+        });
+    }
+
+    section("raw simplex throughput (random dense LPs)");
+    let mut rng = Xoshiro256::seed_from_u64(7);
+    for (nv, nc) in [(10usize, 8usize), (30, 25), (60, 50)] {
+        let mut lp: Lp<f64> = Lp::new();
+        for v in 0..nv {
+            lp.add_var(format!("v{v}"), (rng.gen_range(9) as f64) - 4.0);
+        }
+        for _ in 0..nc {
+            let mut coeffs: Vec<(usize, f64)> = Vec::new();
+            for v in 0..nv {
+                if rng.gen_range(3) == 0 {
+                    coeffs.push((v, (rng.gen_range(7) as f64) - 3.0));
+                }
+            }
+            if coeffs.is_empty() {
+                continue;
+            }
+            lp.constrain(coeffs, Cmp::Le, rng.gen_range(40) as f64);
+        }
+        for v in 0..nv {
+            lp.constrain(vec![(v, 1.0)], Cmp::Le, 25.0);
+        }
+        bench_fn(&format!("simplex {nv} vars x {nc} rows"), &cfg, || {
+            solve(&lp).map(|s| s.pivots).unwrap_or(0)
+        });
+    }
+}

@@ -1,0 +1,144 @@
+//! Minimal but honest timing harness: warmup, fixed-duration sampling,
+//! summary statistics, and markdown table output — the pieces of
+//! `criterion` the benches actually need, built from scratch.
+
+use crate::util::stats::{fmt_ns, Summary};
+use std::time::{Duration, Instant};
+
+/// One benchmark's timing configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct Bench {
+    pub warmup: Duration,
+    pub measure: Duration,
+    pub min_samples: usize,
+    pub max_samples: usize,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Bench {
+            warmup: Duration::from_millis(200),
+            measure: Duration::from_millis(800),
+            min_samples: 10,
+            max_samples: 100_000,
+        }
+    }
+}
+
+/// Timing result, printable as a one-line summary.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub samples: usize,
+    pub mean_ns: f64,
+    pub stddev_ns: f64,
+    pub median_ns: f64,
+    pub p95_ns: f64,
+}
+
+impl BenchResult {
+    pub fn throughput_per_s(&self) -> f64 {
+        1e9 / self.mean_ns
+    }
+
+    pub fn line(&self) -> String {
+        format!(
+            "{:<44} {:>12}/iter  (median {}, p95 {}, n={})",
+            self.name,
+            fmt_ns(self.mean_ns),
+            fmt_ns(self.median_ns),
+            fmt_ns(self.p95_ns),
+            self.samples
+        )
+    }
+}
+
+/// Time `f` under `cfg`; prints and returns the result. `f` returns a
+/// value which is black-boxed to keep the optimizer honest.
+pub fn bench_fn<T>(name: &str, cfg: &Bench, mut f: impl FnMut() -> T) -> BenchResult {
+    // Warmup.
+    let start = Instant::now();
+    while start.elapsed() < cfg.warmup {
+        std::hint::black_box(f());
+    }
+    // Measure.
+    let mut samples = Summary::new();
+    let start = Instant::now();
+    while (start.elapsed() < cfg.measure || samples.count() < cfg.min_samples)
+        && samples.count() < cfg.max_samples
+    {
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        samples.add(t0.elapsed().as_nanos() as f64);
+    }
+    let result = BenchResult {
+        name: name.to_string(),
+        samples: samples.count(),
+        mean_ns: samples.mean(),
+        stddev_ns: samples.stddev(),
+        median_ns: samples.median(),
+        p95_ns: samples.percentile(95.0),
+    };
+    println!("{}", result.line());
+    result
+}
+
+/// Print a section header.
+pub fn section(title: &str) {
+    println!("\n=== {title} ===");
+}
+
+/// Print a markdown table: header row + rows.
+pub fn table(headers: &[&str], rows: &[Vec<String>]) {
+    let mut widths: Vec<usize> = headers.iter().map(|h| h.len()).collect();
+    for row in rows {
+        for (i, cell) in row.iter().enumerate() {
+            if i < widths.len() {
+                widths[i] = widths[i].max(cell.len());
+            }
+        }
+    }
+    let fmt_row = |cells: &[String]| {
+        let mut line = String::from("|");
+        for (i, cell) in cells.iter().enumerate() {
+            line.push_str(&format!(" {:<w$} |", cell, w = widths[i]));
+        }
+        line
+    };
+    println!(
+        "{}",
+        fmt_row(&headers.iter().map(|s| s.to_string()).collect::<Vec<_>>())
+    );
+    let sep: Vec<String> = widths.iter().map(|w| "-".repeat(*w)).collect();
+    println!("{}", fmt_row(&sep));
+    for row in rows {
+        println!("{}", fmt_row(row));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_fn_collects_samples() {
+        let cfg = Bench {
+            warmup: Duration::from_millis(1),
+            measure: Duration::from_millis(10),
+            min_samples: 5,
+            max_samples: 10_000,
+        };
+        let r = bench_fn("noop", &cfg, || 1 + 1);
+        assert!(r.samples >= 5);
+        assert!(r.mean_ns > 0.0);
+        assert!(r.median_ns <= r.p95_ns);
+    }
+
+    #[test]
+    fn table_renders_without_panic() {
+        table(
+            &["a", "bb"],
+            &[vec!["1".into(), "2".into()], vec!["333".into(), "4".into()]],
+        );
+    }
+}

@@ -1,0 +1,5 @@
+//! Benchmark harness substrate (no `criterion` in the offline build).
+
+pub mod harness;
+
+pub use harness::{bench_fn, section, table, Bench};

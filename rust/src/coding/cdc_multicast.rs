@@ -1,0 +1,182 @@
+//! Homogeneous CDC multicast of Li–Maddah-Ali–Avestimehr [2].
+//!
+//! For a symmetric r-redundant placement (every r-subset `T` holds the
+//! same number of subfiles), the Shuffle runs per (r+1)-subset `A`: for
+//! each `j ∈ A` the IVs `v_{j, S_{A\{j}}}` are split into `r` segments
+//! indexed by the members of `A\{j}`; each node `k ∈ A` broadcasts the XOR
+//! over `j ∈ A\{k}` of *its* segment of `v_{j, ·}`. Every receiver
+//! `j ∈ A\{k}` knows all other summands (it holds their subfiles) and
+//! recovers its segment; across the `r` senders of `A\{j}` it collects all
+//! `r` segments. Total load: `N(K−r)/r` IV units — the factor-`r` coding
+//! gain the paper's §V cost function assumes per subsystem.
+
+use super::plan::{Broadcast, IvId, Part, ShufflePlan};
+use crate::placement::alloc::Allocation;
+
+/// Nodes of `mask` in ascending order.
+fn nodes_of(mask: u32) -> Vec<usize> {
+    (0..32).filter(|i| mask & (1 << i) != 0).collect()
+}
+
+/// Build the [2] multicast plan for a symmetric r-redundant allocation.
+///
+/// Requires every subfile's holder set to have exactly `r` nodes and every
+/// r-subset to hold the same count (use
+/// [`crate::placement::homogeneous::symmetric_allocation`]).
+pub fn plan_homogeneous(alloc: &Allocation, r: usize) -> ShufflePlan {
+    let k = alloc.k;
+    assert!(r >= 1 && r <= k);
+    assert!(
+        alloc.holders.iter().all(|h| h.count_ones() as usize == r),
+        "allocation is not r-regular"
+    );
+    let mut plan = ShufflePlan {
+        k,
+        broadcasts: Vec::new(),
+    };
+
+    if r == k {
+        return plan; // everything everywhere: nothing to shuffle
+    }
+
+    // Special case r == 1: no coding possible within groups of size 2;
+    // uncoded broadcast from the unique holder.
+    if r == 1 {
+        for (sub, &h) in alloc.holders.iter().enumerate() {
+            let sender = h.trailing_zeros() as usize;
+            for dest in 0..k {
+                if dest != sender {
+                    plan.broadcasts.push(Broadcast::Uncoded {
+                        sender,
+                        iv: IvId { group: dest, sub },
+                    });
+                }
+            }
+        }
+        return plan;
+    }
+
+    // Pre-index subfiles by holder mask.
+    let mut by_mask: Vec<Vec<usize>> = vec![Vec::new(); 1 << k];
+    for (sub, &h) in alloc.holders.iter().enumerate() {
+        by_mask[h as usize].push(sub);
+    }
+
+    // Iterate over (r+1)-subsets A.
+    for a_mask in 1u32..(1 << k) {
+        if a_mask.count_ones() as usize != r + 1 {
+            continue;
+        }
+        let a_nodes = nodes_of(a_mask);
+        // For j in A: files held by A\{j}, needed by j.
+        let per: Vec<&Vec<usize>> = a_nodes
+            .iter()
+            .map(|&j| &by_mask[(a_mask & !(1 << j)) as usize])
+            .collect();
+        let count = per.iter().map(|v| v.len()).min().unwrap_or(0);
+        // Symmetric placements have equal counts; assert to catch misuse.
+        debug_assert!(
+            per.iter().all(|v| v.len() == count),
+            "asymmetric counts within group {a_mask:b}"
+        );
+        for t in 0..count {
+            // Node k_i broadcasts XOR over j != k_i of segment_{k_i} of
+            // v_{j, file_j(t)}; segment index = position of k_i in A\{j}.
+            for (ki_pos, &ki) in a_nodes.iter().enumerate() {
+                let mut parts = Vec::with_capacity(r);
+                for (j_pos, &j) in a_nodes.iter().enumerate() {
+                    if j == ki {
+                        continue;
+                    }
+                    let sub = per[j_pos][t];
+                    // Position of ki within A\{j} (ascending order).
+                    let seg = a_nodes
+                        .iter()
+                        .filter(|&&x| x != j)
+                        .position(|&x| x == ki)
+                        .unwrap() as u32;
+                    parts.push(Part {
+                        iv: IvId { group: j, sub },
+                        seg,
+                        nseg: r as u32,
+                    });
+                }
+                let _ = ki_pos;
+                plan.broadcasts.push(Broadcast::Coded { sender: ki, parts });
+            }
+        }
+    }
+    plan
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coding::decoder::verify;
+    use crate::placement::homogeneous::symmetric_allocation;
+    use crate::prop;
+    use crate::theory::homogeneous::load_at_r;
+
+    #[test]
+    fn k3_r2_load_matches_theory_and_decodes() {
+        let alloc = symmetric_allocation(3, 2, 12);
+        let plan = plan_homogeneous(&alloc, 2);
+        // L = N(K−r)/r = 6 IV units.
+        assert!((plan.load_equations(&alloc) - load_at_r(3, 2, 12)).abs() < 1e-9);
+        let report = verify(&alloc, &plan);
+        assert!(report.is_complete(), "missing {:?}", report.missing);
+    }
+
+    #[test]
+    fn k4_r2_load_matches_theory_and_decodes() {
+        let alloc = symmetric_allocation(4, 2, 12);
+        let plan = plan_homogeneous(&alloc, 2);
+        assert!((plan.load_equations(&alloc) - load_at_r(4, 2, 12)).abs() < 1e-9);
+        assert!(verify(&alloc, &plan).is_complete());
+    }
+
+    #[test]
+    fn k4_r3_load_matches_theory_and_decodes() {
+        let alloc = symmetric_allocation(4, 3, 8);
+        let plan = plan_homogeneous(&alloc, 3);
+        assert!((plan.load_equations(&alloc) - load_at_r(4, 3, 8)).abs() < 1e-9);
+        assert!(verify(&alloc, &plan).is_complete());
+    }
+
+    #[test]
+    fn r1_falls_back_to_uncoded() {
+        let alloc = symmetric_allocation(3, 1, 6);
+        let plan = plan_homogeneous(&alloc, 1);
+        assert!((plan.load_equations(&alloc) - load_at_r(3, 1, 6)).abs() < 1e-9);
+        assert!(verify(&alloc, &plan).is_complete());
+    }
+
+    #[test]
+    fn full_replication_needs_no_shuffle() {
+        let alloc = symmetric_allocation(3, 3, 6);
+        let plan = plan_homogeneous(&alloc, 3);
+        assert!(plan.broadcasts.is_empty());
+        assert!(verify(&alloc, &plan).is_complete());
+    }
+
+    #[test]
+    fn prop_homogeneous_matches_li_curve_and_decodes() {
+        prop::run("[2] multicast: load + decode", 60, |g| {
+            let k = g.usize_in(2..=5);
+            let r = g.usize_in(1..=k);
+            let n = g.u64_in(1..=12);
+            let alloc = symmetric_allocation(k, r, n);
+            let plan = plan_homogeneous(&alloc, r);
+            let want = load_at_r(k as u64, r as u64, n);
+            let got = plan.load_equations(&alloc);
+            if (got - want).abs() > 1e-9 {
+                return Err(format!("k={k} r={r} n={n}: load {got} != {want}"));
+            }
+            let report = verify(&alloc, &plan);
+            prop::check(
+                report.is_complete(),
+                format!("k={k} r={r} n={n}: incomplete"),
+            )
+        });
+    }
+}

@@ -1,0 +1,235 @@
+//! Symbolic shuffle decoder: proves a [`ShufflePlan`] is decodable.
+//!
+//! Simulates the Reduce-phase knowledge of every node: a node knows every
+//! IV of every subfile it holds (Map phase), plus whatever it can decode
+//! from the broadcast sequence. A coded broadcast is decodable by a node
+//! when at most one of its parts is unknown to that node; decoding learns
+//! that part. Iterates to fixpoint (plans may be order-dependent), then
+//! checks the §II Reduce requirement: node `n` knows `(n, f)` for every
+//! subfile `f`.
+
+use super::plan::{Broadcast, IvId, ShufflePlan};
+use crate::placement::alloc::Allocation;
+use std::collections::HashMap;
+
+/// Per-node knowledge of IV segments: `(iv) -> (nseg, bitmask of known
+/// segments)`. A fully-known IV is `(1, 0b1)` or all-`nseg` bits.
+#[derive(Clone, Debug, Default)]
+pub struct Knowledge {
+    segs: HashMap<IvId, (u32, u64)>,
+    /// Subfiles held (full IVs for every group).
+    holds: Vec<bool>,
+}
+
+impl Knowledge {
+    fn new(n_sub: usize) -> Self {
+        Self {
+            segs: HashMap::new(),
+            holds: vec![false; n_sub],
+        }
+    }
+
+    fn knows_part(&self, iv: IvId, seg: u32, nseg: u32) -> bool {
+        if self.holds[iv.sub] {
+            return true;
+        }
+        match self.segs.get(&iv) {
+            Some((n, mask)) => {
+                if *n == nseg {
+                    mask & (1 << seg) != 0
+                } else {
+                    // Whole-IV knowledge recorded with nseg=1 covers all.
+                    *n == 1 && mask & 1 != 0
+                }
+            }
+            None => false,
+        }
+    }
+
+    fn learn_part(&mut self, iv: IvId, seg: u32, nseg: u32) {
+        let entry = self.segs.entry(iv).or_insert((nseg, 0));
+        if entry.0 != nseg {
+            // Mixed granularities: only upgrade to whole-IV knowledge.
+            if nseg == 1 {
+                *entry = (1, 1);
+            }
+            return;
+        }
+        entry.1 |= 1 << seg;
+    }
+
+    /// Knows the complete IV payload?
+    pub fn knows_iv(&self, iv: IvId) -> bool {
+        if self.holds[iv.sub] {
+            return true;
+        }
+        match self.segs.get(&iv) {
+            Some((nseg, mask)) => {
+                let full = if *nseg >= 64 { u64::MAX } else { (1u64 << nseg) - 1 };
+                *mask & full == full
+            }
+            None => false,
+        }
+    }
+}
+
+/// Outcome of symbolic decoding.
+#[derive(Clone, Debug)]
+pub struct DecodeReport {
+    /// Per-node: list of missing IVs (empty everywhere iff plan is valid).
+    pub missing: Vec<Vec<IvId>>,
+    /// Fixpoint decode passes used.
+    pub passes: usize,
+}
+
+impl DecodeReport {
+    pub fn is_complete(&self) -> bool {
+        self.missing.iter().all(|m| m.is_empty())
+    }
+}
+
+/// Simulate decoding of `plan` under `alloc`; check Reduce completeness.
+pub fn verify(alloc: &Allocation, plan: &ShufflePlan) -> DecodeReport {
+    let k = alloc.k;
+    let n_sub = alloc.n_sub();
+    let mut know: Vec<Knowledge> = (0..k).map(|_| Knowledge::new(n_sub)).collect();
+    for (sub, &h) in alloc.holders.iter().enumerate() {
+        for (node, knowledge) in know.iter_mut().enumerate() {
+            if h & (1 << node) != 0 {
+                knowledge.holds[sub] = true;
+            }
+        }
+    }
+
+    // Fixpoint over broadcasts (senders know their own payloads already).
+    let mut passes = 0;
+    loop {
+        passes += 1;
+        let mut progress = false;
+        for b in &plan.broadcasts {
+            match b {
+                Broadcast::Uncoded { iv, .. } => {
+                    for knowledge in know.iter_mut() {
+                        if !knowledge.knows_part(*iv, 0, 1) {
+                            knowledge.learn_part(*iv, 0, 1);
+                            progress = true;
+                        }
+                    }
+                }
+                Broadcast::Coded { parts, .. } => {
+                    for knowledge in know.iter_mut() {
+                        let unknown: Vec<_> = parts
+                            .iter()
+                            .filter(|p| !knowledge.knows_part(p.iv, p.seg, p.nseg))
+                            .collect();
+                        if unknown.len() == 1 {
+                            let p = unknown[0];
+                            knowledge.learn_part(p.iv, p.seg, p.nseg);
+                            progress = true;
+                        }
+                    }
+                }
+            }
+        }
+        if !progress || passes > plan.broadcasts.len() + 2 {
+            break;
+        }
+    }
+
+    // Reduce requirement: node n needs (n, f) for every subfile f.
+    let missing = (0..k)
+        .map(|node| {
+            (0..n_sub)
+                .map(|sub| IvId { group: node, sub })
+                .filter(|iv| !know[node].knows_iv(*iv))
+                .collect()
+        })
+        .collect();
+    DecodeReport { missing, passes }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coding::plan::{plan_greedy, plan_k3, plan_uncoded, Part};
+    use crate::placement::k3::optimal_allocation;
+    use crate::prop;
+    use crate::theory::params::Params3;
+
+    #[test]
+    fn k3_optimal_plans_decode_on_paper_example() {
+        let p = Params3::new(6, 7, 7, 12).unwrap();
+        let alloc = optimal_allocation(&p);
+        for plan in [plan_k3(&alloc), plan_greedy(&alloc), plan_uncoded(&alloc)] {
+            let report = verify(&alloc, &plan);
+            assert!(report.is_complete(), "missing: {:?}", report.missing);
+        }
+    }
+
+    #[test]
+    fn detects_incomplete_plan() {
+        let p = Params3::new(6, 7, 7, 12).unwrap();
+        let alloc = optimal_allocation(&p);
+        let mut plan = plan_k3(&alloc);
+        plan.broadcasts.pop(); // drop one message
+        let report = verify(&alloc, &plan);
+        assert!(!report.is_complete());
+    }
+
+    #[test]
+    fn detects_undecodable_xor() {
+        // XOR of two IVs that no receiver can cancel.
+        let alloc = Allocation::new(3, 1, vec![0b001, 0b001, 0b010]);
+        let plan = ShufflePlan {
+            k: 3,
+            broadcasts: vec![Broadcast::Coded {
+                sender: 0,
+                parts: vec![
+                    Part::whole(IvId { group: 1, sub: 0 }),
+                    Part::whole(IvId { group: 2, sub: 1 }),
+                ],
+            }],
+        };
+        let report = verify(&alloc, &plan);
+        // Nodes 1 and 2 know neither part; nothing decodes.
+        assert!(!report.is_complete());
+    }
+
+    #[test]
+    fn prop_all_k3_plans_decode_on_all_params() {
+        prop::run("k3 plans decode everywhere", 250, |g| {
+            let n = g.u64_in(1..=20);
+            let m1 = g.u64_in(1..=n);
+            let m2 = g.u64_in(1..=n);
+            let m3 = g.u64_in(1..=n);
+            let Ok(p) = Params3::new(m1, m2, m3, n) else {
+                return Ok(());
+            };
+            let alloc = optimal_allocation(&p);
+            let plan = plan_k3(&alloc);
+            let report = verify(&alloc, &plan);
+            prop::check(
+                report.is_complete(),
+                format!("{p}: missing {:?}", report.missing),
+            )
+        });
+    }
+
+    #[test]
+    fn prop_greedy_decodes_on_random_allocations_any_k() {
+        prop::run("greedy decodes", 200, |g| {
+            let k = g.usize_in(2..=5);
+            let n_sub = g.usize_in(1..=25);
+            let full = (1u64 << k) - 1;
+            let holders: Vec<u32> =
+                (0..n_sub).map(|_| g.u64_in(1..=full) as u32).collect();
+            let alloc = Allocation::new(k, 1, holders);
+            let plan = plan_greedy(&alloc);
+            let report = verify(&alloc, &plan);
+            prop::check(
+                report.is_complete(),
+                format!("k={k} n_sub={n_sub}: missing {:?}", report.missing),
+            )
+        });
+    }
+}

@@ -1,0 +1,18 @@
+//! Coded-shuffle construction and verification.
+//!
+//! * [`xor`] — the byte-level XOR combiner (hot path).
+//! * [`plan`] — [`plan::ShufflePlan`]: which node broadcasts which XOR of
+//!   which intermediate values; exact Lemma-1 plans for K=3
+//!   ([`plan::plan_k3`]) and a greedy pairing coder for any K
+//!   ([`plan::plan_greedy`]).
+//! * [`cdc_multicast`] — the homogeneous (r+1)-group multicast of [2]
+//!   (baseline, and the j-subsystem building block of §V).
+//! * [`decoder`] — symbolic decoder proving every plan delivers every
+//!   needed IV to every node (the correctness oracle for all plans).
+
+pub mod cdc_multicast;
+pub mod decoder;
+pub mod plan;
+pub mod xor;
+
+pub use plan::{Broadcast, IvId, Part, ShufflePlan};

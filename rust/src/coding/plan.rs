@@ -1,0 +1,461 @@
+//! Shuffle plans: the concrete broadcast schedule of the Shuffle phase.
+//!
+//! A [`ShufflePlan`] lists, per broadcast, the sender and the XOR of IV
+//! *parts* it carries (a part is a `seg/nseg` fraction of one IV payload;
+//! `nseg = 1` for whole-IV XOR pairs, `nseg = r` for the homogeneous
+//! multicast of [2]). Plans are independent of payload bytes — the engine
+//! executes them against real IVs, and [`crate::coding::decoder`] verifies
+//! them symbolically.
+//!
+//! With `Q = K`, intermediate value `(g, f)` is "the IV of node `g`'s
+//! reduce-function group on subfile `f`"; node `g` needs it iff it does
+//! not hold `f`.
+
+use super::xor; // used by doc references; keep module coupling explicit
+use crate::placement::alloc::Allocation;
+use crate::placement::lemma1::{pairing_counts, PAIR_MASKS};
+
+/// Identifies one intermediate value: reduce group `group` (== destination
+/// node under Q=K) on subfile `sub`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct IvId {
+    pub group: usize,
+    pub sub: usize,
+}
+
+/// One summand of a coded broadcast: segment `seg` of `nseg` equal splits
+/// of IV `iv`'s payload.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Part {
+    pub iv: IvId,
+    pub seg: u32,
+    pub nseg: u32,
+}
+
+impl Part {
+    pub fn whole(iv: IvId) -> Self {
+        Part { iv, seg: 0, nseg: 1 }
+    }
+}
+
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Broadcast {
+    /// Plain IV broadcast (destination(s) implied by who lacks `iv.sub`).
+    Uncoded { sender: usize, iv: IvId },
+    /// XOR of `parts` (all the same `nseg`).
+    Coded { sender: usize, parts: Vec<Part> },
+}
+
+impl Broadcast {
+    /// Transmission size in IV units: 1 for uncoded/whole XOR, 1/nseg for
+    /// segment XOR. Returned as (num, den).
+    pub fn units(&self) -> (u64, u64) {
+        match self {
+            Broadcast::Uncoded { .. } => (1, 1),
+            Broadcast::Coded { parts, .. } => {
+                let nseg = parts.first().map(|p| p.nseg).unwrap_or(1);
+                debug_assert!(parts.iter().all(|p| p.nseg == nseg));
+                (1, nseg as u64)
+            }
+        }
+    }
+
+    pub fn sender(&self) -> usize {
+        match self {
+            Broadcast::Uncoded { sender, .. } | Broadcast::Coded { sender, .. } => *sender,
+        }
+    }
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct ShufflePlan {
+    pub k: usize,
+    pub broadcasts: Vec<Broadcast>,
+}
+
+impl ShufflePlan {
+    /// Total load in subfile units (exact rational; integral when all
+    /// broadcasts are whole-IV).
+    pub fn load_units(&self) -> f64 {
+        let mut num = 0u64;
+        let mut frac = 0.0f64;
+        for b in &self.broadcasts {
+            let (n, d) = b.units();
+            if d == 1 {
+                num += n;
+            } else {
+                frac += n as f64 / d as f64;
+            }
+        }
+        num as f64 + frac
+    }
+
+    /// Load in IV-equation units, given the allocation's subpacketization.
+    pub fn load_equations(&self, alloc: &Allocation) -> f64 {
+        self.load_units() / alloc.sp as f64
+    }
+
+    /// Coding ratio: fraction of broadcast units that are coded.
+    pub fn coded_fraction(&self) -> f64 {
+        if self.broadcasts.is_empty() {
+            return 0.0;
+        }
+        let coded = self
+            .broadcasts
+            .iter()
+            .filter(|b| matches!(b, Broadcast::Coded { .. }))
+            .count();
+        coded as f64 / self.broadcasts.len() as f64
+    }
+}
+
+/// Exact Lemma-1 plan for K=3 allocations (achieves `L_M` of eq. (3)).
+///
+/// Node k XOR-pairs the two pair-sets it holds (the evidently-intended
+/// reading of eqs. (8)–(10); see DESIGN.md §9): with pair-sets
+/// `S12, S13, S23` and optimal counts `(alpha, beta, gamma)` from
+/// [`pairing_counts`], node 0 sends `alpha` XORs over `S12 × S13`, node 1
+/// `beta` over `S12 × S23`, node 2 `gamma` over `S13 × S23`; leftovers and
+/// single-held subfiles go uncoded.
+pub fn plan_k3(alloc: &Allocation) -> ShufflePlan {
+    assert_eq!(alloc.k, 3, "plan_k3 requires K=3");
+    let mut plan = ShufflePlan {
+        k: 3,
+        broadcasts: Vec::new(),
+    };
+
+    // Singles: holder broadcasts both other groups' IVs.
+    for (mask, holder) in [(0b001u32, 0usize), (0b010, 1), (0b100, 2)] {
+        for sub in alloc.subfiles_with_mask(mask) {
+            for dest in 0..3 {
+                if dest != holder {
+                    plan.broadcasts.push(Broadcast::Uncoded {
+                        sender: holder,
+                        iv: IvId { group: dest, sub },
+                    });
+                }
+            }
+        }
+    }
+
+    // Pair sets: S12 (mask 011, missing node 2), S13 (101, missing 1),
+    // S23 (110, missing 0).
+    let s12 = alloc.subfiles_with_mask(PAIR_MASKS[0]);
+    let s13 = alloc.subfiles_with_mask(PAIR_MASKS[1]);
+    let s23 = alloc.subfiles_with_mask(PAIR_MASKS[2]);
+    let (alpha, beta, gamma) =
+        pairing_counts(s12.len() as u64, s13.len() as u64, s23.len() as u64);
+    let (alpha, beta, gamma) = (alpha as usize, beta as usize, gamma as usize);
+
+    let missing = |pair_idx: usize| -> usize {
+        match pair_idx {
+            0 => 2, // S12 -> node 2 lacks it
+            1 => 1, // S13 -> node 1
+            2 => 0, // S23 -> node 0
+            _ => unreachable!(),
+        }
+    };
+
+    // alpha XORs at node 0 over (S12, S13); consume prefixes.
+    for i in 0..alpha {
+        plan.broadcasts.push(Broadcast::Coded {
+            sender: 0,
+            parts: vec![
+                Part::whole(IvId { group: missing(0), sub: s12[i] }),
+                Part::whole(IvId { group: missing(1), sub: s13[i] }),
+            ],
+        });
+    }
+    // beta XORs at node 1 over (S12, S23).
+    for i in 0..beta {
+        plan.broadcasts.push(Broadcast::Coded {
+            sender: 1,
+            parts: vec![
+                Part::whole(IvId { group: missing(0), sub: s12[alpha + i] }),
+                Part::whole(IvId { group: missing(2), sub: s23[i] }),
+            ],
+        });
+    }
+    // gamma XORs at node 2 over (S13, S23).
+    for i in 0..gamma {
+        plan.broadcasts.push(Broadcast::Coded {
+            sender: 2,
+            parts: vec![
+                Part::whole(IvId { group: missing(1), sub: s13[alpha + i] }),
+                Part::whole(IvId { group: missing(2), sub: s23[beta + i] }),
+            ],
+        });
+    }
+    // Leftover pair subfiles go uncoded from their lowest holder.
+    for (list, consumed, pair_idx, sender) in [
+        (&s12, alpha + beta, 0usize, 0usize),
+        (&s13, alpha + gamma, 1, 0),
+        (&s23, beta + gamma, 2, 1),
+    ] {
+        for &sub in &list[consumed..] {
+            plan.broadcasts.push(Broadcast::Uncoded {
+                sender,
+                iv: IvId { group: missing(pair_idx), sub },
+            });
+        }
+    }
+    plan
+}
+
+/// Greedy pairing coder for arbitrary K: pairs deliveries `(d1, f1)` and
+/// `(d2, f2)` into one XOR when a common sender holds both subfiles and
+/// each destination holds the *other* subfile (so it can cancel). A valid
+/// achievable scheme for any allocation; exactly optimal pair-coding for
+/// K=3 is provided by [`plan_k3`] instead.
+pub fn plan_greedy(alloc: &Allocation) -> ShufflePlan {
+    let k = alloc.k;
+    let full = alloc.full_mask();
+    // Deliveries: (dest, sub) for every node lacking the subfile.
+    let mut deliveries: Vec<(usize, usize)> = Vec::new();
+    for (sub, &h) in alloc.holders.iter().enumerate() {
+        if h == full {
+            continue;
+        }
+        for dest in 0..k {
+            if h & (1 << dest) == 0 {
+                deliveries.push((dest, sub));
+            }
+        }
+    }
+
+    let mut used = vec![false; deliveries.len()];
+    let mut plan = ShufflePlan {
+        k,
+        broadcasts: Vec::new(),
+    };
+
+    // Bucket deliveries by destination for faster partner search.
+    let mut by_dest: Vec<Vec<usize>> = vec![Vec::new(); k];
+    for (i, &(d, _)) in deliveries.iter().enumerate() {
+        by_dest[d].push(i);
+    }
+
+    for i in 0..deliveries.len() {
+        if used[i] {
+            continue;
+        }
+        let (d1, f1) = deliveries[i];
+        let h1 = alloc.holders[f1];
+        let mut matched = false;
+        // Partner must be destined to a node that holds f1.
+        'outer: for d2 in 0..k {
+            if d2 == d1 || h1 & (1 << d2) == 0 {
+                continue;
+            }
+            for &j in &by_dest[d2] {
+                if used[j] || j == i {
+                    continue;
+                }
+                let (_, f2) = deliveries[j];
+                let h2 = alloc.holders[f2];
+                // d1 must hold f2; a sender must hold both (not d1/d2).
+                if h2 & (1 << d1) == 0 {
+                    continue;
+                }
+                let senders = h1 & h2 & !(1 << d1) & !(1 << d2);
+                if senders == 0 {
+                    continue;
+                }
+                let sender = senders.trailing_zeros() as usize;
+                used[i] = true;
+                used[j] = true;
+                plan.broadcasts.push(Broadcast::Coded {
+                    sender,
+                    parts: vec![
+                        Part::whole(IvId { group: d1, sub: f1 }),
+                        Part::whole(IvId { group: d2, sub: f2 }),
+                    ],
+                });
+                matched = true;
+                break 'outer;
+            }
+        }
+        if !matched {
+            used[i] = true;
+            let sender = alloc.holders[f1].trailing_zeros() as usize;
+            plan.broadcasts.push(Broadcast::Uncoded {
+                sender,
+                iv: IvId { group: d1, sub: f1 },
+            });
+        }
+    }
+    plan
+}
+
+/// Fully-uncoded baseline plan: every delivery as a plain broadcast.
+pub fn plan_uncoded(alloc: &Allocation) -> ShufflePlan {
+    let k = alloc.k;
+    let full = alloc.full_mask();
+    let mut plan = ShufflePlan {
+        k,
+        broadcasts: Vec::new(),
+    };
+    for (sub, &h) in alloc.holders.iter().enumerate() {
+        if h == full {
+            continue;
+        }
+        let sender = h.trailing_zeros() as usize;
+        for dest in 0..k {
+            if h & (1 << dest) == 0 {
+                plan.broadcasts.push(Broadcast::Uncoded {
+                    sender,
+                    iv: IvId { group: dest, sub },
+                });
+            }
+        }
+    }
+    plan
+}
+
+// Re-export for doc link resolution.
+#[allow(unused_imports)]
+use xor as _xor_doc;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::placement::k3::optimal_allocation;
+    use crate::placement::lemma1::load_units;
+    use crate::prop;
+    use crate::theory::load::{lstar_half, uncoded_half};
+    use crate::theory::params::Params3;
+
+    #[test]
+    fn plan_k3_load_matches_lemma1_on_paper_example() {
+        let p = Params3::new(6, 7, 7, 12).unwrap();
+        let alloc = optimal_allocation(&p);
+        let plan = plan_k3(&alloc);
+        assert_eq!(plan.load_units() as u64, load_units(&alloc));
+        assert_eq!(plan.load_equations(&alloc), 12.0);
+    }
+
+    #[test]
+    fn plan_uncoded_load_matches_theory() {
+        let p = Params3::new(6, 7, 7, 12).unwrap();
+        let alloc = optimal_allocation(&p);
+        let plan = plan_uncoded(&alloc);
+        assert_eq!(plan.load_units() as u64, alloc.uncoded_units());
+        assert_eq!(
+            plan.load_equations(&alloc),
+            uncoded_half(&p) as f64 / 2.0
+        );
+    }
+
+    #[test]
+    fn no_sender_transmits_unheld_data() {
+        let p = Params3::new(5, 8, 11, 12).unwrap();
+        let alloc = optimal_allocation(&p);
+        for plan in [plan_k3(&alloc), plan_greedy(&alloc), plan_uncoded(&alloc)] {
+            for b in &plan.broadcasts {
+                match b {
+                    Broadcast::Uncoded { sender, iv } => {
+                        assert!(alloc.holders[iv.sub] & (1 << sender) != 0);
+                    }
+                    Broadcast::Coded { sender, parts } => {
+                        for part in parts {
+                            assert!(
+                                alloc.holders[part.iv.sub] & (1 << sender) != 0,
+                                "sender {sender} lacks subfile {}",
+                                part.iv.sub
+                            );
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn prop_plan_k3_achieves_lstar_on_optimal_allocations() {
+        prop::run("plan_k3 load == L*", 400, |g| {
+            let n = g.u64_in(1..=25);
+            let m1 = g.u64_in(1..=n);
+            let m2 = g.u64_in(1..=n);
+            let m3 = g.u64_in(1..=n);
+            let Ok(p) = Params3::new(m1, m2, m3, n) else {
+                return Ok(());
+            };
+            let alloc = optimal_allocation(&p);
+            let plan = plan_k3(&alloc);
+            prop::check(
+                plan.load_units() as u64 == lstar_half(&p),
+                format!("{p}: plan {} != {}", plan.load_units(), lstar_half(&p)),
+            )
+        });
+    }
+
+    #[test]
+    fn prop_greedy_between_optimal_and_uncoded() {
+        prop::run("greedy plan sane", 200, |g| {
+            let n_sub = g.usize_in(1..=30);
+            let k = g.usize_in(2..=5);
+            let full = (1u32 << k) - 1;
+            let holders: Vec<u32> = (0..n_sub)
+                .map(|_| (g.u64_in(1..=full as u64)) as u32)
+                .collect();
+            let alloc = Allocation::new(k, 1, holders);
+            let greedy = plan_greedy(&alloc);
+            let unc = plan_uncoded(&alloc);
+            let lower = (unc.load_units() / 2.0).ceil();
+            prop::check(
+                greedy.load_units() <= unc.load_units()
+                    && greedy.load_units() >= lower,
+                format!(
+                    "k={k}: greedy {} uncoded {}",
+                    greedy.load_units(),
+                    unc.load_units()
+                ),
+            )
+        });
+    }
+
+    #[test]
+    fn plan_k3_never_double_consumes_a_delivery() {
+        // Regression guard for the prefix-consumption bookkeeping: every
+        // (dest, subfile) delivery appears in exactly one broadcast.
+        for (m1, m2, m3, n) in [(6u64, 7, 7, 12u64), (5, 8, 11, 12), (4, 5, 6, 12), (10, 10, 10, 12)] {
+            let p = Params3::new(m1, m2, m3, n).unwrap();
+            let alloc = optimal_allocation(&p);
+            let plan = plan_k3(&alloc);
+            let mut seen = std::collections::HashSet::new();
+            for b in &plan.broadcasts {
+                let ivs: Vec<IvId> = match b {
+                    Broadcast::Uncoded { iv, .. } => vec![*iv],
+                    Broadcast::Coded { parts, .. } => parts.iter().map(|p| p.iv).collect(),
+                };
+                for iv in ivs {
+                    assert!(seen.insert(iv), "delivery {iv:?} scheduled twice");
+                    // The destination must actually lack the subfile.
+                    assert_eq!(alloc.holders[iv.sub] & (1 << iv.group), 0);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn uncoded_plan_covers_every_delivery_exactly_once() {
+        let p = Params3::new(5, 8, 11, 12).unwrap();
+        let alloc = optimal_allocation(&p);
+        let plan = plan_uncoded(&alloc);
+        let mut need = std::collections::HashSet::new();
+        for (sub, &h) in alloc.holders.iter().enumerate() {
+            for dest in 0..3 {
+                if h & (1 << dest) == 0 {
+                    need.insert(IvId { group: dest, sub });
+                }
+            }
+        }
+        let mut seen = std::collections::HashSet::new();
+        for b in &plan.broadcasts {
+            if let Broadcast::Uncoded { iv, .. } = b {
+                assert!(seen.insert(*iv));
+            }
+        }
+        assert_eq!(need, seen);
+    }
+}

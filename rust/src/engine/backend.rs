@@ -1,0 +1,275 @@
+//! Map/Reduce compute backends.
+//!
+//! [`NativeBackend`] computes Map/Reduce in pure Rust (the oracle path,
+//! always available). [`XlaBackend`] executes the AOT artifacts through
+//! the PJRT runtime — the production path, where the Map hot loop runs the
+//! Layer-1 Pallas kernels lowered into `artifacts/*.hlo.txt`. Integration
+//! tests assert the two agree (bit-exact for TeraSort's i32 histogram,
+//! to float round-off for WordCount's matmul).
+
+use crate::model::job::{JobSpec, WorkloadKind};
+use crate::runtime::Runtime;
+use crate::workloads;
+
+/// Compute backend: batched Map over subfiles, plus group Reduce.
+pub trait MapBackend {
+    /// For each subfile in `subs`: all `q` groups' IV payloads.
+    fn map_subfiles(
+        &mut self,
+        job: &JobSpec,
+        q: usize,
+        subs: &[usize],
+    ) -> Result<Vec<Vec<Vec<u8>>>, String>;
+
+    /// Reduce one group's payloads to its final output vector.
+    fn reduce_group(&mut self, job: &JobSpec, payloads: &[&[u8]]) -> Result<Vec<f64>, String>;
+
+    fn name(&self) -> &'static str;
+}
+
+/// Pure-Rust backend (oracle; no artifacts needed).
+#[derive(Default)]
+pub struct NativeBackend;
+
+impl MapBackend for NativeBackend {
+    fn map_subfiles(
+        &mut self,
+        job: &JobSpec,
+        q: usize,
+        subs: &[usize],
+    ) -> Result<Vec<Vec<Vec<u8>>>, String> {
+        Ok(subs
+            .iter()
+            .map(|&sub| workloads::native_map(job, q, sub))
+            .collect())
+    }
+
+    fn reduce_group(&mut self, job: &JobSpec, payloads: &[&[u8]]) -> Result<Vec<f64>, String> {
+        let mut acc = vec![0f64; job.t];
+        for p in payloads {
+            for (a, v) in acc.iter_mut().zip(workloads::decode_payload(job, p)) {
+                *a += v;
+            }
+        }
+        Ok(acc)
+    }
+
+    fn name(&self) -> &'static str {
+        "native"
+    }
+}
+
+/// PJRT backend: Map (and f32 Reduce) through the XLA artifacts.
+pub struct XlaBackend<'r> {
+    rt: &'r mut Runtime,
+}
+
+impl<'r> XlaBackend<'r> {
+    pub fn new(rt: &'r mut Runtime) -> Self {
+        Self { rt }
+    }
+
+    /// The artifacts bake static shapes; the job must match them.
+    pub fn check_job(&self, job: &JobSpec, q: usize) -> Result<(), String> {
+        let m = &self.rt.manifest;
+        if q != m.q || job.t != m.t {
+            return Err(format!(
+                "job (q={q}, t={}) does not match artifacts (q={}, t={}); \
+                 re-run `make artifacts` with matching flags",
+                job.t, m.q, m.t
+            ));
+        }
+        match job.workload {
+            WorkloadKind::WordCount if job.vocab != m.vocab => Err(format!(
+                "vocab {} != artifact vocab {}",
+                job.vocab, m.vocab
+            )),
+            WorkloadKind::TeraSort if job.keys_per_file != m.keys_per_file => Err(format!(
+                "keys_per_file {} != artifact {}",
+                job.keys_per_file, m.keys_per_file
+            )),
+            _ => Ok(()),
+        }
+    }
+
+    fn map_wordcount(
+        &mut self,
+        job: &JobSpec,
+        q: usize,
+        subs: &[usize],
+    ) -> Result<Vec<Vec<Vec<u8>>>, String> {
+        let b = self.rt.manifest.map_batch;
+        let (qt, v) = (q * job.t, job.vocab);
+        // Shared, cached projection (see workloads::wordcount::projection).
+        let w = crate::workloads::wordcount::projection(job, q);
+        let w_lit = Runtime::lit_f32(&w, &[qt, v]).map_err(|e| e.to_string())?;
+        // Reusable input pair: slot 0 keeps W across chunks (deep Literal
+        // clones per chunk showed in the profile — EXPERIMENTS.md §Perf).
+        let zero = vec![0f32; v * b];
+        let mut inputs = [
+            w_lit,
+            Runtime::lit_f32(&zero, &[v, b]).map_err(|e| e.to_string())?,
+        ];
+        let mut out = Vec::with_capacity(subs.len());
+        for chunk in subs.chunks(b) {
+            // counts matrix [V, B], zero-padded tail columns.
+            let mut data = vec![0f32; v * b];
+            for (col, &sub) in chunk.iter().enumerate() {
+                let c = crate::workloads::wordcount::counts(job, sub);
+                for (row, &val) in c.iter().enumerate() {
+                    data[row * b + col] = val;
+                }
+            }
+            inputs[1] = Runtime::lit_f32(&data, &[v, b]).map_err(|e| e.to_string())?;
+            let ivs = self
+                .rt
+                .execute_to_f32("map_project", &inputs)
+                .map_err(|e| e.to_string())?;
+            // ivs shape [QT, B] row-major.
+            for (col, _) in chunk.iter().enumerate() {
+                let mut groups = Vec::with_capacity(q);
+                for g in 0..q {
+                    let mut payload = Vec::with_capacity(job.t * 4);
+                    for row in 0..job.t {
+                        let val = ivs[(g * job.t + row) * b + col];
+                        payload.extend_from_slice(&val.to_le_bytes());
+                    }
+                    groups.push(payload);
+                }
+                out.push(groups);
+            }
+        }
+        Ok(out)
+    }
+
+    fn map_terasort(
+        &mut self,
+        job: &JobSpec,
+        q: usize,
+        subs: &[usize],
+    ) -> Result<Vec<Vec<Vec<u8>>>, String> {
+        let b = self.rt.manifest.map_batch;
+        let d = job.keys_per_file;
+        let qt = q * job.t;
+        let bounds: Vec<i32> = crate::workloads::terasort::bounds(job, q)
+            .into_iter()
+            .map(|x| x as i32)
+            .collect();
+        // Reusable input pair: slot 1 keeps the bounds across chunks (no
+        // per-chunk deep Literal clones).
+        let pad = vec![-1i32; b * d];
+        let mut inputs = [
+            Runtime::lit_i32(&pad, &[b, d]).map_err(|e| e.to_string())?,
+            Runtime::lit_i32(&bounds, &[qt + 1]).map_err(|e| e.to_string())?,
+        ];
+        let mut out = Vec::with_capacity(subs.len());
+        for chunk in subs.chunks(b) {
+            // keys matrix [B, D]; pad tail rows with -1 (below all bounds,
+            // so they count in no bucket).
+            let mut data = vec![-1i32; b * d];
+            for (row, &sub) in chunk.iter().enumerate() {
+                for (col, key) in crate::workloads::terasort::keys(job, sub)
+                    .into_iter()
+                    .enumerate()
+                {
+                    data[row * d + col] = key as i32;
+                }
+            }
+            inputs[0] = Runtime::lit_i32(&data, &[b, d]).map_err(|e| e.to_string())?;
+            let counts = self
+                .rt
+                .execute_to_i32("map_histogram", &inputs)
+                .map_err(|e| e.to_string())?;
+            // counts shape [B, QT] row-major.
+            for (row, _) in chunk.iter().enumerate() {
+                let mut groups = Vec::with_capacity(q);
+                for g in 0..q {
+                    let mut payload = Vec::with_capacity(job.t * 4);
+                    for j in 0..job.t {
+                        let val = counts[row * qt + g * job.t + j];
+                        payload.extend_from_slice(&val.to_le_bytes());
+                    }
+                    groups.push(payload);
+                }
+                out.push(groups);
+            }
+        }
+        Ok(out)
+    }
+}
+
+impl<'r> MapBackend for XlaBackend<'r> {
+    fn map_subfiles(
+        &mut self,
+        job: &JobSpec,
+        q: usize,
+        subs: &[usize],
+    ) -> Result<Vec<Vec<Vec<u8>>>, String> {
+        self.check_job(job, q)?;
+        match job.workload {
+            WorkloadKind::WordCount => self.map_wordcount(job, q, subs),
+            WorkloadKind::TeraSort => self.map_terasort(job, q, subs),
+        }
+    }
+
+    fn reduce_group(&mut self, job: &JobSpec, payloads: &[&[u8]]) -> Result<Vec<f64>, String> {
+        match job.workload {
+            // f32 partial sums through the reduce_sum artifact.
+            WorkloadKind::WordCount => {
+                let rb = self.rt.manifest.reduce_batch;
+                let t = job.t;
+                let mut acc = vec![0f32; t];
+                for chunk in payloads.chunks(rb) {
+                    let mut data = vec![0f32; rb * t];
+                    for (row, p) in chunk.iter().enumerate() {
+                        for (col, bytes) in p.chunks_exact(4).enumerate() {
+                            data[row * t + col] = f32::from_le_bytes(bytes.try_into().unwrap());
+                        }
+                    }
+                    let lit = Runtime::lit_f32(&data, &[rb, t]).map_err(|e| e.to_string())?;
+                    let partial = self
+                        .rt
+                        .execute_to_f32("reduce_sum", &[lit])
+                        .map_err(|e| e.to_string())?;
+                    for (a, v) in acc.iter_mut().zip(partial) {
+                        *a += v;
+                    }
+                }
+                Ok(acc.into_iter().map(|x| x as f64).collect())
+            }
+            // i32 merge is exact integer work; stay native.
+            WorkloadKind::TeraSort => NativeBackend.reduce_group(job, payloads),
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "xla"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn native_map_shapes() {
+        let job = JobSpec::wordcount(4);
+        let mut be = NativeBackend;
+        let out = be.map_subfiles(&job, 3, &[0, 1, 5]).unwrap();
+        assert_eq!(out.len(), 3);
+        assert_eq!(out[0].len(), 3);
+        assert!(out[0].iter().all(|p| p.len() == job.iv_bytes()));
+    }
+
+    #[test]
+    fn native_reduce_matches_oracle() {
+        let job = JobSpec::terasort(4);
+        let mut be = NativeBackend;
+        let maps = be.map_subfiles(&job, 3, &[0, 1, 2, 3]).unwrap();
+        let g = 1usize;
+        let payloads: Vec<&[u8]> = maps.iter().map(|m| m[g].as_slice()).collect();
+        let got = be.reduce_group(&job, &payloads).unwrap();
+        let want = crate::workloads::native_reduce_oracle(&job, 3, g, 4);
+        assert_eq!(got, want);
+    }
+}

@@ -1,0 +1,498 @@
+//! End-to-end job orchestration: placement -> Map -> coded Shuffle ->
+//! Reduce -> verification, with the phase time model of DESIGN.md §4.
+
+use super::backend::MapBackend;
+use super::exec::{execute_shuffle, NodeState};
+use crate::coding::plan::{plan_greedy, plan_k3, plan_uncoded, IvId, ShufflePlan};
+use crate::coding::{cdc_multicast, decoder};
+use crate::model::cluster::ClusterSpec;
+use crate::model::job::{JobSpec, ShuffleMode};
+use crate::placement::alloc::Allocation;
+use crate::placement::{homogeneous, k3, lp_general};
+use crate::workloads;
+
+/// How files are placed on nodes before the job runs.
+#[derive(Clone, Debug)]
+pub enum PlacementStrategy {
+    /// Theorem-1 optimal placement (K=3 only).
+    OptimalK3,
+    /// §V LP placement (any K).
+    LpGeneral,
+    /// Homogeneous r-redundant placement of [2] (requires equal storage
+    /// `M_k = r·N/K`; `r` derived from storage).
+    Homogeneous,
+    /// Storage-oblivious baseline: provisions every node to the SMALLEST
+    /// storage and runs the homogeneous memory-sharing scheme — what a
+    /// heterogeneity-unaware deployment does (the [13] failure mode the
+    /// paper's introduction cites). Wastes surplus storage.
+    Oblivious,
+    /// Caller-provided allocation.
+    Custom(Allocation),
+}
+
+impl PlacementStrategy {
+    pub fn name(&self) -> &'static str {
+        match self {
+            PlacementStrategy::OptimalK3 => "optimal-k3",
+            PlacementStrategy::LpGeneral => "lp-general",
+            PlacementStrategy::Homogeneous => "homogeneous",
+            PlacementStrategy::Oblivious => "oblivious",
+            PlacementStrategy::Custom(_) => "custom",
+        }
+    }
+}
+
+/// Everything measured in one run.
+#[derive(Clone, Debug)]
+pub struct RunReport {
+    pub k: usize,
+    pub n_files: u64,
+    pub n_sub: usize,
+    pub sp: u32,
+    pub placement: String,
+    pub mode: ShuffleMode,
+    pub backend: String,
+    /// Measured shuffle load in IV-equation units (payload bytes / T·4·sp).
+    pub load_equations: f64,
+    /// Plan-predicted load (should equal measured for whole-IV plans).
+    pub plan_equations: f64,
+    pub payload_bytes: u64,
+    pub wire_bytes: u64,
+    pub messages: u64,
+    /// Phase time model (virtual seconds).
+    pub map_time_s: f64,
+    pub shuffle_time_s: f64,
+    pub job_time_s: f64,
+    /// Reduce outputs matched the single-node oracle.
+    pub verified: bool,
+    /// Max |output − oracle| over all groups (absolute).
+    pub max_abs_err: f64,
+}
+
+impl RunReport {
+    /// Fraction of (virtual) job time spent shuffling — §I's 33–70% story.
+    pub fn shuffle_fraction(&self) -> f64 {
+        if self.job_time_s == 0.0 {
+            0.0
+        } else {
+            self.shuffle_time_s / self.job_time_s
+        }
+    }
+
+    /// Machine-readable report (for `hetcdc run --json` and experiment
+    /// archiving in EXPERIMENTS.md).
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        let mut m = std::collections::BTreeMap::new();
+        let mut put = |k: &str, v: Json| {
+            m.insert(k.to_string(), v);
+        };
+        put("k", Json::Num(self.k as f64));
+        put("n_files", Json::Num(self.n_files as f64));
+        put("n_sub", Json::Num(self.n_sub as f64));
+        put("sp", Json::Num(self.sp as f64));
+        put("placement", Json::Str(self.placement.clone()));
+        put("mode", Json::Str(format!("{:?}", self.mode)));
+        put("backend", Json::Str(self.backend.clone()));
+        put("load_equations", Json::Num(self.load_equations));
+        put("plan_equations", Json::Num(self.plan_equations));
+        put("payload_bytes", Json::Num(self.payload_bytes as f64));
+        put("wire_bytes", Json::Num(self.wire_bytes as f64));
+        put("messages", Json::Num(self.messages as f64));
+        put("map_time_s", Json::Num(self.map_time_s));
+        put("shuffle_time_s", Json::Num(self.shuffle_time_s));
+        put("job_time_s", Json::Num(self.job_time_s));
+        put("shuffle_fraction", Json::Num(self.shuffle_fraction()));
+        put("verified", Json::Bool(self.verified));
+        put("max_abs_err", Json::Num(self.max_abs_err));
+        Json::Obj(m)
+    }
+}
+
+/// The engine: borrows cluster, job, and a compute backend.
+pub struct Engine<'a> {
+    pub cluster: &'a ClusterSpec,
+    pub job: &'a JobSpec,
+    pub backend: &'a mut dyn MapBackend,
+}
+
+impl<'a> Engine<'a> {
+    pub fn new(
+        cluster: &'a ClusterSpec,
+        job: &'a JobSpec,
+        backend: &'a mut dyn MapBackend,
+    ) -> Self {
+        Engine {
+            cluster,
+            job,
+            backend,
+        }
+    }
+
+    /// Build the allocation for a strategy.
+    pub fn place(&self, strategy: &PlacementStrategy) -> Result<Allocation, String> {
+        let k = self.cluster.k();
+        let n = self.job.n_files;
+        match strategy {
+            PlacementStrategy::OptimalK3 => {
+                let p = self.cluster.params3(n)?;
+                Ok(k3::optimal_allocation(&p))
+            }
+            PlacementStrategy::LpGeneral => {
+                let p = self.cluster.params_k(n)?;
+                let sol = lp_general::solve_general(&p, lp_general::DEFAULT_COLLECTION_CAP)
+                    .map_err(|e| format!("LP: {e}"))?;
+                Ok(lp_general::allocation_from_solution(&p, &sol))
+            }
+            PlacementStrategy::Homogeneous => {
+                let storage = self.cluster.storage();
+                let m0 = storage[0];
+                if !storage.iter().all(|&m| m == m0) {
+                    return Err("homogeneous placement needs equal storage".into());
+                }
+                let r = (m0 * k as u64) / n;
+                if r * n != m0 * k as u64 || r == 0 {
+                    return Err(format!(
+                        "storage {m0} is not r·N/K for any integer r (N={n}, K={k})"
+                    ));
+                }
+                Ok(homogeneous::symmetric_allocation(k, r as usize, n))
+            }
+            PlacementStrategy::Oblivious => {
+                let m_min = *self.cluster.storage().iter().min().unwrap();
+                let share = crate::placement::memshare::split(k, m_min, n)?;
+                Ok(share.allocation())
+            }
+            PlacementStrategy::Custom(a) => Ok(a.clone()),
+        }
+    }
+
+    /// Build the shuffle plan for an allocation.
+    pub fn plan(
+        &self,
+        alloc: &Allocation,
+        strategy: &PlacementStrategy,
+        mode: ShuffleMode,
+    ) -> ShufflePlan {
+        match mode {
+            ShuffleMode::Uncoded => plan_uncoded(alloc),
+            ShuffleMode::Coded => match strategy {
+                PlacementStrategy::Homogeneous => {
+                    let r = alloc.holders[0].count_ones() as usize;
+                    cdc_multicast::plan_homogeneous(alloc, r)
+                }
+                PlacementStrategy::Oblivious => {
+                    let m_min = *self.cluster.storage().iter().min().unwrap();
+                    match crate::placement::memshare::split(
+                        alloc.k,
+                        m_min,
+                        self.job.n_files,
+                    ) {
+                        Ok(share) => share.plan(alloc),
+                        Err(_) if alloc.k == 3 => plan_k3(alloc),
+                        Err(_) => plan_greedy(alloc),
+                    }
+                }
+                _ if alloc.k == 3 => plan_k3(alloc),
+                _ => plan_greedy(alloc),
+            },
+        }
+    }
+
+    /// Run the full job. See [`RunReport`].
+    pub fn run(
+        &mut self,
+        strategy: &PlacementStrategy,
+        mode: ShuffleMode,
+    ) -> Result<RunReport, String> {
+        let k = self.cluster.k();
+        self.job.validate(k)?;
+        let q = k; // Q = K (one reduce-function group per node, as in the paper)
+        let alloc = self.place(strategy)?;
+        // Capacities are upper bounds at run time; optimal placements fill
+        // them exactly, the oblivious baseline deliberately under-fills.
+        alloc
+            .validate_le(&self.cluster.storage(), self.job.n_files)
+            .map_err(|e| format!("placement invalid: {e}"))?;
+        let n_sub = alloc.n_sub();
+        let iv_bytes = self.job.iv_bytes();
+
+        // ---- Map phase: every node computes all groups' IVs of its
+        // subfiles; the time model takes the slowest node (barrier).
+        let mut states: Vec<NodeState> = (0..k)
+            .map(|_| NodeState::new(q, n_sub, iv_bytes))
+            .collect();
+        let mut map_time_s: f64 = 0.0;
+        for node in 0..k {
+            let held: Vec<usize> = (0..n_sub)
+                .filter(|&s| alloc.holders[s] & (1 << node) != 0)
+                .collect();
+            let files_equiv = held.len() as f64 / alloc.sp as f64;
+            map_time_s = map_time_s
+                .max(files_equiv / self.cluster.nodes[node].map_files_per_s.max(1e-9));
+            let ivs = self.backend.map_subfiles(self.job, q, &held)?;
+            for (pos, &sub) in held.iter().enumerate() {
+                for (g, payload) in ivs[pos].iter().enumerate() {
+                    states[node].set_full(IvId { group: g, sub }, payload.clone());
+                }
+            }
+        }
+
+        // ---- Shuffle phase.
+        let plan = self.plan(&alloc, strategy, mode);
+        let report = decoder::verify(&alloc, &plan);
+        if !report.is_complete() {
+            return Err(format!(
+                "internal: plan not decodable; missing {:?}",
+                report.missing
+            ));
+        }
+        let mut net = self.cluster.network();
+        let outcome = execute_shuffle(&plan, &mut states, &mut net)?;
+        let shuffle_time_s = net.report().elapsed_s;
+
+        // ---- Reduce phase + oracle verification (all groups' oracles in
+        // one Map pass; per-group recomputation tripled verify cost).
+        let mut verified = true;
+        let mut max_abs_err = 0f64;
+        let oracles = workloads::native_reduce_oracle_all(self.job, q, n_sub);
+        for node in 0..k {
+            let payloads: Vec<&[u8]> = (0..n_sub)
+                .map(|sub| {
+                    states[node]
+                        .get_full(IvId { group: node, sub })
+                        .ok_or_else(|| format!("node {node} missing IV for subfile {sub}"))
+                })
+                .collect::<Result<_, _>>()?;
+            let out = self.backend.reduce_group(self.job, &payloads)?;
+            let oracle = &oracles[node];
+            for (a, b) in out.iter().zip(oracle) {
+                let err = (a - b).abs();
+                max_abs_err = max_abs_err.max(err);
+                // f32 accumulation tolerance, scaled to magnitude.
+                if err > 1e-2 + 1e-4 * b.abs() {
+                    verified = false;
+                }
+            }
+        }
+
+        let load_equations = outcome.payload_bytes as f64 / (iv_bytes as f64 * alloc.sp as f64);
+        Ok(RunReport {
+            k,
+            n_files: self.job.n_files,
+            n_sub,
+            sp: alloc.sp,
+            placement: strategy.name().to_string(),
+            mode,
+            backend: self.backend.name().to_string(),
+            load_equations,
+            plan_equations: plan.load_equations(&alloc),
+            payload_bytes: outcome.payload_bytes,
+            wire_bytes: outcome.wire_bytes,
+            messages: outcome.messages,
+            map_time_s,
+            shuffle_time_s,
+            job_time_s: map_time_s + shuffle_time_s,
+            verified,
+            max_abs_err,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::backend::NativeBackend;
+    use crate::prop;
+    use crate::theory::load::{lstar, uncoded};
+
+    fn run_one(
+        storage: [u64; 3],
+        n: u64,
+        job: JobSpec,
+        strategy: PlacementStrategy,
+        mode: ShuffleMode,
+    ) -> RunReport {
+        let mut cluster = ClusterSpec::homogeneous(3, 1, 1000.0);
+        for (node, &m) in cluster.nodes.iter_mut().zip(storage.iter()) {
+            node.storage = m;
+        }
+        let _ = n;
+        let mut be = NativeBackend;
+        let mut engine = Engine::new(&cluster, &job, &mut be);
+        engine.run(&strategy, mode).unwrap()
+    }
+
+    #[test]
+    fn paper_example_measured_load_is_12() {
+        let job = JobSpec::wordcount(12);
+        let r = run_one(
+            [6, 7, 7],
+            12,
+            job,
+            PlacementStrategy::OptimalK3,
+            ShuffleMode::Coded,
+        );
+        assert!(r.verified, "reduce outputs mismatched oracle: {}", r.max_abs_err);
+        assert_eq!(r.load_equations, 12.0);
+        assert_eq!(r.plan_equations, 12.0);
+    }
+
+    #[test]
+    fn paper_example_uncoded_load_is_16() {
+        let job = JobSpec::wordcount(12);
+        let r = run_one(
+            [6, 7, 7],
+            12,
+            job,
+            PlacementStrategy::OptimalK3,
+            ShuffleMode::Uncoded,
+        );
+        assert!(r.verified);
+        assert_eq!(r.load_equations, 16.0);
+    }
+
+    #[test]
+    fn terasort_exact_verification() {
+        let job = JobSpec::terasort(12);
+        let r = run_one(
+            [6, 7, 7],
+            12,
+            job,
+            PlacementStrategy::OptimalK3,
+            ShuffleMode::Coded,
+        );
+        assert!(r.verified);
+        assert_eq!(r.max_abs_err, 0.0, "integer pipeline must be exact");
+    }
+
+    #[test]
+    fn homogeneous_strategy_matches_li_curve() {
+        let mut cluster = ClusterSpec::homogeneous(3, 8, 1000.0);
+        cluster.latency_ms = 0.0;
+        let job = JobSpec::terasort(12);
+        let mut be = NativeBackend;
+        let mut engine = Engine::new(&cluster, &job, &mut be);
+        let r = engine
+            .run(&PlacementStrategy::Homogeneous, ShuffleMode::Coded)
+            .unwrap();
+        assert!(r.verified);
+        // r = MK/N = 2 -> L = N(K−r)/r = 6.
+        assert!((r.load_equations - 6.0).abs() < 1e-9, "{}", r.load_equations);
+    }
+
+    #[test]
+    fn shuffle_fraction_reported() {
+        let job = JobSpec::wordcount(12);
+        let r = run_one(
+            [6, 7, 7],
+            12,
+            job,
+            PlacementStrategy::OptimalK3,
+            ShuffleMode::Uncoded,
+        );
+        assert!(r.shuffle_fraction() > 0.0 && r.shuffle_fraction() < 1.0);
+    }
+
+    #[test]
+    fn prop_engine_measured_equals_theory_k3() {
+        // End-to-end: measured coded load == L*, measured uncoded ==
+        // 3N − M, outputs verified — on random K=3 instances.
+        prop::run("engine == theory", 25, |g| {
+            let n = g.u64_in(2..=10);
+            let m1 = g.u64_in(1..=n);
+            let m2 = g.u64_in(1..=n);
+            let m3 = g.u64_in(1..=n);
+            let Ok(p) = crate::theory::params::Params3::new(m1, m2, m3, n) else {
+                return Ok(());
+            };
+            let mut job = JobSpec::terasort(n);
+            job.t = 8;
+            job.keys_per_file = 32;
+            let coded = run_one(
+                [m1, m2, m3],
+                n,
+                job.clone(),
+                PlacementStrategy::OptimalK3,
+                ShuffleMode::Coded,
+            );
+            let unc = run_one(
+                [m1, m2, m3],
+                n,
+                job,
+                PlacementStrategy::OptimalK3,
+                ShuffleMode::Uncoded,
+            );
+            if !coded.verified || !unc.verified {
+                return Err(format!("{p}: verification failed"));
+            }
+            prop::check(
+                (coded.load_equations - lstar(&p)).abs() < 1e-9
+                    && (unc.load_equations - uncoded(&p)).abs() < 1e-9,
+                format!(
+                    "{p}: coded {} vs L* {}; uncoded {} vs {}",
+                    coded.load_equations,
+                    lstar(&p),
+                    unc.load_equations,
+                    uncoded(&p)
+                ),
+            )
+        });
+    }
+
+    #[test]
+    fn oblivious_baseline_pays_heterogeneity_penalty() {
+        // (4,8,12,12): heterogeneity-aware L* = 3N−(M1+M) = 36−28 = 8;
+        // oblivious provisions all nodes to min = 4 (r = 1) -> L = 24.
+        let job = JobSpec::terasort(12);
+        let aware = run_one(
+            [4, 8, 12],
+            12,
+            job.clone(),
+            PlacementStrategy::OptimalK3,
+            ShuffleMode::Coded,
+        );
+        let oblivious = run_one(
+            [4, 8, 12],
+            12,
+            job,
+            PlacementStrategy::Oblivious,
+            ShuffleMode::Coded,
+        );
+        assert!(aware.verified && oblivious.verified);
+        let p = crate::theory::params::Params3::new(4, 8, 12, 12).unwrap();
+        assert_eq!(aware.load_equations, crate::theory::load::lstar(&p));
+        assert_eq!(
+            oblivious.load_equations,
+            crate::theory::load::oblivious(&p).unwrap()
+        );
+        assert!(
+            oblivious.load_equations > 2.0 * aware.load_equations,
+            "expected a large heterogeneity penalty: {} vs {}",
+            oblivious.load_equations,
+            aware.load_equations
+        );
+    }
+
+    #[test]
+    fn lp_strategy_runs_k4() {
+        let mut cluster = ClusterSpec::homogeneous(4, 5, 1000.0);
+        cluster.nodes[0].storage = 3;
+        cluster.nodes[1].storage = 4;
+        cluster.nodes[2].storage = 5;
+        cluster.nodes[3].storage = 6;
+        let mut job = JobSpec::terasort(8);
+        job.t = 8;
+        job.keys_per_file = 32;
+        let mut be = NativeBackend;
+        let mut engine = Engine::new(&cluster, &job, &mut be);
+        let coded = engine
+            .run(&PlacementStrategy::LpGeneral, ShuffleMode::Coded)
+            .unwrap();
+        let unc = engine
+            .run(&PlacementStrategy::LpGeneral, ShuffleMode::Uncoded)
+            .unwrap();
+        assert!(coded.verified && unc.verified);
+        assert!(coded.load_equations <= unc.load_equations);
+    }
+}

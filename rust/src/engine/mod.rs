@@ -1,0 +1,11 @@
+//! The MapReduce engine: Map -> coded Shuffle -> Reduce over the simulated
+//! broadcast network, with byte-exact load accounting and oracle-verified
+//! outputs.
+
+pub mod backend;
+pub mod exec;
+#[allow(clippy::module_inception)]
+pub mod engine;
+
+pub use backend::{MapBackend, NativeBackend, XlaBackend};
+pub use engine::{Engine, PlacementStrategy, RunReport};

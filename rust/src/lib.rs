@@ -1,0 +1,34 @@
+//! # hetcdc — Heterogeneous Coded Distributed Computing
+//!
+//! A production-shaped implementation of *On Heterogeneous Coded
+//! Distributed Computing* (Kiamari, Wang, Avestimehr, 2017): a
+//! MapReduce-style distributed computing framework whose Shuffle phase is
+//! **coded** (XOR multicast, eqs. (8)–(10)) and whose file placement is
+//! optimized for clusters with **heterogeneous per-node storage**
+//! (Theorem 1 for K=3; the §V linear program for general K).
+//!
+//! Three-layer architecture (see DESIGN.md):
+//! * **Layer 1/2 (build-time Python)** — Pallas kernels + JAX Map/Reduce
+//!   graphs, AOT-lowered to `artifacts/*.hlo.txt`.
+//! * **Layer 3 (this crate)** — placement theory, LP solver, coded shuffle
+//!   planning, broadcast-network simulation, the MapReduce engine, and the
+//!   PJRT runtime that executes the artifacts. Python never runs at
+//!   request time.
+//!
+//! Quick tour:
+//! * [`theory`] — Theorem 1 closed forms, converse bounds, baselines.
+//! * [`placement`] — optimal K=3 placements, Lemma-1 pairing, §V LP.
+//! * [`lp`] — two-phase simplex (f64 + exact rational), from scratch.
+
+pub mod bench;
+pub mod coding;
+pub mod engine;
+pub mod lp;
+pub mod model;
+pub mod net;
+pub mod placement;
+pub mod prop;
+pub mod runtime;
+pub mod theory;
+pub mod util;
+pub mod workloads;

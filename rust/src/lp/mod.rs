@@ -1,0 +1,15 @@
+//! Linear-programming substrate, built from scratch for the §V algorithm.
+//!
+//! * [`problem`] — LP model builder, generic over the scalar field.
+//! * [`simplex`] — two-phase dense primal simplex with Bland's rule.
+//! * [`rational`] — exact `i128` rational arithmetic; instantiating the
+//!   simplex at [`rational::Rat`] gives an exact solver used to validate
+//!   the `f64` path in tests.
+
+pub mod problem;
+pub mod rational;
+pub mod simplex;
+
+pub use problem::{Cmp, Lp, Scalar};
+pub use rational::Rat;
+pub use simplex::{solve, LpError, Solution};

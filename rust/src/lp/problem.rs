@@ -1,0 +1,182 @@
+//! LP model representation, generic over the scalar field.
+//!
+//! All variables are implicitly non-negative (matching the paper's
+//! `S_T >= 0`, `x_{jq} >= 0`); constraints are `<=`, `=`, or `>=` rows.
+
+use std::fmt::Debug;
+
+/// Scalar field abstraction: implemented for `f64` (tolerance-based) and
+/// [`crate::lp::rational::Rat`] (exact).
+pub trait Scalar: Clone + Debug + PartialEq {
+    fn zero() -> Self;
+    fn one() -> Self;
+    fn from_i64(v: i64) -> Self;
+    /// `num / den` as a field element (den != 0).
+    fn from_ratio(num: i64, den: i64) -> Self;
+    fn add(&self, o: &Self) -> Self;
+    fn sub(&self, o: &Self) -> Self;
+    fn mul(&self, o: &Self) -> Self;
+    fn div(&self, o: &Self) -> Self;
+    fn neg(&self) -> Self;
+    /// Strictly positive beyond tolerance.
+    fn is_pos(&self) -> bool;
+    /// Strictly negative beyond tolerance.
+    fn is_neg(&self) -> bool;
+    fn is_zero(&self) -> bool {
+        !self.is_pos() && !self.is_neg()
+    }
+    fn to_f64(&self) -> f64;
+}
+
+pub const F64_EPS: f64 = 1e-9;
+
+impl Scalar for f64 {
+    fn zero() -> Self {
+        0.0
+    }
+    fn one() -> Self {
+        1.0
+    }
+    fn from_i64(v: i64) -> Self {
+        v as f64
+    }
+    fn from_ratio(num: i64, den: i64) -> Self {
+        num as f64 / den as f64
+    }
+    fn add(&self, o: &Self) -> Self {
+        self + o
+    }
+    fn sub(&self, o: &Self) -> Self {
+        self - o
+    }
+    fn mul(&self, o: &Self) -> Self {
+        self * o
+    }
+    fn div(&self, o: &Self) -> Self {
+        self / o
+    }
+    fn neg(&self) -> Self {
+        -self
+    }
+    fn is_pos(&self) -> bool {
+        *self > F64_EPS
+    }
+    fn is_neg(&self) -> bool {
+        *self < -F64_EPS
+    }
+    fn to_f64(&self) -> f64 {
+        *self
+    }
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Cmp {
+    Le,
+    Eq,
+    Ge,
+}
+
+#[derive(Clone, Debug)]
+pub struct Constraint<S> {
+    /// Sparse row: (variable index, coefficient).
+    pub coeffs: Vec<(usize, S)>,
+    pub cmp: Cmp,
+    pub rhs: S,
+}
+
+/// Minimization LP over non-negative variables.
+#[derive(Clone, Debug)]
+pub struct Lp<S> {
+    pub n_vars: usize,
+    /// Objective coefficients (minimized), length `n_vars`.
+    pub objective: Vec<S>,
+    pub constraints: Vec<Constraint<S>>,
+    pub var_names: Vec<String>,
+}
+
+impl<S: Scalar> Lp<S> {
+    pub fn new() -> Self {
+        Self {
+            n_vars: 0,
+            objective: Vec::new(),
+            constraints: Vec::new(),
+            var_names: Vec::new(),
+        }
+    }
+
+    /// Add a variable with objective coefficient `cost`; returns its index.
+    pub fn add_var(&mut self, name: impl Into<String>, cost: S) -> usize {
+        let idx = self.n_vars;
+        self.n_vars += 1;
+        self.objective.push(cost);
+        self.var_names.push(name.into());
+        idx
+    }
+
+    pub fn set_cost(&mut self, var: usize, cost: S) {
+        self.objective[var] = cost;
+    }
+
+    pub fn constrain(&mut self, coeffs: Vec<(usize, S)>, cmp: Cmp, rhs: S) {
+        debug_assert!(coeffs.iter().all(|(i, _)| *i < self.n_vars));
+        self.constraints.push(Constraint { coeffs, cmp, rhs });
+    }
+
+    /// Evaluate the objective at a point.
+    pub fn objective_at(&self, x: &[S]) -> S {
+        let mut acc = S::zero();
+        for (c, xi) in self.objective.iter().zip(x) {
+            acc = acc.add(&c.mul(xi));
+        }
+        acc
+    }
+
+    /// Check feasibility of a point (within scalar tolerance).
+    pub fn is_feasible(&self, x: &[S]) -> bool {
+        if x.len() != self.n_vars || x.iter().any(|v| v.is_neg()) {
+            return false;
+        }
+        for c in &self.constraints {
+            let mut lhs = S::zero();
+            for (i, a) in &c.coeffs {
+                lhs = lhs.add(&a.mul(&x[*i]));
+            }
+            let diff = lhs.sub(&c.rhs);
+            let ok = match c.cmp {
+                Cmp::Le => !diff.is_pos(),
+                Cmp::Ge => !diff.is_neg(),
+                Cmp::Eq => diff.is_zero(),
+            };
+            if !ok {
+                return false;
+            }
+        }
+        true
+    }
+}
+
+impl<S: Scalar> Default for Lp<S> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn build_and_evaluate() {
+        let mut lp: Lp<f64> = Lp::new();
+        let x = lp.add_var("x", 1.0);
+        let y = lp.add_var("y", 2.0);
+        lp.constrain(vec![(x, 1.0), (y, 1.0)], Cmp::Ge, 4.0);
+        lp.constrain(vec![(x, 1.0)], Cmp::Le, 3.0);
+        assert_eq!(lp.n_vars, 2);
+        assert_eq!(lp.objective_at(&[3.0, 1.0]), 5.0);
+        assert!(lp.is_feasible(&[3.0, 1.0]));
+        assert!(!lp.is_feasible(&[1.0, 1.0])); // violates >= 4
+        assert!(!lp.is_feasible(&[4.0, 0.0])); // violates x <= 3
+        assert!(!lp.is_feasible(&[-1.0, 6.0])); // negative var
+    }
+}

@@ -1,0 +1,187 @@
+//! Exact rational arithmetic over `i128` for the exact simplex.
+//!
+//! Keeps fractions reduced with positive denominators. Overflow panics
+//! (tests keep instances small; the f64 path handles production sizes).
+
+use super::problem::Scalar;
+use std::cmp::Ordering;
+use std::fmt;
+
+#[derive(Clone, Copy, PartialEq, Eq)]
+pub struct Rat {
+    num: i128,
+    den: i128, // > 0, gcd(num, den) == 1
+}
+
+fn gcd(mut a: i128, mut b: i128) -> i128 {
+    a = a.abs();
+    b = b.abs();
+    while b != 0 {
+        let t = a % b;
+        a = b;
+        b = t;
+    }
+    a
+}
+
+impl Rat {
+    pub fn new(num: i128, den: i128) -> Self {
+        assert!(den != 0, "zero denominator");
+        let sign = if den < 0 { -1 } else { 1 };
+        let (num, den) = (num * sign, den * sign);
+        let g = gcd(num, den).max(1);
+        Self {
+            num: num / g,
+            den: den / g,
+        }
+    }
+
+    pub fn int(v: i128) -> Self {
+        Self { num: v, den: 1 }
+    }
+
+    pub fn num(&self) -> i128 {
+        self.num
+    }
+
+    pub fn den(&self) -> i128 {
+        self.den
+    }
+
+    pub fn is_integer(&self) -> bool {
+        self.den == 1
+    }
+}
+
+impl fmt::Debug for Rat {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if self.den == 1 {
+            write!(f, "{}", self.num)
+        } else {
+            write!(f, "{}/{}", self.num, self.den)
+        }
+    }
+}
+
+impl fmt::Display for Rat {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{self:?}")
+    }
+}
+
+impl PartialOrd for Rat {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for Rat {
+    fn cmp(&self, other: &Self) -> Ordering {
+        (self.num * other.den).cmp(&(other.num * self.den))
+    }
+}
+
+impl Scalar for Rat {
+    fn zero() -> Self {
+        Rat::int(0)
+    }
+    fn one() -> Self {
+        Rat::int(1)
+    }
+    fn from_i64(v: i64) -> Self {
+        Rat::int(v as i128)
+    }
+    fn from_ratio(num: i64, den: i64) -> Self {
+        Rat::new(num as i128, den as i128)
+    }
+    fn add(&self, o: &Self) -> Self {
+        Rat::new(self.num * o.den + o.num * self.den, self.den * o.den)
+    }
+    fn sub(&self, o: &Self) -> Self {
+        Rat::new(self.num * o.den - o.num * self.den, self.den * o.den)
+    }
+    fn mul(&self, o: &Self) -> Self {
+        Rat::new(self.num * o.num, self.den * o.den)
+    }
+    fn div(&self, o: &Self) -> Self {
+        assert!(o.num != 0, "division by zero");
+        Rat::new(self.num * o.den, self.den * o.num)
+    }
+    fn neg(&self) -> Self {
+        Rat {
+            num: -self.num,
+            den: self.den,
+        }
+    }
+    fn is_pos(&self) -> bool {
+        self.num > 0
+    }
+    fn is_neg(&self) -> bool {
+        self.num < 0
+    }
+    fn to_f64(&self) -> f64 {
+        self.num as f64 / self.den as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop;
+
+    #[test]
+    fn reduction_and_sign_normalization() {
+        assert_eq!(Rat::new(2, 4), Rat::new(1, 2));
+        assert_eq!(Rat::new(-2, -4), Rat::new(1, 2));
+        assert_eq!(Rat::new(2, -4), Rat::new(-1, 2));
+        assert!(Rat::new(0, 5).is_zero());
+    }
+
+    #[test]
+    fn arithmetic() {
+        let a = Rat::new(1, 2);
+        let b = Rat::new(1, 3);
+        assert_eq!(a.add(&b), Rat::new(5, 6));
+        assert_eq!(a.sub(&b), Rat::new(1, 6));
+        assert_eq!(a.mul(&b), Rat::new(1, 6));
+        assert_eq!(a.div(&b), Rat::new(3, 2));
+        assert_eq!(a.neg(), Rat::new(-1, 2));
+    }
+
+    #[test]
+    fn ordering() {
+        assert!(Rat::new(1, 3) < Rat::new(1, 2));
+        assert!(Rat::new(-1, 2) < Rat::new(0, 1));
+        assert_eq!(Rat::new(3, 3), Rat::int(1));
+    }
+
+    #[test]
+    #[should_panic(expected = "zero denominator")]
+    fn zero_denominator_panics() {
+        Rat::new(1, 0);
+    }
+
+    #[test]
+    fn prop_field_axioms_small() {
+        prop::run("rat field axioms", 300, |g| {
+            let r = |g: &mut prop::Gen| {
+                Rat::new(g.u64_in(0..=40) as i128 - 20, g.u64_in(1..=12) as i128)
+            };
+            let (a, b, c) = (r(g), r(g), r(g));
+            // associativity + commutativity + distributivity
+            let assoc = a.add(&b.add(&c)) == a.add(&b).add(&c);
+            let comm = a.mul(&b) == b.mul(&a);
+            let dist = a.mul(&b.add(&c)) == a.mul(&b).add(&a.mul(&c));
+            let inv = a.is_zero() || a.mul(&Rat::one().div(&a)) == Rat::one();
+            prop::check(
+                assoc && comm && dist && inv,
+                format!("a={a:?} b={b:?} c={c:?}"),
+            )
+        });
+    }
+
+    #[test]
+    fn to_f64_matches() {
+        assert_eq!(Rat::new(3, 4).to_f64(), 0.75);
+    }
+}

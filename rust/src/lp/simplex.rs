@@ -1,0 +1,438 @@
+//! Two-phase dense primal simplex with Bland's anti-cycling rule.
+//!
+//! Generic over [`Scalar`], so the same code runs in `f64` (production) and
+//! exact rationals (test oracle). Solves
+//!
+//! ```text
+//! min c'x  s.t.  A x {<=,=,>=} b,  x >= 0
+//! ```
+//!
+//! Phase 1 minimizes the sum of artificial variables to find a basic
+//! feasible solution; phase 2 optimizes the real objective. Bland's rule
+//! (smallest-index entering/leaving) guarantees termination.
+
+use super::problem::{Cmp, Lp, Scalar};
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum LpError {
+    Infeasible,
+    Unbounded,
+}
+
+impl std::fmt::Display for LpError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            LpError::Infeasible => write!(f, "LP is infeasible"),
+            LpError::Unbounded => write!(f, "LP is unbounded"),
+        }
+    }
+}
+
+impl std::error::Error for LpError {}
+
+#[derive(Clone, Debug)]
+pub struct Solution<S> {
+    pub objective: S,
+    /// Values of the original variables.
+    pub values: Vec<S>,
+    /// Simplex pivots performed (both phases) — used by bench_simplex.
+    pub pivots: usize,
+}
+
+struct Tableau<S> {
+    /// `rows x cols` coefficient matrix; last column is the RHS.
+    a: Vec<Vec<S>>,
+    /// Basis variable per row.
+    basis: Vec<usize>,
+    rows: usize,
+    cols: usize, // total columns incl. rhs
+}
+
+impl<S: Scalar> Tableau<S> {
+    fn rhs(&self, r: usize) -> &S {
+        &self.a[r][self.cols - 1]
+    }
+
+    fn pivot(&mut self, r: usize, c: usize) {
+        let piv = self.a[r][c].clone();
+        debug_assert!(!piv.is_zero());
+        for j in 0..self.cols {
+            self.a[r][j] = self.a[r][j].div(&piv);
+        }
+        for i in 0..self.rows {
+            if i != r && !self.a[i][c].is_zero() {
+                let factor = self.a[i][c].clone();
+                for j in 0..self.cols {
+                    let delta = factor.mul(&self.a[r][j]);
+                    self.a[i][j] = self.a[i][j].sub(&delta);
+                }
+            }
+        }
+        self.basis[r] = c;
+    }
+
+    /// Minimize `cost` (length cols-1) starting from the current basis.
+    /// Returns (objective value, pivots) or Unbounded.
+    fn optimize(&mut self, cost: &[S], allow: &dyn Fn(usize) -> bool) -> Result<(S, usize), LpError> {
+        let n = self.cols - 1;
+        let mut pivots = 0usize;
+        loop {
+            // Reduced costs: z_j - c_j = sum_i c_B[i] * a[i][j] - c_j;
+            // entering column has reduced cost > 0 (for minimization with
+            // this sign convention we pick j with  c_j - z_j < 0).
+            let mut entering = None;
+            for j in 0..n {
+                if !allow(j) {
+                    continue;
+                }
+                // c_j - z_j
+                let mut zj = S::zero();
+                for i in 0..self.rows {
+                    let cb = &cost[self.basis[i]];
+                    if !cb.is_zero() {
+                        zj = zj.add(&cb.mul(&self.a[i][j]));
+                    }
+                }
+                let red = cost[j].sub(&zj);
+                if red.is_neg() {
+                    entering = Some(j); // Bland: first (smallest) index
+                    break;
+                }
+            }
+            let Some(c) = entering else {
+                // Optimal: objective = sum_i cost[basis[i]] * rhs[i].
+                let mut obj = S::zero();
+                for i in 0..self.rows {
+                    obj = obj.add(&cost[self.basis[i]].mul(self.rhs(i)));
+                }
+                return Ok((obj, pivots));
+            };
+            // Ratio test (Bland tie-break on smallest basis index).
+            let mut leave: Option<(usize, S)> = None;
+            for i in 0..self.rows {
+                if self.a[i][c].is_pos() {
+                    let ratio = self.rhs(i).div(&self.a[i][c]);
+                    let better = match &leave {
+                        None => true,
+                        Some((li, lr)) => {
+                            let diff = ratio.sub(lr);
+                            diff.is_neg()
+                                || (diff.is_zero() && self.basis[i] < self.basis[*li])
+                        }
+                    };
+                    if better {
+                        leave = Some((i, ratio));
+                    }
+                }
+            }
+            let Some((r, _)) = leave else {
+                return Err(LpError::Unbounded);
+            };
+            self.pivot(r, c);
+            pivots += 1;
+        }
+    }
+}
+
+/// Solve the LP. See module docs.
+pub fn solve<S: Scalar>(lp: &Lp<S>) -> Result<Solution<S>, LpError> {
+    let n = lp.n_vars;
+    let m = lp.constraints.len();
+
+    // Column layout: [original n] [slack/surplus per row as needed] [artificials] [rhs]
+    let mut n_slack = 0usize;
+    for c in &lp.constraints {
+        if matches!(c.cmp, Cmp::Le | Cmp::Ge) {
+            n_slack += 1;
+        }
+    }
+    // Artificials: Ge and Eq rows always; Le rows only if rhs < 0 after
+    // normalization (we instead normalize rows so rhs >= 0 first).
+    // Build dense rows with rhs >= 0.
+    let mut rows: Vec<(Vec<S>, Cmp, S)> = Vec::with_capacity(m);
+    for c in &lp.constraints {
+        let mut row = vec![S::zero(); n];
+        for (i, a) in &c.coeffs {
+            row[*i] = row[*i].add(a);
+        }
+        let (row, cmp, rhs) = if c.rhs.is_neg() {
+            let flipped = match c.cmp {
+                Cmp::Le => Cmp::Ge,
+                Cmp::Ge => Cmp::Le,
+                Cmp::Eq => Cmp::Eq,
+            };
+            (
+                row.iter().map(|x| x.neg()).collect::<Vec<_>>(),
+                flipped,
+                c.rhs.neg(),
+            )
+        } else {
+            (row, c.cmp, c.rhs.clone())
+        };
+        rows.push((row, cmp, rhs));
+    }
+
+    let mut n_artif = 0usize;
+    for (_, cmp, _) in &rows {
+        if matches!(cmp, Cmp::Ge | Cmp::Eq) {
+            n_artif += 1;
+        }
+    }
+    let total = n + n_slack + n_artif;
+    let cols = total + 1;
+
+    let mut a = vec![vec![S::zero(); cols]; m];
+    let mut basis = vec![0usize; m];
+    let mut slack_idx = n;
+    let mut artif_idx = n + n_slack;
+    let artif_start = n + n_slack;
+    for (i, (row, cmp, rhs)) in rows.iter().enumerate() {
+        for j in 0..n {
+            a[i][j] = row[j].clone();
+        }
+        a[i][cols - 1] = rhs.clone();
+        match cmp {
+            Cmp::Le => {
+                a[i][slack_idx] = S::one();
+                basis[i] = slack_idx;
+                slack_idx += 1;
+            }
+            Cmp::Ge => {
+                a[i][slack_idx] = S::one().neg();
+                slack_idx += 1;
+                a[i][artif_idx] = S::one();
+                basis[i] = artif_idx;
+                artif_idx += 1;
+            }
+            Cmp::Eq => {
+                a[i][artif_idx] = S::one();
+                basis[i] = artif_idx;
+                artif_idx += 1;
+            }
+        }
+    }
+
+    let mut tab = Tableau {
+        a,
+        basis,
+        rows: m,
+        cols,
+    };
+
+    let mut total_pivots = 0usize;
+
+    // Phase 1.
+    if n_artif > 0 {
+        let mut cost1 = vec![S::zero(); total];
+        for item in cost1.iter_mut().take(total).skip(artif_start) {
+            *item = S::one();
+        }
+        let (obj1, p1) = tab.optimize(&cost1, &|_| true)?;
+        total_pivots += p1;
+        if obj1.is_pos() {
+            return Err(LpError::Infeasible);
+        }
+        // Drive any artificial still in the basis out (degenerate rows).
+        for i in 0..m {
+            if tab.basis[i] >= artif_start {
+                // Find a non-artificial column with nonzero coefficient.
+                let mut found = None;
+                for j in 0..artif_start {
+                    if !tab.a[i][j].is_zero() {
+                        found = Some(j);
+                        break;
+                    }
+                }
+                if let Some(j) = found {
+                    tab.pivot(i, j);
+                    total_pivots += 1;
+                }
+                // else: the row is all-zero over real columns — redundant
+                // constraint; leave the artificial basic at value 0.
+            }
+        }
+    }
+
+    // Phase 2: minimize real objective; artificial columns are barred.
+    let mut cost2 = vec![S::zero(); total];
+    for j in 0..n {
+        cost2[j] = lp.objective[j].clone();
+    }
+    let (obj, p2) = tab.optimize(&cost2, &|j| j < artif_start)?;
+    total_pivots += p2;
+
+    let mut values = vec![S::zero(); n];
+    for i in 0..m {
+        if tab.basis[i] < n {
+            values[tab.basis[i]] = tab.rhs(i).clone();
+        }
+    }
+    Ok(Solution {
+        objective: obj,
+        values,
+        pivots: total_pivots,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lp::rational::Rat;
+    use crate::prop;
+
+    fn lp_f64() -> Lp<f64> {
+        Lp::new()
+    }
+
+    #[test]
+    fn simple_minimization() {
+        // min x + y s.t. x + y >= 4, x <= 3 -> obj 4.
+        let mut lp = lp_f64();
+        let x = lp.add_var("x", 1.0);
+        let y = lp.add_var("y", 1.0);
+        lp.constrain(vec![(x, 1.0), (y, 1.0)], Cmp::Ge, 4.0);
+        lp.constrain(vec![(x, 1.0)], Cmp::Le, 3.0);
+        let sol = solve(&lp).unwrap();
+        assert!((sol.objective - 4.0).abs() < 1e-9);
+        assert!(lp.is_feasible(&sol.values));
+    }
+
+    #[test]
+    fn maximization_via_negated_cost() {
+        // max 3x + 2y s.t. x + y <= 4, x + 3y <= 6 -> x=4, y=0, obj 12.
+        let mut lp = lp_f64();
+        let x = lp.add_var("x", -3.0);
+        let y = lp.add_var("y", -2.0);
+        lp.constrain(vec![(x, 1.0), (y, 1.0)], Cmp::Le, 4.0);
+        lp.constrain(vec![(x, 1.0), (y, 3.0)], Cmp::Le, 6.0);
+        let sol = solve(&lp).unwrap();
+        assert!((sol.objective + 12.0).abs() < 1e-9);
+        assert!((sol.values[0] - 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn equality_constraints() {
+        // min 2x + 3y s.t. x + y = 10, x - y = 2 -> x=6, y=4, obj 24.
+        let mut lp = lp_f64();
+        let x = lp.add_var("x", 2.0);
+        let y = lp.add_var("y", 3.0);
+        lp.constrain(vec![(x, 1.0), (y, 1.0)], Cmp::Eq, 10.0);
+        lp.constrain(vec![(x, 1.0), (y, -1.0)], Cmp::Eq, 2.0);
+        let sol = solve(&lp).unwrap();
+        assert!((sol.objective - 24.0).abs() < 1e-9);
+        assert!((sol.values[0] - 6.0).abs() < 1e-9);
+        assert!((sol.values[1] - 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn detects_infeasible() {
+        let mut lp = lp_f64();
+        let x = lp.add_var("x", 1.0);
+        lp.constrain(vec![(x, 1.0)], Cmp::Le, 1.0);
+        lp.constrain(vec![(x, 1.0)], Cmp::Ge, 2.0);
+        assert_eq!(solve(&lp).unwrap_err(), LpError::Infeasible);
+    }
+
+    #[test]
+    fn detects_unbounded() {
+        let mut lp = lp_f64();
+        let x = lp.add_var("x", -1.0); // maximize x, no upper bound
+        lp.constrain(vec![(x, 1.0)], Cmp::Ge, 0.0);
+        assert_eq!(solve(&lp).unwrap_err(), LpError::Unbounded);
+    }
+
+    #[test]
+    fn negative_rhs_normalization() {
+        // x - y <= -2 with min x -> x=0, y>=2 feasible; obj 0.
+        let mut lp = lp_f64();
+        let x = lp.add_var("x", 1.0);
+        let y = lp.add_var("y", 0.0);
+        lp.constrain(vec![(x, 1.0), (y, -1.0)], Cmp::Le, -2.0);
+        let sol = solve(&lp).unwrap();
+        assert!(sol.objective.abs() < 1e-9);
+        assert!(lp.is_feasible(&sol.values));
+    }
+
+    #[test]
+    fn redundant_equalities_ok() {
+        // x + y = 4 twice (redundant) — phase 1 leaves a zero artificial.
+        let mut lp = lp_f64();
+        let x = lp.add_var("x", 1.0);
+        let y = lp.add_var("y", 1.0);
+        lp.constrain(vec![(x, 1.0), (y, 1.0)], Cmp::Eq, 4.0);
+        lp.constrain(vec![(x, 1.0), (y, 1.0)], Cmp::Eq, 4.0);
+        let sol = solve(&lp).unwrap();
+        assert!((sol.objective - 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn exact_rational_solver_agrees() {
+        // Same LP in both fields; rational is the oracle.
+        let mut lpf = lp_f64();
+        let mut lpr: Lp<Rat> = Lp::new();
+        let xf = lpf.add_var("x", 1.0);
+        let yf = lpf.add_var("y", 3.0);
+        let xr = lpr.add_var("x", Rat::int(1));
+        let yr = lpr.add_var("y", Rat::int(3));
+        lpf.constrain(vec![(xf, 2.0), (yf, 1.0)], Cmp::Ge, 5.0);
+        lpr.constrain(vec![(xr, Rat::int(2)), (yr, Rat::int(1))], Cmp::Ge, Rat::int(5));
+        lpf.constrain(vec![(xf, 1.0)], Cmp::Le, 2.0);
+        lpr.constrain(vec![(xr, Rat::int(1))], Cmp::Le, Rat::int(2));
+        let sf = solve(&lpf).unwrap();
+        let sr = solve(&lpr).unwrap();
+        assert!((sf.objective - sr.objective.to_f64()).abs() < 1e-9);
+        // optimum: x=2, y=1 -> obj 5.
+        assert_eq!(sr.objective, Rat::int(5));
+    }
+
+    #[test]
+    fn prop_f64_matches_exact_rational_on_random_small_lps() {
+        prop::run("simplex f64 == exact", 150, |g| {
+            let n = g.usize_in(1..=4);
+            let m = g.usize_in(1..=4);
+            let mut lpf = lp_f64();
+            let mut lpr: Lp<Rat> = Lp::new();
+            for v in 0..n {
+                let c = g.u64_in(0..=6) as i64 - 2;
+                lpf.add_var(format!("v{v}"), c as f64);
+                lpr.add_var(format!("v{v}"), Rat::int(c as i128));
+            }
+            for _ in 0..m {
+                let mut cf = Vec::new();
+                let mut cr = Vec::new();
+                for v in 0..n {
+                    let a = g.u64_in(0..=4) as i64 - 1;
+                    if a != 0 {
+                        cf.push((v, a as f64));
+                        cr.push((v, Rat::int(a as i128)));
+                    }
+                }
+                let rhs = g.u64_in(0..=10) as i64 - 2;
+                let cmp = *g.pick(&[Cmp::Le, Cmp::Ge, Cmp::Eq]);
+                lpf.constrain(cf, cmp, rhs as f64);
+                lpr.constrain(cr, cmp, Rat::int(rhs as i128));
+            }
+            // Bound all vars so unbounded cases are rare but still handled.
+            for v in 0..n {
+                lpf.constrain(vec![(v, 1.0)], Cmp::Le, 50.0);
+                lpr.constrain(vec![(v, Rat::int(1))], Cmp::Le, Rat::int(50));
+            }
+            match (solve(&lpf), solve(&lpr)) {
+                (Ok(sf), Ok(sr)) => {
+                    let agree = (sf.objective - sr.objective.to_f64()).abs() < 1e-6;
+                    let feas = lpf.is_feasible(&sf.values) && lpr.is_feasible(&sr.values);
+                    prop::check(
+                        agree && feas,
+                        format!(
+                            "obj f64={} exact={} feas={feas}",
+                            sf.objective,
+                            sr.objective.to_f64()
+                        ),
+                    )
+                }
+                (Err(a), Err(b)) => prop::check(a == b, format!("{a:?} vs {b:?}")),
+                (a, b) => Err(format!("divergent outcomes: f64={a:?} exact={b:?}")),
+            }
+        });
+    }
+}

@@ -1,0 +1,488 @@
+//! `hetcdc` CLI — the framework launcher.
+//!
+//! Subcommands:
+//! * `loadstar`  — Theorem-1 closed form, regime, converse bounds.
+//! * `place`     — construct + print the optimal allocation.
+//! * `lp`        — run the §V LP for general K.
+//! * `run`       — execute a full MapReduce job (native or XLA backend).
+//! * `sweep`     — L* table over a storage grid.
+//! * `info`      — artifact manifest summary.
+
+use hetcdc::engine::{Engine, NativeBackend, PlacementStrategy, XlaBackend};
+use hetcdc::model::cluster::ClusterSpec;
+use hetcdc::model::job::{JobSpec, ShuffleMode};
+use hetcdc::placement::{k3, lp_general};
+use hetcdc::runtime::Runtime;
+use hetcdc::theory::params::{Params3, ParamsK};
+use hetcdc::theory::{converse, homogeneous as th_hom, load};
+use hetcdc::util::cli::{usage, ArgSpec, Args};
+
+fn main() {
+    hetcdc::util::logging::init();
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let code = match argv.first().map(|s| s.as_str()) {
+        Some("loadstar") => cmd_loadstar(&argv[1..]),
+        Some("place") => cmd_place(&argv[1..]),
+        Some("lp") => cmd_lp(&argv[1..]),
+        Some("run") => cmd_run(&argv[1..]),
+        Some("sweep") => cmd_sweep(&argv[1..]),
+        Some("verify") => cmd_verify(&argv[1..]),
+        Some("info") => cmd_info(&argv[1..]),
+        Some("--help") | Some("-h") | None => {
+            print_help();
+            0
+        }
+        Some(other) => {
+            eprintln!("unknown subcommand '{other}'\n");
+            print_help();
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+fn print_help() {
+    println!(
+        "hetcdc — Heterogeneous Coded Distributed Computing\n\n\
+         Usage: hetcdc <subcommand> [options]\n\n\
+         Subcommands:\n\
+         \x20 loadstar  --storage M1,M2,M3 --n N     Theorem-1 minimum load\n\
+         \x20 place     --storage M1,M2,M3 --n N     optimal file placement\n\
+         \x20 lp        --storage M1,..,MK --n N     §V LP for general K\n\
+         \x20 run       --workload wordcount|terasort [--backend native|xla]\n\
+         \x20           [--config cluster.json | --storage ...] [--mode coded|uncoded]\n\
+         \x20 sweep     --n N [--max-m M]            L* table over storage grid\n\
+         \x20 verify    [--n N]                      full self-check (theory, coding, LP)\n\
+         \x20 info      [--artifacts DIR]            artifact manifest summary\n\n\
+         Run `hetcdc <subcommand> --help` for details."
+    );
+}
+
+fn fail(e: impl std::fmt::Display) -> i32 {
+    eprintln!("error: {e}");
+    1
+}
+
+const STORAGE_SPECS: &[ArgSpec] = &[
+    ArgSpec { name: "storage", help: "comma-separated per-node storage (files)", takes_value: true, default: Some("6,7,7") },
+    ArgSpec { name: "n", help: "number of files N", takes_value: true, default: Some("12") },
+    ArgSpec { name: "help", help: "show usage", takes_value: false, default: None },
+];
+
+fn parse_params3(args: &Args) -> Result<Params3, String> {
+    let m = args.get_u64_list("storage").map_err(|e| e.to_string())?;
+    if m.len() != 3 {
+        return Err(format!("expected 3 storage values, got {}", m.len()));
+    }
+    Params3::new(m[0], m[1], m[2], args.get_u64("n").map_err(|e| e.to_string())?)
+}
+
+fn cmd_loadstar(argv: &[String]) -> i32 {
+    let args = match Args::parse(argv, STORAGE_SPECS) {
+        Ok(a) => a,
+        Err(e) => return fail(e),
+    };
+    if args.flag("help") {
+        println!("{}", usage("hetcdc loadstar", "Theorem-1 minimum communication load", STORAGE_SPECS));
+        return 0;
+    }
+    let p = match parse_params3(&args) {
+        Ok(p) => p,
+        Err(e) => return fail(e),
+    };
+    let b = converse::bounds_half(&p);
+    println!("params            {p}");
+    println!("regime            {}", load::classify(&p));
+    println!("L* (coded)        {}", load::lstar(&p));
+    println!("uncoded           {}", load::uncoded(&p));
+    println!(
+        "saving            {} ({:.1}%)",
+        load::saving(&p),
+        100.0 * load::saving(&p) / load::uncoded(&p).max(1e-12)
+    );
+    println!(
+        "converse bounds   corollary={} loose={} cutset={} genie={}",
+        b.corollary_tight as f64 / 2.0,
+        b.corollary_loose as f64 / 2.0,
+        b.cutset as f64 / 2.0,
+        b.genie as f64 / 2.0
+    );
+    if p.is_homogeneous() {
+        let r = 3.0 * p.m[0] as f64 / p.n as f64;
+        println!(
+            "homogeneous [2]   r={r:.2} envelope={}",
+            th_hom::load_envelope(3, r, p.n)
+        );
+    }
+    0
+}
+
+fn cmd_place(argv: &[String]) -> i32 {
+    let args = match Args::parse(argv, STORAGE_SPECS) {
+        Ok(a) => a,
+        Err(e) => return fail(e),
+    };
+    if args.flag("help") {
+        println!("{}", usage("hetcdc place", "Optimal K=3 file placement (Figs 5-11)", STORAGE_SPECS));
+        return 0;
+    }
+    let p = match parse_params3(&args) {
+        Ok(p) => p,
+        Err(e) => return fail(e),
+    };
+    let alloc = k3::optimal_allocation(&p);
+    let sizes = alloc.subset_sizes();
+    println!("params {p}  regime {}  sp={}", load::classify(&p), alloc.sp);
+    println!("subset sizes (subfile units, sp·files):");
+    for mask in 1u32..8 {
+        let nodes: Vec<String> = (0..3)
+            .filter(|i| mask & (1 << i) != 0)
+            .map(|i| (i + 1).to_string())
+            .collect();
+        println!("  S{{{}}} = {}", nodes.join(","), sizes[mask as usize]);
+    }
+    let plan = hetcdc::coding::plan::plan_k3(&alloc);
+    println!(
+        "achievable load {} (L* = {}), {} broadcasts ({:.0}% coded)",
+        plan.load_equations(&alloc),
+        load::lstar(&p),
+        plan.broadcasts.len(),
+        100.0 * plan.coded_fraction()
+    );
+    0
+}
+
+fn cmd_lp(argv: &[String]) -> i32 {
+    let specs: Vec<ArgSpec> = vec![
+        ArgSpec { name: "storage", help: "comma-separated per-node storage", takes_value: true, default: Some("3,5,6,8") },
+        ArgSpec { name: "n", help: "number of files N", takes_value: true, default: Some("12") },
+        ArgSpec { name: "cap", help: "max perfect collections per subsystem", takes_value: true, default: Some("4096") },
+        ArgSpec { name: "help", help: "show usage", takes_value: false, default: None },
+    ];
+    let args = match Args::parse(argv, &specs) {
+        Ok(a) => a,
+        Err(e) => return fail(e),
+    };
+    if args.flag("help") {
+        println!("{}", usage("hetcdc lp", "§V general-K achievability LP", &specs));
+        return 0;
+    }
+    let m = match args.get_u64_list("storage") {
+        Ok(m) => m,
+        Err(e) => return fail(e),
+    };
+    let n = match args.get_u64("n") {
+        Ok(n) => n,
+        Err(e) => return fail(e),
+    };
+    let cap = args.get_usize("cap").unwrap_or(4096);
+    let p = match ParamsK::new(m.clone(), n) {
+        Ok(p) => p,
+        Err(e) => return fail(e),
+    };
+    let sol = match lp_general::solve_general(&p, cap) {
+        Ok(s) => s,
+        Err(e) => return fail(e),
+    };
+    let k = p.k();
+    println!("K={k} storage={m:?} N={n}");
+    println!(
+        "LP: {} vars, {} constraints, {} pivots",
+        sol.n_vars, sol.n_constraints, sol.pivots
+    );
+    for (j, d) in &sol.dropped {
+        println!("  note: subsystem j={j} dropped {d} collections (cap {cap})");
+    }
+    println!("predicted load  {:.3}", sol.load);
+    println!("uncoded load    {}", (k as u64 * n) - p.total());
+    println!("nonzero S_T:");
+    for mask in 1u32..(1 << k) {
+        let v = sol.s_values[mask as usize];
+        if v > 1e-9 {
+            let nodes: Vec<String> = (0..k)
+                .filter(|i| mask & (1 << i) != 0)
+                .map(|i| (i + 1).to_string())
+                .collect();
+            println!("  S{{{}}} = {v:.3}", nodes.join(","));
+        }
+    }
+    0
+}
+
+fn cmd_run(argv: &[String]) -> i32 {
+    let specs: Vec<ArgSpec> = vec![
+        ArgSpec { name: "workload", help: "wordcount | terasort", takes_value: true, default: Some("terasort") },
+        ArgSpec { name: "n", help: "number of files N", takes_value: true, default: Some("12") },
+        ArgSpec { name: "storage", help: "per-node storage (ignored with --config)", takes_value: true, default: Some("6,7,7") },
+        ArgSpec { name: "config", help: "cluster JSON config path", takes_value: true, default: None },
+        ArgSpec { name: "mode", help: "coded | uncoded | both", takes_value: true, default: Some("both") },
+        ArgSpec { name: "backend", help: "native | xla", takes_value: true, default: Some("native") },
+        ArgSpec { name: "placement", help: "optimal | lp | homogeneous", takes_value: true, default: Some("optimal") },
+        ArgSpec { name: "artifacts", help: "artifact dir for --backend xla", takes_value: true, default: None },
+        ArgSpec { name: "json", help: "emit machine-readable JSON reports", takes_value: false, default: None },
+        ArgSpec { name: "help", help: "show usage", takes_value: false, default: None },
+    ];
+    let args = match Args::parse(argv, &specs) {
+        Ok(a) => a,
+        Err(e) => return fail(e),
+    };
+    if args.flag("help") {
+        println!("{}", usage("hetcdc run", "Execute a full MapReduce job", &specs));
+        return 0;
+    }
+    let json_out = args.flag("json");
+    let n = match args.get_u64("n") {
+        Ok(n) => n,
+        Err(e) => return fail(e),
+    };
+    let cluster = if let Some(path) = args.get("config") {
+        match std::fs::read_to_string(path)
+            .map_err(|e| e.to_string())
+            .and_then(|t| ClusterSpec::from_json_str(&t))
+        {
+            Ok(c) => c,
+            Err(e) => return fail(format!("config {path}: {e}")),
+        }
+    } else {
+        let m = match args.get_u64_list("storage") {
+            Ok(m) => m,
+            Err(e) => return fail(e),
+        };
+        let mut c = ClusterSpec::homogeneous(m.len(), 1, 1000.0);
+        for (node, &mk) in c.nodes.iter_mut().zip(&m) {
+            node.storage = mk;
+        }
+        c
+    };
+    let job = match args.get("workload") {
+        Some("wordcount") => JobSpec::wordcount(n),
+        Some("terasort") => JobSpec::terasort(n),
+        other => return fail(format!("unknown workload {other:?}")),
+    };
+    let strategy = match args.get("placement") {
+        Some("optimal") => {
+            if cluster.k() == 3 {
+                PlacementStrategy::OptimalK3
+            } else {
+                PlacementStrategy::LpGeneral
+            }
+        }
+        Some("lp") => PlacementStrategy::LpGeneral,
+        Some("homogeneous") => PlacementStrategy::Homogeneous,
+        Some("oblivious") => PlacementStrategy::Oblivious,
+        other => return fail(format!("unknown placement {other:?}")),
+    };
+    let modes: Vec<ShuffleMode> = match args.get("mode") {
+        Some("coded") => vec![ShuffleMode::Coded],
+        Some("uncoded") => vec![ShuffleMode::Uncoded],
+        Some("both") => vec![ShuffleMode::Coded, ShuffleMode::Uncoded],
+        other => return fail(format!("unknown mode {other:?}")),
+    };
+
+    let mut rt_holder: Option<Runtime> = None;
+    if args.get("backend") == Some("xla") {
+        let dir = args
+            .get("artifacts")
+            .map(std::path::PathBuf::from)
+            .unwrap_or_else(Runtime::default_dir);
+        match Runtime::load(&dir) {
+            Ok(rt) => rt_holder = Some(rt),
+            Err(e) => return fail(e),
+        }
+    }
+
+    for mode in modes {
+        let report = {
+            let result = match rt_holder.as_mut() {
+                Some(rt) => {
+                    let mut be = XlaBackend::new(rt);
+                    Engine::new(&cluster, &job, &mut be).run(&strategy, mode)
+                }
+                None => {
+                    let mut be = NativeBackend;
+                    Engine::new(&cluster, &job, &mut be).run(&strategy, mode)
+                }
+            };
+            match result {
+                Ok(r) => r,
+                Err(e) => return fail(e),
+            }
+        };
+        if json_out {
+            println!("{}", report.to_json());
+            if !report.verified {
+                return fail("output verification FAILED");
+            }
+            continue;
+        }
+        println!("--- {:?} ({} backend, {} placement)", mode, report.backend, report.placement);
+        println!(
+            "  load {} IV-equations | payload {} B | wire {} B | {} msgs",
+            report.load_equations, report.payload_bytes, report.wire_bytes, report.messages
+        );
+        println!(
+            "  map {:.4}s  shuffle {:.4}s  ({:.0}% of job)  verified={}",
+            report.map_time_s,
+            report.shuffle_time_s,
+            100.0 * report.shuffle_fraction(),
+            report.verified
+        );
+        if !report.verified {
+            return fail("output verification FAILED");
+        }
+    }
+    if cluster.k() == 3 {
+        if let Ok(p) = cluster.params3(n) {
+            println!(
+                "theory: L*={} uncoded={} saving={:.1}%",
+                load::lstar(&p),
+                load::uncoded(&p),
+                100.0 * load::saving(&p) / load::uncoded(&p).max(1e-12)
+            );
+        }
+    }
+    0
+}
+
+fn cmd_sweep(argv: &[String]) -> i32 {
+    let specs: Vec<ArgSpec> = vec![
+        ArgSpec { name: "n", help: "number of files N", takes_value: true, default: Some("12") },
+        ArgSpec { name: "step", help: "storage grid step", takes_value: true, default: Some("2") },
+        ArgSpec { name: "help", help: "show usage", takes_value: false, default: None },
+    ];
+    let args = match Args::parse(argv, &specs) {
+        Ok(a) => a,
+        Err(e) => return fail(e),
+    };
+    if args.flag("help") {
+        println!("{}", usage("hetcdc sweep", "L* over a storage grid", &specs));
+        return 0;
+    }
+    let n = args.get_u64("n").unwrap_or(12);
+    let step = args.get_u64("step").unwrap_or(2).max(1);
+    println!("| M1 | M2 | M3 | regime | L* | uncoded | saving % |");
+    println!("|----|----|----|--------|-----|---------|----------|");
+    let mut m1 = 1;
+    while m1 <= n {
+        let mut m2 = m1;
+        while m2 <= n {
+            let mut m3 = m2;
+            while m3 <= n {
+                if let Ok(p) = Params3::new(m1, m2, m3, n) {
+                    println!(
+                        "| {m1} | {m2} | {m3} | {} | {} | {} | {:.1} |",
+                        load::classify(&p),
+                        load::lstar(&p),
+                        load::uncoded(&p),
+                        100.0 * load::saving(&p) / load::uncoded(&p).max(1e-12)
+                    );
+                }
+                m3 += step;
+            }
+            m2 += step;
+        }
+        m1 += step;
+    }
+    0
+}
+
+/// Production-style doctor: verify the deployed binary's theory, coding
+/// and LP layers agree on an exhaustive grid before trusting it with a
+/// cluster. (The same invariants the test suite property-checks, exposed
+/// operationally.)
+fn cmd_verify(argv: &[String]) -> i32 {
+    let specs: Vec<ArgSpec> = vec![
+        ArgSpec { name: "n", help: "grid file count (exhaustive sweep over storage)", takes_value: true, default: Some("10") },
+        ArgSpec { name: "lp", help: "also check LP == Theorem 1 (slower)", takes_value: false, default: None },
+        ArgSpec { name: "help", help: "show usage", takes_value: false, default: None },
+    ];
+    let args = match Args::parse(argv, &specs) {
+        Ok(a) => a,
+        Err(e) => return fail(e),
+    };
+    if args.flag("help") {
+        println!("{}", usage("hetcdc verify", "Self-check: theory/coding/LP consistency", &specs));
+        return 0;
+    }
+    let n = args.get_u64("n").unwrap_or(10);
+    let mut points = 0u64;
+    for m1 in 1..=n {
+        for m2 in m1..=n {
+            for m3 in m2..=n {
+                let Ok(p) = Params3::new(m1, m2, m3, n) else { continue };
+                let lstar2 = load::lstar_half(&p);
+                let alloc = k3::optimal_allocation(&p);
+                if let Err(e) = alloc.validate(&[m1, m2, m3], n) {
+                    return fail(format!("{p}: invalid placement: {e}"));
+                }
+                let plan = hetcdc::coding::plan::plan_k3(&alloc);
+                if plan.load_units() as u64 != lstar2 {
+                    return fail(format!(
+                        "{p}: plan load {} != L*half {lstar2}",
+                        plan.load_units()
+                    ));
+                }
+                if converse::bounds_half(&p).max_half() != lstar2 {
+                    return fail(format!("{p}: converse != L*"));
+                }
+                let report = hetcdc::coding::decoder::verify(&alloc, &plan);
+                if !report.is_complete() {
+                    return fail(format!("{p}: plan does not decode"));
+                }
+                if args.flag("lp") {
+                    let pk = ParamsK::new(vec![m1, m2, m3], n).unwrap();
+                    match lp_general::solve_general(&pk, 4096) {
+                        Ok(sol) if (sol.load - load::lstar(&p)).abs() < 1e-6 => {}
+                        Ok(sol) => {
+                            return fail(format!("{p}: LP {} != L* {}", sol.load, load::lstar(&p)))
+                        }
+                        Err(e) => return fail(format!("{p}: LP failed: {e}")),
+                    }
+                }
+                points += 1;
+            }
+        }
+    }
+    println!(
+        "verify OK: {points} parameter points (N={n}); L* == achievability == converse, all plans decode{}",
+        if args.flag("lp") { ", LP == Theorem 1" } else { "" }
+    );
+    0
+}
+
+fn cmd_info(argv: &[String]) -> i32 {
+    let specs: Vec<ArgSpec> = vec![
+        ArgSpec { name: "artifacts", help: "artifact directory", takes_value: true, default: None },
+        ArgSpec { name: "help", help: "show usage", takes_value: false, default: None },
+    ];
+    let args = match Args::parse(argv, &specs) {
+        Ok(a) => a,
+        Err(e) => return fail(e),
+    };
+    if args.flag("help") {
+        println!("{}", usage("hetcdc info", "Artifact manifest summary", &specs));
+        return 0;
+    }
+    let dir = args
+        .get("artifacts")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(Runtime::default_dir);
+    match Runtime::load(&dir) {
+        Ok(rt) => {
+            let m = &rt.manifest;
+            println!("artifacts at {}", dir.display());
+            println!(
+                "config: vocab={} q={} t={} map_batch={} keys_per_file={}",
+                m.vocab, m.q, m.t, m.map_batch, m.keys_per_file
+            );
+            let mut names: Vec<&String> = m.artifacts.keys().collect();
+            names.sort();
+            for name in names {
+                let (file, shapes) = &m.artifacts[name];
+                println!("  {name}: {file} inputs={shapes:?}");
+            }
+            0
+        }
+        Err(e) => fail(e),
+    }
+}

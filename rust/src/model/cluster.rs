@@ -1,0 +1,221 @@
+//! Cluster specification: per-node storage, bandwidth, and compute rate.
+//!
+//! JSON round-trip via the built-in [`crate::util::json`] substrate, so
+//! deployments describe heterogeneous clusters in config files:
+//!
+//! ```json
+//! {"nodes": [
+//!   {"name": "m4.large",  "storage": 6, "uplink_mbps": 450, "map_files_per_s": 120},
+//!   {"name": "m4.xlarge", "storage": 7, "uplink_mbps": 750, "map_files_per_s": 240}
+//! ], "latency_ms": 0.5}
+//! ```
+
+use crate::net::BroadcastNet;
+use crate::theory::params::{Params3, ParamsK};
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct NodeSpec {
+    pub name: String,
+    /// Storage capacity in files (the paper's `M_k`).
+    pub storage: u64,
+    /// Uplink bandwidth, Mbit/s.
+    pub uplink_mbps: f64,
+    /// Map throughput, files/second (heterogeneous compute).
+    pub map_files_per_s: f64,
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct ClusterSpec {
+    pub nodes: Vec<NodeSpec>,
+    /// Per-message broadcast latency, milliseconds.
+    pub latency_ms: f64,
+}
+
+impl ClusterSpec {
+    pub fn k(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn storage(&self) -> Vec<u64> {
+        self.nodes.iter().map(|n| n.storage).collect()
+    }
+
+    pub fn params3(&self, n_files: u64) -> Result<Params3, String> {
+        if self.k() != 3 {
+            return Err(format!("params3 needs K=3, cluster has {}", self.k()));
+        }
+        Params3::new(
+            self.nodes[0].storage,
+            self.nodes[1].storage,
+            self.nodes[2].storage,
+            n_files,
+        )
+    }
+
+    pub fn params_k(&self, n_files: u64) -> Result<ParamsK, String> {
+        ParamsK::new(self.storage(), n_files)
+    }
+
+    pub fn network(&self) -> BroadcastNet {
+        BroadcastNet::new(
+            self.nodes.iter().map(|n| n.uplink_mbps * 1e6).collect(),
+            self.latency_ms / 1e3,
+        )
+    }
+
+    /// A 3-node heterogeneous cluster shaped like mixed EC2 instances,
+    /// sized for the paper's Fig 3 example (storage 6, 7, 7).
+    pub fn ec2_like_3node(n_files_hint: u64) -> Self {
+        // Scale storage to the workload: ratios from the (6,7,7,12) example.
+        let scale = (n_files_hint as f64 / 12.0).max(1.0);
+        let st = |x: f64| (x * scale).round() as u64;
+        ClusterSpec {
+            nodes: vec![
+                NodeSpec {
+                    name: "m4.large".into(),
+                    storage: st(6.0),
+                    uplink_mbps: 450.0,
+                    map_files_per_s: 120.0,
+                },
+                NodeSpec {
+                    name: "m4.xlarge".into(),
+                    storage: st(7.0),
+                    uplink_mbps: 750.0,
+                    map_files_per_s: 240.0,
+                },
+                NodeSpec {
+                    name: "m4.2xlarge".into(),
+                    storage: st(7.0),
+                    uplink_mbps: 1000.0,
+                    map_files_per_s: 480.0,
+                },
+            ],
+            latency_ms: 0.5,
+        }
+    }
+
+    pub fn homogeneous(k: usize, storage: u64, uplink_mbps: f64) -> Self {
+        ClusterSpec {
+            nodes: (0..k)
+                .map(|i| NodeSpec {
+                    name: format!("node{i}"),
+                    storage,
+                    uplink_mbps,
+                    map_files_per_s: 200.0,
+                })
+                .collect(),
+            latency_ms: 0.5,
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let nodes: Vec<Json> = self
+            .nodes
+            .iter()
+            .map(|n| {
+                let mut m = BTreeMap::new();
+                m.insert("name".into(), Json::Str(n.name.clone()));
+                m.insert("storage".into(), Json::Num(n.storage as f64));
+                m.insert("uplink_mbps".into(), Json::Num(n.uplink_mbps));
+                m.insert("map_files_per_s".into(), Json::Num(n.map_files_per_s));
+                Json::Obj(m)
+            })
+            .collect();
+        let mut m = BTreeMap::new();
+        m.insert("nodes".into(), Json::Arr(nodes));
+        m.insert("latency_ms".into(), Json::Num(self.latency_ms));
+        Json::Obj(m)
+    }
+
+    pub fn from_json(j: &Json) -> Result<Self, String> {
+        let nodes = j
+            .get("nodes")
+            .and_then(|n| n.as_arr())
+            .ok_or("missing 'nodes' array")?;
+        let parsed: Result<Vec<NodeSpec>, String> = nodes
+            .iter()
+            .enumerate()
+            .map(|(i, n)| {
+                Ok(NodeSpec {
+                    name: n
+                        .get("name")
+                        .and_then(|v| v.as_str())
+                        .map(String::from)
+                        .unwrap_or_else(|| format!("node{i}")),
+                    storage: n
+                        .get("storage")
+                        .and_then(|v| v.as_usize())
+                        .ok_or(format!("node {i}: missing 'storage'"))?
+                        as u64,
+                    uplink_mbps: n
+                        .get("uplink_mbps")
+                        .and_then(|v| v.as_f64())
+                        .unwrap_or(1000.0),
+                    map_files_per_s: n
+                        .get("map_files_per_s")
+                        .and_then(|v| v.as_f64())
+                        .unwrap_or(200.0),
+                })
+            })
+            .collect();
+        Ok(ClusterSpec {
+            nodes: parsed?,
+            latency_ms: j.get("latency_ms").and_then(|v| v.as_f64()).unwrap_or(0.5),
+        })
+    }
+
+    pub fn from_json_str(text: &str) -> Result<Self, String> {
+        let j = Json::parse(text).map_err(|e| e.to_string())?;
+        Self::from_json(&j)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn json_roundtrip() {
+        let c = ClusterSpec::ec2_like_3node(12);
+        let text = c.to_json().to_string_pretty();
+        let back = ClusterSpec::from_json_str(&text).unwrap();
+        assert_eq!(c, back);
+    }
+
+    #[test]
+    fn parses_minimal_config() {
+        let c = ClusterSpec::from_json_str(
+            r#"{"nodes": [{"storage": 6}, {"storage": 7}, {"storage": 7}]}"#,
+        )
+        .unwrap();
+        assert_eq!(c.storage(), vec![6, 7, 7]);
+        assert_eq!(c.latency_ms, 0.5);
+        assert_eq!(c.nodes[1].name, "node1");
+    }
+
+    #[test]
+    fn rejects_bad_config() {
+        assert!(ClusterSpec::from_json_str("{}").is_err());
+        assert!(ClusterSpec::from_json_str(r#"{"nodes": [{"name": "x"}]}"#).is_err());
+        assert!(ClusterSpec::from_json_str("not json").is_err());
+    }
+
+    #[test]
+    fn params_and_network_construction() {
+        let c = ClusterSpec::ec2_like_3node(12);
+        let p = c.params3(12).unwrap();
+        assert_eq!(p.m, [6, 7, 7]);
+        assert!(c.params3(100).is_err()); // storage cannot cover N
+        let net = c.network();
+        assert_eq!(net.uplink_bps.len(), 3);
+        assert!(c.params_k(12).is_ok());
+    }
+
+    #[test]
+    fn ec2_preset_scales_storage() {
+        let c = ClusterSpec::ec2_like_3node(120);
+        assert_eq!(c.storage(), vec![60, 70, 70]);
+    }
+}

@@ -1,0 +1,116 @@
+//! Job specification: the MapReduce computation to run (§II model).
+
+/// Built-in workloads (DESIGN.md §4 explains the substitutions for the
+/// paper's TeraSort / production traces).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum WorkloadKind {
+    /// Zipf token corpus; Map = feature projection (`W @ counts`, f32),
+    /// Reduce = sum. Exercises the `map_project` Pallas/XLA artifact.
+    WordCount,
+    /// Uniform u32 keys; Map = per-reducer range histogram (i32),
+    /// Reduce = merge counts. Exercises `map_histogram`.
+    TeraSort,
+}
+
+/// How the Shuffle phase is coded.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ShuffleMode {
+    /// Paper's scheme: optimal K=3 plan (Lemma 1) or greedy pairing K>3.
+    Coded,
+    /// Baseline: every needed IV broadcast plainly.
+    Uncoded,
+}
+
+#[derive(Clone, Debug)]
+pub struct JobSpec {
+    /// Number of input files N.
+    pub n_files: u64,
+    /// IV length T (f32/i32 words per intermediate value).
+    pub t: usize,
+    /// Workload.
+    pub workload: WorkloadKind,
+    /// Deterministic data seed.
+    pub seed: u64,
+    /// WordCount vocabulary size V (ignored by TeraSort).
+    pub vocab: usize,
+    /// TeraSort keys per file D (ignored by WordCount).
+    pub keys_per_file: usize,
+}
+
+impl JobSpec {
+    pub fn wordcount(n_files: u64) -> Self {
+        JobSpec {
+            n_files,
+            t: 32,
+            workload: WorkloadKind::WordCount,
+            seed: 0xC0DE,
+            vocab: 256,
+            keys_per_file: 0,
+        }
+    }
+
+    pub fn terasort(n_files: u64) -> Self {
+        JobSpec {
+            n_files,
+            t: 32,
+            workload: WorkloadKind::TeraSort,
+            seed: 0x5027, // "SORT"
+            vocab: 0,
+            keys_per_file: 512,
+        }
+    }
+
+    /// IV payload size in bytes (both workloads use 4-byte elements).
+    pub fn iv_bytes(&self) -> usize {
+        self.t * 4
+    }
+
+    pub fn validate(&self, k: usize) -> Result<(), String> {
+        if self.n_files == 0 {
+            return Err("n_files must be positive".into());
+        }
+        if self.t == 0 {
+            return Err("t must be positive".into());
+        }
+        if k < 2 {
+            return Err("need at least 2 nodes".into());
+        }
+        match self.workload {
+            WorkloadKind::WordCount if self.vocab == 0 => {
+                Err("WordCount needs vocab > 0".into())
+            }
+            WorkloadKind::TeraSort if self.keys_per_file == 0 => {
+                Err("TeraSort needs keys_per_file > 0".into())
+            }
+            _ => Ok(()),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constructors_are_valid() {
+        assert!(JobSpec::wordcount(12).validate(3).is_ok());
+        assert!(JobSpec::terasort(12).validate(3).is_ok());
+    }
+
+    #[test]
+    fn validation_catches_errors() {
+        let mut j = JobSpec::wordcount(12);
+        j.vocab = 0;
+        assert!(j.validate(3).is_err());
+        assert!(JobSpec::wordcount(0).validate(3).is_err());
+        assert!(JobSpec::wordcount(12).validate(1).is_err());
+        let mut ts = JobSpec::terasort(4);
+        ts.keys_per_file = 0;
+        assert!(ts.validate(3).is_err());
+    }
+
+    #[test]
+    fn iv_bytes() {
+        assert_eq!(JobSpec::wordcount(1).iv_bytes(), 128);
+    }
+}

@@ -1,0 +1,7 @@
+//! Job and cluster specifications (the framework's config surface).
+
+pub mod cluster;
+pub mod job;
+
+pub use cluster::{ClusterSpec, NodeSpec};
+pub use job::{JobSpec, ShuffleMode, WorkloadKind};

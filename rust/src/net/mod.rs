@@ -1,0 +1,5 @@
+//! Network substrate: simulated heterogeneous broadcast medium.
+
+pub mod sim;
+
+pub use sim::{BroadcastNet, NetReport};

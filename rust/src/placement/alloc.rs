@@ -1,0 +1,250 @@
+//! File allocations and the `S_T` subset algebra of §III.
+//!
+//! An [`Allocation`] maps every *subfile* to the set of nodes storing it.
+//! Subfiles are the paper's files after subpacketization by `sp` (DESIGN.md
+//! §8): with `sp = 2` every original file is split in half so that all of
+//! Theorem 1's half-integral expressions become integral. Holder sets are
+//! node bitmasks (`K <= 32`).
+
+pub type NodeMask = u32;
+
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Allocation {
+    /// Number of nodes K.
+    pub k: usize,
+    /// Subpacketization factor: subfiles per original file.
+    pub sp: u32,
+    /// `holders[f]` = bitmask of nodes storing subfile `f`. Length `sp·N`.
+    pub holders: Vec<NodeMask>,
+}
+
+impl Allocation {
+    pub fn new(k: usize, sp: u32, holders: Vec<NodeMask>) -> Self {
+        assert!(k >= 1 && k <= 32);
+        Self { k, sp, holders }
+    }
+
+    /// Number of subfiles (`sp · N`).
+    pub fn n_sub(&self) -> usize {
+        self.holders.len()
+    }
+
+    /// Number of original files.
+    pub fn n_files(&self) -> usize {
+        self.n_sub() / self.sp as usize
+    }
+
+    pub fn full_mask(&self) -> NodeMask {
+        if self.k == 32 {
+            u32::MAX
+        } else {
+            (1u32 << self.k) - 1
+        }
+    }
+
+    /// Subfiles stored at node `node`.
+    pub fn node_count(&self, node: usize) -> u64 {
+        let bit = 1u32 << node;
+        self.holders.iter().filter(|&&h| h & bit != 0).count() as u64
+    }
+
+    /// `S_T` cardinalities: `sizes[mask]` = #subfiles whose holder set is
+    /// exactly `mask`. Index 0 (unstored) must be empty for validity.
+    pub fn subset_sizes(&self) -> Vec<u64> {
+        let mut sizes = vec![0u64; 1 << self.k];
+        for &h in &self.holders {
+            sizes[h as usize] += 1;
+        }
+        sizes
+    }
+
+    /// Subfiles whose holder set is exactly `mask`, in index order.
+    pub fn subfiles_with_mask(&self, mask: NodeMask) -> Vec<usize> {
+        self.holders
+            .iter()
+            .enumerate()
+            .filter(|(_, &h)| h == mask)
+            .map(|(f, _)| f)
+            .collect()
+    }
+
+    /// Validate the §II model constraints against per-node capacities
+    /// `m` (in original files) and file count `n`.
+    pub fn validate(&self, m: &[u64], n: u64) -> Result<(), String> {
+        if m.len() != self.k {
+            return Err(format!("expected {} capacities, got {}", self.k, m.len()));
+        }
+        if self.n_sub() as u64 != self.sp as u64 * n {
+            return Err(format!(
+                "expected {} subfiles, got {}",
+                self.sp as u64 * n,
+                self.n_sub()
+            ));
+        }
+        for (f, &h) in self.holders.iter().enumerate() {
+            if h == 0 {
+                return Err(format!("subfile {f} stored nowhere"));
+            }
+            if h & !self.full_mask() != 0 {
+                return Err(format!("subfile {f} has out-of-range holder bits"));
+            }
+        }
+        for (node, &cap) in m.iter().enumerate() {
+            let used = self.node_count(node);
+            let cap_sub = cap * self.sp as u64;
+            if used != cap_sub {
+                return Err(format!(
+                    "node {node} stores {used} subfiles, capacity is {cap_sub}"
+                ));
+            }
+        }
+        Ok(())
+    }
+
+    /// Like [`Self::validate`] but treats capacities as upper bounds
+    /// (`<=`), for schemes that deliberately waste storage (e.g. the
+    /// storage-oblivious baseline that provisions to the smallest node).
+    pub fn validate_le(&self, m: &[u64], n: u64) -> Result<(), String> {
+        if m.len() != self.k {
+            return Err(format!("expected {} capacities, got {}", self.k, m.len()));
+        }
+        if self.n_sub() as u64 != self.sp as u64 * n {
+            return Err(format!(
+                "expected {} subfiles, got {}",
+                self.sp as u64 * n,
+                self.n_sub()
+            ));
+        }
+        for (f, &h) in self.holders.iter().enumerate() {
+            if h == 0 || h & !self.full_mask() != 0 {
+                return Err(format!("subfile {f} has invalid holder set {h:b}"));
+            }
+        }
+        for (node, &cap) in m.iter().enumerate() {
+            let used = self.node_count(node);
+            if used > cap * self.sp as u64 {
+                return Err(format!(
+                    "node {node} stores {used} subfiles, capacity is {}",
+                    cap * self.sp as u64
+                ));
+            }
+        }
+        Ok(())
+    }
+
+    /// Total uncoded shuffle load in subfile units: every subfile stored at
+    /// `r` nodes needs `K − r` deliveries (Q = K function groups).
+    pub fn uncoded_units(&self) -> u64 {
+        self.holders
+            .iter()
+            .map(|h| (self.k as u32 - h.count_ones()) as u64)
+            .sum()
+    }
+
+    /// Load expressed in IV-equation units (units / sp).
+    pub fn units_to_equations(&self, units: u64) -> f64 {
+        units as f64 / self.sp as f64
+    }
+}
+
+/// Builder: start from "nothing stored", assign ranges to node sets.
+pub struct AllocationBuilder {
+    k: usize,
+    sp: u32,
+    holders: Vec<NodeMask>,
+}
+
+impl AllocationBuilder {
+    pub fn new(k: usize, sp: u32, n_sub: usize) -> Self {
+        Self {
+            k,
+            sp,
+            holders: vec![0; n_sub],
+        }
+    }
+
+    /// Add nodes in `mask` as holders of subfiles `[lo, hi)`.
+    pub fn assign(&mut self, lo: usize, hi: usize, mask: NodeMask) -> &mut Self {
+        assert!(hi <= self.holders.len(), "range [{lo},{hi}) out of bounds");
+        for f in lo..hi {
+            self.holders[f] |= mask;
+        }
+        self
+    }
+
+    pub fn build(self) -> Allocation {
+        Allocation::new(self.k, self.sp, self.holders)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn demo() -> Allocation {
+        // K=3, sp=1, N=4: file0 at {0}, file1 at {0,1}, file2 at {1,2}, file3 at {0,1,2}.
+        Allocation::new(3, 1, vec![0b001, 0b011, 0b110, 0b111])
+    }
+
+    #[test]
+    fn subset_sizes_count_exact_masks() {
+        let a = demo();
+        let s = a.subset_sizes();
+        assert_eq!(s[0b001], 1);
+        assert_eq!(s[0b011], 1);
+        assert_eq!(s[0b110], 1);
+        assert_eq!(s[0b111], 1);
+        assert_eq!(s[0b010], 0);
+        assert_eq!(s.iter().sum::<u64>(), 4);
+    }
+
+    #[test]
+    fn node_counts() {
+        let a = demo();
+        assert_eq!(a.node_count(0), 3);
+        assert_eq!(a.node_count(1), 3);
+        assert_eq!(a.node_count(2), 2);
+    }
+
+    #[test]
+    fn validate_happy_path() {
+        let a = demo();
+        assert!(a.validate(&[3, 3, 2], 4).is_ok());
+    }
+
+    #[test]
+    fn validate_rejects_uncovered_file() {
+        let a = Allocation::new(3, 1, vec![0b001, 0]);
+        assert!(a.validate(&[1, 0, 0], 2).unwrap_err().contains("nowhere"));
+    }
+
+    #[test]
+    fn validate_rejects_wrong_capacity() {
+        let a = demo();
+        assert!(a.validate(&[2, 3, 2], 4).is_err());
+        assert!(a.validate(&[3, 3, 2], 5).is_err());
+    }
+
+    #[test]
+    fn uncoded_units_counts_deliveries() {
+        let a = demo();
+        // file0: 2 deliveries, file1: 1, file2: 1, file3: 0.
+        assert_eq!(a.uncoded_units(), 4);
+    }
+
+    #[test]
+    fn builder_assigns_ranges() {
+        let mut b = AllocationBuilder::new(3, 2, 6);
+        b.assign(0, 4, 0b001).assign(2, 6, 0b010);
+        let a = b.build();
+        assert_eq!(a.holders, vec![0b001, 0b001, 0b011, 0b011, 0b010, 0b010]);
+        assert_eq!(a.n_files(), 3);
+    }
+
+    #[test]
+    fn subfiles_with_mask_in_order() {
+        let a = demo();
+        assert_eq!(a.subfiles_with_mask(0b011), vec![1]);
+        assert_eq!(a.subfiles_with_mask(0b100), Vec::<usize>::new());
+    }
+}

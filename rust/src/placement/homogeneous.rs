@@ -1,0 +1,130 @@
+//! Homogeneous CDC placement of Li–Maddah-Ali–Avestimehr [2]: symmetric
+//! r-redundant placement over all `C(K, r)` subsets. This is the baseline
+//! the paper's Remark 2 reduces to, and the structure its §V algorithm
+//! reuses inside each j-subsystem.
+
+use super::alloc::{Allocation, AllocationBuilder};
+
+/// Enumerate all size-`r` subsets of `{0..k}` as bitmasks, in
+/// lexicographic mask order.
+pub fn subsets_of_size(k: usize, r: usize) -> Vec<u32> {
+    let mut out = Vec::new();
+    for mask in 0u32..(1 << k) {
+        if mask.count_ones() as usize == r {
+            out.push(mask);
+        }
+    }
+    out
+}
+
+/// Binomial coefficient (small arguments).
+pub fn binom(n: u64, k: u64) -> u64 {
+    if k > n {
+        return 0;
+    }
+    let k = k.min(n - k);
+    let mut num = 1u64;
+    for i in 0..k {
+        num = num * (n - i) / (i + 1);
+    }
+    num
+}
+
+/// Symmetric placement: `n` files spread evenly over all `C(k, r)`
+/// r-subsets. Subpacketizes by `C(k, r)` when `n` is not divisible, so the
+/// result is always exact: every subset holds `n_sub / C(k,r)` subfiles.
+pub fn symmetric_allocation(k: usize, r: usize, n: u64) -> Allocation {
+    assert!(r >= 1 && r <= k);
+    let masks = subsets_of_size(k, r);
+    let c = masks.len() as u64;
+    // Subpacketization: smallest sp with c | sp*n.
+    let g = gcd(n, c);
+    let sp = (c / g) as u32;
+    let n_sub = (sp as u64 * n) as usize;
+    let per = n_sub / c as usize;
+    let mut b = AllocationBuilder::new(k, sp, n_sub);
+    for (i, &mask) in masks.iter().enumerate() {
+        b.assign(i * per, (i + 1) * per, mask);
+    }
+    b.build()
+}
+
+fn gcd(mut a: u64, mut b: u64) -> u64 {
+    while b != 0 {
+        let t = a % b;
+        a = b;
+        b = t;
+    }
+    a
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop;
+
+    #[test]
+    fn binom_values() {
+        assert_eq!(binom(3, 2), 3);
+        assert_eq!(binom(4, 2), 6);
+        assert_eq!(binom(6, 3), 20);
+        assert_eq!(binom(5, 0), 1);
+        assert_eq!(binom(3, 5), 0);
+    }
+
+    #[test]
+    fn subsets_enumeration() {
+        let s = subsets_of_size(4, 2);
+        assert_eq!(s.len(), 6);
+        assert!(s.iter().all(|m| m.count_ones() == 2 && *m < 16));
+    }
+
+    #[test]
+    fn symmetric_allocation_is_balanced() {
+        // K=3, r=2, N=12: C(3,2)=3 divides 12 -> sp=1, 4 files per pair.
+        let a = symmetric_allocation(3, 2, 12);
+        assert_eq!(a.sp, 1);
+        let sizes = a.subset_sizes();
+        for mask in subsets_of_size(3, 2) {
+            assert_eq!(sizes[mask as usize], 4);
+        }
+        for node in 0..3 {
+            assert_eq!(a.node_count(node), 8); // rN/K = 2*12/3 per node
+        }
+    }
+
+    #[test]
+    fn symmetric_allocation_subpacketizes_when_needed() {
+        // K=4, r=2, N=9: C=6, gcd(9,6)=3 -> sp=2, 18 subfiles, 3 per pair.
+        let a = symmetric_allocation(4, 2, 9);
+        assert_eq!(a.sp, 2);
+        assert_eq!(a.n_sub(), 18);
+        let sizes = a.subset_sizes();
+        for mask in subsets_of_size(4, 2) {
+            assert_eq!(sizes[mask as usize], 3);
+        }
+    }
+
+    #[test]
+    fn prop_symmetric_allocation_valid() {
+        prop::run("symmetric placement valid", 200, |g| {
+            let k = g.usize_in(2..=6);
+            let r = g.usize_in(1..=k);
+            let n = g.u64_in(1..=30);
+            let a = symmetric_allocation(k, r, n);
+            let mk = r as u64 * n * a.sp as u64 / k as u64;
+            // Every node stores the same number of subfiles = r·n_sub/k.
+            for node in 0..k {
+                if a.node_count(node) * k as u64 != r as u64 * a.n_sub() as u64 {
+                    return Err(format!("k={k} r={r} n={n}: unbalanced node {node}"));
+                }
+            }
+            let _ = mk;
+            // All subfiles stored at exactly r nodes.
+            prop::check(
+                a.holders.iter().all(|h| h.count_ones() as usize == r),
+                format!("k={k} r={r} n={n}"),
+            )
+        });
+    }
+}

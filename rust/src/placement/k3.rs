@@ -1,0 +1,226 @@
+//! The paper's optimal K=3 file placements (§III, Figs 5–11).
+//!
+//! Constructions are done in **doubled units** (subpacketization `sp = 2`,
+//! DESIGN.md §8): with `n = 2N`, `mk = 2M_k` every half-integral interval
+//! endpoint in the paper becomes an integer subfile index, for *all*
+//! integer parameters. The returned [`Allocation`] therefore has `2N`
+//! subfiles and its Lemma-1 load in subfile units equals `2·L*` exactly.
+//!
+//! The paper assumes `M1 <= M2 <= M3`; we sort internally and un-permute
+//! the node masks, so callers keep their node order.
+
+use super::alloc::{Allocation, AllocationBuilder};
+use crate::theory::load::{classify, Regime};
+use crate::theory::params::Params3;
+
+/// Construct the load-optimal allocation for `p` (Theorem 1 achievability).
+pub fn optimal_allocation(p: &Params3) -> Allocation {
+    let ([m1, m2, m3], perm) = p.sorted();
+    let (m1, m2, m3) = ((2 * m1) as usize, (2 * m2) as usize, (2 * m3) as usize);
+    let n = (2 * p.n) as usize;
+    let m = m1 + m2 + m3;
+    // Bit for sorted-node i in the original node order.
+    let bit = |i: usize| 1u32 << perm[i];
+    let (b1, b2, b3) = (bit(0), bit(1), bit(2));
+    let mut b = AllocationBuilder::new(3, 2, n);
+
+    match classify(p) {
+        Regime::R1 => {
+            // Fig 5: sequential for nodes 1, 2; node 3 takes the tail plus
+            // a centered straddle of (M−N)/2 on each side of the 1|2 seam.
+            let h = (m - n) / 2;
+            b.assign(0, m1, b1);
+            b.assign(m1, m1 + m2, b2);
+            b.assign(m1 + m2, n, b3);
+            b.assign(m1 - h, m1 + h, b3);
+        }
+        Regime::R4 => {
+            // Fig 6: node 3 takes the tail plus a prefix of length M−N.
+            b.assign(0, m1, b1);
+            b.assign(m1, m1 + m2, b2);
+            b.assign(m1 + m2, n, b3);
+            b.assign(0, m - n, b3);
+        }
+        Regime::R2 => {
+            // Fig 7: node 2 wraps; node 3 = [e, 2e) plus a straddle of f
+            // on each side of M1's right edge, where e = M1+M2−N,
+            // f = (M3 − e)/2.
+            let e = m1 + m2 - n;
+            let f = (m3 - e) / 2;
+            b.assign(0, m1, b1);
+            b.assign(m1, n, b2);
+            b.assign(0, e, b2);
+            b.assign(e, 2 * e, b3);
+            b.assign(m1 - f, m1 + f, b3);
+        }
+        Regime::R3 | Regime::R5 => {
+            // Figs 8/9: node 2 wraps; node 3 = [e, M−N).
+            let e = m1 + m2 - n;
+            b.assign(0, m1, b1);
+            b.assign(m1, n, b2);
+            b.assign(0, e, b2);
+            b.assign(e, m - n, b3);
+        }
+        Regime::R6 | Regime::R7 => {
+            // Figs 10/11: M > 2N; all three wrap, S123 = M − 2N.
+            let e = m1 + m2 - n;
+            b.assign(0, m1, b1);
+            b.assign(m1, n, b2);
+            b.assign(0, e, b2);
+            b.assign(e, n, b3);
+            b.assign(0, m - 2 * n, b3);
+        }
+    }
+    b.build()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::placement::lemma1::{load_units, Sizes3};
+    use crate::prop;
+    use crate::theory::load::{lstar_half, uncoded_half};
+
+    fn p(m1: u64, m2: u64, m3: u64, n: u64) -> Params3 {
+        Params3::new(m1, m2, m3, n).unwrap()
+    }
+
+    /// Sizes in sorted-node space (tests use sorted inputs, so identity).
+    fn sizes(params: &Params3) -> Sizes3 {
+        Sizes3::of(&optimal_allocation(params))
+    }
+
+    #[test]
+    fn r1_subset_sizes_match_eq12() {
+        // (4,5,6,12): doubled h = (M−N)/2 -> subfile units (M−N) = 3·2/2=3.
+        let params = p(4, 5, 6, 12);
+        let s = sizes(&params);
+        let (m1, m2, n, m) = (8, 10, 24, 30);
+        let h = (m - n) / 2;
+        assert_eq!(s.s1, m1 - h);
+        assert_eq!(s.s2, m2 - h);
+        assert_eq!(s.s3, n - m1 - m2);
+        assert_eq!(s.s12, 0);
+        assert_eq!(s.s13, h);
+        assert_eq!(s.s23, h);
+        assert_eq!(s.s123, 0);
+    }
+
+    #[test]
+    fn r4_subset_sizes_match_eq15() {
+        let params = p(2, 3, 12, 12); // R4
+        let s = sizes(&params);
+        let (m1, m2, m3, n) = (4u64, 6, 24, 24);
+        assert_eq!(s.s1, 0);
+        assert_eq!(s.s2, n - m3);
+        assert_eq!(s.s3, n - m1 - m2);
+        assert_eq!(s.s12, 0);
+        assert_eq!(s.s13, m1);
+        assert_eq!(s.s23, m2 + m3 - n);
+    }
+
+    #[test]
+    fn r2_subset_sizes_match_eq18() {
+        let params = p(4, 5, 5, 8); // R2 (sorted so masks match sorted space)
+        let s = sizes(&params);
+        let (m1, m2, m3, n) = (8u64, 10, 10, 16);
+        let e = m1 + m2 - n;
+        let f = (m3 - e) / 2;
+        assert_eq!(s.s1, m1 - 2 * e - f);
+        assert_eq!(s.s2, n - m1 - f);
+        assert_eq!(s.s3, 0);
+        assert_eq!(s.s12, e);
+        assert_eq!(s.s13, e + f);
+        assert_eq!(s.s23, f);
+    }
+
+    #[test]
+    fn r3_r5_subset_sizes_match_eq21() {
+        for params in [p(8, 8, 8, 12), p(5, 8, 11, 12)] {
+            let ([m1, m2, m3], _) = params.sorted();
+            let (m1, m2, m3) = (2 * m1, 2 * m2, 2 * m3);
+            let n = 2 * params.n;
+            let s = sizes(&params);
+            assert_eq!(s.s1, 0, "{params}");
+            assert_eq!(s.s2, 2 * n - (m1 + m2 + m3), "{params}");
+            assert_eq!(s.s3, 0, "{params}");
+            assert_eq!(s.s12, m1 + m2 - n, "{params}");
+            assert_eq!(s.s13, n - m2, "{params}");
+            assert_eq!(s.s23, m2 + m3 - n, "{params}");
+        }
+    }
+
+    #[test]
+    fn r6_r7_subset_sizes_match_eq25() {
+        for params in [p(10, 10, 10, 12), p(5, 11, 11, 12)] {
+            let ([m1, m2, m3], _) = params.sorted();
+            let (m1, m2, m3) = (2 * m1, 2 * m2, 2 * m3);
+            let n = 2 * params.n;
+            let m = m1 + m2 + m3;
+            let s = sizes(&params);
+            assert_eq!(s.s123, m - 2 * n, "{params}");
+            assert_eq!(s.s12, n - m3, "{params}");
+            assert_eq!(s.s13, n - m2, "{params}");
+            assert_eq!(s.s23, n - m1, "{params}");
+            assert_eq!(s.singles(), 0, "{params}");
+        }
+    }
+
+    #[test]
+    fn paper_example_achieves_12() {
+        let params = p(6, 7, 7, 12);
+        let alloc = optimal_allocation(&params);
+        alloc.validate(&[6, 7, 7], 12).unwrap();
+        assert_eq!(load_units(&alloc), lstar_half(&params)); // 24 half-units
+        assert_eq!(alloc.units_to_equations(load_units(&alloc)), 12.0);
+    }
+
+    #[test]
+    fn unsorted_inputs_respect_original_node_capacities() {
+        let params = p(11, 5, 11, 12); // node 1 is NOT the smallest
+        let alloc = optimal_allocation(&params);
+        alloc.validate(&[11, 5, 11], 12).unwrap();
+        assert_eq!(load_units(&alloc), lstar_half(&params));
+    }
+
+    #[test]
+    fn prop_allocation_achieves_lstar_everywhere() {
+        // The central achievability test: for EVERY valid (M1,M2,M3,N) the
+        // constructed placement is (a) a valid allocation and (b) its
+        // Lemma-1 load equals the closed form L* exactly (half-units).
+        prop::run("k3 placement achieves L*", 1500, |g| {
+            let n = g.u64_in(1..=40);
+            let m1 = g.u64_in(1..=n);
+            let m2 = g.u64_in(1..=n);
+            let m3 = g.u64_in(1..=n);
+            let Ok(params) = Params3::new(m1, m2, m3, n) else {
+                return Ok(());
+            };
+            let alloc = optimal_allocation(&params);
+            if let Err(e) = alloc.validate(&[m1, m2, m3], n) {
+                return Err(format!("{params}: invalid allocation: {e}"));
+            }
+            let got = load_units(&alloc);
+            let want = lstar_half(&params);
+            prop::check(got == want, format!("{params}: load {got} != L*half {want}"))
+        });
+    }
+
+    #[test]
+    fn prop_allocation_beats_or_ties_uncoded() {
+        prop::run("coded <= uncoded", 400, |g| {
+            let n = g.u64_in(1..=30);
+            let m1 = g.u64_in(1..=n);
+            let m2 = g.u64_in(1..=n);
+            let m3 = g.u64_in(1..=n);
+            let Ok(params) = Params3::new(m1, m2, m3, n) else {
+                return Ok(());
+            };
+            let alloc = optimal_allocation(&params);
+            prop::check(
+                load_units(&alloc) <= uncoded_half(&params),
+                format!("{params}"),
+            )
+        });
+    }
+}

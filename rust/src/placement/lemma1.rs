@@ -1,0 +1,259 @@
+//! Lemma 1: the achievable load of an arbitrary K=3 allocation and the
+//! XOR-pairing counts that realize it.
+//!
+//! Given subset sizes `S_T`, the load (in subfile units) is
+//!
+//! ```text
+//! L_M = 2(S1 + S2 + S3) + g(S12, S13, S23),
+//! g(x) = max(max_i x_i, ceil((x1+x2+x3)/2))
+//! ```
+//!
+//! (the integral form of the paper's absolute-value expression). The
+//! pairing counts: node 1 (which stores `S12` and `S13`) sends `alpha`
+//! XORs `v_{3,a in S12} ⊕ v_{2,b in S13}`, node 2 sends `beta` over
+//! `S12 × S23`, node 3 sends `gamma` over `S13 × S23`, maximizing
+//! `alpha + beta + gamma` under the consumption constraints
+//! `alpha+beta <= S12`, `alpha+gamma <= S13`, `beta+gamma <= S23`.
+
+use super::alloc::Allocation;
+
+/// Masks of the three pair-subsets, in (S12, S13, S23) order.
+pub const PAIR_MASKS: [u32; 3] = [0b011, 0b101, 0b110];
+
+/// Integral `g` function (subfile units).
+pub fn g_int(x12: u64, x13: u64, x23: u64) -> u64 {
+    let sum = x12 + x13 + x23;
+    let max = x12.max(x13).max(x23);
+    max.max(sum.div_ceil(2))
+}
+
+/// Optimal XOR-pairing counts `(alpha, beta, gamma)` for pair-set sizes.
+/// `alpha` pairs (S12, S13) at node 1, `beta` (S12, S23) at node 2,
+/// `gamma` (S13, S23) at node 3. Total pairings = `sum − g_int`.
+pub fn pairing_counts(x12: u64, x13: u64, x23: u64) -> (u64, u64, u64) {
+    // Work on sorted values then un-sort. Pair variables are indexed by
+    // the set they DON'T touch: p[0] pairs (x1,x2), etc.
+    let mut idx = [0usize, 1, 2];
+    let xs = [x12, x13, x23];
+    idx.sort_by_key(|&i| xs[i]);
+    let (a, b, c) = (xs[idx[0]], xs[idx[1]], xs[idx[2]]); // a <= b <= c
+    let mut p = [0u64; 3]; // p[0]: pairs(a,b), p[1]: pairs(a,c), p[2]: pairs(b,c)
+    if a + b <= c {
+        p[1] = a;
+        p[2] = b;
+    } else {
+        let d = a + b - c;
+        p[0] = d / 2;
+        let a_rem = a - p[0];
+        p[1] = a_rem;
+        p[2] = c - a_rem;
+    }
+    // Map back: pairing that joins sorted-sets (i, j) is the one "opposite"
+    // the third sorted set; express as counts per original pair-of-sets.
+    // pair (x12, x13) = alpha, (x12, x23) = beta, (x13, x23) = gamma.
+    let mut out = [0u64; 3];
+    // sorted positions: idx[0] = a's original index, etc.
+    let orig = |s: usize| idx[s];
+    let assign = |out: &mut [u64; 3], i: usize, j: usize, v: u64| {
+        // i, j are original indices in {0:S12, 1:S13, 2:S23}.
+        let pair = match (i.min(j), i.max(j)) {
+            (0, 1) => 0, // alpha
+            (0, 2) => 1, // beta
+            (1, 2) => 2, // gamma
+            _ => unreachable!(),
+        };
+        out[pair] += v;
+    };
+    assign(&mut out, orig(0), orig(1), p[0]);
+    assign(&mut out, orig(0), orig(2), p[1]);
+    assign(&mut out, orig(1), orig(2), p[2]);
+    (out[0], out[1], out[2])
+}
+
+/// Subset-size summary for K=3 allocations.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Sizes3 {
+    pub s1: u64,
+    pub s2: u64,
+    pub s3: u64,
+    pub s12: u64,
+    pub s13: u64,
+    pub s23: u64,
+    pub s123: u64,
+}
+
+impl Sizes3 {
+    pub fn of(alloc: &Allocation) -> Self {
+        assert_eq!(alloc.k, 3, "Sizes3 requires K=3");
+        let s = alloc.subset_sizes();
+        Sizes3 {
+            s1: s[0b001],
+            s2: s[0b010],
+            s3: s[0b100],
+            s12: s[0b011],
+            s13: s[0b101],
+            s23: s[0b110],
+            s123: s[0b111],
+        }
+    }
+
+    pub fn singles(&self) -> u64 {
+        self.s1 + self.s2 + self.s3
+    }
+
+    pub fn pairs(&self) -> u64 {
+        self.s12 + self.s13 + self.s23
+    }
+}
+
+/// Lemma 1 achievable load of `alloc`, in subfile units.
+pub fn load_units(alloc: &Allocation) -> u64 {
+    let s = Sizes3::of(alloc);
+    2 * s.singles() + g_int(s.s12, s.s13, s.s23)
+}
+
+/// Lemma 1 load in IV-equation units.
+pub fn load_equations(alloc: &Allocation) -> f64 {
+    alloc.units_to_equations(load_units(alloc))
+}
+
+/// Corollary 1 (converse for a FIXED allocation), subfile units, exact
+/// when doubled: `2·L_M >= 4 ΣS_k + ΣS_ij`.
+pub fn corollary1_lower_bound_doubled(alloc: &Allocation) -> u64 {
+    let s = Sizes3::of(alloc);
+    4 * s.singles() + s.pairs()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop;
+
+    #[test]
+    fn g_examples() {
+        assert_eq!(g_int(0, 0, 0), 0);
+        assert_eq!(g_int(2, 2, 2), 3); // triangle holds: ceil(6/2)
+        assert_eq!(g_int(1, 1, 1), 2); // odd sum: ceil(3/2)
+        assert_eq!(g_int(1, 2, 10), 10); // violated: max
+        assert_eq!(g_int(0, 0, 5), 5);
+        assert_eq!(g_int(3, 4, 5), 6);
+    }
+
+    #[test]
+    fn pairing_counts_consume_feasibly_and_optimally() {
+        for (x12, x13, x23) in [
+            (2, 2, 2),
+            (1, 2, 10),
+            (0, 0, 5),
+            (3, 4, 5),
+            (1, 1, 1),
+            (0, 7, 7),
+            (5, 0, 0),
+        ] {
+            let (a, b, c) = pairing_counts(x12, x13, x23);
+            assert!(a + b <= x12, "x12 overconsumed for {x12},{x13},{x23}");
+            assert!(a + c <= x13, "x13 overconsumed");
+            assert!(b + c <= x23, "x23 overconsumed");
+            let total = a + b + c;
+            let sum = x12 + x13 + x23;
+            assert_eq!(sum - total, g_int(x12, x13, x23), "suboptimal pairing");
+        }
+    }
+
+    #[test]
+    fn prop_pairing_counts_match_g() {
+        prop::run("pairing optimal", 2000, |g| {
+            let x12 = g.u64_in(0..=40);
+            let x13 = g.u64_in(0..=40);
+            let x23 = g.u64_in(0..=40);
+            let (a, b, c) = pairing_counts(x12, x13, x23);
+            if a + b > x12 || a + c > x13 || b + c > x23 {
+                return Err(format!("infeasible for ({x12},{x13},{x23})"));
+            }
+            prop::check(
+                x12 + x13 + x23 - (a + b + c) == g_int(x12, x13, x23),
+                format!("({x12},{x13},{x23}) -> ({a},{b},{c})"),
+            )
+        });
+    }
+
+    #[test]
+    fn sizes_and_load_of_fig2_allocation() {
+        // Fig 2 (suboptimal): N=12, node1 files 1-6, node2 files 7-12 + 1,
+        // node3 files 2-8. 0-indexed: node1 {0..5}, node2 {6..11, 0}, node3 {1..7}.
+        let mut holders = vec![0u32; 12];
+        for f in 0..6 {
+            holders[f] |= 0b001;
+        }
+        for f in 6..12 {
+            holders[f] |= 0b010;
+        }
+        holders[0] |= 0b010;
+        for f in 1..8 {
+            holders[f] |= 0b100;
+        }
+        let alloc = Allocation::new(3, 1, holders);
+        alloc.validate(&[6, 7, 7], 12).unwrap();
+        let s = Sizes3::of(&alloc);
+        assert_eq!(
+            (s.s1, s.s2, s.s3, s.s12, s.s13, s.s23, s.s123),
+            (0, 4, 0, 1, 5, 2, 0)
+        );
+        // L = 2*4 + g(1,5,2) = 8 + 5 = 13, the paper's suboptimal example.
+        assert_eq!(load_units(&alloc), 13);
+    }
+
+    #[test]
+    fn sizes_and_load_of_fig3_allocation() {
+        // Fig 3 (optimal): node3 stores {2,4,5,6,7,8,9} (1-indexed) ->
+        // 0-indexed {1,3,4,5,6,7,8}.
+        let mut holders = vec![0u32; 12];
+        for f in 0..6 {
+            holders[f] |= 0b001;
+        }
+        for f in 6..12 {
+            holders[f] |= 0b010;
+        }
+        holders[0] |= 0b010;
+        for &f in &[1usize, 3, 4, 5, 6, 7, 8] {
+            holders[f] |= 0b100;
+        }
+        let alloc = Allocation::new(3, 1, holders);
+        alloc.validate(&[6, 7, 7], 12).unwrap();
+        let s = Sizes3::of(&alloc);
+        // S12 = {1}, S13 = {2,4,5,6}, S23 = {7,8,9} (1-indexed);
+        // singles: node1-only {3}, node2-only {10,11,12}.
+        assert_eq!(
+            (s.s1, s.s2, s.s3, s.s12, s.s13, s.s23, s.s123),
+            (1, 3, 0, 1, 4, 3, 0)
+        );
+        // L = 2*4 + g(1,4,3) = 8 + max(4, ceil(8/2)) = 12 = L* (Theorem 1).
+        assert_eq!(load_units(&alloc), 12);
+    }
+
+    #[test]
+    fn prop_lemma1_at_least_corollary1() {
+        // For every allocation: 2·L_M >= 4ΣS_k + ΣS_ij, with equality iff
+        // the triangle inequality holds (Remark 3).
+        prop::run("Lemma1 >= Corollary1", 500, |g| {
+            let n_sub = g.usize_in(1..=40);
+            let mut holders = Vec::with_capacity(n_sub);
+            for _ in 0..n_sub {
+                holders.push(g.u64_in(1..=7) as u32);
+            }
+            let alloc = Allocation::new(3, 1, holders);
+            let s = Sizes3::of(&alloc);
+            let lhs = 2 * load_units(&alloc);
+            let rhs = corollary1_lower_bound_doubled(&alloc);
+            let triangle = s.pairs() >= 2 * s.s12.max(s.s13).max(s.s23);
+            let even = s.pairs() % 2 == 0;
+            if lhs < rhs {
+                return Err(format!("violates corollary: {s:?}"));
+            }
+            if triangle && even && lhs != rhs {
+                return Err(format!("should be tight: {s:?} lhs={lhs} rhs={rhs}"));
+            }
+            Ok(())
+        });
+    }
+}

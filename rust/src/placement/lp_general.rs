@@ -1,0 +1,519 @@
+//! §V: the general-K achievability algorithm as a linear program.
+//!
+//! Variables (paper's Steps 0–14):
+//! * `S_T` for every non-empty `T ⊆ [K]` — subfiles stored at exactly the
+//!   nodes of `T` (undetermined file allocation);
+//! * for each middle subsystem `2 <= j <= K−2`: `x_{jq}` per *perfect
+//!   collection* `q` in `C'_j` (K distinct j-subsets covering every node
+//!   exactly j times), each saving `K(K−j)(1−1/j)` transmissions per file
+//!   (Step 6, extending the homogeneous scheme of [2]);
+//! * for `j = K−1`: `x_q` per node `q`, each an XOR equation over the
+//!   K−1 pair-sets containing `q`, saving `K−2` (Steps 8–11 — for K=3 this
+//!   is exactly Lemma 1's pairing LP, eq. (53)).
+//!
+//! Constraints: per-subset consumption (`Σ x <= S_T`), file-count and
+//! per-node storage equalities (Step 12). Objective: total shuffle load.
+//!
+//! The enumeration of `C'_j` grows combinatorially (Remark 7); we cap it
+//! and report how many collections were dropped — never silently.
+
+use super::alloc::{Allocation, AllocationBuilder};
+use super::homogeneous::subsets_of_size;
+use crate::lp::{self, Cmp, Lp, Scalar};
+use crate::theory::params::ParamsK;
+
+/// Default cap on enumerated perfect collections per subsystem.
+pub const DEFAULT_COLLECTION_CAP: usize = 4096;
+
+/// Enumerate `C'_j`: K-element sets of distinct j-subsets of `[K]` where
+/// every node appears in exactly j subsets. Returns (collections, dropped)
+/// where each collection is a list of node masks.
+pub fn perfect_collections(k: usize, j: usize, cap: usize) -> (Vec<Vec<u32>>, usize) {
+    let masks = subsets_of_size(k, j);
+    let mut out = Vec::new();
+    let mut dropped = 0usize;
+    let mut chosen: Vec<u32> = Vec::with_capacity(k);
+    let mut degrees = vec![0u32; k];
+
+    fn rec(
+        masks: &[u32],
+        start: usize,
+        k: usize,
+        j: usize,
+        chosen: &mut Vec<u32>,
+        degrees: &mut Vec<u32>,
+        out: &mut Vec<Vec<u32>>,
+        dropped: &mut usize,
+        cap: usize,
+    ) {
+        if chosen.len() == k {
+            if degrees.iter().all(|&d| d == j as u32) {
+                if out.len() < cap {
+                    out.push(chosen.clone());
+                } else {
+                    *dropped += 1;
+                }
+            }
+            return;
+        }
+        if masks.len() - start < k - chosen.len() {
+            return;
+        }
+        for idx in start..masks.len() {
+            let m = masks[idx];
+            // Prune: adding m must not push any node past degree j.
+            let mut ok = true;
+            for node in 0..k {
+                if m & (1 << node) != 0 && degrees[node] + 1 > j as u32 {
+                    ok = false;
+                    break;
+                }
+            }
+            if !ok {
+                continue;
+            }
+            for node in 0..k {
+                if m & (1 << node) != 0 {
+                    degrees[node] += 1;
+                }
+            }
+            chosen.push(m);
+            rec(masks, idx + 1, k, j, chosen, degrees, out, dropped, cap);
+            chosen.pop();
+            for node in 0..k {
+                if m & (1 << node) != 0 {
+                    degrees[node] -= 1;
+                }
+            }
+        }
+    }
+
+    rec(
+        &masks,
+        0,
+        k,
+        j,
+        &mut chosen,
+        &mut degrees,
+        &mut out,
+        &mut dropped,
+        cap,
+    );
+    (out, dropped)
+}
+
+/// Variable bookkeeping for the general LP.
+#[derive(Clone, Debug)]
+pub struct GeneralLpModel<S> {
+    pub lp: Lp<S>,
+    /// Map subset-mask -> S_T variable index.
+    pub s_var: Vec<Option<usize>>,
+    /// (j, collection masks, variable index) for every coding variable.
+    pub x_vars: Vec<(usize, Vec<u32>, usize)>,
+    /// Collections dropped by the enumeration cap, per subsystem j.
+    pub dropped: Vec<(usize, usize)>,
+}
+
+/// Build the §V LP for `p` (Steps 0–13), generic over the scalar field.
+pub fn build_lp<S: Scalar>(p: &ParamsK, cap: usize) -> GeneralLpModel<S> {
+    let k = p.k();
+    let mut lp: Lp<S> = Lp::new();
+    let mut s_var: Vec<Option<usize>> = vec![None; 1 << k];
+
+    // S_T variables; objective coefficient = (K − |T|) (uncoded deliveries
+    // per subfile; j = K contributes 0).
+    for mask in 1u32..(1 << k) {
+        let j = mask.count_ones() as usize;
+        let cost = S::from_i64((k - j) as i64);
+        let v = lp.add_var(format!("S_{mask:b}"), cost);
+        s_var[mask as usize] = Some(v);
+    }
+
+    let mut x_vars = Vec::new();
+    let mut dropped = Vec::new();
+
+    // Middle subsystems 2 <= j <= K−2 (Steps 1–6).
+    for j in 2..k.saturating_sub(1) {
+        let (collections, drop) = perfect_collections(k, j, cap);
+        if drop > 0 {
+            dropped.push((j, drop));
+        }
+        // Saving per file: K (K−j)(j−1)/j.
+        let save = S::from_ratio((k * (k - j) * (j - 1)) as i64, j as i64);
+        let mut per_subset: Vec<Vec<usize>> = vec![Vec::new(); 1 << k];
+        for coll in collections {
+            let v = lp.add_var(format!("x_{j}_{}", x_vars.len()), save.neg());
+            for &m in &coll {
+                per_subset[m as usize].push(v);
+            }
+            x_vars.push((j, coll, v));
+        }
+        // Consumption constraints: Σ_q x_jq [T ∈ C_q] − S_T <= 0.
+        for mask in subsets_of_size(k, j) {
+            let vars = &per_subset[mask as usize];
+            if vars.is_empty() {
+                continue;
+            }
+            let mut coeffs: Vec<(usize, S)> =
+                vars.iter().map(|&v| (v, S::one())).collect();
+            coeffs.push((s_var[mask as usize].unwrap(), S::one().neg()));
+            lp.constrain(coeffs, Cmp::Le, S::zero());
+        }
+    }
+
+    // Subsystem j = K−1 (Steps 8–11): one variable per node; x_q appears
+    // in the constraint of every (K−1)-subset containing q; saving K−2.
+    if k >= 2 {
+        let jm = k - 1;
+        let save = S::from_i64((k - 2) as i64);
+        let node_vars: Vec<usize> = (0..k)
+            .map(|q| lp.add_var(format!("x_{jm}_n{q}"), save.neg()))
+            .collect();
+        for mask in subsets_of_size(k, jm) {
+            let mut coeffs: Vec<(usize, S)> = (0..k)
+                .filter(|&q| mask & (1 << q) != 0)
+                .map(|q| (node_vars[q], S::one()))
+                .collect();
+            coeffs.push((s_var[mask as usize].unwrap(), S::one().neg()));
+            lp.constrain(coeffs, Cmp::Le, S::zero());
+        }
+        for (q, &v) in node_vars.iter().enumerate() {
+            x_vars.push((jm, vec![1u32 << q], v));
+        }
+    }
+
+    // Step 12 equalities: total files and per-node storage.
+    let all: Vec<(usize, S)> = (1..(1u32 << k))
+        .map(|m| (s_var[m as usize].unwrap(), S::one()))
+        .collect();
+    lp.constrain(all, Cmp::Eq, S::from_i64(p.n as i64));
+    for node in 0..k {
+        let coeffs: Vec<(usize, S)> = (1..(1u32 << k))
+            .filter(|m| m & (1 << node) != 0)
+            .map(|m| (s_var[m as usize].unwrap(), S::one()))
+            .collect();
+        lp.constrain(coeffs, Cmp::Eq, S::from_i64(p.m[node] as i64));
+    }
+
+    GeneralLpModel {
+        lp,
+        s_var,
+        x_vars,
+        dropped,
+    }
+}
+
+/// Solved general-K design.
+#[derive(Clone, Debug)]
+pub struct GeneralSolution {
+    /// Predicted shuffle load (IV-equation units).
+    pub load: f64,
+    /// `S_T` values by mask (length `2^K`).
+    pub s_values: Vec<f64>,
+    /// Coding variable values: (j, collection masks, value).
+    pub x_values: Vec<(usize, Vec<u32>, f64)>,
+    pub pivots: usize,
+    pub n_vars: usize,
+    pub n_constraints: usize,
+    /// Collections dropped by the enumeration cap (j, count).
+    pub dropped: Vec<(usize, usize)>,
+}
+
+/// Run the §V algorithm (f64 simplex).
+pub fn solve_general(p: &ParamsK, cap: usize) -> Result<GeneralSolution, lp::LpError> {
+    let model = build_lp::<f64>(p, cap);
+    let sol = lp::solve(&model.lp)?;
+    let k = p.k();
+    let mut s_values = vec![0.0; 1 << k];
+    for mask in 1u32..(1 << k) {
+        s_values[mask as usize] = sol.values[model.s_var[mask as usize].unwrap()];
+    }
+    let x_values = model
+        .x_vars
+        .iter()
+        .map(|(j, coll, v)| (*j, coll.clone(), sol.values[*v]))
+        .collect();
+    Ok(GeneralSolution {
+        load: sol.objective,
+        s_values,
+        x_values,
+        pivots: sol.pivots,
+        n_vars: model.lp.n_vars,
+        n_constraints: model.lp.constraints.len(),
+        dropped: model.dropped,
+    })
+}
+
+/// Step 14: realize the LP's `S_T` values as a concrete allocation.
+///
+/// Values are scaled by `sp = 2` and rounded by largest remainder to hit
+/// exactly `2N` subfiles, then per-node storage is repaired by local moves
+/// (grow/shrink holder sets) so `validate()` passes. The engine's measured
+/// load on the realized allocation may exceed the LP prediction by the
+/// rounding slack; benches report both.
+pub fn allocation_from_solution(p: &ParamsK, sol: &GeneralSolution) -> Allocation {
+    let k = p.k();
+    let sp = 2u32;
+    let n_sub = (sp as u64 * p.n) as usize;
+
+    // Largest-remainder rounding of 2·S_T to integers summing to 2N.
+    let mut counts: Vec<u64> = Vec::with_capacity(1 << k);
+    let mut rema: Vec<(usize, f64)> = Vec::new();
+    let mut total = 0u64;
+    for mask in 0..(1usize << k) {
+        let scaled = if mask == 0 { 0.0 } else { sol.s_values[mask] * sp as f64 };
+        let fl = scaled.max(0.0).floor() as u64;
+        counts.push(fl);
+        total += fl;
+        rema.push((mask, scaled - fl as f64));
+    }
+    rema.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+    let mut deficit = (n_sub as u64).saturating_sub(total);
+    for (mask, _) in rema {
+        if deficit == 0 {
+            break;
+        }
+        if mask != 0 {
+            counts[mask] += 1;
+            deficit -= 1;
+        }
+    }
+    while deficit > 0 {
+        counts[1] += 1; // pathological all-integer underflow: pad node 0
+        deficit -= 1;
+    }
+
+    // Lay subfiles out mask by mask.
+    let mut holders: Vec<u32> = Vec::with_capacity(n_sub);
+    for (mask, &c) in counts.iter().enumerate() {
+        for _ in 0..c {
+            holders.push(mask as u32);
+        }
+    }
+    holders.truncate(n_sub);
+    while holders.len() < n_sub {
+        holders.push(1);
+    }
+
+    // Repair per-node storage to exactly sp·M_k.
+    let target: Vec<i64> = p.m.iter().map(|&m| (m * sp as u64) as i64).collect();
+    let mut excess: Vec<i64> = (0..k)
+        .map(|node| {
+            holders
+                .iter()
+                .filter(|&&h| h & (1 << node) != 0)
+                .count() as i64
+                - target[node]
+        })
+        .collect();
+    // Pass 1: shrink overfull nodes where coverage allows.
+    for node in 0..k {
+        let mut idx = 0;
+        while excess[node] > 0 && idx < holders.len() {
+            let h = holders[idx];
+            if h & (1 << node) != 0 && h.count_ones() >= 2 {
+                holders[idx] = h & !(1 << node);
+                excess[node] -= 1;
+            }
+            idx += 1;
+        }
+    }
+    // Pass 2: grow underfull nodes on subfiles they don't hold.
+    for node in 0..k {
+        let mut idx = 0;
+        while excess[node] < 0 && idx < holders.len() {
+            if holders[idx] & (1 << node) == 0 {
+                holders[idx] |= 1 << node;
+                excess[node] += 1;
+            }
+            idx += 1;
+        }
+    }
+    // Pass 3: any node still overfull holds only singletons; swap them to
+    // an underfull node (keeps coverage).
+    for node in 0..k {
+        while excess[node] > 0 {
+            let under = (0..k).find(|&l| excess[l] < 0);
+            let Some(under) = under else { break };
+            if let Some(idx) = holders
+                .iter()
+                .position(|&h| h == 1 << node)
+            {
+                holders[idx] = 1 << under;
+                excess[node] -= 1;
+                excess[under] += 1;
+            } else {
+                break;
+            }
+        }
+    }
+
+    let mut b = AllocationBuilder::new(k, sp, n_sub);
+    for (f, &h) in holders.iter().enumerate() {
+        b.assign(f, f + 1, if h == 0 { 1 } else { h });
+    }
+    b.build()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop;
+    use crate::theory::load::{lstar, uncoded};
+    use crate::theory::params::Params3;
+
+    #[test]
+    fn perfect_collections_k4_j2_matches_paper() {
+        // §V-B Step 2: exactly three methods for K=4, j=2.
+        let (colls, dropped) = perfect_collections(4, 2, 1000);
+        assert_eq!(dropped, 0);
+        assert_eq!(colls.len(), 3);
+        for coll in &colls {
+            assert_eq!(coll.len(), 4);
+            let mut deg = [0u32; 4];
+            for m in coll {
+                for node in 0..4 {
+                    if m & (1 << node) != 0 {
+                        deg[node] += 1;
+                    }
+                }
+            }
+            assert_eq!(deg, [2, 2, 2, 2]);
+        }
+    }
+
+    #[test]
+    fn perfect_collections_k5_j2_are_cycle_covers() {
+        // 2-regular simple graphs with 5 edges on 5 nodes = 5-cycles: 12.
+        let (colls, _) = perfect_collections(5, 2, 10_000);
+        assert_eq!(colls.len(), 12);
+    }
+
+    #[test]
+    fn cap_reports_dropped() {
+        let (colls, dropped) = perfect_collections(5, 2, 5);
+        assert_eq!(colls.len(), 5);
+        assert_eq!(dropped, 7);
+    }
+
+    #[test]
+    fn k3_lp_reproduces_paper_example() {
+        // Remark 5: the K=3 LP equals Theorem 1 — here on (6,7,7,12).
+        let p = ParamsK::new(vec![6, 7, 7], 12).unwrap();
+        let sol = solve_general(&p, DEFAULT_COLLECTION_CAP).unwrap();
+        assert!((sol.load - 12.0).abs() < 1e-6, "LP load {}", sol.load);
+    }
+
+    #[test]
+    fn k3_lp_equals_theorem1_on_random_params() {
+        prop::run("Remark 5: LP == Theorem 1", 60, |g| {
+            let n = g.u64_in(1..=16);
+            let m1 = g.u64_in(1..=n);
+            let m2 = g.u64_in(1..=n);
+            let m3 = g.u64_in(1..=n);
+            let Ok(p3) = Params3::new(m1, m2, m3, n) else {
+                return Ok(());
+            };
+            let pk = ParamsK::new(vec![m1, m2, m3], n).unwrap();
+            let sol = solve_general(&pk, DEFAULT_COLLECTION_CAP)
+                .map_err(|e| format!("{p3}: {e}"))?;
+            prop::check(
+                (sol.load - lstar(&p3)).abs() < 1e-6,
+                format!("{p3}: LP {} vs L* {}", sol.load, lstar(&p3)),
+            )
+        });
+    }
+
+    #[test]
+    fn k4_homogeneous_matches_li_et_al() {
+        // K=4, r=2 homogeneous: L = N(K−r)/r = 10·2/2 = 10.
+        let p = ParamsK::new(vec![5, 5, 5, 5], 10).unwrap();
+        let sol = solve_general(&p, DEFAULT_COLLECTION_CAP).unwrap();
+        assert!(
+            (sol.load - 10.0).abs() < 1e-6,
+            "K=4 r=2 LP load {} != 10",
+            sol.load
+        );
+    }
+
+    #[test]
+    fn k4_heterogeneous_beats_uncoded() {
+        let p = ParamsK::new(vec![3, 5, 6, 8], 12).unwrap();
+        let sol = solve_general(&p, DEFAULT_COLLECTION_CAP).unwrap();
+        let unc = (4.0 * 12.0) - 22.0; // KN − M deliveries
+        assert!(sol.load < unc, "LP {} >= uncoded {unc}", sol.load);
+        assert!(sol.load >= 0.0);
+    }
+
+    #[test]
+    fn allocation_from_solution_is_valid() {
+        let p = ParamsK::new(vec![6, 7, 7], 12).unwrap();
+        let sol = solve_general(&p, DEFAULT_COLLECTION_CAP).unwrap();
+        let alloc = allocation_from_solution(&p, &sol);
+        alloc.validate(&[6, 7, 7], 12).unwrap();
+    }
+
+    #[test]
+    fn prop_allocation_from_solution_valid_random() {
+        prop::run("LP allocation valid", 30, |g| {
+            let k = g.usize_in(3..=4);
+            let n = g.u64_in(2..=10);
+            let m: Vec<u64> = (0..k).map(|_| g.u64_in(1..=n)).collect();
+            let Ok(p) = ParamsK::new(m.clone(), n) else {
+                return Ok(());
+            };
+            let sol = solve_general(&p, DEFAULT_COLLECTION_CAP)
+                .map_err(|e| format!("{m:?} n={n}: {e}"))?;
+            let alloc = allocation_from_solution(&p, &sol);
+            alloc
+                .validate(&m, n)
+                .map_err(|e| format!("{m:?} n={n}: {e}"))
+        });
+    }
+
+    #[test]
+    fn exact_rational_lp_matches_theorem1_exactly() {
+        // The §V LP solved in exact arithmetic: no f64 tolerance at all.
+        use crate::lp::{solve, Rat};
+        for (m1, m2, m3, n) in [(6u64, 7, 7, 12u64), (4, 5, 6, 12), (5, 11, 11, 12), (2, 3, 12, 12)] {
+            let pk = ParamsK::new(vec![m1, m2, m3], n).unwrap();
+            let p3 = Params3::new(m1, m2, m3, n).unwrap();
+            let model = build_lp::<Rat>(&pk, DEFAULT_COLLECTION_CAP);
+            let sol = solve(&model.lp).unwrap();
+            // L* in exact halves: objective * 2 must equal lstar_half.
+            let doubled = sol.objective.mul(&Rat::int(2));
+            assert!(
+                doubled.is_integer(),
+                "({m1},{m2},{m3},{n}): objective {:?} not half-integral",
+                sol.objective
+            );
+            assert_eq!(
+                doubled,
+                Rat::int(crate::theory::load::lstar_half(&p3) as i128),
+                "({m1},{m2},{m3},{n})"
+            );
+        }
+    }
+
+    #[test]
+    fn lp_load_lower_bounds_hold_k3() {
+        // LP (achievable) must never beat the information-theoretic L*.
+        prop::run("LP >= L* - eps", 40, |g| {
+            let n = g.u64_in(1..=12);
+            let m1 = g.u64_in(1..=n);
+            let m2 = g.u64_in(1..=n);
+            let m3 = g.u64_in(1..=n);
+            let Ok(p3) = Params3::new(m1, m2, m3, n) else {
+                return Ok(());
+            };
+            let pk = ParamsK::new(vec![m1, m2, m3], n).unwrap();
+            let sol = solve_general(&pk, DEFAULT_COLLECTION_CAP)
+                .map_err(|e| format!("{p3}: {e}"))?;
+            let _ = uncoded(&p3);
+            prop::check(
+                sol.load >= lstar(&p3) - 1e-6,
+                format!("{p3}: LP {} < L* {}", sol.load, lstar(&p3)),
+            )
+        });
+    }
+}

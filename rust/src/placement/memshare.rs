@@ -1,0 +1,279 @@
+//! Memory-sharing achievability for homogeneous clusters at non-integer
+//! computation load (the lower convex envelope of Remark 2 / [2]).
+//!
+//! For `K` nodes with equal storage `M` and `r = KM/N ∉ Z`, split the file
+//! set into two sub-instances: `N_hi = KM − ⌊r⌋N` files at redundancy
+//! `⌈r⌉` and the remaining `N_lo` at `⌊r⌋`. Each sub-instance runs [2]'s
+//! symmetric placement + multicast; total load equals the envelope
+//! `(1−w)·L(⌊r⌋) + w·L(⌈r⌉)` exactly, which matches Theorem 1's `L*` at
+//! `M1=M2=M3` (verified in tests).
+
+use super::alloc::Allocation;
+use super::homogeneous::symmetric_allocation;
+use crate::coding::cdc_multicast::plan_homogeneous;
+use crate::coding::plan::ShufflePlan;
+
+/// The two-regime split of a homogeneous memory-sharing design.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct MemShare {
+    pub k: usize,
+    pub n: u64,
+    pub m_per_node: u64,
+    pub r_lo: u64,
+    pub r_hi: u64,
+    pub n_lo: u64,
+    pub n_hi: u64,
+}
+
+/// Compute the split. Errors when `KM < N` (cannot cover) or `M > N`.
+pub fn split(k: usize, m_per_node: u64, n: u64) -> Result<MemShare, String> {
+    let km = k as u64 * m_per_node;
+    if km < n {
+        return Err(format!("K·M = {km} cannot cover N = {n}"));
+    }
+    if m_per_node > n {
+        return Err(format!("M = {m_per_node} exceeds N = {n}"));
+    }
+    let r_lo = km / n; // floor(r)
+    let r_hi = if km % n == 0 { r_lo } else { r_lo + 1 };
+    let n_hi = if r_hi == r_lo { 0 } else { km - r_lo * n };
+    let n_lo = n - n_hi;
+    Ok(MemShare {
+        k,
+        n,
+        m_per_node,
+        r_lo,
+        r_hi,
+        n_lo,
+        n_hi,
+    })
+}
+
+impl MemShare {
+    /// Build the combined allocation: sub-instance allocations laid out
+    /// side by side (subfile ids offset), at a common subpacketization.
+    pub fn allocation(&self) -> Allocation {
+        let lo = if self.n_lo > 0 {
+            Some(symmetric_allocation(self.k, self.r_lo as usize, self.n_lo))
+        } else {
+            None
+        };
+        let hi = if self.n_hi > 0 {
+            Some(symmetric_allocation(self.k, self.r_hi as usize, self.n_hi))
+        } else {
+            None
+        };
+        // Common subpacketization = lcm of the two.
+        let sp_lo = lo.as_ref().map(|a| a.sp).unwrap_or(1);
+        let sp_hi = hi.as_ref().map(|a| a.sp).unwrap_or(1);
+        let sp = lcm(sp_lo as u64, sp_hi as u64) as u32;
+        let mut holders = Vec::new();
+        for (alloc, sub_sp) in [(lo, sp_lo), (hi, sp_hi)].into_iter().flat_map(
+            |(a, s)| a.map(|a| (a, s)),
+        ) {
+            let repeat = (sp / sub_sp) as usize;
+            for &h in &alloc.holders {
+                for _ in 0..repeat {
+                    holders.push(h);
+                }
+            }
+        }
+        Allocation::new(self.k, sp, holders)
+    }
+
+    /// Coded shuffle plan for [`Self::allocation`]: per-subfile redundancy
+    /// is either `r_lo` or `r_hi`, each handled by [2]'s multicast over
+    /// its own sub-instance.
+    pub fn plan(&self, alloc: &Allocation) -> ShufflePlan {
+        // Split the allocation back into the two r-regular sub-ranges.
+        let mut plan = ShufflePlan {
+            k: self.k,
+            broadcasts: Vec::new(),
+        };
+        let mut redundancies = vec![self.r_lo];
+        if self.r_hi != self.r_lo {
+            redundancies.push(self.r_hi);
+        }
+        for r in redundancies {
+            if r == 0 {
+                continue;
+            }
+            // Collect subfiles with this redundancy into a sub-allocation
+            // (preserving global subfile ids via a mapping).
+            let ids: Vec<usize> = alloc
+                .holders
+                .iter()
+                .enumerate()
+                .filter(|(_, h)| h.count_ones() as u64 == r)
+                .map(|(i, _)| i)
+                .collect();
+            if ids.is_empty() {
+                continue;
+            }
+            let sub_alloc = Allocation::new(
+                self.k,
+                alloc.sp,
+                ids.iter().map(|&i| alloc.holders[i]).collect(),
+            );
+            let sub_plan = plan_homogeneous(&sub_alloc, r as usize);
+            // Remap local subfile ids back to global ids.
+            for b in sub_plan.broadcasts {
+                plan.broadcasts.push(remap(b, &ids));
+            }
+        }
+        plan
+    }
+
+    /// Envelope load in IV units: `(1−w)·L(r_lo) + w·L(r_hi)` with
+    /// per-instance `L(r) = N_sub(K−r)/r`.
+    pub fn envelope_load(&self) -> f64 {
+        let part = |n: u64, r: u64| {
+            if n == 0 || r == 0 {
+                0.0
+            } else {
+                n as f64 * (self.k as u64 - r) as f64 / r as f64
+            }
+        };
+        part(self.n_lo, self.r_lo) + part(self.n_hi, self.r_hi)
+    }
+}
+
+fn gcd(mut a: u64, mut b: u64) -> u64 {
+    while b != 0 {
+        let t = a % b;
+        a = b;
+        b = t;
+    }
+    a
+}
+
+fn lcm(a: u64, b: u64) -> u64 {
+    a / gcd(a, b) * b
+}
+
+fn remap(b: crate::coding::plan::Broadcast, ids: &[usize]) -> crate::coding::plan::Broadcast {
+    use crate::coding::plan::{Broadcast, IvId, Part};
+    match b {
+        Broadcast::Uncoded { sender, iv } => Broadcast::Uncoded {
+            sender,
+            iv: IvId {
+                group: iv.group,
+                sub: ids[iv.sub],
+            },
+        },
+        Broadcast::Coded { sender, parts } => Broadcast::Coded {
+            sender,
+            parts: parts
+                .into_iter()
+                .map(|p| Part {
+                    iv: IvId {
+                        group: p.iv.group,
+                        sub: ids[p.iv.sub],
+                    },
+                    seg: p.seg,
+                    nseg: p.nseg,
+                })
+                .collect(),
+        },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coding::decoder::verify;
+    use crate::prop;
+    use crate::theory::load::lstar;
+    use crate::theory::params::Params3;
+
+    #[test]
+    fn split_integer_r_has_single_regime() {
+        let s = split(3, 8, 12).unwrap(); // r = 2 exactly
+        assert_eq!((s.r_lo, s.r_hi), (2, 2));
+        assert_eq!((s.n_lo, s.n_hi), (12, 0));
+        assert_eq!(s.envelope_load(), 6.0);
+    }
+
+    #[test]
+    fn split_fractional_r() {
+        let s = split(3, 6, 12).unwrap(); // r = 1.5
+        assert_eq!((s.r_lo, s.r_hi), (1, 2));
+        // N_hi = KM − r_lo·N = 18 − 12 = 6; N_lo = 6.
+        assert_eq!((s.n_lo, s.n_hi), (6, 6));
+        // L = 6·2/1 + 6·1/2 = 15 — matches Theorem 1 for (6,6,6,12).
+        assert_eq!(s.envelope_load(), 15.0);
+        assert_eq!(lstar(&Params3::new(6, 6, 6, 12).unwrap()), 15.0);
+    }
+
+    #[test]
+    fn split_rejects_invalid() {
+        assert!(split(3, 1, 12).is_err()); // KM < N
+        assert!(split(3, 13, 12).is_err()); // M > N
+    }
+
+    #[test]
+    fn allocation_and_plan_achieve_envelope_and_decode() {
+        let s = split(3, 6, 12).unwrap();
+        let alloc = s.allocation();
+        alloc.validate(&[6, 6, 6], 12).unwrap();
+        let plan = s.plan(&alloc);
+        let got = plan.load_equations(&alloc);
+        assert!(
+            (got - s.envelope_load()).abs() < 1e-9,
+            "plan load {got} != envelope {}",
+            s.envelope_load()
+        );
+        let report = verify(&alloc, &plan);
+        assert!(report.is_complete(), "missing {:?}", report.missing);
+    }
+
+    #[test]
+    fn prop_memshare_achieves_theorem1_homogeneous() {
+        // Constructive proof of Remark 2's envelope: for every homogeneous
+        // (M, N) the memory-sharing plan decodes and its load equals L*.
+        prop::run("memshare == Theorem 1", 80, |g| {
+            let n = g.u64_in(2..=16);
+            let m = g.u64_in(1..=n);
+            if 3 * m < n {
+                return Ok(());
+            }
+            let s = split(3, m, n).map_err(|e| e)?;
+            let alloc = s.allocation();
+            if let Err(e) = alloc.validate(&[m, m, m], n) {
+                return Err(format!("m={m} n={n}: {e}"));
+            }
+            let plan = s.plan(&alloc);
+            let got = plan.load_equations(&alloc);
+            let want = lstar(&Params3::new(m, m, m, n).unwrap());
+            if (got - want).abs() > 1e-9 {
+                return Err(format!("m={m} n={n}: load {got} != L* {want}"));
+            }
+            let report = verify(&alloc, &plan);
+            prop::check(report.is_complete(), format!("m={m} n={n}: undecodable"))
+        });
+    }
+
+    #[test]
+    fn prop_memshare_general_k_matches_envelope() {
+        prop::run("memshare envelope general K", 60, |g| {
+            let k = g.usize_in(2..=5);
+            let n = g.u64_in(2..=12);
+            let m = g.u64_in(1..=n);
+            if (k as u64) * m < n {
+                return Ok(());
+            }
+            let s = split(k, m, n).map_err(|e| e)?;
+            let alloc = s.allocation();
+            let plan = s.plan(&alloc);
+            let got = plan.load_equations(&alloc);
+            if (got - s.envelope_load()).abs() > 1e-9 {
+                return Err(format!(
+                    "k={k} m={m} n={n}: load {got} != envelope {}",
+                    s.envelope_load()
+                ));
+            }
+            let report = verify(&alloc, &plan);
+            prop::check(report.is_complete(), format!("k={k} m={m} n={n}"))
+        });
+    }
+}

@@ -1,0 +1,12 @@
+//! File placement: subset algebra over allocations, the paper's optimal
+//! K=3 placements (Figs 5–11), Lemma 1's pairing computation, the
+//! homogeneous cyclic placement of [2], and the §V general-K LP.
+
+pub mod alloc;
+pub mod homogeneous;
+pub mod k3;
+pub mod lemma1;
+pub mod lp_general;
+pub mod memshare;
+
+pub use alloc::Allocation;

@@ -1,0 +1,168 @@
+//! Mini property-based testing harness (no `proptest` in the offline build).
+//!
+//! A property is a closure over a seeded [`Xoshiro256`]; the runner executes
+//! `cases` independent cases and, on failure, re-reports the failing seed so
+//! the case reproduces exactly (`PropError` carries it). A lightweight
+//! shrinking pass retries the property on "smaller" derived seeds to bias
+//! reports toward simple cases.
+//!
+//! ```no_run
+//! use hetcdc::prop::{self, Gen};
+//! prop::run("xor involution", 64, |g| {
+//!     let a = g.u64_in(0..=u64::MAX);
+//!     let b = g.u64_in(0..=u64::MAX);
+//!     prop::check((a ^ b) ^ b == a, format!("a={a} b={b}"))
+//! });
+//! ```
+
+use crate::util::rng::Xoshiro256;
+use std::ops::RangeInclusive;
+
+/// Generator facade over the PRNG with convenience draws.
+pub struct Gen {
+    rng: Xoshiro256,
+    pub seed: u64,
+}
+
+impl Gen {
+    pub fn new(seed: u64) -> Self {
+        Self {
+            rng: Xoshiro256::seed_from_u64(seed),
+            seed,
+        }
+    }
+
+    pub fn u64_in(&mut self, range: RangeInclusive<u64>) -> u64 {
+        let (lo, hi) = (*range.start(), *range.end());
+        if lo == 0 && hi == u64::MAX {
+            return self.rng.next_u64();
+        }
+        lo + self.rng.gen_range(hi - lo + 1)
+    }
+
+    pub fn usize_in(&mut self, range: RangeInclusive<usize>) -> usize {
+        self.u64_in(*range.start() as u64..=*range.end() as u64) as usize
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.next_u64() & 1 == 1
+    }
+
+    pub fn f64_unit(&mut self) -> f64 {
+        self.rng.f64_unit()
+    }
+
+    pub fn vec_u64(&mut self, len: RangeInclusive<usize>, each: RangeInclusive<u64>) -> Vec<u64> {
+        let n = self.usize_in(len);
+        (0..n).map(|_| self.u64_in(each.clone())).collect()
+    }
+
+    /// Pick uniformly from a slice.
+    pub fn pick<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        assert!(!xs.is_empty());
+        &xs[self.usize_in(0..=xs.len() - 1)]
+    }
+
+    pub fn rng(&mut self) -> &mut Xoshiro256 {
+        &mut self.rng
+    }
+}
+
+/// Property outcome: `Ok(())` passes; `Err(msg)` fails with a description.
+pub type PropResult = Result<(), String>;
+
+/// Convenience: boolean condition with a message on failure.
+pub fn check(cond: bool, msg: impl Into<String>) -> PropResult {
+    if cond {
+        Ok(())
+    } else {
+        Err(msg.into())
+    }
+}
+
+/// Run `cases` cases of `prop`. Panics (failing the enclosing `#[test]`)
+/// with the seed and message of the simplest failure found.
+pub fn run<F>(name: &str, cases: u64, mut prop: F)
+where
+    F: FnMut(&mut Gen) -> PropResult,
+{
+    let base = env_seed().unwrap_or(0xC0FFEE);
+    let mut failure: Option<(u64, String)> = None;
+    for i in 0..cases {
+        let seed = base.wrapping_add(i.wrapping_mul(0x9E37_79B9));
+        let mut gen = Gen::new(seed);
+        if let Err(msg) = prop(&mut gen) {
+            failure = Some((seed, msg));
+            break;
+        }
+    }
+    if let Some((seed, msg)) = failure {
+        // Shrink pass: probe nearby "simpler" seeds (smaller draws tend to
+        // follow smaller seeds through our generators' first draws).
+        let mut simplest = (seed, msg);
+        for probe in [1u64, 2, 3, 5, 8, 13, 21, 42] {
+            let mut gen = Gen::new(probe);
+            if let Err(m) = prop(&mut gen) {
+                simplest = (probe, m);
+                break;
+            }
+        }
+        panic!(
+            "property '{name}' failed (reproduce with HETCDC_PROP_SEED={}): {}",
+            simplest.0, simplest.1
+        );
+    }
+}
+
+fn env_seed() -> Option<u64> {
+    std::env::var("HETCDC_PROP_SEED").ok()?.parse().ok()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut n = 0;
+        run("count", 32, |_g| {
+            n += 1;
+            Ok(())
+        });
+        assert_eq!(n, 32);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'fails'")]
+    fn failing_property_panics_with_seed() {
+        run("fails", 8, |g| {
+            let x = g.u64_in(0..=100);
+            check(x > 1000, format!("x={x}"))
+        });
+    }
+
+    #[test]
+    fn generators_respect_ranges() {
+        run("ranges", 64, |g| {
+            let a = g.u64_in(5..=9);
+            let v = g.vec_u64(0..=4, 1..=3);
+            check(
+                (5..=9).contains(&a) && v.len() <= 4 && v.iter().all(|x| (1..=3).contains(x)),
+                format!("a={a} v={v:?}"),
+            )
+        });
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mut first = Vec::new();
+        let mut g1 = Gen::new(99);
+        for _ in 0..10 {
+            first.push(g1.u64_in(0..=u64::MAX));
+        }
+        let mut g2 = Gen::new(99);
+        for v in &first {
+            assert_eq!(*v, g2.u64_in(0..=u64::MAX));
+        }
+    }
+}

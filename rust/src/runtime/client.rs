@@ -1,0 +1,233 @@
+//! PJRT client wrapper with a compile cache.
+//!
+//! Interchange is HLO **text** (`HloModuleProto::from_text_file`): jax
+//! >= 0.5 serializes protos with 64-bit instruction ids that xla_extension
+//! 0.5.1 rejects; the text parser reassigns ids (see DESIGN.md and
+//! /opt/xla-example/README.md). Executables are compiled once per artifact
+//! and cached for the life of the runtime — compilation is off the hot
+//! path, execution is on it.
+
+use crate::util::json::Json;
+use anyhow::{anyhow, Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// Parsed `artifacts/manifest.json`.
+#[derive(Clone, Debug)]
+pub struct ArtifactManifest {
+    /// ModelConfig fields baked into the artifacts.
+    pub vocab: usize,
+    pub q: usize,
+    pub t: usize,
+    pub map_batch: usize,
+    pub keys_per_file: usize,
+    pub reduce_batch: usize,
+    /// name -> (file, input shapes)
+    pub artifacts: HashMap<String, (String, Vec<Vec<usize>>)>,
+}
+
+impl ArtifactManifest {
+    pub fn parse(text: &str) -> Result<Self> {
+        let j = Json::parse(text).map_err(|e| anyhow!("manifest: {e}"))?;
+        let cfg = j.get("config").ok_or_else(|| anyhow!("manifest: no config"))?;
+        let get = |k: &str| -> Result<usize> {
+            cfg.get(k)
+                .and_then(|v| v.as_usize())
+                .ok_or_else(|| anyhow!("manifest config missing '{k}'"))
+        };
+        let mut artifacts = HashMap::new();
+        let arts = j
+            .get("artifacts")
+            .and_then(|a| a.as_obj())
+            .ok_or_else(|| anyhow!("manifest: no artifacts"))?;
+        for (name, entry) in arts {
+            let file = entry
+                .get("file")
+                .and_then(|f| f.as_str())
+                .ok_or_else(|| anyhow!("artifact {name}: no file"))?
+                .to_string();
+            let inputs = entry
+                .get("inputs")
+                .and_then(|i| i.as_arr())
+                .ok_or_else(|| anyhow!("artifact {name}: no inputs"))?
+                .iter()
+                .map(|inp| {
+                    inp.get("shape")
+                        .and_then(|s| s.as_arr())
+                        .map(|dims| dims.iter().filter_map(|d| d.as_usize()).collect())
+                        .ok_or_else(|| anyhow!("artifact {name}: bad shape"))
+                })
+                .collect::<Result<Vec<Vec<usize>>>>()?;
+            artifacts.insert(name.clone(), (file, inputs));
+        }
+        Ok(ArtifactManifest {
+            vocab: get("vocab")?,
+            q: get("q")?,
+            t: get("t")?,
+            map_batch: get("map_batch")?,
+            keys_per_file: get("keys_per_file")?,
+            reduce_batch: get("reduce_batch")?,
+            artifacts,
+        })
+    }
+}
+
+/// PJRT CPU runtime: compile-once, execute-many.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    pub manifest: ArtifactManifest,
+    exes: HashMap<String, xla::PjRtLoadedExecutable>,
+    /// Executions performed (metrics).
+    pub exec_count: u64,
+}
+
+impl Runtime {
+    /// Load the artifact directory (must contain `manifest.json`).
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest_text = std::fs::read_to_string(dir.join("manifest.json"))
+            .with_context(|| format!("reading {}/manifest.json (run `make artifacts`)", dir.display()))?;
+        let manifest = ArtifactManifest::parse(&manifest_text)?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+        Ok(Runtime {
+            client,
+            dir,
+            manifest,
+            exes: HashMap::new(),
+            exec_count: 0,
+        })
+    }
+
+    /// Default artifact directory: `$HETCDC_ARTIFACTS` or `./artifacts`.
+    pub fn default_dir() -> PathBuf {
+        std::env::var("HETCDC_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| PathBuf::from("artifacts"))
+    }
+
+    /// Compile (or fetch cached) an artifact by name.
+    fn executable(&mut self, name: &str) -> Result<&xla::PjRtLoadedExecutable> {
+        if !self.exes.contains_key(name) {
+            let (file, _) = self
+                .manifest
+                .artifacts
+                .get(name)
+                .ok_or_else(|| anyhow!("unknown artifact '{name}'"))?
+                .clone();
+            let path = self.dir.join(&file);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+            )
+            .map_err(|e| anyhow!("parsing {}: {e:?}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compiling {name}: {e:?}"))?;
+            self.exes.insert(name.to_string(), exe);
+        }
+        Ok(self.exes.get(name).unwrap())
+    }
+
+    /// Warm the compile cache for a set of artifacts.
+    pub fn precompile(&mut self, names: &[&str]) -> Result<()> {
+        for name in names {
+            self.executable(name)?;
+        }
+        Ok(())
+    }
+
+    fn lit_2d<T: xla::ArrayElement + xla::NativeType>(
+        data: &[T],
+        shape: &[usize],
+    ) -> Result<xla::Literal> {
+        let expect: usize = shape.iter().product();
+        if data.len() != expect {
+            return Err(anyhow!(
+                "literal data {} != shape {:?} product {expect}",
+                data.len(),
+                shape
+            ));
+        }
+        let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+        xla::Literal::vec1(data)
+            .reshape(&dims)
+            .map_err(|e| anyhow!("reshape {shape:?}: {e:?}"))
+    }
+
+    pub fn lit_f32(data: &[f32], shape: &[usize]) -> Result<xla::Literal> {
+        Self::lit_2d(data, shape)
+    }
+
+    pub fn lit_i32(data: &[i32], shape: &[usize]) -> Result<xla::Literal> {
+        Self::lit_2d(data, shape)
+    }
+
+    /// Execute artifact `name`; returns the single tuple element as a
+    /// literal (aot.py lowers everything with `return_tuple=True`).
+    pub fn execute(&mut self, name: &str, inputs: &[xla::Literal]) -> Result<xla::Literal> {
+        self.exec_count += 1;
+        let exe = self.executable(name)?;
+        let result = exe
+            .execute::<xla::Literal>(inputs)
+            .map_err(|e| anyhow!("executing {name}: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetching {name} result: {e:?}"))?;
+        result
+            .to_tuple1()
+            .map_err(|e| anyhow!("untupling {name} result: {e:?}"))
+    }
+
+    pub fn execute_to_f32(&mut self, name: &str, inputs: &[xla::Literal]) -> Result<Vec<f32>> {
+        self.execute(name, inputs)?
+            .to_vec::<f32>()
+            .map_err(|e| anyhow!("f32 result of {name}: {e:?}"))
+    }
+
+    pub fn execute_to_i32(&mut self, name: &str, inputs: &[xla::Literal]) -> Result<Vec<i32>> {
+        self.execute(name, inputs)?
+            .to_vec::<i32>()
+            .map_err(|e| anyhow!("i32 result of {name}: {e:?}"))
+    }
+
+    /// Expected input shapes of an artifact (from the manifest).
+    pub fn input_shapes(&self, name: &str) -> Option<&[Vec<usize>]> {
+        self.manifest.artifacts.get(name).map(|(_, s)| s.as_slice())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn manifest_parses() {
+        let text = r#"{
+          "artifacts": {
+            "map_project": {"file": "map_project.hlo.txt",
+              "inputs": [{"dtype": "float32", "shape": [96, 256]},
+                         {"dtype": "float32", "shape": [256, 16]}]}
+          },
+          "config": {"vocab": 256, "q": 3, "t": 32, "map_batch": 16,
+                     "keys_per_file": 512, "reduce_batch": 16,
+                     "xor_rows": 8, "xor_cols": 128}
+        }"#;
+        let m = ArtifactManifest::parse(text).unwrap();
+        assert_eq!(m.vocab, 256);
+        assert_eq!(m.q, 3);
+        let (file, shapes) = &m.artifacts["map_project"];
+        assert_eq!(file, "map_project.hlo.txt");
+        assert_eq!(shapes[0], vec![96, 256]);
+        assert_eq!(shapes[1], vec![256, 16]);
+    }
+
+    #[test]
+    fn manifest_rejects_missing_fields() {
+        assert!(ArtifactManifest::parse("{}").is_err());
+        assert!(ArtifactManifest::parse(r#"{"config": {}, "artifacts": {}}"#).is_err());
+    }
+
+    // Live PJRT tests are in rust/tests/runtime_integration.rs (they need
+    // `make artifacts` to have run).
+}

@@ -1,0 +1,8 @@
+//! PJRT execution runtime: loads the AOT artifacts (HLO text) emitted by
+//! `python/compile/aot.py` and executes them on the CPU PJRT client.
+//! This is the only module that touches the `xla` crate; Python never runs
+//! at request time.
+
+pub mod client;
+
+pub use client::{ArtifactManifest, Runtime};

@@ -1,0 +1,142 @@
+//! The four §IV lower bounds on the communication load.
+//!
+//! Each is valid for *every* file allocation and coding scheme; Theorem 1's
+//! converse is their union (the paper notes "each inequality is a valid
+//! lower bound in every regime, but they are not simultaneously active").
+//! A key structural fact our tests exploit: `L* = max(all four bounds)`
+//! everywhere in the parameter space.
+
+use super::params::Params3;
+
+/// Parameter-level lower bounds in half-units (`2·L`). Negative
+/// intermediate values are clamped at 0 (a vacuous bound).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Bounds {
+    /// §IV-A: `L >= 7N/2 − 3M/2`, from Corollary 1 + `ΣS_k >= 2N − M`
+    /// (only non-vacuous when `M <= 2N`).
+    pub corollary_tight: i64,
+    /// §IV-B: `L >= 3N/2 − M/2` (Corollary 1 with `ΣS_k >= 0`).
+    pub corollary_loose: i64,
+    /// §IV-C cut-set at the smallest node: `L >= N − M1`.
+    pub cutset: i64,
+    /// §IV-D genie-aided: `L >= 3N − (M + M1)`.
+    pub genie: i64,
+}
+
+impl Bounds {
+    pub fn max_half(&self) -> u64 {
+        self.corollary_tight
+            .max(self.corollary_loose)
+            .max(self.cutset)
+            .max(self.genie)
+            .max(0) as u64
+    }
+
+    pub fn as_array(&self) -> [i64; 4] {
+        [
+            self.corollary_tight,
+            self.corollary_loose,
+            self.cutset,
+            self.genie,
+        ]
+    }
+}
+
+/// Compute all four bounds (half-units, possibly negative when vacuous).
+pub fn bounds_half(p: &Params3) -> Bounds {
+    let ([m1, _, _], _) = p.sorted();
+    let n = p.n as i64;
+    let m = p.total() as i64;
+    let m1 = m1 as i64;
+    Bounds {
+        // 2L >= 7N − 3M, derivable only while ΣS_k >= 2N − M is forced,
+        // i.e. M <= 2N; otherwise fall back to the loose corollary.
+        corollary_tight: if m <= 2 * n { 7 * n - 3 * m } else { 3 * n - m },
+        corollary_loose: 3 * n - m,
+        cutset: 2 * (n - m1),
+        genie: 2 * (3 * n - m - m1),
+    }
+}
+
+/// Best (largest) converse bound in IV units.
+pub fn best_bound(p: &Params3) -> f64 {
+    bounds_half(p).max_half() as f64 / 2.0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop;
+    use crate::theory::load::{lstar_half, uncoded_half};
+
+    fn p(m1: u64, m2: u64, m3: u64, n: u64) -> Params3 {
+        Params3::new(m1, m2, m3, n).unwrap()
+    }
+
+    #[test]
+    fn paper_example_converse_is_tight() {
+        let params = p(6, 7, 7, 12);
+        let b = bounds_half(&params);
+        // 2L bounds: 7*12-3*20 = 24; 36-20 = 16; 2*(12-6)=12; 2*(36-20-6)=20.
+        assert_eq!(b.corollary_tight, 24);
+        assert_eq!(b.corollary_loose, 16);
+        assert_eq!(b.cutset, 12);
+        assert_eq!(b.genie, 20);
+        assert_eq!(b.max_half(), 24);
+        assert_eq!(lstar_half(&params), 24);
+    }
+
+    #[test]
+    fn r7_cutset_active() {
+        let params = p(5, 11, 11, 12); // R7: L* = N - M1 = 7
+        let b = bounds_half(&params);
+        assert_eq!(b.cutset, 14);
+        assert_eq!(b.max_half(), 14);
+        assert_eq!(lstar_half(&params), 14);
+    }
+
+    #[test]
+    fn r4_genie_active() {
+        let params = p(2, 3, 12, 12); // R4: L* = 3N - (M+M1) = 17
+        let b = bounds_half(&params);
+        assert_eq!(b.genie, 34);
+        assert_eq!(b.max_half(), 34);
+        assert_eq!(lstar_half(&params), 34);
+    }
+
+    #[test]
+    fn prop_lstar_equals_max_of_bounds() {
+        // The structural heart of Theorem 1: achievability meets the best
+        // of the four converse bounds at EVERY valid parameter point.
+        prop::run("L* == max(converse bounds)", 2000, |g| {
+            let n = g.u64_in(1..=50);
+            let m1 = g.u64_in(1..=n);
+            let m2 = g.u64_in(1..=n);
+            let m3 = g.u64_in(1..=n);
+            let Ok(params) = Params3::new(m1, m2, m3, n) else {
+                return Ok(());
+            };
+            let ls = lstar_half(&params);
+            let cv = bounds_half(&params).max_half();
+            prop::check(ls == cv, format!("{params}: L*half={ls} converse={cv}"))
+        });
+    }
+
+    #[test]
+    fn prop_bounds_never_exceed_uncoded() {
+        prop::run("bounds <= uncoded", 500, |g| {
+            let n = g.u64_in(1..=40);
+            let m1 = g.u64_in(1..=n);
+            let m2 = g.u64_in(1..=n);
+            let m3 = g.u64_in(1..=n);
+            let Ok(params) = Params3::new(m1, m2, m3, n) else {
+                return Ok(());
+            };
+            let cv = bounds_half(&params).max_half();
+            prop::check(
+                cv <= uncoded_half(&params),
+                format!("{params}: converse {cv} > uncoded {}", uncoded_half(&params)),
+            )
+        });
+    }
+}

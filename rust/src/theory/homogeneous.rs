@@ -1,0 +1,100 @@
+//! Homogeneous-system baseline: Li–Maddah-Ali–Avestimehr [2].
+//!
+//! For `K` nodes each storing `rN/K` files (computation load `r`), the
+//! optimal total shuffle load with `Q = K` function groups is
+//! `L_hom(r) = N (K − r) / r` IV equations (the paper's normalized
+//! `(1/r)(1 − r/K)` times `NK`). Remark 2: Theorem 1 with `M1=M2=M3`
+//! reduces to this curve at integer `r`, with the lower convex envelope
+//! (memory sharing) in between.
+
+use super::params::Params3;
+
+/// Total shuffle load (IV units) of the homogeneous CDC scheme at integer
+/// computation load `r` on `K` nodes and `N` files.
+pub fn load_at_r(k: u64, r: u64, n: u64) -> f64 {
+    assert!(r >= 1 && r <= k, "computation load r in [1, K]");
+    n as f64 * (k - r) as f64 / r as f64
+}
+
+/// Memory-sharing lower convex envelope of `load_at_r` at real-valued
+/// `r = KM/(KN)·K = M/N` — the homogeneous optimum for arbitrary storage.
+pub fn load_envelope(k: u64, r: f64, n: u64) -> f64 {
+    assert!(r >= 1.0 - 1e-12 && r <= k as f64 + 1e-12);
+    let lo = r.floor().clamp(1.0, k as f64) as u64;
+    let hi = r.ceil().clamp(1.0, k as f64) as u64;
+    if lo == hi {
+        return load_at_r(k, lo, n);
+    }
+    let w = r - lo as f64;
+    (1.0 - w) * load_at_r(k, lo, n) + w * load_at_r(k, hi, n)
+}
+
+/// Remark 2 check helper: the heterogeneous `L*` at `M1=M2=M3=M` equals
+/// the homogeneous envelope at `r = 3M/N`.
+pub fn matches_remark2(m: u64, n: u64) -> bool {
+    let Ok(p) = Params3::new(m, m, m, n) else {
+        return true;
+    };
+    let r = 3.0 * m as f64 / n as f64;
+    if !(1.0..=3.0).contains(&r) {
+        return true;
+    }
+    (crate::theory::load::lstar(&p) - load_envelope(3, r, n)).abs() < 1e-9
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop;
+    use crate::theory::load::lstar;
+
+    #[test]
+    fn integer_r_values() {
+        // K=3, N=12: r=1 -> 24, r=2 -> 6, r=3 -> 0.
+        assert_eq!(load_at_r(3, 1, 12), 24.0);
+        assert_eq!(load_at_r(3, 2, 12), 6.0);
+        assert_eq!(load_at_r(3, 3, 12), 0.0);
+    }
+
+    #[test]
+    fn envelope_interpolates() {
+        let mid = load_envelope(3, 1.5, 12);
+        assert_eq!(mid, 0.5 * 24.0 + 0.5 * 6.0);
+        assert_eq!(load_envelope(3, 2.0, 12), 6.0);
+    }
+
+    #[test]
+    fn remark2_at_integer_r() {
+        // M=4 (r=1), M=8 (r=2), M=12 (r=3) on N=12.
+        for m in [4u64, 8, 12] {
+            let p = Params3::new(m, m, m, 12).unwrap();
+            let r = 3 * m / 12;
+            assert_eq!(lstar(&p), load_at_r(3, r, 12), "m={m}");
+        }
+    }
+
+    #[test]
+    fn prop_remark2_reduction() {
+        // Heterogeneous Theorem 1 at equal storage == homogeneous envelope.
+        prop::run("Remark 2", 300, |g| {
+            let n = g.u64_in(3..=60);
+            let m = g.u64_in(1..=n);
+            if 3 * m < n {
+                return Ok(()); // cannot cover N
+            }
+            prop::check(matches_remark2(m, n), format!("m={m} n={n}"))
+        });
+    }
+
+    #[test]
+    fn coding_gain_is_r() {
+        // CDC reduces the uncoded load N(K-r) by exactly factor r.
+        for k in 2..=6u64 {
+            for r in 1..=k {
+                let n = 120;
+                let uncoded = (n * (k - r)) as f64;
+                assert!((load_at_r(k, r, n) * r as f64 - uncoded).abs() < 1e-9);
+            }
+        }
+    }
+}

@@ -1,0 +1,21 @@
+//! Closed-form theory of the paper: Theorem 1 (K=3 minimum communication
+//! load), the §IV converse bounds, the uncoded baseline, and the
+//! homogeneous-system results of Li–Maddah-Ali–Avestimehr [2] that Remark 2
+//! reduces to.
+//!
+//! ## Units
+//!
+//! All loads are measured as in the paper: number of intermediate-value
+//! *equations* broadcast during the Shuffle phase, normalized by `T` (one
+//! unit = one IV worth of bits), with `Q = K` reduce-function groups.
+//! Because Theorem 1's expressions contain halves (e.g. `7N/2 − 3M/2`),
+//! the exact integer API works in **half-units** (`*_half` functions return
+//! `2·L`); `f64` accessors divide by two for display.
+
+pub mod converse;
+pub mod homogeneous;
+pub mod load;
+pub mod params;
+
+pub use load::{classify, lstar, lstar_half, uncoded, uncoded_half, Regime};
+pub use params::Params3;

@@ -1,0 +1,154 @@
+//! Problem parameters `P = (M_1, .., M_K, N)` of the CDC system model (§II).
+
+use std::fmt;
+
+/// K=3 problem instance. Storage sizes are in files; `m` is kept in the
+/// caller's node order (the theory sorts internally, per the paper's WLOG
+/// `M1 <= M2 <= M3`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct Params3 {
+    pub m: [u64; 3],
+    pub n: u64,
+}
+
+impl Params3 {
+    pub fn new(m1: u64, m2: u64, m3: u64, n: u64) -> Result<Self, String> {
+        let p = Self { m: [m1, m2, m3], n };
+        p.validate()?;
+        Ok(p)
+    }
+
+    /// System-model constraints: every node stores something, no node
+    /// stores more than everything, and all files fit somewhere
+    /// (`∪_k M_k = N` requires `ΣM_k >= N`).
+    pub fn validate(&self) -> Result<(), String> {
+        if self.n == 0 {
+            return Err("N must be positive".into());
+        }
+        for (k, &mk) in self.m.iter().enumerate() {
+            if mk == 0 {
+                return Err(format!("M{} must be positive", k + 1));
+            }
+            if mk > self.n {
+                return Err(format!("M{} = {} exceeds N = {}", k + 1, mk, self.n));
+            }
+        }
+        if self.total() < self.n {
+            return Err(format!(
+                "sum of storage {} cannot cover N = {}",
+                self.total(),
+                self.n
+            ));
+        }
+        Ok(())
+    }
+
+    pub fn total(&self) -> u64 {
+        self.m.iter().sum()
+    }
+
+    /// Sorted storage `(m1 <= m2 <= m3)` plus the permutation `perm` such
+    /// that `sorted[i] = self.m[perm[i]]` (used to un-permute placements).
+    pub fn sorted(&self) -> ([u64; 3], [usize; 3]) {
+        let mut idx = [0usize, 1, 2];
+        idx.sort_by_key(|&i| self.m[i]);
+        let sorted = [self.m[idx[0]], self.m[idx[1]], self.m[idx[2]]];
+        (sorted, idx)
+    }
+
+    pub fn is_homogeneous(&self) -> bool {
+        self.m[0] == self.m[1] && self.m[1] == self.m[2]
+    }
+}
+
+impl fmt::Display for Params3 {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "(M1,M2,M3,N)=({},{},{},{})",
+            self.m[0], self.m[1], self.m[2], self.n
+        )
+    }
+}
+
+/// General-K problem instance for the §V algorithm.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ParamsK {
+    pub m: Vec<u64>,
+    pub n: u64,
+}
+
+impl ParamsK {
+    pub fn new(m: Vec<u64>, n: u64) -> Result<Self, String> {
+        if m.len() < 2 {
+            return Err("need at least 2 nodes".into());
+        }
+        if n == 0 {
+            return Err("N must be positive".into());
+        }
+        for (k, &mk) in m.iter().enumerate() {
+            if mk == 0 || mk > n {
+                return Err(format!("M{} = {} out of range (0, N={}]", k + 1, mk, n));
+            }
+        }
+        if m.iter().sum::<u64>() < n {
+            return Err("sum of storage cannot cover N".into());
+        }
+        Ok(Self { m, n })
+    }
+
+    pub fn k(&self) -> usize {
+        self.m.len()
+    }
+
+    pub fn total(&self) -> u64 {
+        self.m.iter().sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accepts_paper_example() {
+        let p = Params3::new(6, 7, 7, 12).unwrap();
+        assert_eq!(p.total(), 20);
+        assert!(!p.is_homogeneous());
+    }
+
+    #[test]
+    fn rejects_invalid() {
+        assert!(Params3::new(0, 1, 1, 3).is_err()); // zero storage
+        assert!(Params3::new(5, 1, 1, 4).is_err()); // M1 > N
+        assert!(Params3::new(1, 1, 1, 9).is_err()); // cannot cover N
+        assert!(Params3::new(1, 1, 1, 0).is_err()); // N = 0
+    }
+
+    #[test]
+    fn sorted_returns_permutation() {
+        let p = Params3::new(7, 6, 9, 12).unwrap();
+        let (s, perm) = p.sorted();
+        assert_eq!(s, [6, 7, 9]);
+        assert_eq!(perm, [1, 0, 2]);
+        for i in 0..3 {
+            assert_eq!(s[i], p.m[perm[i]]);
+        }
+    }
+
+    #[test]
+    fn sorted_is_stable_for_ties() {
+        let p = Params3::new(7, 7, 6, 12).unwrap();
+        let (s, perm) = p.sorted();
+        assert_eq!(s, [6, 7, 7]);
+        assert_eq!(perm, [2, 0, 1]);
+    }
+
+    #[test]
+    fn params_k_validation() {
+        assert!(ParamsK::new(vec![2, 3, 4, 5], 10).is_ok());
+        assert!(ParamsK::new(vec![2], 2).is_err());
+        assert!(ParamsK::new(vec![2, 0, 4], 10).is_err());
+        assert!(ParamsK::new(vec![1, 1, 1, 1], 10).is_err());
+    }
+}

@@ -1,0 +1,192 @@
+//! Tiny argument-parsing substrate (no `clap` in the offline build).
+//!
+//! Supports subcommands, `--flag`, `--key value` / `--key=value`, and
+//! positional arguments, with typed getters and generated usage text.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone)]
+pub struct ArgSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub takes_value: bool,
+    pub default: Option<&'static str>,
+}
+
+#[derive(Debug, Default)]
+pub struct Args {
+    values: BTreeMap<String, String>,
+    flags: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+#[derive(Debug)]
+pub struct CliError(pub String);
+
+impl std::fmt::Display for CliError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for CliError {}
+
+impl Args {
+    /// Parse `argv` against `specs`. Unknown `--options` are errors.
+    pub fn parse(argv: &[String], specs: &[ArgSpec]) -> Result<Args, CliError> {
+        let mut args = Args::default();
+        for spec in specs {
+            if let (true, Some(d)) = (spec.takes_value, spec.default) {
+                args.values.insert(spec.name.to_string(), d.to_string());
+            }
+        }
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(stripped) = a.strip_prefix("--") {
+                let (name, inline) = match stripped.split_once('=') {
+                    Some((n, v)) => (n.to_string(), Some(v.to_string())),
+                    None => (stripped.to_string(), None),
+                };
+                let spec = specs
+                    .iter()
+                    .find(|s| s.name == name)
+                    .ok_or_else(|| CliError(format!("unknown option --{name}")))?;
+                if spec.takes_value {
+                    let val = match inline {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            argv.get(i)
+                                .cloned()
+                                .ok_or_else(|| CliError(format!("--{name} needs a value")))?
+                        }
+                    };
+                    args.values.insert(name, val);
+                } else {
+                    if inline.is_some() {
+                        return Err(CliError(format!("--{name} takes no value")));
+                    }
+                    args.flags.push(name);
+                }
+            } else {
+                args.positional.push(a.clone());
+            }
+            i += 1;
+        }
+        Ok(args)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.values.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_usize(&self, name: &str) -> Result<usize, CliError> {
+        self.req(name)?
+            .parse()
+            .map_err(|_| CliError(format!("--{name} expects an integer")))
+    }
+
+    pub fn get_u64(&self, name: &str) -> Result<u64, CliError> {
+        self.req(name)?
+            .parse()
+            .map_err(|_| CliError(format!("--{name} expects an integer")))
+    }
+
+    pub fn get_f64(&self, name: &str) -> Result<f64, CliError> {
+        self.req(name)?
+            .parse()
+            .map_err(|_| CliError(format!("--{name} expects a number")))
+    }
+
+    /// Parse a comma-separated list of integers, e.g. `--storage 6,7,7`.
+    pub fn get_u64_list(&self, name: &str) -> Result<Vec<u64>, CliError> {
+        self.req(name)?
+            .split(',')
+            .map(|s| {
+                s.trim()
+                    .parse()
+                    .map_err(|_| CliError(format!("--{name}: bad integer '{s}'")))
+            })
+            .collect()
+    }
+
+    fn req(&self, name: &str) -> Result<&str, CliError> {
+        self.get(name)
+            .ok_or_else(|| CliError(format!("missing required option --{name}")))
+    }
+}
+
+pub fn usage(program: &str, about: &str, specs: &[ArgSpec]) -> String {
+    let mut s = format!("{about}\n\nUsage: {program} [options]\n\nOptions:\n");
+    for spec in specs {
+        let val = if spec.takes_value { " <value>" } else { "" };
+        let default = spec
+            .default
+            .map(|d| format!(" [default: {d}]"))
+            .unwrap_or_default();
+        s.push_str(&format!("  --{}{val}\n      {}{default}\n", spec.name, spec.help));
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn specs() -> Vec<ArgSpec> {
+        vec![
+            ArgSpec { name: "n", help: "files", takes_value: true, default: Some("12") },
+            ArgSpec { name: "storage", help: "per-node", takes_value: true, default: None },
+            ArgSpec { name: "verbose", help: "log more", takes_value: false, default: None },
+        ]
+    }
+
+    fn sv(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = Args::parse(&[], &specs()).unwrap();
+        assert_eq!(a.get_usize("n").unwrap(), 12);
+        assert!(!a.flag("verbose"));
+    }
+
+    #[test]
+    fn parses_values_flags_positional() {
+        let a = Args::parse(&sv(&["--n", "20", "--verbose", "pos1", "--storage=6,7,7"]), &specs()).unwrap();
+        assert_eq!(a.get_usize("n").unwrap(), 20);
+        assert!(a.flag("verbose"));
+        assert_eq!(a.positional, vec!["pos1"]);
+        assert_eq!(a.get_u64_list("storage").unwrap(), vec![6, 7, 7]);
+    }
+
+    #[test]
+    fn unknown_option_is_error() {
+        assert!(Args::parse(&sv(&["--bogus"]), &specs()).is_err());
+    }
+
+    #[test]
+    fn missing_value_is_error() {
+        assert!(Args::parse(&sv(&["--n"]), &specs()).is_err());
+        let a = Args::parse(&[], &specs()).unwrap();
+        assert!(a.get_u64_list("storage").is_err());
+    }
+
+    #[test]
+    fn bad_integer_is_error() {
+        let a = Args::parse(&sv(&["--n", "xyz"]), &specs()).unwrap();
+        assert!(a.get_usize("n").is_err());
+    }
+
+    #[test]
+    fn usage_mentions_options() {
+        let u = usage("hetcdc", "about", &specs());
+        assert!(u.contains("--n") && u.contains("--storage") && u.contains("--verbose"));
+    }
+}

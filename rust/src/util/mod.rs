@@ -1,0 +1,11 @@
+//! From-scratch substrates: PRNG, JSON, CLI parsing, logging, statistics.
+//!
+//! The offline build vendors only the `xla` crate closure, so everything a
+//! typical project would pull from `rand`/`serde`/`clap`/`log` is
+//! implemented (and tested) here.
+
+pub mod cli;
+pub mod json;
+pub mod logging;
+pub mod rng;
+pub mod stats;

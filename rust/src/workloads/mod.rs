@@ -1,0 +1,53 @@
+//! Workload generators and native (oracle) Map/Reduce implementations.
+//!
+//! Data is generated **per subfile, deterministically from (seed, subfile
+//! id)** so every node that stores a subfile materializes identical bytes
+//! without any coordination — exactly how a distributed FS replica would
+//! behave, with no network cost attributed to input loading.
+
+pub mod terasort;
+pub mod wordcount;
+
+use crate::model::job::{JobSpec, WorkloadKind};
+
+/// Native Map: compute all Q groups' IVs for one subfile.
+/// Returns `q` payloads of `t` 4-byte elements each (little-endian bytes).
+pub fn native_map(job: &JobSpec, q: usize, sub: usize) -> Vec<Vec<u8>> {
+    match job.workload {
+        WorkloadKind::WordCount => wordcount::map_subfile(job, q, sub),
+        WorkloadKind::TeraSort => terasort::map_subfile(job, q, sub),
+    }
+}
+
+/// Native Reduce oracle: group `g`'s final output over all `n_sub`
+/// subfiles (f32 accumulation for WordCount, i64 exact for TeraSort,
+/// both surfaced as f64 for comparison).
+pub fn native_reduce_oracle(job: &JobSpec, q: usize, g: usize, n_sub: usize) -> Vec<f64> {
+    match job.workload {
+        WorkloadKind::WordCount => wordcount::reduce_oracle(job, q, g, n_sub),
+        WorkloadKind::TeraSort => terasort::reduce_oracle(job, q, g, n_sub),
+    }
+}
+
+/// All groups' oracle outputs in one Map pass (what the engine's per-run
+/// verification uses — one pass instead of `q`).
+pub fn native_reduce_oracle_all(job: &JobSpec, q: usize, n_sub: usize) -> Vec<Vec<f64>> {
+    match job.workload {
+        WorkloadKind::WordCount => wordcount::reduce_oracle_all(job, q, n_sub),
+        WorkloadKind::TeraSort => terasort::reduce_oracle_all(job, q, n_sub),
+    }
+}
+
+/// Decode an IV payload into f64s for verification.
+pub fn decode_payload(job: &JobSpec, bytes: &[u8]) -> Vec<f64> {
+    match job.workload {
+        WorkloadKind::WordCount => bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()) as f64)
+            .collect(),
+        WorkloadKind::TeraSort => bytes
+            .chunks_exact(4)
+            .map(|c| i32::from_le_bytes(c.try_into().unwrap()) as f64)
+            .collect(),
+    }
+}

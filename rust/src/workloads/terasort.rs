@@ -1,0 +1,166 @@
+//! TeraSort range-partition workload (the CodedTeraSort experiment [10]).
+//!
+//! Each subfile holds `keys_per_file` uniform u32 keys. The key space is
+//! range-partitioned into `Q` reducer ranges of `T` sub-buckets each
+//! (`QT` splitters total); Map counts the subfile's keys per sub-bucket —
+//! those per-reducer count vectors are the shuffled IVs, and Reduce merges
+//! them into reducer `q`'s slice of the global key histogram (the
+//! splitter-refinement stage of a production sort).
+
+use crate::model::job::JobSpec;
+use crate::util::rng::Xoshiro256;
+
+/// Key space: 30-bit keys so keys AND bucket bounds are exactly
+/// representable as the i32 the `map_histogram` XLA artifact consumes.
+pub const KEY_BITS: u32 = 30;
+pub const KEY_SPACE: u64 = 1 << KEY_BITS;
+
+/// Deterministic keys of a subfile.
+pub fn keys(job: &JobSpec, sub: usize) -> Vec<u32> {
+    let mut rng = Xoshiro256::seed_from_u64(job.seed ^ (0xFEED + sub as u64 * 0x9E37_79B9));
+    (0..job.keys_per_file)
+        .map(|_| rng.next_u32() >> (32 - KEY_BITS))
+        .collect()
+}
+
+/// Bucket boundaries: `q*t + 1` uniform splitters over the key space.
+pub fn bounds(job: &JobSpec, q: usize) -> Vec<u32> {
+    let buckets = (q * job.t) as u64;
+    (0..=buckets)
+        .map(|i| ((i * KEY_SPACE) / buckets) as u32)
+        .collect()
+}
+
+/// Bucket index of one key (uniform splitters allow direct computation).
+fn bucket_of(key: u32, buckets: u64) -> usize {
+    ((key as u64 * buckets) >> KEY_BITS) as usize
+}
+
+/// Native Map: per-group count vectors (i32 LE payloads of length `t`).
+pub fn map_subfile(job: &JobSpec, q: usize, sub: usize) -> Vec<Vec<u8>> {
+    let t = job.t;
+    let buckets = (q * t) as u64;
+    let mut counts = vec![0i32; q * t];
+    for key in keys(job, sub) {
+        counts[bucket_of(key, buckets)] += 1;
+    }
+    (0..q)
+        .map(|g| {
+            let mut payload = Vec::with_capacity(t * 4);
+            for &c in &counts[g * t..(g + 1) * t] {
+                payload.extend_from_slice(&c.to_le_bytes());
+            }
+            payload
+        })
+        .collect()
+}
+
+/// Oracle Reduce for group `g`: exact global counts of its `t` buckets.
+pub fn reduce_oracle(job: &JobSpec, q: usize, g: usize, n_sub: usize) -> Vec<f64> {
+    std::mem::take(&mut reduce_oracle_all(job, q, n_sub)[g])
+}
+
+/// Oracle Reduce for ALL groups in one Map pass (see wordcount's
+/// counterpart; avoids q× recomputation during verification).
+pub fn reduce_oracle_all(job: &JobSpec, q: usize, n_sub: usize) -> Vec<Vec<f64>> {
+    let mut acc = vec![vec![0i64; job.t]; q];
+    for sub in 0..n_sub {
+        let ivs = map_subfile(job, q, sub);
+        for (g, payload) in ivs.iter().enumerate() {
+            for (a, chunk) in acc[g].iter_mut().zip(payload.chunks_exact(4)) {
+                *a += i32::from_le_bytes(chunk.try_into().unwrap()) as i64;
+            }
+        }
+    }
+    acc.into_iter()
+        .map(|v| v.into_iter().map(|x| x as f64).collect())
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn job() -> JobSpec {
+        let mut j = JobSpec::terasort(4);
+        j.t = 8;
+        j.keys_per_file = 64;
+        j
+    }
+
+    #[test]
+    fn keys_deterministic_per_subfile() {
+        let j = job();
+        assert_eq!(keys(&j, 0), keys(&j, 0));
+        assert_ne!(keys(&j, 0), keys(&j, 1));
+        assert_eq!(keys(&j, 0).len(), 64);
+    }
+
+    #[test]
+    fn bounds_cover_key_space_and_fit_i32() {
+        let j = job();
+        let b = bounds(&j, 3);
+        assert_eq!(b.len(), 25);
+        assert_eq!(b[0], 0);
+        assert_eq!(*b.last().unwrap(), KEY_SPACE as u32);
+        assert!(b.windows(2).all(|w| w[0] < w[1]));
+        assert!(b.iter().all(|&x| x <= i32::MAX as u32));
+    }
+
+    #[test]
+    fn map_counts_every_key_once() {
+        let j = job();
+        let ivs = map_subfile(&j, 3, 2);
+        let total: i64 = ivs
+            .iter()
+            .flat_map(|p| p.chunks_exact(4))
+            .map(|c| i32::from_le_bytes(c.try_into().unwrap()) as i64)
+            .sum();
+        assert_eq!(total, j.keys_per_file as i64);
+    }
+
+    #[test]
+    fn map_matches_bucket_of() {
+        let j = job();
+        let ks = keys(&j, 0);
+        let buckets = (3 * j.t) as u64;
+        let mut want = vec![0i32; 3 * j.t];
+        for k in ks {
+            want[bucket_of(k, buckets)] += 1;
+        }
+        let ivs = map_subfile(&j, 3, 0);
+        for g in 0..3 {
+            let got: Vec<i32> = ivs[g]
+                .chunks_exact(4)
+                .map(|c| i32::from_le_bytes(c.try_into().unwrap()))
+                .collect();
+            assert_eq!(got, want[g * j.t..(g + 1) * j.t]);
+        }
+    }
+
+    #[test]
+    fn reduce_oracle_totals_all_keys() {
+        let j = job();
+        let n_sub = 6;
+        let total: f64 = (0..3)
+            .flat_map(|g| reduce_oracle(&j, 3, g, n_sub))
+            .sum();
+        assert_eq!(total, (n_sub * j.keys_per_file) as f64);
+    }
+
+    #[test]
+    fn bucket_distribution_roughly_uniform() {
+        let mut j = job();
+        j.keys_per_file = 4096;
+        let ivs = map_subfile(&j, 2, 0);
+        let counts: Vec<i32> = ivs
+            .iter()
+            .flat_map(|p| p.chunks_exact(4))
+            .map(|c| i32::from_le_bytes(c.try_into().unwrap()))
+            .collect();
+        let expect = 4096.0 / counts.len() as f64;
+        for &c in &counts {
+            assert!((c as f64) < 3.0 * expect, "bucket count {c} vs mean {expect}");
+        }
+    }
+}

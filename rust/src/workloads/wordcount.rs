@@ -1,0 +1,169 @@
+//! WordCount / feature-projection workload.
+//!
+//! Each subfile is a bag of `D_TOKENS` zipf-distributed tokens over a
+//! vocabulary of `V`; its raw representation is the token-count vector
+//! `counts ∈ R^V`. The Map functions (eq. (1)'s `g_{q,n}`) are rows of a
+//! fixed random projection `W ∈ R^{QT×V}`: `IV_{q,n} = W_q · counts_n`,
+//! computed natively here (oracle) or via the `map_project` XLA artifact
+//! (runtime path). Reduce (`h_q`) sums IVs across files — the linearity
+//! the pipeline-invariant tests rely on.
+
+use crate::model::job::JobSpec;
+use crate::util::rng::{Xoshiro256, Zipf};
+
+/// Tokens drawn per subfile.
+pub const D_TOKENS: usize = 512;
+/// Zipf skew of the synthetic corpus.
+pub const ZIPF_S: f64 = 1.1;
+
+/// Deterministic token-count vector of a subfile (length `vocab`).
+pub fn counts(job: &JobSpec, sub: usize) -> Vec<f32> {
+    let mut rng = Xoshiro256::seed_from_u64(job.seed ^ (0x9E37 + sub as u64 * 0x1234_5677));
+    let zipf = zipf_table(job.vocab);
+    let mut c = vec![0f32; job.vocab];
+    for _ in 0..D_TOKENS {
+        c[zipf.sample(&mut rng)] += 1.0;
+    }
+    c
+}
+
+/// Shared Zipf CDF per vocabulary size (rebuilding the table per subfile
+/// showed up in the Map-phase profile).
+fn zipf_table(vocab: usize) -> std::sync::Arc<Zipf> {
+    use std::collections::HashMap;
+    use std::sync::{Arc, Mutex, OnceLock};
+    static CACHE: OnceLock<Mutex<HashMap<usize, Arc<Zipf>>>> = OnceLock::new();
+    let cache = CACHE.get_or_init(|| Mutex::new(HashMap::new()));
+    if let Some(z) = cache.lock().unwrap().get(&vocab) {
+        return z.clone();
+    }
+    let z = Arc::new(Zipf::new(vocab, ZIPF_S));
+    cache.lock().unwrap().insert(vocab, z.clone());
+    z
+}
+
+/// Deterministic projection matrix `W` of shape `(q*t, vocab)`, row-major.
+/// Entries are small signed integers over 8 (exactly representable in f32)
+/// so Rust-native and XLA matmuls agree to float round-off only.
+///
+/// Cached per `(seed, q, t, vocab)`: the Map hot loop calls this once per
+/// subfile and regenerating 24k+ PRNG draws per call dominated the
+/// WordCount profile (see EXPERIMENTS.md §Perf).
+pub fn projection(job: &JobSpec, q: usize) -> std::sync::Arc<Vec<f32>> {
+    use std::collections::HashMap;
+    use std::sync::{Arc, Mutex, OnceLock};
+    type Key = (u64, usize, usize, usize);
+    static CACHE: OnceLock<Mutex<HashMap<Key, Arc<Vec<f32>>>>> = OnceLock::new();
+    let key = (job.seed, q, job.t, job.vocab);
+    let cache = CACHE.get_or_init(|| Mutex::new(HashMap::new()));
+    if let Some(w) = cache.lock().unwrap().get(&key) {
+        return w.clone();
+    }
+    let rows = q * job.t;
+    let mut rng = Xoshiro256::seed_from_u64(job.seed ^ 0xBEEF);
+    let w: Arc<Vec<f32>> = Arc::new(
+        (0..rows * job.vocab)
+            .map(|_| (rng.gen_range(17) as f32 - 8.0) / 8.0)
+            .collect(),
+    );
+    cache.lock().unwrap().insert(key, w.clone());
+    w
+}
+
+/// Native Map for one subfile: all `q` groups' IVs (f32 LE payloads).
+pub fn map_subfile(job: &JobSpec, q: usize, sub: usize) -> Vec<Vec<u8>> {
+    let c = counts(job, sub);
+    let w = projection(job, q);
+    let t = job.t;
+    let mut out = Vec::with_capacity(q);
+    for g in 0..q {
+        let mut payload = Vec::with_capacity(t * 4);
+        for row in 0..t {
+            let wrow = &w[((g * t + row) * job.vocab)..((g * t + row + 1) * job.vocab)];
+            let dot: f32 = wrow.iter().zip(&c).map(|(a, b)| a * b).sum();
+            payload.extend_from_slice(&dot.to_le_bytes());
+        }
+        out.push(payload);
+    }
+    out
+}
+
+/// Oracle Reduce for group `g`: sum of its IVs over all subfiles.
+pub fn reduce_oracle(job: &JobSpec, q: usize, g: usize, n_sub: usize) -> Vec<f64> {
+    std::mem::take(&mut reduce_oracle_all(job, q, n_sub)[g])
+}
+
+/// Oracle Reduce for ALL groups in one Map pass (the engine verifies every
+/// node per run; per-group recomputation tripled verification cost —
+/// EXPERIMENTS.md §Perf).
+pub fn reduce_oracle_all(job: &JobSpec, q: usize, n_sub: usize) -> Vec<Vec<f64>> {
+    let mut acc = vec![vec![0f64; job.t]; q];
+    for sub in 0..n_sub {
+        let ivs = map_subfile(job, q, sub);
+        for (g, payload) in ivs.iter().enumerate() {
+            for (a, chunk) in acc[g].iter_mut().zip(payload.chunks_exact(4)) {
+                *a += f32::from_le_bytes(chunk.try_into().unwrap()) as f64;
+            }
+        }
+    }
+    acc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn job() -> JobSpec {
+        let mut j = JobSpec::wordcount(4);
+        j.t = 8;
+        j.vocab = 32;
+        j
+    }
+
+    #[test]
+    fn counts_are_deterministic_and_total_d() {
+        let j = job();
+        let a = counts(&j, 3);
+        let b = counts(&j, 3);
+        assert_eq!(a, b);
+        assert_eq!(a.iter().sum::<f32>(), D_TOKENS as f32);
+        let c = counts(&j, 4);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn map_produces_q_payloads_of_t_words() {
+        let j = job();
+        let ivs = map_subfile(&j, 3, 0);
+        assert_eq!(ivs.len(), 3);
+        assert!(ivs.iter().all(|p| p.len() == j.t * 4));
+    }
+
+    #[test]
+    fn map_matches_direct_projection() {
+        let j = job();
+        let c = counts(&j, 1);
+        let w = projection(&j, 3);
+        let ivs = map_subfile(&j, 3, 1);
+        // Check group 2, row 5 by hand.
+        let (g, row) = (2usize, 5usize);
+        let wrow = &w[((g * j.t + row) * j.vocab)..((g * j.t + row + 1) * j.vocab)];
+        let want: f32 = wrow.iter().zip(&c).map(|(a, b)| a * b).sum();
+        let got = f32::from_le_bytes(ivs[g][row * 4..row * 4 + 4].try_into().unwrap());
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn reduce_oracle_is_sum_of_maps() {
+        let j = job();
+        let oracle = reduce_oracle(&j, 3, 1, 4);
+        let mut acc = vec![0f64; j.t];
+        for sub in 0..4 {
+            let ivs = map_subfile(&j, 3, sub);
+            for (a, chunk) in acc.iter_mut().zip(ivs[1].chunks_exact(4)) {
+                *a += f32::from_le_bytes(chunk.try_into().unwrap()) as f64;
+            }
+        }
+        assert_eq!(oracle, acc);
+    }
+}

@@ -1,0 +1,148 @@
+//! CLI integration: spawn the real `hetcdc` binary and check its output
+//! contracts (exit codes, numbers, JSON mode, config files, help).
+
+use std::process::Command;
+
+fn hetcdc(args: &[&str]) -> (i32, String, String) {
+    let out = Command::new(env!("CARGO_BIN_EXE_hetcdc"))
+        .args(args)
+        .output()
+        .expect("spawn hetcdc");
+    (
+        out.status.code().unwrap_or(-1),
+        String::from_utf8_lossy(&out.stdout).to_string(),
+        String::from_utf8_lossy(&out.stderr).to_string(),
+    )
+}
+
+#[test]
+fn help_lists_subcommands() {
+    let (code, stdout, _) = hetcdc(&["--help"]);
+    assert_eq!(code, 0);
+    for sub in ["loadstar", "place", "lp", "run", "sweep", "info"] {
+        assert!(stdout.contains(sub), "help missing '{sub}'");
+    }
+}
+
+#[test]
+fn unknown_subcommand_fails_with_usage() {
+    let (code, stdout, stderr) = hetcdc(&["frobnicate"]);
+    assert_eq!(code, 2);
+    assert!(stderr.contains("unknown subcommand"));
+    assert!(stdout.contains("Usage"));
+}
+
+#[test]
+fn loadstar_paper_example() {
+    let (code, stdout, _) = hetcdc(&["loadstar", "--storage", "6,7,7", "--n", "12"]);
+    assert_eq!(code, 0);
+    assert!(stdout.contains("L* (coded)        12"), "{stdout}");
+    assert!(stdout.contains("uncoded           16"), "{stdout}");
+    assert!(stdout.contains("regime            R2"), "{stdout}");
+}
+
+#[test]
+fn loadstar_rejects_invalid_params() {
+    let (code, _, stderr) = hetcdc(&["loadstar", "--storage", "1,1,1", "--n", "9"]);
+    assert_eq!(code, 1);
+    assert!(stderr.contains("error"));
+}
+
+#[test]
+fn place_prints_subset_sizes() {
+    let (code, stdout, _) = hetcdc(&["place", "--storage", "6,7,7", "--n", "12"]);
+    assert_eq!(code, 0);
+    assert!(stdout.contains("S{1,2}"), "{stdout}");
+    assert!(stdout.contains("achievable load 12"), "{stdout}");
+}
+
+#[test]
+fn lp_matches_theorem1_for_k3() {
+    let (code, stdout, _) = hetcdc(&["lp", "--storage", "6,7,7", "--n", "12"]);
+    assert_eq!(code, 0);
+    assert!(stdout.contains("predicted load  12"), "{stdout}");
+}
+
+#[test]
+fn run_native_both_modes_verifies() {
+    let (code, stdout, _) = hetcdc(&[
+        "run", "--workload", "terasort", "--n", "12", "--storage", "6,7,7",
+        "--mode", "both", "--backend", "native",
+    ]);
+    assert_eq!(code, 0, "{stdout}");
+    assert!(stdout.contains("load 12 IV-equations"), "{stdout}");
+    assert!(stdout.contains("load 16 IV-equations"), "{stdout}");
+    assert!(stdout.contains("verified=true"), "{stdout}");
+}
+
+#[test]
+fn run_json_mode_emits_parseable_reports() {
+    let (code, stdout, _) = hetcdc(&[
+        "run", "--workload", "wordcount", "--n", "12", "--storage", "6,7,7",
+        "--mode", "coded", "--backend", "native", "--json",
+    ]);
+    assert_eq!(code, 0, "{stdout}");
+    let line = stdout.lines().find(|l| l.starts_with('{')).expect("json line");
+    let j = hetcdc::util::json::Json::parse(line).expect("valid json");
+    assert_eq!(j.get("load_equations").and_then(|v| v.as_f64()), Some(12.0));
+    assert_eq!(j.get("verified"), Some(&hetcdc::util::json::Json::Bool(true)));
+    assert_eq!(j.get("mode").and_then(|v| v.as_str()), Some("Coded"));
+}
+
+#[test]
+fn run_with_cluster_config_file() {
+    let dir = std::env::temp_dir().join(format!("hetcdc_cli_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("cluster.json");
+    std::fs::write(
+        &path,
+        r#"{"nodes": [
+            {"name": "a", "storage": 6, "uplink_mbps": 450},
+            {"name": "b", "storage": 7, "uplink_mbps": 750},
+            {"name": "c", "storage": 7, "uplink_mbps": 1000}
+        ], "latency_ms": 0.1}"#,
+    )
+    .unwrap();
+    let (code, stdout, _) = hetcdc(&[
+        "run", "--workload", "terasort", "--n", "12",
+        "--config", path.to_str().unwrap(), "--mode", "coded", "--backend", "native",
+    ]);
+    std::fs::remove_dir_all(&dir).ok();
+    assert_eq!(code, 0, "{stdout}");
+    assert!(stdout.contains("load 12 IV-equations"), "{stdout}");
+}
+
+#[test]
+fn run_oblivious_placement_shows_penalty() {
+    let (code, stdout, _) = hetcdc(&[
+        "run", "--workload", "terasort", "--n", "12", "--storage", "4,8,12",
+        "--mode", "coded", "--backend", "native", "--placement", "oblivious",
+    ]);
+    assert_eq!(code, 0, "{stdout}");
+    assert!(stdout.contains("load 24 IV-equations"), "{stdout}");
+}
+
+#[test]
+fn sweep_emits_markdown_table() {
+    let (code, stdout, _) = hetcdc(&["sweep", "--n", "6", "--step", "3"]);
+    assert_eq!(code, 0);
+    assert!(stdout.contains("| M1 | M2 | M3 |"));
+    assert!(stdout.lines().filter(|l| l.starts_with('|')).count() > 3);
+}
+
+#[test]
+fn bad_config_file_is_a_clean_error() {
+    let (code, _, stderr) = hetcdc(&[
+        "run", "--config", "/nonexistent/cluster.json", "--workload", "terasort",
+    ]);
+    assert_eq!(code, 1);
+    assert!(stderr.contains("error"));
+}
+
+#[test]
+fn verify_subcommand_passes_with_lp() {
+    let (code, stdout, _) = hetcdc(&["verify", "--n", "6", "--lp"]);
+    assert_eq!(code, 0, "{stdout}");
+    assert!(stdout.contains("verify OK"), "{stdout}");
+    assert!(stdout.contains("LP == Theorem 1"), "{stdout}");
+}

@@ -1,0 +1,163 @@
+//! Cross-module integration: placement strategies x shuffle modes x
+//! workloads through the full engine, against theory and each other.
+
+use hetcdc::engine::{Engine, NativeBackend, PlacementStrategy};
+use hetcdc::model::cluster::ClusterSpec;
+use hetcdc::model::job::{JobSpec, ShuffleMode, WorkloadKind};
+use hetcdc::prop;
+use hetcdc::theory::load;
+use hetcdc::theory::params::Params3;
+
+fn cluster(storage: &[u64]) -> ClusterSpec {
+    let mut c = ClusterSpec::homogeneous(storage.len(), 1, 1000.0);
+    for (node, &m) in c.nodes.iter_mut().zip(storage) {
+        node.storage = m;
+    }
+    c
+}
+
+fn small_job(kind: WorkloadKind, n: u64) -> JobSpec {
+    let mut j = match kind {
+        WorkloadKind::WordCount => JobSpec::wordcount(n),
+        WorkloadKind::TeraSort => JobSpec::terasort(n),
+    };
+    j.t = 8;
+    j.vocab = 32;
+    j.keys_per_file = 32;
+    j
+}
+
+#[test]
+fn every_strategy_mode_workload_combination_verifies() {
+    let c3 = cluster(&[6, 7, 7]);
+    let c3h = cluster(&[8, 8, 8]);
+    let cases: Vec<(&ClusterSpec, PlacementStrategy)> = vec![
+        (&c3, PlacementStrategy::OptimalK3),
+        (&c3, PlacementStrategy::LpGeneral),
+        (&c3, PlacementStrategy::Oblivious),
+        (&c3h, PlacementStrategy::Homogeneous),
+    ];
+    for (cl, strategy) in cases {
+        for kind in [WorkloadKind::WordCount, WorkloadKind::TeraSort] {
+            for mode in [ShuffleMode::Coded, ShuffleMode::Uncoded] {
+                let job = small_job(kind, 12);
+                let mut be = NativeBackend;
+                let r = Engine::new(cl, &job, &mut be)
+                    .run(&strategy, mode)
+                    .unwrap_or_else(|e| panic!("{:?} {kind:?} {mode:?}: {e}", strategy.name()));
+                assert!(
+                    r.verified,
+                    "{} {kind:?} {mode:?}: max_abs_err {}",
+                    strategy.name(),
+                    r.max_abs_err
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn strategy_ordering_holds_on_heterogeneous_cluster() {
+    // aware-coded <= aware-uncoded <= oblivious-uncoded; and
+    // aware-coded <= oblivious-coded (heterogeneity awareness helps).
+    let cl = cluster(&[4, 8, 12]);
+    let job = small_job(WorkloadKind::TeraSort, 12);
+    let mut be = NativeBackend;
+    let mut run = |s: &PlacementStrategy, m: ShuffleMode| {
+        Engine::new(&cl, &job, &mut be).run(s, m).unwrap().load_equations
+    };
+    let aware_coded = run(&PlacementStrategy::OptimalK3, ShuffleMode::Coded);
+    let aware_uncoded = run(&PlacementStrategy::OptimalK3, ShuffleMode::Uncoded);
+    let obliv_coded = run(&PlacementStrategy::Oblivious, ShuffleMode::Coded);
+    assert!(aware_coded <= aware_uncoded);
+    assert!(aware_coded <= obliv_coded);
+    let p = Params3::new(4, 8, 12, 12).unwrap();
+    assert_eq!(aware_coded, load::lstar(&p));
+    assert_eq!(aware_uncoded, load::uncoded(&p));
+}
+
+#[test]
+fn lp_and_optimal_k3_agree_on_measured_load() {
+    // Both placements achieve L* for K=3 (Remark 5, end-to-end version).
+    prop::run("LP == optimal-k3 measured", 10, |g| {
+        let n = g.u64_in(2..=8);
+        let m1 = g.u64_in(1..=n);
+        let m2 = g.u64_in(1..=n);
+        let m3 = g.u64_in(1..=n);
+        let Ok(p) = Params3::new(m1, m2, m3, n) else {
+            return Ok(());
+        };
+        let cl = cluster(&[m1, m2, m3]);
+        let job = small_job(WorkloadKind::TeraSort, n);
+        let mut be = NativeBackend;
+        let opt = Engine::new(&cl, &job, &mut be)
+            .run(&PlacementStrategy::OptimalK3, ShuffleMode::Coded)
+            .map_err(|e| format!("{p}: {e}"))?;
+        let lp = Engine::new(&cl, &job, &mut be)
+            .run(&PlacementStrategy::LpGeneral, ShuffleMode::Coded)
+            .map_err(|e| format!("{p}: {e}"))?;
+        // LP-realized placements round to integers; the measured load may
+        // exceed L* by the rounding slack but must stay below uncoded.
+        prop::check(
+            opt.load_equations == load::lstar(&p)
+                && lp.load_equations + 1e-9 >= opt.load_equations
+                && lp.load_equations <= load::uncoded(&p) + 1e-9,
+            format!(
+                "{p}: opt {} lp {} L* {} uncoded {}",
+                opt.load_equations,
+                lp.load_equations,
+                load::lstar(&p),
+                load::uncoded(&p)
+            ),
+        )
+    });
+}
+
+#[test]
+fn wire_overhead_accounting_is_consistent() {
+    let cl = cluster(&[6, 7, 7]);
+    let job = small_job(WorkloadKind::TeraSort, 12);
+    let mut be = NativeBackend;
+    let r = Engine::new(&cl, &job, &mut be)
+        .run(&PlacementStrategy::OptimalK3, ShuffleMode::Coded)
+        .unwrap();
+    assert!(r.wire_bytes > r.payload_bytes);
+    // payload = load_units * iv_bytes (whole-IV plan).
+    assert_eq!(
+        r.payload_bytes,
+        (r.load_equations * r.sp as f64) as u64 * job.iv_bytes() as u64
+    );
+    // Headers: 16 + 12 per part.
+    let min_headers = r.messages * (16 + 12);
+    assert!(r.wire_bytes >= r.payload_bytes + min_headers);
+}
+
+#[test]
+fn report_json_roundtrips() {
+    let cl = cluster(&[6, 7, 7]);
+    let job = small_job(WorkloadKind::WordCount, 12);
+    let mut be = NativeBackend;
+    let r = Engine::new(&cl, &job, &mut be)
+        .run(&PlacementStrategy::OptimalK3, ShuffleMode::Coded)
+        .unwrap();
+    let j = r.to_json();
+    let parsed = hetcdc::util::json::Json::parse(&j.to_string()).unwrap();
+    assert_eq!(parsed.get("load_equations").and_then(|v| v.as_f64()), Some(r.load_equations));
+    assert_eq!(parsed.get("placement").and_then(|v| v.as_str()), Some("optimal-k3"));
+}
+
+#[test]
+fn larger_n_scales_losslessly() {
+    // N = 120 (240 subfiles): measured still equals theory exactly.
+    let cl = cluster(&[60, 70, 70]);
+    let mut job = JobSpec::terasort(120);
+    job.t = 8;
+    job.keys_per_file = 16;
+    let p = Params3::new(60, 70, 70, 120).unwrap();
+    let mut be = NativeBackend;
+    let r = Engine::new(&cl, &job, &mut be)
+        .run(&PlacementStrategy::OptimalK3, ShuffleMode::Coded)
+        .unwrap();
+    assert!(r.verified);
+    assert_eq!(r.load_equations, load::lstar(&p)); // 120
+}

@@ -1,0 +1,198 @@
+//! Live PJRT integration: load the AOT artifacts, execute them, and check
+//! every kernel against the Rust-native oracles; then run the full engine
+//! on the XLA backend. Requires `make artifacts` (skips with a clear
+//! message otherwise).
+
+use hetcdc::engine::{Engine, NativeBackend, PlacementStrategy, XlaBackend};
+use hetcdc::model::cluster::ClusterSpec;
+use hetcdc::model::job::{JobSpec, ShuffleMode};
+use hetcdc::runtime::Runtime;
+use hetcdc::util::rng::Xoshiro256;
+use hetcdc::workloads;
+
+fn runtime() -> Runtime {
+    let dir = Runtime::default_dir();
+    match Runtime::load(&dir) {
+        Ok(rt) => rt,
+        Err(e) => panic!(
+            "artifacts not available at {} — run `make artifacts` first: {e}",
+            dir.display()
+        ),
+    }
+}
+
+#[test]
+fn xor_artifact_matches_native_xor() {
+    let mut rt = runtime();
+    let mut rng = Xoshiro256::seed_from_u64(11);
+    let (rows, cols) = (8usize, 128usize);
+    let a: Vec<i32> = (0..rows * cols).map(|_| rng.next_u64() as i32).collect();
+    let b: Vec<i32> = (0..rows * cols).map(|_| rng.next_u64() as i32).collect();
+    let la = Runtime::lit_i32(&a, &[rows, cols]).unwrap();
+    let lb = Runtime::lit_i32(&b, &[rows, cols]).unwrap();
+    let got = rt.execute_to_i32("xor_blocks", &[la, lb]).unwrap();
+    // Native path XORs the raw bytes.
+    let a_bytes: Vec<u8> = a.iter().flat_map(|x| x.to_le_bytes()).collect();
+    let b_bytes: Vec<u8> = b.iter().flat_map(|x| x.to_le_bytes()).collect();
+    let want_bytes = hetcdc::coding::xor::xor_of(&a_bytes, &b_bytes);
+    let want: Vec<i32> = want_bytes
+        .chunks_exact(4)
+        .map(|c| i32::from_le_bytes(c.try_into().unwrap()))
+        .collect();
+    assert_eq!(got, want, "XLA xor kernel disagrees with Rust hot path");
+}
+
+#[test]
+fn map_histogram_artifact_matches_native_exactly() {
+    let mut rt = runtime();
+    let m = rt.manifest.clone();
+    let mut job = JobSpec::terasort(4);
+    job.t = m.t;
+    job.keys_per_file = m.keys_per_file;
+    let q = m.q;
+    let subs: Vec<usize> = (0..m.map_batch).collect();
+    let native: Vec<Vec<Vec<u8>>> = subs
+        .iter()
+        .map(|&s| workloads::native_map(&job, q, s))
+        .collect();
+    let mut be = XlaBackend::new(&mut rt);
+    use hetcdc::engine::MapBackend;
+    let xla = be.map_subfiles(&job, q, &subs).unwrap();
+    assert_eq!(native, xla, "i32 histogram must be bit-exact");
+}
+
+#[test]
+fn map_project_artifact_matches_native_within_float_tolerance() {
+    let mut rt = runtime();
+    let m = rt.manifest.clone();
+    let mut job = JobSpec::wordcount(4);
+    job.t = m.t;
+    job.vocab = m.vocab;
+    let q = m.q;
+    let subs: Vec<usize> = (0..5).collect(); // exercises padding (5 < 16)
+    let native: Vec<Vec<Vec<u8>>> = subs
+        .iter()
+        .map(|&s| workloads::native_map(&job, q, s))
+        .collect();
+    let mut be = XlaBackend::new(&mut rt);
+    use hetcdc::engine::MapBackend;
+    let xla = be.map_subfiles(&job, q, &subs).unwrap();
+    for (sub, (n, x)) in native.iter().zip(&xla).enumerate() {
+        for g in 0..q {
+            let nf = workloads::decode_payload(&job, &n[g]);
+            let xf = workloads::decode_payload(&job, &x[g]);
+            for (i, (a, b)) in nf.iter().zip(&xf).enumerate() {
+                assert!(
+                    (a - b).abs() <= 1e-3 + 1e-4 * b.abs(),
+                    "sub {sub} group {g} elem {i}: native {a} vs xla {b}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn reduce_sum_artifact_matches_native() {
+    let mut rt = runtime();
+    let m = rt.manifest.clone();
+    let mut job = JobSpec::wordcount(4);
+    job.t = m.t;
+    job.vocab = m.vocab;
+    let q = m.q;
+    let subs: Vec<usize> = (0..20).collect(); // > reduce_batch: chains partials
+    let maps: Vec<Vec<Vec<u8>>> = subs
+        .iter()
+        .map(|&s| workloads::native_map(&job, q, s))
+        .collect();
+    let payloads: Vec<&[u8]> = maps.iter().map(|ivs| ivs[1].as_slice()).collect();
+    let mut nat = NativeBackend;
+    use hetcdc::engine::MapBackend;
+    let want = nat.reduce_group(&job, &payloads).unwrap();
+    let mut be = XlaBackend::new(&mut rt);
+    let got = be.reduce_group(&job, &payloads).unwrap();
+    for (i, (a, b)) in got.iter().zip(&want).enumerate() {
+        assert!(
+            (a - b).abs() <= 1e-2 + 1e-4 * b.abs(),
+            "elem {i}: xla {a} vs native {b}"
+        );
+    }
+}
+
+#[test]
+fn engine_end_to_end_on_xla_backend_terasort() {
+    let mut rt = runtime();
+    let m = rt.manifest.clone();
+    let mut cluster = ClusterSpec::ec2_like_3node(12);
+    cluster.nodes[0].storage = 6;
+    cluster.nodes[1].storage = 7;
+    cluster.nodes[2].storage = 7;
+    let mut job = JobSpec::terasort(12);
+    job.t = m.t;
+    job.keys_per_file = m.keys_per_file;
+    let mut be = XlaBackend::new(&mut rt);
+    let mut engine = Engine::new(&cluster, &job, &mut be);
+    let coded = engine
+        .run(&PlacementStrategy::OptimalK3, ShuffleMode::Coded)
+        .unwrap();
+    assert!(coded.verified, "XLA coded run failed oracle check");
+    assert_eq!(coded.load_equations, 12.0); // the paper's headline number
+    assert_eq!(coded.max_abs_err, 0.0); // integer pipeline stays exact
+    let uncoded = engine
+        .run(&PlacementStrategy::OptimalK3, ShuffleMode::Uncoded)
+        .unwrap();
+    assert!(uncoded.verified);
+    assert_eq!(uncoded.load_equations, 16.0);
+}
+
+#[test]
+fn engine_end_to_end_on_xla_backend_wordcount() {
+    let mut rt = runtime();
+    let m = rt.manifest.clone();
+    let cluster = ClusterSpec::ec2_like_3node(12);
+    let mut job = JobSpec::wordcount(12);
+    job.t = m.t;
+    job.vocab = m.vocab;
+    let mut be = XlaBackend::new(&mut rt);
+    let mut engine = Engine::new(&cluster, &job, &mut be);
+    let r = engine
+        .run(&PlacementStrategy::OptimalK3, ShuffleMode::Coded)
+        .unwrap();
+    assert!(r.verified, "max_abs_err {}", r.max_abs_err);
+    assert_eq!(r.load_equations, 12.0);
+    assert_eq!(r.backend, "xla");
+}
+
+#[test]
+fn job_mismatch_is_rejected_with_guidance() {
+    let mut rt = runtime();
+    let mut job = JobSpec::wordcount(12);
+    job.t = 7; // does not match artifacts
+    let mut be = XlaBackend::new(&mut rt);
+    use hetcdc::engine::MapBackend;
+    let err = be.map_subfiles(&job, 3, &[0]).unwrap_err();
+    assert!(err.contains("make artifacts"), "unhelpful error: {err}");
+}
+
+#[test]
+fn xor_reduce_artifact_matches_native_fold() {
+    let mut rt = runtime();
+    let mut rng = Xoshiro256::seed_from_u64(23);
+    let (layers, rows, cols) = (3usize, 8usize, 128usize);
+    let stack: Vec<i32> = (0..layers * rows * cols)
+        .map(|_| rng.next_u64() as i32)
+        .collect();
+    let lit = Runtime::lit_i32(&stack, &[layers, rows, cols]).unwrap();
+    let got = rt.execute_to_i32("xor_reduce", &[lit]).unwrap();
+    // Native fold of the layer byte-planes (the [2] multicast encoder path).
+    let plane = rows * cols * 4;
+    let bytes: Vec<u8> = stack.iter().flat_map(|x| x.to_le_bytes()).collect();
+    let mut acc = bytes[..plane].to_vec();
+    for l in 1..layers {
+        hetcdc::coding::xor::xor_into(&mut acc, &bytes[l * plane..(l + 1) * plane]);
+    }
+    let want: Vec<i32> = acc
+        .chunks_exact(4)
+        .map(|c| i32::from_le_bytes(c.try_into().unwrap()))
+        .collect();
+    assert_eq!(got, want, "XLA xor_reduce disagrees with Rust multicast fold");
+}
