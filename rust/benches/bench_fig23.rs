@@ -11,7 +11,7 @@
 
 use hetcdc::bench::{bench_fn, section, table, Bench};
 use hetcdc::coding::plan::{plan_k3, plan_uncoded};
-use hetcdc::engine::{Engine, NativeBackend, PlacementStrategy};
+use hetcdc::engine::{Engine, NativeBackend};
 use hetcdc::model::cluster::ClusterSpec;
 use hetcdc::model::job::{JobSpec, ShuffleMode};
 use hetcdc::placement::alloc::Allocation;
@@ -36,7 +36,7 @@ fn fig2_allocation() -> Allocation {
     Allocation::new(3, 1, holders)
 }
 
-fn engine_load(storage: [u64; 3], n: u64, strategy: PlacementStrategy, mode: ShuffleMode) -> f64 {
+fn bench_cluster_job(storage: [u64; 3], n: u64) -> (ClusterSpec, JobSpec) {
     let mut cluster = ClusterSpec::homogeneous(3, 1, 1000.0);
     for (node, m) in cluster.nodes.iter_mut().zip(storage) {
         node.storage = m;
@@ -44,9 +44,24 @@ fn engine_load(storage: [u64; 3], n: u64, strategy: PlacementStrategy, mode: Shu
     let mut job = JobSpec::terasort(n);
     job.t = 16;
     job.keys_per_file = 64;
+    (cluster, job)
+}
+
+fn engine_load(storage: [u64; 3], n: u64, placer: &str, mode: ShuffleMode) -> f64 {
+    let (cluster, job) = bench_cluster_job(storage, n);
     let mut be = NativeBackend;
     let r = Engine::new(&cluster, &job, &mut be)
-        .run(&strategy, mode)
+        .run(placer, mode)
+        .expect("engine run");
+    assert!(r.verified, "oracle verification failed");
+    r.load_equations
+}
+
+fn engine_load_custom(storage: [u64; 3], n: u64, alloc: &Allocation, mode: ShuffleMode) -> f64 {
+    let (cluster, job) = bench_cluster_job(storage, n);
+    let mut be = NativeBackend;
+    let r = Engine::new(&cluster, &job, &mut be)
+        .run_custom(alloc, mode)
         .expect("engine run");
     assert!(r.verified, "oracle verification failed");
     r.load_equations
@@ -62,19 +77,19 @@ fn main() {
         vec![
             "uncoded (any allocation)".into(),
             format!("{}", load::uncoded(&p)),
-            format!("{}", engine_load([6, 7, 7], 12, PlacementStrategy::OptimalK3, ShuffleMode::Uncoded)),
+            format!("{}", engine_load([6, 7, 7], 12, "optimal-k3", ShuffleMode::Uncoded)),
             "3N − M = 16".into(),
         ],
         vec![
             "Fig 2: sequential allocation + coding".into(),
             format!("{}", lemma1::load_units(&fig2)),
-            format!("{}", engine_load([6, 7, 7], 12, PlacementStrategy::Custom(fig2.clone()), ShuffleMode::Coded)),
+            format!("{}", engine_load_custom([6, 7, 7], 12, &fig2, ShuffleMode::Coded)),
             "13".into(),
         ],
         vec![
             "Fig 3: optimal allocation + coding".into(),
             format!("{}", plan_k3(&fig3).load_equations(&fig3)),
-            format!("{}", engine_load([6, 7, 7], 12, PlacementStrategy::OptimalK3, ShuffleMode::Coded)),
+            format!("{}", engine_load([6, 7, 7], 12, "optimal-k3", ShuffleMode::Coded)),
             "L* = 12".into(),
         ],
     ];

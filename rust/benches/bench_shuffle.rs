@@ -8,7 +8,7 @@
 //! motivation) with and without coding.
 
 use hetcdc::bench::{bench_fn, section, table, Bench};
-use hetcdc::engine::{Engine, NativeBackend, PlacementStrategy, XlaBackend};
+use hetcdc::engine::{Engine, Executor, JobBuilder, NativeBackend, PlanCache, XlaBackend};
 use hetcdc::model::cluster::ClusterSpec;
 use hetcdc::model::job::{JobSpec, ShuffleMode};
 use hetcdc::runtime::Runtime;
@@ -18,12 +18,12 @@ use hetcdc::util::stats::fmt_bytes;
 fn run(
     cluster: &ClusterSpec,
     job: &JobSpec,
-    strategy: &PlacementStrategy,
+    placer: &str,
     mode: ShuffleMode,
 ) -> hetcdc::engine::RunReport {
     let mut be = NativeBackend;
     let r = Engine::new(cluster, job, &mut be)
-        .run(strategy, mode)
+        .run(placer, mode)
         .expect("engine");
     assert!(r.verified, "oracle verification failed");
     r
@@ -41,8 +41,8 @@ fn main() {
         cluster.storage()
     );
     let job = JobSpec::terasort(n);
-    let coded = run(&cluster, &job, &PlacementStrategy::OptimalK3, ShuffleMode::Coded);
-    let uncoded = run(&cluster, &job, &PlacementStrategy::OptimalK3, ShuffleMode::Uncoded);
+    let coded = run(&cluster, &job, "optimal-k3", ShuffleMode::Coded);
+    let uncoded = run(&cluster, &job, "optimal-k3", ShuffleMode::Uncoded);
     let rows = vec![
         vec![
             "coded (Theorem 1)".into(),
@@ -76,8 +76,8 @@ fn main() {
 
     section("E7: WordCount — shuffle fraction of job time (the §I 33–70% story)");
     let wjob = JobSpec::wordcount(n);
-    let wc = run(&cluster, &wjob, &PlacementStrategy::OptimalK3, ShuffleMode::Coded);
-    let wu = run(&cluster, &wjob, &PlacementStrategy::OptimalK3, ShuffleMode::Uncoded);
+    let wc = run(&cluster, &wjob, "optimal-k3", ShuffleMode::Coded);
+    let wu = run(&cluster, &wjob, "optimal-k3", ShuffleMode::Uncoded);
     table(
         &["mode", "map t", "shuffle t", "shuffle % of job"],
         &vec![
@@ -99,8 +99,8 @@ fn main() {
     section("homogeneous baseline (Li et al. [2]), K=3 r=2, N=60");
     let hcluster = ClusterSpec::homogeneous(3, 40, 750.0);
     let hjob = JobSpec::terasort(60);
-    let hc = run(&hcluster, &hjob, &PlacementStrategy::Homogeneous, ShuffleMode::Coded);
-    let hu = run(&hcluster, &hjob, &PlacementStrategy::Homogeneous, ShuffleMode::Uncoded);
+    let hc = run(&hcluster, &hjob, "homogeneous", ShuffleMode::Coded);
+    let hu = run(&hcluster, &hjob, "homogeneous", ShuffleMode::Uncoded);
     println!(
         "coded {} vs uncoded {} IV equations (theory: {} vs {})",
         hc.load_equations,
@@ -120,8 +120,8 @@ fn main() {
             node.storage = m;
         }
         let jb = JobSpec::terasort(12);
-        let aware = run(&cl, &jb, &PlacementStrategy::OptimalK3, ShuffleMode::Coded);
-        let obliv = run(&cl, &jb, &PlacementStrategy::Oblivious, ShuffleMode::Coded);
+        let aware = run(&cl, &jb, "optimal-k3", ShuffleMode::Coded);
+        let obliv = run(&cl, &jb, "oblivious", ShuffleMode::Coded);
         arows.push(vec![
             format!("{storage:?}"),
             format!("{}", aware.load_equations),
@@ -144,7 +144,7 @@ fn main() {
             xjob.keys_per_file = m.keys_per_file;
             let mut be = XlaBackend::new(&mut rt);
             let r = Engine::new(&cluster, &xjob, &mut be)
-                .run(&PlacementStrategy::OptimalK3, ShuffleMode::Coded)
+                .run("optimal-k3", ShuffleMode::Coded)
                 .expect("xla engine");
             assert!(r.verified);
             println!(
@@ -158,7 +158,7 @@ fn main() {
             bench_fn("terasort N=60 coded e2e (XLA backend)", &xcfg, || {
                 let mut be = XlaBackend::new(&mut rt);
                 Engine::new(&cluster, &xjob, &mut be)
-                    .run(&PlacementStrategy::OptimalK3, ShuffleMode::Coded)
+                    .run("optimal-k3", ShuffleMode::Coded)
                     .expect("xla engine")
                     .payload_bytes
             });
@@ -172,13 +172,75 @@ fn main() {
         ..Bench::default()
     };
     bench_fn("terasort N=60 coded e2e", &cfg, || {
-        run(&cluster, &job, &PlacementStrategy::OptimalK3, ShuffleMode::Coded).payload_bytes
+        run(&cluster, &job, "optimal-k3", ShuffleMode::Coded).payload_bytes
     });
     bench_fn("terasort N=60 uncoded e2e", &cfg, || {
-        run(&cluster, &job, &PlacementStrategy::OptimalK3, ShuffleMode::Uncoded).payload_bytes
+        run(&cluster, &job, "optimal-k3", ShuffleMode::Uncoded).payload_bytes
     });
     let wjob2 = JobSpec::wordcount(n);
     bench_fn("wordcount N=60 coded e2e", &cfg, || {
-        run(&cluster, &wjob2, &PlacementStrategy::OptimalK3, ShuffleMode::Coded).payload_bytes
+        run(&cluster, &wjob2, "optimal-k3", ShuffleMode::Coded).payload_bytes
     });
+
+    section("staged pipeline: plan reuse vs plan-per-run (repeated jobs)");
+    // The heavy-traffic path: the same job shape arrives over and over
+    // with fresh data. Plan-per-run re-derives the Theorem-1 placement,
+    // rebuilds the shuffle plan, and re-verifies decodability every batch;
+    // the staged pipeline builds the Plan once and only moves bytes.
+    let mut be = NativeBackend;
+    let mut batch_seed = job.seed;
+    let per_run = bench_fn("plan-per-run (build + verify every batch)", &cfg, || {
+        batch_seed = batch_seed.wrapping_add(1);
+        let plan = JobBuilder::new(&cluster, &job)
+            .placer("optimal-k3")
+            .mode(ShuffleMode::Coded)
+            .build()
+            .expect("plan");
+        let mut exec = Executor::new(&plan);
+        let r = exec.run_batch(&mut be, batch_seed).expect("run");
+        assert!(r.verified);
+        r.payload_bytes
+    });
+    let plan = JobBuilder::new(&cluster, &job)
+        .placer("optimal-k3")
+        .mode(ShuffleMode::Coded)
+        .build()
+        .expect("plan");
+    let mut exec = Executor::new(&plan);
+    let reused = bench_fn("plan reuse (one Plan, one Executor)", &cfg, || {
+        batch_seed = batch_seed.wrapping_add(1);
+        let r = exec.run_batch(&mut be, batch_seed).expect("run");
+        assert!(r.verified);
+        r.payload_bytes
+    });
+    println!(
+        "\nplan reuse speedup: {:.2}x over plan-per-run ({} batches run against one plan)",
+        per_run.mean_ns / reused.mean_ns,
+        exec.batches_run()
+    );
+    if reused.mean_ns >= per_run.mean_ns {
+        // Soft check: timing noise on a loaded machine should not abort
+        // the whole bench run, but a genuine regression must be loud.
+        println!("WARNING: plan reuse did not beat plan-per-run — investigate");
+    }
+
+    // PlanCache: the same comparison when job shapes interleave.
+    let mut cache = PlanCache::new(16);
+    let shapes: Vec<JobSpec> = vec![JobSpec::terasort(n), JobSpec::wordcount(n)];
+    let cached = bench_fn("PlanCache get_or_build + run (2 shapes)", &cfg, || {
+        batch_seed = batch_seed.wrapping_add(1);
+        let jb = &shapes[(batch_seed % 2) as usize];
+        let plan = cache
+            .get_or_build(&cluster, jb, "optimal-k3", None, ShuffleMode::Coded)
+            .expect("cached plan");
+        let r = Executor::new(&plan).run_batch(&mut be, batch_seed).expect("run");
+        assert!(r.verified);
+        r.payload_bytes
+    });
+    println!(
+        "cache: {} hits / {} misses ({:.2}x over plan-per-run)",
+        cache.hits,
+        cache.misses,
+        per_run.mean_ns / cached.mean_ns
+    );
 }

@@ -6,7 +6,7 @@
 //! realized placement in the engine (greedy pairing coder) to show the
 //! measured load and simulated shuffle time on heterogeneous uplinks.
 
-use hetcdc::engine::{Engine, NativeBackend, PlacementStrategy};
+use hetcdc::engine::{Engine, NativeBackend};
 use hetcdc::model::cluster::{ClusterSpec, NodeSpec};
 use hetcdc::model::job::{JobSpec, ShuffleMode};
 use hetcdc::placement::lp_general::{solve_general, DEFAULT_COLLECTION_CAP};
@@ -68,7 +68,7 @@ fn main() {
         let mut be = NativeBackend;
         let mut engine = Engine::new(&cluster, &job, &mut be);
         let coded = engine
-            .run(&PlacementStrategy::LpGeneral, ShuffleMode::Coded)
+            .run("lp-general", ShuffleMode::Coded)
             .expect("coded run");
         assert!(coded.verified);
 

@@ -11,7 +11,7 @@
 //! make artifacts && cargo run --release --offline --example terasort
 //! ```
 
-use hetcdc::engine::{Engine, NativeBackend, PlacementStrategy, XlaBackend};
+use hetcdc::engine::{Engine, NativeBackend, XlaBackend};
 use hetcdc::model::cluster::ClusterSpec;
 use hetcdc::model::job::{JobSpec, ShuffleMode};
 use hetcdc::runtime::Runtime;
@@ -58,13 +58,13 @@ fn main() {
             Some(rt) => {
                 let mut be = XlaBackend::new(rt);
                 Engine::new(&cluster, &job, &mut be)
-                    .run(&PlacementStrategy::OptimalK3, mode)
+                    .run("optimal-k3", mode)
                     .expect("run")
             }
             None => {
                 let mut be = NativeBackend;
                 Engine::new(&cluster, &job, &mut be)
-                    .run(&PlacementStrategy::OptimalK3, mode)
+                    .run("optimal-k3", mode)
                     .expect("run")
             }
         };

@@ -170,7 +170,7 @@ mod tests {
             let want = load_at_r(k as u64, r as u64, n);
             let got = plan.load_equations(&alloc);
             if (got - want).abs() > 1e-9 {
-                return Err(format!("k={k} r={r} n={n}: load {got} != {want}"));
+                return prop::fail(format!("k={k} r={r} n={n}: load {got} != {want}"));
             }
             let report = verify(&alloc, &plan);
             prop::check(

@@ -1,0 +1,261 @@
+//! The [`ShuffleCoder`] trait: pluggable coded-shuffle constructions
+//! behind one interface.
+//!
+//! A coder turns an [`Allocation`] into a [`ShufflePlan`] — the concrete
+//! broadcast schedule. Like placers, coders are pure functions of cluster
+//! and job *shape*; their output is verified by the symbolic decoder at
+//! plan-build time, so execution never re-checks decodability.
+
+use super::cdc_multicast;
+use super::plan::{plan_greedy, plan_k3, plan_uncoded, ShufflePlan};
+use crate::error::{HetcdcError, Result};
+use crate::model::cluster::ClusterSpec;
+use crate::model::job::JobSpec;
+use crate::placement::alloc::Allocation;
+use crate::placement::memshare;
+
+/// A coded-shuffle construction.
+pub trait ShuffleCoder {
+    /// Registry name (stable; appears in reports and serialized plans).
+    fn name(&self) -> &'static str;
+
+    /// Build the broadcast schedule delivering every missing IV.
+    fn plan(
+        &self,
+        cluster: &ClusterSpec,
+        job: &JobSpec,
+        alloc: &Allocation,
+    ) -> Result<ShufflePlan>;
+}
+
+/// Fully-uncoded baseline: every delivery as a plain broadcast.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Uncoded;
+
+impl ShuffleCoder for Uncoded {
+    fn name(&self) -> &'static str {
+        "uncoded"
+    }
+
+    fn plan(&self, _c: &ClusterSpec, _j: &JobSpec, alloc: &Allocation) -> Result<ShufflePlan> {
+        Ok(plan_uncoded(alloc))
+    }
+}
+
+/// XOR pair-coding: the exact Lemma-1 plan for K=3, greedy pairing for
+/// any other K. Works on arbitrary allocations.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Pairing;
+
+impl ShuffleCoder for Pairing {
+    fn name(&self) -> &'static str {
+        "pairing"
+    }
+
+    fn plan(&self, _c: &ClusterSpec, _j: &JobSpec, alloc: &Allocation) -> Result<ShufflePlan> {
+        if alloc.k == 3 {
+            Ok(plan_k3(alloc))
+        } else {
+            Ok(plan_greedy(alloc))
+        }
+    }
+}
+
+/// Greedy pairing for any K (kept addressable on its own so K=3 plans can
+/// be compared against the exact Lemma-1 coder).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Greedy;
+
+impl ShuffleCoder for Greedy {
+    fn name(&self) -> &'static str {
+        "greedy"
+    }
+
+    fn plan(&self, _c: &ClusterSpec, _j: &JobSpec, alloc: &Allocation) -> Result<ShufflePlan> {
+        Ok(plan_greedy(alloc))
+    }
+}
+
+/// True when every size-`r` holder subset stores the same number of
+/// subfiles — the symmetry [2]'s multicast (and its `debug_assert`)
+/// requires. Subfiles whose holder-set size differs from `r` are ignored.
+fn symmetric_at_r(alloc: &Allocation, r: usize) -> bool {
+    let sizes = alloc.subset_sizes();
+    let mut expected: Option<u64> = None;
+    for mask in 1u32..(1u32 << alloc.k) {
+        if mask.count_ones() as usize != r {
+            continue;
+        }
+        let c = sizes[mask as usize];
+        match expected {
+            None => expected = Some(c),
+            Some(e) if e == c => {}
+            Some(_) => return false,
+        }
+    }
+    true
+}
+
+/// The homogeneous (r+1)-group multicast of [2]. Requires a symmetric
+/// r-regular allocation (every subfile held by exactly `r` nodes, every
+/// r-subset holding equally many).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Multicast;
+
+impl ShuffleCoder for Multicast {
+    fn name(&self) -> &'static str {
+        "multicast"
+    }
+
+    fn plan(&self, _c: &ClusterSpec, _j: &JobSpec, alloc: &Allocation) -> Result<ShufflePlan> {
+        let r = alloc
+            .holders
+            .first()
+            .map(|h| h.count_ones() as usize)
+            .ok_or_else(|| HetcdcError::InvalidPlacement("allocation has no subfiles".into()))?;
+        if r == 0 || r > alloc.k {
+            return Err(HetcdcError::InvalidPlacement(format!(
+                "redundancy {r} out of range [1, K={}]",
+                alloc.k
+            )));
+        }
+        if !alloc.holders.iter().all(|h| h.count_ones() as usize == r) {
+            return Err(HetcdcError::Unsupported {
+                strategy: "multicast coder",
+                reason: "allocation is not r-regular".into(),
+            });
+        }
+        if !symmetric_at_r(alloc, r) {
+            return Err(HetcdcError::Unsupported {
+                strategy: "multicast coder",
+                reason: "allocation is not symmetric across r-subsets".into(),
+            });
+        }
+        Ok(cdc_multicast::plan_homogeneous(alloc, r))
+    }
+}
+
+/// Memory-sharing coder for the storage-oblivious baseline: the two
+/// r-regular sub-instances each run [2]'s multicast. Falls back to pair
+/// coding when the min-storage split does not apply to this allocation.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct MemShare;
+
+impl ShuffleCoder for MemShare {
+    fn name(&self) -> &'static str {
+        "memshare"
+    }
+
+    fn plan(&self, cluster: &ClusterSpec, job: &JobSpec, alloc: &Allocation) -> Result<ShufflePlan> {
+        let m_min = *cluster.storage().iter().min().ok_or_else(|| {
+            HetcdcError::InvalidParams("cluster has no nodes".into())
+        })?;
+        let fallback = |alloc: &Allocation| {
+            if alloc.k == 3 {
+                plan_k3(alloc)
+            } else {
+                plan_greedy(alloc)
+            }
+        };
+        let share = match memshare::split(alloc.k, m_min, job.n_files) {
+            Ok(share) => share,
+            Err(_) => return Ok(fallback(alloc)),
+        };
+        // The two-regime multicast only serves allocations shaped like the
+        // memory-sharing design: every subfile at redundancy r_lo, r_hi,
+        // or K (fully replicated needs no shuffle), each regime symmetric.
+        // Anything else gets the always-valid pairing coder instead of a
+        // silently incomplete plan.
+        let shaped = alloc.holders.iter().all(|h| {
+            let r = h.count_ones() as u64;
+            r == share.r_lo || r == share.r_hi || r == alloc.k as u64
+        }) && symmetric_at_r(alloc, share.r_lo as usize)
+            && symmetric_at_r(alloc, share.r_hi as usize);
+        if !shaped {
+            return Ok(fallback(alloc));
+        }
+        Ok(share.plan(alloc))
+    }
+}
+
+/// Resolve a registry name to a coder.
+pub fn coder_by_name(name: &str) -> Result<Box<dyn ShuffleCoder>> {
+    match name {
+        "uncoded" => Ok(Box::new(Uncoded)),
+        "pairing" => Ok(Box::new(Pairing)),
+        "greedy" => Ok(Box::new(Greedy)),
+        "multicast" => Ok(Box::new(Multicast)),
+        "memshare" => Ok(Box::new(MemShare)),
+        other => Err(HetcdcError::UnknownStrategy {
+            kind: "coder",
+            name: other.to_string(),
+        }),
+    }
+}
+
+/// All built-in coded (non-baseline) coders, for sweeps and property
+/// tests. `uncoded` is excluded: it is the baseline every coder must beat.
+pub fn builtin_coders() -> Vec<Box<dyn ShuffleCoder>> {
+    vec![
+        Box::new(Pairing),
+        Box::new(Greedy),
+        Box::new(Multicast),
+        Box::new(MemShare),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coding::decoder;
+    use crate::placement::k3::optimal_allocation;
+    use crate::theory::params::Params3;
+
+    fn cluster(storage: &[u64]) -> ClusterSpec {
+        let mut c = ClusterSpec::homogeneous(storage.len(), 1, 1000.0);
+        for (node, &m) in c.nodes.iter_mut().zip(storage) {
+            node.storage = m;
+        }
+        c
+    }
+
+    #[test]
+    fn pairing_matches_plan_k3_on_k3() {
+        let p = Params3::new(6, 7, 7, 12).unwrap();
+        let alloc = optimal_allocation(&p);
+        let c = cluster(&[6, 7, 7]);
+        let job = JobSpec::terasort(12);
+        let plan = Pairing.plan(&c, &job, &alloc).unwrap();
+        assert_eq!(plan.load_units(), plan_k3(&alloc).load_units());
+        assert!(decoder::verify(&alloc, &plan).is_complete());
+    }
+
+    #[test]
+    fn multicast_rejects_irregular_allocation() {
+        let p = Params3::new(6, 7, 7, 12).unwrap();
+        let alloc = optimal_allocation(&p);
+        let c = cluster(&[6, 7, 7]);
+        let err = Multicast
+            .plan(&c, &JobSpec::terasort(12), &alloc)
+            .unwrap_err();
+        assert!(matches!(err, HetcdcError::Unsupported { .. }));
+    }
+
+    #[test]
+    fn multicast_empty_allocation_is_typed_error_not_panic() {
+        let alloc = Allocation::new(3, 1, vec![]);
+        let c = cluster(&[6, 7, 7]);
+        let err = Multicast
+            .plan(&c, &JobSpec::terasort(12), &alloc)
+            .unwrap_err();
+        assert!(matches!(err, HetcdcError::InvalidPlacement(_)));
+    }
+
+    #[test]
+    fn registry_resolves_all_names() {
+        for name in ["uncoded", "pairing", "greedy", "multicast", "memshare"] {
+            assert_eq!(coder_by_name(name).unwrap().name(), name);
+        }
+        assert!(coder_by_name("rs-code").is_err());
+    }
+}

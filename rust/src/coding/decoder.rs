@@ -9,6 +9,7 @@
 //! subfile `f`.
 
 use super::plan::{Broadcast, IvId, ShufflePlan};
+use crate::error::{HetcdcError, Result};
 use crate::placement::alloc::Allocation;
 use std::collections::HashMap;
 
@@ -88,8 +89,22 @@ impl DecodeReport {
     }
 }
 
-/// Simulate decoding of `plan` under `alloc`; check Reduce completeness.
-pub fn verify(alloc: &Allocation, plan: &ShufflePlan) -> DecodeReport {
+/// Deterministic per-node decode order for a verified plan: entry
+/// `order[node]` lists broadcast indices in an order such that each one is
+/// decodable given Map-phase knowledge plus all earlier entries. Baked
+/// into [`crate::engine::Plan`] artifacts so execution replays decoding
+/// without any fixpoint iteration or re-verification.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct DecodeSchedule {
+    pub order: Vec<Vec<usize>>,
+    /// Fixpoint passes the symbolic decoder needed to converge.
+    pub passes: usize,
+}
+
+/// Shared symbolic simulation: final knowledge, per-node learn order, and
+/// pass count. Senders never "learn" from their own broadcasts (they hold
+/// every part they transmit).
+fn simulate(alloc: &Allocation, plan: &ShufflePlan) -> (Vec<Knowledge>, Vec<Vec<usize>>, usize) {
     let k = alloc.k;
     let n_sub = alloc.n_sub();
     let mut know: Vec<Knowledge> = (0..k).map(|_| Knowledge::new(n_sub)).collect();
@@ -102,22 +117,24 @@ pub fn verify(alloc: &Allocation, plan: &ShufflePlan) -> DecodeReport {
     }
 
     // Fixpoint over broadcasts (senders know their own payloads already).
+    let mut order: Vec<Vec<usize>> = vec![Vec::new(); k];
     let mut passes = 0;
     loop {
         passes += 1;
         let mut progress = false;
-        for b in &plan.broadcasts {
+        for (bi, b) in plan.broadcasts.iter().enumerate() {
             match b {
                 Broadcast::Uncoded { iv, .. } => {
-                    for knowledge in know.iter_mut() {
+                    for (node, knowledge) in know.iter_mut().enumerate() {
                         if !knowledge.knows_part(*iv, 0, 1) {
                             knowledge.learn_part(*iv, 0, 1);
+                            order[node].push(bi);
                             progress = true;
                         }
                     }
                 }
                 Broadcast::Coded { parts, .. } => {
-                    for knowledge in know.iter_mut() {
+                    for (node, knowledge) in know.iter_mut().enumerate() {
                         let unknown: Vec<_> = parts
                             .iter()
                             .filter(|p| !knowledge.knows_part(p.iv, p.seg, p.nseg))
@@ -125,6 +142,7 @@ pub fn verify(alloc: &Allocation, plan: &ShufflePlan) -> DecodeReport {
                         if unknown.len() == 1 {
                             let p = unknown[0];
                             knowledge.learn_part(p.iv, p.seg, p.nseg);
+                            order[node].push(bi);
                             progress = true;
                         }
                     }
@@ -135,17 +153,37 @@ pub fn verify(alloc: &Allocation, plan: &ShufflePlan) -> DecodeReport {
             break;
         }
     }
+    (know, order, passes)
+}
 
+/// Simulate decoding of `plan` under `alloc`; check Reduce completeness.
+pub fn verify(alloc: &Allocation, plan: &ShufflePlan) -> DecodeReport {
+    let (know, _, passes) = simulate(alloc, plan);
     // Reduce requirement: node n needs (n, f) for every subfile f.
-    let missing = (0..k)
+    let missing = (0..alloc.k)
         .map(|node| {
-            (0..n_sub)
+            (0..alloc.n_sub())
                 .map(|sub| IvId { group: node, sub })
                 .filter(|iv| !know[node].knows_iv(*iv))
                 .collect()
         })
         .collect();
     DecodeReport { missing, passes }
+}
+
+/// Verify `plan` and return its [`DecodeSchedule`]; typed error when some
+/// node would end the Shuffle phase missing IVs.
+pub fn schedule(alloc: &Allocation, plan: &ShufflePlan) -> Result<DecodeSchedule> {
+    let (know, order, passes) = simulate(alloc, plan);
+    for (node, knowledge) in know.iter().enumerate() {
+        let missing = (0..alloc.n_sub())
+            .filter(|&sub| !knowledge.knows_iv(IvId { group: node, sub }))
+            .count();
+        if missing > 0 {
+            return Err(HetcdcError::Undecodable { node, missing });
+        }
+    }
+    Ok(DecodeSchedule { order, passes })
 }
 
 #[cfg(test)]
@@ -193,6 +231,37 @@ mod tests {
         let report = verify(&alloc, &plan);
         // Nodes 1 and 2 know neither part; nothing decodes.
         assert!(!report.is_complete());
+    }
+
+    #[test]
+    fn schedule_orders_every_learned_broadcast() {
+        let p = Params3::new(6, 7, 7, 12).unwrap();
+        let alloc = optimal_allocation(&p);
+        let plan = plan_k3(&alloc);
+        let sched = schedule(&alloc, &plan).unwrap();
+        assert_eq!(sched.order.len(), 3);
+        // Each node's order lists distinct broadcast indices.
+        for order in &sched.order {
+            let mut seen = std::collections::HashSet::new();
+            for &bi in order {
+                assert!(bi < plan.broadcasts.len());
+                assert!(seen.insert(bi), "broadcast {bi} scheduled twice");
+            }
+        }
+        // Every broadcast is learned from by at least one node.
+        let all: std::collections::HashSet<usize> =
+            sched.order.iter().flatten().copied().collect();
+        assert_eq!(all.len(), plan.broadcasts.len());
+    }
+
+    #[test]
+    fn schedule_rejects_incomplete_plan() {
+        let p = Params3::new(6, 7, 7, 12).unwrap();
+        let alloc = optimal_allocation(&p);
+        let mut plan = plan_k3(&alloc);
+        plan.broadcasts.pop();
+        let err = schedule(&alloc, &plan).unwrap_err();
+        assert!(matches!(err, HetcdcError::Undecodable { .. }));
     }
 
     #[test]

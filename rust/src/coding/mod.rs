@@ -8,11 +8,16 @@
 //! * [`cdc_multicast`] — the homogeneous (r+1)-group multicast of [2]
 //!   (baseline, and the j-subsystem building block of §V).
 //! * [`decoder`] — symbolic decoder proving every plan delivers every
-//!   needed IV to every node (the correctness oracle for all plans).
+//!   needed IV to every node (the correctness oracle for all plans), and
+//!   the decode schedules baked into [`crate::engine::Plan`] artifacts.
+//! * [`coder`] — the [`coder::ShuffleCoder`] trait putting every
+//!   construction behind one interface.
 
 pub mod cdc_multicast;
+pub mod coder;
 pub mod decoder;
 pub mod plan;
 pub mod xor;
 
+pub use coder::{builtin_coders, coder_by_name, ShuffleCoder};
 pub use plan::{Broadcast, IvId, Part, ShufflePlan};

@@ -12,8 +12,11 @@
 //! not hold `f`.
 
 use super::xor; // used by doc references; keep module coupling explicit
+use crate::error::{HetcdcError, Result};
 use crate::placement::alloc::Allocation;
 use crate::placement::lemma1::{pairing_counts, PAIR_MASKS};
+use crate::util::json::Json;
+use std::collections::BTreeMap;
 
 /// Identifies one intermediate value: reduce group `group` (== destination
 /// node under Q=K) on subfile `sub`.
@@ -106,6 +109,153 @@ impl ShufflePlan {
             .filter(|b| matches!(b, Broadcast::Coded { .. }))
             .count();
         coded as f64 / self.broadcasts.len() as f64
+    }
+
+    /// Structural bounds check against a K-node, `n_sub`-subfile job:
+    /// senders/groups within `[0, K)`, subfiles within `[0, n_sub)`,
+    /// segment indices within a sane `nseg`, and uniform `nseg` per
+    /// broadcast. Deserialized plans go through this before the symbolic
+    /// decoder touches them, so hostile artifacts fail typed instead of
+    /// panicking an executor.
+    pub fn validate(&self, k: usize, n_sub: usize) -> Result<()> {
+        let bad = |i: usize, m: String| {
+            HetcdcError::PlanMismatch(format!("broadcast {i}: {m}"))
+        };
+        let check_iv = |i: usize, iv: &IvId| -> Result<()> {
+            if iv.group >= k {
+                return Err(bad(i, format!("group {} out of range [0, {k})", iv.group)));
+            }
+            if iv.sub >= n_sub {
+                return Err(bad(i, format!("subfile {} out of range [0, {n_sub})", iv.sub)));
+            }
+            Ok(())
+        };
+        if self.k != k {
+            return Err(HetcdcError::PlanMismatch(format!(
+                "shuffle plan is for K={}, expected K={k}",
+                self.k
+            )));
+        }
+        for (i, b) in self.broadcasts.iter().enumerate() {
+            if b.sender() >= k {
+                return Err(bad(i, format!("sender {} out of range [0, {k})", b.sender())));
+            }
+            match b {
+                Broadcast::Uncoded { iv, .. } => check_iv(i, iv)?,
+                Broadcast::Coded { parts, .. } => {
+                    let nseg = match parts.first() {
+                        Some(p) => p.nseg,
+                        None => return Err(bad(i, "coded broadcast with no parts".into())),
+                    };
+                    if nseg == 0 || nseg > 64 {
+                        return Err(bad(i, format!("nseg {nseg} out of range [1, 64]")));
+                    }
+                    for p in parts {
+                        if p.nseg != nseg {
+                            return Err(bad(i, "mixed nseg within one broadcast".into()));
+                        }
+                        if p.seg >= nseg {
+                            return Err(bad(i, format!("segment {} >= nseg {nseg}", p.seg)));
+                        }
+                        check_iv(i, &p.iv)?;
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// JSON form used inside serialized [`crate::engine::Plan`] artifacts
+    /// (schema in DESIGN.md).
+    pub fn to_json(&self) -> Json {
+        let broadcasts: Vec<Json> = self
+            .broadcasts
+            .iter()
+            .map(|b| {
+                let mut m = BTreeMap::new();
+                match b {
+                    Broadcast::Uncoded { sender, iv } => {
+                        m.insert("type".into(), Json::Str("uncoded".into()));
+                        m.insert("sender".into(), Json::Num(*sender as f64));
+                        m.insert("group".into(), Json::Num(iv.group as f64));
+                        m.insert("sub".into(), Json::Num(iv.sub as f64));
+                    }
+                    Broadcast::Coded { sender, parts } => {
+                        m.insert("type".into(), Json::Str("coded".into()));
+                        m.insert("sender".into(), Json::Num(*sender as f64));
+                        let parts: Vec<Json> = parts
+                            .iter()
+                            .map(|p| {
+                                let mut pm = BTreeMap::new();
+                                pm.insert("group".into(), Json::Num(p.iv.group as f64));
+                                pm.insert("sub".into(), Json::Num(p.iv.sub as f64));
+                                pm.insert("seg".into(), Json::Num(p.seg as f64));
+                                pm.insert("nseg".into(), Json::Num(p.nseg as f64));
+                                Json::Obj(pm)
+                            })
+                            .collect();
+                        m.insert("parts".into(), Json::Arr(parts));
+                    }
+                }
+                Json::Obj(m)
+            })
+            .collect();
+        let mut m = BTreeMap::new();
+        m.insert("k".into(), Json::Num(self.k as f64));
+        m.insert("broadcasts".into(), Json::Arr(broadcasts));
+        Json::Obj(m)
+    }
+
+    pub fn from_json(j: &Json) -> Result<Self> {
+        let bad = |f: &str| HetcdcError::Json(format!("shuffle plan: missing or invalid '{f}'"));
+        let k = j.get("k").and_then(|v| v.as_usize()).ok_or_else(|| bad("k"))?;
+        let get_usize = |o: &Json, f: &'static str| -> Result<usize> {
+            o.get(f).and_then(|v| v.as_usize()).ok_or_else(|| bad(f))
+        };
+        let mut broadcasts = Vec::new();
+        for b in j
+            .get("broadcasts")
+            .and_then(|v| v.as_arr())
+            .ok_or_else(|| bad("broadcasts"))?
+        {
+            let sender = get_usize(b, "sender")?;
+            match b.get("type").and_then(|v| v.as_str()) {
+                Some("uncoded") => broadcasts.push(Broadcast::Uncoded {
+                    sender,
+                    iv: IvId {
+                        group: get_usize(b, "group")?,
+                        sub: get_usize(b, "sub")?,
+                    },
+                }),
+                Some("coded") => {
+                    let mut parts = Vec::new();
+                    for p in b
+                        .get("parts")
+                        .and_then(|v| v.as_arr())
+                        .ok_or_else(|| bad("parts"))?
+                    {
+                        let nseg = get_usize(p, "nseg")? as u32;
+                        if nseg == 0 {
+                            return Err(bad("nseg"));
+                        }
+                        parts.push(Part {
+                            iv: IvId {
+                                group: get_usize(p, "group")?,
+                                sub: get_usize(p, "sub")?,
+                            },
+                            seg: get_usize(p, "seg")? as u32,
+                            nseg,
+                        });
+                    }
+                    if parts.is_empty() {
+                        return Err(bad("parts"));
+                    }
+                    broadcasts.push(Broadcast::Coded { sender, parts });
+                }
+                _ => return Err(bad("type")),
+            }
+        }
+        Ok(ShufflePlan { k, broadcasts })
     }
 }
 
@@ -435,6 +585,42 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn validate_rejects_out_of_range_references() {
+        let p = Params3::new(6, 7, 7, 12).unwrap();
+        let alloc = optimal_allocation(&p);
+        let mut plan = plan_k3(&alloc);
+        assert!(plan.validate(3, alloc.n_sub()).is_ok());
+        plan.broadcasts.push(Broadcast::Uncoded {
+            sender: 7,
+            iv: IvId { group: 0, sub: 0 },
+        });
+        assert!(plan.validate(3, alloc.n_sub()).is_err());
+        plan.broadcasts.pop();
+        plan.broadcasts.push(Broadcast::Uncoded {
+            sender: 0,
+            iv: IvId { group: 0, sub: 10_000 },
+        });
+        assert!(plan.validate(3, alloc.n_sub()).is_err());
+        plan.broadcasts.pop();
+        plan.broadcasts.push(Broadcast::Coded { sender: 0, parts: vec![] });
+        assert!(plan.validate(3, alloc.n_sub()).is_err());
+    }
+
+    #[test]
+    fn shuffle_plan_json_roundtrip() {
+        let p = Params3::new(6, 7, 7, 12).unwrap();
+        let alloc = optimal_allocation(&p);
+        for plan in [plan_k3(&alloc), plan_uncoded(&alloc)] {
+            let text = plan.to_json().to_string_pretty();
+            let back = ShufflePlan::from_json(&crate::util::json::Json::parse(&text).unwrap())
+                .unwrap();
+            assert_eq!(back.k, plan.k);
+            assert_eq!(back.broadcasts, plan.broadcasts);
+        }
+        assert!(ShufflePlan::from_json(&Json::Obj(Default::default())).is_err());
     }
 
     #[test]

@@ -6,7 +6,13 @@
 //! Layer-1 Pallas kernels lowered into `artifacts/*.hlo.txt`. Integration
 //! tests assert the two agree (bit-exact for TeraSort's i32 histogram,
 //! to float round-off for WordCount's matmul).
+//!
+//! Without the `xla` cargo feature the PJRT runtime is a stub whose
+//! `Runtime::load` returns [`HetcdcError::RuntimeUnavailable`];
+//! [`XlaBackend`] still compiles, so callers gate on `Runtime::load` and
+//! fall back to [`NativeBackend`].
 
+use crate::error::{HetcdcError, Result};
 use crate::model::job::{JobSpec, WorkloadKind};
 use crate::runtime::Runtime;
 use crate::workloads;
@@ -19,10 +25,10 @@ pub trait MapBackend {
         job: &JobSpec,
         q: usize,
         subs: &[usize],
-    ) -> Result<Vec<Vec<Vec<u8>>>, String>;
+    ) -> Result<Vec<Vec<Vec<u8>>>>;
 
     /// Reduce one group's payloads to its final output vector.
-    fn reduce_group(&mut self, job: &JobSpec, payloads: &[&[u8]]) -> Result<Vec<f64>, String>;
+    fn reduce_group(&mut self, job: &JobSpec, payloads: &[&[u8]]) -> Result<Vec<f64>>;
 
     fn name(&self) -> &'static str;
 }
@@ -37,14 +43,14 @@ impl MapBackend for NativeBackend {
         job: &JobSpec,
         q: usize,
         subs: &[usize],
-    ) -> Result<Vec<Vec<Vec<u8>>>, String> {
+    ) -> Result<Vec<Vec<Vec<u8>>>> {
         Ok(subs
             .iter()
             .map(|&sub| workloads::native_map(job, q, sub))
             .collect())
     }
 
-    fn reduce_group(&mut self, job: &JobSpec, payloads: &[&[u8]]) -> Result<Vec<f64>, String> {
+    fn reduce_group(&mut self, job: &JobSpec, payloads: &[&[u8]]) -> Result<Vec<f64>> {
         let mut acc = vec![0f64; job.t];
         for p in payloads {
             for (a, v) in acc.iter_mut().zip(workloads::decode_payload(job, p)) {
@@ -70,24 +76,28 @@ impl<'r> XlaBackend<'r> {
     }
 
     /// The artifacts bake static shapes; the job must match them.
-    pub fn check_job(&self, job: &JobSpec, q: usize) -> Result<(), String> {
+    pub fn check_job(&self, job: &JobSpec, q: usize) -> Result<()> {
         let m = &self.rt.manifest;
         if q != m.q || job.t != m.t {
-            return Err(format!(
+            return Err(HetcdcError::PlanMismatch(format!(
                 "job (q={q}, t={}) does not match artifacts (q={}, t={}); \
                  re-run `make artifacts` with matching flags",
                 job.t, m.q, m.t
-            ));
+            )));
         }
         match job.workload {
-            WorkloadKind::WordCount if job.vocab != m.vocab => Err(format!(
-                "vocab {} != artifact vocab {}",
-                job.vocab, m.vocab
-            )),
-            WorkloadKind::TeraSort if job.keys_per_file != m.keys_per_file => Err(format!(
-                "keys_per_file {} != artifact {}",
-                job.keys_per_file, m.keys_per_file
-            )),
+            WorkloadKind::WordCount if job.vocab != m.vocab => {
+                Err(HetcdcError::PlanMismatch(format!(
+                    "vocab {} != artifact vocab {}",
+                    job.vocab, m.vocab
+                )))
+            }
+            WorkloadKind::TeraSort if job.keys_per_file != m.keys_per_file => {
+                Err(HetcdcError::PlanMismatch(format!(
+                    "keys_per_file {} != artifact {}",
+                    job.keys_per_file, m.keys_per_file
+                )))
+            }
             _ => Ok(()),
         }
     }
@@ -97,19 +107,16 @@ impl<'r> XlaBackend<'r> {
         job: &JobSpec,
         q: usize,
         subs: &[usize],
-    ) -> Result<Vec<Vec<Vec<u8>>>, String> {
+    ) -> Result<Vec<Vec<Vec<u8>>>> {
         let b = self.rt.manifest.map_batch;
         let (qt, v) = (q * job.t, job.vocab);
         // Shared, cached projection (see workloads::wordcount::projection).
         let w = crate::workloads::wordcount::projection(job, q);
-        let w_lit = Runtime::lit_f32(&w, &[qt, v]).map_err(|e| e.to_string())?;
+        let w_lit = Runtime::lit_f32(&w, &[qt, v])?;
         // Reusable input pair: slot 0 keeps W across chunks (deep Literal
         // clones per chunk showed in the profile — EXPERIMENTS.md §Perf).
         let zero = vec![0f32; v * b];
-        let mut inputs = [
-            w_lit,
-            Runtime::lit_f32(&zero, &[v, b]).map_err(|e| e.to_string())?,
-        ];
+        let mut inputs = [w_lit, Runtime::lit_f32(&zero, &[v, b])?];
         let mut out = Vec::with_capacity(subs.len());
         for chunk in subs.chunks(b) {
             // counts matrix [V, B], zero-padded tail columns.
@@ -120,11 +127,8 @@ impl<'r> XlaBackend<'r> {
                     data[row * b + col] = val;
                 }
             }
-            inputs[1] = Runtime::lit_f32(&data, &[v, b]).map_err(|e| e.to_string())?;
-            let ivs = self
-                .rt
-                .execute_to_f32("map_project", &inputs)
-                .map_err(|e| e.to_string())?;
+            inputs[1] = Runtime::lit_f32(&data, &[v, b])?;
+            let ivs = self.rt.execute_to_f32("map_project", &inputs)?;
             // ivs shape [QT, B] row-major.
             for (col, _) in chunk.iter().enumerate() {
                 let mut groups = Vec::with_capacity(q);
@@ -147,7 +151,7 @@ impl<'r> XlaBackend<'r> {
         job: &JobSpec,
         q: usize,
         subs: &[usize],
-    ) -> Result<Vec<Vec<Vec<u8>>>, String> {
+    ) -> Result<Vec<Vec<Vec<u8>>>> {
         let b = self.rt.manifest.map_batch;
         let d = job.keys_per_file;
         let qt = q * job.t;
@@ -159,8 +163,8 @@ impl<'r> XlaBackend<'r> {
         // per-chunk deep Literal clones).
         let pad = vec![-1i32; b * d];
         let mut inputs = [
-            Runtime::lit_i32(&pad, &[b, d]).map_err(|e| e.to_string())?,
-            Runtime::lit_i32(&bounds, &[qt + 1]).map_err(|e| e.to_string())?,
+            Runtime::lit_i32(&pad, &[b, d])?,
+            Runtime::lit_i32(&bounds, &[qt + 1])?,
         ];
         let mut out = Vec::with_capacity(subs.len());
         for chunk in subs.chunks(b) {
@@ -175,11 +179,8 @@ impl<'r> XlaBackend<'r> {
                     data[row * d + col] = key as i32;
                 }
             }
-            inputs[0] = Runtime::lit_i32(&data, &[b, d]).map_err(|e| e.to_string())?;
-            let counts = self
-                .rt
-                .execute_to_i32("map_histogram", &inputs)
-                .map_err(|e| e.to_string())?;
+            inputs[0] = Runtime::lit_i32(&data, &[b, d])?;
+            let counts = self.rt.execute_to_i32("map_histogram", &inputs)?;
             // counts shape [B, QT] row-major.
             for (row, _) in chunk.iter().enumerate() {
                 let mut groups = Vec::with_capacity(q);
@@ -204,7 +205,7 @@ impl<'r> MapBackend for XlaBackend<'r> {
         job: &JobSpec,
         q: usize,
         subs: &[usize],
-    ) -> Result<Vec<Vec<Vec<u8>>>, String> {
+    ) -> Result<Vec<Vec<Vec<u8>>>> {
         self.check_job(job, q)?;
         match job.workload {
             WorkloadKind::WordCount => self.map_wordcount(job, q, subs),
@@ -212,7 +213,7 @@ impl<'r> MapBackend for XlaBackend<'r> {
         }
     }
 
-    fn reduce_group(&mut self, job: &JobSpec, payloads: &[&[u8]]) -> Result<Vec<f64>, String> {
+    fn reduce_group(&mut self, job: &JobSpec, payloads: &[&[u8]]) -> Result<Vec<f64>> {
         match job.workload {
             // f32 partial sums through the reduce_sum artifact.
             WorkloadKind::WordCount => {
@@ -226,11 +227,8 @@ impl<'r> MapBackend for XlaBackend<'r> {
                             data[row * t + col] = f32::from_le_bytes(bytes.try_into().unwrap());
                         }
                     }
-                    let lit = Runtime::lit_f32(&data, &[rb, t]).map_err(|e| e.to_string())?;
-                    let partial = self
-                        .rt
-                        .execute_to_f32("reduce_sum", &[lit])
-                        .map_err(|e| e.to_string())?;
+                    let lit = Runtime::lit_f32(&data, &[rb, t])?;
+                    let partial = self.rt.execute_to_f32("reduce_sum", &[lit])?;
                     for (a, v) in acc.iter_mut().zip(partial) {
                         *a += v;
                     }

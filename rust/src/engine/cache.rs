@@ -1,0 +1,220 @@
+//! [`PlanCache`]: memoizes built [`Plan`]s by (cluster shape, job shape,
+//! strategy) — the heavy-traffic path, where millions of identical job
+//! shapes must not re-run the LP or re-verify decodability per request.
+//!
+//! Keys are the *exact* shapes (not hashes of them), so a cache hit is
+//! guaranteed to be the right plan; the compact
+//! [`crate::engine::plan::shape_fingerprint`] is only a display/telemetry
+//! identity. Eviction is FIFO at a fixed capacity — plan reuse patterns
+//! are dominated by a small working set of job shapes.
+
+use super::plan::{JobBuilder, Plan};
+use crate::error::Result;
+use crate::model::cluster::ClusterSpec;
+use crate::model::job::{JobSpec, ShuffleMode, WorkloadKind};
+use std::collections::{HashMap, VecDeque};
+use std::sync::Arc;
+
+/// Exact cache key: everything [`JobBuilder::build`] reads except the
+/// data seed. Float fields are keyed by their bit patterns.
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+pub struct PlanKey {
+    storage: Vec<u64>,
+    uplink_bits: Vec<u64>,
+    map_rate_bits: Vec<u64>,
+    latency_bits: u64,
+    workload: WorkloadKind,
+    n_files: u64,
+    t: usize,
+    vocab: usize,
+    keys_per_file: usize,
+    placer: String,
+    coder: Option<String>,
+    mode: ShuffleMode,
+}
+
+impl PlanKey {
+    fn new(
+        cluster: &ClusterSpec,
+        job: &JobSpec,
+        placer: &str,
+        coder: Option<&str>,
+        mode: ShuffleMode,
+    ) -> Self {
+        PlanKey {
+            storage: cluster.storage(),
+            uplink_bits: cluster.nodes.iter().map(|n| n.uplink_mbps.to_bits()).collect(),
+            map_rate_bits: cluster
+                .nodes
+                .iter()
+                .map(|n| n.map_files_per_s.to_bits())
+                .collect(),
+            latency_bits: cluster.latency_ms.to_bits(),
+            workload: job.workload,
+            n_files: job.n_files,
+            t: job.t,
+            vocab: job.vocab,
+            keys_per_file: job.keys_per_file,
+            placer: placer.to_string(),
+            coder: coder.map(String::from),
+            mode,
+        }
+    }
+}
+
+/// FIFO-bounded memo of built plans. Plans are handed out as [`Arc`]s:
+/// cheap to clone into per-request [`crate::engine::Executor`]s.
+pub struct PlanCache {
+    capacity: usize,
+    map: HashMap<PlanKey, Arc<Plan>>,
+    order: VecDeque<PlanKey>,
+    pub hits: u64,
+    pub misses: u64,
+}
+
+impl Default for PlanCache {
+    fn default() -> Self {
+        Self::new(64)
+    }
+}
+
+impl PlanCache {
+    pub fn new(capacity: usize) -> Self {
+        PlanCache {
+            capacity: capacity.max(1),
+            map: HashMap::new(),
+            order: VecDeque::new(),
+            hits: 0,
+            misses: 0,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    pub fn clear(&mut self) {
+        self.map.clear();
+        self.order.clear();
+    }
+
+    /// Return the cached plan for this shape, building (and caching) it on
+    /// a miss. Build errors are not cached.
+    ///
+    /// The data seed is deliberately not part of the key, so a hit may
+    /// return a plan whose embedded `job.seed` is from the job that first
+    /// built it. Run batches with an explicit seed —
+    /// `Executor::run_batch(backend, my_job.seed)` — rather than the
+    /// seed-implicit `Executor::run`.
+    pub fn get_or_build(
+        &mut self,
+        cluster: &ClusterSpec,
+        job: &JobSpec,
+        placer: &str,
+        coder: Option<&str>,
+        mode: ShuffleMode,
+    ) -> Result<Arc<Plan>> {
+        let key = PlanKey::new(cluster, job, placer, coder, mode);
+        if let Some(plan) = self.map.get(&key) {
+            self.hits += 1;
+            return Ok(plan.clone());
+        }
+        self.misses += 1;
+        let mut builder = JobBuilder::new(cluster, job).placer(placer).mode(mode);
+        if let Some(c) = coder {
+            builder = builder.coder(c);
+        }
+        let plan = Arc::new(builder.build()?);
+        if self.map.len() >= self.capacity {
+            if let Some(oldest) = self.order.pop_front() {
+                self.map.remove(&oldest);
+            }
+        }
+        self.map.insert(key.clone(), plan.clone());
+        self.order.push_back(key);
+        Ok(plan)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cluster(storage: &[u64]) -> ClusterSpec {
+        let mut c = ClusterSpec::homogeneous(storage.len(), 1, 1000.0);
+        for (node, &m) in c.nodes.iter_mut().zip(storage) {
+            node.storage = m;
+        }
+        c
+    }
+
+    #[test]
+    fn hit_returns_same_plan_without_rebuild() {
+        let c = cluster(&[6, 7, 7]);
+        let job = JobSpec::terasort(12);
+        let mut cache = PlanCache::new(8);
+        let a = cache
+            .get_or_build(&c, &job, "optimal-k3", None, ShuffleMode::Coded)
+            .unwrap();
+        let b = cache
+            .get_or_build(&c, &job, "optimal-k3", None, ShuffleMode::Coded)
+            .unwrap();
+        assert!(Arc::ptr_eq(&a, &b));
+        assert_eq!((cache.hits, cache.misses), (1, 1));
+        assert_eq!(cache.len(), 1);
+    }
+
+    #[test]
+    fn seed_change_still_hits_but_shape_change_misses() {
+        let c = cluster(&[6, 7, 7]);
+        let mut job = JobSpec::terasort(12);
+        let mut cache = PlanCache::new(8);
+        cache
+            .get_or_build(&c, &job, "auto", None, ShuffleMode::Coded)
+            .unwrap();
+        job.seed = job.seed.wrapping_add(99);
+        cache
+            .get_or_build(&c, &job, "auto", None, ShuffleMode::Coded)
+            .unwrap();
+        assert_eq!((cache.hits, cache.misses), (1, 1));
+        job.n_files = 8;
+        cache
+            .get_or_build(&c, &job, "auto", None, ShuffleMode::Coded)
+            .unwrap();
+        assert_eq!((cache.hits, cache.misses), (1, 2));
+    }
+
+    #[test]
+    fn capacity_evicts_fifo() {
+        let c = cluster(&[6, 7, 7]);
+        let mut cache = PlanCache::new(2);
+        for n in [12u64, 10, 8] {
+            let job = JobSpec::terasort(n);
+            cache
+                .get_or_build(&c, &job, "auto", None, ShuffleMode::Coded)
+                .unwrap();
+        }
+        assert_eq!(cache.len(), 2);
+        // Oldest (n=12) was evicted: rebuilding it is a miss.
+        let job = JobSpec::terasort(12);
+        cache
+            .get_or_build(&c, &job, "auto", None, ShuffleMode::Coded)
+            .unwrap();
+        assert_eq!(cache.misses, 4);
+    }
+
+    #[test]
+    fn build_errors_propagate_and_are_not_cached() {
+        let c = cluster(&[6, 7, 7]);
+        let job = JobSpec::terasort(12);
+        let mut cache = PlanCache::new(8);
+        assert!(cache
+            .get_or_build(&c, &job, "homogeneous", None, ShuffleMode::Coded)
+            .is_err());
+        assert_eq!(cache.len(), 0);
+    }
+}

@@ -1,60 +1,39 @@
-//! End-to-end job orchestration: placement -> Map -> coded Shuffle ->
-//! Reduce -> verification, with the phase time model of DESIGN.md §4.
+//! [`RunReport`] and the [`Engine`] facade.
+//!
+//! The staged pipeline ([`crate::engine::JobBuilder`] →
+//! [`crate::engine::Plan`] → [`crate::engine::Executor`]) is the primary
+//! API; [`Engine`] is the one-shot convenience wrapper for callers that
+//! run a single batch: it builds a plan, executes it once, and returns
+//! the report. Serving paths that run many batches should build the plan
+//! once (or take it from a [`crate::engine::PlanCache`]) and reuse an
+//! [`crate::engine::Executor`].
 
 use super::backend::MapBackend;
-use super::exec::{execute_shuffle, NodeState};
-use crate::coding::plan::{plan_greedy, plan_k3, plan_uncoded, IvId, ShufflePlan};
-use crate::coding::{cdc_multicast, decoder};
+use super::executor::Executor;
+use super::plan::{shape_fingerprint, JobBuilder, Plan};
+use crate::error::{HetcdcError, Result};
 use crate::model::cluster::ClusterSpec;
 use crate::model::job::{JobSpec, ShuffleMode};
 use crate::placement::alloc::Allocation;
-use crate::placement::{homogeneous, k3, lp_general};
-use crate::workloads;
 
-/// How files are placed on nodes before the job runs.
-#[derive(Clone, Debug)]
-pub enum PlacementStrategy {
-    /// Theorem-1 optimal placement (K=3 only).
-    OptimalK3,
-    /// §V LP placement (any K).
-    LpGeneral,
-    /// Homogeneous r-redundant placement of [2] (requires equal storage
-    /// `M_k = r·N/K`; `r` derived from storage).
-    Homogeneous,
-    /// Storage-oblivious baseline: provisions every node to the SMALLEST
-    /// storage and runs the homogeneous memory-sharing scheme — what a
-    /// heterogeneity-unaware deployment does (the [13] failure mode the
-    /// paper's introduction cites). Wastes surplus storage.
-    Oblivious,
-    /// Caller-provided allocation.
-    Custom(Allocation),
-}
-
-impl PlacementStrategy {
-    pub fn name(&self) -> &'static str {
-        match self {
-            PlacementStrategy::OptimalK3 => "optimal-k3",
-            PlacementStrategy::LpGeneral => "lp-general",
-            PlacementStrategy::Homogeneous => "homogeneous",
-            PlacementStrategy::Oblivious => "oblivious",
-            PlacementStrategy::Custom(_) => "custom",
-        }
-    }
-}
-
-/// Everything measured in one run.
+/// Everything measured in one batch run.
 #[derive(Clone, Debug)]
 pub struct RunReport {
     pub k: usize,
     pub n_files: u64,
     pub n_sub: usize,
     pub sp: u32,
+    /// Placer registry name that produced the allocation.
     pub placement: String,
+    /// Coder registry name that produced the shuffle plan.
+    pub coder: String,
     pub mode: ShuffleMode,
     pub backend: String,
+    /// Data seed of this batch.
+    pub seed: u64,
     /// Measured shuffle load in IV-equation units (payload bytes / T·4·sp).
     pub load_equations: f64,
-    /// Plan-predicted load (should equal measured for whole-IV plans).
+    /// Plan-predicted load (equals measured for the built-in coders).
     pub plan_equations: f64,
     pub payload_bytes: u64,
     pub wire_bytes: u64,
@@ -92,8 +71,12 @@ impl RunReport {
         put("n_sub", Json::Num(self.n_sub as f64));
         put("sp", Json::Num(self.sp as f64));
         put("placement", Json::Str(self.placement.clone()));
+        put("coder", Json::Str(self.coder.clone()));
         put("mode", Json::Str(format!("{:?}", self.mode)));
         put("backend", Json::Str(self.backend.clone()));
+        // Hex string: JSON numbers are f64 here and would round u64
+        // seeds above 2^53 (see JobSpec::to_json).
+        put("seed", Json::Str(format!("{:#x}", self.seed)));
         put("load_equations", Json::Num(self.load_equations));
         put("plan_equations", Json::Num(self.plan_equations));
         put("payload_bytes", Json::Num(self.payload_bytes as f64));
@@ -109,7 +92,8 @@ impl RunReport {
     }
 }
 
-/// The engine: borrows cluster, job, and a compute backend.
+/// One-shot facade: borrows cluster, job, and a compute backend; each
+/// `run_*` builds a fresh [`Plan`] and executes one batch.
 pub struct Engine<'a> {
     pub cluster: &'a ClusterSpec,
     pub job: &'a JobSpec,
@@ -129,173 +113,41 @@ impl<'a> Engine<'a> {
         }
     }
 
-    /// Build the allocation for a strategy.
-    pub fn place(&self, strategy: &PlacementStrategy) -> Result<Allocation, String> {
-        let k = self.cluster.k();
-        let n = self.job.n_files;
-        match strategy {
-            PlacementStrategy::OptimalK3 => {
-                let p = self.cluster.params3(n)?;
-                Ok(k3::optimal_allocation(&p))
-            }
-            PlacementStrategy::LpGeneral => {
-                let p = self.cluster.params_k(n)?;
-                let sol = lp_general::solve_general(&p, lp_general::DEFAULT_COLLECTION_CAP)
-                    .map_err(|e| format!("LP: {e}"))?;
-                Ok(lp_general::allocation_from_solution(&p, &sol))
-            }
-            PlacementStrategy::Homogeneous => {
-                let storage = self.cluster.storage();
-                let m0 = storage[0];
-                if !storage.iter().all(|&m| m == m0) {
-                    return Err("homogeneous placement needs equal storage".into());
-                }
-                let r = (m0 * k as u64) / n;
-                if r * n != m0 * k as u64 || r == 0 {
-                    return Err(format!(
-                        "storage {m0} is not r·N/K for any integer r (N={n}, K={k})"
-                    ));
-                }
-                Ok(homogeneous::symmetric_allocation(k, r as usize, n))
-            }
-            PlacementStrategy::Oblivious => {
-                let m_min = *self.cluster.storage().iter().min().unwrap();
-                let share = crate::placement::memshare::split(k, m_min, n)?;
-                Ok(share.allocation())
-            }
-            PlacementStrategy::Custom(a) => Ok(a.clone()),
-        }
+    /// Build a plan with the named placer (see
+    /// [`crate::placement::placer_by_name`]) and run one batch.
+    pub fn run(&mut self, placer: &str, mode: ShuffleMode) -> Result<RunReport> {
+        let plan = JobBuilder::new(self.cluster, self.job)
+            .placer(placer)
+            .mode(mode)
+            .build()?;
+        self.run_plan(&plan)
     }
 
-    /// Build the shuffle plan for an allocation.
-    pub fn plan(
-        &self,
-        alloc: &Allocation,
-        strategy: &PlacementStrategy,
-        mode: ShuffleMode,
-    ) -> ShufflePlan {
-        match mode {
-            ShuffleMode::Uncoded => plan_uncoded(alloc),
-            ShuffleMode::Coded => match strategy {
-                PlacementStrategy::Homogeneous => {
-                    let r = alloc.holders[0].count_ones() as usize;
-                    cdc_multicast::plan_homogeneous(alloc, r)
-                }
-                PlacementStrategy::Oblivious => {
-                    let m_min = *self.cluster.storage().iter().min().unwrap();
-                    match crate::placement::memshare::split(
-                        alloc.k,
-                        m_min,
-                        self.job.n_files,
-                    ) {
-                        Ok(share) => share.plan(alloc),
-                        Err(_) if alloc.k == 3 => plan_k3(alloc),
-                        Err(_) => plan_greedy(alloc),
-                    }
-                }
-                _ if alloc.k == 3 => plan_k3(alloc),
-                _ => plan_greedy(alloc),
-            },
-        }
+    /// Like [`Engine::run`] with a caller-provided allocation.
+    pub fn run_custom(&mut self, alloc: &Allocation, mode: ShuffleMode) -> Result<RunReport> {
+        let plan = JobBuilder::new(self.cluster, self.job)
+            .custom_allocation(alloc.clone())
+            .mode(mode)
+            .build()?;
+        self.run_plan(&plan)
     }
 
-    /// Run the full job. See [`RunReport`].
-    pub fn run(
-        &mut self,
-        strategy: &PlacementStrategy,
-        mode: ShuffleMode,
-    ) -> Result<RunReport, String> {
-        let k = self.cluster.k();
-        self.job.validate(k)?;
-        let q = k; // Q = K (one reduce-function group per node, as in the paper)
-        let alloc = self.place(strategy)?;
-        // Capacities are upper bounds at run time; optimal placements fill
-        // them exactly, the oblivious baseline deliberately under-fills.
-        alloc
-            .validate_le(&self.cluster.storage(), self.job.n_files)
-            .map_err(|e| format!("placement invalid: {e}"))?;
-        let n_sub = alloc.n_sub();
-        let iv_bytes = self.job.iv_bytes();
-
-        // ---- Map phase: every node computes all groups' IVs of its
-        // subfiles; the time model takes the slowest node (barrier).
-        let mut states: Vec<NodeState> = (0..k)
-            .map(|_| NodeState::new(q, n_sub, iv_bytes))
-            .collect();
-        let mut map_time_s: f64 = 0.0;
-        for node in 0..k {
-            let held: Vec<usize> = (0..n_sub)
-                .filter(|&s| alloc.holders[s] & (1 << node) != 0)
-                .collect();
-            let files_equiv = held.len() as f64 / alloc.sp as f64;
-            map_time_s = map_time_s
-                .max(files_equiv / self.cluster.nodes[node].map_files_per_s.max(1e-9));
-            let ivs = self.backend.map_subfiles(self.job, q, &held)?;
-            for (pos, &sub) in held.iter().enumerate() {
-                for (g, payload) in ivs[pos].iter().enumerate() {
-                    states[node].set_full(IvId { group: g, sub }, payload.clone());
-                }
-            }
+    /// Execute one batch of a pre-built plan. The plan must have been
+    /// built for this engine's cluster/job shape (the data seed may
+    /// differ) — a plan for some other shape would silently execute its
+    /// own embedded cluster and job instead.
+    pub fn run_plan(&mut self, plan: &Plan) -> Result<RunReport> {
+        if !plan.shape_matches(self.cluster, self.job) {
+            return Err(HetcdcError::PlanMismatch(format!(
+                "plan was built for shape {:016x}, which is not this engine's \
+                 cluster/job shape ({:016x}); rebuild the plan",
+                plan.fingerprint,
+                shape_fingerprint(self.cluster, self.job)
+            )));
         }
-
-        // ---- Shuffle phase.
-        let plan = self.plan(&alloc, strategy, mode);
-        let report = decoder::verify(&alloc, &plan);
-        if !report.is_complete() {
-            return Err(format!(
-                "internal: plan not decodable; missing {:?}",
-                report.missing
-            ));
-        }
-        let mut net = self.cluster.network();
-        let outcome = execute_shuffle(&plan, &mut states, &mut net)?;
-        let shuffle_time_s = net.report().elapsed_s;
-
-        // ---- Reduce phase + oracle verification (all groups' oracles in
-        // one Map pass; per-group recomputation tripled verify cost).
-        let mut verified = true;
-        let mut max_abs_err = 0f64;
-        let oracles = workloads::native_reduce_oracle_all(self.job, q, n_sub);
-        for node in 0..k {
-            let payloads: Vec<&[u8]> = (0..n_sub)
-                .map(|sub| {
-                    states[node]
-                        .get_full(IvId { group: node, sub })
-                        .ok_or_else(|| format!("node {node} missing IV for subfile {sub}"))
-                })
-                .collect::<Result<_, _>>()?;
-            let out = self.backend.reduce_group(self.job, &payloads)?;
-            let oracle = &oracles[node];
-            for (a, b) in out.iter().zip(oracle) {
-                let err = (a - b).abs();
-                max_abs_err = max_abs_err.max(err);
-                // f32 accumulation tolerance, scaled to magnitude.
-                if err > 1e-2 + 1e-4 * b.abs() {
-                    verified = false;
-                }
-            }
-        }
-
-        let load_equations = outcome.payload_bytes as f64 / (iv_bytes as f64 * alloc.sp as f64);
-        Ok(RunReport {
-            k,
-            n_files: self.job.n_files,
-            n_sub,
-            sp: alloc.sp,
-            placement: strategy.name().to_string(),
-            mode,
-            backend: self.backend.name().to_string(),
-            load_equations,
-            plan_equations: plan.load_equations(&alloc),
-            payload_bytes: outcome.payload_bytes,
-            wire_bytes: outcome.wire_bytes,
-            messages: outcome.messages,
-            map_time_s,
-            shuffle_time_s,
-            job_time_s: map_time_s + shuffle_time_s,
-            verified,
-            max_abs_err,
-        })
+        // The engine's job picks the data batch; the plan only fixes the
+        // shape (its embedded seed is whatever job first built it).
+        Executor::new(plan).run_batch(self.backend, self.job.seed)
     }
 }
 
@@ -308,60 +160,42 @@ mod tests {
 
     fn run_one(
         storage: [u64; 3],
-        n: u64,
         job: JobSpec,
-        strategy: PlacementStrategy,
+        placer: &str,
         mode: ShuffleMode,
     ) -> RunReport {
         let mut cluster = ClusterSpec::homogeneous(3, 1, 1000.0);
         for (node, &m) in cluster.nodes.iter_mut().zip(storage.iter()) {
             node.storage = m;
         }
-        let _ = n;
         let mut be = NativeBackend;
         let mut engine = Engine::new(&cluster, &job, &mut be);
-        engine.run(&strategy, mode).unwrap()
+        engine.run(placer, mode).unwrap()
     }
 
     #[test]
     fn paper_example_measured_load_is_12() {
         let job = JobSpec::wordcount(12);
-        let r = run_one(
-            [6, 7, 7],
-            12,
-            job,
-            PlacementStrategy::OptimalK3,
-            ShuffleMode::Coded,
-        );
+        let r = run_one([6, 7, 7], job, "optimal-k3", ShuffleMode::Coded);
         assert!(r.verified, "reduce outputs mismatched oracle: {}", r.max_abs_err);
         assert_eq!(r.load_equations, 12.0);
         assert_eq!(r.plan_equations, 12.0);
+        assert_eq!(r.coder, "pairing");
     }
 
     #[test]
     fn paper_example_uncoded_load_is_16() {
         let job = JobSpec::wordcount(12);
-        let r = run_one(
-            [6, 7, 7],
-            12,
-            job,
-            PlacementStrategy::OptimalK3,
-            ShuffleMode::Uncoded,
-        );
+        let r = run_one([6, 7, 7], job, "optimal-k3", ShuffleMode::Uncoded);
         assert!(r.verified);
         assert_eq!(r.load_equations, 16.0);
+        assert_eq!(r.coder, "uncoded");
     }
 
     #[test]
     fn terasort_exact_verification() {
         let job = JobSpec::terasort(12);
-        let r = run_one(
-            [6, 7, 7],
-            12,
-            job,
-            PlacementStrategy::OptimalK3,
-            ShuffleMode::Coded,
-        );
+        let r = run_one([6, 7, 7], job, "optimal-k3", ShuffleMode::Coded);
         assert!(r.verified);
         assert_eq!(r.max_abs_err, 0.0, "integer pipeline must be exact");
     }
@@ -373,10 +207,9 @@ mod tests {
         let job = JobSpec::terasort(12);
         let mut be = NativeBackend;
         let mut engine = Engine::new(&cluster, &job, &mut be);
-        let r = engine
-            .run(&PlacementStrategy::Homogeneous, ShuffleMode::Coded)
-            .unwrap();
+        let r = engine.run("homogeneous", ShuffleMode::Coded).unwrap();
         assert!(r.verified);
+        assert_eq!(r.coder, "multicast");
         // r = MK/N = 2 -> L = N(K−r)/r = 6.
         assert!((r.load_equations - 6.0).abs() < 1e-9, "{}", r.load_equations);
     }
@@ -384,13 +217,7 @@ mod tests {
     #[test]
     fn shuffle_fraction_reported() {
         let job = JobSpec::wordcount(12);
-        let r = run_one(
-            [6, 7, 7],
-            12,
-            job,
-            PlacementStrategy::OptimalK3,
-            ShuffleMode::Uncoded,
-        );
+        let r = run_one([6, 7, 7], job, "optimal-k3", ShuffleMode::Uncoded);
         assert!(r.shuffle_fraction() > 0.0 && r.shuffle_fraction() < 1.0);
     }
 
@@ -409,22 +236,10 @@ mod tests {
             let mut job = JobSpec::terasort(n);
             job.t = 8;
             job.keys_per_file = 32;
-            let coded = run_one(
-                [m1, m2, m3],
-                n,
-                job.clone(),
-                PlacementStrategy::OptimalK3,
-                ShuffleMode::Coded,
-            );
-            let unc = run_one(
-                [m1, m2, m3],
-                n,
-                job,
-                PlacementStrategy::OptimalK3,
-                ShuffleMode::Uncoded,
-            );
+            let coded = run_one([m1, m2, m3], job.clone(), "optimal-k3", ShuffleMode::Coded);
+            let unc = run_one([m1, m2, m3], job, "optimal-k3", ShuffleMode::Uncoded);
             if !coded.verified || !unc.verified {
-                return Err(format!("{p}: verification failed"));
+                return prop::fail(format!("{p}: verification failed"));
             }
             prop::check(
                 (coded.load_equations - lstar(&p)).abs() < 1e-9
@@ -445,20 +260,8 @@ mod tests {
         // (4,8,12,12): heterogeneity-aware L* = 3N−(M1+M) = 36−28 = 8;
         // oblivious provisions all nodes to min = 4 (r = 1) -> L = 24.
         let job = JobSpec::terasort(12);
-        let aware = run_one(
-            [4, 8, 12],
-            12,
-            job.clone(),
-            PlacementStrategy::OptimalK3,
-            ShuffleMode::Coded,
-        );
-        let oblivious = run_one(
-            [4, 8, 12],
-            12,
-            job,
-            PlacementStrategy::Oblivious,
-            ShuffleMode::Coded,
-        );
+        let aware = run_one([4, 8, 12], job.clone(), "optimal-k3", ShuffleMode::Coded);
+        let oblivious = run_one([4, 8, 12], job, "oblivious", ShuffleMode::Coded);
         assert!(aware.verified && oblivious.verified);
         let p = crate::theory::params::Params3::new(4, 8, 12, 12).unwrap();
         assert_eq!(aware.load_equations, crate::theory::load::lstar(&p));
@@ -486,13 +289,62 @@ mod tests {
         job.keys_per_file = 32;
         let mut be = NativeBackend;
         let mut engine = Engine::new(&cluster, &job, &mut be);
-        let coded = engine
-            .run(&PlacementStrategy::LpGeneral, ShuffleMode::Coded)
-            .unwrap();
-        let unc = engine
-            .run(&PlacementStrategy::LpGeneral, ShuffleMode::Uncoded)
-            .unwrap();
+        let coded = engine.run("lp-general", ShuffleMode::Coded).unwrap();
+        let unc = engine.run("lp-general", ShuffleMode::Uncoded).unwrap();
         assert!(coded.verified && unc.verified);
         assert!(coded.load_equations <= unc.load_equations);
+    }
+
+    #[test]
+    fn run_plan_rejects_foreign_shape() {
+        let cluster_a = ClusterSpec::homogeneous(3, 8, 1000.0);
+        let cluster_b = ClusterSpec::homogeneous(3, 9, 1000.0);
+        let job = JobSpec::terasort(12);
+        let plan = JobBuilder::new(&cluster_a, &job).build().unwrap();
+        let mut be = NativeBackend;
+        let err = Engine::new(&cluster_b, &job, &mut be)
+            .run_plan(&plan)
+            .unwrap_err();
+        assert!(matches!(err, crate::HetcdcError::PlanMismatch(_)), "{err}");
+        // Same shape, different seed: runs, and the ENGINE's seed picks
+        // the batch — not the seed embedded in the plan.
+        let mut reseeded = job.clone();
+        reseeded.seed ^= 0xFFFF;
+        let r = Engine::new(&cluster_a, &reseeded, &mut be)
+            .run_plan(&plan)
+            .unwrap();
+        assert!(r.verified);
+        assert_eq!(r.seed, reseeded.seed);
+    }
+
+    #[test]
+    fn custom_allocation_runs() {
+        // Fig 2's sequential allocation on (6,7,7,12) codes to 13.
+        let mut holders = vec![0u32; 12];
+        for f in 0..6 {
+            holders[f] |= 0b001;
+        }
+        holders[0] |= 0b010;
+        for f in 6..12 {
+            holders[f] |= 0b010;
+        }
+        for f in 1..8 {
+            holders[f] |= 0b100;
+        }
+        let alloc = Allocation::new(3, 1, holders);
+        let mut cluster = ClusterSpec::homogeneous(3, 1, 1000.0);
+        for (node, m) in cluster.nodes.iter_mut().zip([6u64, 7, 7]) {
+            node.storage = m;
+        }
+        let mut job = JobSpec::terasort(12);
+        job.t = 8;
+        job.keys_per_file = 32;
+        let mut be = NativeBackend;
+        let r = Engine::new(&cluster, &job, &mut be)
+            .run_custom(&alloc, ShuffleMode::Coded)
+            .unwrap();
+        assert!(r.verified);
+        assert_eq!(r.placement, "custom");
+        assert_eq!(r.load_equations, 13.0);
     }
 }

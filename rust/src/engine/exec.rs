@@ -5,9 +5,22 @@
 //! symbolic decoder proves plans are decodable; this module proves the
 //! *implementation* delivers bit-correct IVs (the engine verifies Reduce
 //! outputs against the oracle afterwards).
+//!
+//! Two execution paths:
+//! * [`execute_planned`] — the production path: replays the
+//!   [`DecodeSchedule`] baked into a [`crate::engine::Plan`], so no
+//!   fixpoint iteration or deferred-message queue is needed.
+//! * [`execute_shuffle`] — the schedule-free fallback (fixpoint over
+//!   deferred messages), kept for ad-hoc plans and benches.
+//!
+//! [`NodeState`] buffers are epoch-versioned so an
+//! [`crate::engine::Executor`] reuses every allocation across batches:
+//! `reset()` is O(1) and the payload buffers keep their capacity.
 
+use crate::coding::decoder::DecodeSchedule;
 use crate::coding::plan::{Broadcast, IvId, Part, ShufflePlan};
 use crate::coding::xor::xor_into;
+use crate::error::{HetcdcError, Result};
 use crate::net::BroadcastNet;
 use std::collections::HashMap;
 
@@ -31,13 +44,34 @@ pub fn seg_wire_len(len: usize, nseg: u32) -> usize {
     len.div_ceil(nseg as usize)
 }
 
+/// (payload, wire) byte sizes of one broadcast for IVs of `iv_bytes` —
+/// the single source of the wire-framing arithmetic, shared by the
+/// byte-level executor and [`crate::engine::PredictedLoads`] so predicted
+/// and measured accounting cannot drift.
+pub fn broadcast_sizes(b: &Broadcast, iv_bytes: usize) -> (usize, usize) {
+    match b {
+        Broadcast::Uncoded { .. } => (iv_bytes, iv_bytes + HEADER_BYTES + PER_PART_BYTES),
+        Broadcast::Coded { parts, .. } => {
+            let stride = seg_wire_len(iv_bytes, parts.first().map(|p| p.nseg).unwrap_or(1));
+            (stride, stride + HEADER_BYTES + PER_PART_BYTES * parts.len())
+        }
+    }
+}
+
 /// Per-node IV knowledge with real bytes.
+///
+/// Payload buffers are epoch-versioned: [`NodeState::reset`] invalidates
+/// every slot in O(1) without freeing, so repeated batches through one
+/// [`crate::engine::Executor`] reuse all allocations.
 pub struct NodeState {
     q: usize,
     n_sub: usize,
     iv_bytes: usize,
-    /// Full payloads: index `group * n_sub + sub`.
-    known: Vec<Option<Vec<u8>>>,
+    /// Payload buffer per IV: index `group * n_sub + sub`. A buffer holds
+    /// valid bytes only when its epoch matches `cur`.
+    bufs: Vec<Vec<u8>>,
+    epoch: Vec<u32>,
+    cur: u32,
     /// Partially assembled IVs: iv -> (nseg, per-seg bytes).
     partial: HashMap<IvId, (u32, Vec<Option<Vec<u8>>>)>,
 }
@@ -48,8 +82,21 @@ impl NodeState {
             q,
             n_sub,
             iv_bytes,
-            known: vec![None; q * n_sub],
+            bufs: vec![Vec::new(); q * n_sub],
+            epoch: vec![0; q * n_sub],
+            cur: 1,
             partial: HashMap::new(),
+        }
+    }
+
+    /// Start a new batch: forget all IV knowledge, keep all buffers.
+    pub fn reset(&mut self) {
+        self.partial.clear();
+        if self.cur == u32::MAX {
+            self.epoch.fill(0);
+            self.cur = 1;
+        } else {
+            self.cur += 1;
         }
     }
 
@@ -58,14 +105,30 @@ impl NodeState {
         iv.group * self.n_sub + iv.sub
     }
 
+    /// Store a full IV payload, reusing the slot's buffer capacity.
     pub fn set_full(&mut self, iv: IvId, payload: Vec<u8>) {
         debug_assert_eq!(payload.len(), self.iv_bytes);
         let i = self.idx(iv);
-        self.known[i] = Some(payload);
+        self.bufs[i] = payload;
+        self.epoch[i] = self.cur;
+    }
+
+    /// Like [`Self::set_full`] but copies into the existing buffer.
+    pub fn set_full_from(&mut self, iv: IvId, bytes: &[u8]) {
+        debug_assert_eq!(bytes.len(), self.iv_bytes);
+        let i = self.idx(iv);
+        self.bufs[i].clear();
+        self.bufs[i].extend_from_slice(bytes);
+        self.epoch[i] = self.cur;
     }
 
     pub fn get_full(&self, iv: IvId) -> Option<&[u8]> {
-        self.known[self.idx(iv)].as_deref()
+        let i = self.idx(iv);
+        if self.epoch[i] == self.cur {
+            Some(&self.bufs[i])
+        } else {
+            None
+        }
     }
 
     pub fn knows_part(&self, p: &Part) -> bool {
@@ -97,15 +160,17 @@ impl NodeState {
     }
 
     /// Record a decoded part; assemble the full IV when complete.
-    pub fn learn_part(&mut self, p: &Part, bytes: Vec<u8>) {
+    pub fn learn_part(&mut self, p: &Part, bytes: &[u8]) {
         if self.get_full(p.iv).is_some() {
             return;
         }
         if p.nseg == 1 {
-            let mut payload = bytes;
-            payload.truncate(self.iv_bytes);
-            payload.resize(self.iv_bytes, 0);
-            self.set_full(p.iv, payload);
+            let i = self.idx(p.iv);
+            let take = bytes.len().min(self.iv_bytes);
+            self.bufs[i].clear();
+            self.bufs[i].extend_from_slice(&bytes[..take]);
+            self.bufs[i].resize(self.iv_bytes, 0);
+            self.epoch[i] = self.cur;
             return;
         }
         let entry = self
@@ -115,7 +180,7 @@ impl NodeState {
         if entry.0 != p.nseg {
             return; // mixed granularity not used by any built-in plan
         }
-        entry.1[p.seg as usize] = Some(bytes);
+        entry.1[p.seg as usize] = Some(bytes.to_vec());
         if entry.1.iter().all(|s| s.is_some()) {
             let (nseg, segs) = self.partial.remove(&p.iv).unwrap();
             let mut payload = Vec::with_capacity(self.iv_bytes);
@@ -143,7 +208,7 @@ impl NodeState {
                 xor_into(&mut recovered, &known);
             }
         }
-        self.learn_part(&parts[target], recovered);
+        self.learn_part(&parts[target], &recovered);
         true
     }
 }
@@ -158,14 +223,137 @@ pub struct ShuffleOutcome {
     pub messages: u64,
 }
 
-/// Execute `plan`: senders read `states[sender]`, every other node
-/// decodes. Returns byte accounting; panics if a sender lacks data it is
-/// scheduled to transmit (plans are validated upstream).
+/// Assemble the wire message of one broadcast from the sender's state,
+/// metering it on the network. Returns the message bytes.
+fn assemble_and_meter(
+    b: &Broadcast,
+    states: &[NodeState],
+    net: &mut BroadcastNet,
+    payload_bytes: &mut u64,
+    wire_bytes: &mut u64,
+) -> Result<Vec<u8>> {
+    let sender = b.sender();
+    let (payload_len, wire) = broadcast_sizes(b, states[sender].iv_bytes);
+    let msg = match b {
+        Broadcast::Uncoded { sender, iv } => states[*sender]
+            .get_full(*iv)
+            .ok_or_else(|| HetcdcError::Shuffle(format!("sender {sender} lacks {iv:?}")))?
+            .to_vec(),
+        Broadcast::Coded { sender, parts } => {
+            let mut msg = vec![0u8; payload_len];
+            for p in parts {
+                let bytes = states[*sender].part_bytes(p).ok_or_else(|| {
+                    HetcdcError::Shuffle(format!("sender {sender} lacks part {p:?}"))
+                })?;
+                xor_into(&mut msg, &bytes);
+            }
+            msg
+        }
+    };
+    debug_assert_eq!(msg.len(), payload_len);
+    *payload_bytes += payload_len as u64;
+    *wire_bytes += wire as u64;
+    net.broadcast(sender, wire);
+    Ok(msg)
+}
+
+/// Execute `plan` along a pre-verified [`DecodeSchedule`]: broadcasts are
+/// transmitted (metered) in plan order, and each node's decode order is
+/// replayed as its next scheduled message becomes available — no
+/// fixpoint, no deferred-message queue. A message buffer is dropped as
+/// soon as its last scheduled consumer has decoded it, so peak memory is
+/// bounded by the messages still awaiting a consumer, not the whole
+/// shuffle payload. The schedule was proven at plan-build time; a
+/// violation here is an internal error.
+pub fn execute_planned(
+    plan: &ShufflePlan,
+    schedule: &DecodeSchedule,
+    states: &mut [NodeState],
+    net: &mut BroadcastNet,
+) -> Result<ShuffleOutcome> {
+    let k = states.len();
+    if schedule.order.len() != k {
+        return Err(HetcdcError::Shuffle(format!(
+            "schedule covers {} nodes, cluster has {}",
+            schedule.order.len(),
+            k
+        )));
+    }
+    let n_broadcasts = plan.broadcasts.len();
+    // Consumers per broadcast, from the schedule (bounds-checked here).
+    let mut remaining = vec![0u32; n_broadcasts];
+    for order in &schedule.order {
+        for &bi in order {
+            if bi >= n_broadcasts {
+                return Err(HetcdcError::Shuffle(format!(
+                    "schedule references broadcast {bi} out of range"
+                )));
+            }
+            remaining[bi] += 1;
+        }
+    }
+
+    let mut payload_bytes = 0u64;
+    let mut wire_bytes = 0u64;
+    let mut msgs: Vec<Option<Vec<u8>>> = vec![None; n_broadcasts];
+    let mut cursors = vec![0usize; k];
+    for (bi, b) in plan.broadcasts.iter().enumerate() {
+        let msg = assemble_and_meter(b, states, net, &mut payload_bytes, &mut wire_bytes)?;
+        if remaining[bi] > 0 {
+            msgs[bi] = Some(msg);
+        }
+        // Advance every node whose next scheduled message has now been
+        // transmitted. A node's order may point backwards (an earlier
+        // index decodable only after a later one): entries wait until
+        // their own index is reached, then drain in dependency order.
+        for node in 0..k {
+            while let Some(&next) = schedule.order[node].get(cursors[node]) {
+                if next > bi {
+                    break;
+                }
+                let msg = msgs[next].as_deref().ok_or_else(|| {
+                    HetcdcError::Shuffle(format!(
+                        "internal: message {next} dropped before node {node} consumed it"
+                    ))
+                })?;
+                match &plan.broadcasts[next] {
+                    Broadcast::Uncoded { sender, iv } => {
+                        if node != *sender {
+                            states[node].learn_part(&Part::whole(*iv), msg);
+                        }
+                    }
+                    Broadcast::Coded { sender, parts } => {
+                        if node != *sender && !states[node].try_decode(parts, msg) {
+                            return Err(HetcdcError::Shuffle(format!(
+                                "decode schedule violated: node {node} cannot decode \
+                                 broadcast {next}"
+                            )));
+                        }
+                    }
+                }
+                cursors[node] += 1;
+                remaining[next] -= 1;
+                if remaining[next] == 0 {
+                    msgs[next] = None;
+                }
+            }
+        }
+    }
+
+    Ok(ShuffleOutcome {
+        payload_bytes,
+        wire_bytes,
+        messages: n_broadcasts as u64,
+    })
+}
+
+/// Execute `plan` without a schedule: senders read `states[sender]`,
+/// every other node decodes, deferred messages iterate to fixpoint.
 pub fn execute_shuffle(
     plan: &ShufflePlan,
     states: &mut [NodeState],
     net: &mut BroadcastNet,
-) -> Result<ShuffleOutcome, String> {
+) -> Result<ShuffleOutcome> {
     let k = states.len();
     let mut payload_bytes = 0u64;
     let mut wire_bytes = 0u64;
@@ -173,37 +361,17 @@ pub fn execute_shuffle(
     let mut pending: Vec<Vec<(Vec<Part>, Vec<u8>)>> = vec![Vec::new(); k];
 
     for b in &plan.broadcasts {
+        let msg = assemble_and_meter(b, states, net, &mut payload_bytes, &mut wire_bytes)?;
         match b {
             Broadcast::Uncoded { sender, iv } => {
-                let payload = states[*sender]
-                    .get_full(*iv)
-                    .ok_or_else(|| format!("sender {sender} lacks {iv:?}"))?
-                    .to_vec();
-                let wire = payload.len() + HEADER_BYTES + PER_PART_BYTES;
-                payload_bytes += payload.len() as u64;
-                wire_bytes += wire as u64;
-                net.broadcast(*sender, wire);
                 let part = Part::whole(*iv);
                 for (node, st) in states.iter_mut().enumerate() {
                     if node != *sender && !st.knows_part(&part) {
-                        st.learn_part(&part, payload.clone());
+                        st.learn_part(&part, &msg);
                     }
                 }
             }
             Broadcast::Coded { sender, parts } => {
-                // Assemble XOR of the sender's parts.
-                let stride = seg_wire_len(states[*sender].iv_bytes, parts[0].nseg);
-                let mut msg = vec![0u8; stride];
-                for p in parts {
-                    let bytes = states[*sender]
-                        .part_bytes(p)
-                        .ok_or_else(|| format!("sender {sender} lacks part {p:?}"))?;
-                    xor_into(&mut msg, &bytes);
-                }
-                let wire = msg.len() + HEADER_BYTES + PER_PART_BYTES * parts.len();
-                payload_bytes += msg.len() as u64;
-                wire_bytes += wire as u64;
-                net.broadcast(*sender, wire);
                 for (node, st) in states.iter_mut().enumerate() {
                     if node == *sender {
                         continue;
@@ -246,6 +414,7 @@ pub fn execute_shuffle(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coding::decoder;
     use crate::prop;
 
     #[test]
@@ -274,6 +443,20 @@ mod tests {
     }
 
     #[test]
+    fn reset_forgets_everything_without_reallocating() {
+        let mut st = NodeState::new(2, 2, 8);
+        let iv = IvId { group: 0, sub: 1 };
+        st.set_full(iv, vec![9u8; 8]);
+        st.learn_part(&Part { iv: IvId { group: 1, sub: 0 }, seg: 0, nseg: 2 }, &[1u8; 4]);
+        st.reset();
+        assert!(st.get_full(iv).is_none());
+        assert!(!st.knows_part(&Part { iv: IvId { group: 1, sub: 0 }, seg: 0, nseg: 2 }));
+        // Slots are reusable after reset.
+        st.set_full_from(iv, &[3u8; 8]);
+        assert_eq!(st.get_full(iv).unwrap(), &[3u8; 8]);
+    }
+
+    #[test]
     fn segment_assembly_reconstructs_payload() {
         let mut st = NodeState::new(1, 1, 10); // stride ceil(10/3) = 4
         let payload: Vec<u8> = (0u8..10).collect();
@@ -282,7 +465,7 @@ mod tests {
             let (s, e) = seg_range(10, seg, 3);
             let mut bytes = payload[s..e].to_vec();
             bytes.resize(4, 0);
-            st.learn_part(&Part { iv, seg, nseg: 3 }, bytes);
+            st.learn_part(&Part { iv, seg, nseg: 3 }, &bytes);
         }
         assert_eq!(st.get_full(iv).unwrap(), payload.as_slice());
     }
@@ -318,5 +501,59 @@ mod tests {
                 format!("len={len}"),
             )
         });
+    }
+
+    /// Seed every holder's Map knowledge with synthetic payloads.
+    fn seeded_states(
+        alloc: &crate::placement::alloc::Allocation,
+        iv_bytes: usize,
+    ) -> Vec<NodeState> {
+        let k = alloc.k;
+        let mut states: Vec<NodeState> = (0..k)
+            .map(|_| NodeState::new(k, alloc.n_sub(), iv_bytes))
+            .collect();
+        for (sub, &h) in alloc.holders.iter().enumerate() {
+            for (node, st) in states.iter_mut().enumerate() {
+                if h & (1 << node) != 0 {
+                    for g in 0..k {
+                        let byte = (sub as u8).wrapping_mul(31) ^ (g as u8);
+                        st.set_full(IvId { group: g, sub }, vec![byte; iv_bytes]);
+                    }
+                }
+            }
+        }
+        states
+    }
+
+    #[test]
+    fn planned_and_fixpoint_execution_agree() {
+        let p = crate::theory::params::Params3::new(5, 8, 11, 12).unwrap();
+        let alloc = crate::placement::k3::optimal_allocation(&p);
+        let plan = crate::coding::plan::plan_k3(&alloc);
+        let sched = decoder::schedule(&alloc, &plan).unwrap();
+        let iv_bytes = 32;
+
+        let mut s1 = seeded_states(&alloc, iv_bytes);
+        let mut n1 = BroadcastNet::homogeneous(3, 1e9, 0.0);
+        let o1 = execute_shuffle(&plan, &mut s1, &mut n1).unwrap();
+
+        let mut s2 = seeded_states(&alloc, iv_bytes);
+        let mut n2 = BroadcastNet::homogeneous(3, 1e9, 0.0);
+        let o2 = execute_planned(&plan, &sched, &mut s2, &mut n2).unwrap();
+
+        assert_eq!(o1.payload_bytes, o2.payload_bytes);
+        assert_eq!(o1.wire_bytes, o2.wire_bytes);
+        assert_eq!(o1.messages, o2.messages);
+        // Both paths deliver identical bytes everywhere.
+        for node in 0..3 {
+            for sub in 0..alloc.n_sub() {
+                let iv = IvId { group: node, sub };
+                assert_eq!(
+                    s1[node].get_full(iv).expect("fixpoint complete"),
+                    s2[node].get_full(iv).expect("planned complete"),
+                    "node {node} sub {sub}"
+                );
+            }
+        }
     }
 }

@@ -1,11 +1,24 @@
-//! The MapReduce engine: Map -> coded Shuffle -> Reduce over the simulated
-//! broadcast network, with byte-exact load accounting and oracle-verified
-//! outputs.
+//! The MapReduce engine: the staged `JobBuilder` → [`Plan`] →
+//! [`Executor`] pipeline over the simulated broadcast network, with
+//! byte-exact load accounting and oracle-verified outputs.
+//!
+//! * [`plan`] — build and serialize validated execution plans.
+//! * [`executor`] — run many data batches against one plan.
+//! * [`cache`] — [`PlanCache`], the heavy-traffic memo of built plans.
+//! * [`engine`] — [`Engine`], the one-shot facade, and [`RunReport`].
+//! * [`exec`] — byte-level shuffle execution primitives.
+//! * [`backend`] — native and PJRT compute backends.
 
 pub mod backend;
-pub mod exec;
+pub mod cache;
 #[allow(clippy::module_inception)]
 pub mod engine;
+pub mod exec;
+pub mod executor;
+pub mod plan;
 
 pub use backend::{MapBackend, NativeBackend, XlaBackend};
-pub use engine::{Engine, PlacementStrategy, RunReport};
+pub use cache::{PlanCache, PlanKey};
+pub use engine::{Engine, RunReport};
+pub use executor::Executor;
+pub use plan::{shape_fingerprint, JobBuilder, Plan, PredictedLoads};

@@ -1,0 +1,490 @@
+//! The staged pipeline's artifact: [`JobBuilder`] → [`Plan`] →
+//! [`crate::engine::Executor`].
+//!
+//! A [`Plan`] bundles everything that depends only on cluster shape and
+//! job *shape* — the [`Allocation`], the [`ShufflePlan`], the decode
+//! schedule, and the predicted loads/times — so the expensive work
+//! (Theorem-1 construction or the §V LP, shuffle planning, symbolic
+//! decode verification) happens exactly once and is reused across data
+//! batches. Plans are immutable once built, validated at build time
+//! (execution never re-verifies decodability), and serializable to JSON
+//! (`hetcdc plan` emits them; `hetcdc run --plan` consumes them; schema
+//! in DESIGN.md).
+
+use super::exec::broadcast_sizes;
+use crate::coding::coder::{coder_by_name, ShuffleCoder};
+use crate::coding::decoder::{self, DecodeSchedule};
+use crate::coding::plan::ShufflePlan;
+use crate::error::{HetcdcError, Result};
+use crate::model::cluster::ClusterSpec;
+use crate::model::job::{JobSpec, ShuffleMode};
+use crate::placement::alloc::Allocation;
+use crate::placement::placer::{placer_by_name, Placer};
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+
+/// Build-time predictions, exact for the deterministic simulator: a
+/// verified [`crate::engine::RunReport`] reproduces these numbers.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PredictedLoads {
+    /// Shuffle load in IV-equation units (the paper's metric).
+    pub load_equations: f64,
+    /// Shuffle load in subfile units (`load_equations · sp`).
+    pub load_units: f64,
+    /// Uncoded baseline for the same allocation, IV-equation units.
+    pub uncoded_equations: f64,
+    pub messages: u64,
+    pub payload_bytes: u64,
+    pub wire_bytes: u64,
+    /// Map barrier time under the per-node compute rates (virtual s).
+    pub map_time_s: f64,
+    /// Serialized broadcast time on the simulated network (virtual s).
+    pub shuffle_time_s: f64,
+}
+
+impl PredictedLoads {
+    fn compute(cluster: &ClusterSpec, job: &JobSpec, alloc: &Allocation, shuffle: &ShufflePlan) -> Self {
+        let iv_bytes = job.iv_bytes();
+        let mut payload_bytes = 0u64;
+        let mut wire_bytes = 0u64;
+        let mut net = cluster.network();
+        for b in &shuffle.broadcasts {
+            let (payload, wire) = broadcast_sizes(b, iv_bytes);
+            payload_bytes += payload as u64;
+            wire_bytes += wire as u64;
+            net.broadcast(b.sender(), wire);
+        }
+        let mut map_time_s = 0f64;
+        for (node, spec) in cluster.nodes.iter().enumerate() {
+            let files_equiv = alloc.node_count(node) as f64 / alloc.sp as f64;
+            map_time_s = map_time_s.max(files_equiv / spec.map_files_per_s.max(1e-9));
+        }
+        PredictedLoads {
+            load_equations: shuffle.load_equations(alloc),
+            load_units: shuffle.load_units(),
+            uncoded_equations: alloc.uncoded_units() as f64 / alloc.sp as f64,
+            messages: shuffle.broadcasts.len() as u64,
+            payload_bytes,
+            wire_bytes,
+            map_time_s,
+            shuffle_time_s: net.report().elapsed_s,
+        }
+    }
+
+    fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("load_equations".into(), Json::Num(self.load_equations));
+        m.insert("load_units".into(), Json::Num(self.load_units));
+        m.insert("uncoded_equations".into(), Json::Num(self.uncoded_equations));
+        m.insert("messages".into(), Json::Num(self.messages as f64));
+        m.insert("payload_bytes".into(), Json::Num(self.payload_bytes as f64));
+        m.insert("wire_bytes".into(), Json::Num(self.wire_bytes as f64));
+        m.insert("map_time_s".into(), Json::Num(self.map_time_s));
+        m.insert("shuffle_time_s".into(), Json::Num(self.shuffle_time_s));
+        Json::Obj(m)
+    }
+}
+
+/// FNV-1a over the cluster shape and job shape (everything that affects
+/// plan construction; the data seed is deliberately excluded — one plan
+/// serves many batches). Display-friendly cache/plan identity; the
+/// [`crate::engine::PlanCache`] keys on the exact shapes, not this hash.
+pub fn shape_fingerprint(cluster: &ClusterSpec, job: &JobSpec) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    let mut eat = |bytes: &[u8]| {
+        for &b in bytes {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+    };
+    eat(&(cluster.k() as u64).to_le_bytes());
+    for n in &cluster.nodes {
+        eat(&n.storage.to_le_bytes());
+        eat(&n.uplink_mbps.to_bits().to_le_bytes());
+        eat(&n.map_files_per_s.to_bits().to_le_bytes());
+    }
+    eat(&cluster.latency_ms.to_bits().to_le_bytes());
+    eat(&[match job.workload {
+        crate::model::job::WorkloadKind::WordCount => 1u8,
+        crate::model::job::WorkloadKind::TeraSort => 2u8,
+    }]);
+    eat(&job.n_files.to_le_bytes());
+    eat(&(job.t as u64).to_le_bytes());
+    eat(&(job.vocab as u64).to_le_bytes());
+    eat(&(job.keys_per_file as u64).to_le_bytes());
+    h
+}
+
+/// An immutable, validated, serializable execution plan. Construct via
+/// [`JobBuilder`] (or deserialize with [`Plan::from_json_str`], which
+/// re-validates). Fields are public for inspection; treat them as
+/// read-only — the decode schedule and predictions are only correct for
+/// the exact allocation and shuffle plan they were built from.
+#[derive(Clone, Debug)]
+pub struct Plan {
+    pub cluster: ClusterSpec,
+    pub job: JobSpec,
+    /// Placer registry name that produced the allocation.
+    pub placer: String,
+    /// Coder registry name that produced the shuffle plan.
+    pub coder: String,
+    pub mode: ShuffleMode,
+    pub alloc: Allocation,
+    pub shuffle: ShufflePlan,
+    /// Decode order proven at build time; execution replays it verbatim.
+    pub schedule: DecodeSchedule,
+    pub predicted: PredictedLoads,
+    /// [`shape_fingerprint`] of (cluster, job shape).
+    pub fingerprint: u64,
+}
+
+impl Plan {
+    /// Validate and assemble a plan from its parts: checks the job, the
+    /// allocation (against capacities as upper bounds), and decodability
+    /// — the single validation gate for built *and* deserialized plans.
+    pub fn assemble(
+        cluster: ClusterSpec,
+        job: JobSpec,
+        placer: String,
+        coder: String,
+        mode: ShuffleMode,
+        alloc: Allocation,
+        shuffle: ShufflePlan,
+    ) -> Result<Plan> {
+        job.validate(cluster.k())?;
+        if alloc.k != cluster.k() {
+            return Err(HetcdcError::PlanMismatch(format!(
+                "allocation is for K={}, cluster has K={}",
+                alloc.k,
+                cluster.k()
+            )));
+        }
+        alloc.validate_le(&cluster.storage(), job.n_files)?;
+        shuffle.validate(alloc.k, alloc.n_sub())?;
+        let schedule = decoder::schedule(&alloc, &shuffle)?;
+        let predicted = PredictedLoads::compute(&cluster, &job, &alloc, &shuffle);
+        let fingerprint = shape_fingerprint(&cluster, &job);
+        Ok(Plan {
+            cluster,
+            job,
+            placer,
+            coder,
+            mode,
+            alloc,
+            shuffle,
+            schedule,
+            predicted,
+            fingerprint,
+        })
+    }
+
+    /// Exact shape equality against a (cluster, job) pair: everything
+    /// [`shape_fingerprint`] covers, compared field-by-field (node names
+    /// and data seeds excluded). Use this — not the fingerprint, which is
+    /// a non-collision-resistant display identity — to gate execution.
+    pub fn shape_matches(&self, cluster: &ClusterSpec, job: &JobSpec) -> bool {
+        let a = &self.cluster;
+        let cluster_eq = a.k() == cluster.k()
+            && a.latency_ms.to_bits() == cluster.latency_ms.to_bits()
+            && a.nodes.iter().zip(&cluster.nodes).all(|(x, y)| {
+                x.storage == y.storage
+                    && x.uplink_mbps.to_bits() == y.uplink_mbps.to_bits()
+                    && x.map_files_per_s.to_bits() == y.map_files_per_s.to_bits()
+            });
+        let b = &self.job;
+        cluster_eq
+            && b.workload == job.workload
+            && b.n_files == job.n_files
+            && b.t == job.t
+            && b.vocab == job.vocab
+            && b.keys_per_file == job.keys_per_file
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("version".into(), Json::Num(1.0));
+        m.insert("placer".into(), Json::Str(self.placer.clone()));
+        m.insert("coder".into(), Json::Str(self.coder.clone()));
+        m.insert("mode".into(), Json::Str(self.mode.as_str().into()));
+        m.insert("fingerprint".into(), Json::Str(format!("{:016x}", self.fingerprint)));
+        m.insert("cluster".into(), self.cluster.to_json());
+        m.insert("job".into(), self.job.to_json());
+        m.insert("allocation".into(), self.alloc.to_json());
+        m.insert("shuffle".into(), self.shuffle.to_json());
+        m.insert("predicted".into(), self.predicted.to_json());
+        Json::Obj(m)
+    }
+
+    pub fn to_json_string(&self) -> String {
+        self.to_json().to_string_pretty()
+    }
+
+    /// Deserialize and **re-validate**: the decode schedule and the
+    /// predictions are recomputed from the parsed allocation and shuffle
+    /// plan, so a tampered or stale artifact fails with a typed error
+    /// instead of executing.
+    pub fn from_json(j: &Json) -> Result<Plan> {
+        let bad = |f: &str| HetcdcError::Json(format!("plan: missing or invalid '{f}'"));
+        if let Some(v) = j.get("version") {
+            if v.as_usize() != Some(1) {
+                return Err(HetcdcError::Json(format!(
+                    "plan: unsupported version {v}"
+                )));
+            }
+        }
+        let cluster = ClusterSpec::from_json(j.get("cluster").ok_or_else(|| bad("cluster"))?)?;
+        let job = JobSpec::from_json(j.get("job").ok_or_else(|| bad("job"))?)?;
+        let mode = ShuffleMode::parse(
+            j.get("mode").and_then(|v| v.as_str()).ok_or_else(|| bad("mode"))?,
+        )?;
+        let placer = j
+            .get("placer")
+            .and_then(|v| v.as_str())
+            .unwrap_or("custom")
+            .to_string();
+        let coder = j
+            .get("coder")
+            .and_then(|v| v.as_str())
+            .unwrap_or("unknown")
+            .to_string();
+        let alloc = Allocation::from_json(j.get("allocation").ok_or_else(|| bad("allocation"))?)?;
+        let shuffle = ShufflePlan::from_json(j.get("shuffle").ok_or_else(|| bad("shuffle"))?)?;
+        Plan::assemble(cluster, job, placer, coder, mode, alloc, shuffle)
+    }
+
+    pub fn from_json_str(text: &str) -> Result<Plan> {
+        Plan::from_json(&Json::parse(text)?)
+    }
+}
+
+/// Entry point of the staged pipeline: collect cluster/job and strategy
+/// choices, then [`JobBuilder::build`] a validated [`Plan`].
+///
+/// ```no_run
+/// use hetcdc::engine::{Executor, JobBuilder, NativeBackend};
+/// use hetcdc::model::cluster::ClusterSpec;
+/// use hetcdc::model::job::JobSpec;
+///
+/// let cluster = ClusterSpec::ec2_like_3node(12);
+/// let job = JobSpec::terasort(12);
+/// let plan = JobBuilder::new(&cluster, &job).placer("optimal-k3").build().unwrap();
+/// let mut backend = NativeBackend;
+/// let mut exec = Executor::new(&plan);
+/// for batch in 0u64..3 {
+///     let report = exec.run_batch(&mut backend, job.seed + batch).unwrap();
+///     assert!(report.verified);
+/// }
+/// ```
+pub struct JobBuilder<'a> {
+    cluster: &'a ClusterSpec,
+    job: &'a JobSpec,
+    placer: String,
+    coder: Option<String>,
+    mode: ShuffleMode,
+    custom: Option<Allocation>,
+}
+
+impl<'a> JobBuilder<'a> {
+    pub fn new(cluster: &'a ClusterSpec, job: &'a JobSpec) -> Self {
+        JobBuilder {
+            cluster,
+            job,
+            placer: "auto".to_string(),
+            coder: None,
+            mode: ShuffleMode::Coded,
+            custom: None,
+        }
+    }
+
+    /// Pick a placer by registry name (default `"auto"`: Theorem 1 for
+    /// K=3, the §V LP otherwise).
+    pub fn placer(mut self, name: &str) -> Self {
+        self.placer = name.to_string();
+        self
+    }
+
+    /// Pick a shuffle coder by registry name (default: the placer's
+    /// [`crate::placement::Placer::default_coder`]; ignored for
+    /// [`ShuffleMode::Uncoded`]).
+    pub fn coder(mut self, name: &str) -> Self {
+        self.coder = Some(name.to_string());
+        self
+    }
+
+    pub fn mode(mut self, mode: ShuffleMode) -> Self {
+        self.mode = mode;
+        self
+    }
+
+    /// Use a caller-provided allocation (e.g. from a custom
+    /// [`crate::placement::Placer`] impl) instead of a registry placer.
+    pub fn custom_allocation(mut self, alloc: Allocation) -> Self {
+        self.custom = Some(alloc);
+        self
+    }
+
+    /// Place, code, verify, predict — everything that does not depend on
+    /// the data batch.
+    pub fn build(self) -> Result<Plan> {
+        // `Plan::assemble` is the validation gate for deserialized plans
+        // and re-checks job and allocation; the early checks here exist so
+        // placers and coders never observe a malformed job (n_files = 0
+        // would divide-by-zero in the homogeneous placer) or allocation.
+        self.job.validate(self.cluster.k())?;
+        let (placer_name, alloc, default_coder) = match self.custom {
+            Some(a) => ("custom".to_string(), a, "pairing"),
+            None => {
+                let placer = placer_by_name(&self.placer, self.cluster)?;
+                (
+                    placer.name().to_string(),
+                    placer.place(self.cluster, self.job)?,
+                    placer.default_coder(),
+                )
+            }
+        };
+        alloc.validate_le(&self.cluster.storage(), self.job.n_files)?;
+        let coder_name = match self.mode {
+            ShuffleMode::Uncoded => "uncoded".to_string(),
+            ShuffleMode::Coded => self.coder.unwrap_or_else(|| default_coder.to_string()),
+        };
+        let coder = coder_by_name(&coder_name)?;
+        let shuffle = coder.plan(self.cluster, self.job, &alloc)?;
+        Plan::assemble(
+            self.cluster.clone(),
+            self.job.clone(),
+            placer_name,
+            coder.name().to_string(),
+            self.mode,
+            alloc,
+            shuffle,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::theory::load;
+    use crate::theory::params::Params3;
+
+    fn cluster(storage: &[u64]) -> ClusterSpec {
+        let mut c = ClusterSpec::homogeneous(storage.len(), 1, 1000.0);
+        for (node, &m) in c.nodes.iter_mut().zip(storage) {
+            node.storage = m;
+        }
+        c
+    }
+
+    #[test]
+    fn build_paper_example_predicts_lstar() {
+        let c = cluster(&[6, 7, 7]);
+        let job = JobSpec::terasort(12);
+        let plan = JobBuilder::new(&c, &job).placer("optimal-k3").build().unwrap();
+        let p = Params3::new(6, 7, 7, 12).unwrap();
+        assert_eq!(plan.predicted.load_equations, load::lstar(&p));
+        assert_eq!(plan.predicted.uncoded_equations, load::uncoded(&p));
+        assert_eq!(plan.placer, "optimal-k3");
+        assert_eq!(plan.coder, "pairing");
+        assert!(plan.predicted.shuffle_time_s > 0.0);
+        assert!(plan.predicted.map_time_s > 0.0);
+        assert!(plan.predicted.wire_bytes > plan.predicted.payload_bytes);
+    }
+
+    #[test]
+    fn uncoded_mode_overrides_coder() {
+        let c = cluster(&[6, 7, 7]);
+        let job = JobSpec::terasort(12);
+        let plan = JobBuilder::new(&c, &job)
+            .placer("optimal-k3")
+            .coder("pairing")
+            .mode(ShuffleMode::Uncoded)
+            .build()
+            .unwrap();
+        assert_eq!(plan.coder, "uncoded");
+        let p = Params3::new(6, 7, 7, 12).unwrap();
+        assert_eq!(plan.predicted.load_equations, load::uncoded(&p));
+    }
+
+    #[test]
+    fn auto_placer_resolves_by_k() {
+        let c3 = cluster(&[6, 7, 7]);
+        let job3 = JobSpec::terasort(12);
+        assert_eq!(
+            JobBuilder::new(&c3, &job3).build().unwrap().placer,
+            "optimal-k3"
+        );
+        let c4 = cluster(&[3, 4, 5, 6]);
+        let job4 = JobSpec::terasort(8);
+        assert_eq!(
+            JobBuilder::new(&c4, &job4).build().unwrap().placer,
+            "lp-general"
+        );
+    }
+
+    #[test]
+    fn invalid_job_is_typed_error() {
+        let c = cluster(&[6, 7, 7]);
+        let job = JobSpec::terasort(0);
+        assert!(matches!(
+            JobBuilder::new(&c, &job).build().unwrap_err(),
+            HetcdcError::InvalidJob(_)
+        ));
+    }
+
+    #[test]
+    fn json_roundtrip_revalidates() {
+        let c = cluster(&[6, 7, 7]);
+        let job = JobSpec::wordcount(12);
+        let plan = JobBuilder::new(&c, &job).build().unwrap();
+        let text = plan.to_json_string();
+        let back = Plan::from_json_str(&text).unwrap();
+        assert_eq!(back.placer, plan.placer);
+        assert_eq!(back.coder, plan.coder);
+        assert_eq!(back.mode, plan.mode);
+        assert_eq!(back.alloc, plan.alloc);
+        assert_eq!(back.shuffle.broadcasts, plan.shuffle.broadcasts);
+        assert_eq!(back.schedule, plan.schedule);
+        assert_eq!(back.predicted, plan.predicted);
+        assert_eq!(back.fingerprint, plan.fingerprint);
+    }
+
+    #[test]
+    fn tampered_plan_fails_validation() {
+        let c = cluster(&[6, 7, 7]);
+        let job = JobSpec::terasort(12);
+        let mut plan = JobBuilder::new(&c, &job).build().unwrap();
+        // Drop one broadcast: the JSON still parses but no longer decodes.
+        plan.shuffle.broadcasts.pop();
+        let text = plan.to_json_string();
+        assert!(matches!(
+            Plan::from_json_str(&text).unwrap_err(),
+            HetcdcError::Undecodable { .. }
+        ));
+    }
+
+    #[test]
+    fn hostile_plan_sender_fails_typed_not_panicking() {
+        let c = cluster(&[6, 7, 7]);
+        let job = JobSpec::terasort(12);
+        let plan = JobBuilder::new(&c, &job).build().unwrap();
+        // Corrupt a sender id beyond K in the serialized form.
+        let text = plan.to_json_string().replacen("\"sender\": 0", "\"sender\": 40", 1);
+        match Plan::from_json_str(&text) {
+            Err(HetcdcError::PlanMismatch(_)) | Err(HetcdcError::Undecodable { .. }) => {}
+            other => panic!("expected typed rejection, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn fingerprint_ignores_seed_but_not_shape() {
+        let c = cluster(&[6, 7, 7]);
+        let mut a = JobSpec::terasort(12);
+        let mut b = a.clone();
+        b.seed = a.seed.wrapping_add(1);
+        assert_eq!(shape_fingerprint(&c, &a), shape_fingerprint(&c, &b));
+        a.n_files = 10;
+        assert_ne!(shape_fingerprint(&c, &a), shape_fingerprint(&c, &b));
+        let c2 = cluster(&[6, 7, 8]);
+        assert_ne!(shape_fingerprint(&c, &b), shape_fingerprint(&c2, &b));
+    }
+}

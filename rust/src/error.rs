@@ -1,0 +1,143 @@
+//! Typed errors for the public API.
+//!
+//! Hand-rolled in the `thiserror` style (the offline build carries no
+//! proc-macro dependencies): one enum, `Display` messages that read like
+//! the old string errors, `std::error::Error`, and `From` impls for the
+//! substrate error types so `?` composes across layers.
+//!
+//! Every public fallible API in this crate returns [`HetcdcError`]; the
+//! [`Result`] alias defaults its error parameter accordingly.
+
+use std::fmt;
+
+/// Everything that can go wrong between a cluster description and a
+/// verified [`crate::engine::RunReport`].
+#[derive(Clone, Debug, PartialEq)]
+pub enum HetcdcError {
+    /// Cluster parameters violate the §II model (storage cannot cover the
+    /// file set, K out of range, zero-node cluster, ...).
+    InvalidParams(String),
+    /// Job specification is inconsistent (no files, zero-length IVs, a
+    /// workload knob left unset).
+    InvalidJob(String),
+    /// An allocation violates coverage or capacity constraints.
+    InvalidPlacement(String),
+    /// A placer or coder cannot serve this cluster/job shape (e.g. the
+    /// homogeneous placer on unequal storage).
+    Unsupported {
+        strategy: &'static str,
+        reason: String,
+    },
+    /// No placer/coder is registered under this name.
+    UnknownStrategy {
+        kind: &'static str,
+        name: String,
+    },
+    /// The §V linear program failed (infeasible/unbounded).
+    Lp(crate::lp::LpError),
+    /// A shuffle plan failed symbolic decode verification: some node ends
+    /// the Shuffle phase still missing intermediate values.
+    Undecodable {
+        node: usize,
+        missing: usize,
+    },
+    /// A compute backend (native or PJRT) failed.
+    Backend(String),
+    /// Byte-level shuffle execution failed (a sender was scheduled to
+    /// transmit data it does not hold, ...).
+    Shuffle(String),
+    /// JSON parse or schema error (configs, plan artifacts, manifests).
+    Json(String),
+    /// A serialized plan artifact is internally inconsistent or does not
+    /// match the cluster/job it is being executed against.
+    PlanMismatch(String),
+    /// Filesystem I/O (config files, plan files, artifacts).
+    Io(String),
+    /// The PJRT runtime is unavailable (built without the `xla` feature,
+    /// or artifacts missing).
+    RuntimeUnavailable(String),
+}
+
+/// Crate-wide result alias; the error parameter defaults to
+/// [`HetcdcError`] but stays overridable.
+pub type Result<T, E = HetcdcError> = std::result::Result<T, E>;
+
+impl HetcdcError {
+    /// Wrap any displayable failure as a backend error.
+    pub fn backend(e: impl fmt::Display) -> Self {
+        HetcdcError::Backend(e.to_string())
+    }
+
+    /// Wrap any displayable failure as an I/O error.
+    pub fn io(e: impl fmt::Display) -> Self {
+        HetcdcError::Io(e.to_string())
+    }
+}
+
+impl fmt::Display for HetcdcError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            HetcdcError::InvalidParams(m) => write!(f, "invalid parameters: {m}"),
+            HetcdcError::InvalidJob(m) => write!(f, "invalid job: {m}"),
+            HetcdcError::InvalidPlacement(m) => write!(f, "invalid placement: {m}"),
+            HetcdcError::Unsupported { strategy, reason } => {
+                write!(f, "{strategy}: unsupported here: {reason}")
+            }
+            HetcdcError::UnknownStrategy { kind, name } => {
+                write!(f, "unknown {kind} '{name}'")
+            }
+            HetcdcError::Lp(e) => write!(f, "LP: {e}"),
+            HetcdcError::Undecodable { node, missing } => write!(
+                f,
+                "plan not decodable: node {node} misses {missing} intermediate value(s)"
+            ),
+            HetcdcError::Backend(m) => write!(f, "backend: {m}"),
+            HetcdcError::Shuffle(m) => write!(f, "shuffle execution: {m}"),
+            HetcdcError::Json(m) => write!(f, "json: {m}"),
+            HetcdcError::PlanMismatch(m) => write!(f, "plan mismatch: {m}"),
+            HetcdcError::Io(m) => write!(f, "io: {m}"),
+            HetcdcError::RuntimeUnavailable(m) => write!(f, "runtime unavailable: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for HetcdcError {}
+
+impl From<crate::lp::LpError> for HetcdcError {
+    fn from(e: crate::lp::LpError) -> Self {
+        HetcdcError::Lp(e)
+    }
+}
+
+impl From<crate::util::json::JsonError> for HetcdcError {
+    fn from(e: crate::util::json::JsonError) -> Self {
+        HetcdcError::Json(e.to_string())
+    }
+}
+
+impl From<std::io::Error> for HetcdcError {
+    fn from(e: std::io::Error) -> Self {
+        HetcdcError::Io(e.to_string())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_is_informative() {
+        let e = HetcdcError::Undecodable { node: 2, missing: 3 };
+        let s = e.to_string();
+        assert!(s.contains("node 2") && s.contains("3"));
+        assert!(HetcdcError::UnknownStrategy { kind: "placer", name: "nope".into() }
+            .to_string()
+            .contains("nope"));
+    }
+
+    #[test]
+    fn from_lp_error() {
+        let e: HetcdcError = crate::lp::LpError::Infeasible.into();
+        assert_eq!(e, HetcdcError::Lp(crate::lp::LpError::Infeasible));
+    }
+}

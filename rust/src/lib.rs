@@ -11,18 +11,48 @@
 //! * **Layer 1/2 (build-time Python)** — Pallas kernels + JAX Map/Reduce
 //!   graphs, AOT-lowered to `artifacts/*.hlo.txt`.
 //! * **Layer 3 (this crate)** — placement theory, LP solver, coded shuffle
-//!   planning, broadcast-network simulation, the MapReduce engine, and the
-//!   PJRT runtime that executes the artifacts. Python never runs at
-//!   request time.
+//!   planning, broadcast-network simulation, the staged execution
+//!   pipeline, and the PJRT runtime that executes the artifacts (`xla`
+//!   feature). Python never runs at request time.
 //!
-//! Quick tour:
+//! ## The staged pipeline
+//!
+//! The public API separates what depends on *shape* from what depends on
+//! *data*:
+//!
+//! ```text
+//! JobBuilder ──build()──▶ Plan ──Executor::new()──▶ Executor ──run_batch()──▶ RunReport
+//!  (cluster, job,          immutable, validated,      reusable buffers,        per-batch
+//!   placer, coder, mode)   serializable artifact      many data batches        measurements
+//! ```
+//!
+//! * [`engine::JobBuilder`] resolves a [`placement::Placer`] and a
+//!   [`coding::ShuffleCoder`] from their registries (the five classic
+//!   strategies are trait impls) and builds a plan.
+//! * [`engine::Plan`] bundles the allocation, the broadcast schedule, the
+//!   decode schedule, and exact predicted loads/times. It is verified by
+//!   the symbolic decoder **at build time** — execution never re-checks
+//!   decodability — and round-trips through JSON (`hetcdc plan`,
+//!   `hetcdc run --plan`; schema in DESIGN.md).
+//! * [`engine::Executor`] runs many data batches against one plan,
+//!   reusing every per-node buffer; [`engine::PlanCache`] memoizes plans
+//!   by (cluster shape, job shape, strategy) for the heavy-traffic path.
+//! * [`engine::Engine`] is the one-shot facade when a single batch is all
+//!   you need.
+//!
+//! Every fallible API returns [`error::HetcdcError`] (re-exported at the
+//! crate root) — no stringly-typed errors.
+//!
+//! Theory quick tour:
 //! * [`theory`] — Theorem 1 closed forms, converse bounds, baselines.
 //! * [`placement`] — optimal K=3 placements, Lemma-1 pairing, §V LP.
+//! * [`coding`] — shuffle plans, the symbolic decoder, decode schedules.
 //! * [`lp`] — two-phase simplex (f64 + exact rational), from scratch.
 
 pub mod bench;
 pub mod coding;
 pub mod engine;
+pub mod error;
 pub mod lp;
 pub mod model;
 pub mod net;
@@ -32,3 +62,5 @@ pub mod runtime;
 pub mod theory;
 pub mod util;
 pub mod workloads;
+
+pub use error::HetcdcError;

@@ -431,7 +431,7 @@ mod tests {
                     )
                 }
                 (Err(a), Err(b)) => prop::check(a == b, format!("{a:?} vs {b:?}")),
-                (a, b) => Err(format!("divergent outcomes: f64={a:?} exact={b:?}")),
+                (a, b) => prop::fail(format!("divergent outcomes: f64={a:?} exact={b:?}")),
             }
         });
     }

@@ -4,11 +4,16 @@
 //! * `loadstar`  — Theorem-1 closed form, regime, converse bounds.
 //! * `place`     — construct + print the optimal allocation.
 //! * `lp`        — run the §V LP for general K.
-//! * `run`       — execute a full MapReduce job (native or XLA backend).
+//! * `plan`      — build a validated execution plan and emit it as JSON.
+//! * `run`       — execute a MapReduce job (native or XLA backend),
+//!                 either planning inline or consuming `--plan FILE`,
+//!                 for one or many data batches.
 //! * `sweep`     — L* table over a storage grid.
 //! * `info`      — artifact manifest summary.
 
-use hetcdc::engine::{Engine, NativeBackend, PlacementStrategy, XlaBackend};
+use hetcdc::engine::{
+    Executor, JobBuilder, MapBackend, NativeBackend, Plan, RunReport, XlaBackend,
+};
 use hetcdc::model::cluster::ClusterSpec;
 use hetcdc::model::job::{JobSpec, ShuffleMode};
 use hetcdc::placement::{k3, lp_general};
@@ -16,6 +21,7 @@ use hetcdc::runtime::Runtime;
 use hetcdc::theory::params::{Params3, ParamsK};
 use hetcdc::theory::{converse, homogeneous as th_hom, load};
 use hetcdc::util::cli::{usage, ArgSpec, Args};
+use hetcdc::HetcdcError;
 
 fn main() {
     hetcdc::util::logging::init();
@@ -24,6 +30,7 @@ fn main() {
         Some("loadstar") => cmd_loadstar(&argv[1..]),
         Some("place") => cmd_place(&argv[1..]),
         Some("lp") => cmd_lp(&argv[1..]),
+        Some("plan") => cmd_plan(&argv[1..]),
         Some("run") => cmd_run(&argv[1..]),
         Some("sweep") => cmd_sweep(&argv[1..]),
         Some("verify") => cmd_verify(&argv[1..]),
@@ -49,8 +56,12 @@ fn print_help() {
          \x20 loadstar  --storage M1,M2,M3 --n N     Theorem-1 minimum load\n\
          \x20 place     --storage M1,M2,M3 --n N     optimal file placement\n\
          \x20 lp        --storage M1,..,MK --n N     §V LP for general K\n\
+         \x20 plan      --workload wordcount|terasort [--storage ... | --config ...]\n\
+         \x20           [--placement NAME] [--coder NAME] [--out plan.json]\n\
+         \x20           build + verify an execution plan, emit JSON\n\
          \x20 run       --workload wordcount|terasort [--backend native|xla]\n\
          \x20           [--config cluster.json | --storage ...] [--mode coded|uncoded]\n\
+         \x20           [--plan plan.json] [--batches B]\n\
          \x20 sweep     --n N [--max-m M]            L* table over storage grid\n\
          \x20 verify    [--n N]                      full self-check (theory, coding, LP)\n\
          \x20 info      [--artifacts DIR]            artifact manifest summary\n\n\
@@ -69,12 +80,20 @@ const STORAGE_SPECS: &[ArgSpec] = &[
     ArgSpec { name: "help", help: "show usage", takes_value: false, default: None },
 ];
 
-fn parse_params3(args: &Args) -> Result<Params3, String> {
-    let m = args.get_u64_list("storage").map_err(|e| e.to_string())?;
+fn parse_params3(args: &Args) -> Result<Params3, HetcdcError> {
+    let m = args
+        .get_u64_list("storage")
+        .map_err(|e| HetcdcError::InvalidParams(e.to_string()))?;
     if m.len() != 3 {
-        return Err(format!("expected 3 storage values, got {}", m.len()));
+        return Err(HetcdcError::InvalidParams(format!(
+            "expected 3 storage values, got {}",
+            m.len()
+        )));
     }
-    Params3::new(m[0], m[1], m[2], args.get_u64("n").map_err(|e| e.to_string())?)
+    let n = args
+        .get_u64("n")
+        .map_err(|e| HetcdcError::InvalidParams(e.to_string()))?;
+    Params3::new(m[0], m[1], m[2], n)
 }
 
 fn cmd_loadstar(argv: &[String]) -> i32 {
@@ -209,15 +228,153 @@ fn cmd_lp(argv: &[String]) -> i32 {
     0
 }
 
+/// Shared cluster/job parsing for `plan` and `run`.
+fn parse_cluster_job(args: &Args) -> Result<(ClusterSpec, JobSpec), HetcdcError> {
+    let n = args
+        .get_u64("n")
+        .map_err(|e| HetcdcError::InvalidParams(e.to_string()))?;
+    let cluster = if let Some(path) = args.get("config") {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| HetcdcError::Io(format!("config {path}: {e}")))?;
+        ClusterSpec::from_json_str(&text)?
+    } else {
+        let m = args
+            .get_u64_list("storage")
+            .map_err(|e| HetcdcError::InvalidParams(e.to_string()))?;
+        let mut c = ClusterSpec::homogeneous(m.len(), 1, 1000.0);
+        for (node, &mk) in c.nodes.iter_mut().zip(&m) {
+            node.storage = mk;
+        }
+        c
+    };
+    let job = match args.get("workload") {
+        Some("wordcount") => JobSpec::wordcount(n),
+        Some("terasort") => JobSpec::terasort(n),
+        other => {
+            return Err(HetcdcError::InvalidJob(format!(
+                "unknown workload {other:?}"
+            )))
+        }
+    };
+    Ok((cluster, job))
+}
+
+fn cmd_plan(argv: &[String]) -> i32 {
+    let specs: Vec<ArgSpec> = vec![
+        ArgSpec { name: "workload", help: "wordcount | terasort", takes_value: true, default: Some("terasort") },
+        ArgSpec { name: "n", help: "number of files N", takes_value: true, default: Some("12") },
+        ArgSpec { name: "storage", help: "per-node storage (ignored with --config)", takes_value: true, default: Some("6,7,7") },
+        ArgSpec { name: "config", help: "cluster JSON config path", takes_value: true, default: None },
+        ArgSpec { name: "placement", help: "auto | optimal-k3 | lp-general | homogeneous | oblivious", takes_value: true, default: Some("auto") },
+        ArgSpec { name: "coder", help: "pairing | greedy | multicast | memshare (default: placer's)", takes_value: true, default: None },
+        ArgSpec { name: "mode", help: "coded | uncoded", takes_value: true, default: Some("coded") },
+        ArgSpec { name: "out", help: "write plan JSON here (default: stdout)", takes_value: true, default: None },
+        ArgSpec { name: "help", help: "show usage", takes_value: false, default: None },
+    ];
+    let args = match Args::parse(argv, &specs) {
+        Ok(a) => a,
+        Err(e) => return fail(e),
+    };
+    if args.flag("help") {
+        println!("{}", usage("hetcdc plan", "Build + verify an execution plan, emit JSON", &specs));
+        return 0;
+    }
+    let (cluster, job) = match parse_cluster_job(&args) {
+        Ok(x) => x,
+        Err(e) => return fail(e),
+    };
+    let mode = match ShuffleMode::parse(args.get("mode").unwrap_or("coded")) {
+        Ok(m) => m,
+        Err(e) => return fail(e),
+    };
+    let mut builder = JobBuilder::new(&cluster, &job)
+        .placer(args.get("placement").unwrap_or("auto"))
+        .mode(mode);
+    if let Some(c) = args.get("coder") {
+        builder = builder.coder(c);
+    }
+    let plan = match builder.build() {
+        Ok(p) => p,
+        Err(e) => return fail(e),
+    };
+    let text = plan.to_json_string();
+    match args.get("out") {
+        Some(path) => {
+            if let Err(e) = std::fs::write(path, &text) {
+                return fail(format!("writing {path}: {e}"));
+            }
+            println!(
+                "plan written to {path}: placer={} coder={} mode={} predicted load {} IV-equations \
+                 ({} messages, fingerprint {:016x})",
+                plan.placer,
+                plan.coder,
+                plan.mode.as_str(),
+                plan.predicted.load_equations,
+                plan.predicted.messages,
+                plan.fingerprint
+            );
+        }
+        None => println!("{text}"),
+    }
+    0
+}
+
+/// Print one batch report; returns false when verification failed.
+fn print_report(report: &RunReport, json_out: bool) -> bool {
+    if json_out {
+        println!("{}", report.to_json());
+        return report.verified;
+    }
+    println!(
+        "--- {:?} ({} backend, {} placement)",
+        report.mode, report.backend, report.placement
+    );
+    println!(
+        "  load {} IV-equations | payload {} B | wire {} B | {} msgs",
+        report.load_equations, report.payload_bytes, report.wire_bytes, report.messages
+    );
+    println!(
+        "  map {:.4}s  shuffle {:.4}s  ({:.0}% of job)  verified={}",
+        report.map_time_s,
+        report.shuffle_time_s,
+        100.0 * report.shuffle_fraction(),
+        report.verified
+    );
+    report.verified
+}
+
+/// Execute `batches` data batches of one plan on one executor, with
+/// per-batch seeds derived from the plan's base seed.
+fn run_batches(
+    plan: &Plan,
+    backend: &mut dyn MapBackend,
+    batches: u64,
+    json_out: bool,
+) -> Result<(), HetcdcError> {
+    let mut exec = Executor::new(plan);
+    for batch in 0..batches {
+        let report = exec.run_batch(backend, plan.job.seed.wrapping_add(batch))?;
+        if !print_report(&report, json_out) {
+            return Err(HetcdcError::Backend(
+                "output verification FAILED".into(),
+            ));
+        }
+    }
+    Ok(())
+}
+
 fn cmd_run(argv: &[String]) -> i32 {
     let specs: Vec<ArgSpec> = vec![
         ArgSpec { name: "workload", help: "wordcount | terasort", takes_value: true, default: Some("terasort") },
         ArgSpec { name: "n", help: "number of files N", takes_value: true, default: Some("12") },
         ArgSpec { name: "storage", help: "per-node storage (ignored with --config)", takes_value: true, default: Some("6,7,7") },
         ArgSpec { name: "config", help: "cluster JSON config path", takes_value: true, default: None },
+        ArgSpec { name: "plan", help: "execute this serialized plan (skips inline planning)", takes_value: true, default: None },
+        ArgSpec { name: "batches", help: "data batches to run against the plan", takes_value: true, default: Some("1") },
         ArgSpec { name: "mode", help: "coded | uncoded | both", takes_value: true, default: Some("both") },
         ArgSpec { name: "backend", help: "native | xla", takes_value: true, default: Some("native") },
-        ArgSpec { name: "placement", help: "optimal | lp | homogeneous", takes_value: true, default: Some("optimal") },
+        ArgSpec { name: "placement", help: "auto | optimal-k3 | lp-general | homogeneous | oblivious", takes_value: true, default: Some("auto") },
+        ArgSpec { name: "coder", help: "pairing | greedy | multicast | memshare (default: placer's)", takes_value: true, default: None },
         ArgSpec { name: "artifacts", help: "artifact dir for --backend xla", takes_value: true, default: None },
         ArgSpec { name: "json", help: "emit machine-readable JSON reports", takes_value: false, default: None },
         ArgSpec { name: "help", help: "show usage", takes_value: false, default: None },
@@ -231,52 +388,9 @@ fn cmd_run(argv: &[String]) -> i32 {
         return 0;
     }
     let json_out = args.flag("json");
-    let n = match args.get_u64("n") {
-        Ok(n) => n,
+    let batches = match args.get_u64("batches") {
+        Ok(b) => b.max(1),
         Err(e) => return fail(e),
-    };
-    let cluster = if let Some(path) = args.get("config") {
-        match std::fs::read_to_string(path)
-            .map_err(|e| e.to_string())
-            .and_then(|t| ClusterSpec::from_json_str(&t))
-        {
-            Ok(c) => c,
-            Err(e) => return fail(format!("config {path}: {e}")),
-        }
-    } else {
-        let m = match args.get_u64_list("storage") {
-            Ok(m) => m,
-            Err(e) => return fail(e),
-        };
-        let mut c = ClusterSpec::homogeneous(m.len(), 1, 1000.0);
-        for (node, &mk) in c.nodes.iter_mut().zip(&m) {
-            node.storage = mk;
-        }
-        c
-    };
-    let job = match args.get("workload") {
-        Some("wordcount") => JobSpec::wordcount(n),
-        Some("terasort") => JobSpec::terasort(n),
-        other => return fail(format!("unknown workload {other:?}")),
-    };
-    let strategy = match args.get("placement") {
-        Some("optimal") => {
-            if cluster.k() == 3 {
-                PlacementStrategy::OptimalK3
-            } else {
-                PlacementStrategy::LpGeneral
-            }
-        }
-        Some("lp") => PlacementStrategy::LpGeneral,
-        Some("homogeneous") => PlacementStrategy::Homogeneous,
-        Some("oblivious") => PlacementStrategy::Oblivious,
-        other => return fail(format!("unknown placement {other:?}")),
-    };
-    let modes: Vec<ShuffleMode> = match args.get("mode") {
-        Some("coded") => vec![ShuffleMode::Coded],
-        Some("uncoded") => vec![ShuffleMode::Uncoded],
-        Some("both") => vec![ShuffleMode::Coded, ShuffleMode::Uncoded],
-        other => return fail(format!("unknown mode {other:?}")),
     };
 
     let mut rt_holder: Option<Runtime> = None;
@@ -291,48 +405,78 @@ fn cmd_run(argv: &[String]) -> i32 {
         }
     }
 
-    for mode in modes {
-        let report = {
-            let result = match rt_holder.as_mut() {
-                Some(rt) => {
-                    let mut be = XlaBackend::new(rt);
-                    Engine::new(&cluster, &job, &mut be).run(&strategy, mode)
-                }
-                None => {
-                    let mut be = NativeBackend;
-                    Engine::new(&cluster, &job, &mut be).run(&strategy, mode)
-                }
-            };
-            match result {
-                Ok(r) => r,
-                Err(e) => return fail(e),
+    // --plan: consume a serialized artifact (cluster + job come from it).
+    if let Some(path) = args.get("plan") {
+        // The plan fixes cluster, job, placement, coder, and mode; accept
+        // no conflicting flags rather than silently ignoring them.
+        for conflict in ["workload", "n", "storage", "config", "mode", "placement", "coder"] {
+            if args.provided(conflict) {
+                return fail(format!(
+                    "--{conflict} conflicts with --plan (the plan already fixes it); \
+                     rebuild the plan with `hetcdc plan` instead"
+                ));
+            }
+        }
+        let plan = match std::fs::read_to_string(path)
+            .map_err(|e| HetcdcError::Io(format!("plan {path}: {e}")))
+            .and_then(|text| Plan::from_json_str(&text))
+        {
+            Ok(p) => p,
+            Err(e) => return fail(e),
+        };
+        let result = match rt_holder.as_mut() {
+            Some(rt) => {
+                let mut be = XlaBackend::new(rt);
+                run_batches(&plan, &mut be, batches, json_out)
+            }
+            None => {
+                let mut be = NativeBackend;
+                run_batches(&plan, &mut be, batches, json_out)
             }
         };
-        if json_out {
-            println!("{}", report.to_json());
-            if !report.verified {
-                return fail("output verification FAILED");
-            }
-            continue;
+        return match result {
+            Ok(()) => 0,
+            Err(e) => fail(e),
+        };
+    }
+
+    let (cluster, job) = match parse_cluster_job(&args) {
+        Ok(x) => x,
+        Err(e) => return fail(e),
+    };
+    let placement = args.get("placement").unwrap_or("auto");
+    let modes: Vec<ShuffleMode> = match args.get("mode") {
+        Some("coded") => vec![ShuffleMode::Coded],
+        Some("uncoded") => vec![ShuffleMode::Uncoded],
+        Some("both") => vec![ShuffleMode::Coded, ShuffleMode::Uncoded],
+        other => return fail(format!("unknown mode {other:?}")),
+    };
+
+    for mode in modes {
+        let mut builder = JobBuilder::new(&cluster, &job).placer(placement).mode(mode);
+        if let Some(c) = args.get("coder") {
+            builder = builder.coder(c);
         }
-        println!("--- {:?} ({} backend, {} placement)", mode, report.backend, report.placement);
-        println!(
-            "  load {} IV-equations | payload {} B | wire {} B | {} msgs",
-            report.load_equations, report.payload_bytes, report.wire_bytes, report.messages
-        );
-        println!(
-            "  map {:.4}s  shuffle {:.4}s  ({:.0}% of job)  verified={}",
-            report.map_time_s,
-            report.shuffle_time_s,
-            100.0 * report.shuffle_fraction(),
-            report.verified
-        );
-        if !report.verified {
-            return fail("output verification FAILED");
+        let plan = match builder.build() {
+            Ok(p) => p,
+            Err(e) => return fail(e),
+        };
+        let result = match rt_holder.as_mut() {
+            Some(rt) => {
+                let mut be = XlaBackend::new(rt);
+                run_batches(&plan, &mut be, batches, json_out)
+            }
+            None => {
+                let mut be = NativeBackend;
+                run_batches(&plan, &mut be, batches, json_out)
+            }
+        };
+        if let Err(e) = result {
+            return fail(e);
         }
     }
     if cluster.k() == 3 {
-        if let Ok(p) = cluster.params3(n) {
+        if let Ok(p) = cluster.params3(job.n_files) {
             println!(
                 "theory: L*={} uncoded={} saving={:.1}%",
                 load::lstar(&p),
@@ -425,9 +569,9 @@ fn cmd_verify(argv: &[String]) -> i32 {
                 if converse::bounds_half(&p).max_half() != lstar2 {
                     return fail(format!("{p}: converse != L*"));
                 }
-                let report = hetcdc::coding::decoder::verify(&alloc, &plan);
-                if !report.is_complete() {
-                    return fail(format!("{p}: plan does not decode"));
+                // The decode schedule doubles as the decodability proof.
+                if let Err(e) = hetcdc::coding::decoder::schedule(&alloc, &plan) {
+                    return fail(format!("{p}: {e}"));
                 }
                 if args.flag("lp") {
                     let pk = ParamsK::new(vec![m1, m2, m3], n).unwrap();

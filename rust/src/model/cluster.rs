@@ -10,6 +10,7 @@
 //! ], "latency_ms": 0.5}
 //! ```
 
+use crate::error::{HetcdcError, Result};
 use crate::net::BroadcastNet;
 use crate::theory::params::{Params3, ParamsK};
 use crate::util::json::Json;
@@ -42,9 +43,12 @@ impl ClusterSpec {
         self.nodes.iter().map(|n| n.storage).collect()
     }
 
-    pub fn params3(&self, n_files: u64) -> Result<Params3, String> {
+    pub fn params3(&self, n_files: u64) -> Result<Params3> {
         if self.k() != 3 {
-            return Err(format!("params3 needs K=3, cluster has {}", self.k()));
+            return Err(HetcdcError::InvalidParams(format!(
+                "params3 needs K=3, cluster has {}",
+                self.k()
+            )));
         }
         Params3::new(
             self.nodes[0].storage,
@@ -54,7 +58,7 @@ impl ClusterSpec {
         )
     }
 
-    pub fn params_k(&self, n_files: u64) -> Result<ParamsK, String> {
+    pub fn params_k(&self, n_files: u64) -> Result<ParamsK> {
         ParamsK::new(self.storage(), n_files)
     }
 
@@ -129,12 +133,12 @@ impl ClusterSpec {
         Json::Obj(m)
     }
 
-    pub fn from_json(j: &Json) -> Result<Self, String> {
+    pub fn from_json(j: &Json) -> Result<Self> {
         let nodes = j
             .get("nodes")
             .and_then(|n| n.as_arr())
-            .ok_or("missing 'nodes' array")?;
-        let parsed: Result<Vec<NodeSpec>, String> = nodes
+            .ok_or_else(|| HetcdcError::Json("cluster: missing 'nodes' array".into()))?;
+        let parsed: Result<Vec<NodeSpec>> = nodes
             .iter()
             .enumerate()
             .map(|(i, n)| {
@@ -147,8 +151,9 @@ impl ClusterSpec {
                     storage: n
                         .get("storage")
                         .and_then(|v| v.as_usize())
-                        .ok_or(format!("node {i}: missing 'storage'"))?
-                        as u64,
+                        .ok_or_else(|| {
+                            HetcdcError::Json(format!("cluster node {i}: missing 'storage'"))
+                        })? as u64,
                     uplink_mbps: n
                         .get("uplink_mbps")
                         .and_then(|v| v.as_f64())
@@ -166,8 +171,8 @@ impl ClusterSpec {
         })
     }
 
-    pub fn from_json_str(text: &str) -> Result<Self, String> {
-        let j = Json::parse(text).map_err(|e| e.to_string())?;
+    pub fn from_json_str(text: &str) -> Result<Self> {
+        let j = Json::parse(text)?;
         Self::from_json(&j)
     }
 }

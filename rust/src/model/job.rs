@@ -1,8 +1,12 @@
 //! Job specification: the MapReduce computation to run (§II model).
 
+use crate::error::{HetcdcError, Result};
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+
 /// Built-in workloads (DESIGN.md §4 explains the substitutions for the
 /// paper's TeraSort / production traces).
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum WorkloadKind {
     /// Zipf token corpus; Map = feature projection (`W @ counts`, f32),
     /// Reduce = sum. Exercises the `map_project` Pallas/XLA artifact.
@@ -12,13 +16,51 @@ pub enum WorkloadKind {
     TeraSort,
 }
 
+impl WorkloadKind {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            WorkloadKind::WordCount => "wordcount",
+            WorkloadKind::TeraSort => "terasort",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "wordcount" => Ok(WorkloadKind::WordCount),
+            "terasort" => Ok(WorkloadKind::TeraSort),
+            other => Err(HetcdcError::InvalidJob(format!(
+                "unknown workload '{other}'"
+            ))),
+        }
+    }
+}
+
 /// How the Shuffle phase is coded.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum ShuffleMode {
     /// Paper's scheme: optimal K=3 plan (Lemma 1) or greedy pairing K>3.
     Coded,
     /// Baseline: every needed IV broadcast plainly.
     Uncoded,
+}
+
+impl ShuffleMode {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            ShuffleMode::Coded => "coded",
+            ShuffleMode::Uncoded => "uncoded",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "coded" => Ok(ShuffleMode::Coded),
+            "uncoded" => Ok(ShuffleMode::Uncoded),
+            other => Err(HetcdcError::InvalidJob(format!(
+                "unknown shuffle mode '{other}'"
+            ))),
+        }
+    }
 }
 
 #[derive(Clone, Debug)]
@@ -65,25 +107,72 @@ impl JobSpec {
         self.t * 4
     }
 
-    pub fn validate(&self, k: usize) -> Result<(), String> {
+    pub fn validate(&self, k: usize) -> Result<()> {
+        let invalid = |m: &str| Err(HetcdcError::InvalidJob(m.into()));
         if self.n_files == 0 {
-            return Err("n_files must be positive".into());
+            return invalid("n_files must be positive");
         }
         if self.t == 0 {
-            return Err("t must be positive".into());
+            return invalid("t must be positive");
         }
         if k < 2 {
-            return Err("need at least 2 nodes".into());
+            return invalid("need at least 2 nodes");
         }
         match self.workload {
-            WorkloadKind::WordCount if self.vocab == 0 => {
-                Err("WordCount needs vocab > 0".into())
-            }
+            WorkloadKind::WordCount if self.vocab == 0 => invalid("WordCount needs vocab > 0"),
             WorkloadKind::TeraSort if self.keys_per_file == 0 => {
-                Err("TeraSort needs keys_per_file > 0".into())
+                invalid("TeraSort needs keys_per_file > 0")
             }
             _ => Ok(()),
         }
+    }
+
+    /// JSON form used inside serialized [`crate::engine::Plan`] artifacts.
+    /// The seed travels as a hex *string*: JSON numbers are f64 in this
+    /// substrate and would silently round u64 seeds above 2^53.
+    pub fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("workload".into(), Json::Str(self.workload.as_str().into()));
+        m.insert("n_files".into(), Json::Num(self.n_files as f64));
+        m.insert("t".into(), Json::Num(self.t as f64));
+        m.insert("seed".into(), Json::Str(format!("{:#x}", self.seed)));
+        m.insert("vocab".into(), Json::Num(self.vocab as f64));
+        m.insert(
+            "keys_per_file".into(),
+            Json::Num(self.keys_per_file as f64),
+        );
+        Json::Obj(m)
+    }
+
+    pub fn from_json(j: &Json) -> Result<Self> {
+        let bad = |f: &str| HetcdcError::Json(format!("job: missing or invalid '{f}'"));
+        let workload = WorkloadKind::parse(
+            j.get("workload").and_then(|v| v.as_str()).ok_or_else(|| bad("workload"))?,
+        )?;
+        // Seed: hex/decimal string (exact), or a plain number for
+        // hand-written specs (exact only up to 2^53).
+        let seed = match j.get("seed") {
+            None => 0,
+            Some(Json::Str(s)) => parse_u64_exact(s).ok_or_else(|| bad("seed"))?,
+            Some(v) => v.as_usize().ok_or_else(|| bad("seed"))? as u64,
+        };
+        Ok(JobSpec {
+            n_files: j.get("n_files").and_then(|v| v.as_usize()).ok_or_else(|| bad("n_files"))?
+                as u64,
+            t: j.get("t").and_then(|v| v.as_usize()).ok_or_else(|| bad("t"))?,
+            workload,
+            seed,
+            vocab: j.get("vocab").and_then(|v| v.as_usize()).unwrap_or(0),
+            keys_per_file: j.get("keys_per_file").and_then(|v| v.as_usize()).unwrap_or(0),
+        })
+    }
+}
+
+/// Parse a u64 from `"0x"`-prefixed hex or plain decimal, bit-exact.
+fn parse_u64_exact(s: &str) -> Option<u64> {
+    match s.strip_prefix("0x") {
+        Some(hex) => u64::from_str_radix(hex, 16).ok(),
+        None => s.parse().ok(),
     }
 }
 
@@ -112,5 +201,31 @@ mod tests {
     #[test]
     fn iv_bytes() {
         assert_eq!(JobSpec::wordcount(1).iv_bytes(), 128);
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let mut big_seed = JobSpec::terasort(5);
+        big_seed.seed = 0x9E37_79B9_7F4A_7C15; // above 2^53: must stay exact
+        for job in [JobSpec::wordcount(7), JobSpec::terasort(9), big_seed] {
+            let back = JobSpec::from_json(&job.to_json()).unwrap();
+            assert_eq!(back.n_files, job.n_files);
+            assert_eq!(back.t, job.t);
+            assert_eq!(back.workload, job.workload);
+            assert_eq!(back.seed, job.seed);
+            assert_eq!(back.vocab, job.vocab);
+            assert_eq!(back.keys_per_file, job.keys_per_file);
+        }
+    }
+
+    #[test]
+    fn mode_and_workload_parse() {
+        assert_eq!(ShuffleMode::parse("coded").unwrap(), ShuffleMode::Coded);
+        assert!(ShuffleMode::parse("xor").is_err());
+        assert_eq!(
+            WorkloadKind::parse("terasort").unwrap(),
+            WorkloadKind::TeraSort
+        );
+        assert!(WorkloadKind::parse("sort").is_err());
     }
 }

@@ -6,7 +6,15 @@
 //! Theorem 1's half-integral expressions become integral. Holder sets are
 //! node bitmasks (`K <= 32`).
 
+use crate::error::{HetcdcError, Result};
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+
 pub type NodeMask = u32;
+
+fn invalid(msg: impl Into<String>) -> HetcdcError {
+    HetcdcError::InvalidPlacement(msg.into())
+}
 
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct Allocation {
@@ -70,32 +78,36 @@ impl Allocation {
 
     /// Validate the §II model constraints against per-node capacities
     /// `m` (in original files) and file count `n`.
-    pub fn validate(&self, m: &[u64], n: u64) -> Result<(), String> {
+    pub fn validate(&self, m: &[u64], n: u64) -> Result<()> {
         if m.len() != self.k {
-            return Err(format!("expected {} capacities, got {}", self.k, m.len()));
+            return Err(invalid(format!(
+                "expected {} capacities, got {}",
+                self.k,
+                m.len()
+            )));
         }
         if self.n_sub() as u64 != self.sp as u64 * n {
-            return Err(format!(
+            return Err(invalid(format!(
                 "expected {} subfiles, got {}",
                 self.sp as u64 * n,
                 self.n_sub()
-            ));
+            )));
         }
         for (f, &h) in self.holders.iter().enumerate() {
             if h == 0 {
-                return Err(format!("subfile {f} stored nowhere"));
+                return Err(invalid(format!("subfile {f} stored nowhere")));
             }
             if h & !self.full_mask() != 0 {
-                return Err(format!("subfile {f} has out-of-range holder bits"));
+                return Err(invalid(format!("subfile {f} has out-of-range holder bits")));
             }
         }
         for (node, &cap) in m.iter().enumerate() {
             let used = self.node_count(node);
             let cap_sub = cap * self.sp as u64;
             if used != cap_sub {
-                return Err(format!(
+                return Err(invalid(format!(
                     "node {node} stores {used} subfiles, capacity is {cap_sub}"
-                ));
+                )));
             }
         }
         Ok(())
@@ -104,32 +116,73 @@ impl Allocation {
     /// Like [`Self::validate`] but treats capacities as upper bounds
     /// (`<=`), for schemes that deliberately waste storage (e.g. the
     /// storage-oblivious baseline that provisions to the smallest node).
-    pub fn validate_le(&self, m: &[u64], n: u64) -> Result<(), String> {
+    pub fn validate_le(&self, m: &[u64], n: u64) -> Result<()> {
         if m.len() != self.k {
-            return Err(format!("expected {} capacities, got {}", self.k, m.len()));
+            return Err(invalid(format!(
+                "expected {} capacities, got {}",
+                self.k,
+                m.len()
+            )));
         }
         if self.n_sub() as u64 != self.sp as u64 * n {
-            return Err(format!(
+            return Err(invalid(format!(
                 "expected {} subfiles, got {}",
                 self.sp as u64 * n,
                 self.n_sub()
-            ));
+            )));
         }
         for (f, &h) in self.holders.iter().enumerate() {
             if h == 0 || h & !self.full_mask() != 0 {
-                return Err(format!("subfile {f} has invalid holder set {h:b}"));
+                return Err(invalid(format!("subfile {f} has invalid holder set {h:b}")));
             }
         }
         for (node, &cap) in m.iter().enumerate() {
             let used = self.node_count(node);
             if used > cap * self.sp as u64 {
-                return Err(format!(
+                return Err(invalid(format!(
                     "node {node} stores {used} subfiles, capacity is {}",
                     cap * self.sp as u64
-                ));
+                )));
             }
         }
         Ok(())
+    }
+
+    /// JSON form used inside serialized [`crate::engine::Plan`] artifacts.
+    pub fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("k".into(), Json::Num(self.k as f64));
+        m.insert("sp".into(), Json::Num(self.sp as f64));
+        m.insert(
+            "holders".into(),
+            Json::Arr(self.holders.iter().map(|&h| Json::Num(h as f64)).collect()),
+        );
+        Json::Obj(m)
+    }
+
+    pub fn from_json(j: &Json) -> Result<Self> {
+        let bad = |f: &str| HetcdcError::Json(format!("allocation: missing or invalid '{f}'"));
+        let k = j.get("k").and_then(|v| v.as_usize()).ok_or_else(|| bad("k"))?;
+        if !(1..=32).contains(&k) {
+            return Err(invalid(format!("k = {k} out of range [1, 32]")));
+        }
+        let sp = j.get("sp").and_then(|v| v.as_usize()).ok_or_else(|| bad("sp"))? as u32;
+        if sp == 0 {
+            return Err(invalid("sp must be positive"));
+        }
+        let holders = j
+            .get("holders")
+            .and_then(|v| v.as_arr())
+            .ok_or_else(|| bad("holders"))?
+            .iter()
+            .map(|h| {
+                h.as_usize()
+                    .filter(|&h| h <= u32::MAX as usize)
+                    .map(|h| h as u32)
+                    .ok_or_else(|| bad("holders"))
+            })
+            .collect::<Result<Vec<NodeMask>>>()?;
+        Ok(Allocation::new(k, sp, holders))
     }
 
     /// Total uncoded shuffle load in subfile units: every subfile stored at
@@ -215,7 +268,11 @@ mod tests {
     #[test]
     fn validate_rejects_uncovered_file() {
         let a = Allocation::new(3, 1, vec![0b001, 0]);
-        assert!(a.validate(&[1, 0, 0], 2).unwrap_err().contains("nowhere"));
+        assert!(a
+            .validate(&[1, 0, 0], 2)
+            .unwrap_err()
+            .to_string()
+            .contains("nowhere"));
     }
 
     #[test]
@@ -239,6 +296,14 @@ mod tests {
         let a = b.build();
         assert_eq!(a.holders, vec![0b001, 0b001, 0b011, 0b011, 0b010, 0b010]);
         assert_eq!(a.n_files(), 3);
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let a = demo();
+        let back = Allocation::from_json(&a.to_json()).unwrap();
+        assert_eq!(a, back);
+        assert!(Allocation::from_json(&Json::Obj(Default::default())).is_err());
     }
 
     #[test]

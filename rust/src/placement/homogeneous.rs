@@ -116,7 +116,7 @@ mod tests {
             // Every node stores the same number of subfiles = r·n_sub/k.
             for node in 0..k {
                 if a.node_count(node) * k as u64 != r as u64 * a.n_sub() as u64 {
-                    return Err(format!("k={k} r={r} n={n}: unbalanced node {node}"));
+                    return prop::fail(format!("k={k} r={r} n={n}: unbalanced node {node}"));
                 }
             }
             let _ = mk;

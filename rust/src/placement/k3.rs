@@ -198,7 +198,7 @@ mod tests {
             };
             let alloc = optimal_allocation(&params);
             if let Err(e) = alloc.validate(&[m1, m2, m3], n) {
-                return Err(format!("{params}: invalid allocation: {e}"));
+                return prop::fail(format!("{params}: invalid allocation: {e}"));
             }
             let got = load_units(&alloc);
             let want = lstar_half(&params);

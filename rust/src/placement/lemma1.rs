@@ -168,7 +168,7 @@ mod tests {
             let x23 = g.u64_in(0..=40);
             let (a, b, c) = pairing_counts(x12, x13, x23);
             if a + b > x12 || a + c > x13 || b + c > x23 {
-                return Err(format!("infeasible for ({x12},{x13},{x23})"));
+                return prop::fail(format!("infeasible for ({x12},{x13},{x23})"));
             }
             prop::check(
                 x12 + x13 + x23 - (a + b + c) == g_int(x12, x13, x23),
@@ -248,10 +248,10 @@ mod tests {
             let triangle = s.pairs() >= 2 * s.s12.max(s.s13).max(s.s23);
             let even = s.pairs() % 2 == 0;
             if lhs < rhs {
-                return Err(format!("violates corollary: {s:?}"));
+                return prop::fail(format!("violates corollary: {s:?}"));
             }
             if triangle && even && lhs != rhs {
-                return Err(format!("should be tight: {s:?} lhs={lhs} rhs={rhs}"));
+                return prop::fail(format!("should be tight: {s:?} lhs={lhs} rhs={rhs}"));
             }
             Ok(())
         });

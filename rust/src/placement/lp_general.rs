@@ -467,7 +467,7 @@ mod tests {
             let alloc = allocation_from_solution(&p, &sol);
             alloc
                 .validate(&m, n)
-                .map_err(|e| format!("{m:?} n={n}: {e}"))
+                .map_err(|e| format!("{m:?} n={n}: {e}").into())
         });
     }
 

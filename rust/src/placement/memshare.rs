@@ -12,6 +12,7 @@ use super::alloc::Allocation;
 use super::homogeneous::symmetric_allocation;
 use crate::coding::cdc_multicast::plan_homogeneous;
 use crate::coding::plan::ShufflePlan;
+use crate::error::{HetcdcError, Result};
 
 /// The two-regime split of a homogeneous memory-sharing design.
 #[derive(Clone, Debug, PartialEq, Eq)]
@@ -26,13 +27,17 @@ pub struct MemShare {
 }
 
 /// Compute the split. Errors when `KM < N` (cannot cover) or `M > N`.
-pub fn split(k: usize, m_per_node: u64, n: u64) -> Result<MemShare, String> {
+pub fn split(k: usize, m_per_node: u64, n: u64) -> Result<MemShare> {
     let km = k as u64 * m_per_node;
     if km < n {
-        return Err(format!("K·M = {km} cannot cover N = {n}"));
+        return Err(HetcdcError::InvalidParams(format!(
+            "K·M = {km} cannot cover N = {n}"
+        )));
     }
     if m_per_node > n {
-        return Err(format!("M = {m_per_node} exceeds N = {n}"));
+        return Err(HetcdcError::InvalidParams(format!(
+            "M = {m_per_node} exceeds N = {n}"
+        )));
     }
     let r_lo = km / n; // floor(r)
     let r_hi = if km % n == 0 { r_lo } else { r_lo + 1 };
@@ -237,16 +242,16 @@ mod tests {
             if 3 * m < n {
                 return Ok(());
             }
-            let s = split(3, m, n).map_err(|e| e)?;
+            let s = split(3, m, n).map_err(|e| e.to_string())?;
             let alloc = s.allocation();
             if let Err(e) = alloc.validate(&[m, m, m], n) {
-                return Err(format!("m={m} n={n}: {e}"));
+                return prop::fail(format!("m={m} n={n}: {e}"));
             }
             let plan = s.plan(&alloc);
             let got = plan.load_equations(&alloc);
             let want = lstar(&Params3::new(m, m, m, n).unwrap());
             if (got - want).abs() > 1e-9 {
-                return Err(format!("m={m} n={n}: load {got} != L* {want}"));
+                return prop::fail(format!("m={m} n={n}: load {got} != L* {want}"));
             }
             let report = verify(&alloc, &plan);
             prop::check(report.is_complete(), format!("m={m} n={n}: undecodable"))
@@ -262,12 +267,12 @@ mod tests {
             if (k as u64) * m < n {
                 return Ok(());
             }
-            let s = split(k, m, n).map_err(|e| e)?;
+            let s = split(k, m, n).map_err(|e| e.to_string())?;
             let alloc = s.allocation();
             let plan = s.plan(&alloc);
             let got = plan.load_equations(&alloc);
             if (got - s.envelope_load()).abs() > 1e-9 {
-                return Err(format!(
+                return prop::fail(format!(
                     "k={k} m={m} n={n}: load {got} != envelope {}",
                     s.envelope_load()
                 ));

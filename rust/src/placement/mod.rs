@@ -1,6 +1,7 @@
 //! File placement: subset algebra over allocations, the paper's optimal
 //! K=3 placements (Figs 5–11), Lemma 1's pairing computation, the
-//! homogeneous cyclic placement of [2], and the §V general-K LP.
+//! homogeneous cyclic placement of [2], the §V general-K LP — and the
+//! [`Placer`] trait that puts every strategy behind one interface.
 
 pub mod alloc;
 pub mod homogeneous;
@@ -8,5 +9,7 @@ pub mod k3;
 pub mod lemma1;
 pub mod lp_general;
 pub mod memshare;
+pub mod placer;
 
 pub use alloc::Allocation;
+pub use placer::{builtin_placers, placer_by_name, Placer};

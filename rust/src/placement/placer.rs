@@ -1,0 +1,267 @@
+//! The [`Placer`] trait: pluggable file-placement strategies behind one
+//! interface, replacing the old `PlacementStrategy` enum-match that was
+//! scattered through the engine.
+//!
+//! A placer turns a (cluster, job) shape into an [`Allocation`]. The five
+//! built-in strategies are trait impls here; third parties can implement
+//! [`Placer`] and feed the result straight into
+//! [`crate::engine::JobBuilder`]. Placers are pure functions of cluster
+//! and job *shape* — never of the data batch — which is what makes their
+//! output reusable across batches via [`crate::engine::Plan`].
+
+use super::alloc::Allocation;
+use super::{homogeneous, k3, lp_general, memshare};
+use crate::error::{HetcdcError, Result};
+use crate::model::cluster::ClusterSpec;
+use crate::model::job::JobSpec;
+
+/// A file-placement strategy.
+pub trait Placer {
+    /// Registry name (stable; appears in CLI flags, reports, and
+    /// serialized plans).
+    fn name(&self) -> &'static str;
+
+    /// Build the §II allocation for this cluster/job shape.
+    fn place(&self, cluster: &ClusterSpec, job: &JobSpec) -> Result<Allocation>;
+
+    /// Name of the [`crate::coding::ShuffleCoder`] that realizes this
+    /// placement's coded load (used when the caller does not pick one).
+    fn default_coder(&self) -> &'static str {
+        "pairing"
+    }
+}
+
+/// Theorem-1 optimal placement (K=3 only, Figs 5–11).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct OptimalK3;
+
+impl Placer for OptimalK3 {
+    fn name(&self) -> &'static str {
+        "optimal-k3"
+    }
+
+    fn place(&self, cluster: &ClusterSpec, job: &JobSpec) -> Result<Allocation> {
+        let p = cluster.params3(job.n_files)?;
+        Ok(k3::optimal_allocation(&p))
+    }
+}
+
+/// §V LP placement (any K).
+#[derive(Clone, Copy, Debug)]
+pub struct LpGeneral {
+    /// Max perfect collections enumerated per subsystem (Remark 7 cap).
+    pub cap: usize,
+}
+
+impl Default for LpGeneral {
+    fn default() -> Self {
+        LpGeneral {
+            cap: lp_general::DEFAULT_COLLECTION_CAP,
+        }
+    }
+}
+
+impl Placer for LpGeneral {
+    fn name(&self) -> &'static str {
+        "lp-general"
+    }
+
+    fn place(&self, cluster: &ClusterSpec, job: &JobSpec) -> Result<Allocation> {
+        let p = cluster.params_k(job.n_files)?;
+        let sol = lp_general::solve_general(&p, self.cap)?;
+        Ok(lp_general::allocation_from_solution(&p, &sol))
+    }
+}
+
+/// Homogeneous r-redundant placement of [2] (requires equal storage
+/// `M_k = r·N/K`; `r` derived from storage).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Homogeneous;
+
+impl Placer for Homogeneous {
+    fn name(&self) -> &'static str {
+        "homogeneous"
+    }
+
+    fn place(&self, cluster: &ClusterSpec, job: &JobSpec) -> Result<Allocation> {
+        let k = cluster.k();
+        let n = job.n_files;
+        let storage = cluster.storage();
+        let m0 = *storage.first().ok_or_else(|| {
+            HetcdcError::InvalidParams("cluster has no nodes".into())
+        })?;
+        if !storage.iter().all(|&m| m == m0) {
+            return Err(HetcdcError::Unsupported {
+                strategy: "homogeneous placer",
+                reason: "needs equal per-node storage".into(),
+            });
+        }
+        let r = (m0 * k as u64) / n;
+        if r * n != m0 * k as u64 || r == 0 {
+            return Err(HetcdcError::Unsupported {
+                strategy: "homogeneous placer",
+                reason: format!("storage {m0} is not r·N/K for any integer r (N={n}, K={k})"),
+            });
+        }
+        if r > k as u64 {
+            // M > N: redundancy beyond full replication is meaningless
+            // (and would trip symmetric_allocation's assert).
+            return Err(HetcdcError::Unsupported {
+                strategy: "homogeneous placer",
+                reason: format!("storage {m0} exceeds N={n} (r={r} > K={k})"),
+            });
+        }
+        Ok(homogeneous::symmetric_allocation(k, r as usize, n))
+    }
+
+    fn default_coder(&self) -> &'static str {
+        "multicast"
+    }
+}
+
+/// Storage-oblivious baseline: provisions every node to the SMALLEST
+/// storage and runs the homogeneous memory-sharing scheme — what a
+/// heterogeneity-unaware deployment does (the [13] failure mode the
+/// paper's introduction cites). Wastes surplus storage.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Oblivious;
+
+impl Placer for Oblivious {
+    fn name(&self) -> &'static str {
+        "oblivious"
+    }
+
+    fn place(&self, cluster: &ClusterSpec, job: &JobSpec) -> Result<Allocation> {
+        let m_min = *cluster.storage().iter().min().ok_or_else(|| {
+            HetcdcError::InvalidParams("cluster has no nodes".into())
+        })?;
+        let share = memshare::split(cluster.k(), m_min, job.n_files)?;
+        Ok(share.allocation())
+    }
+
+    fn default_coder(&self) -> &'static str {
+        "memshare"
+    }
+}
+
+/// Caller-provided allocation (validated against capacities at plan-build
+/// time like every other placement).
+#[derive(Clone, Debug)]
+pub struct Custom(pub Allocation);
+
+impl Placer for Custom {
+    fn name(&self) -> &'static str {
+        "custom"
+    }
+
+    fn place(&self, _cluster: &ClusterSpec, _job: &JobSpec) -> Result<Allocation> {
+        Ok(self.0.clone())
+    }
+}
+
+/// Resolve a registry name to a placer. `"auto"` (and its CLI alias
+/// `"optimal"`) picks Theorem 1 for K=3 clusters and the §V LP otherwise.
+pub fn placer_by_name(name: &str, cluster: &ClusterSpec) -> Result<Box<dyn Placer>> {
+    match name {
+        "optimal-k3" => Ok(Box::new(OptimalK3)),
+        "lp-general" | "lp" => Ok(Box::new(LpGeneral::default())),
+        "homogeneous" => Ok(Box::new(Homogeneous)),
+        "oblivious" => Ok(Box::new(Oblivious)),
+        "auto" | "optimal" => {
+            if cluster.k() == 3 {
+                Ok(Box::new(OptimalK3))
+            } else {
+                Ok(Box::new(LpGeneral::default()))
+            }
+        }
+        other => Err(HetcdcError::UnknownStrategy {
+            kind: "placer",
+            name: other.to_string(),
+        }),
+    }
+}
+
+/// All built-in placers that need no caller-provided state (for sweeps
+/// and property tests).
+pub fn builtin_placers() -> Vec<Box<dyn Placer>> {
+    vec![
+        Box::new(OptimalK3),
+        Box::new(LpGeneral::default()),
+        Box::new(Homogeneous),
+        Box::new(Oblivious),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cluster(storage: &[u64]) -> ClusterSpec {
+        let mut c = ClusterSpec::homogeneous(storage.len(), 1, 1000.0);
+        for (node, &m) in c.nodes.iter_mut().zip(storage) {
+            node.storage = m;
+        }
+        c
+    }
+
+    #[test]
+    fn optimal_k3_places_paper_example() {
+        let c = cluster(&[6, 7, 7]);
+        let job = JobSpec::terasort(12);
+        let alloc = OptimalK3.place(&c, &job).unwrap();
+        alloc.validate(&[6, 7, 7], 12).unwrap();
+    }
+
+    #[test]
+    fn optimal_k3_rejects_other_k() {
+        let c = cluster(&[6, 7, 7, 8]);
+        assert!(OptimalK3.place(&c, &JobSpec::terasort(12)).is_err());
+    }
+
+    #[test]
+    fn homogeneous_rejects_unequal_storage() {
+        let c = cluster(&[6, 7, 7]);
+        let err = Homogeneous.place(&c, &JobSpec::terasort(12)).unwrap_err();
+        assert!(matches!(err, HetcdcError::Unsupported { .. }));
+    }
+
+    #[test]
+    fn homogeneous_rejects_storage_beyond_n_without_panicking() {
+        // M > N would give r > K and trip symmetric_allocation's assert.
+        let c = cluster(&[24, 24, 24]);
+        let err = Homogeneous.place(&c, &JobSpec::terasort(12)).unwrap_err();
+        assert!(matches!(err, HetcdcError::Unsupported { .. }), "{err}");
+        // Full replication (r == K) stays supported.
+        let c = cluster(&[12, 12, 12]);
+        let alloc = Homogeneous.place(&c, &JobSpec::terasort(12)).unwrap();
+        assert!(alloc.holders.iter().all(|h| h.count_ones() == 3));
+    }
+
+    #[test]
+    fn oblivious_empty_cluster_is_typed_error_not_panic() {
+        let c = ClusterSpec {
+            nodes: vec![],
+            latency_ms: 0.0,
+        };
+        let err = Oblivious.place(&c, &JobSpec::terasort(12)).unwrap_err();
+        assert!(matches!(err, HetcdcError::InvalidParams(_)));
+        let err = Homogeneous.place(&c, &JobSpec::terasort(12)).unwrap_err();
+        assert!(matches!(err, HetcdcError::InvalidParams(_)));
+    }
+
+    #[test]
+    fn registry_resolves_names_and_auto() {
+        let c3 = cluster(&[6, 7, 7]);
+        let c4 = cluster(&[3, 4, 5, 6]);
+        assert_eq!(placer_by_name("auto", &c3).unwrap().name(), "optimal-k3");
+        assert_eq!(placer_by_name("auto", &c4).unwrap().name(), "lp-general");
+        assert_eq!(
+            placer_by_name("oblivious", &c3).unwrap().default_coder(),
+            "memshare"
+        );
+        assert!(matches!(
+            placer_by_name("nope", &c3).unwrap_err(),
+            HetcdcError::UnknownStrategy { .. }
+        ));
+    }
+}

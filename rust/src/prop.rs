@@ -68,16 +68,54 @@ impl Gen {
     }
 }
 
-/// Property outcome: `Ok(())` passes; `Err(msg)` fails with a description.
-pub type PropResult = Result<(), String>;
+/// Failure of one property case: a human-readable description of the
+/// counterexample. Distinct from [`crate::error::HetcdcError`] — this is
+/// test-harness reporting, not an API error — but typed so no public
+/// signature carries a bare `String` error.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct CaseFail(pub String);
+
+impl std::fmt::Display for CaseFail {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl From<String> for CaseFail {
+    fn from(s: String) -> Self {
+        CaseFail(s)
+    }
+}
+
+impl From<&str> for CaseFail {
+    fn from(s: &str) -> Self {
+        CaseFail(s.to_string())
+    }
+}
+
+impl From<crate::error::HetcdcError> for CaseFail {
+    fn from(e: crate::error::HetcdcError) -> Self {
+        CaseFail(e.to_string())
+    }
+}
+
+/// Property outcome: `Ok(())` passes; `Err(fail)` carries the
+/// counterexample description.
+pub type PropResult = Result<(), CaseFail>;
 
 /// Convenience: boolean condition with a message on failure.
 pub fn check(cond: bool, msg: impl Into<String>) -> PropResult {
     if cond {
         Ok(())
     } else {
-        Err(msg.into())
+        Err(CaseFail(msg.into()))
     }
+}
+
+/// Convenience: fail a case with a message (for early returns inside
+/// property closures).
+pub fn fail(msg: impl Into<String>) -> PropResult {
+    Err(CaseFail(msg.into()))
 }
 
 /// Run `cases` cases of `prop`. Panics (failing the enclosing `#[test]`)
@@ -87,7 +125,7 @@ where
     F: FnMut(&mut Gen) -> PropResult,
 {
     let base = env_seed().unwrap_or(0xC0FFEE);
-    let mut failure: Option<(u64, String)> = None;
+    let mut failure: Option<(u64, CaseFail)> = None;
     for i in 0..cases {
         let seed = base.wrapping_add(i.wrapping_mul(0x9E37_79B9));
         let mut gen = Gen::new(seed);

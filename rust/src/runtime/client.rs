@@ -1,4 +1,4 @@
-//! PJRT client wrapper with a compile cache.
+//! PJRT client wrapper with a compile cache (`xla` feature only).
 //!
 //! Interchange is HLO **text** (`HloModuleProto::from_text_file`): jax
 //! >= 0.5 serializes protos with 64-bit instruction ids that xla_extension
@@ -7,69 +7,17 @@
 //! and cached for the life of the runtime — compilation is off the hot
 //! path, execution is on it.
 
-use crate::util::json::Json;
-use anyhow::{anyhow, Context, Result};
+use super::manifest::ArtifactManifest;
+use crate::error::{HetcdcError, Result};
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 
-/// Parsed `artifacts/manifest.json`.
-#[derive(Clone, Debug)]
-pub struct ArtifactManifest {
-    /// ModelConfig fields baked into the artifacts.
-    pub vocab: usize,
-    pub q: usize,
-    pub t: usize,
-    pub map_batch: usize,
-    pub keys_per_file: usize,
-    pub reduce_batch: usize,
-    /// name -> (file, input shapes)
-    pub artifacts: HashMap<String, (String, Vec<Vec<usize>>)>,
+fn rt_err(msg: impl std::fmt::Display) -> HetcdcError {
+    HetcdcError::RuntimeUnavailable(msg.to_string())
 }
 
-impl ArtifactManifest {
-    pub fn parse(text: &str) -> Result<Self> {
-        let j = Json::parse(text).map_err(|e| anyhow!("manifest: {e}"))?;
-        let cfg = j.get("config").ok_or_else(|| anyhow!("manifest: no config"))?;
-        let get = |k: &str| -> Result<usize> {
-            cfg.get(k)
-                .and_then(|v| v.as_usize())
-                .ok_or_else(|| anyhow!("manifest config missing '{k}'"))
-        };
-        let mut artifacts = HashMap::new();
-        let arts = j
-            .get("artifacts")
-            .and_then(|a| a.as_obj())
-            .ok_or_else(|| anyhow!("manifest: no artifacts"))?;
-        for (name, entry) in arts {
-            let file = entry
-                .get("file")
-                .and_then(|f| f.as_str())
-                .ok_or_else(|| anyhow!("artifact {name}: no file"))?
-                .to_string();
-            let inputs = entry
-                .get("inputs")
-                .and_then(|i| i.as_arr())
-                .ok_or_else(|| anyhow!("artifact {name}: no inputs"))?
-                .iter()
-                .map(|inp| {
-                    inp.get("shape")
-                        .and_then(|s| s.as_arr())
-                        .map(|dims| dims.iter().filter_map(|d| d.as_usize()).collect())
-                        .ok_or_else(|| anyhow!("artifact {name}: bad shape"))
-                })
-                .collect::<Result<Vec<Vec<usize>>>>()?;
-            artifacts.insert(name.clone(), (file, inputs));
-        }
-        Ok(ArtifactManifest {
-            vocab: get("vocab")?,
-            q: get("q")?,
-            t: get("t")?,
-            map_batch: get("map_batch")?,
-            keys_per_file: get("keys_per_file")?,
-            reduce_batch: get("reduce_batch")?,
-            artifacts,
-        })
-    }
+fn exec_err(msg: impl std::fmt::Display) -> HetcdcError {
+    HetcdcError::Backend(msg.to_string())
 }
 
 /// PJRT CPU runtime: compile-once, execute-many.
@@ -86,10 +34,14 @@ impl Runtime {
     /// Load the artifact directory (must contain `manifest.json`).
     pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
         let dir = dir.as_ref().to_path_buf();
-        let manifest_text = std::fs::read_to_string(dir.join("manifest.json"))
-            .with_context(|| format!("reading {}/manifest.json (run `make artifacts`)", dir.display()))?;
+        let manifest_text = std::fs::read_to_string(dir.join("manifest.json")).map_err(|e| {
+            rt_err(format!(
+                "reading {}/manifest.json (run `make artifacts`): {e}",
+                dir.display()
+            ))
+        })?;
         let manifest = ArtifactManifest::parse(&manifest_text)?;
-        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+        let client = xla::PjRtClient::cpu().map_err(|e| rt_err(format!("PJRT cpu client: {e:?}")))?;
         Ok(Runtime {
             client,
             dir,
@@ -113,18 +65,18 @@ impl Runtime {
                 .manifest
                 .artifacts
                 .get(name)
-                .ok_or_else(|| anyhow!("unknown artifact '{name}'"))?
+                .ok_or_else(|| exec_err(format!("unknown artifact '{name}'")))?
                 .clone();
             let path = self.dir.join(&file);
             let proto = xla::HloModuleProto::from_text_file(
-                path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+                path.to_str().ok_or_else(|| exec_err("non-utf8 path"))?,
             )
-            .map_err(|e| anyhow!("parsing {}: {e:?}", path.display()))?;
+            .map_err(|e| exec_err(format!("parsing {}: {e:?}", path.display())))?;
             let comp = xla::XlaComputation::from_proto(&proto);
             let exe = self
                 .client
                 .compile(&comp)
-                .map_err(|e| anyhow!("compiling {name}: {e:?}"))?;
+                .map_err(|e| exec_err(format!("compiling {name}: {e:?}")))?;
             self.exes.insert(name.to_string(), exe);
         }
         Ok(self.exes.get(name).unwrap())
@@ -144,16 +96,16 @@ impl Runtime {
     ) -> Result<xla::Literal> {
         let expect: usize = shape.iter().product();
         if data.len() != expect {
-            return Err(anyhow!(
+            return Err(exec_err(format!(
                 "literal data {} != shape {:?} product {expect}",
                 data.len(),
                 shape
-            ));
+            )));
         }
         let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
         xla::Literal::vec1(data)
             .reshape(&dims)
-            .map_err(|e| anyhow!("reshape {shape:?}: {e:?}"))
+            .map_err(|e| exec_err(format!("reshape {shape:?}: {e:?}")))
     }
 
     pub fn lit_f32(data: &[f32], shape: &[usize]) -> Result<xla::Literal> {
@@ -171,24 +123,24 @@ impl Runtime {
         let exe = self.executable(name)?;
         let result = exe
             .execute::<xla::Literal>(inputs)
-            .map_err(|e| anyhow!("executing {name}: {e:?}"))?[0][0]
+            .map_err(|e| exec_err(format!("executing {name}: {e:?}")))?[0][0]
             .to_literal_sync()
-            .map_err(|e| anyhow!("fetching {name} result: {e:?}"))?;
+            .map_err(|e| exec_err(format!("fetching {name} result: {e:?}")))?;
         result
             .to_tuple1()
-            .map_err(|e| anyhow!("untupling {name} result: {e:?}"))
+            .map_err(|e| exec_err(format!("untupling {name} result: {e:?}")))
     }
 
     pub fn execute_to_f32(&mut self, name: &str, inputs: &[xla::Literal]) -> Result<Vec<f32>> {
         self.execute(name, inputs)?
             .to_vec::<f32>()
-            .map_err(|e| anyhow!("f32 result of {name}: {e:?}"))
+            .map_err(|e| exec_err(format!("f32 result of {name}: {e:?}")))
     }
 
     pub fn execute_to_i32(&mut self, name: &str, inputs: &[xla::Literal]) -> Result<Vec<i32>> {
         self.execute(name, inputs)?
             .to_vec::<i32>()
-            .map_err(|e| anyhow!("i32 result of {name}: {e:?}"))
+            .map_err(|e| exec_err(format!("i32 result of {name}: {e:?}")))
     }
 
     /// Expected input shapes of an artifact (from the manifest).
@@ -197,37 +149,5 @@ impl Runtime {
     }
 }
 
-#[cfg(test)]
-mod tests {
-    use super::*;
-
-    #[test]
-    fn manifest_parses() {
-        let text = r#"{
-          "artifacts": {
-            "map_project": {"file": "map_project.hlo.txt",
-              "inputs": [{"dtype": "float32", "shape": [96, 256]},
-                         {"dtype": "float32", "shape": [256, 16]}]}
-          },
-          "config": {"vocab": 256, "q": 3, "t": 32, "map_batch": 16,
-                     "keys_per_file": 512, "reduce_batch": 16,
-                     "xor_rows": 8, "xor_cols": 128}
-        }"#;
-        let m = ArtifactManifest::parse(text).unwrap();
-        assert_eq!(m.vocab, 256);
-        assert_eq!(m.q, 3);
-        let (file, shapes) = &m.artifacts["map_project"];
-        assert_eq!(file, "map_project.hlo.txt");
-        assert_eq!(shapes[0], vec![96, 256]);
-        assert_eq!(shapes[1], vec![256, 16]);
-    }
-
-    #[test]
-    fn manifest_rejects_missing_fields() {
-        assert!(ArtifactManifest::parse("{}").is_err());
-        assert!(ArtifactManifest::parse(r#"{"config": {}, "artifacts": {}}"#).is_err());
-    }
-
-    // Live PJRT tests are in rust/tests/runtime_integration.rs (they need
-    // `make artifacts` to have run).
-}
+// Manifest parsing tests live in super::manifest; live PJRT tests are in
+// rust/tests/runtime_integration.rs (they need `make artifacts`).

@@ -1,0 +1,99 @@
+//! Parsed `artifacts/manifest.json` — pure JSON work, shared by the real
+//! PJRT client (`xla` feature) and the dependency-free stub.
+
+use crate::error::{HetcdcError, Result};
+use crate::util::json::Json;
+use std::collections::HashMap;
+
+/// Parsed `artifacts/manifest.json`.
+#[derive(Clone, Debug)]
+pub struct ArtifactManifest {
+    /// ModelConfig fields baked into the artifacts.
+    pub vocab: usize,
+    pub q: usize,
+    pub t: usize,
+    pub map_batch: usize,
+    pub keys_per_file: usize,
+    pub reduce_batch: usize,
+    /// name -> (file, input shapes)
+    pub artifacts: HashMap<String, (String, Vec<Vec<usize>>)>,
+}
+
+impl ArtifactManifest {
+    pub fn parse(text: &str) -> Result<Self> {
+        let bad = |m: String| HetcdcError::Json(format!("manifest: {m}"));
+        let j = Json::parse(text).map_err(|e| bad(e.to_string()))?;
+        let cfg = j.get("config").ok_or_else(|| bad("no config".into()))?;
+        let get = |k: &str| -> Result<usize> {
+            cfg.get(k)
+                .and_then(|v| v.as_usize())
+                .ok_or_else(|| bad(format!("config missing '{k}'")))
+        };
+        let mut artifacts = HashMap::new();
+        let arts = j
+            .get("artifacts")
+            .and_then(|a| a.as_obj())
+            .ok_or_else(|| bad("no artifacts".into()))?;
+        for (name, entry) in arts {
+            let file = entry
+                .get("file")
+                .and_then(|f| f.as_str())
+                .ok_or_else(|| bad(format!("artifact {name}: no file")))?
+                .to_string();
+            let inputs = entry
+                .get("inputs")
+                .and_then(|i| i.as_arr())
+                .ok_or_else(|| bad(format!("artifact {name}: no inputs")))?
+                .iter()
+                .map(|inp| {
+                    inp.get("shape")
+                        .and_then(|s| s.as_arr())
+                        .map(|dims| dims.iter().filter_map(|d| d.as_usize()).collect())
+                        .ok_or_else(|| bad(format!("artifact {name}: bad shape")))
+                })
+                .collect::<Result<Vec<Vec<usize>>>>()?;
+            artifacts.insert(name.clone(), (file, inputs));
+        }
+        Ok(ArtifactManifest {
+            vocab: get("vocab")?,
+            q: get("q")?,
+            t: get("t")?,
+            map_batch: get("map_batch")?,
+            keys_per_file: get("keys_per_file")?,
+            reduce_batch: get("reduce_batch")?,
+            artifacts,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn manifest_parses() {
+        let text = r#"{
+          "artifacts": {
+            "map_project": {"file": "map_project.hlo.txt",
+              "inputs": [{"dtype": "float32", "shape": [96, 256]},
+                         {"dtype": "float32", "shape": [256, 16]}]}
+          },
+          "config": {"vocab": 256, "q": 3, "t": 32, "map_batch": 16,
+                     "keys_per_file": 512, "reduce_batch": 16,
+                     "xor_rows": 8, "xor_cols": 128}
+        }"#;
+        let m = ArtifactManifest::parse(text).unwrap();
+        assert_eq!(m.vocab, 256);
+        assert_eq!(m.q, 3);
+        let (file, shapes) = &m.artifacts["map_project"];
+        assert_eq!(file, "map_project.hlo.txt");
+        assert_eq!(shapes[0], vec![96, 256]);
+        assert_eq!(shapes[1], vec![256, 16]);
+    }
+
+    #[test]
+    fn manifest_rejects_missing_fields() {
+        assert!(ArtifactManifest::parse("{}").is_err());
+        assert!(ArtifactManifest::parse(r#"{"config": {}, "artifacts": {}}"#).is_err());
+    }
+}

@@ -1,8 +1,25 @@
 //! PJRT execution runtime: loads the AOT artifacts (HLO text) emitted by
 //! `python/compile/aot.py` and executes them on the CPU PJRT client.
-//! This is the only module that touches the `xla` crate; Python never runs
-//! at request time.
+//! This is the only module that touches the `xla` crate; Python never
+//! runs at request time.
+//!
+//! The `xla` cargo feature gates the real client (it needs the vendored
+//! `xla` crate closure — see DESIGN.md). Without it, [`stub`] provides
+//! the same surface with every execution path returning
+//! [`crate::error::HetcdcError::RuntimeUnavailable`], so the rest of the
+//! crate (and its binaries, benches, and examples) builds dependency-free
+//! and falls back to the native backend at runtime.
 
+pub mod manifest;
+
+#[cfg(feature = "xla")]
 pub mod client;
+#[cfg(feature = "xla")]
+pub use client::Runtime;
 
-pub use client::{ArtifactManifest, Runtime};
+#[cfg(not(feature = "xla"))]
+pub mod stub;
+#[cfg(not(feature = "xla"))]
+pub use stub::Runtime;
+
+pub use manifest::ArtifactManifest;

@@ -1,0 +1,86 @@
+//! Dependency-free stand-in for the PJRT runtime, compiled when the `xla`
+//! feature is off. Presents the same surface as the real
+//! [`super::client`] so `XlaBackend`, the CLI, examples, and benches all
+//! compile unchanged; every execution entry point returns
+//! [`HetcdcError::RuntimeUnavailable`], and `Runtime::load` fails up
+//! front so callers fall back to the native backend cleanly.
+
+use super::manifest::ArtifactManifest;
+use crate::error::{HetcdcError, Result};
+use std::path::{Path, PathBuf};
+
+fn unavailable() -> HetcdcError {
+    HetcdcError::RuntimeUnavailable(
+        "built without the `xla` cargo feature (PJRT artifacts cannot be executed); \
+         use the native backend, or rebuild with `--features xla` and the vendored \
+         xla crate (see DESIGN.md)"
+            .into(),
+    )
+}
+
+/// Placeholder for `xla::Literal` in signatures.
+#[derive(Clone, Debug)]
+pub struct Literal;
+
+/// Stub PJRT runtime: same shape as the real one, never loads.
+pub struct Runtime {
+    pub manifest: ArtifactManifest,
+    /// Executions performed (metrics).
+    pub exec_count: u64,
+}
+
+impl Runtime {
+    /// Always fails: the PJRT client is not compiled in.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let _ = dir.as_ref();
+        Err(unavailable())
+    }
+
+    /// Default artifact directory: `$HETCDC_ARTIFACTS` or `./artifacts`.
+    pub fn default_dir() -> PathBuf {
+        std::env::var("HETCDC_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| PathBuf::from("artifacts"))
+    }
+
+    pub fn precompile(&mut self, _names: &[&str]) -> Result<()> {
+        Err(unavailable())
+    }
+
+    pub fn lit_f32(_data: &[f32], _shape: &[usize]) -> Result<Literal> {
+        Err(unavailable())
+    }
+
+    pub fn lit_i32(_data: &[i32], _shape: &[usize]) -> Result<Literal> {
+        Err(unavailable())
+    }
+
+    pub fn execute(&mut self, _name: &str, _inputs: &[Literal]) -> Result<Literal> {
+        Err(unavailable())
+    }
+
+    pub fn execute_to_f32(&mut self, _name: &str, _inputs: &[Literal]) -> Result<Vec<f32>> {
+        Err(unavailable())
+    }
+
+    pub fn execute_to_i32(&mut self, _name: &str, _inputs: &[Literal]) -> Result<Vec<i32>> {
+        Err(unavailable())
+    }
+
+    /// Expected input shapes of an artifact (from the manifest).
+    pub fn input_shapes(&self, name: &str) -> Option<&[Vec<usize>]> {
+        self.manifest.artifacts.get(name).map(|(_, s)| s.as_slice())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn load_fails_with_runtime_unavailable() {
+        let err = Runtime::load("artifacts").unwrap_err();
+        assert!(matches!(err, HetcdcError::RuntimeUnavailable(_)));
+        assert!(err.to_string().contains("xla"));
+    }
+}

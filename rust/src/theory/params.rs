@@ -1,6 +1,11 @@
 //! Problem parameters `P = (M_1, .., M_K, N)` of the CDC system model (§II).
 
+use crate::error::{HetcdcError, Result};
 use std::fmt;
+
+fn invalid(msg: impl Into<String>) -> HetcdcError {
+    HetcdcError::InvalidParams(msg.into())
+}
 
 /// K=3 problem instance. Storage sizes are in files; `m` is kept in the
 /// caller's node order (the theory sorts internally, per the paper's WLOG
@@ -12,7 +17,7 @@ pub struct Params3 {
 }
 
 impl Params3 {
-    pub fn new(m1: u64, m2: u64, m3: u64, n: u64) -> Result<Self, String> {
+    pub fn new(m1: u64, m2: u64, m3: u64, n: u64) -> Result<Self> {
         let p = Self { m: [m1, m2, m3], n };
         p.validate()?;
         Ok(p)
@@ -21,24 +26,29 @@ impl Params3 {
     /// System-model constraints: every node stores something, no node
     /// stores more than everything, and all files fit somewhere
     /// (`∪_k M_k = N` requires `ΣM_k >= N`).
-    pub fn validate(&self) -> Result<(), String> {
+    pub fn validate(&self) -> Result<()> {
         if self.n == 0 {
-            return Err("N must be positive".into());
+            return Err(invalid("N must be positive"));
         }
         for (k, &mk) in self.m.iter().enumerate() {
             if mk == 0 {
-                return Err(format!("M{} must be positive", k + 1));
+                return Err(invalid(format!("M{} must be positive", k + 1)));
             }
             if mk > self.n {
-                return Err(format!("M{} = {} exceeds N = {}", k + 1, mk, self.n));
+                return Err(invalid(format!(
+                    "M{} = {} exceeds N = {}",
+                    k + 1,
+                    mk,
+                    self.n
+                )));
             }
         }
         if self.total() < self.n {
-            return Err(format!(
+            return Err(invalid(format!(
                 "sum of storage {} cannot cover N = {}",
                 self.total(),
                 self.n
-            ));
+            )));
         }
         Ok(())
     }
@@ -79,20 +89,25 @@ pub struct ParamsK {
 }
 
 impl ParamsK {
-    pub fn new(m: Vec<u64>, n: u64) -> Result<Self, String> {
+    pub fn new(m: Vec<u64>, n: u64) -> Result<Self> {
         if m.len() < 2 {
-            return Err("need at least 2 nodes".into());
+            return Err(invalid("need at least 2 nodes"));
         }
         if n == 0 {
-            return Err("N must be positive".into());
+            return Err(invalid("N must be positive"));
         }
         for (k, &mk) in m.iter().enumerate() {
             if mk == 0 || mk > n {
-                return Err(format!("M{} = {} out of range (0, N={}]", k + 1, mk, n));
+                return Err(invalid(format!(
+                    "M{} = {} out of range (0, N={}]",
+                    k + 1,
+                    mk,
+                    n
+                )));
             }
         }
         if m.iter().sum::<u64>() < n {
-            return Err("sum of storage cannot cover N".into());
+            return Err(invalid("sum of storage cannot cover N"));
         }
         Ok(Self { m, n })
     }

@@ -17,6 +17,8 @@ pub struct ArgSpec {
 pub struct Args {
     values: BTreeMap<String, String>,
     flags: Vec<String>,
+    /// Option names the user explicitly passed (vs spec defaults).
+    explicit: Vec<String>,
     pub positional: Vec<String>,
 }
 
@@ -62,11 +64,13 @@ impl Args {
                                 .ok_or_else(|| CliError(format!("--{name} needs a value")))?
                         }
                     };
+                    args.explicit.push(name.clone());
                     args.values.insert(name, val);
                 } else {
                     if inline.is_some() {
                         return Err(CliError(format!("--{name} takes no value")));
                     }
+                    args.explicit.push(name.clone());
                     args.flags.push(name);
                 }
             } else {
@@ -79,6 +83,12 @@ impl Args {
 
     pub fn flag(&self, name: &str) -> bool {
         self.flags.iter().any(|f| f == name)
+    }
+
+    /// True when the user explicitly passed `--name` (spec defaults do
+    /// not count).
+    pub fn provided(&self, name: &str) -> bool {
+        self.explicit.iter().any(|n| n == name)
     }
 
     pub fn get(&self, name: &str) -> Option<&str> {

@@ -123,6 +123,82 @@ fn run_oblivious_placement_shows_penalty() {
 }
 
 #[test]
+fn plan_emits_valid_json_with_predicted_load() {
+    let (code, stdout, _) = hetcdc(&[
+        "plan", "--workload", "terasort", "--n", "12", "--storage", "6,7,7",
+    ]);
+    assert_eq!(code, 0, "{stdout}");
+    let j = hetcdc::util::json::Json::parse(stdout.trim()).expect("valid plan json");
+    assert_eq!(j.get("placer").and_then(|v| v.as_str()), Some("optimal-k3"));
+    assert_eq!(j.get("coder").and_then(|v| v.as_str()), Some("pairing"));
+    assert_eq!(j.get("mode").and_then(|v| v.as_str()), Some("coded"));
+    assert_eq!(
+        j.get("predicted").and_then(|p| p.get("load_equations")).and_then(|v| v.as_f64()),
+        Some(12.0)
+    );
+    // The emitted artifact is a loadable, re-validated plan.
+    let plan = hetcdc::engine::Plan::from_json_str(stdout.trim()).expect("plan loads");
+    assert_eq!(plan.predicted.load_equations, 12.0);
+}
+
+#[test]
+fn plan_file_roundtrips_through_run_with_batches() {
+    let dir = std::env::temp_dir().join(format!("hetcdc_plan_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("plan.json");
+    let (code, stdout, _) = hetcdc(&[
+        "plan", "--workload", "terasort", "--n", "12", "--storage", "6,7,7",
+        "--mode", "coded", "--out", path.to_str().unwrap(),
+    ]);
+    assert_eq!(code, 0, "{stdout}");
+    assert!(stdout.contains("predicted load 12"), "{stdout}");
+
+    let (code, stdout, _) = hetcdc(&[
+        "run", "--plan", path.to_str().unwrap(), "--batches", "2", "--json",
+    ]);
+    std::fs::remove_dir_all(&dir).ok();
+    assert_eq!(code, 0, "{stdout}");
+    let loads: Vec<f64> = stdout
+        .lines()
+        .filter(|l| l.starts_with('{'))
+        .map(|l| {
+            let j = hetcdc::util::json::Json::parse(l).expect("report json");
+            assert_eq!(j.get("verified"), Some(&hetcdc::util::json::Json::Bool(true)));
+            j.get("load_equations").and_then(|v| v.as_f64()).unwrap()
+        })
+        .collect();
+    assert_eq!(loads, vec![12.0, 12.0], "two batches, identical loads");
+}
+
+#[test]
+fn run_plan_rejects_conflicting_flags() {
+    let dir = std::env::temp_dir().join(format!("hetcdc_conflict_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("plan.json");
+    let (code, _, _) = hetcdc(&[
+        "plan", "--workload", "terasort", "--n", "12", "--storage", "6,7,7",
+        "--out", path.to_str().unwrap(),
+    ]);
+    assert_eq!(code, 0);
+    let (code, _, stderr) = hetcdc(&[
+        "run", "--plan", path.to_str().unwrap(), "--mode", "uncoded",
+    ]);
+    std::fs::remove_dir_all(&dir).ok();
+    assert_eq!(code, 1);
+    assert!(stderr.contains("conflicts with --plan"), "{stderr}");
+}
+
+#[test]
+fn run_rejects_unknown_placement_with_typed_error() {
+    let (code, _, stderr) = hetcdc(&[
+        "run", "--workload", "terasort", "--n", "12", "--storage", "6,7,7",
+        "--mode", "coded", "--placement", "frobnicate",
+    ]);
+    assert_eq!(code, 1);
+    assert!(stderr.contains("unknown placer"), "{stderr}");
+}
+
+#[test]
 fn sweep_emits_markdown_table() {
     let (code, stdout, _) = hetcdc(&["sweep", "--n", "6", "--step", "3"]);
     assert_eq!(code, 0);

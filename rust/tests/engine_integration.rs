@@ -1,7 +1,7 @@
 //! Cross-module integration: placement strategies x shuffle modes x
 //! workloads through the full engine, against theory and each other.
 
-use hetcdc::engine::{Engine, NativeBackend, PlacementStrategy};
+use hetcdc::engine::{Engine, NativeBackend};
 use hetcdc::model::cluster::ClusterSpec;
 use hetcdc::model::job::{JobSpec, ShuffleMode, WorkloadKind};
 use hetcdc::prop;
@@ -31,24 +31,23 @@ fn small_job(kind: WorkloadKind, n: u64) -> JobSpec {
 fn every_strategy_mode_workload_combination_verifies() {
     let c3 = cluster(&[6, 7, 7]);
     let c3h = cluster(&[8, 8, 8]);
-    let cases: Vec<(&ClusterSpec, PlacementStrategy)> = vec![
-        (&c3, PlacementStrategy::OptimalK3),
-        (&c3, PlacementStrategy::LpGeneral),
-        (&c3, PlacementStrategy::Oblivious),
-        (&c3h, PlacementStrategy::Homogeneous),
+    let cases: Vec<(&ClusterSpec, &str)> = vec![
+        (&c3, "optimal-k3"),
+        (&c3, "lp-general"),
+        (&c3, "oblivious"),
+        (&c3h, "homogeneous"),
     ];
-    for (cl, strategy) in cases {
+    for (cl, placer) in cases {
         for kind in [WorkloadKind::WordCount, WorkloadKind::TeraSort] {
             for mode in [ShuffleMode::Coded, ShuffleMode::Uncoded] {
                 let job = small_job(kind, 12);
                 let mut be = NativeBackend;
                 let r = Engine::new(cl, &job, &mut be)
-                    .run(&strategy, mode)
-                    .unwrap_or_else(|e| panic!("{:?} {kind:?} {mode:?}: {e}", strategy.name()));
+                    .run(placer, mode)
+                    .unwrap_or_else(|e| panic!("{placer} {kind:?} {mode:?}: {e}"));
                 assert!(
                     r.verified,
-                    "{} {kind:?} {mode:?}: max_abs_err {}",
-                    strategy.name(),
+                    "{placer} {kind:?} {mode:?}: max_abs_err {}",
                     r.max_abs_err
                 );
             }
@@ -63,12 +62,12 @@ fn strategy_ordering_holds_on_heterogeneous_cluster() {
     let cl = cluster(&[4, 8, 12]);
     let job = small_job(WorkloadKind::TeraSort, 12);
     let mut be = NativeBackend;
-    let mut run = |s: &PlacementStrategy, m: ShuffleMode| {
+    let mut run = |s: &str, m: ShuffleMode| {
         Engine::new(&cl, &job, &mut be).run(s, m).unwrap().load_equations
     };
-    let aware_coded = run(&PlacementStrategy::OptimalK3, ShuffleMode::Coded);
-    let aware_uncoded = run(&PlacementStrategy::OptimalK3, ShuffleMode::Uncoded);
-    let obliv_coded = run(&PlacementStrategy::Oblivious, ShuffleMode::Coded);
+    let aware_coded = run("optimal-k3", ShuffleMode::Coded);
+    let aware_uncoded = run("optimal-k3", ShuffleMode::Uncoded);
+    let obliv_coded = run("oblivious", ShuffleMode::Coded);
     assert!(aware_coded <= aware_uncoded);
     assert!(aware_coded <= obliv_coded);
     let p = Params3::new(4, 8, 12, 12).unwrap();
@@ -91,10 +90,10 @@ fn lp_and_optimal_k3_agree_on_measured_load() {
         let job = small_job(WorkloadKind::TeraSort, n);
         let mut be = NativeBackend;
         let opt = Engine::new(&cl, &job, &mut be)
-            .run(&PlacementStrategy::OptimalK3, ShuffleMode::Coded)
+            .run("optimal-k3", ShuffleMode::Coded)
             .map_err(|e| format!("{p}: {e}"))?;
         let lp = Engine::new(&cl, &job, &mut be)
-            .run(&PlacementStrategy::LpGeneral, ShuffleMode::Coded)
+            .run("lp-general", ShuffleMode::Coded)
             .map_err(|e| format!("{p}: {e}"))?;
         // LP-realized placements round to integers; the measured load may
         // exceed L* by the rounding slack but must stay below uncoded.
@@ -119,7 +118,7 @@ fn wire_overhead_accounting_is_consistent() {
     let job = small_job(WorkloadKind::TeraSort, 12);
     let mut be = NativeBackend;
     let r = Engine::new(&cl, &job, &mut be)
-        .run(&PlacementStrategy::OptimalK3, ShuffleMode::Coded)
+        .run("optimal-k3", ShuffleMode::Coded)
         .unwrap();
     assert!(r.wire_bytes > r.payload_bytes);
     // payload = load_units * iv_bytes (whole-IV plan).
@@ -138,7 +137,7 @@ fn report_json_roundtrips() {
     let job = small_job(WorkloadKind::WordCount, 12);
     let mut be = NativeBackend;
     let r = Engine::new(&cl, &job, &mut be)
-        .run(&PlacementStrategy::OptimalK3, ShuffleMode::Coded)
+        .run("optimal-k3", ShuffleMode::Coded)
         .unwrap();
     let j = r.to_json();
     let parsed = hetcdc::util::json::Json::parse(&j.to_string()).unwrap();
@@ -156,8 +155,51 @@ fn larger_n_scales_losslessly() {
     let p = Params3::new(60, 70, 70, 120).unwrap();
     let mut be = NativeBackend;
     let r = Engine::new(&cl, &job, &mut be)
-        .run(&PlacementStrategy::OptimalK3, ShuffleMode::Coded)
+        .run("optimal-k3", ShuffleMode::Coded)
         .unwrap();
     assert!(r.verified);
     assert_eq!(r.load_equations, load::lstar(&p)); // 120
+}
+
+#[test]
+fn plan_roundtrips_through_json_and_executes() {
+    // plan -> serialize -> deserialize (re-validated) -> execute: the
+    // `hetcdc plan` / `hetcdc run --plan` contract, in-process.
+    use hetcdc::engine::{Executor, JobBuilder, Plan};
+    let cl = cluster(&[6, 7, 7]);
+    let job = small_job(WorkloadKind::TeraSort, 12);
+    let plan = JobBuilder::new(&cl, &job)
+        .placer("optimal-k3")
+        .mode(ShuffleMode::Coded)
+        .build()
+        .unwrap();
+    let restored = Plan::from_json_str(&plan.to_json_string()).unwrap();
+    let mut be = NativeBackend;
+    let mut exec = Executor::new(&restored);
+    let r1 = exec.run_batch(&mut be, 1).unwrap();
+    let r2 = exec.run_batch(&mut be, 2).unwrap();
+    assert!(r1.verified && r2.verified);
+    assert_eq!(r1.load_equations, 12.0);
+    assert_eq!(r1.load_equations, r2.load_equations);
+    assert_eq!(r1.payload_bytes, r2.payload_bytes);
+    assert_eq!(r1.shuffle_time_s, r2.shuffle_time_s);
+}
+
+#[test]
+fn plan_cache_serves_repeated_shapes() {
+    use hetcdc::engine::{Executor, PlanCache};
+    let cl = cluster(&[6, 7, 7]);
+    let mut cache = PlanCache::new(8);
+    let mut be = NativeBackend;
+    for batch in 0..4u64 {
+        let mut job = small_job(WorkloadKind::TeraSort, 12);
+        job.seed = batch; // seed churn must not force rebuilds
+        let plan = cache
+            .get_or_build(&cl, &job, "auto", None, ShuffleMode::Coded)
+            .unwrap();
+        let r = Executor::new(&plan).run_batch(&mut be, batch).unwrap();
+        assert!(r.verified);
+        assert_eq!(r.load_equations, 12.0);
+    }
+    assert_eq!((cache.hits, cache.misses), (3, 1));
 }

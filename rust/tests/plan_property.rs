@@ -1,0 +1,182 @@
+//! Property tests for the staged prepared-plan API: every `Placer` ×
+//! `ShuffleCoder` combination that builds a `Plan` must build a
+//! *decoder-complete* one (build verifies decodability; we cross-check
+//! with the symbolic decoder), across randomized heterogeneous storages
+//! for K = 2..6 — and executing one `Plan` twice must reproduce the exact
+//! same loads.
+
+use hetcdc::coding::{builtin_coders, decoder, ShuffleCoder};
+use hetcdc::engine::{Executor, JobBuilder, NativeBackend};
+use hetcdc::model::cluster::ClusterSpec;
+use hetcdc::model::job::{JobSpec, ShuffleMode};
+use hetcdc::placement::{builtin_placers, Placer};
+use hetcdc::prop;
+use hetcdc::HetcdcError;
+
+fn cluster(storage: &[u64]) -> ClusterSpec {
+    let mut c = ClusterSpec::homogeneous(storage.len(), 1, 1000.0);
+    for (node, &m) in c.nodes.iter_mut().zip(storage) {
+        node.storage = m;
+    }
+    c
+}
+
+fn small_job(n: u64) -> JobSpec {
+    let mut job = JobSpec::terasort(n);
+    job.t = 8;
+    job.keys_per_file = 16;
+    job
+}
+
+#[test]
+fn prop_every_placer_coder_combo_builds_decodable_plans() {
+    // Random heterogeneous storages, K = 2..6. A combo may reject a shape
+    // with a typed error (homogeneous placer on unequal storage, the
+    // multicast coder on an irregular allocation, K=3-only placers, ...);
+    // every combo that *accepts* must produce a plan that decodes and
+    // whose predicted load does not exceed the uncoded baseline.
+    prop::run("placer x coder -> decodable plan", 40, |g| {
+        let k = g.usize_in(2..=6);
+        let n = g.u64_in(2..=8);
+        let storage: Vec<u64> = (0..k).map(|_| g.u64_in(1..=n)).collect();
+        if storage.iter().sum::<u64>() < n {
+            return Ok(()); // cannot cover N: every placer rejects
+        }
+        let cl = cluster(&storage);
+        let job = small_job(n);
+        for placer in builtin_placers() {
+            // Place once per strategy; fan every coder over the result.
+            let alloc = match placer.place(&cl, &job) {
+                Ok(a) => a,
+                Err(_) => continue, // shape not served (e.g. K=3-only)
+            };
+            for coder in builtin_coders() {
+                let built = JobBuilder::new(&cl, &job)
+                    .custom_allocation(alloc.clone())
+                    .coder(coder.name())
+                    .mode(ShuffleMode::Coded)
+                    .build();
+                let plan = match built {
+                    Ok(plan) => plan,
+                    // Shape not served by this combo: fine, but it must
+                    // never be the "plan built yet undecodable" error —
+                    // that would mean validation was skipped.
+                    Err(HetcdcError::Undecodable { .. }) => {
+                        return prop::fail(format!(
+                            "K={k} storage={storage:?} N={n}: {} x {} built an \
+                             undecodable plan",
+                            placer.name(),
+                            coder.name()
+                        ));
+                    }
+                    Err(_) => continue,
+                };
+                let report = decoder::verify(&plan.alloc, &plan.shuffle);
+                if !report.is_complete() {
+                    return prop::fail(format!(
+                        "K={k} storage={storage:?} N={n}: {} x {} plan passed build \
+                         but fails symbolic decode",
+                        placer.name(),
+                        coder.name()
+                    ));
+                }
+                if plan.predicted.load_equations > plan.predicted.uncoded_equations + 1e-9 {
+                    return prop::fail(format!(
+                        "K={k} storage={storage:?} N={n}: {} x {} coded load {} exceeds \
+                         uncoded {}",
+                        placer.name(),
+                        coder.name(),
+                        plan.predicted.load_equations,
+                        plan.predicted.uncoded_equations
+                    ));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_built_plans_execute_verified_across_k() {
+    // End-to-end: any plan the default (auto) pipeline builds must run
+    // verified, with measured load equal to the build-time prediction.
+    prop::run("plan executes verified", 12, |g| {
+        let k = g.usize_in(2..=5);
+        let n = g.u64_in(2..=6);
+        let storage: Vec<u64> = (0..k).map(|_| g.u64_in(1..=n)).collect();
+        if storage.iter().sum::<u64>() < n {
+            return Ok(());
+        }
+        let cl = cluster(&storage);
+        let job = small_job(n);
+        let plan = match JobBuilder::new(&cl, &job).build() {
+            Ok(p) => p,
+            Err(e) => return prop::fail(format!("K={k} storage={storage:?} N={n}: {e}")),
+        };
+        let mut be = NativeBackend;
+        let r = Executor::new(&plan)
+            .run(&mut be)
+            .map_err(|e| format!("K={k} storage={storage:?} N={n}: {e}"))?;
+        prop::check(
+            r.verified && (r.load_equations - plan.predicted.load_equations).abs() < 1e-9,
+            format!(
+                "K={k} storage={storage:?} N={n}: verified={} measured={} predicted={}",
+                r.verified, r.load_equations, plan.predicted.load_equations
+            ),
+        )
+    });
+}
+
+#[test]
+fn two_executor_runs_of_one_plan_produce_identical_loads() {
+    let cl = cluster(&[4, 8, 12]);
+    let job = small_job(12);
+    let plan = JobBuilder::new(&cl, &job).placer("optimal-k3").build().unwrap();
+    let mut be = NativeBackend;
+    let mut exec = Executor::new(&plan);
+    let a = exec.run_batch(&mut be, 7).unwrap();
+    let b = exec.run_batch(&mut be, 99).unwrap();
+    assert!(a.verified && b.verified);
+    assert_eq!(a.load_equations, b.load_equations);
+    assert_eq!(a.plan_equations, b.plan_equations);
+    assert_eq!(a.payload_bytes, b.payload_bytes);
+    assert_eq!(a.wire_bytes, b.wire_bytes);
+    assert_eq!(a.messages, b.messages);
+    assert_eq!(a.map_time_s, b.map_time_s);
+    assert_eq!(a.shuffle_time_s, b.shuffle_time_s);
+    // And both equal the plan's build-time prediction.
+    assert_eq!(a.load_equations, plan.predicted.load_equations);
+    assert_eq!(a.payload_bytes, plan.predicted.payload_bytes);
+    assert_eq!(a.wire_bytes, plan.predicted.wire_bytes);
+    assert_eq!(a.shuffle_time_s, plan.predicted.shuffle_time_s);
+    assert_eq!(a.map_time_s, plan.predicted.map_time_s);
+}
+
+#[test]
+fn engine_plan_panic_paths_are_typed_errors() {
+    // The old enum-matched Engine indexed holders[0] and unwrap()ed
+    // min() on storage; both paths must now be typed errors.
+    use hetcdc::coding::coder_by_name;
+    use hetcdc::placement::{placer_by_name, Allocation};
+    let empty = ClusterSpec { nodes: vec![], latency_ms: 0.0 };
+    let job = small_job(12);
+    let err = placer_by_name("oblivious", &empty)
+        .unwrap()
+        .place(&empty, &job)
+        .unwrap_err();
+    assert!(matches!(err, HetcdcError::InvalidParams(_)), "{err}");
+
+    let cl = cluster(&[6, 7, 7]);
+    let no_subfiles = Allocation::new(3, 1, vec![]);
+    let err = coder_by_name("multicast")
+        .unwrap()
+        .plan(&cl, &job, &no_subfiles)
+        .unwrap_err();
+    assert!(matches!(err, HetcdcError::InvalidPlacement(_)), "{err}");
+
+    // And through the full pipeline: a zero-file job is InvalidJob, not a
+    // panic somewhere inside placement.
+    let zero = JobSpec::terasort(0);
+    let err = JobBuilder::new(&cl, &zero).build().unwrap_err();
+    assert!(matches!(err, HetcdcError::InvalidJob(_)), "{err}");
+}

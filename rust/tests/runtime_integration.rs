@@ -3,7 +3,7 @@
 //! on the XLA backend. Requires `make artifacts` (skips with a clear
 //! message otherwise).
 
-use hetcdc::engine::{Engine, NativeBackend, PlacementStrategy, XlaBackend};
+use hetcdc::engine::{Engine, NativeBackend, XlaBackend};
 use hetcdc::model::cluster::ClusterSpec;
 use hetcdc::model::job::{JobSpec, ShuffleMode};
 use hetcdc::runtime::Runtime;
@@ -131,15 +131,11 @@ fn engine_end_to_end_on_xla_backend_terasort() {
     job.keys_per_file = m.keys_per_file;
     let mut be = XlaBackend::new(&mut rt);
     let mut engine = Engine::new(&cluster, &job, &mut be);
-    let coded = engine
-        .run(&PlacementStrategy::OptimalK3, ShuffleMode::Coded)
-        .unwrap();
+    let coded = engine.run("optimal-k3", ShuffleMode::Coded).unwrap();
     assert!(coded.verified, "XLA coded run failed oracle check");
     assert_eq!(coded.load_equations, 12.0); // the paper's headline number
     assert_eq!(coded.max_abs_err, 0.0); // integer pipeline stays exact
-    let uncoded = engine
-        .run(&PlacementStrategy::OptimalK3, ShuffleMode::Uncoded)
-        .unwrap();
+    let uncoded = engine.run("optimal-k3", ShuffleMode::Uncoded).unwrap();
     assert!(uncoded.verified);
     assert_eq!(uncoded.load_equations, 16.0);
 }
@@ -154,9 +150,7 @@ fn engine_end_to_end_on_xla_backend_wordcount() {
     job.vocab = m.vocab;
     let mut be = XlaBackend::new(&mut rt);
     let mut engine = Engine::new(&cluster, &job, &mut be);
-    let r = engine
-        .run(&PlacementStrategy::OptimalK3, ShuffleMode::Coded)
-        .unwrap();
+    let r = engine.run("optimal-k3", ShuffleMode::Coded).unwrap();
     assert!(r.verified, "max_abs_err {}", r.max_abs_err);
     assert_eq!(r.load_equations, 12.0);
     assert_eq!(r.backend, "xla");
@@ -170,7 +164,10 @@ fn job_mismatch_is_rejected_with_guidance() {
     let mut be = XlaBackend::new(&mut rt);
     use hetcdc::engine::MapBackend;
     let err = be.map_subfiles(&job, 3, &[0]).unwrap_err();
-    assert!(err.contains("make artifacts"), "unhelpful error: {err}");
+    assert!(
+        err.to_string().contains("make artifacts"),
+        "unhelpful error: {err}"
+    );
 }
 
 #[test]
