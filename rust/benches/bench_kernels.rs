@@ -53,7 +53,7 @@ fn main() {
                 }
             }
         }
-        let mut net = cluster.network();
+        let mut net = cluster.network().expect("network");
         execute_shuffle(&plan, &mut states, &mut net)
             .unwrap()
             .payload_bytes

@@ -8,7 +8,9 @@
 //! motivation) with and without coding.
 
 use hetcdc::bench::{bench_fn, section, table, Bench};
-use hetcdc::engine::{Engine, Executor, JobBuilder, NativeBackend, PlanCache, XlaBackend};
+use hetcdc::engine::{
+    Engine, ExecMode, Executor, JobBuilder, NativeBackend, PlanCache, XlaBackend,
+};
 use hetcdc::model::cluster::ClusterSpec;
 use hetcdc::model::job::{JobSpec, ShuffleMode};
 use hetcdc::runtime::Runtime;
@@ -196,7 +198,7 @@ fn main() {
             .mode(ShuffleMode::Coded)
             .build()
             .expect("plan");
-        let mut exec = Executor::new(&plan);
+        let mut exec = Executor::new(&plan).expect("executor");
         let r = exec.run_batch(&mut be, batch_seed).expect("run");
         assert!(r.verified);
         r.payload_bytes
@@ -206,7 +208,7 @@ fn main() {
         .mode(ShuffleMode::Coded)
         .build()
         .expect("plan");
-    let mut exec = Executor::new(&plan);
+    let mut exec = Executor::new(&plan).expect("executor");
     let reused = bench_fn("plan reuse (one Plan, one Executor)", &cfg, || {
         batch_seed = batch_seed.wrapping_add(1);
         let r = exec.run_batch(&mut be, batch_seed).expect("run");
@@ -224,6 +226,29 @@ fn main() {
         println!("WARNING: plan reuse did not beat plan-per-run — investigate");
     }
 
+    section("sharded executor: serial vs parallel batches of one plan");
+    // Same plan, same seeds; results are bit-identical (asserted by
+    // tier-1 tests) — only the wall-clock may differ.
+    let serial_t = bench_fn("executor e2e (serial)", &cfg, || {
+        batch_seed = batch_seed.wrapping_add(1);
+        let r = exec.run_batch(&mut be, batch_seed).expect("serial batch");
+        assert!(r.verified);
+        r.payload_bytes
+    });
+    let mut par_exec =
+        Executor::with_mode(&plan, ExecMode::Parallel).expect("parallel executor");
+    let par_t = bench_fn("executor e2e (parallel, auto threads)", &cfg, || {
+        batch_seed = batch_seed.wrapping_add(1);
+        let r = par_exec.run_batch(&mut be, batch_seed).expect("parallel batch");
+        assert!(r.verified);
+        r.payload_bytes
+    });
+    println!(
+        "\nsharded executor speedup: {:.2}x over serial ({} worker threads)",
+        serial_t.mean_ns / par_t.mean_ns,
+        par_exec.effective_threads()
+    );
+
     // PlanCache: the same comparison when job shapes interleave.
     let mut cache = PlanCache::new(16);
     let shapes: Vec<JobSpec> = vec![JobSpec::terasort(n), JobSpec::wordcount(n)];
@@ -233,7 +258,7 @@ fn main() {
         let plan = cache
             .get_or_build(&cluster, jb, "optimal-k3", None, ShuffleMode::Coded)
             .expect("cached plan");
-        let r = Executor::new(&plan).run_batch(&mut be, batch_seed).expect("run");
+        let r = Executor::new(&plan).expect("executor").run_batch(&mut be, batch_seed).expect("run");
         assert!(r.verified);
         r.payload_bytes
     });

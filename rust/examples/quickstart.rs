@@ -38,7 +38,7 @@ fn main() {
 
     // Stage 3: Executor — many data batches, one plan, reused buffers.
     let mut backend = NativeBackend;
-    let mut exec = Executor::new(&plan);
+    let mut exec = Executor::new(&plan).expect("executor");
     for batch in 0u64..3 {
         let r = exec.run_batch(&mut backend, job.seed + batch).expect("batch run");
         assert!(r.verified, "reduce outputs must match the single-node oracle");

@@ -41,6 +41,21 @@ impl BenchResult {
         1e9 / self.mean_ns
     }
 
+    /// Machine-readable form for bench artifacts (`hetcdc bench-json
+    /// --timing`). Wall-clock numbers are inherently nondeterministic;
+    /// regression gates must key on the byte/message metrics instead.
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        let mut m = std::collections::BTreeMap::new();
+        m.insert("name".to_string(), Json::Str(self.name.clone()));
+        m.insert("samples".to_string(), Json::Num(self.samples as f64));
+        m.insert("mean_ns".to_string(), Json::Num(self.mean_ns));
+        m.insert("stddev_ns".to_string(), Json::Num(self.stddev_ns));
+        m.insert("median_ns".to_string(), Json::Num(self.median_ns));
+        m.insert("p95_ns".to_string(), Json::Num(self.p95_ns));
+        Json::Obj(m)
+    }
+
     pub fn line(&self) -> String {
         format!(
             "{:<44} {:>12}/iter  (median {}, p95 {}, n={})",
@@ -132,6 +147,22 @@ mod tests {
         assert!(r.samples >= 5);
         assert!(r.mean_ns > 0.0);
         assert!(r.median_ns <= r.p95_ns);
+    }
+
+    #[test]
+    fn bench_result_serializes() {
+        let r = BenchResult {
+            name: "x".into(),
+            samples: 3,
+            mean_ns: 10.0,
+            stddev_ns: 1.0,
+            median_ns: 9.0,
+            p95_ns: 12.0,
+        };
+        let j = r.to_json();
+        assert_eq!(j.get("name").and_then(|v| v.as_str()), Some("x"));
+        assert_eq!(j.get("samples").and_then(|v| v.as_usize()), Some(3));
+        assert_eq!(j.get("p95_ns").and_then(|v| v.as_f64()), Some(12.0));
     }
 
     #[test]

@@ -1,5 +1,11 @@
-//! Benchmark harness substrate (no `criterion` in the offline build).
+//! Benchmark harness substrate (no `criterion` in the offline build) and
+//! the deterministic perf suite behind `hetcdc bench-json`.
 
 pub mod harness;
+pub mod suite;
 
-pub use harness::{bench_fn, section, table, Bench};
+pub use harness::{bench_fn, section, table, Bench, BenchResult};
+pub use suite::{
+    compare_to_baseline, default_suite, run_suite, BaselineStatus, Comparison, Scenario,
+    ScenarioResult, SuiteReport,
+};

@@ -1,0 +1,496 @@
+//! Deterministic shuffle/executor benchmark suite — the perf trajectory
+//! behind `hetcdc bench-json` and the CI `bench-smoke` gate.
+//!
+//! Every scenario is a fixed-seed job on a fixed heterogeneous cluster;
+//! the recorded metrics (payload/wire bytes, messages, the simulator's
+//! virtual phase times) are **deterministic** — identical on every
+//! machine, thread count, and run — so the emitted `BENCH_shuffle.json`
+//! is diffable and a committed baseline can gate regressions exactly.
+//! Wall-clock timing is optional (`--timing`) and never part of the gate.
+//!
+//! Each scenario also executes in both [`ExecMode`]s and fails loudly on
+//! any serial/parallel divergence, so the CI bench job doubles as a
+//! continuous determinism check of the sharded executor.
+
+use crate::bench::harness::{Bench, BenchResult};
+use crate::engine::{ExecMode, Executor, JobBuilder, NativeBackend};
+use crate::error::{HetcdcError, Result};
+use crate::model::cluster::{ClusterSpec, NodeSpec};
+use crate::model::job::{JobSpec, ShuffleMode, WorkloadKind};
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+
+/// Bench artifact schema version (`BENCH_shuffle.json`).
+pub const SCHEMA_VERSION: usize = 1;
+
+/// One fixed-shape benchmark point.
+#[derive(Clone, Copy, Debug)]
+pub struct Scenario {
+    pub name: &'static str,
+    pub storage: &'static [u64],
+    pub n_files: u64,
+    pub workload: WorkloadKind,
+    /// Placer registry name (`"auto"` resolves by K).
+    pub placer: &'static str,
+    pub mode: ShuffleMode,
+}
+
+/// The committed suite: K ∈ {3, 5, 8} heterogeneous clusters, coded and
+/// uncoded, TeraSort plus a WordCount point. Order and names are stable —
+/// the baseline comparison keys on `name`. K=3 uses Theorem 1, K=5 the
+/// §V LP; K=8 uses the storage-oblivious memory-sharing placement (the
+/// LP's perfect-collection enumeration is combinatorial in K — kept out
+/// of the smoke path; see ROADMAP "Cascaded / larger-K regimes").
+pub fn default_suite() -> Vec<Scenario> {
+    use ShuffleMode::{Coded, Uncoded};
+    use WorkloadKind::{TeraSort, WordCount};
+    vec![
+        Scenario { name: "k3-terasort-coded", storage: &[6, 7, 7], n_files: 12, workload: TeraSort, placer: "auto", mode: Coded },
+        Scenario { name: "k3-terasort-uncoded", storage: &[6, 7, 7], n_files: 12, workload: TeraSort, placer: "auto", mode: Uncoded },
+        Scenario { name: "k3-wordcount-coded", storage: &[4, 8, 12], n_files: 12, workload: WordCount, placer: "auto", mode: Coded },
+        Scenario { name: "k5-terasort-coded", storage: &[3, 4, 5, 6, 7], n_files: 10, workload: TeraSort, placer: "auto", mode: Coded },
+        Scenario { name: "k5-terasort-uncoded", storage: &[3, 4, 5, 6, 7], n_files: 10, workload: TeraSort, placer: "auto", mode: Uncoded },
+        Scenario { name: "k8-terasort-coded", storage: &[2, 3, 3, 4, 4, 5, 5, 6], n_files: 8, workload: TeraSort, placer: "oblivious", mode: Coded },
+        Scenario { name: "k8-terasort-uncoded", storage: &[2, 3, 3, 4, 4, 5, 5, 6], n_files: 8, workload: TeraSort, placer: "oblivious", mode: Uncoded },
+    ]
+}
+
+impl Scenario {
+    /// EC2-flavored heterogeneous cluster derived deterministically from
+    /// the node index: cycling uplinks and map rates, fixed latency.
+    pub fn cluster(&self) -> ClusterSpec {
+        ClusterSpec {
+            nodes: self
+                .storage
+                .iter()
+                .enumerate()
+                .map(|(i, &m)| NodeSpec {
+                    name: format!("bench{i}"),
+                    storage: m,
+                    uplink_mbps: 450.0 + 150.0 * (i % 4) as f64,
+                    map_files_per_s: 120.0 * (1 + i % 3) as f64,
+                })
+                .collect(),
+            latency_ms: 0.5,
+        }
+    }
+
+    /// Small fixed-seed job (t and data sizes chosen so the whole suite
+    /// runs in seconds even in debug builds).
+    pub fn job(&self) -> JobSpec {
+        let mut job = match self.workload {
+            WorkloadKind::TeraSort => JobSpec::terasort(self.n_files),
+            WorkloadKind::WordCount => JobSpec::wordcount(self.n_files),
+        };
+        job.t = 8;
+        job.keys_per_file = 32;
+        if job.workload == WorkloadKind::WordCount {
+            job.vocab = 64;
+        }
+        job.seed = 0xBE7C;
+        job
+    }
+}
+
+/// Deterministic measurements of one scenario (plus optional wall-clock).
+#[derive(Clone, Debug)]
+pub struct ScenarioResult {
+    pub name: String,
+    pub k: usize,
+    pub n_files: u64,
+    pub workload: &'static str,
+    pub placer: String,
+    pub coder: String,
+    pub mode: &'static str,
+    pub sp: u32,
+    pub messages: u64,
+    pub payload_bytes: u64,
+    pub wire_bytes: u64,
+    pub load_equations: f64,
+    pub map_time_s: f64,
+    pub shuffle_time_s: f64,
+    /// Serial and parallel execution produced bit-identical outputs and
+    /// network reports (always true — a divergence aborts the suite).
+    pub modes_identical: bool,
+    /// Wall-clock of one parallel batch (nondeterministic, optional).
+    pub wall: Option<BenchResult>,
+}
+
+impl ScenarioResult {
+    pub fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("name".into(), Json::Str(self.name.clone()));
+        m.insert("k".into(), Json::Num(self.k as f64));
+        m.insert("n_files".into(), Json::Num(self.n_files as f64));
+        m.insert("workload".into(), Json::Str(self.workload.into()));
+        m.insert("placer".into(), Json::Str(self.placer.clone()));
+        m.insert("coder".into(), Json::Str(self.coder.clone()));
+        m.insert("mode".into(), Json::Str(self.mode.into()));
+        m.insert("sp".into(), Json::Num(self.sp as f64));
+        m.insert("messages".into(), Json::Num(self.messages as f64));
+        m.insert("payload_bytes".into(), Json::Num(self.payload_bytes as f64));
+        m.insert("wire_bytes".into(), Json::Num(self.wire_bytes as f64));
+        m.insert("load_equations".into(), Json::Num(self.load_equations));
+        m.insert("map_time_s".into(), Json::Num(self.map_time_s));
+        m.insert("shuffle_time_s".into(), Json::Num(self.shuffle_time_s));
+        m.insert("modes_identical".into(), Json::Bool(self.modes_identical));
+        if let Some(w) = &self.wall {
+            m.insert("wall".into(), w.to_json());
+        }
+        Json::Obj(m)
+    }
+}
+
+/// Run one scenario: build the plan, execute serial and parallel, verify
+/// bit-identical equivalence, record the deterministic metrics.
+pub fn run_scenario(
+    sc: &Scenario,
+    threads: usize,
+    timing: Option<&Bench>,
+) -> Result<ScenarioResult> {
+    let cluster = sc.cluster();
+    let job = sc.job();
+    let plan = JobBuilder::new(&cluster, &job)
+        .placer(sc.placer)
+        .mode(sc.mode)
+        .build()?;
+
+    let mut be = NativeBackend;
+    let mut serial = Executor::new(&plan)?;
+    let r_serial = serial.run_batch(&mut be, job.seed)?;
+    let mut parallel = Executor::with_mode(&plan, ExecMode::Parallel)?;
+    parallel.set_threads(threads);
+    let r_parallel = parallel.run_batch(&mut be, job.seed)?;
+
+    let diverged = |what: &str| {
+        Err(HetcdcError::Shuffle(format!(
+            "scenario {}: {}/{} divergence in {what}",
+            sc.name,
+            serial.mode().as_str(),
+            parallel.mode().as_str(),
+        )))
+    };
+    if !r_serial.verified || !r_parallel.verified {
+        return Err(HetcdcError::Backend(format!(
+            "scenario {}: oracle verification failed",
+            sc.name
+        )));
+    }
+    if r_serial.payload_bytes != r_parallel.payload_bytes
+        || r_serial.wire_bytes != r_parallel.wire_bytes
+        || r_serial.messages != r_parallel.messages
+    {
+        return diverged("byte/message counts");
+    }
+    if r_serial.shuffle_time_s.to_bits() != r_parallel.shuffle_time_s.to_bits()
+        || r_serial.map_time_s.to_bits() != r_parallel.map_time_s.to_bits()
+    {
+        return diverged("phase clocks");
+    }
+    if serial.net_report() != parallel.net_report() {
+        return diverged("NetReport");
+    }
+    let n_sub = plan.alloc.n_sub();
+    let k = cluster.k();
+    for node in 0..k {
+        for g in 0..k {
+            for sub in 0..n_sub {
+                let iv = crate::coding::plan::IvId { group: g, sub };
+                if serial.iv(node, iv) != parallel.iv(node, iv) {
+                    return diverged("decoded IV bytes");
+                }
+            }
+        }
+    }
+
+    let wall = timing.map(|cfg| {
+        crate::bench::harness::bench_fn(sc.name, cfg, || {
+            parallel
+                .run_batch(&mut be, job.seed)
+                .expect("timed batch")
+                .payload_bytes
+        })
+    });
+
+    Ok(ScenarioResult {
+        name: sc.name.to_string(),
+        k,
+        n_files: job.n_files,
+        workload: job.workload.as_str(),
+        placer: plan.placer.clone(),
+        coder: plan.coder.clone(),
+        mode: sc.mode.as_str(),
+        sp: plan.alloc.sp,
+        messages: r_serial.messages,
+        payload_bytes: r_serial.payload_bytes,
+        wire_bytes: r_serial.wire_bytes,
+        load_equations: r_serial.load_equations,
+        map_time_s: r_serial.map_time_s,
+        shuffle_time_s: r_serial.shuffle_time_s,
+        modes_identical: true,
+        wall,
+    })
+}
+
+/// The full suite's results plus totals — serializes to the
+/// `BENCH_shuffle.json` artifact.
+#[derive(Clone, Debug)]
+pub struct SuiteReport {
+    pub results: Vec<ScenarioResult>,
+}
+
+impl SuiteReport {
+    pub fn total_payload_bytes(&self) -> u64 {
+        self.results.iter().map(|r| r.payload_bytes).sum()
+    }
+
+    pub fn total_wire_bytes(&self) -> u64 {
+        self.results.iter().map(|r| r.wire_bytes).sum()
+    }
+
+    pub fn total_messages(&self) -> u64 {
+        self.results.iter().map(|r| r.messages).sum()
+    }
+
+    /// The artifact: no timestamps, no host info, no thread counts — the
+    /// deterministic fields only, so identical code emits identical bytes
+    /// (the `wall` blocks appear only under `--timing`).
+    pub fn to_json(&self) -> Json {
+        let mut totals = BTreeMap::new();
+        totals.insert("payload_bytes".into(), Json::Num(self.total_payload_bytes() as f64));
+        totals.insert("wire_bytes".into(), Json::Num(self.total_wire_bytes() as f64));
+        totals.insert("messages".into(), Json::Num(self.total_messages() as f64));
+        let mut m = BTreeMap::new();
+        m.insert("schema".into(), Json::Num(SCHEMA_VERSION as f64));
+        m.insert("suite".into(), Json::Str("shuffle".into()));
+        m.insert(
+            "scenarios".into(),
+            Json::Arr(self.results.iter().map(|r| r.to_json()).collect()),
+        );
+        m.insert("totals".into(), Json::Obj(totals));
+        Json::Obj(m)
+    }
+}
+
+/// Run the whole [`default_suite`].
+pub fn run_suite(threads: usize, timing: Option<&Bench>) -> Result<SuiteReport> {
+    let mut results = Vec::new();
+    for sc in default_suite() {
+        results.push(run_scenario(&sc, threads, timing)?);
+    }
+    Ok(SuiteReport { results })
+}
+
+/// Verdict of a baseline comparison.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BaselineStatus {
+    /// Within tolerance (possibly with informational notes).
+    Pass,
+    /// Baseline not yet blessed (missing/empty scenario list): the gate
+    /// is disarmed; commit a generated artifact to arm it.
+    Pending,
+    /// Shuffle bytes regressed beyond tolerance, or scenario coverage
+    /// was lost.
+    Regression,
+}
+
+#[derive(Clone, Debug)]
+pub struct Comparison {
+    pub status: BaselineStatus,
+    pub notes: Vec<String>,
+}
+
+fn num_at(j: &Json, path: &[&str]) -> Option<f64> {
+    let mut cur = j;
+    for p in path {
+        cur = cur.get(p)?;
+    }
+    cur.as_f64()
+}
+
+/// Compare a freshly generated suite artifact against a committed
+/// baseline. The gate: total payload bytes and total wire bytes may not
+/// exceed the baseline by more than `tolerance_pct`; every baseline
+/// scenario must still exist, and none of them may individually regress
+/// beyond tolerance. Improvements and new scenarios are notes, not
+/// failures (re-bless the baseline to tighten the gate).
+pub fn compare_to_baseline(current: &Json, baseline: &Json, tolerance_pct: f64) -> Comparison {
+    let mut notes = Vec::new();
+    let mut status = BaselineStatus::Pass;
+    let empty: &[Json] = &[];
+    // Only a literal `"scenarios": []` is the deliberate pending marker.
+    // A missing or wrong-typed key is a broken baseline and must FAIL —
+    // treating it as pending would silently disarm the gate.
+    let base_scenarios = match baseline.get("scenarios").map(|s| s.as_arr()) {
+        Some(Some(arr)) if arr.is_empty() => {
+            return Comparison {
+                status: BaselineStatus::Pending,
+                notes: vec![
+                    "baseline has no scenarios (pending): commit a generated \
+                     BENCH_shuffle.json to arm the regression gate"
+                        .into(),
+                ],
+            };
+        }
+        Some(Some(arr)) => arr,
+        _ => {
+            return Comparison {
+                status: BaselineStatus::Regression,
+                notes: vec![
+                    "baseline is malformed: 'scenarios' is missing or not an array — \
+                     fix it or re-bless a generated artifact"
+                        .into(),
+                ],
+            };
+        }
+    };
+    let tol = tolerance_pct / 100.0;
+
+    for metric in ["payload_bytes", "wire_bytes"] {
+        let cur = num_at(current, &["totals", metric]).unwrap_or(f64::NAN);
+        let base = num_at(baseline, &["totals", metric]).unwrap_or(f64::NAN);
+        if !cur.is_finite() || !base.is_finite() || base <= 0.0 {
+            notes.push(format!("total {metric}: missing or invalid in artifact/baseline"));
+            status = BaselineStatus::Regression;
+            continue;
+        }
+        let ratio = cur / base;
+        if ratio > 1.0 + tol {
+            notes.push(format!(
+                "total {metric} regressed {:+.2}% ({base:.0} -> {cur:.0}, tolerance {tolerance_pct}%)",
+                100.0 * (ratio - 1.0)
+            ));
+            status = BaselineStatus::Regression;
+        } else if ratio < 1.0 - tol {
+            notes.push(format!(
+                "total {metric} improved {:.2}% ({base:.0} -> {cur:.0}): consider re-blessing the baseline",
+                100.0 * (1.0 - ratio)
+            ));
+        }
+    }
+
+    let cur_scenarios = current.get("scenarios").and_then(|s| s.as_arr()).unwrap_or(empty);
+    fn by_name(list: &[Json]) -> BTreeMap<String, f64> {
+        list.iter()
+            .filter_map(|s| {
+                Some((
+                    s.get("name")?.as_str()?.to_string(),
+                    s.get("payload_bytes")?.as_f64()?,
+                ))
+            })
+            .collect()
+    }
+    let cur_map = by_name(cur_scenarios);
+    let base_map = by_name(base_scenarios);
+    for (name, base_payload) in &base_map {
+        match cur_map.get(name) {
+            None => {
+                notes.push(format!("scenario '{name}' disappeared (coverage lost)"));
+                status = BaselineStatus::Regression;
+            }
+            Some(cur_payload) if *base_payload > 0.0 => {
+                let ratio = cur_payload / base_payload;
+                if ratio > 1.0 + tol {
+                    notes.push(format!(
+                        "scenario '{name}' payload regressed {:+.2}% ({base_payload:.0} -> {cur_payload:.0})",
+                        100.0 * (ratio - 1.0)
+                    ));
+                    status = BaselineStatus::Regression;
+                }
+            }
+            Some(_) => {}
+        }
+    }
+    for name in cur_map.keys() {
+        if !base_map.contains_key(name) {
+            notes.push(format!("scenario '{name}' is new (not in baseline)"));
+        }
+    }
+
+    Comparison { status, notes }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn suite_is_deterministic_across_runs_and_thread_counts() {
+        let a = run_suite(2, None).unwrap().to_json().to_string_pretty();
+        let b = run_suite(4, None).unwrap().to_json().to_string_pretty();
+        assert_eq!(a, b, "suite artifact must not depend on run or thread count");
+    }
+
+    #[test]
+    fn coded_beats_uncoded_in_every_cluster() {
+        let report = run_suite(2, None).unwrap();
+        let find = |name: &str| {
+            report
+                .results
+                .iter()
+                .find(|r| r.name == name)
+                .unwrap_or_else(|| panic!("{name} missing"))
+        };
+        for k in ["k3", "k5", "k8"] {
+            let coded = find(&format!("{k}-terasort-coded"));
+            let uncoded = find(&format!("{k}-terasort-uncoded"));
+            assert!(
+                coded.payload_bytes < uncoded.payload_bytes,
+                "{k}: coded {} >= uncoded {}",
+                coded.payload_bytes,
+                uncoded.payload_bytes
+            );
+        }
+    }
+
+    #[test]
+    fn self_comparison_passes_and_regressions_fail() {
+        let current = run_suite(2, None).unwrap().to_json();
+        let same = compare_to_baseline(&current, &current, 5.0);
+        assert_eq!(same.status, BaselineStatus::Pass, "{:?}", same.notes);
+
+        // Shrink the baseline totals by 10%: current "regresses" past 5%.
+        let mut doctored = current.clone();
+        if let Json::Obj(m) = &mut doctored {
+            let mut totals = BTreeMap::new();
+            for metric in ["payload_bytes", "wire_bytes", "messages"] {
+                let v = num_at(&current, &["totals", metric]).unwrap();
+                totals.insert(metric.to_string(), Json::Num((v * 0.9).floor()));
+            }
+            m.insert("totals".into(), Json::Obj(totals));
+        }
+        let worse = compare_to_baseline(&current, &doctored, 5.0);
+        assert_eq!(worse.status, BaselineStatus::Regression, "{:?}", worse.notes);
+    }
+
+    #[test]
+    fn pending_baseline_disarms_the_gate() {
+        let current = run_suite(2, None).unwrap().to_json();
+        let pending = Json::parse(r#"{"schema": 1, "scenarios": []}"#).unwrap();
+        assert_eq!(
+            compare_to_baseline(&current, &pending, 5.0).status,
+            BaselineStatus::Pending
+        );
+        // A baseline with a missing or wrong-typed 'scenarios' is broken,
+        // not pending: the gate must fail loudly instead of disarming.
+        for malformed in [r#"{"schema": 1}"#, r#"{"scenarios": {"oops": 1}}"#] {
+            let j = Json::parse(malformed).unwrap();
+            assert_eq!(
+                compare_to_baseline(&current, &j, 5.0).status,
+                BaselineStatus::Regression,
+                "{malformed}"
+            );
+        }
+        // Lost coverage is a regression even when totals look fine.
+        let mut one_less = current.clone();
+        if let Json::Obj(m) = &mut one_less {
+            if let Some(Json::Arr(sc)) = m.get_mut("scenarios") {
+                sc.pop();
+            }
+        }
+        assert_eq!(
+            compare_to_baseline(&one_less, &current, 5.0).status,
+            BaselineStatus::Regression
+        );
+    }
+}

@@ -30,6 +30,15 @@ pub trait MapBackend {
     /// Reduce one group's payloads to its final output vector.
     fn reduce_group(&mut self, job: &JobSpec, payloads: &[&[u8]]) -> Result<Vec<f64>>;
 
+    /// A fresh, independent backend for one parallel Map worker, or
+    /// `None` when this backend cannot be used concurrently (the PJRT
+    /// runtime owns device state) — the executor then falls back to a
+    /// serial Map. Map output depends only on `(job, q, subfiles)`, so
+    /// worker backends must produce byte-identical IVs to `self`.
+    fn worker_clone(&self) -> Option<Box<dyn MapBackend + Send>> {
+        None
+    }
+
     fn name(&self) -> &'static str;
 }
 
@@ -58,6 +67,10 @@ impl MapBackend for NativeBackend {
             }
         }
         Ok(acc)
+    }
+
+    fn worker_clone(&self) -> Option<Box<dyn MapBackend + Send>> {
+        Some(Box::new(NativeBackend))
     }
 
     fn name(&self) -> &'static str {

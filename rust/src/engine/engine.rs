@@ -147,7 +147,7 @@ impl<'a> Engine<'a> {
         }
         // The engine's job picks the data batch; the plan only fixes the
         // shape (its embedded seed is whatever job first built it).
-        Executor::new(plan).run_batch(self.backend, self.job.seed)
+        Executor::new(plan)?.run_batch(self.backend, self.job.seed)
     }
 }
 

@@ -223,6 +223,25 @@ pub struct ShuffleOutcome {
     pub messages: u64,
 }
 
+/// Assemble the wire message of one broadcast from the sender's current
+/// state. `None` when the sender does not (yet) know a transmitted part.
+fn assemble_message(b: &Broadcast, states: &[NodeState]) -> Option<Vec<u8>> {
+    let sender = b.sender();
+    let (payload_len, _) = broadcast_sizes(b, states[sender].iv_bytes);
+    let msg = match b {
+        Broadcast::Uncoded { sender, iv } => states[*sender].get_full(*iv)?.to_vec(),
+        Broadcast::Coded { sender, parts } => {
+            let mut msg = vec![0u8; payload_len];
+            for p in parts {
+                xor_into(&mut msg, &states[*sender].part_bytes(p)?);
+            }
+            msg
+        }
+    };
+    debug_assert_eq!(msg.len(), payload_len);
+    Some(msg)
+}
+
 /// Assemble the wire message of one broadcast from the sender's state,
 /// metering it on the network. Returns the message bytes.
 fn assemble_and_meter(
@@ -234,27 +253,79 @@ fn assemble_and_meter(
 ) -> Result<Vec<u8>> {
     let sender = b.sender();
     let (payload_len, wire) = broadcast_sizes(b, states[sender].iv_bytes);
-    let msg = match b {
-        Broadcast::Uncoded { sender, iv } => states[*sender]
-            .get_full(*iv)
-            .ok_or_else(|| HetcdcError::Shuffle(format!("sender {sender} lacks {iv:?}")))?
-            .to_vec(),
-        Broadcast::Coded { sender, parts } => {
-            let mut msg = vec![0u8; payload_len];
-            for p in parts {
-                let bytes = states[*sender].part_bytes(p).ok_or_else(|| {
-                    HetcdcError::Shuffle(format!("sender {sender} lacks part {p:?}"))
-                })?;
-                xor_into(&mut msg, &bytes);
-            }
-            msg
-        }
-    };
-    debug_assert_eq!(msg.len(), payload_len);
+    let msg = assemble_message(b, states).ok_or_else(|| {
+        HetcdcError::Shuffle(format!("sender {sender} lacks a part of {b:?}"))
+    })?;
     *payload_bytes += payload_len as u64;
     *wire_bytes += wire as u64;
     net.broadcast(sender, wire);
     Ok(msg)
+}
+
+/// Bounds-check a [`DecodeSchedule`] against `plan` and return the
+/// per-broadcast scheduled-consumer counts.
+fn schedule_consumers(
+    plan: &ShufflePlan,
+    schedule: &DecodeSchedule,
+    k: usize,
+) -> Result<Vec<u32>> {
+    if schedule.order.len() != k {
+        return Err(HetcdcError::Shuffle(format!(
+            "schedule covers {} nodes, cluster has {}",
+            schedule.order.len(),
+            k
+        )));
+    }
+    let n_broadcasts = plan.broadcasts.len();
+    let mut remaining = vec![0u32; n_broadcasts];
+    for order in &schedule.order {
+        for &bi in order {
+            if bi >= n_broadcasts {
+                return Err(HetcdcError::Shuffle(format!(
+                    "schedule references broadcast {bi} out of range"
+                )));
+            }
+            remaining[bi] += 1;
+        }
+    }
+    Ok(remaining)
+}
+
+/// Replay one node's decode schedule over the transmitted messages.
+/// Identical to the per-node work of [`execute_planned`]: decoding only
+/// reads the node's own state and the message bytes, so replaying the
+/// per-node order in isolation produces the same final state as the
+/// interleaved serial replay.
+fn replay_node_schedule(
+    node: usize,
+    st: &mut NodeState,
+    order: &[usize],
+    broadcasts: &[Broadcast],
+    msgs: &[Option<Vec<u8>>],
+) -> Result<()> {
+    for &bi in order {
+        let msg = msgs[bi].as_deref().ok_or_else(|| {
+            HetcdcError::Shuffle(format!(
+                "internal: message {bi} unavailable for node {node}"
+            ))
+        })?;
+        match &broadcasts[bi] {
+            Broadcast::Uncoded { sender, iv } => {
+                if node != *sender {
+                    st.learn_part(&Part::whole(*iv), msg);
+                }
+            }
+            Broadcast::Coded { sender, parts } => {
+                if node != *sender && !st.try_decode(parts, msg) {
+                    return Err(HetcdcError::Shuffle(format!(
+                        "decode schedule violated: node {node} cannot decode \
+                         broadcast {bi}"
+                    )));
+                }
+            }
+        }
+    }
+    Ok(())
 }
 
 /// Execute `plan` along a pre-verified [`DecodeSchedule`]: broadcasts are
@@ -272,26 +343,9 @@ pub fn execute_planned(
     net: &mut BroadcastNet,
 ) -> Result<ShuffleOutcome> {
     let k = states.len();
-    if schedule.order.len() != k {
-        return Err(HetcdcError::Shuffle(format!(
-            "schedule covers {} nodes, cluster has {}",
-            schedule.order.len(),
-            k
-        )));
-    }
-    let n_broadcasts = plan.broadcasts.len();
     // Consumers per broadcast, from the schedule (bounds-checked here).
-    let mut remaining = vec![0u32; n_broadcasts];
-    for order in &schedule.order {
-        for &bi in order {
-            if bi >= n_broadcasts {
-                return Err(HetcdcError::Shuffle(format!(
-                    "schedule references broadcast {bi} out of range"
-                )));
-            }
-            remaining[bi] += 1;
-        }
-    }
+    let mut remaining = schedule_consumers(plan, schedule, k)?;
+    let n_broadcasts = plan.broadcasts.len();
 
     let mut payload_bytes = 0u64;
     let mut wire_bytes = 0u64;
@@ -338,6 +392,137 @@ pub fn execute_planned(
                 }
             }
         }
+    }
+
+    Ok(ShuffleOutcome {
+        payload_bytes,
+        wire_bytes,
+        messages: n_broadcasts as u64,
+    })
+}
+
+/// Shard-parallel variant of [`execute_planned`]: per-node decode runs on
+/// [`std::thread::scope`] workers while metering stays a single
+/// plan-order pass, so the outcome is **bit-identical** to the serial
+/// path — same decoded IV bytes, same [`crate::net::NetReport`] (the
+/// clock is the same sequential float fold; see [`crate::net::sim`]).
+///
+/// Three phases:
+/// 1. **Assemble** (parallel): every broadcast's wire message is built
+///    from the sender's post-Map state. Built-in coders only ever
+///    transmit IV parts the sender computed in its own Map phase, so
+///    this matches the serial interleaved assembly. A plan whose sender
+///    needs mid-shuffle knowledge (possible for hand-written plans)
+///    makes this function fall back to the serial path — correctness
+///    over speed.
+/// 2. **Meter** (serial, plan order): the exact [`BroadcastNet`] calls
+///    of the serial path, in the same order.
+/// 3. **Decode** (parallel): each node replays its own schedule order;
+///    decoding touches only that node's state plus the shared read-only
+///    message buffers.
+///
+/// Peak memory holds all messages at once (the serial path drops each
+/// after its last scheduled consumer) — the price of decode parallelism.
+pub fn execute_planned_parallel(
+    plan: &ShufflePlan,
+    schedule: &DecodeSchedule,
+    states: &mut [NodeState],
+    net: &mut BroadcastNet,
+    threads: usize,
+) -> Result<ShuffleOutcome> {
+    let k = states.len();
+    schedule_consumers(plan, schedule, k)?;
+    let n_broadcasts = plan.broadcasts.len();
+    let threads = threads.clamp(1, k.max(1));
+    if n_broadcasts == 0 {
+        return Ok(ShuffleOutcome { payload_bytes: 0, wire_bytes: 0, messages: 0 });
+    }
+    if threads <= 1 {
+        // One worker = no parallelism: the serial path is strictly better
+        // (it also bounds peak memory by dropping consumed messages).
+        return execute_planned(plan, schedule, states, net);
+    }
+
+    // ---- Phase 1: assemble all messages from post-Map sender state.
+    let mut msgs: Vec<Option<Vec<u8>>> = vec![None; n_broadcasts];
+    let assembled_all = {
+        let shared: &[NodeState] = states;
+        let chunk = n_broadcasts.div_ceil(threads);
+        std::thread::scope(|scope| {
+            let mut handles = Vec::new();
+            for (ci, out) in msgs.chunks_mut(chunk).enumerate() {
+                let base = ci * chunk;
+                handles.push(scope.spawn(move || {
+                    for (off, slot) in out.iter_mut().enumerate() {
+                        match assemble_message(&plan.broadcasts[base + off], shared) {
+                            Some(m) => *slot = Some(m),
+                            None => return false,
+                        }
+                    }
+                    true
+                }));
+            }
+            // Join every worker before deciding: returning early would
+            // make thread::scope re-panic on a second panicked worker.
+            let joined: Vec<_> = handles.into_iter().map(|h| h.join()).collect();
+            let mut all = true;
+            for j in joined {
+                match j {
+                    Ok(ok) => all = all && ok,
+                    Err(_) => {
+                        return Err(HetcdcError::Shuffle("assembly worker panicked".into()))
+                    }
+                }
+            }
+            Ok(all)
+        })?
+    };
+    if !assembled_all {
+        // A sender transmits something it only learns mid-shuffle: replay
+        // serially (states and net are still untouched).
+        return execute_planned(plan, schedule, states, net);
+    }
+
+    // ---- Phase 2: meter in plan order (identical to the serial path,
+    // including the per-sender iv_bytes lookup).
+    let mut payload_bytes = 0u64;
+    let mut wire_bytes = 0u64;
+    for b in &plan.broadcasts {
+        let (payload, wire) = broadcast_sizes(b, states[b.sender()].iv_bytes);
+        payload_bytes += payload as u64;
+        wire_bytes += wire as u64;
+        net.broadcast(b.sender(), wire);
+    }
+
+    // ---- Phase 3: per-node decode replay, sharded across workers.
+    {
+        let msgs_ref: &[Option<Vec<u8>>] = &msgs;
+        let chunk = k.div_ceil(threads);
+        std::thread::scope(|scope| {
+            let mut handles = Vec::new();
+            for (ci, st_chunk) in states.chunks_mut(chunk).enumerate() {
+                let base = ci * chunk;
+                handles.push(scope.spawn(move || -> Result<()> {
+                    for (off, st) in st_chunk.iter_mut().enumerate() {
+                        let node = base + off;
+                        replay_node_schedule(
+                            node,
+                            st,
+                            &schedule.order[node],
+                            &plan.broadcasts,
+                            msgs_ref,
+                        )?;
+                    }
+                    Ok(())
+                }));
+            }
+            // Join all workers first (see phase 1), then propagate.
+            let joined: Vec<_> = handles.into_iter().map(|h| h.join()).collect();
+            for j in joined {
+                j.map_err(|_| HetcdcError::Shuffle("decode worker panicked".into()))??;
+            }
+            Ok::<(), HetcdcError>(())
+        })?;
     }
 
     Ok(ShuffleOutcome {
@@ -534,11 +719,11 @@ mod tests {
         let iv_bytes = 32;
 
         let mut s1 = seeded_states(&alloc, iv_bytes);
-        let mut n1 = BroadcastNet::homogeneous(3, 1e9, 0.0);
+        let mut n1 = BroadcastNet::homogeneous(3, 1e9, 0.0).unwrap();
         let o1 = execute_shuffle(&plan, &mut s1, &mut n1).unwrap();
 
         let mut s2 = seeded_states(&alloc, iv_bytes);
-        let mut n2 = BroadcastNet::homogeneous(3, 1e9, 0.0);
+        let mut n2 = BroadcastNet::homogeneous(3, 1e9, 0.0).unwrap();
         let o2 = execute_planned(&plan, &sched, &mut s2, &mut n2).unwrap();
 
         assert_eq!(o1.payload_bytes, o2.payload_bytes);
@@ -553,6 +738,43 @@ mod tests {
                     s2[node].get_full(iv).expect("planned complete"),
                     "node {node} sub {sub}"
                 );
+            }
+        }
+    }
+
+    #[test]
+    fn parallel_execution_is_bit_identical_to_serial() {
+        let p = crate::theory::params::Params3::new(5, 8, 11, 12).unwrap();
+        let alloc = crate::placement::k3::optimal_allocation(&p);
+        let plan = crate::coding::plan::plan_k3(&alloc);
+        let sched = decoder::schedule(&alloc, &plan).unwrap();
+        let iv_bytes = 32;
+
+        let mut s1 = seeded_states(&alloc, iv_bytes);
+        let mut n1 = BroadcastNet::new(vec![4.5e8, 7.5e8, 1e9], 5e-4).unwrap();
+        let o1 = execute_planned(&plan, &sched, &mut s1, &mut n1).unwrap();
+
+        for threads in [1usize, 2, 3] {
+            let mut s2 = seeded_states(&alloc, iv_bytes);
+            let mut n2 = BroadcastNet::new(vec![4.5e8, 7.5e8, 1e9], 5e-4).unwrap();
+            let o2 =
+                execute_planned_parallel(&plan, &sched, &mut s2, &mut n2, threads).unwrap();
+            assert_eq!(o1.payload_bytes, o2.payload_bytes);
+            assert_eq!(o1.wire_bytes, o2.wire_bytes);
+            assert_eq!(o1.messages, o2.messages);
+            // NetReport equality is bit-exact, including the float clock.
+            assert_eq!(n1.report(), n2.report(), "threads={threads}");
+            for node in 0..3 {
+                for g in 0..3 {
+                    for sub in 0..alloc.n_sub() {
+                        let iv = IvId { group: g, sub };
+                        assert_eq!(
+                            s1[node].get_full(iv),
+                            s2[node].get_full(iv),
+                            "threads={threads} node={node} {iv:?}"
+                        );
+                    }
+                }
             }
         }
     }

@@ -6,15 +6,47 @@
 //! data movement: Map → replay the baked decode schedule → Reduce →
 //! oracle verification. Batches differ only by data seed, so one plan
 //! serves the production path's repeated jobs.
+//!
+//! ## Execution modes
+//!
+//! The paper's Map and Shuffle phases are embarrassingly parallel across
+//! nodes — each node maps its placed files independently and decodes
+//! multicasts independently. [`ExecMode::Parallel`] shards both phases
+//! across [`std::thread::scope`] workers (per-node Map when the backend
+//! supports concurrent workers, per-node decode always), while the
+//! network metering stays a single plan-order pass — so a parallel run is
+//! **bit-identical** to a serial one: same decoded IVs, same
+//! [`RunReport`], same [`crate::net::NetReport`]. Determinism tests diff
+//! the two modes directly (`tests/parallel_equivalence.rs`).
 
 use super::backend::MapBackend;
 use super::engine::RunReport;
-use super::exec::{execute_planned, NodeState};
+use super::exec::{execute_planned, execute_planned_parallel, NodeState};
 use super::plan::Plan;
 use crate::coding::plan::IvId;
 use crate::error::{HetcdcError, Result};
-use crate::net::BroadcastNet;
+use crate::net::{BroadcastNet, NetReport};
 use crate::workloads;
+
+/// How a batch run schedules its per-node work.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum ExecMode {
+    /// One thread does everything, in plan order (the reference path).
+    Serial,
+    /// Per-node Map, message assembly, and schedule-driven decode run on
+    /// scoped worker threads; metering stays serialized, so outputs and
+    /// reports are bit-identical to [`ExecMode::Serial`].
+    Parallel,
+}
+
+impl ExecMode {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            ExecMode::Serial => "serial",
+            ExecMode::Parallel => "parallel",
+        }
+    }
+}
 
 /// Runs batches against one [`Plan`]. Holds the per-node byte buffers,
 /// the per-node held-subfile lists, and the network simulator; buffers
@@ -26,11 +58,19 @@ pub struct Executor<'p> {
     /// Subfiles stored at each node, precomputed from the allocation.
     held: Vec<Vec<usize>>,
     net: BroadcastNet,
+    mode: ExecMode,
+    /// Worker threads for [`ExecMode::Parallel`]; `0` = auto-detect.
+    threads: usize,
     batches_run: u64,
 }
 
 impl<'p> Executor<'p> {
-    pub fn new(plan: &'p Plan) -> Self {
+    /// Serial executor (the reference mode).
+    pub fn new(plan: &'p Plan) -> Result<Self> {
+        Self::with_mode(plan, ExecMode::Serial)
+    }
+
+    pub fn with_mode(plan: &'p Plan, mode: ExecMode) -> Result<Self> {
         let k = plan.cluster.k();
         let q = k; // Q = K (one reduce-function group per node, as in the paper)
         let n_sub = plan.alloc.n_sub();
@@ -44,17 +84,45 @@ impl<'p> Executor<'p> {
                     .collect()
             })
             .collect();
-        Executor {
+        Ok(Executor {
             plan,
             states,
             held,
-            net: plan.cluster.network(),
+            net: plan.cluster.network()?,
+            mode,
+            threads: 0,
             batches_run: 0,
-        }
+        })
     }
 
     pub fn plan(&self) -> &'p Plan {
         self.plan
+    }
+
+    pub fn mode(&self) -> ExecMode {
+        self.mode
+    }
+
+    pub fn set_mode(&mut self, mode: ExecMode) {
+        self.mode = mode;
+    }
+
+    /// Cap the worker count for [`ExecMode::Parallel`]; `0` (the default)
+    /// uses [`std::thread::available_parallelism`]. No effect on results
+    /// — only on wall-clock.
+    pub fn set_threads(&mut self, threads: usize) {
+        self.threads = threads;
+    }
+
+    /// Worker count a parallel phase would use right now.
+    pub fn effective_threads(&self) -> usize {
+        let hw = || {
+            std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(1)
+        };
+        let t = if self.threads == 0 { hw() } else { self.threads };
+        t.clamp(1, self.plan.cluster.k().max(1))
     }
 
     /// Batches executed so far.
@@ -62,9 +130,88 @@ impl<'p> Executor<'p> {
         self.batches_run
     }
 
+    /// Network accounting of the most recent batch (equal across
+    /// [`ExecMode`]s for the same batch — asserted by tier-1 tests).
+    pub fn net_report(&self) -> NetReport {
+        self.net.report()
+    }
+
+    /// Read one decoded IV payload of the most recent batch (`None` if
+    /// that node never held or decoded it). Lets equivalence tests diff
+    /// the complete post-shuffle state across execution modes.
+    pub fn iv(&self, node: usize, iv: IvId) -> Option<&[u8]> {
+        self.states.get(node)?.get_full(iv)
+    }
+
     /// Run one batch with the plan's own data seed.
     pub fn run(&mut self, backend: &mut dyn MapBackend) -> Result<RunReport> {
         self.run_batch(backend, self.plan.job.seed)
+    }
+
+    /// Map phase, serial: every node computes all groups' IVs of its
+    /// subfiles on the caller's backend.
+    fn map_serial(
+        &mut self,
+        backend: &mut dyn MapBackend,
+        job: &crate::model::job::JobSpec,
+        q: usize,
+    ) -> Result<()> {
+        for node in 0..self.states.len() {
+            let held = &self.held[node];
+            let ivs = backend.map_subfiles(job, q, held)?;
+            store_mapped(&mut self.states[node], held, ivs)?;
+        }
+        Ok(())
+    }
+
+    /// Map phase, parallel: nodes are sharded across scoped workers, each
+    /// with its own backend from [`MapBackend::worker_clone`]. Falls back
+    /// to [`Self::map_serial`] when the backend cannot be cloned (e.g.
+    /// the PJRT runtime owns device state). Results are identical either
+    /// way: Map output depends only on (job, q, held subfiles).
+    fn map_parallel(
+        &mut self,
+        backend: &mut dyn MapBackend,
+        job: &crate::model::job::JobSpec,
+        q: usize,
+    ) -> Result<()> {
+        let threads = self.effective_threads();
+        if threads <= 1 {
+            return self.map_serial(backend, job, q);
+        }
+        let chunk = self.states.len().div_ceil(threads);
+        let mut workers = Vec::new();
+        for _ in 0..self.states.len().div_ceil(chunk) {
+            match backend.worker_clone() {
+                Some(w) => workers.push(w),
+                None => return self.map_serial(backend, job, q),
+            }
+        }
+        let held = &self.held;
+        std::thread::scope(|scope| {
+            let mut handles = Vec::new();
+            for ((ci, st_chunk), mut worker) in
+                self.states.chunks_mut(chunk).enumerate().zip(workers)
+            {
+                let base = ci * chunk;
+                handles.push(scope.spawn(move || -> Result<()> {
+                    for (off, st) in st_chunk.iter_mut().enumerate() {
+                        let held = &held[base + off];
+                        let ivs = worker.map_subfiles(job, q, held)?;
+                        store_mapped(st, held, ivs)?;
+                    }
+                    Ok(())
+                }));
+            }
+            // Join all workers before propagating any error: an early
+            // return would make thread::scope re-panic if a second
+            // worker also panicked.
+            let joined: Vec<_> = handles.into_iter().map(|h| h.join()).collect();
+            for j in joined {
+                j.map_err(|_| HetcdcError::Backend("map worker panicked".into()))??;
+            }
+            Ok(())
+        })
     }
 
     /// Run one data batch: same plan, batch-specific `seed`. The report's
@@ -84,30 +231,31 @@ impl<'p> Executor<'p> {
         }
         self.net.reset();
 
-        // ---- Map phase: every node computes all groups' IVs of its
-        // subfiles. The barrier time over per-node compute rates is
+        // ---- Map phase. The barrier time over per-node compute rates is
         // shape-only work, computed once at plan build.
         let map_time_s = plan.predicted.map_time_s;
-        for node in 0..k {
-            let held = &self.held[node];
-            let ivs = backend.map_subfiles(&job, q, held)?;
-            if ivs.len() != held.len() {
-                return Err(HetcdcError::Backend(format!(
-                    "map returned {} subfiles, expected {}",
-                    ivs.len(),
-                    held.len()
-                )));
-            }
-            for (groups, &sub) in ivs.into_iter().zip(held) {
-                for (g, payload) in groups.into_iter().enumerate() {
-                    self.states[node].set_full(IvId { group: g, sub }, payload);
-                }
-            }
+        match self.mode {
+            ExecMode::Serial => self.map_serial(backend, &job, q)?,
+            ExecMode::Parallel => self.map_parallel(backend, &job, q)?,
         }
 
         // ---- Shuffle phase: replay the decode schedule proven at plan
         // build time — no re-verification, no fixpoint.
-        let outcome = execute_planned(&plan.shuffle, &plan.schedule, &mut self.states, &mut self.net)?;
+        let outcome = match self.mode {
+            ExecMode::Serial => {
+                execute_planned(&plan.shuffle, &plan.schedule, &mut self.states, &mut self.net)?
+            }
+            ExecMode::Parallel => {
+                let threads = self.effective_threads();
+                execute_planned_parallel(
+                    &plan.shuffle,
+                    &plan.schedule,
+                    &mut self.states,
+                    &mut self.net,
+                    threads,
+                )?
+            }
+        };
         let shuffle_time_s = self.net.report().elapsed_s;
 
         // ---- Reduce phase + oracle verification (all groups' oracles in
@@ -166,6 +314,27 @@ impl<'p> Executor<'p> {
     }
 }
 
+/// Validate and store one node's Map output (shared by both Map paths).
+fn store_mapped(
+    st: &mut NodeState,
+    held: &[usize],
+    ivs: Vec<Vec<Vec<u8>>>,
+) -> Result<()> {
+    if ivs.len() != held.len() {
+        return Err(HetcdcError::Backend(format!(
+            "map returned {} subfiles, expected {}",
+            ivs.len(),
+            held.len()
+        )));
+    }
+    for (groups, &sub) in ivs.into_iter().zip(held) {
+        for (g, payload) in groups.into_iter().enumerate() {
+            st.set_full(IvId { group: g, sub }, payload);
+        }
+    }
+    Ok(())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -190,7 +359,7 @@ mod tests {
         job.keys_per_file = 32;
         let plan = JobBuilder::new(&c, &job).placer("optimal-k3").build().unwrap();
         let mut be = NativeBackend;
-        let mut exec = Executor::new(&plan);
+        let mut exec = Executor::new(&plan).unwrap();
         let mut reports = Vec::new();
         for batch in 0u64..3 {
             let r = exec.run_batch(&mut be, job.seed + batch).unwrap();
@@ -209,5 +378,55 @@ mod tests {
         }
         // Different seeds -> different data, same loads.
         assert_ne!(reports[0].seed, reports[1].seed);
+    }
+
+    #[test]
+    fn parallel_mode_matches_serial_bit_for_bit() {
+        let c = cluster(&[4, 8, 12]);
+        let mut job = JobSpec::terasort(12);
+        job.t = 8;
+        job.keys_per_file = 32;
+        let plan = JobBuilder::new(&c, &job).placer("optimal-k3").build().unwrap();
+        let mut be = NativeBackend;
+        let mut serial = Executor::new(&plan).unwrap();
+        let mut parallel = Executor::with_mode(&plan, ExecMode::Parallel).unwrap();
+        parallel.set_threads(3);
+        let a = serial.run_batch(&mut be, 42).unwrap();
+        let b = parallel.run_batch(&mut be, 42).unwrap();
+        assert!(a.verified && b.verified);
+        assert_eq!(a.payload_bytes, b.payload_bytes);
+        assert_eq!(a.wire_bytes, b.wire_bytes);
+        assert_eq!(a.messages, b.messages);
+        assert_eq!(a.shuffle_time_s.to_bits(), b.shuffle_time_s.to_bits());
+        assert_eq!(serial.net_report(), parallel.net_report());
+        let n_sub = plan.alloc.n_sub();
+        for node in 0..3 {
+            for g in 0..3 {
+                for sub in 0..n_sub {
+                    let iv = IvId { group: g, sub };
+                    assert_eq!(serial.iv(node, iv), parallel.iv(node, iv), "node {node} {iv:?}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn thread_knob_never_changes_results() {
+        let c = cluster(&[6, 7, 7]);
+        let mut job = JobSpec::terasort(12);
+        job.t = 8;
+        job.keys_per_file = 32;
+        let plan = JobBuilder::new(&c, &job).build().unwrap();
+        let mut be = NativeBackend;
+        let mut reference = Executor::new(&plan).unwrap();
+        let base = reference.run_batch(&mut be, 7).unwrap();
+        for threads in [1usize, 2, 3, 8] {
+            let mut exec = Executor::with_mode(&plan, ExecMode::Parallel).unwrap();
+            exec.set_threads(threads);
+            let r = exec.run_batch(&mut be, 7).unwrap();
+            assert_eq!(r.payload_bytes, base.payload_bytes, "threads={threads}");
+            assert_eq!(r.shuffle_time_s.to_bits(), base.shuffle_time_s.to_bits());
+            assert_eq!(reference.net_report(), exec.net_report(), "threads={threads}");
+        }
     }
 }

@@ -20,5 +20,5 @@ pub mod plan;
 pub use backend::{MapBackend, NativeBackend, XlaBackend};
 pub use cache::{PlanCache, PlanKey};
 pub use engine::{Engine, RunReport};
-pub use executor::Executor;
+pub use executor::{ExecMode, Executor};
 pub use plan::{shape_fingerprint, JobBuilder, Plan, PredictedLoads};

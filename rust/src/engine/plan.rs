@@ -43,11 +43,16 @@ pub struct PredictedLoads {
 }
 
 impl PredictedLoads {
-    fn compute(cluster: &ClusterSpec, job: &JobSpec, alloc: &Allocation, shuffle: &ShufflePlan) -> Self {
+    fn compute(
+        cluster: &ClusterSpec,
+        job: &JobSpec,
+        alloc: &Allocation,
+        shuffle: &ShufflePlan,
+    ) -> Result<Self> {
         let iv_bytes = job.iv_bytes();
         let mut payload_bytes = 0u64;
         let mut wire_bytes = 0u64;
-        let mut net = cluster.network();
+        let mut net = cluster.network()?;
         for b in &shuffle.broadcasts {
             let (payload, wire) = broadcast_sizes(b, iv_bytes);
             payload_bytes += payload as u64;
@@ -59,7 +64,7 @@ impl PredictedLoads {
             let files_equiv = alloc.node_count(node) as f64 / alloc.sp as f64;
             map_time_s = map_time_s.max(files_equiv / spec.map_files_per_s.max(1e-9));
         }
-        PredictedLoads {
+        Ok(PredictedLoads {
             load_equations: shuffle.load_equations(alloc),
             load_units: shuffle.load_units(),
             uncoded_equations: alloc.uncoded_units() as f64 / alloc.sp as f64,
@@ -68,7 +73,7 @@ impl PredictedLoads {
             wire_bytes,
             map_time_s,
             shuffle_time_s: net.report().elapsed_s,
-        }
+        })
     }
 
     fn to_json(&self) -> Json {
@@ -162,7 +167,7 @@ impl Plan {
         alloc.validate_le(&cluster.storage(), job.n_files)?;
         shuffle.validate(alloc.k, alloc.n_sub())?;
         let schedule = decoder::schedule(&alloc, &shuffle)?;
-        let predicted = PredictedLoads::compute(&cluster, &job, &alloc, &shuffle);
+        let predicted = PredictedLoads::compute(&cluster, &job, &alloc, &shuffle)?;
         let fingerprint = shape_fingerprint(&cluster, &job);
         Ok(Plan {
             cluster,
@@ -269,7 +274,7 @@ impl Plan {
 /// let job = JobSpec::terasort(12);
 /// let plan = JobBuilder::new(&cluster, &job).placer("optimal-k3").build().unwrap();
 /// let mut backend = NativeBackend;
-/// let mut exec = Executor::new(&plan);
+/// let mut exec = Executor::new(&plan).unwrap();
 /// for batch in 0u64..3 {
 ///     let report = exec.run_batch(&mut backend, job.seed + batch).unwrap();
 ///     assert!(report.verified);

@@ -37,6 +37,9 @@
 //! * [`engine::Executor`] runs many data batches against one plan,
 //!   reusing every per-node buffer; [`engine::PlanCache`] memoizes plans
 //!   by (cluster shape, job shape, strategy) for the heavy-traffic path.
+//!   [`engine::ExecMode::Parallel`] shards per-node Map and decode across
+//!   scoped threads with **bit-identical** outputs and reports to serial
+//!   mode (DESIGN.md "Parallel execution model").
 //! * [`engine::Engine`] is the one-shot facade when a single batch is all
 //!   you need.
 //!

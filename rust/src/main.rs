@@ -7,12 +7,17 @@
 //! * `plan`      — build a validated execution plan and emit it as JSON.
 //! * `run`       — execute a MapReduce job (native or XLA backend),
 //!                 either planning inline or consuming `--plan FILE`,
-//!                 for one or many data batches.
+//!                 for one or many data batches, serial or sharded
+//!                 across threads (`--threads`).
+//! * `bench-json`— deterministic shuffle/executor benchmark suite,
+//!                 emitted as `BENCH_shuffle.json` and optionally gated
+//!                 against a committed baseline (the CI bench-smoke job).
 //! * `sweep`     — L* table over a storage grid.
 //! * `info`      — artifact manifest summary.
 
+use hetcdc::bench::{self, BaselineStatus, Bench};
 use hetcdc::engine::{
-    Executor, JobBuilder, MapBackend, NativeBackend, Plan, RunReport, XlaBackend,
+    ExecMode, Executor, JobBuilder, MapBackend, NativeBackend, Plan, RunReport, XlaBackend,
 };
 use hetcdc::model::cluster::ClusterSpec;
 use hetcdc::model::job::{JobSpec, ShuffleMode};
@@ -32,6 +37,7 @@ fn main() {
         Some("lp") => cmd_lp(&argv[1..]),
         Some("plan") => cmd_plan(&argv[1..]),
         Some("run") => cmd_run(&argv[1..]),
+        Some("bench-json") => cmd_bench_json(&argv[1..]),
         Some("sweep") => cmd_sweep(&argv[1..]),
         Some("verify") => cmd_verify(&argv[1..]),
         Some("info") => cmd_info(&argv[1..]),
@@ -61,7 +67,9 @@ fn print_help() {
          \x20           build + verify an execution plan, emit JSON\n\
          \x20 run       --workload wordcount|terasort [--backend native|xla]\n\
          \x20           [--config cluster.json | --storage ...] [--mode coded|uncoded]\n\
-         \x20           [--plan plan.json] [--batches B]\n\
+         \x20           [--plan plan.json] [--batches B] [--threads N]\n\
+         \x20 bench-json [--out FILE] [--baseline FILE] [--tolerance-pct P]\n\
+         \x20           deterministic shuffle bench suite -> BENCH_shuffle.json\n\
          \x20 sweep     --n N [--max-m M]            L* table over storage grid\n\
          \x20 verify    [--n N]                      full self-check (theory, coding, LP)\n\
          \x20 info      [--artifacts DIR]            artifact manifest summary\n\n\
@@ -269,6 +277,7 @@ fn cmd_plan(argv: &[String]) -> i32 {
         ArgSpec { name: "coder", help: "pairing | greedy | multicast | memshare (default: placer's)", takes_value: true, default: None },
         ArgSpec { name: "mode", help: "coded | uncoded", takes_value: true, default: Some("coded") },
         ArgSpec { name: "out", help: "write plan JSON here (default: stdout)", takes_value: true, default: None },
+        ArgSpec { name: "threads", help: "certify the plan for sharded execution with N workers (0 = auto)", takes_value: true, default: Some("1") },
         ArgSpec { name: "help", help: "show usage", takes_value: false, default: None },
     ];
     let args = match Args::parse(argv, &specs) {
@@ -287,6 +296,10 @@ fn cmd_plan(argv: &[String]) -> i32 {
         Ok(m) => m,
         Err(e) => return fail(e),
     };
+    let threads = match args.get_usize("threads") {
+        Ok(t) => t,
+        Err(e) => return fail(e),
+    };
     let mut builder = JobBuilder::new(&cluster, &job)
         .placer(args.get("placement").unwrap_or("auto"))
         .mode(mode);
@@ -297,6 +310,17 @@ fn cmd_plan(argv: &[String]) -> i32 {
         Ok(p) => p,
         Err(e) => return fail(e),
     };
+    // --threads N (N != 1): certify the plan for sharded execution by
+    // diffing one serial batch against one parallel batch, bit for bit.
+    if threads != 1 {
+        match certify_parallel(&plan, threads) {
+            Ok(()) => eprintln!(
+                "plan certified for parallel execution ({threads} worker threads requested): \
+                 serial and parallel batches are bit-identical"
+            ),
+            Err(e) => return fail(e),
+        }
+    }
     let text = plan.to_json_string();
     match args.get("out") {
         Some(path) => {
@@ -343,15 +367,44 @@ fn print_report(report: &RunReport, json_out: bool) -> bool {
     report.verified
 }
 
+/// One serial + one parallel batch of `plan` on the native backend must
+/// produce bit-identical reports and network accounting.
+fn certify_parallel(plan: &Plan, threads: usize) -> Result<(), HetcdcError> {
+    let mut be = NativeBackend;
+    let mut serial = Executor::new(plan)?;
+    let a = serial.run_batch(&mut be, plan.job.seed)?;
+    let mut parallel = Executor::with_mode(plan, ExecMode::Parallel)?;
+    parallel.set_threads(threads);
+    let b = parallel.run_batch(&mut be, plan.job.seed)?;
+    if !a.verified || !b.verified {
+        return Err(HetcdcError::Backend("certification batch failed verification".into()));
+    }
+    if a.payload_bytes != b.payload_bytes
+        || a.wire_bytes != b.wire_bytes
+        || a.messages != b.messages
+        || a.shuffle_time_s.to_bits() != b.shuffle_time_s.to_bits()
+        || serial.net_report() != parallel.net_report()
+    {
+        return Err(HetcdcError::Shuffle(
+            "serial and parallel execution diverged for this plan".into(),
+        ));
+    }
+    Ok(())
+}
+
 /// Execute `batches` data batches of one plan on one executor, with
-/// per-batch seeds derived from the plan's base seed.
+/// per-batch seeds derived from the plan's base seed. `threads` = 1 runs
+/// serial; anything else runs the sharded executor (0 = auto-detect).
 fn run_batches(
     plan: &Plan,
     backend: &mut dyn MapBackend,
     batches: u64,
+    threads: usize,
     json_out: bool,
 ) -> Result<(), HetcdcError> {
-    let mut exec = Executor::new(plan);
+    let mode = if threads == 1 { ExecMode::Serial } else { ExecMode::Parallel };
+    let mut exec = Executor::with_mode(plan, mode)?;
+    exec.set_threads(threads);
     for batch in 0..batches {
         let report = exec.run_batch(backend, plan.job.seed.wrapping_add(batch))?;
         if !print_report(&report, json_out) {
@@ -371,6 +424,7 @@ fn cmd_run(argv: &[String]) -> i32 {
         ArgSpec { name: "config", help: "cluster JSON config path", takes_value: true, default: None },
         ArgSpec { name: "plan", help: "execute this serialized plan (skips inline planning)", takes_value: true, default: None },
         ArgSpec { name: "batches", help: "data batches to run against the plan", takes_value: true, default: Some("1") },
+        ArgSpec { name: "threads", help: "1 = serial; N > 1 = sharded executor with N workers; 0 = auto", takes_value: true, default: Some("1") },
         ArgSpec { name: "mode", help: "coded | uncoded | both", takes_value: true, default: Some("both") },
         ArgSpec { name: "backend", help: "native | xla", takes_value: true, default: Some("native") },
         ArgSpec { name: "placement", help: "auto | optimal-k3 | lp-general | homogeneous | oblivious", takes_value: true, default: Some("auto") },
@@ -390,6 +444,10 @@ fn cmd_run(argv: &[String]) -> i32 {
     let json_out = args.flag("json");
     let batches = match args.get_u64("batches") {
         Ok(b) => b.max(1),
+        Err(e) => return fail(e),
+    };
+    let threads = match args.get_usize("threads") {
+        Ok(t) => t,
         Err(e) => return fail(e),
     };
 
@@ -427,11 +485,11 @@ fn cmd_run(argv: &[String]) -> i32 {
         let result = match rt_holder.as_mut() {
             Some(rt) => {
                 let mut be = XlaBackend::new(rt);
-                run_batches(&plan, &mut be, batches, json_out)
+                run_batches(&plan, &mut be, batches, threads, json_out)
             }
             None => {
                 let mut be = NativeBackend;
-                run_batches(&plan, &mut be, batches, json_out)
+                run_batches(&plan, &mut be, batches, threads, json_out)
             }
         };
         return match result {
@@ -464,11 +522,11 @@ fn cmd_run(argv: &[String]) -> i32 {
         let result = match rt_holder.as_mut() {
             Some(rt) => {
                 let mut be = XlaBackend::new(rt);
-                run_batches(&plan, &mut be, batches, json_out)
+                run_batches(&plan, &mut be, batches, threads, json_out)
             }
             None => {
                 let mut be = NativeBackend;
-                run_batches(&plan, &mut be, batches, json_out)
+                run_batches(&plan, &mut be, batches, threads, json_out)
             }
         };
         if let Err(e) = result {
@@ -483,6 +541,113 @@ fn cmd_run(argv: &[String]) -> i32 {
                 load::uncoded(&p),
                 100.0 * load::saving(&p) / load::uncoded(&p).max(1e-12)
             );
+        }
+    }
+    0
+}
+
+/// Deterministic perf harness: run the fixed-seed shuffle/executor suite
+/// (K ∈ {3,5,8} heterogeneous clusters, serial-vs-parallel certified),
+/// emit `BENCH_shuffle.json`, and optionally gate against a committed
+/// baseline. Exit codes: 0 = ok (or baseline pending), 1 = regression or
+/// execution failure.
+fn cmd_bench_json(argv: &[String]) -> i32 {
+    let specs: Vec<ArgSpec> = vec![
+        ArgSpec { name: "out", help: "write the bench artifact here", takes_value: true, default: Some("BENCH_shuffle.json") },
+        ArgSpec { name: "baseline", help: "committed baseline JSON to gate against", takes_value: true, default: None },
+        ArgSpec { name: "tolerance-pct", help: "max allowed shuffle-byte regression, percent", takes_value: true, default: Some("5") },
+        ArgSpec { name: "threads", help: "worker threads for the parallel half of each scenario (0 = auto)", takes_value: true, default: Some("0") },
+        ArgSpec { name: "timing", help: "also record wall-clock timings (nondeterministic; never gated)", takes_value: false, default: None },
+        ArgSpec { name: "help", help: "show usage", takes_value: false, default: None },
+    ];
+    let args = match Args::parse(argv, &specs) {
+        Ok(a) => a,
+        Err(e) => return fail(e),
+    };
+    if args.flag("help") {
+        println!("{}", usage("hetcdc bench-json", "Deterministic shuffle bench suite + baseline gate", &specs));
+        return 0;
+    }
+    let threads = match args.get_usize("threads") {
+        Ok(t) => t,
+        Err(e) => return fail(e),
+    };
+    let tolerance = match args.get_f64("tolerance-pct") {
+        Ok(t) if t >= 0.0 => t,
+        Ok(t) => return fail(format!("--tolerance-pct must be >= 0, got {t}")),
+        Err(e) => return fail(e),
+    };
+    let timing_cfg = Bench {
+        measure: std::time::Duration::from_millis(300),
+        ..Bench::default()
+    };
+    let timing = args.flag("timing").then_some(&timing_cfg);
+
+    let report = match bench::run_suite(threads, timing) {
+        Ok(r) => r,
+        Err(e) => return fail(e),
+    };
+    let rows: Vec<Vec<String>> = report
+        .results
+        .iter()
+        .map(|r| {
+            vec![
+                r.name.clone(),
+                format!("{}", r.k),
+                r.placer.clone(),
+                r.coder.clone(),
+                format!("{}", r.messages),
+                format!("{}", r.payload_bytes),
+                format!("{}", r.wire_bytes),
+                format!("{:.5}", r.shuffle_time_s),
+            ]
+        })
+        .collect();
+    bench::table(
+        &["scenario", "K", "placer", "coder", "msgs", "payload B", "wire B", "shuffle s"],
+        &rows,
+    );
+    println!(
+        "totals: payload {} B, wire {} B, {} messages (all scenarios serial==parallel)",
+        report.total_payload_bytes(),
+        report.total_wire_bytes(),
+        report.total_messages()
+    );
+
+    let artifact = report.to_json();
+    let out = args.get("out").unwrap_or("BENCH_shuffle.json");
+    if let Err(e) = std::fs::write(out, artifact.to_string_pretty()) {
+        return fail(format!("writing {out}: {e}"));
+    }
+    println!("bench artifact written to {out}");
+
+    if let Some(path) = args.get("baseline") {
+        let text = match std::fs::read_to_string(path) {
+            Ok(t) => t,
+            Err(e) => return fail(format!("baseline {path}: {e}")),
+        };
+        let baseline = match hetcdc::util::json::Json::parse(&text) {
+            Ok(j) => j,
+            Err(e) => return fail(format!("baseline {path}: {e}")),
+        };
+        let cmp = bench::compare_to_baseline(&artifact, &baseline, tolerance);
+        for note in &cmp.notes {
+            println!("baseline: {note}");
+        }
+        match cmp.status {
+            BaselineStatus::Pass => {
+                println!("baseline gate PASSED (tolerance {tolerance}%)");
+            }
+            BaselineStatus::Pending => {
+                println!(
+                    "baseline gate PENDING: no blessed baseline yet — commit {out} as the \
+                     baseline to arm the gate"
+                );
+            }
+            BaselineStatus::Regression => {
+                eprintln!("error: baseline gate FAILED (tolerance {tolerance}%)");
+                return 1;
+            }
         }
     }
     0

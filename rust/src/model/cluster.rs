@@ -62,7 +62,7 @@ impl ClusterSpec {
         ParamsK::new(self.storage(), n_files)
     }
 
-    pub fn network(&self) -> BroadcastNet {
+    pub fn network(&self) -> Result<BroadcastNet> {
         BroadcastNet::new(
             self.nodes.iter().map(|n| n.uplink_mbps * 1e6).collect(),
             self.latency_ms / 1e3,
@@ -213,9 +213,16 @@ mod tests {
         let p = c.params3(12).unwrap();
         assert_eq!(p.m, [6, 7, 7]);
         assert!(c.params3(100).is_err()); // storage cannot cover N
-        let net = c.network();
+        let net = c.network().unwrap();
         assert_eq!(net.uplink_bps.len(), 3);
         assert!(c.params_k(12).is_ok());
+        // A config with a dead uplink is a typed error, not a panic.
+        let mut broken = c.clone();
+        broken.nodes[1].uplink_mbps = 0.0;
+        assert!(matches!(
+            broken.network(),
+            Err(HetcdcError::InvalidParams(_))
+        ));
     }
 
     #[test]

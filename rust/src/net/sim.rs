@@ -9,59 +9,52 @@
 //! (the EC2-style per-message overhead that makes many small messages
 //! slower than few large ones — why coded shuffle also wins wall-clock).
 //!
+//! Accounting lives in [`PhaseLedger`], a plain-data (`Send + Sync`)
+//! record separate from the rate table, so the parallel executor can keep
+//! the metering pass on one thread — in exact plan order, preserving the
+//! bit-exact serialized-broadcast clock — while decode workers run
+//! concurrently. The clock is a float fold over per-broadcast times;
+//! float addition is not associative, so the ledger is never merged from
+//! per-worker partials: every broadcast is recorded through the same
+//! sequential [`BroadcastNet::broadcast`] path in both execution modes.
+//!
 //! This substitutes for the paper's EC2 testbed (DESIGN.md §4): the
 //! load metric is exact; the time model preserves the who-wins ordering.
 
-/// Shared-medium broadcast network simulator.
-#[derive(Clone, Debug)]
-pub struct BroadcastNet {
-    /// Per-node uplink rate, bits/second.
-    pub uplink_bps: Vec<f64>,
-    /// Fixed per-message latency, seconds.
-    pub latency_s: f64,
+use crate::error::{HetcdcError, Result};
+
+/// Byte/message/clock accounting of one phase, separated from the rate
+/// table so it can travel across threads (plain data, `Send + Sync`).
+///
+/// Records must be appended in broadcast order via [`PhaseLedger::record`]
+/// — the clock is an order-sensitive float fold (see module docs).
+#[derive(Clone, Debug, PartialEq)]
+pub struct PhaseLedger {
     bytes_by_node: Vec<u64>,
     msgs_by_node: Vec<u64>,
     clock_s: f64,
 }
 
-/// Byte-exact accounting of one phase.
-#[derive(Clone, Debug, PartialEq)]
-pub struct NetReport {
-    pub bytes_by_node: Vec<u64>,
-    pub msgs_by_node: Vec<u64>,
-    pub total_bytes: u64,
-    pub total_msgs: u64,
-    /// Virtual wall-clock of the serialized broadcast schedule.
-    pub elapsed_s: f64,
-}
-
-impl BroadcastNet {
-    pub fn new(uplink_bps: Vec<f64>, latency_s: f64) -> Self {
-        assert!(!uplink_bps.is_empty());
-        assert!(uplink_bps.iter().all(|&b| b > 0.0));
-        let k = uplink_bps.len();
-        Self {
-            uplink_bps,
-            latency_s,
+impl PhaseLedger {
+    pub fn new(k: usize) -> Self {
+        PhaseLedger {
             bytes_by_node: vec![0; k],
             msgs_by_node: vec![0; k],
             clock_s: 0.0,
         }
     }
 
-    /// Uniform-bandwidth convenience constructor.
-    pub fn homogeneous(k: usize, uplink_bps: f64, latency_s: f64) -> Self {
-        Self::new(vec![uplink_bps; k], latency_s)
-    }
-
-    /// Record one broadcast of `nbytes` from `sender`; returns its
-    /// transmission time (s).
-    pub fn broadcast(&mut self, sender: usize, nbytes: usize) -> f64 {
+    /// Append one broadcast of `nbytes` from `sender` taking `t_s`
+    /// seconds on the serialized medium.
+    pub fn record(&mut self, sender: usize, nbytes: usize, t_s: f64) {
         self.bytes_by_node[sender] += nbytes as u64;
         self.msgs_by_node[sender] += 1;
-        let t = self.latency_s + (nbytes as f64 * 8.0) / self.uplink_bps[sender];
-        self.clock_s += t;
-        t
+        self.clock_s += t_s;
+    }
+
+    /// Virtual wall-clock so far (serialized schedule).
+    pub fn clock_s(&self) -> f64 {
+        self.clock_s
     }
 
     pub fn report(&self) -> NetReport {
@@ -81,13 +74,97 @@ impl BroadcastNet {
     }
 }
 
+/// Shared-medium broadcast network simulator: an immutable rate table
+/// plus a [`PhaseLedger`] of the current phase.
+#[derive(Clone, Debug)]
+pub struct BroadcastNet {
+    /// Per-node uplink rate, bits/second.
+    pub uplink_bps: Vec<f64>,
+    /// Fixed per-message latency, seconds.
+    pub latency_s: f64,
+    ledger: PhaseLedger,
+}
+
+/// Byte-exact accounting of one phase.
+#[derive(Clone, Debug, PartialEq)]
+pub struct NetReport {
+    pub bytes_by_node: Vec<u64>,
+    pub msgs_by_node: Vec<u64>,
+    pub total_bytes: u64,
+    pub total_msgs: u64,
+    /// Virtual wall-clock of the serialized broadcast schedule.
+    pub elapsed_s: f64,
+}
+
+impl BroadcastNet {
+    pub fn new(uplink_bps: Vec<f64>, latency_s: f64) -> Result<Self> {
+        if uplink_bps.is_empty() {
+            return Err(HetcdcError::InvalidParams(
+                "network needs at least one node uplink".into(),
+            ));
+        }
+        if let Some((node, &bad)) = uplink_bps
+            .iter()
+            .enumerate()
+            .find(|(_, &b)| !(b.is_finite() && b > 0.0))
+        {
+            return Err(HetcdcError::InvalidParams(format!(
+                "node {node} uplink must be positive and finite, got {bad}"
+            )));
+        }
+        if !(latency_s.is_finite() && latency_s >= 0.0) {
+            return Err(HetcdcError::InvalidParams(format!(
+                "latency must be non-negative and finite, got {latency_s}"
+            )));
+        }
+        let k = uplink_bps.len();
+        Ok(Self {
+            uplink_bps,
+            latency_s,
+            ledger: PhaseLedger::new(k),
+        })
+    }
+
+    /// Uniform-bandwidth convenience constructor.
+    pub fn homogeneous(k: usize, uplink_bps: f64, latency_s: f64) -> Result<Self> {
+        Self::new(vec![uplink_bps; k], latency_s)
+    }
+
+    /// Transmission time of one broadcast of `nbytes` from `sender` (s),
+    /// without recording it.
+    pub fn tx_time(&self, sender: usize, nbytes: usize) -> f64 {
+        self.latency_s + (nbytes as f64 * 8.0) / self.uplink_bps[sender]
+    }
+
+    /// Record one broadcast of `nbytes` from `sender`; returns its
+    /// transmission time (s).
+    pub fn broadcast(&mut self, sender: usize, nbytes: usize) -> f64 {
+        let t = self.tx_time(sender, nbytes);
+        self.ledger.record(sender, nbytes, t);
+        t
+    }
+
+    /// The phase ledger accumulated so far.
+    pub fn ledger(&self) -> &PhaseLedger {
+        &self.ledger
+    }
+
+    pub fn report(&self) -> NetReport {
+        self.ledger.report()
+    }
+
+    pub fn reset(&mut self) {
+        self.ledger.reset();
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
 
     #[test]
     fn accounts_bytes_and_messages() {
-        let mut net = BroadcastNet::homogeneous(3, 8e6, 0.0);
+        let mut net = BroadcastNet::homogeneous(3, 8e6, 0.0).unwrap();
         net.broadcast(0, 1000);
         net.broadcast(0, 500);
         net.broadcast(2, 250);
@@ -101,7 +178,7 @@ mod tests {
     #[test]
     fn time_model_serializes_transmissions() {
         // 8 Mbit/s -> 1000 bytes = 1 ms; plus 0.1 ms latency each.
-        let mut net = BroadcastNet::homogeneous(2, 8e6, 1e-4);
+        let mut net = BroadcastNet::homogeneous(2, 8e6, 1e-4).unwrap();
         net.broadcast(0, 1000);
         net.broadcast(1, 1000);
         let r = net.report();
@@ -110,7 +187,7 @@ mod tests {
 
     #[test]
     fn heterogeneous_uplinks_differ() {
-        let mut net = BroadcastNet::new(vec![8e6, 4e6], 0.0);
+        let mut net = BroadcastNet::new(vec![8e6, 4e6], 0.0).unwrap();
         let t_fast = net.broadcast(0, 1000);
         let t_slow = net.broadcast(1, 1000);
         assert!((t_slow / t_fast - 2.0).abs() < 1e-9);
@@ -118,11 +195,46 @@ mod tests {
 
     #[test]
     fn reset_clears_state() {
-        let mut net = BroadcastNet::homogeneous(2, 1e6, 0.0);
+        let mut net = BroadcastNet::homogeneous(2, 1e6, 0.0).unwrap();
         net.broadcast(0, 10);
         net.reset();
         let r = net.report();
         assert_eq!(r.total_bytes, 0);
         assert_eq!(r.elapsed_s, 0.0);
+    }
+
+    #[test]
+    fn invalid_networks_are_typed_errors_not_panics() {
+        for bad in [
+            BroadcastNet::new(vec![], 0.0),
+            BroadcastNet::new(vec![0.0], 0.0),
+            BroadcastNet::new(vec![1e6, -5.0], 0.0),
+            BroadcastNet::new(vec![1e6, f64::NAN], 0.0),
+            BroadcastNet::new(vec![1e6], -1.0),
+            BroadcastNet::new(vec![1e6], f64::INFINITY),
+            BroadcastNet::homogeneous(0, 1e6, 0.0),
+        ] {
+            assert!(
+                matches!(bad, Err(HetcdcError::InvalidParams(_))),
+                "{bad:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn ledger_matches_per_broadcast_times() {
+        // The ledger clock is the sequential fold of tx_time in call
+        // order — the exact contract the parallel executor relies on.
+        let mut net = BroadcastNet::new(vec![8e6, 2e6, 4e6], 3e-4).unwrap();
+        let sequence = [(0usize, 900usize), (2, 100), (1, 1200), (0, 40)];
+        let mut expect = 0.0;
+        for &(s, b) in &sequence {
+            expect += net.tx_time(s, b);
+            net.broadcast(s, b);
+        }
+        let r = net.ledger().report();
+        assert_eq!(r.elapsed_s.to_bits(), expect.to_bits());
+        assert_eq!(r.total_bytes, 900 + 100 + 1200 + 40);
+        assert_eq!(r.msgs_by_node, vec![2, 1, 1]);
     }
 }

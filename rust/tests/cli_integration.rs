@@ -216,6 +216,92 @@ fn bad_config_file_is_a_clean_error() {
 }
 
 #[test]
+fn run_threads_knob_reproduces_serial_loads() {
+    let serial = hetcdc(&[
+        "run", "--workload", "terasort", "--n", "12", "--storage", "6,7,7",
+        "--mode", "coded", "--backend", "native", "--json", "--threads", "1",
+    ]);
+    let parallel = hetcdc(&[
+        "run", "--workload", "terasort", "--n", "12", "--storage", "6,7,7",
+        "--mode", "coded", "--backend", "native", "--json", "--threads", "3",
+    ]);
+    assert_eq!(serial.0, 0, "{}", serial.1);
+    assert_eq!(parallel.0, 0, "{}", parallel.1);
+    let report = |out: &str| {
+        let line = out.lines().find(|l| l.starts_with('{')).expect("json line").to_string();
+        hetcdc::util::json::Json::parse(&line).expect("valid json")
+    };
+    let (a, b) = (report(&serial.1), report(&parallel.1));
+    for field in ["load_equations", "payload_bytes", "wire_bytes", "messages", "shuffle_time_s"] {
+        assert_eq!(a.get(field), b.get(field), "field {field} differs across --threads");
+    }
+}
+
+#[test]
+fn plan_with_threads_certifies_parallel_execution() {
+    let (code, stdout, stderr) = hetcdc(&[
+        "plan", "--workload", "terasort", "--n", "12", "--storage", "6,7,7",
+        "--threads", "2",
+    ]);
+    assert_eq!(code, 0, "{stdout}\n{stderr}");
+    assert!(stderr.contains("certified for parallel execution"), "{stderr}");
+    // The plan JSON still lands on stdout, untouched by certification.
+    assert!(hetcdc::engine::Plan::from_json_str(stdout.trim()).is_ok());
+}
+
+#[test]
+fn bench_json_emits_deterministic_artifact_and_self_compares() {
+    let dir = std::env::temp_dir().join(format!("hetcdc_bench_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let out1 = dir.join("bench1.json");
+    let out2 = dir.join("bench2.json");
+
+    let (code, stdout, stderr) = hetcdc(&["bench-json", "--out", out1.to_str().unwrap()]);
+    assert_eq!(code, 0, "{stdout}\n{stderr}");
+    let text1 = std::fs::read_to_string(&out1).unwrap();
+    let j = hetcdc::util::json::Json::parse(&text1).expect("valid bench json");
+    assert_eq!(j.get("schema").and_then(|v| v.as_usize()), Some(1));
+    let scenarios = j.get("scenarios").and_then(|s| s.as_arr()).expect("scenarios");
+    assert!(scenarios.len() >= 6, "expected the full K∈{{3,5,8}} suite");
+    assert!(j.get("totals").and_then(|t| t.get("payload_bytes")).is_some());
+
+    // Determinism: a second run emits byte-identical JSON.
+    let (code, _, _) = hetcdc(&["bench-json", "--out", out2.to_str().unwrap(), "--threads", "2"]);
+    assert_eq!(code, 0);
+    let text2 = std::fs::read_to_string(&out2).unwrap();
+    assert_eq!(text1, text2, "bench artifact must be run- and thread-invariant");
+
+    // Gating against itself passes; against a doctored (smaller) baseline fails.
+    let (code, stdout, _) = hetcdc(&[
+        "bench-json", "--out", out2.to_str().unwrap(),
+        "--baseline", out1.to_str().unwrap(),
+    ]);
+    assert_eq!(code, 0, "{stdout}");
+    assert!(stdout.contains("baseline gate PASSED"), "{stdout}");
+
+    let doctored = dir.join("baseline_small.json");
+    std::fs::write(&doctored, text1.replace("\"payload_bytes\"", "\"payload_bytes_was\"")).unwrap();
+    let (code, stdout, stderr) = hetcdc(&[
+        "bench-json", "--out", out2.to_str().unwrap(),
+        "--baseline", doctored.to_str().unwrap(),
+    ]);
+    assert_eq!(code, 1, "{stdout}\n{stderr}");
+    assert!(stderr.contains("baseline gate FAILED"), "{stderr}");
+
+    // A pending (empty) baseline disarms the gate instead of failing.
+    let pending = dir.join("baseline_pending.json");
+    std::fs::write(&pending, r#"{"schema": 1, "scenarios": []}"#).unwrap();
+    let (code, stdout, _) = hetcdc(&[
+        "bench-json", "--out", out2.to_str().unwrap(),
+        "--baseline", pending.to_str().unwrap(),
+    ]);
+    assert_eq!(code, 0, "{stdout}");
+    assert!(stdout.contains("baseline gate PENDING"), "{stdout}");
+
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
 fn verify_subcommand_passes_with_lp() {
     let (code, stdout, _) = hetcdc(&["verify", "--n", "6", "--lp"]);
     assert_eq!(code, 0, "{stdout}");

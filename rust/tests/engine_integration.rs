@@ -175,7 +175,7 @@ fn plan_roundtrips_through_json_and_executes() {
         .unwrap();
     let restored = Plan::from_json_str(&plan.to_json_string()).unwrap();
     let mut be = NativeBackend;
-    let mut exec = Executor::new(&restored);
+    let mut exec = Executor::new(&restored).unwrap();
     let r1 = exec.run_batch(&mut be, 1).unwrap();
     let r2 = exec.run_batch(&mut be, 2).unwrap();
     assert!(r1.verified && r2.verified);
@@ -197,7 +197,7 @@ fn plan_cache_serves_repeated_shapes() {
         let plan = cache
             .get_or_build(&cl, &job, "auto", None, ShuffleMode::Coded)
             .unwrap();
-        let r = Executor::new(&plan).run_batch(&mut be, batch).unwrap();
+        let r = Executor::new(&plan).unwrap().run_batch(&mut be, batch).unwrap();
         assert!(r.verified);
         assert_eq!(r.load_equations, 12.0);
     }

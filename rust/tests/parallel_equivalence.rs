@@ -1,0 +1,192 @@
+//! Serial-vs-parallel executor equivalence: for every `Placer` ×
+//! `ShuffleCoder` combination that builds a `Plan` at K = 3..6 (plus the
+//! uncoded mode), a parallel batch must be **bit-identical** to a serial
+//! one — same `RunReport` numbers, same `NetReport` (including the float
+//! clock, bit for bit), and same decoded IV bytes at every node.
+//!
+//! This is the acceptance gate of the sharded executor: parallelism may
+//! only change wall-clock, never a single output bit.
+
+use hetcdc::coding::builtin_coders;
+use hetcdc::coding::plan::IvId;
+use hetcdc::engine::{ExecMode, Executor, JobBuilder, NativeBackend, Plan, RunReport};
+use hetcdc::model::cluster::ClusterSpec;
+use hetcdc::model::job::{JobSpec, ShuffleMode};
+use hetcdc::placement::builtin_placers;
+
+fn cluster(storage: &[u64]) -> ClusterSpec {
+    let mut c = ClusterSpec::homogeneous(storage.len(), 1, 1000.0);
+    for (node, &m) in c.nodes.iter_mut().zip(storage) {
+        node.storage = m;
+    }
+    // Heterogeneous uplinks and map rates so the clocks actually exercise
+    // the per-node rate table.
+    for (i, node) in c.nodes.iter_mut().enumerate() {
+        node.uplink_mbps = 400.0 + 175.0 * (i % 3) as f64;
+        node.map_files_per_s = 100.0 * (1 + i % 4) as f64;
+    }
+    c
+}
+
+fn small_job(n: u64) -> JobSpec {
+    let mut job = JobSpec::terasort(n);
+    job.t = 8;
+    job.keys_per_file = 16;
+    job
+}
+
+/// The fixed K = 3..6 shapes the equivalence sweep runs over.
+fn shapes() -> Vec<(Vec<u64>, u64)> {
+    vec![
+        (vec![6, 7, 7], 12),
+        (vec![3, 4, 5, 6], 8),
+        (vec![3, 4, 5, 6, 7], 10),
+        (vec![2, 3, 3, 4, 4, 5], 8),
+    ]
+}
+
+fn assert_reports_identical(a: &RunReport, b: &RunReport, ctx: &str) {
+    assert_eq!(a.k, b.k, "{ctx}: k");
+    assert_eq!(a.seed, b.seed, "{ctx}: seed");
+    assert_eq!(a.payload_bytes, b.payload_bytes, "{ctx}: payload_bytes");
+    assert_eq!(a.wire_bytes, b.wire_bytes, "{ctx}: wire_bytes");
+    assert_eq!(a.messages, b.messages, "{ctx}: messages");
+    assert_eq!(
+        a.load_equations.to_bits(),
+        b.load_equations.to_bits(),
+        "{ctx}: load_equations"
+    );
+    assert_eq!(
+        a.map_time_s.to_bits(),
+        b.map_time_s.to_bits(),
+        "{ctx}: map_time_s"
+    );
+    assert_eq!(
+        a.shuffle_time_s.to_bits(),
+        b.shuffle_time_s.to_bits(),
+        "{ctx}: shuffle_time_s"
+    );
+    assert_eq!(
+        a.job_time_s.to_bits(),
+        b.job_time_s.to_bits(),
+        "{ctx}: job_time_s"
+    );
+    assert_eq!(a.verified, b.verified, "{ctx}: verified");
+    assert_eq!(
+        a.max_abs_err.to_bits(),
+        b.max_abs_err.to_bits(),
+        "{ctx}: max_abs_err"
+    );
+}
+
+/// Run one plan in both modes and diff everything observable.
+fn check_plan(plan: &Plan, threads: usize, ctx: &str) {
+    let mut be = NativeBackend;
+    let seed = plan.job.seed ^ 0xA5A5;
+    let mut serial = Executor::new(plan).unwrap();
+    let ra = serial.run_batch(&mut be, seed).unwrap();
+    let mut parallel = Executor::with_mode(plan, ExecMode::Parallel).unwrap();
+    parallel.set_threads(threads);
+    assert_eq!(parallel.mode(), ExecMode::Parallel);
+    assert_eq!(parallel.mode().as_str(), "parallel");
+    assert_eq!(serial.mode().as_str(), "serial");
+    let rb = parallel.run_batch(&mut be, seed).unwrap();
+
+    assert!(ra.verified, "{ctx}: serial batch failed verification");
+    assert_reports_identical(&ra, &rb, ctx);
+    assert_eq!(
+        serial.net_report(),
+        parallel.net_report(),
+        "{ctx}: NetReport (bit-exact, including the clock)"
+    );
+
+    // Complete post-shuffle state: every (node, group, subfile) IV slot
+    // agrees — both the bytes and the known/unknown status.
+    let k = plan.cluster.k();
+    let n_sub = plan.alloc.n_sub();
+    for node in 0..k {
+        for group in 0..k {
+            for sub in 0..n_sub {
+                let iv = IvId { group, sub };
+                assert_eq!(
+                    serial.iv(node, iv),
+                    parallel.iv(node, iv),
+                    "{ctx}: node {node} {iv:?}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn every_placer_coder_combo_is_mode_equivalent_k3_to_6() {
+    for (storage, n) in shapes() {
+        let cl = cluster(&storage);
+        let job = small_job(n);
+        for placer in builtin_placers() {
+            let alloc = match placer.place(&cl, &job) {
+                Ok(a) => a,
+                Err(_) => continue, // shape not served (e.g. K=3-only)
+            };
+            for coder in builtin_coders() {
+                let plan = match JobBuilder::new(&cl, &job)
+                    .custom_allocation(alloc.clone())
+                    .coder(coder.name())
+                    .mode(ShuffleMode::Coded)
+                    .build()
+                {
+                    Ok(p) => p,
+                    Err(_) => continue, // combo rejects this shape
+                };
+                let ctx = format!(
+                    "K={} storage={storage:?} {} x {}",
+                    cl.k(),
+                    placer.name(),
+                    coder.name()
+                );
+                check_plan(&plan, 3, &ctx);
+            }
+            // The uncoded baseline must be mode-equivalent too.
+            let plan = JobBuilder::new(&cl, &job)
+                .custom_allocation(alloc.clone())
+                .mode(ShuffleMode::Uncoded)
+                .build()
+                .unwrap();
+            let ctx = format!("K={} storage={storage:?} {} x uncoded", cl.k(), placer.name());
+            check_plan(&plan, 3, &ctx);
+        }
+    }
+}
+
+#[test]
+fn equivalence_holds_for_every_thread_count() {
+    let cl = cluster(&[4, 8, 12]);
+    let job = small_job(12);
+    let plan = JobBuilder::new(&cl, &job).placer("optimal-k3").build().unwrap();
+    for threads in [0usize, 1, 2, 3, 7, 64] {
+        check_plan(&plan, threads, &format!("threads={threads}"));
+    }
+}
+
+#[test]
+fn parallel_batches_still_match_plan_predictions() {
+    // The staged-pipeline contract survives sharding: measured ==
+    // predicted for every batch, in parallel mode.
+    let cl = cluster(&[3, 4, 5, 6, 7]);
+    let job = small_job(10);
+    let plan = JobBuilder::new(&cl, &job).build().unwrap();
+    let mut be = NativeBackend;
+    let mut exec = Executor::with_mode(&plan, ExecMode::Parallel).unwrap();
+    for batch in 0..3u64 {
+        let r = exec.run_batch(&mut be, job.seed + batch).unwrap();
+        assert!(r.verified);
+        assert_eq!(r.payload_bytes, plan.predicted.payload_bytes);
+        assert_eq!(r.wire_bytes, plan.predicted.wire_bytes);
+        assert_eq!(r.messages, plan.predicted.messages);
+        assert_eq!(
+            r.shuffle_time_s.to_bits(),
+            plan.predicted.shuffle_time_s.to_bits()
+        );
+    }
+    assert_eq!(exec.batches_run(), 3);
+}

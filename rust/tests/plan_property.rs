@@ -115,7 +115,7 @@ fn prop_built_plans_execute_verified_across_k() {
         };
         let mut be = NativeBackend;
         let r = Executor::new(&plan)
-            .run(&mut be)
+            .and_then(|mut exec| exec.run(&mut be))
             .map_err(|e| format!("K={k} storage={storage:?} N={n}: {e}"))?;
         prop::check(
             r.verified && (r.load_equations - plan.predicted.load_equations).abs() < 1e-9,
@@ -133,7 +133,7 @@ fn two_executor_runs_of_one_plan_produce_identical_loads() {
     let job = small_job(12);
     let plan = JobBuilder::new(&cl, &job).placer("optimal-k3").build().unwrap();
     let mut be = NativeBackend;
-    let mut exec = Executor::new(&plan);
+    let mut exec = Executor::new(&plan).unwrap();
     let a = exec.run_batch(&mut be, 7).unwrap();
     let b = exec.run_batch(&mut be, 99).unwrap();
     assert!(a.verified && b.verified);
