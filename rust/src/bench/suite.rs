@@ -8,9 +8,14 @@
 //! is diffable and a committed baseline can gate regressions exactly.
 //! Wall-clock timing is optional (`--timing`) and never part of the gate.
 //!
-//! Each scenario also executes in both [`ExecMode`]s and fails loudly on
-//! any serial/parallel divergence, so the CI bench job doubles as a
-//! continuous determinism check of the sharded executor.
+//! Each scenario also executes in all three [`ExecMode`]s — serial,
+//! shard-parallel, and batch-pipelined — and fails loudly (with a typed
+//! [`HetcdcError`], never a panic) on any divergence, so the CI bench
+//! job doubles as a continuous determinism check of the sharded and
+//! pipelined executors. Under `--timing`, each scenario also records a
+//! steady-state pipelined multi-batch wall-clock sample next to the
+//! single-batch one (`wall_pipelined`), the batches/sec trajectory of
+//! the serving path.
 
 use crate::bench::harness::{Bench, BenchResult};
 use crate::engine::{ExecMode, Executor, JobBuilder, NativeBackend};
@@ -109,12 +114,21 @@ pub struct ScenarioResult {
     pub load_equations: f64,
     pub map_time_s: f64,
     pub shuffle_time_s: f64,
-    /// Serial and parallel execution produced bit-identical outputs and
-    /// network reports (always true — a divergence aborts the suite).
+    /// Serial, parallel, and pipelined execution produced bit-identical
+    /// outputs and network reports (always true — a divergence aborts
+    /// the suite).
     pub modes_identical: bool,
     /// Wall-clock of one parallel batch (nondeterministic, optional).
     pub wall: Option<BenchResult>,
+    /// Wall-clock of one pipelined [`PIPELINE_BATCHES`]-batch run — the
+    /// steady-state batches/sec sample (nondeterministic, optional).
+    pub wall_pipelined: Option<BenchResult>,
 }
+
+/// Batches per pipelined timing sample (and per pipelined determinism
+/// check): enough for the pipeline to reach steady state, small enough
+/// for the suite to stay quick in debug builds.
+pub const PIPELINE_BATCHES: u64 = 4;
 
 impl ScenarioResult {
     pub fn to_json(&self) -> Json {
@@ -137,12 +151,29 @@ impl ScenarioResult {
         if let Some(w) = &self.wall {
             m.insert("wall".into(), w.to_json());
         }
+        if let Some(w) = &self.wall_pipelined {
+            m.insert("wall_pipelined".into(), w.to_json());
+        }
         Json::Obj(m)
     }
 }
 
-/// Run one scenario: build the plan, execute serial and parallel, verify
-/// bit-identical equivalence, record the deterministic metrics.
+/// Two batch reports agree on every deterministic metric, bit for bit.
+fn reports_identical(a: &crate::engine::RunReport, b: &crate::engine::RunReport) -> bool {
+    a.verified == b.verified
+        && a.payload_bytes == b.payload_bytes
+        && a.wire_bytes == b.wire_bytes
+        && a.messages == b.messages
+        && a.shuffle_time_s.to_bits() == b.shuffle_time_s.to_bits()
+        && a.map_time_s.to_bits() == b.map_time_s.to_bits()
+        && a.max_abs_err.to_bits() == b.max_abs_err.to_bits()
+}
+
+/// Run one scenario: build the plan, execute serial, parallel, and
+/// pipelined, verify bit-identical three-way equivalence, record the
+/// deterministic metrics. All failure paths return a typed
+/// [`HetcdcError`] — a malformed scenario fails the gate with a message,
+/// never a panic.
 pub fn run_scenario(
     sc: &Scenario,
     threads: usize,
@@ -162,12 +193,10 @@ pub fn run_scenario(
     parallel.set_threads(threads);
     let r_parallel = parallel.run_batch(&mut be, job.seed)?;
 
-    let diverged = |what: &str| {
+    let diverged = |mode: &str, what: &str| {
         Err(HetcdcError::Shuffle(format!(
-            "scenario {}: {}/{} divergence in {what}",
+            "scenario {}: serial/{mode} divergence in {what}",
             sc.name,
-            serial.mode().as_str(),
-            parallel.mode().as_str(),
         )))
     };
     if !r_serial.verified || !r_parallel.verified {
@@ -176,41 +205,91 @@ pub fn run_scenario(
             sc.name
         )));
     }
-    if r_serial.payload_bytes != r_parallel.payload_bytes
-        || r_serial.wire_bytes != r_parallel.wire_bytes
-        || r_serial.messages != r_parallel.messages
-    {
-        return diverged("byte/message counts");
-    }
-    if r_serial.shuffle_time_s.to_bits() != r_parallel.shuffle_time_s.to_bits()
-        || r_serial.map_time_s.to_bits() != r_parallel.map_time_s.to_bits()
-    {
-        return diverged("phase clocks");
+    if !reports_identical(&r_serial, &r_parallel) {
+        return diverged("parallel", "batch report");
     }
     if serial.net_report() != parallel.net_report() {
-        return diverged("NetReport");
+        return diverged("parallel", "NetReport");
     }
     let n_sub = plan.alloc.n_sub();
     let k = cluster.k();
-    for node in 0..k {
-        for g in 0..k {
-            for sub in 0..n_sub {
-                let iv = crate::coding::plan::IvId { group: g, sub };
-                if serial.iv(node, iv) != parallel.iv(node, iv) {
-                    return diverged("decoded IV bytes");
-                }
-            }
-        }
+    // Every (node, group, subfile) IV slot of two executors agrees —
+    // both the bytes and the known/unknown status.
+    let ivs_identical = |a: &Executor, b: &Executor| {
+        (0..k).all(|node| {
+            (0..k).all(|g| {
+                (0..n_sub).all(|sub| {
+                    let iv = crate::coding::plan::IvId { group: g, sub };
+                    a.iv(node, iv) == b.iv(node, iv)
+                })
+            })
+        })
+    };
+    if !ivs_identical(&serial, &parallel) {
+        return diverged("parallel", "decoded IV bytes");
     }
 
-    let wall = timing.map(|cfg| {
-        crate::bench::harness::bench_fn(sc.name, cfg, || {
-            parallel
-                .run_batch(&mut be, job.seed)
-                .expect("timed batch")
-                .payload_bytes
-        })
-    });
+    // Pipelined multi-batch run vs the same batches run serially: the
+    // steady-state serving path must be bit-identical, batch by batch.
+    let seeds: Vec<u64> = (0..PIPELINE_BATCHES).map(|b| job.seed.wrapping_add(b)).collect();
+    let mut pipelined = Executor::with_mode(&plan, ExecMode::Pipelined)?;
+    pipelined.set_threads(threads);
+    let piped = pipelined.run_batches(&mut be, &seeds)?;
+    let mut serial_ref = Executor::new(&plan)?;
+    let serial_batches = serial_ref.run_batches(&mut be, &seeds)?;
+    for (b, (rp, rs)) in piped.iter().zip(&serial_batches).enumerate() {
+        if !rp.verified || !reports_identical(rp, rs) {
+            return diverged("pipelined", &format!("batch {b} report"));
+        }
+    }
+    if pipelined.net_report() != serial_ref.net_report() {
+        return diverged("pipelined", "NetReport");
+    }
+    if !ivs_identical(&serial_ref, &pipelined) {
+        return diverged("pipelined", "decoded IV bytes");
+    }
+
+    // Optional wall-clock sampling. The timed closures cannot return a
+    // Result through the harness, so errors are captured and surfaced as
+    // a typed failure instead of panicking mid-bench.
+    let mut wall = None;
+    let mut wall_pipelined = None;
+    if let Some(cfg) = timing {
+        let mut timing_err: Option<HetcdcError> = None;
+        let w = crate::bench::harness::bench_fn(sc.name, cfg, || {
+            match parallel.run_batch(&mut be, job.seed) {
+                Ok(r) => r.payload_bytes,
+                Err(e) => {
+                    timing_err.get_or_insert(e);
+                    0
+                }
+            }
+        });
+        if let Some(e) = timing_err.take() {
+            return Err(HetcdcError::Backend(format!(
+                "scenario {}: timed batch failed: {e}",
+                sc.name
+            )));
+        }
+        wall = Some(w);
+        let pname = format!("{} (pipelined x{PIPELINE_BATCHES})", sc.name);
+        let wp = crate::bench::harness::bench_fn(&pname, cfg, || {
+            match pipelined.run_batches(&mut be, &seeds) {
+                Ok(rs) => rs.iter().map(|r| r.payload_bytes).sum::<u64>(),
+                Err(e) => {
+                    timing_err.get_or_insert(e);
+                    0
+                }
+            }
+        });
+        if let Some(e) = timing_err {
+            return Err(HetcdcError::Backend(format!(
+                "scenario {}: timed pipelined run failed: {e}",
+                sc.name
+            )));
+        }
+        wall_pipelined = Some(wp);
+    }
 
     Ok(ScenarioResult {
         name: sc.name.to_string(),
@@ -229,6 +308,7 @@ pub fn run_scenario(
         shuffle_time_s: r_serial.shuffle_time_s,
         modes_identical: true,
         wall,
+        wall_pipelined,
     })
 }
 
@@ -240,6 +320,22 @@ pub struct SuiteReport {
 }
 
 impl SuiteReport {
+    /// Look up a scenario by name. Returns a typed error (not a panic)
+    /// so a suite or baseline missing an expected scenario fails the
+    /// gate with a message instead of aborting the process.
+    pub fn scenario(&self, name: &str) -> Result<&ScenarioResult> {
+        self.results.iter().find(|r| r.name == name).ok_or_else(|| {
+            HetcdcError::InvalidParams(format!(
+                "bench suite: scenario '{name}' missing (have: {})",
+                self.results
+                    .iter()
+                    .map(|r| r.name.as_str())
+                    .collect::<Vec<_>>()
+                    .join(", ")
+            ))
+        })
+    }
+
     pub fn total_payload_bytes(&self) -> u64 {
         self.results.iter().map(|r| r.payload_bytes).sum()
     }
@@ -422,18 +518,11 @@ mod tests {
     }
 
     #[test]
-    fn coded_beats_uncoded_in_every_cluster() {
-        let report = run_suite(2, None).unwrap();
-        let find = |name: &str| {
-            report
-                .results
-                .iter()
-                .find(|r| r.name == name)
-                .unwrap_or_else(|| panic!("{name} missing"))
-        };
+    fn coded_beats_uncoded_in_every_cluster() -> Result<()> {
+        let report = run_suite(2, None)?;
         for k in ["k3", "k5", "k8"] {
-            let coded = find(&format!("{k}-terasort-coded"));
-            let uncoded = find(&format!("{k}-terasort-uncoded"));
+            let coded = report.scenario(&format!("{k}-terasort-coded"))?;
+            let uncoded = report.scenario(&format!("{k}-terasort-uncoded"))?;
             assert!(
                 coded.payload_bytes < uncoded.payload_bytes,
                 "{k}: coded {} >= uncoded {}",
@@ -441,6 +530,18 @@ mod tests {
                 uncoded.payload_bytes
             );
         }
+        Ok(())
+    }
+
+    #[test]
+    fn scenario_lookup_is_typed_not_panicking() {
+        let report = SuiteReport { results: Vec::new() };
+        let err = report.scenario("k3-terasort-coded").unwrap_err();
+        assert!(
+            matches!(err, HetcdcError::InvalidParams(_)),
+            "expected typed lookup failure, got {err:?}"
+        );
+        assert!(err.to_string().contains("k3-terasort-coded"));
     }
 
     #[test]

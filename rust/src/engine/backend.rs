@@ -33,7 +33,9 @@ pub trait MapBackend {
     /// A fresh, independent backend for one parallel Map worker, or
     /// `None` when this backend cannot be used concurrently (the PJRT
     /// runtime owns device state) — the executor then falls back to a
-    /// serial Map. Map output depends only on `(job, q, subfiles)`, so
+    /// serial Map, and the pipelined executor degrades to sequential
+    /// batches (it needs a worker backend to Map batch `i+1` while batch
+    /// `i` shuffles). Map output depends only on `(job, q, subfiles)`, so
     /// worker backends must produce byte-identical IVs to `self`.
     fn worker_clone(&self) -> Option<Box<dyn MapBackend + Send>> {
         None

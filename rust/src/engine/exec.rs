@@ -15,7 +15,11 @@
 //!
 //! [`NodeState`] buffers are epoch-versioned so an
 //! [`crate::engine::Executor`] reuses every allocation across batches:
-//! `reset()` is O(1) and the payload buffers keep their capacity.
+//! `reset()` is O(1) and the payload buffers keep their capacity. The
+//! executor holds **two** such banks per node (front/back) so the
+//! pipelined mode can keep two batch epochs in flight — the back bank is
+//! reset and re-filled by the Map of batch `i+1` while the front bank
+//! drains batch `i`'s shuffle; an O(1) bank swap promotes it afterwards.
 
 use crate::coding::decoder::DecodeSchedule;
 use crate::coding::plan::{Broadcast, IvId, Part, ShufflePlan};

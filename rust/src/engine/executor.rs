@@ -16,8 +16,19 @@
 //! supports concurrent workers, per-node decode always), while the
 //! network metering stays a single plan-order pass — so a parallel run is
 //! **bit-identical** to a serial one: same decoded IVs, same
-//! [`RunReport`], same [`crate::net::NetReport`]. Determinism tests diff
-//! the two modes directly (`tests/parallel_equivalence.rs`).
+//! [`RunReport`], same [`crate::net::NetReport`].
+//!
+//! [`ExecMode::Pipelined`] additionally overlaps *batches*: nothing in
+//! the paper's scheme couples batch `i+1`'s Map to batch `i`'s Shuffle,
+//! so [`Executor::run_batches`] runs a two-stage pipeline — a worker
+//! thread Maps batch `i+1` into the **back** epoch bank (via
+//! [`MapBackend::worker_clone`]) while the main thread assembles,
+//! meters, decodes, and Reduce-verifies batch `i` on the **front** bank.
+//! The banks swap in O(1) per batch, each bank's [`NodeState::reset`] is
+//! an O(1) epoch bump, and every batch is still metered by its own
+//! single plan-order pass — so pipelined runs are bit-identical to
+//! serial ones, batch by batch. Determinism tests diff all three modes
+//! directly (`tests/parallel_equivalence.rs`).
 
 use super::backend::MapBackend;
 use super::engine::RunReport;
@@ -25,6 +36,7 @@ use super::exec::{execute_planned, execute_planned_parallel, NodeState};
 use super::plan::Plan;
 use crate::coding::plan::IvId;
 use crate::error::{HetcdcError, Result};
+use crate::model::job::JobSpec;
 use crate::net::{BroadcastNet, NetReport};
 use crate::workloads;
 
@@ -37,6 +49,13 @@ pub enum ExecMode {
     /// scoped worker threads; metering stays serialized, so outputs and
     /// reports are bit-identical to [`ExecMode::Serial`].
     Parallel,
+    /// Two-stage batch pipeline: [`Executor::run_batches`] Maps batch
+    /// `i+1` on a worker thread while batch `i` shuffles and reduces,
+    /// double-buffered on the two per-node epoch banks. Bit-identical
+    /// per-batch results; only steady-state batches/sec changes. A
+    /// single [`Executor::run_batch`] call (nothing to overlap) behaves
+    /// like [`ExecMode::Parallel`].
+    Pipelined,
 }
 
 impl ExecMode {
@@ -44,6 +63,7 @@ impl ExecMode {
         match self {
             ExecMode::Serial => "serial",
             ExecMode::Parallel => "parallel",
+            ExecMode::Pipelined => "pipelined",
         }
     }
 }
@@ -52,14 +72,24 @@ impl ExecMode {
 /// the per-node held-subfile lists, and the network simulator; buffers
 /// are reset (not reallocated) per batch, and all shape-derived work
 /// (held lists, the map-time barrier) is computed once here.
+///
+/// Two epoch banks of [`NodeState`] can be in flight at once: `states`
+/// (the **front** bank — always the most recently executed batch) and
+/// `back` (the bank the pipelined mode Maps the next batch into,
+/// allocated lazily on the first pipelined multi-batch run). Serial and
+/// parallel modes only ever touch the front bank.
 pub struct Executor<'p> {
     plan: &'p Plan,
+    /// Front epoch bank: post-shuffle state of the most recent batch.
     states: Vec<NodeState>,
+    /// Back epoch bank: the in-flight Map target of batch `i+1` during a
+    /// pipelined run. Empty until [`ExecMode::Pipelined`] first needs it.
+    back: Vec<NodeState>,
     /// Subfiles stored at each node, precomputed from the allocation.
     held: Vec<Vec<usize>>,
     net: BroadcastNet,
     mode: ExecMode,
-    /// Worker threads for [`ExecMode::Parallel`]; `0` = auto-detect.
+    /// Worker threads for parallel phases; `0` = auto-detect.
     threads: usize,
     batches_run: u64,
 }
@@ -87,6 +117,7 @@ impl<'p> Executor<'p> {
         Ok(Executor {
             plan,
             states,
+            back: Vec::new(),
             held,
             net: plan.cluster.network()?,
             mode,
@@ -107,14 +138,17 @@ impl<'p> Executor<'p> {
         self.mode = mode;
     }
 
-    /// Cap the worker count for [`ExecMode::Parallel`]; `0` (the default)
-    /// uses [`std::thread::available_parallelism`]. No effect on results
-    /// — only on wall-clock.
+    /// Cap the worker count for the parallel phases; `0` (the default)
+    /// uses [`std::thread::available_parallelism`], falling back to 1
+    /// worker when the parallelism of the host cannot be queried. No
+    /// effect on results — only on wall-clock.
     pub fn set_threads(&mut self, threads: usize) {
         self.threads = threads;
     }
 
-    /// Worker count a parallel phase would use right now.
+    /// Worker count a parallel phase would use right now. Never errors:
+    /// an unqueryable [`std::thread::available_parallelism`] degrades to
+    /// one worker.
     pub fn effective_threads(&self) -> usize {
         let hw = || {
             std::thread::available_parallelism()
@@ -131,14 +165,18 @@ impl<'p> Executor<'p> {
     }
 
     /// Network accounting of the most recent batch (equal across
-    /// [`ExecMode`]s for the same batch — asserted by tier-1 tests).
+    /// [`ExecMode`]s for the same batch — asserted by tier-1 tests). The
+    /// report's `epoch` equals [`Self::batches_run`]: each batch is
+    /// metered by exactly one ledger epoch, pipelined or not.
     pub fn net_report(&self) -> NetReport {
         self.net.report()
     }
 
     /// Read one decoded IV payload of the most recent batch (`None` if
     /// that node never held or decoded it). Lets equivalence tests diff
-    /// the complete post-shuffle state across execution modes.
+    /// the complete post-shuffle state across execution modes. In
+    /// pipelined runs this reads the front bank, which always holds the
+    /// last *finished* batch — never the in-flight Map of the next one.
     pub fn iv(&self, node: usize, iv: IvId) -> Option<&[u8]> {
         self.states.get(node)?.get_full(iv)
     }
@@ -153,7 +191,7 @@ impl<'p> Executor<'p> {
     fn map_serial(
         &mut self,
         backend: &mut dyn MapBackend,
-        job: &crate::model::job::JobSpec,
+        job: &JobSpec,
         q: usize,
     ) -> Result<()> {
         for node in 0..self.states.len() {
@@ -172,7 +210,7 @@ impl<'p> Executor<'p> {
     fn map_parallel(
         &mut self,
         backend: &mut dyn MapBackend,
-        job: &crate::model::job::JobSpec,
+        job: &JobSpec,
         q: usize,
     ) -> Result<()> {
         let threads = self.effective_threads();
@@ -218,100 +256,243 @@ impl<'p> Executor<'p> {
     /// loads and times must equal the plan's predictions (deterministic
     /// simulator); only the payload bytes differ between batches.
     pub fn run_batch(&mut self, backend: &mut dyn MapBackend, seed: u64) -> Result<RunReport> {
-        let plan = self.plan;
-        let k = plan.cluster.k();
-        let q = k;
-        let alloc = &plan.alloc;
-        let n_sub = alloc.n_sub();
-        let mut job = plan.job.clone();
+        let q = self.plan.cluster.k();
+        let mut job = self.plan.job.clone();
         job.seed = seed;
 
         for st in &mut self.states {
             st.reset();
         }
-        self.net.reset();
 
         // ---- Map phase. The barrier time over per-node compute rates is
         // shape-only work, computed once at plan build.
-        let map_time_s = plan.predicted.map_time_s;
         match self.mode {
             ExecMode::Serial => self.map_serial(backend, &job, q)?,
-            ExecMode::Parallel => self.map_parallel(backend, &job, q)?,
+            ExecMode::Parallel | ExecMode::Pipelined => self.map_parallel(backend, &job, q)?,
         }
 
-        // ---- Shuffle phase: replay the decode schedule proven at plan
-        // build time — no re-verification, no fixpoint.
-        let outcome = match self.mode {
-            ExecMode::Serial => {
-                execute_planned(&plan.shuffle, &plan.schedule, &mut self.states, &mut self.net)?
-            }
-            ExecMode::Parallel => {
-                let threads = self.effective_threads();
-                execute_planned_parallel(
-                    &plan.shuffle,
-                    &plan.schedule,
-                    &mut self.states,
-                    &mut self.net,
-                    threads,
-                )?
-            }
+        // ---- Shuffle + Reduce + verify.
+        let decode_threads = match self.mode {
+            ExecMode::Serial => 1,
+            ExecMode::Parallel | ExecMode::Pipelined => self.effective_threads(),
         };
-        let shuffle_time_s = self.net.report().elapsed_s;
+        let report = finish_batch(
+            self.plan,
+            &mut self.states,
+            &mut self.net,
+            backend,
+            &job,
+            decode_threads,
+        )?;
+        self.batches_run += 1;
+        Ok(report)
+    }
 
-        // ---- Reduce phase + oracle verification (all groups' oracles in
-        // one Map pass; per-group recomputation tripled verify cost).
-        let mut verified = true;
-        let mut max_abs_err = 0f64;
-        let oracles = workloads::native_reduce_oracle_all(&job, q, n_sub);
-        for node in 0..k {
-            let payloads: Vec<&[u8]> = (0..n_sub)
-                .map(|sub| {
-                    self.states[node]
-                        .get_full(IvId { group: node, sub })
-                        .ok_or_else(|| {
-                            HetcdcError::Shuffle(format!(
-                                "node {node} missing IV for subfile {sub}"
-                            ))
+    /// Execute one batch per seed, in order, returning one report per
+    /// batch. [`ExecMode::Serial`] and [`ExecMode::Parallel`] loop
+    /// [`Self::run_batch`]; [`ExecMode::Pipelined`] overlaps the Map of
+    /// batch `i+1` with the Shuffle/Reduce of batch `i` on the two epoch
+    /// banks. Per-batch results are **bit-identical** across all three
+    /// modes; a backend whose [`MapBackend::worker_clone`] returns `None`
+    /// (it cannot Map concurrently) degrades to the sequential loop.
+    pub fn run_batches(
+        &mut self,
+        backend: &mut dyn MapBackend,
+        seeds: &[u64],
+    ) -> Result<Vec<RunReport>> {
+        if self.mode != ExecMode::Pipelined || seeds.len() < 2 {
+            return seeds.iter().map(|&s| self.run_batch(backend, s)).collect();
+        }
+        match backend.worker_clone() {
+            Some(worker) => self.run_batches_pipelined(backend, worker, seeds),
+            None => seeds.iter().map(|&s| self.run_batch(backend, s)).collect(),
+        }
+    }
+
+    /// The two-stage pipeline: Map of batch `i+1` (worker thread, back
+    /// bank) overlaps Shuffle + Reduce of batch `i` (this thread, front
+    /// bank). Requires `seeds.len() >= 2` and a concurrency-capable
+    /// backend — [`Self::run_batches`] guards both.
+    ///
+    /// Epoch-bank lifecycle per batch `i` (see DESIGN.md for the full
+    /// diagram): the front bank holds batch `i`'s Map output; the worker
+    /// O(1)-resets the back bank (stale batch `i-1` state) and fills it
+    /// with batch `i+1`'s Map; after both stages join, the banks swap in
+    /// O(1). The network is metered *only* by the front stage — one
+    /// plan-order pass per batch, exactly as in serial mode — so reports,
+    /// clocks, and decoded bytes cannot drift.
+    fn run_batches_pipelined(
+        &mut self,
+        backend: &mut dyn MapBackend,
+        mut map_worker: Box<dyn MapBackend + Send>,
+        seeds: &[u64],
+    ) -> Result<Vec<RunReport>> {
+        let k = self.plan.cluster.k();
+        let q = k;
+        if self.back.len() != k {
+            self.back = (0..k)
+                .map(|_| NodeState::new(q, self.plan.alloc.n_sub(), self.plan.job.iv_bytes()))
+                .collect();
+        }
+        // The Map-ahead worker takes one slot of the thread budget; the
+        // decode of the front batch gets the rest. Any split is
+        // bit-identical — this only tunes wall-clock.
+        let decode_threads = self.effective_threads().saturating_sub(1).max(1);
+
+        // Fill stage: Map the first batch into the front bank.
+        let mut job = self.plan.job.clone();
+        job.seed = seeds[0];
+        for st in &mut self.states {
+            st.reset();
+        }
+        self.map_parallel(backend, &job, q)?;
+
+        let mut reports = Vec::with_capacity(seeds.len());
+        for (i, &seed) in seeds.iter().enumerate() {
+            job.seed = seed;
+            let next_seed = seeds.get(i + 1).copied();
+            let report = {
+                let Executor {
+                    plan,
+                    states,
+                    back,
+                    held,
+                    net,
+                    ..
+                } = self;
+                let plan: &'p Plan = *plan;
+                std::thread::scope(|scope| -> Result<RunReport> {
+                    // Stage A (worker thread): reset the back bank and
+                    // Map batch i+1 into it.
+                    let map_handle = next_seed.map(|seed| {
+                        let mut next_job = plan.job.clone();
+                        next_job.seed = seed;
+                        let worker = &mut map_worker;
+                        let back: &mut [NodeState] = back;
+                        let held: &[Vec<usize>] = held;
+                        scope.spawn(move || -> Result<()> {
+                            for (node, st) in back.iter_mut().enumerate() {
+                                st.reset();
+                                let ivs = worker.map_subfiles(&next_job, q, &held[node])?;
+                                store_mapped(st, &held[node], ivs)?;
+                            }
+                            Ok(())
                         })
-                })
-                .collect::<Result<_>>()?;
-            let out = backend.reduce_group(&job, &payloads)?;
-            let oracle = &oracles[node];
-            for (a, b) in out.iter().zip(oracle) {
-                let err = (a - b).abs();
-                max_abs_err = max_abs_err.max(err);
-                // f32 accumulation tolerance, scaled to magnitude.
-                if err > 1e-2 + 1e-4 * b.abs() {
-                    verified = false;
-                }
+                    });
+                    // Stage B (this thread): Shuffle + Reduce + verify
+                    // batch i on the front bank.
+                    let finished = finish_batch(plan, states, net, backend, &job, decode_threads);
+                    // Join the Map stage before propagating any error so
+                    // thread::scope never re-panics over a live worker.
+                    let mapped = match map_handle {
+                        Some(h) => h
+                            .join()
+                            .map_err(|_| {
+                                HetcdcError::Backend("pipelined map worker panicked".into())
+                            })
+                            .and_then(|r| r),
+                        None => Ok(()),
+                    };
+                    let report = finished?;
+                    mapped?;
+                    Ok(report)
+                })?
+            };
+            self.batches_run += 1;
+            reports.push(report);
+            if next_seed.is_some() {
+                // O(1) bank swap: batch i+1's freshly Mapped state
+                // becomes the front; batch i's drained state becomes the
+                // next Map target.
+                std::mem::swap(&mut self.states, &mut self.back);
             }
         }
-
-        self.batches_run += 1;
-        let load_equations =
-            outcome.payload_bytes as f64 / (job.iv_bytes() as f64 * alloc.sp as f64);
-        Ok(RunReport {
-            k,
-            n_files: job.n_files,
-            n_sub,
-            sp: alloc.sp,
-            placement: plan.placer.clone(),
-            coder: plan.coder.clone(),
-            mode: plan.mode,
-            backend: backend.name().to_string(),
-            seed,
-            load_equations,
-            plan_equations: plan.predicted.load_equations,
-            payload_bytes: outcome.payload_bytes,
-            wire_bytes: outcome.wire_bytes,
-            messages: outcome.messages,
-            map_time_s,
-            shuffle_time_s,
-            job_time_s: map_time_s + shuffle_time_s,
-            verified,
-            max_abs_err,
-        })
+        Ok(reports)
     }
+}
+
+/// Shuffle + Reduce + oracle-verify one already-Mapped batch — the
+/// post-Map phases of a batch run, over explicit state so the pipelined
+/// loop can drain the front epoch bank while a Map worker owns the back
+/// one. Metering is one plan-order pass on `net` (reset here, tagging a
+/// fresh ledger epoch), so the report is bit-identical across execution
+/// modes and `decode_threads` values.
+fn finish_batch(
+    plan: &Plan,
+    states: &mut [NodeState],
+    net: &mut BroadcastNet,
+    backend: &mut dyn MapBackend,
+    job: &JobSpec,
+    decode_threads: usize,
+) -> Result<RunReport> {
+    let k = plan.cluster.k();
+    let q = k;
+    let alloc = &plan.alloc;
+    let n_sub = alloc.n_sub();
+    net.reset();
+
+    // ---- Shuffle phase: replay the decode schedule proven at plan
+    // build time — no re-verification, no fixpoint.
+    let map_time_s = plan.predicted.map_time_s;
+    let outcome = if decode_threads <= 1 {
+        execute_planned(&plan.shuffle, &plan.schedule, states, net)?
+    } else {
+        execute_planned_parallel(&plan.shuffle, &plan.schedule, states, net, decode_threads)?
+    };
+    let shuffle_time_s = net.report().elapsed_s;
+
+    // ---- Reduce phase + oracle verification (all groups' oracles in
+    // one Map pass; per-group recomputation tripled verify cost).
+    let mut verified = true;
+    let mut max_abs_err = 0f64;
+    let oracles = workloads::native_reduce_oracle_all(job, q, n_sub);
+    for node in 0..k {
+        let payloads: Vec<&[u8]> = (0..n_sub)
+            .map(|sub| {
+                states[node]
+                    .get_full(IvId { group: node, sub })
+                    .ok_or_else(|| {
+                        HetcdcError::Shuffle(format!(
+                            "node {node} missing IV for subfile {sub}"
+                        ))
+                    })
+            })
+            .collect::<Result<_>>()?;
+        let out = backend.reduce_group(job, &payloads)?;
+        let oracle = &oracles[node];
+        for (a, b) in out.iter().zip(oracle) {
+            let err = (a - b).abs();
+            max_abs_err = max_abs_err.max(err);
+            // f32 accumulation tolerance, scaled to magnitude.
+            if err > 1e-2 + 1e-4 * b.abs() {
+                verified = false;
+            }
+        }
+    }
+
+    let load_equations =
+        outcome.payload_bytes as f64 / (job.iv_bytes() as f64 * alloc.sp as f64);
+    Ok(RunReport {
+        k,
+        n_files: job.n_files,
+        n_sub,
+        sp: alloc.sp,
+        placement: plan.placer.clone(),
+        coder: plan.coder.clone(),
+        mode: plan.mode,
+        backend: backend.name().to_string(),
+        seed: job.seed,
+        load_equations,
+        plan_equations: plan.predicted.load_equations,
+        payload_bytes: outcome.payload_bytes,
+        wire_bytes: outcome.wire_bytes,
+        messages: outcome.messages,
+        map_time_s,
+        shuffle_time_s,
+        job_time_s: map_time_s + shuffle_time_s,
+        verified,
+        max_abs_err,
+    })
 }
 
 /// Validate and store one node's Map output (shared by both Map paths).
@@ -341,7 +522,6 @@ mod tests {
     use crate::engine::backend::NativeBackend;
     use crate::engine::plan::JobBuilder;
     use crate::model::cluster::ClusterSpec;
-    use crate::model::job::JobSpec;
 
     fn cluster(storage: &[u64]) -> ClusterSpec {
         let mut c = ClusterSpec::homogeneous(storage.len(), 1, 1000.0);
@@ -367,6 +547,8 @@ mod tests {
             reports.push(r);
         }
         assert_eq!(exec.batches_run(), 3);
+        // One metering epoch per batch.
+        assert_eq!(exec.net_report().epoch, 3);
         for r in &reports {
             // Measured equals predicted, batch after batch.
             assert_eq!(r.load_equations, plan.predicted.load_equations);
@@ -428,5 +610,94 @@ mod tests {
             assert_eq!(r.shuffle_time_s.to_bits(), base.shuffle_time_s.to_bits());
             assert_eq!(reference.net_report(), exec.net_report(), "threads={threads}");
         }
+    }
+
+    #[test]
+    fn pipelined_batches_match_serial_bit_for_bit() {
+        let c = cluster(&[4, 8, 12]);
+        let mut job = JobSpec::terasort(12);
+        job.t = 8;
+        job.keys_per_file = 32;
+        let plan = JobBuilder::new(&c, &job).placer("optimal-k3").build().unwrap();
+        let mut be = NativeBackend;
+        let seeds: Vec<u64> = (0..4u64).map(|b| 0x51EDu64 + b).collect();
+
+        let mut serial = Executor::new(&plan).unwrap();
+        let rs = serial.run_batches(&mut be, &seeds).unwrap();
+        let mut pipelined = Executor::with_mode(&plan, ExecMode::Pipelined).unwrap();
+        pipelined.set_threads(2);
+        let rp = pipelined.run_batches(&mut be, &seeds).unwrap();
+
+        assert_eq!(rs.len(), seeds.len());
+        assert_eq!(rp.len(), seeds.len());
+        for (a, b) in rs.iter().zip(&rp) {
+            assert!(a.verified && b.verified);
+            assert_eq!(a.seed, b.seed);
+            assert_eq!(a.payload_bytes, b.payload_bytes);
+            assert_eq!(a.wire_bytes, b.wire_bytes);
+            assert_eq!(a.messages, b.messages);
+            assert_eq!(a.shuffle_time_s.to_bits(), b.shuffle_time_s.to_bits());
+            assert_eq!(a.max_abs_err.to_bits(), b.max_abs_err.to_bits());
+        }
+        assert_eq!(serial.batches_run(), pipelined.batches_run());
+        // Bit-exact NetReport of the final batch, including the epoch tag.
+        assert_eq!(serial.net_report(), pipelined.net_report());
+        assert_eq!(pipelined.net_report().epoch, seeds.len() as u64);
+        // Final post-shuffle state agrees at every (node, group, subfile).
+        let n_sub = plan.alloc.n_sub();
+        for node in 0..3 {
+            for g in 0..3 {
+                for sub in 0..n_sub {
+                    let iv = IvId { group: g, sub };
+                    assert_eq!(serial.iv(node, iv), pipelined.iv(node, iv), "node {node} {iv:?}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn pipelined_single_batch_and_empty_runs_degrade_cleanly() {
+        let c = cluster(&[6, 7, 7]);
+        let mut job = JobSpec::terasort(12);
+        job.t = 8;
+        job.keys_per_file = 32;
+        let plan = JobBuilder::new(&c, &job).build().unwrap();
+        let mut be = NativeBackend;
+        let mut exec = Executor::with_mode(&plan, ExecMode::Pipelined).unwrap();
+        assert!(exec.run_batches(&mut be, &[]).unwrap().is_empty());
+        let one = exec.run_batches(&mut be, &[9]).unwrap();
+        assert_eq!(one.len(), 1);
+        assert!(one[0].verified);
+        assert_eq!(exec.batches_run(), 1);
+    }
+
+    #[test]
+    fn pipelined_batches_alternate_epoch_banks_without_aliasing() {
+        // Two consecutive batches must never share one NodeState bank:
+        // the Map of batch i+1 writes the back bank while batch i drains
+        // the front, and a swap promotes back to front each batch.
+        let c = cluster(&[6, 7, 7]);
+        let mut job = JobSpec::terasort(12);
+        job.t = 8;
+        job.keys_per_file = 32;
+        let plan = JobBuilder::new(&c, &job).build().unwrap();
+        let mut be = NativeBackend;
+        let mut exec = Executor::with_mode(&plan, ExecMode::Pipelined).unwrap();
+        exec.set_threads(2);
+
+        // First pipelined run allocates both banks (one swap for 2 batches).
+        exec.run_batches(&mut be, &[10, 11]).unwrap();
+        let front0 = exec.states.as_ptr();
+        let back0 = exec.back.as_ptr();
+        assert_eq!(exec.back.len(), exec.states.len());
+        assert_ne!(front0, back0, "the two epoch banks must be distinct allocations");
+
+        // One more 2-batch run: exactly one more swap, so the banks have
+        // alternated — front is the old back and vice versa.
+        exec.run_batches(&mut be, &[12, 13]).unwrap();
+        assert_eq!(exec.states.as_ptr(), back0, "banks must alternate per batch");
+        assert_eq!(exec.back.as_ptr(), front0);
+        assert_eq!(exec.batches_run(), 4);
+        assert_eq!(exec.net_report().epoch, 4);
     }
 }

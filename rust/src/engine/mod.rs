@@ -3,7 +3,9 @@
 //! byte-exact load accounting and oracle-verified outputs.
 //!
 //! * [`plan`] — build and serialize validated execution plans.
-//! * [`executor`] — run many data batches against one plan.
+//! * [`executor`] — run many data batches against one plan: serial,
+//!   shard-parallel within a batch, or batch-pipelined (Map of batch
+//!   `i+1` overlapped with Shuffle of batch `i`), all bit-identical.
 //! * [`cache`] — [`PlanCache`], the heavy-traffic memo of built plans.
 //! * [`engine`] — [`Engine`], the one-shot facade, and [`RunReport`].
 //! * [`exec`] — byte-level shuffle execution primitives.

@@ -6,7 +6,9 @@
 //! schedule, and the predicted loads/times — so the expensive work
 //! (Theorem-1 construction or the §V LP, shuffle planning, symbolic
 //! decode verification) happens exactly once and is reused across data
-//! batches. Plans are immutable once built, validated at build time
+//! batches — serially, shard-parallel, or batch-pipelined: the plan is
+//! immutable and shared, so any number of in-flight batch epochs can
+//! replay its decode schedule concurrently. Plans are immutable once built, validated at build time
 //! (execution never re-verifies decodability), and serializable to JSON
 //! (`hetcdc plan` emits them; `hetcdc run --plan` consumes them; schema
 //! in DESIGN.md).

@@ -38,8 +38,12 @@
 //!   reusing every per-node buffer; [`engine::PlanCache`] memoizes plans
 //!   by (cluster shape, job shape, strategy) for the heavy-traffic path.
 //!   [`engine::ExecMode::Parallel`] shards per-node Map and decode across
-//!   scoped threads with **bit-identical** outputs and reports to serial
-//!   mode (DESIGN.md "Parallel execution model").
+//!   scoped threads, and [`engine::ExecMode::Pipelined`] additionally
+//!   overlaps the Map of batch `i+1` with the Shuffle of batch `i` on
+//!   double-buffered epoch banks ([`engine::Executor::run_batches`]) —
+//!   both with **bit-identical** outputs and reports to serial mode
+//!   (DESIGN.md "Parallel execution model" and "Pipelined execution
+//!   model").
 //! * [`engine::Engine`] is the one-shot facade when a single batch is all
 //!   you need.
 //!

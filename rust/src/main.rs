@@ -7,8 +7,10 @@
 //! * `plan`      — build a validated execution plan and emit it as JSON.
 //! * `run`       — execute a MapReduce job (native or XLA backend),
 //!                 either planning inline or consuming `--plan FILE`,
-//!                 for one or many data batches, serial or sharded
-//!                 across threads (`--threads`).
+//!                 for one or many data batches, serial, sharded across
+//!                 threads (`--threads`), or batch-pipelined
+//!                 (`--pipeline`: Map of batch i+1 overlaps Shuffle of
+//!                 batch i — bit-identical reports, higher batches/sec).
 //! * `bench-json`— deterministic shuffle/executor benchmark suite,
 //!                 emitted as `BENCH_shuffle.json` and optionally gated
 //!                 against a committed baseline (the CI bench-smoke job).
@@ -67,7 +69,7 @@ fn print_help() {
          \x20           build + verify an execution plan, emit JSON\n\
          \x20 run       --workload wordcount|terasort [--backend native|xla]\n\
          \x20           [--config cluster.json | --storage ...] [--mode coded|uncoded]\n\
-         \x20           [--plan plan.json] [--batches B] [--threads N]\n\
+         \x20           [--plan plan.json] [--batches B] [--threads N] [--pipeline]\n\
          \x20 bench-json [--out FILE] [--baseline FILE] [--tolerance-pct P]\n\
          \x20           deterministic shuffle bench suite -> BENCH_shuffle.json\n\
          \x20 sweep     --n N [--max-m M]            L* table over storage grid\n\
@@ -394,17 +396,44 @@ fn certify_parallel(plan: &Plan, threads: usize) -> Result<(), HetcdcError> {
 
 /// Execute `batches` data batches of one plan on one executor, with
 /// per-batch seeds derived from the plan's base seed. `threads` = 1 runs
-/// serial; anything else runs the sharded executor (0 = auto-detect).
+/// serial; anything else runs the sharded executor (0 = auto-detect,
+/// falling back to one worker when the host parallelism is unknown).
+/// `pipeline` selects the batch-pipelined mode: Map of batch `i+1`
+/// overlaps Shuffle of batch `i`, with bit-identical per-batch reports.
 fn run_batches(
     plan: &Plan,
     backend: &mut dyn MapBackend,
     batches: u64,
     threads: usize,
+    pipeline: bool,
     json_out: bool,
 ) -> Result<(), HetcdcError> {
-    let mode = if threads == 1 { ExecMode::Serial } else { ExecMode::Parallel };
+    let mode = if pipeline {
+        ExecMode::Pipelined
+    } else if threads == 1 {
+        ExecMode::Serial
+    } else {
+        ExecMode::Parallel
+    };
     let mut exec = Executor::with_mode(plan, mode)?;
     exec.set_threads(threads);
+    if mode == ExecMode::Pipelined {
+        // The pipeline consumes the whole seed list (batch i+1 Maps while
+        // batch i shuffles), so reports arrive together at the end.
+        let seeds: Vec<u64> = (0..batches)
+            .map(|b| plan.job.seed.wrapping_add(b))
+            .collect();
+        for report in exec.run_batches(backend, &seeds)? {
+            if !print_report(&report, json_out) {
+                return Err(HetcdcError::Backend(
+                    "output verification FAILED".into(),
+                ));
+            }
+        }
+        return Ok(());
+    }
+    // Serial/parallel: stream each report as its batch finishes and stop
+    // at the first verification failure.
     for batch in 0..batches {
         let report = exec.run_batch(backend, plan.job.seed.wrapping_add(batch))?;
         if !print_report(&report, json_out) {
@@ -424,7 +453,8 @@ fn cmd_run(argv: &[String]) -> i32 {
         ArgSpec { name: "config", help: "cluster JSON config path", takes_value: true, default: None },
         ArgSpec { name: "plan", help: "execute this serialized plan (skips inline planning)", takes_value: true, default: None },
         ArgSpec { name: "batches", help: "data batches to run against the plan", takes_value: true, default: Some("1") },
-        ArgSpec { name: "threads", help: "1 = serial; N > 1 = sharded executor with N workers; 0 = auto", takes_value: true, default: Some("1") },
+        ArgSpec { name: "threads", help: "1 = serial; N > 1 = sharded executor with N workers; 0 = auto (falls back to 1)", takes_value: true, default: Some("1") },
+        ArgSpec { name: "pipeline", help: "overlap Map of batch i+1 with Shuffle of batch i (bit-identical results; needs --batches >= 2 to overlap)", takes_value: false, default: None },
         ArgSpec { name: "mode", help: "coded | uncoded | both", takes_value: true, default: Some("both") },
         ArgSpec { name: "backend", help: "native | xla", takes_value: true, default: Some("native") },
         ArgSpec { name: "placement", help: "auto | optimal-k3 | lp-general | homogeneous | oblivious", takes_value: true, default: Some("auto") },
@@ -450,6 +480,7 @@ fn cmd_run(argv: &[String]) -> i32 {
         Ok(t) => t,
         Err(e) => return fail(e),
     };
+    let pipeline = args.flag("pipeline");
 
     let mut rt_holder: Option<Runtime> = None;
     if args.get("backend") == Some("xla") {
@@ -485,11 +516,11 @@ fn cmd_run(argv: &[String]) -> i32 {
         let result = match rt_holder.as_mut() {
             Some(rt) => {
                 let mut be = XlaBackend::new(rt);
-                run_batches(&plan, &mut be, batches, threads, json_out)
+                run_batches(&plan, &mut be, batches, threads, pipeline, json_out)
             }
             None => {
                 let mut be = NativeBackend;
-                run_batches(&plan, &mut be, batches, threads, json_out)
+                run_batches(&plan, &mut be, batches, threads, pipeline, json_out)
             }
         };
         return match result {
@@ -522,11 +553,11 @@ fn cmd_run(argv: &[String]) -> i32 {
         let result = match rt_holder.as_mut() {
             Some(rt) => {
                 let mut be = XlaBackend::new(rt);
-                run_batches(&plan, &mut be, batches, threads, json_out)
+                run_batches(&plan, &mut be, batches, threads, pipeline, json_out)
             }
             None => {
                 let mut be = NativeBackend;
-                run_batches(&plan, &mut be, batches, threads, json_out)
+                run_batches(&plan, &mut be, batches, threads, pipeline, json_out)
             }
         };
         if let Err(e) = result {
@@ -639,10 +670,29 @@ fn cmd_bench_json(argv: &[String]) -> i32 {
                 println!("baseline gate PASSED (tolerance {tolerance}%)");
             }
             BaselineStatus::Pending => {
+                // A pending baseline means the regression gate protects
+                // NOTHING — say so loudly (stdout keeps the stable
+                // "PENDING" line; stderr carries the warning so it
+                // survives output filtering; CI gets an annotation).
                 println!(
                     "baseline gate PENDING: no blessed baseline yet — commit {out} as the \
                      baseline to arm the gate"
                 );
+                eprintln!(
+                    "WARNING: the shuffle-byte regression gate is DISARMED (baseline '{path}' \
+                     has no scenarios)."
+                );
+                eprintln!(
+                    "WARNING: bless a generated artifact to arm it: \
+                     cargo run --release -- bench-json --out BENCH_shuffle.json"
+                );
+                if std::env::var_os("GITHUB_ACTIONS").is_some() {
+                    println!(
+                        "::warning title=bench baseline pending::BENCH_shuffle.json has no \
+                         blessed scenarios; the >{tolerance}% shuffle-byte regression gate is \
+                         disarmed. Bless the generated artifact from this run."
+                    );
+                }
             }
             BaselineStatus::Regression => {
                 eprintln!("error: baseline gate FAILED (tolerance {tolerance}%)");

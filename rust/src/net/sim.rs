@@ -33,6 +33,13 @@ pub struct PhaseLedger {
     bytes_by_node: Vec<u64>,
     msgs_by_node: Vec<u64>,
     clock_s: f64,
+    /// Batch epoch this ledger is accounting: bumped by every
+    /// [`PhaseLedger::reset`], so a report is unambiguously tagged with
+    /// the batch it measured. The pipelined executor keeps two node-state
+    /// epochs in flight but meters exactly one batch at a time; the tag
+    /// lets tests assert a report belongs to batch N (`epoch == N` after
+    /// N resets) and that no two batches share one metering pass.
+    epoch: u64,
 }
 
 impl PhaseLedger {
@@ -41,6 +48,7 @@ impl PhaseLedger {
             bytes_by_node: vec![0; k],
             msgs_by_node: vec![0; k],
             clock_s: 0.0,
+            epoch: 0,
         }
     }
 
@@ -57,6 +65,11 @@ impl PhaseLedger {
         self.clock_s
     }
 
+    /// Batch epoch of the current accounting (number of resets so far).
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
+
     pub fn report(&self) -> NetReport {
         NetReport {
             bytes_by_node: self.bytes_by_node.clone(),
@@ -64,13 +77,17 @@ impl PhaseLedger {
             total_bytes: self.bytes_by_node.iter().sum(),
             total_msgs: self.msgs_by_node.iter().sum(),
             elapsed_s: self.clock_s,
+            epoch: self.epoch,
         }
     }
 
+    /// Start accounting the next batch: zero the counters, bump the epoch
+    /// tag. O(k), no allocation.
     pub fn reset(&mut self) {
         self.bytes_by_node.iter_mut().for_each(|b| *b = 0);
         self.msgs_by_node.iter_mut().for_each(|m| *m = 0);
         self.clock_s = 0.0;
+        self.epoch += 1;
     }
 }
 
@@ -94,6 +111,10 @@ pub struct NetReport {
     pub total_msgs: u64,
     /// Virtual wall-clock of the serialized broadcast schedule.
     pub elapsed_s: f64,
+    /// Batch epoch tag (ledger resets so far): after N batches through
+    /// one executor this is N, in every execution mode — equality checks
+    /// across modes therefore also prove both metered the same batch.
+    pub epoch: u64,
 }
 
 impl BroadcastNet {
@@ -201,6 +222,21 @@ mod tests {
         let r = net.report();
         assert_eq!(r.total_bytes, 0);
         assert_eq!(r.elapsed_s, 0.0);
+        assert_eq!(r.epoch, 1);
+    }
+
+    #[test]
+    fn reset_tags_each_batch_epoch() {
+        let mut net = BroadcastNet::homogeneous(2, 1e6, 0.0).unwrap();
+        assert_eq!(net.report().epoch, 0);
+        for batch in 1u64..=3 {
+            net.reset();
+            net.broadcast(0, 10);
+            let r = net.report();
+            assert_eq!(r.epoch, batch);
+            assert_eq!(net.ledger().epoch(), batch);
+            assert_eq!(r.total_bytes, 10, "counters restart every epoch");
+        }
     }
 
     #[test]

@@ -238,6 +238,62 @@ fn run_threads_knob_reproduces_serial_loads() {
 }
 
 #[test]
+fn run_threads_auto_falls_back_cleanly() {
+    // --threads 0 = auto-detect. Auto must never error: when the host's
+    // parallelism cannot be queried the executor degrades to one worker,
+    // and either way the results equal the serial reference.
+    let (code, stdout, stderr) = hetcdc(&[
+        "run", "--workload", "terasort", "--n", "12", "--storage", "6,7,7",
+        "--mode", "coded", "--backend", "native", "--json", "--threads", "0",
+    ]);
+    assert_eq!(code, 0, "--threads 0 must not error\n{stdout}\n{stderr}");
+    let line = stdout.lines().find(|l| l.starts_with('{')).expect("json line");
+    let j = hetcdc::util::json::Json::parse(line).expect("valid json");
+    assert_eq!(j.get("load_equations").and_then(|v| v.as_f64()), Some(12.0));
+    assert_eq!(j.get("verified"), Some(&hetcdc::util::json::Json::Bool(true)));
+}
+
+#[test]
+fn run_pipeline_matches_serial_batches() {
+    // --pipeline overlaps Map of batch i+1 with Shuffle of batch i; the
+    // per-batch JSON reports must be bit-identical to the serial run on
+    // every deterministic field.
+    let serial = hetcdc(&[
+        "run", "--workload", "terasort", "--n", "12", "--storage", "6,7,7",
+        "--mode", "coded", "--backend", "native", "--json", "--batches", "3",
+    ]);
+    let piped = hetcdc(&[
+        "run", "--workload", "terasort", "--n", "12", "--storage", "6,7,7",
+        "--mode", "coded", "--backend", "native", "--json", "--batches", "3",
+        "--pipeline",
+    ]);
+    assert_eq!(serial.0, 0, "{}\n{}", serial.1, serial.2);
+    assert_eq!(piped.0, 0, "{}\n{}", piped.1, piped.2);
+    let reports = |out: &str| -> Vec<hetcdc::util::json::Json> {
+        out.lines()
+            .filter(|l| l.starts_with('{'))
+            .map(|l| hetcdc::util::json::Json::parse(l).expect("report json"))
+            .collect()
+    };
+    let (a, b) = (reports(&serial.1), reports(&piped.1));
+    assert_eq!(a.len(), 3, "{}", serial.1);
+    assert_eq!(b.len(), 3, "{}", piped.1);
+    for (batch, (ra, rb)) in a.iter().zip(&b).enumerate() {
+        assert_eq!(rb.get("verified"), Some(&hetcdc::util::json::Json::Bool(true)));
+        for field in [
+            "seed", "load_equations", "payload_bytes", "wire_bytes", "messages",
+            "map_time_s", "shuffle_time_s", "max_abs_err",
+        ] {
+            assert_eq!(
+                ra.get(field),
+                rb.get(field),
+                "field {field} differs in batch {batch} under --pipeline"
+            );
+        }
+    }
+}
+
+#[test]
 fn plan_with_threads_certifies_parallel_execution() {
     let (code, stdout, stderr) = hetcdc(&[
         "plan", "--workload", "terasort", "--n", "12", "--storage", "6,7,7",
@@ -288,15 +344,20 @@ fn bench_json_emits_deterministic_artifact_and_self_compares() {
     assert_eq!(code, 1, "{stdout}\n{stderr}");
     assert!(stderr.contains("baseline gate FAILED"), "{stderr}");
 
-    // A pending (empty) baseline disarms the gate instead of failing.
+    // A pending (empty) baseline disarms the gate instead of failing —
+    // but loudly: an explicit stderr warning, never a silent pass.
     let pending = dir.join("baseline_pending.json");
     std::fs::write(&pending, r#"{"schema": 1, "scenarios": []}"#).unwrap();
-    let (code, stdout, _) = hetcdc(&[
+    let (code, stdout, stderr) = hetcdc(&[
         "bench-json", "--out", out2.to_str().unwrap(),
         "--baseline", pending.to_str().unwrap(),
     ]);
     assert_eq!(code, 0, "{stdout}");
     assert!(stdout.contains("baseline gate PENDING"), "{stdout}");
+    assert!(
+        stderr.contains("WARNING") && stderr.contains("DISARMED"),
+        "pending baseline must warn explicitly, got: {stderr}"
+    );
 
     std::fs::remove_dir_all(&dir).ok();
 }

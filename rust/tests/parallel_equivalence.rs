@@ -1,11 +1,16 @@
-//! Serial-vs-parallel executor equivalence: for every `Placer` ×
-//! `ShuffleCoder` combination that builds a `Plan` at K = 3..6 (plus the
-//! uncoded mode), a parallel batch must be **bit-identical** to a serial
-//! one — same `RunReport` numbers, same `NetReport` (including the float
-//! clock, bit for bit), and same decoded IV bytes at every node.
+//! Three-way executor equivalence — serial / parallel / pipelined: for
+//! every `Placer` × `ShuffleCoder` combination that builds a `Plan` at
+//! K = 3..6 (plus the uncoded mode), multi-batch runs in all three
+//! `ExecMode`s must be **bit-identical**, batch by batch — same
+//! `RunReport` numbers, same `NetReport` (including the float clock and
+//! the batch-epoch tag, bit for bit), and same decoded IV bytes at every
+//! node after the final batch.
 //!
-//! This is the acceptance gate of the sharded executor: parallelism may
-//! only change wall-clock, never a single output bit.
+//! This is the acceptance gate of the sharded and pipelined executors:
+//! parallelism and batch pipelining may only change wall-clock, never a
+//! single output bit. Batch counts are drawn deterministically from
+//! 1..=8 per combination (see `prop::Gen`), so the sweep also exercises
+//! the pipeline's fill/drain edges (1 batch = nothing to overlap).
 
 use hetcdc::coding::builtin_coders;
 use hetcdc::coding::plan::IvId;
@@ -13,6 +18,7 @@ use hetcdc::engine::{ExecMode, Executor, JobBuilder, NativeBackend, Plan, RunRep
 use hetcdc::model::cluster::ClusterSpec;
 use hetcdc::model::job::{JobSpec, ShuffleMode};
 use hetcdc::placement::builtin_placers;
+use hetcdc::prop::Gen;
 
 fn cluster(storage: &[u64]) -> ClusterSpec {
     let mut c = ClusterSpec::homogeneous(storage.len(), 1, 1000.0);
@@ -79,29 +85,56 @@ fn assert_reports_identical(a: &RunReport, b: &RunReport, ctx: &str) {
     );
 }
 
-/// Run one plan in both modes and diff everything observable.
-fn check_plan(plan: &Plan, threads: usize, ctx: &str) {
+/// Run `batches` batches of one plan in all three modes and diff
+/// everything observable, batch by batch.
+fn check_plan(plan: &Plan, threads: usize, batches: usize, ctx: &str) {
     let mut be = NativeBackend;
-    let seed = plan.job.seed ^ 0xA5A5;
+    let seeds: Vec<u64> = (0..batches as u64)
+        .map(|b| plan.job.seed ^ 0xA5A5 ^ (b << 8))
+        .collect();
+
     let mut serial = Executor::new(plan).unwrap();
-    let ra = serial.run_batch(&mut be, seed).unwrap();
+    assert_eq!(serial.mode().as_str(), "serial");
+    let rs = serial.run_batches(&mut be, &seeds).unwrap();
+
     let mut parallel = Executor::with_mode(plan, ExecMode::Parallel).unwrap();
     parallel.set_threads(threads);
     assert_eq!(parallel.mode(), ExecMode::Parallel);
     assert_eq!(parallel.mode().as_str(), "parallel");
-    assert_eq!(serial.mode().as_str(), "serial");
-    let rb = parallel.run_batch(&mut be, seed).unwrap();
+    let rp = parallel.run_batches(&mut be, &seeds).unwrap();
 
-    assert!(ra.verified, "{ctx}: serial batch failed verification");
-    assert_reports_identical(&ra, &rb, ctx);
+    let mut pipelined = Executor::with_mode(plan, ExecMode::Pipelined).unwrap();
+    pipelined.set_threads(threads);
+    assert_eq!(pipelined.mode().as_str(), "pipelined");
+    let rq = pipelined.run_batches(&mut be, &seeds).unwrap();
+
+    assert_eq!(rs.len(), batches, "{ctx}: serial batch count");
+    assert_eq!(rp.len(), batches, "{ctx}: parallel batch count");
+    assert_eq!(rq.len(), batches, "{ctx}: pipelined batch count");
+    for b in 0..batches {
+        assert!(rs[b].verified, "{ctx}: serial batch {b} failed verification");
+        assert_reports_identical(&rs[b], &rp[b], &format!("{ctx} [parallel batch {b}]"));
+        assert_reports_identical(&rs[b], &rq[b], &format!("{ctx} [pipelined batch {b}]"));
+    }
+    for (exec, mode) in [(&serial, "serial"), (&parallel, "parallel"), (&pipelined, "pipelined")] {
+        assert_eq!(exec.batches_run(), batches as u64, "{ctx}: {mode} batches_run");
+        // One metering epoch per batch, in every mode.
+        assert_eq!(exec.net_report().epoch, batches as u64, "{ctx}: {mode} ledger epoch");
+    }
     assert_eq!(
         serial.net_report(),
         parallel.net_report(),
-        "{ctx}: NetReport (bit-exact, including the clock)"
+        "{ctx}: parallel NetReport (bit-exact, including the clock)"
+    );
+    assert_eq!(
+        serial.net_report(),
+        pipelined.net_report(),
+        "{ctx}: pipelined NetReport (bit-exact, including the clock)"
     );
 
-    // Complete post-shuffle state: every (node, group, subfile) IV slot
-    // agrees — both the bytes and the known/unknown status.
+    // Complete post-shuffle state of the final batch: every (node,
+    // group, subfile) IV slot agrees — both the bytes and the
+    // known/unknown status — across all three modes.
     let k = plan.cluster.k();
     let n_sub = plan.alloc.n_sub();
     for node in 0..k {
@@ -111,7 +144,12 @@ fn check_plan(plan: &Plan, threads: usize, ctx: &str) {
                 assert_eq!(
                     serial.iv(node, iv),
                     parallel.iv(node, iv),
-                    "{ctx}: node {node} {iv:?}"
+                    "{ctx}: parallel node {node} {iv:?}"
+                );
+                assert_eq!(
+                    serial.iv(node, iv),
+                    pipelined.iv(node, iv),
+                    "{ctx}: pipelined node {node} {iv:?}"
                 );
             }
         }
@@ -120,6 +158,10 @@ fn check_plan(plan: &Plan, threads: usize, ctx: &str) {
 
 #[test]
 fn every_placer_coder_combo_is_mode_equivalent_k3_to_6() {
+    // Deterministic per-combination batch counts over the full 1..=8
+    // range: the property sweep covers single-batch (no overlap), the
+    // two-batch minimum pipeline, and longer steady-state runs.
+    let mut batch_gen = Gen::new(0xB47C_11FE);
     for (storage, n) in shapes() {
         let cl = cluster(&storage);
         let job = small_job(n);
@@ -138,13 +180,14 @@ fn every_placer_coder_combo_is_mode_equivalent_k3_to_6() {
                     Ok(p) => p,
                     Err(_) => continue, // combo rejects this shape
                 };
+                let batches = batch_gen.usize_in(1..=8);
                 let ctx = format!(
-                    "K={} storage={storage:?} {} x {}",
+                    "K={} storage={storage:?} {} x {} batches={batches}",
                     cl.k(),
                     placer.name(),
                     coder.name()
                 );
-                check_plan(&plan, 3, &ctx);
+                check_plan(&plan, 3, batches, &ctx);
             }
             // The uncoded baseline must be mode-equivalent too.
             let plan = JobBuilder::new(&cl, &job)
@@ -152,8 +195,13 @@ fn every_placer_coder_combo_is_mode_equivalent_k3_to_6() {
                 .mode(ShuffleMode::Uncoded)
                 .build()
                 .unwrap();
-            let ctx = format!("K={} storage={storage:?} {} x uncoded", cl.k(), placer.name());
-            check_plan(&plan, 3, &ctx);
+            let batches = batch_gen.usize_in(1..=8);
+            let ctx = format!(
+                "K={} storage={storage:?} {} x uncoded batches={batches}",
+                cl.k(),
+                placer.name()
+            );
+            check_plan(&plan, 3, batches, &ctx);
         }
     }
 }
@@ -164,7 +212,7 @@ fn equivalence_holds_for_every_thread_count() {
     let job = small_job(12);
     let plan = JobBuilder::new(&cl, &job).placer("optimal-k3").build().unwrap();
     for threads in [0usize, 1, 2, 3, 7, 64] {
-        check_plan(&plan, threads, &format!("threads={threads}"));
+        check_plan(&plan, threads, 3, &format!("threads={threads}"));
     }
 }
 
@@ -189,4 +237,31 @@ fn parallel_batches_still_match_plan_predictions() {
         );
     }
     assert_eq!(exec.batches_run(), 3);
+}
+
+#[test]
+fn pipelined_batches_still_match_plan_predictions() {
+    // ... and survives batch pipelining: every overlapped batch still
+    // reproduces the plan's predictions exactly.
+    let cl = cluster(&[3, 4, 5, 6, 7]);
+    let job = small_job(10);
+    let plan = JobBuilder::new(&cl, &job).build().unwrap();
+    let mut be = NativeBackend;
+    let mut exec = Executor::with_mode(&plan, ExecMode::Pipelined).unwrap();
+    let seeds: Vec<u64> = (0..4u64).map(|b| job.seed + b).collect();
+    let reports = exec.run_batches(&mut be, &seeds).unwrap();
+    assert_eq!(reports.len(), 4);
+    for r in &reports {
+        assert!(r.verified);
+        assert_eq!(r.payload_bytes, plan.predicted.payload_bytes);
+        assert_eq!(r.wire_bytes, plan.predicted.wire_bytes);
+        assert_eq!(r.messages, plan.predicted.messages);
+        assert_eq!(
+            r.shuffle_time_s.to_bits(),
+            plan.predicted.shuffle_time_s.to_bits()
+        );
+        assert_eq!(r.map_time_s.to_bits(), plan.predicted.map_time_s.to_bits());
+    }
+    assert_eq!(exec.batches_run(), 4);
+    assert_eq!(exec.net_report().epoch, 4);
 }
