@@ -306,7 +306,8 @@ fn main() {
         let plan = cache
             .get_or_build(&cluster, jb, "optimal-k3", None, ShuffleMode::Coded)
             .expect("cached plan");
-        let r = Executor::new(&plan).expect("executor").run_batch(&mut be, batch_seed).expect("run");
+        let mut exec = Executor::new(&plan).expect("executor");
+        let r = exec.run_batch(&mut be, batch_seed).expect("run");
         assert!(r.verified);
         r.payload_bytes
     });

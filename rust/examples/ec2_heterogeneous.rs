@@ -75,7 +75,14 @@ fn main() {
         let names: Vec<String> = cluster
             .nodes
             .iter()
-            .map(|nd| format!("{}:{}", nd.name.trim_start_matches("m4.").trim_start_matches("c4.").trim_start_matches("r4."), nd.storage))
+            .map(|nd| {
+                let short = nd
+                    .name
+                    .trim_start_matches("m4.")
+                    .trim_start_matches("c4.")
+                    .trim_start_matches("r4.");
+                format!("{}:{}", short, nd.storage)
+            })
             .collect();
         println!(
             "{:<3} {:<38} {:>9.2} {:>9.1} {:>10.2} {:>10.4} {:>8.0}%",

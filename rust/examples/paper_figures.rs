@@ -60,7 +60,9 @@ fn main() {
     // ---- Figs 5-11 subset cardinalities.
     println!("\nFigs 5–11 — subset cardinalities of the optimal placements");
     println!("(subfile units = 2x files; sorted storage):");
-    for (m1, m2, m3) in [(4u64, 5, 6), (4, 5, 5), (8, 8, 8), (2, 3, 12), (5, 8, 11), (10, 10, 10), (5, 11, 11)] {
+    let fig_cases =
+        [(4u64, 5, 6), (4, 5, 5), (8, 8, 8), (2, 3, 12), (5, 8, 11), (10, 10, 10), (5, 11, 11)];
+    for (m1, m2, m3) in fig_cases {
         let pp = Params3::new(m1, m2, m3, 12).unwrap();
         if pp.n != 12 {
             continue;
@@ -75,7 +77,8 @@ fn main() {
 
     // ---- Converse (§IV).
     println!("\n§IV converse — L* equals the best of the four bounds everywhere:");
-    for (m1, m2, m3, n) in [(6u64, 7, 7, 12u64), (2, 3, 12, 12), (5, 11, 11, 12), (10, 10, 10, 12)] {
+    let converse_cases = [(6u64, 7, 7, 12u64), (2, 3, 12, 12), (5, 11, 11, 12), (10, 10, 10, 12)];
+    for (m1, m2, m3, n) in converse_cases {
         let pp = Params3::new(m1, m2, m3, n).unwrap();
         let b = converse::bounds_half(&pp);
         println!(

@@ -19,8 +19,16 @@ fn main() {
     let p = cluster.params3(n_files).expect("valid parameters");
 
     println!("cluster storage (M1,M2,M3) = {:?}, files N = {n_files}", cluster.storage());
-    println!("Theorem 1: regime {}, minimum load L* = {} IV equations", load::classify(&p), load::lstar(&p));
-    println!("uncoded baseline: {} -> saving {:.0}%\n", load::uncoded(&p), 100.0 * load::saving(&p) / load::uncoded(&p));
+    println!(
+        "Theorem 1: regime {}, minimum load L* = {} IV equations",
+        load::classify(&p),
+        load::lstar(&p)
+    );
+    println!(
+        "uncoded baseline: {} -> saving {:.0}%\n",
+        load::uncoded(&p),
+        100.0 * load::saving(&p) / load::uncoded(&p)
+    );
 
     // Stage 1+2: JobBuilder -> Plan. Everything that depends only on
     // cluster/job shape (Theorem-1 placement, the XOR shuffle schedule,
@@ -33,7 +41,11 @@ fn main() {
         .expect("plan build");
     println!(
         "plan: placer={} coder={} predicted load {} IV equations, {} broadcasts (fingerprint {:016x})",
-        plan.placer, plan.coder, plan.predicted.load_equations, plan.predicted.messages, plan.fingerprint
+        plan.placer,
+        plan.coder,
+        plan.predicted.load_equations,
+        plan.predicted.messages,
+        plan.fingerprint
     );
 
     // Stage 3: Executor — many data batches, one plan, reused buffers.

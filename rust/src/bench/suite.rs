@@ -37,26 +37,42 @@ pub struct Scenario {
     pub workload: WorkloadKind,
     /// Placer registry name (`"auto"` resolves by K).
     pub placer: &'static str,
+    /// Coder registry name; `None` uses the placer's default.
+    pub coder: Option<&'static str>,
     pub mode: ShuffleMode,
 }
 
-/// The committed suite: K ∈ {3, 5, 8} heterogeneous clusters, coded and
-/// uncoded, TeraSort plus a WordCount point. Order and names are stable —
-/// the baseline comparison keys on `name`. K=3 uses Theorem 1, K=5 the
-/// §V LP; K=8 uses the storage-oblivious memory-sharing placement (the
-/// LP's perfect-collection enumeration is combinatorial in K — kept out
-/// of the smoke path; see ROADMAP "Cascaded / larger-K regimes").
+/// The committed suite: K ∈ {3, 5, 8, 12, 16} heterogeneous clusters,
+/// coded and uncoded, TeraSort plus a WordCount point. Order and names
+/// are stable — the baseline comparison keys on `name`. K=3 uses
+/// Theorem 1, K=5 the §V LP; K=8 runs three ways — the storage-oblivious
+/// memory-sharing placement (the LP's perfect-collection enumeration is
+/// combinatorial in K — kept out of the smoke path), the combinatorial
+/// grid with its own coder, and the *same grid placement* under greedy
+/// pairing, so the grid coder's gain over pairwise XOR is **measured**
+/// in the committed artifact, not asserted. K ∈ {12, 16} extend the
+/// combinatorial design into the larger-K cascaded regime.
+#[rustfmt::skip]
 pub fn default_suite() -> Vec<Scenario> {
     use ShuffleMode::{Coded, Uncoded};
     use WorkloadKind::{TeraSort, WordCount};
     vec![
-        Scenario { name: "k3-terasort-coded", storage: &[6, 7, 7], n_files: 12, workload: TeraSort, placer: "auto", mode: Coded },
-        Scenario { name: "k3-terasort-uncoded", storage: &[6, 7, 7], n_files: 12, workload: TeraSort, placer: "auto", mode: Uncoded },
-        Scenario { name: "k3-wordcount-coded", storage: &[4, 8, 12], n_files: 12, workload: WordCount, placer: "auto", mode: Coded },
-        Scenario { name: "k5-terasort-coded", storage: &[3, 4, 5, 6, 7], n_files: 10, workload: TeraSort, placer: "auto", mode: Coded },
-        Scenario { name: "k5-terasort-uncoded", storage: &[3, 4, 5, 6, 7], n_files: 10, workload: TeraSort, placer: "auto", mode: Uncoded },
-        Scenario { name: "k8-terasort-coded", storage: &[2, 3, 3, 4, 4, 5, 5, 6], n_files: 8, workload: TeraSort, placer: "oblivious", mode: Coded },
-        Scenario { name: "k8-terasort-uncoded", storage: &[2, 3, 3, 4, 4, 5, 5, 6], n_files: 8, workload: TeraSort, placer: "oblivious", mode: Uncoded },
+        Scenario { name: "k3-terasort-coded", storage: &[6, 7, 7], n_files: 12, workload: TeraSort, placer: "auto", coder: None, mode: Coded },
+        Scenario { name: "k3-terasort-uncoded", storage: &[6, 7, 7], n_files: 12, workload: TeraSort, placer: "auto", coder: None, mode: Uncoded },
+        Scenario { name: "k3-wordcount-coded", storage: &[4, 8, 12], n_files: 12, workload: WordCount, placer: "auto", coder: None, mode: Coded },
+        Scenario { name: "k5-terasort-coded", storage: &[3, 4, 5, 6, 7], n_files: 10, workload: TeraSort, placer: "auto", coder: None, mode: Coded },
+        Scenario { name: "k5-terasort-uncoded", storage: &[3, 4, 5, 6, 7], n_files: 10, workload: TeraSort, placer: "auto", coder: None, mode: Uncoded },
+        Scenario { name: "k8-terasort-coded", storage: &[2, 3, 3, 4, 4, 5, 5, 6], n_files: 8, workload: TeraSort, placer: "oblivious", coder: None, mode: Coded },
+        Scenario { name: "k8-terasort-uncoded", storage: &[2, 3, 3, 4, 4, 5, 5, 6], n_files: 8, workload: TeraSort, placer: "oblivious", coder: None, mode: Uncoded },
+        // Combinatorial grid design (q=2, r=4: gain 3) vs greedy pairing
+        // (gain <= 2) on the identical placement — the measured coding
+        // gain the acceptance gate checks.
+        Scenario { name: "k8-terasort-combinatorial", storage: &[4, 4, 5, 5, 6, 6, 7, 7], n_files: 8, workload: TeraSort, placer: "combinatorial", coder: None, mode: Coded },
+        Scenario { name: "k8-terasort-grid-greedy", storage: &[4, 4, 5, 5, 6, 6, 7, 7], n_files: 8, workload: TeraSort, placer: "combinatorial", coder: Some("greedy"), mode: Coded },
+        // Larger-K combinatorial regimes: K=12 (q=3, r=4) and K=16
+        // (q=2, r=8) — shapes no enumeration-based coder reaches.
+        Scenario { name: "k12-terasort-combinatorial", storage: &[4, 4, 4, 5, 5, 5, 6, 6, 6, 7, 7, 7], n_files: 12, workload: TeraSort, placer: "combinatorial", coder: None, mode: Coded },
+        Scenario { name: "k16-terasort-combinatorial", storage: &[8, 8, 9, 9, 10, 10, 11, 11, 8, 8, 9, 9, 10, 10, 11, 11], n_files: 16, workload: TeraSort, placer: "combinatorial", coder: None, mode: Coded },
     ]
 }
 
@@ -109,6 +125,9 @@ pub struct ScenarioResult {
     pub mode: &'static str,
     pub sp: u32,
     pub messages: u64,
+    /// Shuffle rounds of the plan's IR — gated against the baseline so a
+    /// coder silently degrading to one giant round fails loudly.
+    pub rounds: u64,
     pub payload_bytes: u64,
     pub wire_bytes: u64,
     pub load_equations: f64,
@@ -142,6 +161,7 @@ impl ScenarioResult {
         m.insert("mode".into(), Json::Str(self.mode.into()));
         m.insert("sp".into(), Json::Num(self.sp as f64));
         m.insert("messages".into(), Json::Num(self.messages as f64));
+        m.insert("rounds".into(), Json::Num(self.rounds as f64));
         m.insert("payload_bytes".into(), Json::Num(self.payload_bytes as f64));
         m.insert("wire_bytes".into(), Json::Num(self.wire_bytes as f64));
         m.insert("load_equations".into(), Json::Num(self.load_equations));
@@ -181,10 +201,11 @@ pub fn run_scenario(
 ) -> Result<ScenarioResult> {
     let cluster = sc.cluster();
     let job = sc.job();
-    let plan = JobBuilder::new(&cluster, &job)
-        .placer(sc.placer)
-        .mode(sc.mode)
-        .build()?;
+    let mut builder = JobBuilder::new(&cluster, &job).placer(sc.placer).mode(sc.mode);
+    if let Some(coder) = sc.coder {
+        builder = builder.coder(coder);
+    }
+    let plan = builder.build()?;
 
     let mut be = NativeBackend;
     let mut serial = Executor::new(&plan)?;
@@ -301,6 +322,7 @@ pub fn run_scenario(
         mode: sc.mode.as_str(),
         sp: plan.alloc.sp,
         messages: r_serial.messages,
+        rounds: plan.shuffle.round_count() as u64,
         payload_bytes: r_serial.payload_bytes,
         wire_bytes: r_serial.wire_bytes,
         load_equations: r_serial.load_equations,
@@ -407,9 +429,13 @@ fn num_at(j: &Json, path: &[&str]) -> Option<f64> {
 /// Compare a freshly generated suite artifact against a committed
 /// baseline. The gate: total payload bytes and total wire bytes may not
 /// exceed the baseline by more than `tolerance_pct`; every baseline
-/// scenario must still exist, and none of them may individually regress
-/// beyond tolerance. Improvements and new scenarios are notes, not
-/// failures (re-bless the baseline to tighten the gate).
+/// scenario must still exist, none of them may individually regress
+/// beyond tolerance, and each scenario's shuffle **round count** must
+/// match the baseline exactly — an IR regression (e.g. a coder silently
+/// collapsing its multi-round schedule into one giant round) changes the
+/// round count even when the byte totals survive, and must fail loudly.
+/// Improvements and new scenarios are notes, not failures (re-bless the
+/// baseline to tighten the gate).
 pub fn compare_to_baseline(current: &Json, baseline: &Json, tolerance_pct: f64) -> Comparison {
     let mut notes = Vec::new();
     let mut status = BaselineStatus::Pass;
@@ -466,35 +492,64 @@ pub fn compare_to_baseline(current: &Json, baseline: &Json, tolerance_pct: f64) 
     }
 
     let cur_scenarios = current.get("scenarios").and_then(|s| s.as_arr()).unwrap_or(empty);
-    fn by_name(list: &[Json]) -> BTreeMap<String, f64> {
+    /// name -> (payload_bytes, rounds if recorded).
+    fn by_name(list: &[Json]) -> BTreeMap<String, (f64, Option<f64>)> {
         list.iter()
             .filter_map(|s| {
                 Some((
                     s.get("name")?.as_str()?.to_string(),
-                    s.get("payload_bytes")?.as_f64()?,
+                    (
+                        s.get("payload_bytes")?.as_f64()?,
+                        s.get("rounds").and_then(|r| r.as_f64()),
+                    ),
                 ))
             })
             .collect()
     }
     let cur_map = by_name(cur_scenarios);
     let base_map = by_name(base_scenarios);
-    for (name, base_payload) in &base_map {
+    for (name, (base_payload, base_rounds)) in &base_map {
         match cur_map.get(name) {
             None => {
                 notes.push(format!("scenario '{name}' disappeared (coverage lost)"));
                 status = BaselineStatus::Regression;
             }
-            Some(cur_payload) if *base_payload > 0.0 => {
-                let ratio = cur_payload / base_payload;
-                if ratio > 1.0 + tol {
-                    notes.push(format!(
-                        "scenario '{name}' payload regressed {:+.2}% ({base_payload:.0} -> {cur_payload:.0})",
-                        100.0 * (ratio - 1.0)
-                    ));
-                    status = BaselineStatus::Regression;
+            Some((cur_payload, cur_rounds)) => {
+                if *base_payload > 0.0 {
+                    let ratio = cur_payload / base_payload;
+                    if ratio > 1.0 + tol {
+                        notes.push(format!(
+                            "scenario '{name}' payload regressed {:+.2}% ({base_payload:.0} -> {cur_payload:.0})",
+                            100.0 * (ratio - 1.0)
+                        ));
+                        status = BaselineStatus::Regression;
+                    }
+                }
+                // Round-count drift is exact: the IR is deterministic, so
+                // any change is a structural coder change — re-bless
+                // deliberately or fix the regression. The skip is
+                // asymmetric: a baseline predating the rounds field
+                // records none (skip), but a *current* artifact missing
+                // rounds that the baseline does record means the gate
+                // itself lost its input — that must fail, not disarm.
+                match (base_rounds, cur_rounds) {
+                    (Some(b), Some(c)) if b != c => {
+                        notes.push(format!(
+                            "scenario '{name}' shuffle round count changed {b:.0} -> {c:.0} \
+                             (IR regression or deliberate coder change: re-bless if intended)"
+                        ));
+                        status = BaselineStatus::Regression;
+                    }
+                    (Some(b), None) => {
+                        notes.push(format!(
+                            "scenario '{name}' no longer records its shuffle round count \
+                             (baseline has {b:.0}): the IR gate lost its input"
+                        ));
+                        status = BaselineStatus::Regression;
+                    }
+                    _ => {}
                 }
             }
-            Some(_) => {}
         }
     }
     for name in cur_map.keys() {
@@ -509,17 +564,26 @@ pub fn compare_to_baseline(current: &Json, baseline: &Json, tolerance_pct: f64) 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use std::sync::OnceLock;
+
+    /// One full-suite execution shared by every test in this module —
+    /// the suite now spans K up to 16, so re-running it per test would
+    /// dominate `cargo test` time.
+    fn shared_report() -> &'static SuiteReport {
+        static REPORT: OnceLock<SuiteReport> = OnceLock::new();
+        REPORT.get_or_init(|| run_suite(2, None).expect("bench suite runs"))
+    }
 
     #[test]
     fn suite_is_deterministic_across_runs_and_thread_counts() {
-        let a = run_suite(2, None).unwrap().to_json().to_string_pretty();
+        let a = shared_report().to_json().to_string_pretty();
         let b = run_suite(4, None).unwrap().to_json().to_string_pretty();
         assert_eq!(a, b, "suite artifact must not depend on run or thread count");
     }
 
     #[test]
     fn coded_beats_uncoded_in_every_cluster() -> Result<()> {
-        let report = run_suite(2, None)?;
+        let report = shared_report();
         for k in ["k3", "k5", "k8"] {
             let coded = report.scenario(&format!("{k}-terasort-coded"))?;
             let uncoded = report.scenario(&format!("{k}-terasort-uncoded"))?;
@@ -531,6 +595,77 @@ mod tests {
             );
         }
         Ok(())
+    }
+
+    #[test]
+    fn combinatorial_beats_greedy_pairing_on_the_same_grid() -> Result<()> {
+        // The acceptance gate of the grid design: measured shuffle bytes
+        // of the combinatorial coder beat greedy pairing on the identical
+        // K=8 placement (gain 3 vs at most 2).
+        let report = shared_report();
+        let comb = report.scenario("k8-terasort-combinatorial")?;
+        let greedy = report.scenario("k8-terasort-grid-greedy")?;
+        assert_eq!(comb.placer, "combinatorial");
+        assert_eq!(comb.coder, "combinatorial");
+        assert_eq!(greedy.coder, "greedy");
+        assert!(
+            comb.payload_bytes < greedy.payload_bytes,
+            "combinatorial {} >= greedy {}",
+            comb.payload_bytes,
+            greedy.payload_bytes
+        );
+        // Multi-round IR reaches the larger-K scenarios too.
+        for name in ["k12-terasort-combinatorial", "k16-terasort-combinatorial"] {
+            let sc = report.scenario(name)?;
+            assert_eq!(sc.coder, "combinatorial");
+            assert!(sc.rounds > 1, "{name}: expected a multi-round plan");
+        }
+        Ok(())
+    }
+
+    #[test]
+    fn round_count_drift_fails_the_gate() {
+        let current = shared_report().to_json();
+        let mut doctored = current.clone();
+        if let Json::Obj(m) = &mut doctored {
+            if let Some(Json::Arr(sc)) = m.get_mut("scenarios") {
+                if let Some(Json::Obj(first)) = sc.first_mut() {
+                    let rounds = first.get("rounds").and_then(|r| r.as_f64()).unwrap();
+                    first.insert("rounds".into(), Json::Num(rounds + 1.0));
+                }
+            }
+        }
+        let cmp = compare_to_baseline(&current, &doctored, 5.0);
+        assert_eq!(cmp.status, BaselineStatus::Regression, "{:?}", cmp.notes);
+        assert!(
+            cmp.notes.iter().any(|n| n.contains("round count changed")),
+            "{:?}",
+            cmp.notes
+        );
+        // A baseline without the rounds field (pre-IR artifact) skips the
+        // round check instead of failing spuriously.
+        let mut legacy = current.clone();
+        if let Json::Obj(m) = &mut legacy {
+            if let Some(Json::Arr(sc)) = m.get_mut("scenarios") {
+                for s in sc.iter_mut() {
+                    if let Json::Obj(obj) = s {
+                        obj.remove("rounds");
+                    }
+                }
+            }
+        }
+        let cmp = compare_to_baseline(&current, &legacy, 5.0);
+        assert_eq!(cmp.status, BaselineStatus::Pass, "{:?}", cmp.notes);
+        // ... but the skip is asymmetric: a CURRENT artifact that stops
+        // recording rounds against a baseline that has them means the
+        // gate lost its input — regression, never a silent disarm.
+        let cmp = compare_to_baseline(&legacy, &current, 5.0);
+        assert_eq!(cmp.status, BaselineStatus::Regression, "{:?}", cmp.notes);
+        assert!(
+            cmp.notes.iter().any(|n| n.contains("lost its input")),
+            "{:?}",
+            cmp.notes
+        );
     }
 
     #[test]
@@ -546,7 +681,7 @@ mod tests {
 
     #[test]
     fn self_comparison_passes_and_regressions_fail() {
-        let current = run_suite(2, None).unwrap().to_json();
+        let current = shared_report().to_json();
         let same = compare_to_baseline(&current, &current, 5.0);
         assert_eq!(same.status, BaselineStatus::Pass, "{:?}", same.notes);
 
@@ -566,7 +701,7 @@ mod tests {
 
     #[test]
     fn pending_baseline_disarms_the_gate() {
-        let current = run_suite(2, None).unwrap().to_json();
+        let current = shared_report().to_json();
         let pending = Json::parse(r#"{"schema": 1, "scenarios": []}"#).unwrap();
         assert_eq!(
             compare_to_baseline(&current, &pending, 5.0).status,

@@ -9,8 +9,13 @@
 //! recovers its segment; across the `r` senders of `A\{j}` it collects all
 //! `r` segments. Total load: `N(K−r)/r` IV units — the factor-`r` coding
 //! gain the paper's §V cost function assumes per subsystem.
+//!
+//! On the round IR the plan is genuinely multi-round: round `t` carries
+//! slot `t` of *every* (r+1)-subset — one [`MulticastGroup`] per subset
+//! `A` with its `r+1` coded broadcasts — so the round count equals the
+//! per-subset subfile count and a bench artifact can diff it.
 
-use super::plan::{Broadcast, IvId, Part, ShufflePlan};
+use super::plan::{Broadcast, IvId, MulticastGroup, Part, ShufflePlan, ShuffleRound};
 use crate::placement::alloc::Allocation;
 
 /// Nodes of `mask` in ascending order.
@@ -30,30 +35,15 @@ pub fn plan_homogeneous(alloc: &Allocation, r: usize) -> ShufflePlan {
         alloc.holders.iter().all(|h| h.count_ones() as usize == r),
         "allocation is not r-regular"
     );
-    let mut plan = ShufflePlan {
-        k,
-        broadcasts: Vec::new(),
-    };
-
     if r == k {
-        return plan; // everything everywhere: nothing to shuffle
+        return ShufflePlan::new(k); // everything everywhere: nothing to shuffle
     }
 
     // Special case r == 1: no coding possible within groups of size 2;
-    // uncoded broadcast from the unique holder.
+    // uncoded broadcast from the unique holder — structurally identical
+    // to the uncoded baseline (one round, one group per subfile).
     if r == 1 {
-        for (sub, &h) in alloc.holders.iter().enumerate() {
-            let sender = h.trailing_zeros() as usize;
-            for dest in 0..k {
-                if dest != sender {
-                    plan.broadcasts.push(Broadcast::Uncoded {
-                        sender,
-                        iv: IvId { group: dest, sub },
-                    });
-                }
-            }
-        }
-        return plan;
+        return super::plan::plan_uncoded(alloc);
     }
 
     // Pre-index subfiles by holder mask.
@@ -62,7 +52,16 @@ pub fn plan_homogeneous(alloc: &Allocation, r: usize) -> ShufflePlan {
         by_mask[h as usize].push(sub);
     }
 
-    // Iterate over (r+1)-subsets A.
+    // Collect the (r+1)-subsets A with their per-member needed-file lists
+    // once; rounds then iterate slots across all subsets.
+    struct Subsystem<'a> {
+        a_mask: u32,
+        a_nodes: Vec<usize>,
+        per: Vec<&'a Vec<usize>>,
+        count: usize,
+    }
+    let mut subsystems: Vec<Subsystem> = Vec::new();
+    let mut max_count = 0usize;
     for a_mask in 1u32..(1 << k) {
         if a_mask.count_ones() as usize != r + 1 {
             continue;
@@ -79,18 +78,33 @@ pub fn plan_homogeneous(alloc: &Allocation, r: usize) -> ShufflePlan {
             per.iter().all(|v| v.len() == count),
             "asymmetric counts within group {a_mask:b}"
         );
-        for t in 0..count {
+        max_count = max_count.max(count);
+        subsystems.push(Subsystem { a_mask, a_nodes, per, count });
+    }
+
+    let mut plan = ShufflePlan::new(k);
+    for t in 0..max_count {
+        let mut round = ShuffleRound::default();
+        for sys in &subsystems {
+            if t >= sys.count {
+                continue;
+            }
+            let mut group = MulticastGroup {
+                members: sys.a_mask,
+                broadcasts: Vec::with_capacity(r + 1),
+            };
             // Node k_i broadcasts XOR over j != k_i of segment_{k_i} of
             // v_{j, file_j(t)}; segment index = position of k_i in A\{j}.
-            for (ki_pos, &ki) in a_nodes.iter().enumerate() {
+            for &ki in &sys.a_nodes {
                 let mut parts = Vec::with_capacity(r);
-                for (j_pos, &j) in a_nodes.iter().enumerate() {
+                for (j_pos, &j) in sys.a_nodes.iter().enumerate() {
                     if j == ki {
                         continue;
                     }
-                    let sub = per[j_pos][t];
+                    let sub = sys.per[j_pos][t];
                     // Position of ki within A\{j} (ascending order).
-                    let seg = a_nodes
+                    let seg = sys
+                        .a_nodes
                         .iter()
                         .filter(|&&x| x != j)
                         .position(|&x| x == ki)
@@ -101,10 +115,11 @@ pub fn plan_homogeneous(alloc: &Allocation, r: usize) -> ShufflePlan {
                         nseg: r as u32,
                     });
                 }
-                let _ = ki_pos;
-                plan.broadcasts.push(Broadcast::Coded { sender: ki, parts });
+                group.broadcasts.push(Broadcast::Coded { sender: ki, parts });
             }
+            round.groups.push(group);
         }
+        plan.push_round(round);
     }
     plan
 }
@@ -113,7 +128,7 @@ pub fn plan_homogeneous(alloc: &Allocation, r: usize) -> ShufflePlan {
 mod tests {
     use super::*;
     use crate::coding::decoder::verify;
-    use crate::placement::homogeneous::symmetric_allocation;
+    use crate::placement::homogeneous::{binom, symmetric_allocation};
     use crate::prop;
     use crate::theory::homogeneous::load_at_r;
 
@@ -144,19 +159,112 @@ mod tests {
     }
 
     #[test]
+    fn round_structure_is_slot_by_subset() {
+        // K=4, r=2, N=12: C(4,2)=6 pairs, 2 subfiles each; C(4,3)=4
+        // subsets of size r+1, each with per-member count 2 -> 2 rounds,
+        // each holding 4 groups of r+1 = 3 broadcasts.
+        let alloc = symmetric_allocation(4, 2, 12);
+        let plan = plan_homogeneous(&alloc, 2);
+        assert_eq!(plan.round_count(), 2);
+        for round in &plan.rounds {
+            assert_eq!(round.groups.len(), 4);
+            for group in &round.groups {
+                assert_eq!(group.members.count_ones(), 3);
+                assert_eq!(group.broadcasts.len(), 3);
+            }
+        }
+    }
+
+    #[test]
     fn r1_falls_back_to_uncoded() {
         let alloc = symmetric_allocation(3, 1, 6);
         let plan = plan_homogeneous(&alloc, 1);
         assert!((plan.load_equations(&alloc) - load_at_r(3, 1, 6)).abs() < 1e-9);
         assert!(verify(&alloc, &plan).is_complete());
+        // Structurally the uncoded baseline: single round, whole-IV
+        // broadcasts only, load equal to the uncoded delivery count.
+        assert_eq!(plan.round_count(), 1);
+        assert_eq!(plan.load_units() as u64, alloc.uncoded_units());
     }
 
     #[test]
     fn full_replication_needs_no_shuffle() {
         let alloc = symmetric_allocation(3, 3, 6);
         let plan = plan_homogeneous(&alloc, 3);
-        assert!(plan.broadcasts.is_empty());
+        assert_eq!(plan.n_broadcasts(), 0);
+        assert_eq!(plan.round_count(), 0);
         assert!(verify(&alloc, &plan).is_complete());
+    }
+
+    #[test]
+    fn edge_cases_r_eq_k_and_r_eq_1_for_k_up_to_6() {
+        // r = k: the plan must be literally empty (not just zero-load).
+        for k in 2..=6usize {
+            for n in [1u64, 4, 6] {
+                let alloc = symmetric_allocation(k, k, n);
+                let plan = plan_homogeneous(&alloc, k);
+                assert_eq!(plan.n_broadcasts(), 0, "k={k} n={n}");
+                assert!(verify(&alloc, &plan).is_complete(), "k={k} n={n}");
+            }
+            // r = 1: uncoded-equivalent — exactly N_sub(K−1) whole-IV
+            // units, every broadcast uncoded.
+            for n in [1u64, 5] {
+                let alloc = symmetric_allocation(k, 1, n);
+                let plan = plan_homogeneous(&alloc, 1);
+                assert_eq!(
+                    plan.load_units() as u64,
+                    alloc.n_sub() as u64 * (k as u64 - 1),
+                    "k={k} n={n}"
+                );
+                assert_eq!(plan.load_units() as u64, alloc.uncoded_units());
+                assert!(
+                    plan.iter_broadcasts()
+                        .all(|b| matches!(b, Broadcast::Uncoded { .. })),
+                    "k={k} n={n}: r=1 must not emit coded broadcasts"
+                );
+                assert!(verify(&alloc, &plan).is_complete(), "k={k} n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn load_identity_n_k_minus_r_over_r_k_up_to_6() {
+        // The N(K−r)/r identity of [2], checked for every (k, r) with
+        // K ≤ 6 against the theory curve — and against the closed form
+        // directly, so a theory-side regression cannot mask a plan bug.
+        for k in 2..=6usize {
+            for r in 1..=k {
+                for n in [1u64, 3, 6] {
+                    let alloc = symmetric_allocation(k, r, n);
+                    let plan = plan_homogeneous(&alloc, r);
+                    let got = plan.load_equations(&alloc);
+                    let closed = n as f64 * (k - r) as f64 / r as f64;
+                    let theory = load_at_r(k as u64, r as u64, n);
+                    assert!(
+                        (got - closed).abs() < 1e-9,
+                        "k={k} r={r} n={n}: plan {got} != N(K-r)/r {closed}"
+                    );
+                    assert!(
+                        (got - theory).abs() < 1e-9,
+                        "k={k} r={r} n={n}: plan {got} != theory {theory}"
+                    );
+                    // Round count = per-subset slot count (0 when r=k,
+                    // 1 for the uncoded fallback).
+                    let expected_rounds = if r == k {
+                        0
+                    } else if r == 1 {
+                        1
+                    } else {
+                        (alloc.n_sub() / binom(k as u64, r as u64) as usize).max(1)
+                    };
+                    assert_eq!(
+                        plan.round_count(),
+                        expected_rounds,
+                        "k={k} r={r} n={n}: unexpected round structure"
+                    );
+                }
+            }
+        }
     }
 
     #[test]

@@ -7,6 +7,7 @@
 //! plan-build time, so execution never re-checks decodability.
 
 use super::cdc_multicast;
+use super::combinatorial;
 use super::plan::{plan_greedy, plan_k3, plan_uncoded, ShufflePlan};
 use crate::error::{HetcdcError, Result};
 use crate::model::cluster::ClusterSpec;
@@ -146,7 +147,12 @@ impl ShuffleCoder for MemShare {
         "memshare"
     }
 
-    fn plan(&self, cluster: &ClusterSpec, job: &JobSpec, alloc: &Allocation) -> Result<ShufflePlan> {
+    fn plan(
+        &self,
+        cluster: &ClusterSpec,
+        job: &JobSpec,
+        alloc: &Allocation,
+    ) -> Result<ShufflePlan> {
         let m_min = *cluster.storage().iter().min().ok_or_else(|| {
             HetcdcError::InvalidParams("cluster has no nodes".into())
         })?;
@@ -178,6 +184,26 @@ impl ShuffleCoder for MemShare {
     }
 }
 
+/// The combinatorial grid-transversal multicast
+/// ([`crate::coding::combinatorial`]): multi-round, multi-group schedules
+/// with coding gain `r − 1` built in closed form from the grid structure —
+/// no perfect-collection enumeration, no cap, any K. Requires a grid
+/// allocation (the [`crate::placement::combinatorial`] placer's output, or
+/// anything [`combinatorial::detect_grid`] recognizes).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Combinatorial;
+
+impl ShuffleCoder for Combinatorial {
+    fn name(&self) -> &'static str {
+        "combinatorial"
+    }
+
+    fn plan(&self, _c: &ClusterSpec, _j: &JobSpec, alloc: &Allocation) -> Result<ShufflePlan> {
+        let grid = combinatorial::detect_grid(alloc)?;
+        Ok(combinatorial::plan_grid(alloc, &grid))
+    }
+}
+
 /// Resolve a registry name to a coder.
 pub fn coder_by_name(name: &str) -> Result<Box<dyn ShuffleCoder>> {
     match name {
@@ -186,6 +212,7 @@ pub fn coder_by_name(name: &str) -> Result<Box<dyn ShuffleCoder>> {
         "greedy" => Ok(Box::new(Greedy)),
         "multicast" => Ok(Box::new(Multicast)),
         "memshare" => Ok(Box::new(MemShare)),
+        "combinatorial" => Ok(Box::new(Combinatorial)),
         other => Err(HetcdcError::UnknownStrategy {
             kind: "coder",
             name: other.to_string(),
@@ -201,6 +228,7 @@ pub fn builtin_coders() -> Vec<Box<dyn ShuffleCoder>> {
         Box::new(Greedy),
         Box::new(Multicast),
         Box::new(MemShare),
+        Box::new(Combinatorial),
     ]
 }
 
@@ -253,9 +281,27 @@ mod tests {
 
     #[test]
     fn registry_resolves_all_names() {
-        for name in ["uncoded", "pairing", "greedy", "multicast", "memshare"] {
+        for name in [
+            "uncoded",
+            "pairing",
+            "greedy",
+            "multicast",
+            "memshare",
+            "combinatorial",
+        ] {
             assert_eq!(coder_by_name(name).unwrap().name(), name);
         }
         assert!(coder_by_name("rs-code").is_err());
+    }
+
+    #[test]
+    fn combinatorial_coder_rejects_non_grid_allocations() {
+        let p = Params3::new(6, 7, 7, 12).unwrap();
+        let alloc = optimal_allocation(&p);
+        let c = cluster(&[6, 7, 7]);
+        let err = Combinatorial
+            .plan(&c, &JobSpec::terasort(12), &alloc)
+            .unwrap_err();
+        assert!(matches!(err, HetcdcError::Unsupported { .. }));
     }
 }

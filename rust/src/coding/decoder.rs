@@ -7,6 +7,12 @@
 //! that part. Iterates to fixpoint (plans may be order-dependent), then
 //! checks the §II Reduce requirement: node `n` knows `(n, f)` for every
 //! subfile `f`.
+//!
+//! The decoder works over the plan's **flattened** broadcast order
+//! (round-major, group-major — see [`ShufflePlan::iter_broadcasts`]);
+//! every index in a [`DecodeSchedule`] refers to that order, which is
+//! also the executor's transmission order, so round structure never
+//! changes what a schedule index means.
 
 use super::plan::{Broadcast, IvId, ShufflePlan};
 use crate::error::{HetcdcError, Result};
@@ -116,13 +122,15 @@ fn simulate(alloc: &Allocation, plan: &ShufflePlan) -> (Vec<Knowledge>, Vec<Vec<
         }
     }
 
-    // Fixpoint over broadcasts (senders know their own payloads already).
+    // Fixpoint over the flattened broadcasts (senders know their own
+    // payloads already).
+    let flat: Vec<&Broadcast> = plan.iter_broadcasts().collect();
     let mut order: Vec<Vec<usize>> = vec![Vec::new(); k];
     let mut passes = 0;
     loop {
         passes += 1;
         let mut progress = false;
-        for (bi, b) in plan.broadcasts.iter().enumerate() {
+        for (bi, b) in flat.iter().enumerate() {
             match b {
                 Broadcast::Uncoded { iv, .. } => {
                     for (node, knowledge) in know.iter_mut().enumerate() {
@@ -149,7 +157,7 @@ fn simulate(alloc: &Allocation, plan: &ShufflePlan) -> (Vec<Knowledge>, Vec<Vec<
                 }
             }
         }
-        if !progress || passes > plan.broadcasts.len() + 2 {
+        if !progress || passes > flat.len() + 2 {
             break;
         }
     }
@@ -209,7 +217,7 @@ mod tests {
         let p = Params3::new(6, 7, 7, 12).unwrap();
         let alloc = optimal_allocation(&p);
         let mut plan = plan_k3(&alloc);
-        plan.broadcasts.pop(); // drop one message
+        plan.pop_broadcast(); // drop one message
         let report = verify(&alloc, &plan);
         assert!(!report.is_complete());
     }
@@ -218,16 +226,16 @@ mod tests {
     fn detects_undecodable_xor() {
         // XOR of two IVs that no receiver can cancel.
         let alloc = Allocation::new(3, 1, vec![0b001, 0b001, 0b010]);
-        let plan = ShufflePlan {
-            k: 3,
-            broadcasts: vec![Broadcast::Coded {
+        let plan = ShufflePlan::from_broadcasts(
+            3,
+            vec![Broadcast::Coded {
                 sender: 0,
                 parts: vec![
                     Part::whole(IvId { group: 1, sub: 0 }),
                     Part::whole(IvId { group: 2, sub: 1 }),
                 ],
             }],
-        };
+        );
         let report = verify(&alloc, &plan);
         // Nodes 1 and 2 know neither part; nothing decodes.
         assert!(!report.is_complete());
@@ -244,14 +252,14 @@ mod tests {
         for order in &sched.order {
             let mut seen = std::collections::HashSet::new();
             for &bi in order {
-                assert!(bi < plan.broadcasts.len());
+                assert!(bi < plan.n_broadcasts());
                 assert!(seen.insert(bi), "broadcast {bi} scheduled twice");
             }
         }
         // Every broadcast is learned from by at least one node.
         let all: std::collections::HashSet<usize> =
             sched.order.iter().flatten().copied().collect();
-        assert_eq!(all.len(), plan.broadcasts.len());
+        assert_eq!(all.len(), plan.n_broadcasts());
     }
 
     #[test]
@@ -259,7 +267,7 @@ mod tests {
         let p = Params3::new(6, 7, 7, 12).unwrap();
         let alloc = optimal_allocation(&p);
         let mut plan = plan_k3(&alloc);
-        plan.broadcasts.pop();
+        plan.pop_broadcast();
         let err = schedule(&alloc, &plan).unwrap_err();
         assert!(matches!(err, HetcdcError::Undecodable { .. }));
     }

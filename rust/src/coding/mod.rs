@@ -1,12 +1,15 @@
 //! Coded-shuffle construction and verification.
 //!
 //! * [`xor`] — the byte-level XOR combiner (hot path).
-//! * [`plan`] — [`plan::ShufflePlan`]: which node broadcasts which XOR of
-//!   which intermediate values; exact Lemma-1 plans for K=3
-//!   ([`plan::plan_k3`]) and a greedy pairing coder for any K
-//!   ([`plan::plan_greedy`]).
+//! * [`plan`] — [`plan::ShufflePlan`]: the group-structured multi-round
+//!   shuffle IR (rounds of multicast groups of XOR broadcasts); exact
+//!   Lemma-1 plans for K=3 ([`plan::plan_k3`]) and a greedy pairing coder
+//!   for any K ([`plan::plan_greedy`]).
 //! * [`cdc_multicast`] — the homogeneous (r+1)-group multicast of [2]
 //!   (baseline, and the j-subsystem building block of §V).
+//! * [`combinatorial`] — the grid-transversal multicast of the
+//!   combinatorial design: large-K multi-group schedules with no
+//!   perfect-collection enumeration.
 //! * [`decoder`] — symbolic decoder proving every plan delivers every
 //!   needed IV to every node (the correctness oracle for all plans), and
 //!   the decode schedules baked into [`crate::engine::Plan`] artifacts.
@@ -15,9 +18,10 @@
 
 pub mod cdc_multicast;
 pub mod coder;
+pub mod combinatorial;
 pub mod decoder;
 pub mod plan;
 pub mod xor;
 
 pub use coder::{builtin_coders, coder_by_name, ShuffleCoder};
-pub use plan::{Broadcast, IvId, Part, ShufflePlan};
+pub use plan::{Broadcast, IvId, MulticastGroup, Part, ShufflePlan, ShuffleRound};

@@ -1,11 +1,22 @@
-//! Shuffle plans: the concrete broadcast schedule of the Shuffle phase.
+//! Shuffle plans: the group-structured multicast IR of the Shuffle phase.
 //!
-//! A [`ShufflePlan`] lists, per broadcast, the sender and the XOR of IV
-//! *parts* it carries (a part is a `seg/nseg` fraction of one IV payload;
-//! `nseg = 1` for whole-IV XOR pairs, `nseg = r` for the homogeneous
-//! multicast of [2]). Plans are independent of payload bytes — the engine
-//! executes them against real IVs, and [`crate::coding::decoder`] verifies
-//! them symbolically.
+//! A [`ShufflePlan`] is a sequence of [`ShuffleRound`]s; each round is a
+//! set of [`MulticastGroup`]s, and each group carries the broadcasts of
+//! one cooperating node subset (the paper's multicast groups — the
+//! (r+1)-subsets `A` of [2]'s scheme, the pair/triple sets of Lemma 1,
+//! the grid transversals of the combinatorial design). Per broadcast, the
+//! IR records the sender and the XOR of IV *parts* it carries (a part is
+//! a `seg/nseg` fraction of one IV payload; `nseg = 1` for whole-IV XOR
+//! pairs, `nseg = r` for the homogeneous multicast of [2]).
+//!
+//! Rounds are the sequential stages of the Shuffle: the engine meters and
+//! decodes round by round (per-round sections in
+//! [`crate::net::NetReport`]), and groups within one round are pairwise
+//! structured so a future non-shared medium could run them concurrently.
+//! Plans are independent of payload bytes — the engine executes them
+//! against real IVs, and [`crate::coding::decoder`] verifies them
+//! symbolically over the flattened broadcast order (round-major,
+//! group-major; all broadcast *indices* refer to that order).
 //!
 //! With `Q = K`, intermediate value `(g, f)` is "the IV of node `g`'s
 //! reduce-function group on subfile `f`"; node `g` needs it iff it does
@@ -13,7 +24,7 @@
 
 use super::xor; // used by doc references; keep module coupling explicit
 use crate::error::{HetcdcError, Result};
-use crate::placement::alloc::Allocation;
+use crate::placement::alloc::{Allocation, NodeMask};
 use crate::placement::lemma1::{pairing_counts, PAIR_MASKS};
 use crate::util::json::Json;
 use std::collections::BTreeMap;
@@ -70,19 +81,173 @@ impl Broadcast {
     }
 }
 
-#[derive(Clone, Debug, Default)]
-pub struct ShufflePlan {
-    pub k: usize,
+/// One multicast group of a round: the broadcasts through which the node
+/// subset `members` exchanges IVs. `members` covers every sender of the
+/// group's broadcasts plus the decoding destinations — informational
+/// structure for reports and round scheduling, not consulted by the
+/// decoder (decodability is a property of the broadcasts alone).
+#[derive(Clone, Debug, PartialEq, Eq, Default)]
+pub struct MulticastGroup {
+    /// Bitmask of the cooperating nodes.
+    pub members: NodeMask,
     pub broadcasts: Vec<Broadcast>,
 }
 
+/// One sequential stage of the Shuffle phase.
+#[derive(Clone, Debug, PartialEq, Eq, Default)]
+pub struct ShuffleRound {
+    pub groups: Vec<MulticastGroup>,
+}
+
+impl ShuffleRound {
+    pub fn n_broadcasts(&self) -> usize {
+        self.groups.iter().map(|g| g.broadcasts.len()).sum()
+    }
+}
+
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct ShufflePlan {
+    pub k: usize,
+    pub rounds: Vec<ShuffleRound>,
+}
+
 impl ShufflePlan {
+    /// Empty plan for a K-node job.
+    pub fn new(k: usize) -> Self {
+        ShufflePlan { k, rounds: Vec::new() }
+    }
+
+    /// Wrap a flat broadcast list (the pre-IR legacy form) as a
+    /// single-round plan, one group per broadcast with `members` set to
+    /// the sender alone. Used by the legacy-JSON read shim and by ad-hoc
+    /// plans in tests/benches.
+    pub fn from_broadcasts(k: usize, broadcasts: Vec<Broadcast>) -> Self {
+        if broadcasts.is_empty() {
+            return ShufflePlan::new(k);
+        }
+        let groups = broadcasts
+            .into_iter()
+            .map(|b| MulticastGroup {
+                members: 1u32 << b.sender(),
+                broadcasts: vec![b],
+            })
+            .collect();
+        ShufflePlan {
+            k,
+            rounds: vec![ShuffleRound { groups }],
+        }
+    }
+
+    /// Append a round (empty rounds are dropped — they carry no
+    /// broadcasts and would only pad the round count).
+    pub fn push_round(&mut self, round: ShuffleRound) {
+        if !round.groups.is_empty() {
+            self.rounds.push(round);
+        }
+    }
+
+    /// Append one broadcast as its own group to the last round (creating
+    /// a round when the plan has none).
+    pub fn push_broadcast(&mut self, members: NodeMask, b: Broadcast) {
+        if self.rounds.is_empty() {
+            self.rounds.push(ShuffleRound::default());
+        }
+        self.rounds
+            .last_mut()
+            .unwrap()
+            .groups
+            .push(MulticastGroup { members, broadcasts: vec![b] });
+    }
+
+    /// Remove and return the plan's final broadcast (flattened order),
+    /// pruning any group/round it empties. For tamper tests.
+    pub fn pop_broadcast(&mut self) -> Option<Broadcast> {
+        loop {
+            let round = self.rounds.last_mut()?;
+            match round.groups.last_mut() {
+                None => {
+                    self.rounds.pop();
+                }
+                Some(group) => match group.broadcasts.pop() {
+                    Some(b) => {
+                        if group.broadcasts.is_empty() {
+                            round.groups.pop();
+                            if round.groups.is_empty() {
+                                self.rounds.pop();
+                            }
+                        }
+                        return Some(b);
+                    }
+                    None => {
+                        round.groups.pop();
+                        if round.groups.is_empty() {
+                            self.rounds.pop();
+                        }
+                    }
+                },
+            }
+        }
+    }
+
+    pub fn round_count(&self) -> usize {
+        self.rounds.len()
+    }
+
+    pub fn n_broadcasts(&self) -> usize {
+        self.rounds.iter().map(|r| r.n_broadcasts()).sum()
+    }
+
+    /// Broadcasts in flattened (round-major, group-major) order — the
+    /// canonical transmission order every index in a
+    /// [`crate::coding::decoder::DecodeSchedule`] refers to.
+    pub fn iter_broadcasts(&self) -> impl Iterator<Item = &Broadcast> {
+        self.rounds
+            .iter()
+            .flat_map(|r| r.groups.iter())
+            .flat_map(|g| g.broadcasts.iter())
+    }
+
+    /// Flat index at which each round starts (length = round count). The
+    /// executor calls [`crate::net::BroadcastNet::begin_round`] at these
+    /// indices so the ledger records per-round sections.
+    pub fn round_starts(&self) -> Vec<usize> {
+        let mut starts = Vec::with_capacity(self.rounds.len());
+        let mut at = 0usize;
+        for r in &self.rounds {
+            starts.push(at);
+            at += r.n_broadcasts();
+        }
+        starts
+    }
+
+    /// Broadcast count per round, in order (bench artifacts diff this to
+    /// catch coders silently degrading to one giant round).
+    pub fn round_sizes(&self) -> Vec<usize> {
+        self.rounds.iter().map(|r| r.n_broadcasts()).collect()
+    }
+
+    /// `flags[bi]` = flat index `bi` is the first broadcast of a round —
+    /// the single encoding of the round-boundary invariant every metering
+    /// pass shares: call
+    /// [`crate::net::BroadcastNet::begin_round`] exactly where a flag is
+    /// set and the per-round ledger sections mirror the IR in every
+    /// execution mode.
+    pub fn round_start_flags(&self) -> Vec<bool> {
+        let mut flags = vec![false; self.n_broadcasts()];
+        for s in self.round_starts() {
+            if let Some(f) = flags.get_mut(s) {
+                *f = true;
+            }
+        }
+        flags
+    }
+
     /// Total load in subfile units (exact rational; integral when all
     /// broadcasts are whole-IV).
     pub fn load_units(&self) -> f64 {
         let mut num = 0u64;
         let mut frac = 0.0f64;
-        for b in &self.broadcasts {
+        for b in self.iter_broadcasts() {
             let (n, d) = b.units();
             if d == 1 {
                 num += n;
@@ -98,25 +263,26 @@ impl ShufflePlan {
         self.load_units() / alloc.sp as f64
     }
 
-    /// Coding ratio: fraction of broadcast units that are coded.
+    /// Coding ratio: fraction of broadcasts that are coded.
     pub fn coded_fraction(&self) -> f64 {
-        if self.broadcasts.is_empty() {
+        let total = self.n_broadcasts();
+        if total == 0 {
             return 0.0;
         }
         let coded = self
-            .broadcasts
-            .iter()
+            .iter_broadcasts()
             .filter(|b| matches!(b, Broadcast::Coded { .. }))
             .count();
-        coded as f64 / self.broadcasts.len() as f64
+        coded as f64 / total as f64
     }
 
     /// Structural bounds check against a K-node, `n_sub`-subfile job:
     /// senders/groups within `[0, K)`, subfiles within `[0, n_sub)`,
-    /// segment indices within a sane `nseg`, and uniform `nseg` per
-    /// broadcast. Deserialized plans go through this before the symbolic
-    /// decoder touches them, so hostile artifacts fail typed instead of
-    /// panicking an executor.
+    /// segment indices within a sane `nseg`, uniform `nseg` per
+    /// broadcast, and every group's `members` a non-empty in-range mask
+    /// containing its senders. Deserialized plans go through this before
+    /// the symbolic decoder touches them, so hostile artifacts fail typed
+    /// instead of panicking an executor.
     pub fn validate(&self, k: usize, n_sub: usize) -> Result<()> {
         let bad = |i: usize, m: String| {
             HetcdcError::PlanMismatch(format!("broadcast {i}: {m}"))
@@ -136,29 +302,62 @@ impl ShufflePlan {
                 self.k
             )));
         }
-        for (i, b) in self.broadcasts.iter().enumerate() {
-            if b.sender() >= k {
-                return Err(bad(i, format!("sender {} out of range [0, {k})", b.sender())));
+        let full: NodeMask = if k == 32 { u32::MAX } else { (1u32 << k) - 1 };
+        let mut i = 0usize; // flat broadcast index, for error messages
+        for (ri, round) in self.rounds.iter().enumerate() {
+            // Empty rounds/groups never come out of a builder (push_round
+            // prunes them) but can arrive via deserialized artifacts, and
+            // they would desync the per-round metering sections from the
+            // round count — reject at the validation gate.
+            if round.groups.is_empty() {
+                return Err(HetcdcError::PlanMismatch(format!(
+                    "round {ri}: empty round (no multicast groups)"
+                )));
             }
-            match b {
-                Broadcast::Uncoded { iv, .. } => check_iv(i, iv)?,
-                Broadcast::Coded { parts, .. } => {
-                    let nseg = match parts.first() {
-                        Some(p) => p.nseg,
-                        None => return Err(bad(i, "coded broadcast with no parts".into())),
-                    };
-                    if nseg == 0 || nseg > 64 {
-                        return Err(bad(i, format!("nseg {nseg} out of range [1, 64]")));
+            for group in &round.groups {
+                if group.broadcasts.is_empty() {
+                    return Err(HetcdcError::PlanMismatch(format!(
+                        "round {ri}: multicast group with no broadcasts"
+                    )));
+                }
+                if group.members == 0 || group.members & !full != 0 {
+                    return Err(HetcdcError::PlanMismatch(format!(
+                        "round {ri}: group members {:#b} invalid for K={k}",
+                        group.members
+                    )));
+                }
+                for b in &group.broadcasts {
+                    if b.sender() >= k {
+                        return Err(bad(i, format!("sender {} out of range [0, {k})", b.sender())));
                     }
-                    for p in parts {
-                        if p.nseg != nseg {
-                            return Err(bad(i, "mixed nseg within one broadcast".into()));
-                        }
-                        if p.seg >= nseg {
-                            return Err(bad(i, format!("segment {} >= nseg {nseg}", p.seg)));
-                        }
-                        check_iv(i, &p.iv)?;
+                    if group.members & (1 << b.sender()) == 0 {
+                        return Err(bad(
+                            i,
+                            format!("sender {} not a member of its group", b.sender()),
+                        ));
                     }
+                    match b {
+                        Broadcast::Uncoded { iv, .. } => check_iv(i, iv)?,
+                        Broadcast::Coded { parts, .. } => {
+                            let nseg = match parts.first() {
+                                Some(p) => p.nseg,
+                                None => return Err(bad(i, "coded broadcast with no parts".into())),
+                            };
+                            if nseg == 0 || nseg > 64 {
+                                return Err(bad(i, format!("nseg {nseg} out of range [1, 64]")));
+                            }
+                            for p in parts {
+                                if p.nseg != nseg {
+                                    return Err(bad(i, "mixed nseg within one broadcast".into()));
+                                }
+                                if p.seg >= nseg {
+                                    return Err(bad(i, format!("segment {} >= nseg {nseg}", p.seg)));
+                                }
+                                check_iv(i, &p.iv)?;
+                            }
+                        }
+                    }
+                    i += 1;
                 }
             }
         }
@@ -166,100 +365,165 @@ impl ShufflePlan {
     }
 
     /// JSON form used inside serialized [`crate::engine::Plan`] artifacts
-    /// (schema in DESIGN.md).
+    /// (Shuffle IR v2; schema in DESIGN.md).
     pub fn to_json(&self) -> Json {
-        let broadcasts: Vec<Json> = self
-            .broadcasts
+        let rounds: Vec<Json> = self
+            .rounds
             .iter()
-            .map(|b| {
-                let mut m = BTreeMap::new();
-                match b {
-                    Broadcast::Uncoded { sender, iv } => {
-                        m.insert("type".into(), Json::Str("uncoded".into()));
-                        m.insert("sender".into(), Json::Num(*sender as f64));
-                        m.insert("group".into(), Json::Num(iv.group as f64));
-                        m.insert("sub".into(), Json::Num(iv.sub as f64));
-                    }
-                    Broadcast::Coded { sender, parts } => {
-                        m.insert("type".into(), Json::Str("coded".into()));
-                        m.insert("sender".into(), Json::Num(*sender as f64));
-                        let parts: Vec<Json> = parts
-                            .iter()
-                            .map(|p| {
-                                let mut pm = BTreeMap::new();
-                                pm.insert("group".into(), Json::Num(p.iv.group as f64));
-                                pm.insert("sub".into(), Json::Num(p.iv.sub as f64));
-                                pm.insert("seg".into(), Json::Num(p.seg as f64));
-                                pm.insert("nseg".into(), Json::Num(p.nseg as f64));
-                                Json::Obj(pm)
-                            })
-                            .collect();
-                        m.insert("parts".into(), Json::Arr(parts));
-                    }
-                }
-                Json::Obj(m)
+            .map(|round| {
+                let groups: Vec<Json> = round
+                    .groups
+                    .iter()
+                    .map(|group| {
+                        let mut gm = BTreeMap::new();
+                        gm.insert("members".into(), Json::Num(group.members as f64));
+                        gm.insert(
+                            "broadcasts".into(),
+                            Json::Arr(group.broadcasts.iter().map(broadcast_to_json).collect()),
+                        );
+                        Json::Obj(gm)
+                    })
+                    .collect();
+                let mut rm = BTreeMap::new();
+                rm.insert("groups".into(), Json::Arr(groups));
+                Json::Obj(rm)
             })
             .collect();
         let mut m = BTreeMap::new();
+        m.insert("version".into(), Json::Num(2.0));
         m.insert("k".into(), Json::Num(self.k as f64));
-        m.insert("broadcasts".into(), Json::Arr(broadcasts));
+        m.insert("rounds".into(), Json::Arr(rounds));
         Json::Obj(m)
     }
 
+    /// Parse the v2 round/group form, or — legacy-read shim — a v1 flat
+    /// `"broadcasts"` list, which becomes a single-round plan via
+    /// [`ShufflePlan::from_broadcasts`].
     pub fn from_json(j: &Json) -> Result<Self> {
         let bad = |f: &str| HetcdcError::Json(format!("shuffle plan: missing or invalid '{f}'"));
         let k = j.get("k").and_then(|v| v.as_usize()).ok_or_else(|| bad("k"))?;
-        let get_usize = |o: &Json, f: &'static str| -> Result<usize> {
-            o.get(f).and_then(|v| v.as_usize()).ok_or_else(|| bad(f))
-        };
+        if let Some(rounds_json) = j.get("rounds").and_then(|v| v.as_arr()) {
+            let mut plan = ShufflePlan::new(k);
+            for round_json in rounds_json {
+                let mut round = ShuffleRound::default();
+                for group_json in round_json
+                    .get("groups")
+                    .and_then(|v| v.as_arr())
+                    .ok_or_else(|| bad("groups"))?
+                {
+                    let members = group_json
+                        .get("members")
+                        .and_then(|v| v.as_usize())
+                        .filter(|&m| m <= u32::MAX as usize)
+                        .ok_or_else(|| bad("members"))? as u32;
+                    let mut group = MulticastGroup { members, broadcasts: Vec::new() };
+                    for b in group_json
+                        .get("broadcasts")
+                        .and_then(|v| v.as_arr())
+                        .ok_or_else(|| bad("broadcasts"))?
+                    {
+                        group.broadcasts.push(broadcast_from_json(b)?);
+                    }
+                    round.groups.push(group);
+                }
+                plan.rounds.push(round);
+            }
+            return Ok(plan);
+        }
+        // Legacy v1: flat broadcast list, no round/group structure.
         let mut broadcasts = Vec::new();
         for b in j
             .get("broadcasts")
             .and_then(|v| v.as_arr())
-            .ok_or_else(|| bad("broadcasts"))?
+            .ok_or_else(|| bad("rounds"))?
         {
-            let sender = get_usize(b, "sender")?;
-            match b.get("type").and_then(|v| v.as_str()) {
-                Some("uncoded") => broadcasts.push(Broadcast::Uncoded {
-                    sender,
-                    iv: IvId {
-                        group: get_usize(b, "group")?,
-                        sub: get_usize(b, "sub")?,
-                    },
-                }),
-                Some("coded") => {
-                    let mut parts = Vec::new();
-                    for p in b
-                        .get("parts")
-                        .and_then(|v| v.as_arr())
-                        .ok_or_else(|| bad("parts"))?
-                    {
-                        let nseg = get_usize(p, "nseg")? as u32;
-                        if nseg == 0 {
-                            return Err(bad("nseg"));
-                        }
-                        parts.push(Part {
-                            iv: IvId {
-                                group: get_usize(p, "group")?,
-                                sub: get_usize(p, "sub")?,
-                            },
-                            seg: get_usize(p, "seg")? as u32,
-                            nseg,
-                        });
-                    }
-                    if parts.is_empty() {
-                        return Err(bad("parts"));
-                    }
-                    broadcasts.push(Broadcast::Coded { sender, parts });
-                }
-                _ => return Err(bad("type")),
-            }
+            broadcasts.push(broadcast_from_json(b)?);
         }
-        Ok(ShufflePlan { k, broadcasts })
+        Ok(ShufflePlan::from_broadcasts(k, broadcasts))
     }
 }
 
-/// Exact Lemma-1 plan for K=3 allocations (achieves `L_M` of eq. (3)).
+fn broadcast_to_json(b: &Broadcast) -> Json {
+    let mut m = BTreeMap::new();
+    match b {
+        Broadcast::Uncoded { sender, iv } => {
+            m.insert("type".into(), Json::Str("uncoded".into()));
+            m.insert("sender".into(), Json::Num(*sender as f64));
+            m.insert("group".into(), Json::Num(iv.group as f64));
+            m.insert("sub".into(), Json::Num(iv.sub as f64));
+        }
+        Broadcast::Coded { sender, parts } => {
+            m.insert("type".into(), Json::Str("coded".into()));
+            m.insert("sender".into(), Json::Num(*sender as f64));
+            let parts: Vec<Json> = parts
+                .iter()
+                .map(|p| {
+                    let mut pm = BTreeMap::new();
+                    pm.insert("group".into(), Json::Num(p.iv.group as f64));
+                    pm.insert("sub".into(), Json::Num(p.iv.sub as f64));
+                    pm.insert("seg".into(), Json::Num(p.seg as f64));
+                    pm.insert("nseg".into(), Json::Num(p.nseg as f64));
+                    Json::Obj(pm)
+                })
+                .collect();
+            m.insert("parts".into(), Json::Arr(parts));
+        }
+    }
+    Json::Obj(m)
+}
+
+fn broadcast_from_json(b: &Json) -> Result<Broadcast> {
+    let bad = |f: &str| HetcdcError::Json(format!("shuffle plan: missing or invalid '{f}'"));
+    let get_usize = |o: &Json, f: &'static str| -> Result<usize> {
+        o.get(f).and_then(|v| v.as_usize()).ok_or_else(|| bad(f))
+    };
+    let sender = get_usize(b, "sender")?;
+    match b.get("type").and_then(|v| v.as_str()) {
+        Some("uncoded") => Ok(Broadcast::Uncoded {
+            sender,
+            iv: IvId {
+                group: get_usize(b, "group")?,
+                sub: get_usize(b, "sub")?,
+            },
+        }),
+        Some("coded") => {
+            let mut parts = Vec::new();
+            for p in b
+                .get("parts")
+                .and_then(|v| v.as_arr())
+                .ok_or_else(|| bad("parts"))?
+            {
+                let nseg = get_usize(p, "nseg")? as u32;
+                if nseg == 0 {
+                    return Err(bad("nseg"));
+                }
+                parts.push(Part {
+                    iv: IvId {
+                        group: get_usize(p, "group")?,
+                        sub: get_usize(p, "sub")?,
+                    },
+                    seg: get_usize(p, "seg")? as u32,
+                    nseg,
+                });
+            }
+            if parts.is_empty() {
+                return Err(bad("parts"));
+            }
+            Ok(Broadcast::Coded { sender, parts })
+        }
+        _ => Err(bad("type")),
+    }
+}
+
+/// Group members of an uncoded delivery of subfile `sub`: the sender plus
+/// every node lacking the subfile (they all decode the broadcast).
+fn uncoded_members(alloc: &Allocation, sender: usize, sub: usize) -> NodeMask {
+    (1u32 << sender) | (alloc.full_mask() & !alloc.holders[sub])
+}
+
+/// Exact Lemma-1 plan for K=3 allocations (achieves `L_M` of eq. (3)),
+/// expressed on the round IR as three stages: single-held subfiles
+/// (uncoded), the XOR pairings of eqs. (8)–(10), and uncoded leftovers.
 ///
 /// Node k XOR-pairs the two pair-sets it holds (the evidently-intended
 /// reading of eqs. (8)–(10); see DESIGN.md §9): with pair-sets
@@ -269,24 +533,26 @@ impl ShufflePlan {
 /// single-held subfiles go uncoded.
 pub fn plan_k3(alloc: &Allocation) -> ShufflePlan {
     assert_eq!(alloc.k, 3, "plan_k3 requires K=3");
-    let mut plan = ShufflePlan {
-        k: 3,
-        broadcasts: Vec::new(),
-    };
+    let mut plan = ShufflePlan::new(3);
 
-    // Singles: holder broadcasts both other groups' IVs.
+    // Round 1 — singles: holder broadcasts both other groups' IVs; one
+    // group per single-held subfile (all three nodes participate).
+    let mut singles = ShuffleRound::default();
     for (mask, holder) in [(0b001u32, 0usize), (0b010, 1), (0b100, 2)] {
         for sub in alloc.subfiles_with_mask(mask) {
+            let mut group = MulticastGroup { members: 0b111, broadcasts: Vec::new() };
             for dest in 0..3 {
                 if dest != holder {
-                    plan.broadcasts.push(Broadcast::Uncoded {
+                    group.broadcasts.push(Broadcast::Uncoded {
                         sender: holder,
                         iv: IvId { group: dest, sub },
                     });
                 }
             }
+            singles.groups.push(group);
         }
     }
+    plan.push_round(singles);
 
     // Pair sets: S12 (mask 011, missing node 2), S13 (101, missing 1),
     // S23 (110, missing 0).
@@ -306,57 +572,62 @@ pub fn plan_k3(alloc: &Allocation) -> ShufflePlan {
         }
     };
 
+    // Round 2 — the XOR pairings; every group is the full triple.
+    let mut coded = ShuffleRound::default();
+    let push_xor = |round: &mut ShuffleRound, sender: usize, a: (usize, usize), b: (usize, usize)| {
+        round.groups.push(MulticastGroup {
+            members: 0b111,
+            broadcasts: vec![Broadcast::Coded {
+                sender,
+                parts: vec![
+                    Part::whole(IvId { group: a.0, sub: a.1 }),
+                    Part::whole(IvId { group: b.0, sub: b.1 }),
+                ],
+            }],
+        });
+    };
     // alpha XORs at node 0 over (S12, S13); consume prefixes.
     for i in 0..alpha {
-        plan.broadcasts.push(Broadcast::Coded {
-            sender: 0,
-            parts: vec![
-                Part::whole(IvId { group: missing(0), sub: s12[i] }),
-                Part::whole(IvId { group: missing(1), sub: s13[i] }),
-            ],
-        });
+        push_xor(&mut coded, 0, (missing(0), s12[i]), (missing(1), s13[i]));
     }
     // beta XORs at node 1 over (S12, S23).
     for i in 0..beta {
-        plan.broadcasts.push(Broadcast::Coded {
-            sender: 1,
-            parts: vec![
-                Part::whole(IvId { group: missing(0), sub: s12[alpha + i] }),
-                Part::whole(IvId { group: missing(2), sub: s23[i] }),
-            ],
-        });
+        push_xor(&mut coded, 1, (missing(0), s12[alpha + i]), (missing(2), s23[i]));
     }
     // gamma XORs at node 2 over (S13, S23).
     for i in 0..gamma {
-        plan.broadcasts.push(Broadcast::Coded {
-            sender: 2,
-            parts: vec![
-                Part::whole(IvId { group: missing(1), sub: s13[alpha + i] }),
-                Part::whole(IvId { group: missing(2), sub: s23[beta + i] }),
-            ],
-        });
+        push_xor(&mut coded, 2, (missing(1), s13[alpha + i]), (missing(2), s23[beta + i]));
     }
-    // Leftover pair subfiles go uncoded from their lowest holder.
+    plan.push_round(coded);
+
+    // Round 3 — leftover pair subfiles go uncoded from their lowest holder.
+    let mut leftovers = ShuffleRound::default();
     for (list, consumed, pair_idx, sender) in [
         (&s12, alpha + beta, 0usize, 0usize),
         (&s13, alpha + gamma, 1, 0),
         (&s23, beta + gamma, 2, 1),
     ] {
         for &sub in &list[consumed..] {
-            plan.broadcasts.push(Broadcast::Uncoded {
-                sender,
-                iv: IvId { group: missing(pair_idx), sub },
+            leftovers.groups.push(MulticastGroup {
+                members: uncoded_members(alloc, sender, sub),
+                broadcasts: vec![Broadcast::Uncoded {
+                    sender,
+                    iv: IvId { group: missing(pair_idx), sub },
+                }],
             });
         }
     }
+    plan.push_round(leftovers);
     plan
 }
 
 /// Greedy pairing coder for arbitrary K: pairs deliveries `(d1, f1)` and
 /// `(d2, f2)` into one XOR when a common sender holds both subfiles and
-/// each destination holds the *other* subfile (so it can cancel). A valid
-/// achievable scheme for any allocation; exactly optimal pair-coding for
-/// K=3 is provided by [`plan_k3`] instead.
+/// each destination holds the *other* subfile (so it can cancel). Emits
+/// two rounds: the XOR pairs (one `{sender, d1, d2}` group each), then
+/// the unpaired leftovers uncoded. A valid achievable scheme for any
+/// allocation; exactly optimal pair-coding for K=3 is provided by
+/// [`plan_k3`] instead.
 pub fn plan_greedy(alloc: &Allocation) -> ShufflePlan {
     let k = alloc.k;
     let full = alloc.full_mask();
@@ -374,10 +645,8 @@ pub fn plan_greedy(alloc: &Allocation) -> ShufflePlan {
     }
 
     let mut used = vec![false; deliveries.len()];
-    let mut plan = ShufflePlan {
-        k,
-        broadcasts: Vec::new(),
-    };
+    let mut coded = ShuffleRound::default();
+    let mut leftovers = ShuffleRound::default();
 
     // Bucket deliveries by destination for faster partner search.
     let mut by_dest: Vec<Vec<usize>> = vec![Vec::new(); k];
@@ -414,12 +683,15 @@ pub fn plan_greedy(alloc: &Allocation) -> ShufflePlan {
                 let sender = senders.trailing_zeros() as usize;
                 used[i] = true;
                 used[j] = true;
-                plan.broadcasts.push(Broadcast::Coded {
-                    sender,
-                    parts: vec![
-                        Part::whole(IvId { group: d1, sub: f1 }),
-                        Part::whole(IvId { group: d2, sub: f2 }),
-                    ],
+                coded.groups.push(MulticastGroup {
+                    members: (1 << sender) | (1 << d1) | (1 << d2),
+                    broadcasts: vec![Broadcast::Coded {
+                        sender,
+                        parts: vec![
+                            Part::whole(IvId { group: d1, sub: f1 }),
+                            Part::whole(IvId { group: d2, sub: f2 }),
+                        ],
+                    }],
                 });
                 matched = true;
                 break 'outer;
@@ -428,37 +700,48 @@ pub fn plan_greedy(alloc: &Allocation) -> ShufflePlan {
         if !matched {
             used[i] = true;
             let sender = alloc.holders[f1].trailing_zeros() as usize;
-            plan.broadcasts.push(Broadcast::Uncoded {
-                sender,
-                iv: IvId { group: d1, sub: f1 },
+            leftovers.groups.push(MulticastGroup {
+                members: uncoded_members(alloc, sender, f1),
+                broadcasts: vec![Broadcast::Uncoded {
+                    sender,
+                    iv: IvId { group: d1, sub: f1 },
+                }],
             });
         }
     }
+    let mut plan = ShufflePlan::new(k);
+    plan.push_round(coded);
+    plan.push_round(leftovers);
     plan
 }
 
-/// Fully-uncoded baseline plan: every delivery as a plain broadcast.
+/// Fully-uncoded baseline plan: every delivery as a plain broadcast, one
+/// round, one group per subfile (sender plus all receivers).
 pub fn plan_uncoded(alloc: &Allocation) -> ShufflePlan {
     let k = alloc.k;
     let full = alloc.full_mask();
-    let mut plan = ShufflePlan {
-        k,
-        broadcasts: Vec::new(),
-    };
+    let mut round = ShuffleRound::default();
     for (sub, &h) in alloc.holders.iter().enumerate() {
         if h == full {
             continue;
         }
         let sender = h.trailing_zeros() as usize;
+        let mut group = MulticastGroup {
+            members: uncoded_members(alloc, sender, sub),
+            broadcasts: Vec::new(),
+        };
         for dest in 0..k {
             if h & (1 << dest) == 0 {
-                plan.broadcasts.push(Broadcast::Uncoded {
+                group.broadcasts.push(Broadcast::Uncoded {
                     sender,
                     iv: IvId { group: dest, sub },
                 });
             }
         }
+        round.groups.push(group);
     }
+    let mut plan = ShufflePlan::new(k);
+    plan.push_round(round);
     plan
 }
 
@@ -494,6 +777,8 @@ mod tests {
             plan.load_equations(&alloc),
             uncoded_half(&p) as f64 / 2.0
         );
+        // Single-round IR: one group per partially-held subfile.
+        assert_eq!(plan.round_count(), 1);
     }
 
     #[test]
@@ -501,7 +786,7 @@ mod tests {
         let p = Params3::new(5, 8, 11, 12).unwrap();
         let alloc = optimal_allocation(&p);
         for plan in [plan_k3(&alloc), plan_greedy(&alloc), plan_uncoded(&alloc)] {
-            for b in &plan.broadcasts {
+            for b in plan.iter_broadcasts() {
                 match b {
                     Broadcast::Uncoded { sender, iv } => {
                         assert!(alloc.holders[iv.sub] & (1 << sender) != 0);
@@ -517,6 +802,28 @@ mod tests {
                     }
                 }
             }
+        }
+    }
+
+    #[test]
+    fn every_group_member_mask_covers_its_senders() {
+        let p = Params3::new(5, 8, 11, 12).unwrap();
+        let alloc = optimal_allocation(&p);
+        for plan in [plan_k3(&alloc), plan_greedy(&alloc), plan_uncoded(&alloc)] {
+            for round in &plan.rounds {
+                for group in &round.groups {
+                    assert!(!group.broadcasts.is_empty(), "empty multicast group");
+                    for b in &group.broadcasts {
+                        assert!(
+                            group.members & (1 << b.sender()) != 0,
+                            "sender {} outside group members {:#b}",
+                            b.sender(),
+                            group.members
+                        );
+                    }
+                }
+            }
+            assert!(plan.validate(3, alloc.n_sub()).is_ok());
         }
     }
 
@@ -568,12 +875,13 @@ mod tests {
     fn plan_k3_never_double_consumes_a_delivery() {
         // Regression guard for the prefix-consumption bookkeeping: every
         // (dest, subfile) delivery appears in exactly one broadcast.
-        for (m1, m2, m3, n) in [(6u64, 7, 7, 12u64), (5, 8, 11, 12), (4, 5, 6, 12), (10, 10, 10, 12)] {
+        let cases = [(6u64, 7, 7, 12u64), (5, 8, 11, 12), (4, 5, 6, 12), (10, 10, 10, 12)];
+        for (m1, m2, m3, n) in cases {
             let p = Params3::new(m1, m2, m3, n).unwrap();
             let alloc = optimal_allocation(&p);
             let plan = plan_k3(&alloc);
             let mut seen = std::collections::HashSet::new();
-            for b in &plan.broadcasts {
+            for b in plan.iter_broadcasts() {
                 let ivs: Vec<IvId> = match b {
                     Broadcast::Uncoded { iv, .. } => vec![*iv],
                     Broadcast::Coded { parts, .. } => parts.iter().map(|p| p.iv).collect(),
@@ -593,19 +901,33 @@ mod tests {
         let alloc = optimal_allocation(&p);
         let mut plan = plan_k3(&alloc);
         assert!(plan.validate(3, alloc.n_sub()).is_ok());
-        plan.broadcasts.push(Broadcast::Uncoded {
+        plan.push_broadcast(0b001, Broadcast::Uncoded {
             sender: 7,
             iv: IvId { group: 0, sub: 0 },
         });
         assert!(plan.validate(3, alloc.n_sub()).is_err());
-        plan.broadcasts.pop();
-        plan.broadcasts.push(Broadcast::Uncoded {
+        plan.pop_broadcast();
+        plan.push_broadcast(0b001, Broadcast::Uncoded {
             sender: 0,
             iv: IvId { group: 0, sub: 10_000 },
         });
         assert!(plan.validate(3, alloc.n_sub()).is_err());
-        plan.broadcasts.pop();
-        plan.broadcasts.push(Broadcast::Coded { sender: 0, parts: vec![] });
+        plan.pop_broadcast();
+        plan.push_broadcast(0b001, Broadcast::Coded { sender: 0, parts: vec![] });
+        assert!(plan.validate(3, alloc.n_sub()).is_err());
+        plan.pop_broadcast();
+        // A group whose members exclude its sender is malformed.
+        plan.push_broadcast(0b010, Broadcast::Uncoded {
+            sender: 0,
+            iv: IvId { group: 1, sub: 0 },
+        });
+        assert!(plan.validate(3, alloc.n_sub()).is_err());
+        // Out-of-range member bits too.
+        plan.pop_broadcast();
+        plan.push_broadcast(0b1001, Broadcast::Uncoded {
+            sender: 0,
+            iv: IvId { group: 1, sub: 0 },
+        });
         assert!(plan.validate(3, alloc.n_sub()).is_err());
     }
 
@@ -617,10 +939,89 @@ mod tests {
             let text = plan.to_json().to_string_pretty();
             let back = ShufflePlan::from_json(&crate::util::json::Json::parse(&text).unwrap())
                 .unwrap();
-            assert_eq!(back.k, plan.k);
-            assert_eq!(back.broadcasts, plan.broadcasts);
+            assert_eq!(back, plan, "round/group structure must survive serialization");
         }
         assert!(ShufflePlan::from_json(&Json::Obj(Default::default())).is_err());
+    }
+
+    #[test]
+    fn legacy_flat_broadcast_json_still_parses() {
+        // v1 artifacts carried a flat "broadcasts" list; the read shim
+        // wraps them in a single round, one group per broadcast.
+        let text = r#"{
+            "k": 3,
+            "broadcasts": [
+                {"type": "uncoded", "sender": 0, "group": 1, "sub": 4},
+                {"type": "coded", "sender": 1, "parts": [
+                    {"group": 2, "sub": 6, "seg": 0, "nseg": 1},
+                    {"group": 0, "sub": 9, "seg": 0, "nseg": 1}
+                ]}
+            ]
+        }"#;
+        let plan = ShufflePlan::from_json(&Json::parse(text).unwrap()).unwrap();
+        assert_eq!(plan.k, 3);
+        assert_eq!(plan.round_count(), 1);
+        assert_eq!(plan.n_broadcasts(), 2);
+        let flat: Vec<&Broadcast> = plan.iter_broadcasts().collect();
+        assert!(matches!(flat[0], Broadcast::Uncoded { sender: 0, .. }));
+        assert!(matches!(flat[1], Broadcast::Coded { sender: 1, .. }));
+        // Each legacy broadcast becomes its own sender-only group.
+        assert_eq!(plan.rounds[0].groups.len(), 2);
+        assert_eq!(plan.rounds[0].groups[0].members, 0b001);
+        assert_eq!(plan.rounds[0].groups[1].members, 0b010);
+    }
+
+    #[test]
+    fn validate_rejects_empty_rounds_and_groups() {
+        // Deserialized v2 artifacts can carry zero-broadcast rounds or
+        // groups that no builder produces; they would desync the
+        // per-round ledger sections from round_count, so validation
+        // rejects them.
+        let empty_round = r#"{"k": 3, "rounds": [
+            {"groups": []},
+            {"groups": [{"members": 3, "broadcasts": [
+                {"type": "uncoded", "sender": 0, "group": 1, "sub": 0}
+            ]}]}
+        ]}"#;
+        let plan = ShufflePlan::from_json(&Json::parse(empty_round).unwrap()).unwrap();
+        assert!(plan.validate(3, 4).is_err());
+
+        let empty_group = r#"{"k": 3, "rounds": [
+            {"groups": [{"members": 1, "broadcasts": []}]}
+        ]}"#;
+        let plan = ShufflePlan::from_json(&Json::parse(empty_group).unwrap()).unwrap();
+        assert!(plan.validate(3, 4).is_err());
+    }
+
+    #[test]
+    fn round_starts_and_sizes_tile_the_flat_order() {
+        let p = Params3::new(5, 8, 11, 12).unwrap();
+        let alloc = optimal_allocation(&p);
+        for plan in [plan_k3(&alloc), plan_greedy(&alloc), plan_uncoded(&alloc)] {
+            let starts = plan.round_starts();
+            let sizes = plan.round_sizes();
+            assert_eq!(starts.len(), plan.round_count());
+            assert_eq!(sizes.len(), plan.round_count());
+            let mut at = 0usize;
+            for (s, z) in starts.iter().zip(&sizes) {
+                assert_eq!(*s, at);
+                assert!(*z > 0, "empty rounds must have been dropped");
+                at += z;
+            }
+            assert_eq!(at, plan.n_broadcasts());
+        }
+    }
+
+    #[test]
+    fn push_pop_broadcast_roundtrips() {
+        let mut plan = ShufflePlan::new(3);
+        assert!(plan.pop_broadcast().is_none());
+        let b = Broadcast::Uncoded { sender: 1, iv: IvId { group: 0, sub: 2 } };
+        plan.push_broadcast(0b011, b.clone());
+        assert_eq!(plan.n_broadcasts(), 1);
+        assert_eq!(plan.pop_broadcast(), Some(b));
+        assert_eq!(plan.n_broadcasts(), 0);
+        assert_eq!(plan.round_count(), 0, "emptied rounds are pruned");
     }
 
     #[test]
@@ -637,7 +1038,7 @@ mod tests {
             }
         }
         let mut seen = std::collections::HashSet::new();
-        for b in &plan.broadcasts {
+        for b in plan.iter_broadcasts() {
             if let Broadcast::Uncoded { iv, .. } = b {
                 assert!(seen.insert(*iv));
             }

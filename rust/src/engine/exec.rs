@@ -267,7 +267,7 @@ fn assemble_and_meter(
 }
 
 /// Bounds-check a [`DecodeSchedule`] against `plan` and return the
-/// per-broadcast scheduled-consumer counts.
+/// per-broadcast scheduled-consumer counts (flat broadcast indices).
 fn schedule_consumers(
     plan: &ShufflePlan,
     schedule: &DecodeSchedule,
@@ -280,7 +280,7 @@ fn schedule_consumers(
             k
         )));
     }
-    let n_broadcasts = plan.broadcasts.len();
+    let n_broadcasts = plan.n_broadcasts();
     let mut remaining = vec![0u32; n_broadcasts];
     for order in &schedule.order {
         for &bi in order {
@@ -304,7 +304,7 @@ fn replay_node_schedule(
     node: usize,
     st: &mut NodeState,
     order: &[usize],
-    broadcasts: &[Broadcast],
+    broadcasts: &[&Broadcast],
     msgs: &[Option<Vec<u8>>],
 ) -> Result<()> {
     for &bi in order {
@@ -313,7 +313,7 @@ fn replay_node_schedule(
                 "internal: message {bi} unavailable for node {node}"
             ))
         })?;
-        match &broadcasts[bi] {
+        match broadcasts[bi] {
             Broadcast::Uncoded { sender, iv } => {
                 if node != *sender {
                     st.learn_part(&Part::whole(*iv), msg);
@@ -333,13 +333,14 @@ fn replay_node_schedule(
 }
 
 /// Execute `plan` along a pre-verified [`DecodeSchedule`]: broadcasts are
-/// transmitted (metered) in plan order, and each node's decode order is
-/// replayed as its next scheduled message becomes available — no
-/// fixpoint, no deferred-message queue. A message buffer is dropped as
-/// soon as its last scheduled consumer has decoded it, so peak memory is
-/// bounded by the messages still awaiting a consumer, not the whole
-/// shuffle payload. The schedule was proven at plan-build time; a
-/// violation here is an internal error.
+/// transmitted (metered) in flattened plan order — round by round, each
+/// round opening its own [`crate::net::PhaseLedger`] section — and each
+/// node's decode order is replayed as its next scheduled message becomes
+/// available — no fixpoint, no deferred-message queue. A message buffer
+/// is dropped as soon as its last scheduled consumer has decoded it, so
+/// peak memory is bounded by the messages still awaiting a consumer, not
+/// the whole shuffle payload. The schedule was proven at plan-build time;
+/// a violation here is an internal error.
 pub fn execute_planned(
     plan: &ShufflePlan,
     schedule: &DecodeSchedule,
@@ -349,13 +350,18 @@ pub fn execute_planned(
     let k = states.len();
     // Consumers per broadcast, from the schedule (bounds-checked here).
     let mut remaining = schedule_consumers(plan, schedule, k)?;
-    let n_broadcasts = plan.broadcasts.len();
+    let flat: Vec<&Broadcast> = plan.iter_broadcasts().collect();
+    let starts_round = plan.round_start_flags();
+    let n_broadcasts = flat.len();
 
     let mut payload_bytes = 0u64;
     let mut wire_bytes = 0u64;
     let mut msgs: Vec<Option<Vec<u8>>> = vec![None; n_broadcasts];
     let mut cursors = vec![0usize; k];
-    for (bi, b) in plan.broadcasts.iter().enumerate() {
+    for (bi, &b) in flat.iter().enumerate() {
+        if starts_round[bi] {
+            net.begin_round();
+        }
         let msg = assemble_and_meter(b, states, net, &mut payload_bytes, &mut wire_bytes)?;
         if remaining[bi] > 0 {
             msgs[bi] = Some(msg);
@@ -374,7 +380,7 @@ pub fn execute_planned(
                         "internal: message {next} dropped before node {node} consumed it"
                     ))
                 })?;
-                match &plan.broadcasts[next] {
+                match flat[next] {
                     Broadcast::Uncoded { sender, iv } => {
                         if node != *sender {
                             states[node].learn_part(&Part::whole(*iv), msg);
@@ -436,7 +442,8 @@ pub fn execute_planned_parallel(
 ) -> Result<ShuffleOutcome> {
     let k = states.len();
     schedule_consumers(plan, schedule, k)?;
-    let n_broadcasts = plan.broadcasts.len();
+    let flat: Vec<&Broadcast> = plan.iter_broadcasts().collect();
+    let n_broadcasts = flat.len();
     let threads = threads.clamp(1, k.max(1));
     if n_broadcasts == 0 {
         return Ok(ShuffleOutcome { payload_bytes: 0, wire_bytes: 0, messages: 0 });
@@ -451,6 +458,7 @@ pub fn execute_planned_parallel(
     let mut msgs: Vec<Option<Vec<u8>>> = vec![None; n_broadcasts];
     let assembled_all = {
         let shared: &[NodeState] = states;
+        let flat_ref: &[&Broadcast] = &flat;
         let chunk = n_broadcasts.div_ceil(threads);
         std::thread::scope(|scope| {
             let mut handles = Vec::new();
@@ -458,7 +466,7 @@ pub fn execute_planned_parallel(
                 let base = ci * chunk;
                 handles.push(scope.spawn(move || {
                     for (off, slot) in out.iter_mut().enumerate() {
-                        match assemble_message(&plan.broadcasts[base + off], shared) {
+                        match assemble_message(flat_ref[base + off], shared) {
                             Some(m) => *slot = Some(m),
                             None => return false,
                         }
@@ -487,11 +495,16 @@ pub fn execute_planned_parallel(
         return execute_planned(plan, schedule, states, net);
     }
 
-    // ---- Phase 2: meter in plan order (identical to the serial path,
-    // including the per-sender iv_bytes lookup).
+    // ---- Phase 2: meter in flattened plan order (identical to the
+    // serial path, including the per-sender iv_bytes lookup and the
+    // per-round ledger sections).
     let mut payload_bytes = 0u64;
     let mut wire_bytes = 0u64;
-    for b in &plan.broadcasts {
+    let starts_round = plan.round_start_flags();
+    for (bi, &b) in flat.iter().enumerate() {
+        if starts_round[bi] {
+            net.begin_round();
+        }
         let (payload, wire) = broadcast_sizes(b, states[b.sender()].iv_bytes);
         payload_bytes += payload as u64;
         wire_bytes += wire as u64;
@@ -501,6 +514,7 @@ pub fn execute_planned_parallel(
     // ---- Phase 3: per-node decode replay, sharded across workers.
     {
         let msgs_ref: &[Option<Vec<u8>>] = &msgs;
+        let flat_ref: &[&Broadcast] = &flat;
         let chunk = k.div_ceil(threads);
         std::thread::scope(|scope| {
             let mut handles = Vec::new();
@@ -513,7 +527,7 @@ pub fn execute_planned_parallel(
                             node,
                             st,
                             &schedule.order[node],
-                            &plan.broadcasts,
+                            flat_ref,
                             msgs_ref,
                         )?;
                     }
@@ -538,6 +552,7 @@ pub fn execute_planned_parallel(
 
 /// Execute `plan` without a schedule: senders read `states[sender]`,
 /// every other node decodes, deferred messages iterate to fixpoint.
+/// Meters round by round like the planned paths.
 pub fn execute_shuffle(
     plan: &ShufflePlan,
     states: &mut [NodeState],
@@ -549,7 +564,12 @@ pub fn execute_shuffle(
     // Deferred messages per node for fixpoint decoding.
     let mut pending: Vec<Vec<(Vec<Part>, Vec<u8>)>> = vec![Vec::new(); k];
 
-    for b in &plan.broadcasts {
+    let flat: Vec<&Broadcast> = plan.iter_broadcasts().collect();
+    let starts_round = plan.round_start_flags();
+    for (bi, &b) in flat.iter().enumerate() {
+        if starts_round[bi] {
+            net.begin_round();
+        }
         let msg = assemble_and_meter(b, states, net, &mut payload_bytes, &mut wire_bytes)?;
         match b {
             Broadcast::Uncoded { sender, iv } => {
@@ -596,7 +616,7 @@ pub fn execute_shuffle(
     Ok(ShuffleOutcome {
         payload_bytes,
         wire_bytes,
-        messages: plan.broadcasts.len() as u64,
+        messages: flat.len() as u64,
     })
 }
 

@@ -549,6 +549,14 @@ mod tests {
         assert_eq!(exec.batches_run(), 3);
         // One metering epoch per batch.
         assert_eq!(exec.net_report().epoch, 3);
+        // Per-round ledger sections mirror the plan's IR, and their byte
+        // totals re-sum to the phase total.
+        let nr = exec.net_report();
+        assert_eq!(nr.rounds.len(), plan.shuffle.round_count());
+        assert_eq!(
+            nr.rounds.iter().map(|s| s.bytes).sum::<u64>(),
+            nr.total_bytes
+        );
         for r in &reports {
             // Measured equals predicted, batch after batch.
             assert_eq!(r.load_equations, plan.predicted.load_equations);

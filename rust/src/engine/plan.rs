@@ -36,6 +36,8 @@ pub struct PredictedLoads {
     /// Uncoded baseline for the same allocation, IV-equation units.
     pub uncoded_equations: f64,
     pub messages: u64,
+    /// Shuffle rounds of the plan's IR (multicast stages).
+    pub rounds: u64,
     pub payload_bytes: u64,
     pub wire_bytes: u64,
     /// Map barrier time under the per-node compute rates (virtual s).
@@ -55,7 +57,15 @@ impl PredictedLoads {
         let mut payload_bytes = 0u64;
         let mut wire_bytes = 0u64;
         let mut net = cluster.network()?;
-        for b in &shuffle.broadcasts {
+        // Same round-sectioned, flat-order metering pass as the executor
+        // (same `round_start_flags` encoding — see engine/exec.rs), so
+        // predicted and measured accounting — including the per-round
+        // NetReport sections — cannot drift.
+        let starts_round = shuffle.round_start_flags();
+        for (bi, b) in shuffle.iter_broadcasts().enumerate() {
+            if starts_round[bi] {
+                net.begin_round();
+            }
             let (payload, wire) = broadcast_sizes(b, iv_bytes);
             payload_bytes += payload as u64;
             wire_bytes += wire as u64;
@@ -70,7 +80,8 @@ impl PredictedLoads {
             load_equations: shuffle.load_equations(alloc),
             load_units: shuffle.load_units(),
             uncoded_equations: alloc.uncoded_units() as f64 / alloc.sp as f64,
-            messages: shuffle.broadcasts.len() as u64,
+            messages: shuffle.n_broadcasts() as u64,
+            rounds: shuffle.round_count() as u64,
             payload_bytes,
             wire_bytes,
             map_time_s,
@@ -84,6 +95,7 @@ impl PredictedLoads {
         m.insert("load_units".into(), Json::Num(self.load_units));
         m.insert("uncoded_equations".into(), Json::Num(self.uncoded_equations));
         m.insert("messages".into(), Json::Num(self.messages as f64));
+        m.insert("rounds".into(), Json::Num(self.rounds as f64));
         m.insert("payload_bytes".into(), Json::Num(self.payload_bytes as f64));
         m.insert("wire_bytes".into(), Json::Num(self.wire_bytes as f64));
         m.insert("map_time_s".into(), Json::Num(self.map_time_s));
@@ -141,6 +153,11 @@ pub struct Plan {
     /// Decode order proven at build time; execution replays it verbatim.
     pub schedule: DecodeSchedule,
     pub predicted: PredictedLoads,
+    /// Perfect collections the placer's enumeration cap dropped, as
+    /// `(subsystem j, count)` — non-empty only for the §V LP when
+    /// Remark 7's cap truncated. Surfaced by the CLI as a warning;
+    /// informational in serialized artifacts.
+    pub dropped_collections: Vec<(usize, usize)>,
     /// [`shape_fingerprint`] of (cluster, job shape).
     pub fingerprint: u64,
 }
@@ -149,6 +166,7 @@ impl Plan {
     /// Validate and assemble a plan from its parts: checks the job, the
     /// allocation (against capacities as upper bounds), and decodability
     /// — the single validation gate for built *and* deserialized plans.
+    #[allow(clippy::too_many_arguments)]
     pub fn assemble(
         cluster: ClusterSpec,
         job: JobSpec,
@@ -157,6 +175,7 @@ impl Plan {
         mode: ShuffleMode,
         alloc: Allocation,
         shuffle: ShufflePlan,
+        dropped_collections: Vec<(usize, usize)>,
     ) -> Result<Plan> {
         job.validate(cluster.k())?;
         if alloc.k != cluster.k() {
@@ -181,6 +200,7 @@ impl Plan {
             shuffle,
             schedule,
             predicted,
+            dropped_collections,
             fingerprint,
         })
     }
@@ -209,7 +229,7 @@ impl Plan {
 
     pub fn to_json(&self) -> Json {
         let mut m = BTreeMap::new();
-        m.insert("version".into(), Json::Num(1.0));
+        m.insert("version".into(), Json::Num(2.0));
         m.insert("placer".into(), Json::Str(self.placer.clone()));
         m.insert("coder".into(), Json::Str(self.coder.clone()));
         m.insert("mode".into(), Json::Str(self.mode.as_str().into()));
@@ -219,6 +239,19 @@ impl Plan {
         m.insert("allocation".into(), self.alloc.to_json());
         m.insert("shuffle".into(), self.shuffle.to_json());
         m.insert("predicted".into(), self.predicted.to_json());
+        if !self.dropped_collections.is_empty() {
+            m.insert(
+                "dropped_collections".into(),
+                Json::Arr(
+                    self.dropped_collections
+                        .iter()
+                        .map(|&(j, d)| {
+                            Json::Arr(vec![Json::Num(j as f64), Json::Num(d as f64)])
+                        })
+                        .collect(),
+                ),
+            );
+        }
         Json::Obj(m)
     }
 
@@ -229,11 +262,13 @@ impl Plan {
     /// Deserialize and **re-validate**: the decode schedule and the
     /// predictions are recomputed from the parsed allocation and shuffle
     /// plan, so a tampered or stale artifact fails with a typed error
-    /// instead of executing.
+    /// instead of executing. Accepts schema version 2 (round-structured
+    /// shuffle IR) and legacy version 1 (flat broadcast list — read as a
+    /// single-round plan; see DESIGN.md "Shuffle IR v2").
     pub fn from_json(j: &Json) -> Result<Plan> {
         let bad = |f: &str| HetcdcError::Json(format!("plan: missing or invalid '{f}'"));
         if let Some(v) = j.get("version") {
-            if v.as_usize() != Some(1) {
+            if !matches!(v.as_usize(), Some(1) | Some(2)) {
                 return Err(HetcdcError::Json(format!(
                     "plan: unsupported version {v}"
                 )));
@@ -256,7 +291,20 @@ impl Plan {
             .to_string();
         let alloc = Allocation::from_json(j.get("allocation").ok_or_else(|| bad("allocation"))?)?;
         let shuffle = ShufflePlan::from_json(j.get("shuffle").ok_or_else(|| bad("shuffle"))?)?;
-        Plan::assemble(cluster, job, placer, coder, mode, alloc, shuffle)
+        // Informational diagnostics: absent in v1 artifacts, lenient here.
+        let dropped = j
+            .get("dropped_collections")
+            .and_then(|v| v.as_arr())
+            .map(|arr| {
+                arr.iter()
+                    .filter_map(|pair| {
+                        let p = pair.as_arr()?;
+                        Some((p.first()?.as_usize()?, p.get(1)?.as_usize()?))
+                    })
+                    .collect()
+            })
+            .unwrap_or_default();
+        Plan::assemble(cluster, job, placer, coder, mode, alloc, shuffle, dropped)
     }
 
     pub fn from_json_str(text: &str) -> Result<Plan> {
@@ -338,17 +386,22 @@ impl<'a> JobBuilder<'a> {
         // placers and coders never observe a malformed job (n_files = 0
         // would divide-by-zero in the homogeneous placer) or allocation.
         self.job.validate(self.cluster.k())?;
-        let (placer_name, alloc, default_coder) = match self.custom {
-            Some(a) => ("custom".to_string(), a, "pairing"),
+        let (placer_name, placement, default_coder) = match self.custom {
+            Some(a) => (
+                "custom".to_string(),
+                crate::placement::Placement::exact(a),
+                "pairing",
+            ),
             None => {
                 let placer = placer_by_name(&self.placer, self.cluster)?;
                 (
                     placer.name().to_string(),
-                    placer.place(self.cluster, self.job)?,
+                    placer.place_report(self.cluster, self.job)?,
                     placer.default_coder(),
                 )
             }
         };
+        let alloc = placement.alloc;
         alloc.validate_le(&self.cluster.storage(), self.job.n_files)?;
         let coder_name = match self.mode {
             ShuffleMode::Uncoded => "uncoded".to_string(),
@@ -364,6 +417,7 @@ impl<'a> JobBuilder<'a> {
             self.mode,
             alloc,
             shuffle,
+            placement.dropped_collections,
         )
     }
 }
@@ -449,10 +503,53 @@ mod tests {
         assert_eq!(back.coder, plan.coder);
         assert_eq!(back.mode, plan.mode);
         assert_eq!(back.alloc, plan.alloc);
-        assert_eq!(back.shuffle.broadcasts, plan.shuffle.broadcasts);
+        assert_eq!(back.shuffle, plan.shuffle);
         assert_eq!(back.schedule, plan.schedule);
         assert_eq!(back.predicted, plan.predicted);
+        assert_eq!(back.dropped_collections, plan.dropped_collections);
         assert_eq!(back.fingerprint, plan.fingerprint);
+    }
+
+    #[test]
+    fn legacy_v1_flat_plan_artifact_still_loads() {
+        // A v1 artifact (flat "broadcasts" list, version 1) must load via
+        // the legacy-read shim as a single-round plan with identical
+        // loads. Build a v2 plan and down-convert its JSON to v1 shape.
+        let c = cluster(&[6, 7, 7]);
+        let job = JobSpec::terasort(12);
+        let plan = JobBuilder::new(&c, &job).placer("optimal-k3").build().unwrap();
+        let mut j = plan.to_json();
+        let Json::Obj(m) = &mut j else { panic!("plan json is an object") };
+        m.insert("version".into(), Json::Num(1.0));
+        let shuffle = m.get("shuffle").unwrap().clone();
+        let mut flat = Vec::new();
+        for round in shuffle.get("rounds").unwrap().as_arr().unwrap() {
+            for group in round.get("groups").unwrap().as_arr().unwrap() {
+                for b in group.get("broadcasts").unwrap().as_arr().unwrap() {
+                    flat.push(b.clone());
+                }
+            }
+        }
+        let mut sm = BTreeMap::new();
+        sm.insert("k".into(), Json::Num(plan.shuffle.k as f64));
+        sm.insert("broadcasts".into(), Json::Arr(flat));
+        m.insert("shuffle".into(), Json::Obj(sm));
+
+        let back = Plan::from_json(&j).unwrap();
+        assert_eq!(back.shuffle.round_count(), 1, "legacy plans read as one round");
+        assert_eq!(back.shuffle.n_broadcasts(), plan.shuffle.n_broadcasts());
+        assert_eq!(back.predicted.payload_bytes, plan.predicted.payload_bytes);
+        assert_eq!(back.predicted.load_equations, plan.predicted.load_equations);
+        assert_eq!(back.predicted.rounds, 1);
+    }
+
+    #[test]
+    fn predicted_rounds_track_the_ir() {
+        let c = cluster(&[6, 7, 7]);
+        let job = JobSpec::terasort(12);
+        let plan = JobBuilder::new(&c, &job).build().unwrap();
+        assert_eq!(plan.predicted.rounds, plan.shuffle.round_count() as u64);
+        assert!(plan.predicted.rounds >= 1);
     }
 
     #[test]
@@ -461,7 +558,7 @@ mod tests {
         let job = JobSpec::terasort(12);
         let mut plan = JobBuilder::new(&c, &job).build().unwrap();
         // Drop one broadcast: the JSON still parses but no longer decodes.
-        plan.shuffle.broadcasts.pop();
+        plan.shuffle.pop_broadcast();
         let text = plan.to_json_string();
         assert!(matches!(
             Plan::from_json_str(&text).unwrap_err(),

@@ -3,9 +3,10 @@
 //! A production-shaped implementation of *On Heterogeneous Coded
 //! Distributed Computing* (Kiamari, Wang, Avestimehr, 2017): a
 //! MapReduce-style distributed computing framework whose Shuffle phase is
-//! **coded** (XOR multicast, eqs. (8)–(10)) and whose file placement is
-//! optimized for clusters with **heterogeneous per-node storage**
-//! (Theorem 1 for K=3; the §V linear program for general K).
+//! **coded** (multi-round XOR multicast on a group-structured shuffle IR,
+//! eqs. (8)–(10)) and whose file placement is optimized for clusters with
+//! **heterogeneous per-node storage** (Theorem 1 for K=3; the §V linear
+//! program for general K; a combinatorial grid design for large K).
 //!
 //! Three-layer architecture (see DESIGN.md):
 //! * **Layer 1/2 (build-time Python)** — Pallas kernels + JAX Map/Reduce
@@ -52,8 +53,10 @@
 //!
 //! Theory quick tour:
 //! * [`theory`] — Theorem 1 closed forms, converse bounds, baselines.
-//! * [`placement`] — optimal K=3 placements, Lemma-1 pairing, §V LP.
-//! * [`coding`] — shuffle plans, the symbolic decoder, decode schedules.
+//! * [`placement`] — optimal K=3 placements, Lemma-1 pairing, §V LP, the
+//!   combinatorial grid design.
+//! * [`coding`] — the round/group shuffle IR, the coders, the symbolic
+//!   decoder, decode schedules.
 //! * [`lp`] — two-phase simplex (f64 + exact rational), from scratch.
 
 pub mod bench;

@@ -73,7 +73,11 @@ impl<S: Scalar> Tableau<S> {
 
     /// Minimize `cost` (length cols-1) starting from the current basis.
     /// Returns (objective value, pivots) or Unbounded.
-    fn optimize(&mut self, cost: &[S], allow: &dyn Fn(usize) -> bool) -> Result<(S, usize), LpError> {
+    fn optimize(
+        &mut self,
+        cost: &[S],
+        allow: &dyn Fn(usize) -> bool,
+    ) -> Result<(S, usize), LpError> {
         let n = self.cols - 1;
         let mut pivots = 0usize;
         loop {

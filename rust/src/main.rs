@@ -84,6 +84,7 @@ fn fail(e: impl std::fmt::Display) -> i32 {
     1
 }
 
+#[rustfmt::skip]
 const STORAGE_SPECS: &[ArgSpec] = &[
     ArgSpec { name: "storage", help: "comma-separated per-node storage (files)", takes_value: true, default: Some("6,7,7") },
     ArgSpec { name: "n", help: "number of files N", takes_value: true, default: Some("12") },
@@ -112,7 +113,10 @@ fn cmd_loadstar(argv: &[String]) -> i32 {
         Err(e) => return fail(e),
     };
     if args.flag("help") {
-        println!("{}", usage("hetcdc loadstar", "Theorem-1 minimum communication load", STORAGE_SPECS));
+        println!(
+            "{}",
+            usage("hetcdc loadstar", "Theorem-1 minimum communication load", STORAGE_SPECS)
+        );
         return 0;
     }
     let p = match parse_params3(&args) {
@@ -152,7 +156,10 @@ fn cmd_place(argv: &[String]) -> i32 {
         Err(e) => return fail(e),
     };
     if args.flag("help") {
-        println!("{}", usage("hetcdc place", "Optimal K=3 file placement (Figs 5-11)", STORAGE_SPECS));
+        println!(
+            "{}",
+            usage("hetcdc place", "Optimal K=3 file placement (Figs 5-11)", STORAGE_SPECS)
+        );
         return 0;
     }
     let p = match parse_params3(&args) {
@@ -172,16 +179,18 @@ fn cmd_place(argv: &[String]) -> i32 {
     }
     let plan = hetcdc::coding::plan::plan_k3(&alloc);
     println!(
-        "achievable load {} (L* = {}), {} broadcasts ({:.0}% coded)",
+        "achievable load {} (L* = {}), {} broadcasts in {} rounds ({:.0}% coded)",
         plan.load_equations(&alloc),
         load::lstar(&p),
-        plan.broadcasts.len(),
+        plan.n_broadcasts(),
+        plan.round_count(),
         100.0 * plan.coded_fraction()
     );
     0
 }
 
 fn cmd_lp(argv: &[String]) -> i32 {
+    #[rustfmt::skip]
     let specs: Vec<ArgSpec> = vec![
         ArgSpec { name: "storage", help: "comma-separated per-node storage", takes_value: true, default: Some("3,5,6,8") },
         ArgSpec { name: "n", help: "number of files N", takes_value: true, default: Some("12") },
@@ -238,6 +247,21 @@ fn cmd_lp(argv: &[String]) -> i32 {
     0
 }
 
+/// Surface the §V LP's Remark-7 truncation on stderr (GitHub-annotation
+/// style, so CI runs turn it into a visible warning): a capped
+/// enumeration means the placement may be suboptimal, and that must never
+/// pass silently.
+fn warn_dropped_collections(plan: &Plan) {
+    for &(j, d) in &plan.dropped_collections {
+        eprintln!(
+            "::warning title=LP collection cap::subsystem j={j}: {d} perfect \
+             collection(s) dropped by the enumeration cap — the {} placement \
+             may be suboptimal for this shape (inspect with `hetcdc lp --cap N`)",
+            plan.placer
+        );
+    }
+}
+
 /// Shared cluster/job parsing for `plan` and `run`.
 fn parse_cluster_job(args: &Args) -> Result<(ClusterSpec, JobSpec), HetcdcError> {
     let n = args
@@ -270,13 +294,14 @@ fn parse_cluster_job(args: &Args) -> Result<(ClusterSpec, JobSpec), HetcdcError>
 }
 
 fn cmd_plan(argv: &[String]) -> i32 {
+    #[rustfmt::skip]
     let specs: Vec<ArgSpec> = vec![
         ArgSpec { name: "workload", help: "wordcount | terasort", takes_value: true, default: Some("terasort") },
         ArgSpec { name: "n", help: "number of files N", takes_value: true, default: Some("12") },
         ArgSpec { name: "storage", help: "per-node storage (ignored with --config)", takes_value: true, default: Some("6,7,7") },
         ArgSpec { name: "config", help: "cluster JSON config path", takes_value: true, default: None },
-        ArgSpec { name: "placement", help: "auto | optimal-k3 | lp-general | homogeneous | oblivious", takes_value: true, default: Some("auto") },
-        ArgSpec { name: "coder", help: "pairing | greedy | multicast | memshare (default: placer's)", takes_value: true, default: None },
+        ArgSpec { name: "placement", help: "auto | optimal-k3 | lp-general | homogeneous | oblivious | combinatorial", takes_value: true, default: Some("auto") },
+        ArgSpec { name: "coder", help: "pairing | greedy | multicast | memshare | combinatorial (default: placer's)", takes_value: true, default: None },
         ArgSpec { name: "mode", help: "coded | uncoded", takes_value: true, default: Some("coded") },
         ArgSpec { name: "out", help: "write plan JSON here (default: stdout)", takes_value: true, default: None },
         ArgSpec { name: "threads", help: "certify the plan for sharded execution with N workers (0 = auto)", takes_value: true, default: Some("1") },
@@ -312,6 +337,7 @@ fn cmd_plan(argv: &[String]) -> i32 {
         Ok(p) => p,
         Err(e) => return fail(e),
     };
+    warn_dropped_collections(&plan);
     // --threads N (N != 1): certify the plan for sharded execution by
     // diffing one serial batch against one parallel batch, bit for bit.
     if threads != 1 {
@@ -446,6 +472,7 @@ fn run_batches(
 }
 
 fn cmd_run(argv: &[String]) -> i32 {
+    #[rustfmt::skip]
     let specs: Vec<ArgSpec> = vec![
         ArgSpec { name: "workload", help: "wordcount | terasort", takes_value: true, default: Some("terasort") },
         ArgSpec { name: "n", help: "number of files N", takes_value: true, default: Some("12") },
@@ -457,8 +484,8 @@ fn cmd_run(argv: &[String]) -> i32 {
         ArgSpec { name: "pipeline", help: "overlap Map of batch i+1 with Shuffle of batch i (bit-identical results; needs --batches >= 2 to overlap)", takes_value: false, default: None },
         ArgSpec { name: "mode", help: "coded | uncoded | both", takes_value: true, default: Some("both") },
         ArgSpec { name: "backend", help: "native | xla", takes_value: true, default: Some("native") },
-        ArgSpec { name: "placement", help: "auto | optimal-k3 | lp-general | homogeneous | oblivious", takes_value: true, default: Some("auto") },
-        ArgSpec { name: "coder", help: "pairing | greedy | multicast | memshare (default: placer's)", takes_value: true, default: None },
+        ArgSpec { name: "placement", help: "auto | optimal-k3 | lp-general | homogeneous | oblivious | combinatorial", takes_value: true, default: Some("auto") },
+        ArgSpec { name: "coder", help: "pairing | greedy | multicast | memshare | combinatorial (default: placer's)", takes_value: true, default: None },
         ArgSpec { name: "artifacts", help: "artifact dir for --backend xla", takes_value: true, default: None },
         ArgSpec { name: "json", help: "emit machine-readable JSON reports", takes_value: false, default: None },
         ArgSpec { name: "help", help: "show usage", takes_value: false, default: None },
@@ -513,6 +540,7 @@ fn cmd_run(argv: &[String]) -> i32 {
             Ok(p) => p,
             Err(e) => return fail(e),
         };
+        warn_dropped_collections(&plan);
         let result = match rt_holder.as_mut() {
             Some(rt) => {
                 let mut be = XlaBackend::new(rt);
@@ -550,6 +578,7 @@ fn cmd_run(argv: &[String]) -> i32 {
             Ok(p) => p,
             Err(e) => return fail(e),
         };
+        warn_dropped_collections(&plan);
         let result = match rt_holder.as_mut() {
             Some(rt) => {
                 let mut be = XlaBackend::new(rt);
@@ -583,6 +612,7 @@ fn cmd_run(argv: &[String]) -> i32 {
 /// baseline. Exit codes: 0 = ok (or baseline pending), 1 = regression or
 /// execution failure.
 fn cmd_bench_json(argv: &[String]) -> i32 {
+    #[rustfmt::skip]
     let specs: Vec<ArgSpec> = vec![
         ArgSpec { name: "out", help: "write the bench artifact here", takes_value: true, default: Some("BENCH_shuffle.json") },
         ArgSpec { name: "baseline", help: "committed baseline JSON to gate against", takes_value: true, default: None },
@@ -596,7 +626,10 @@ fn cmd_bench_json(argv: &[String]) -> i32 {
         Err(e) => return fail(e),
     };
     if args.flag("help") {
-        println!("{}", usage("hetcdc bench-json", "Deterministic shuffle bench suite + baseline gate", &specs));
+        println!(
+            "{}",
+            usage("hetcdc bench-json", "Deterministic shuffle bench suite + baseline gate", &specs)
+        );
         return 0;
     }
     let threads = match args.get_usize("threads") {
@@ -627,6 +660,7 @@ fn cmd_bench_json(argv: &[String]) -> i32 {
                 format!("{}", r.k),
                 r.placer.clone(),
                 r.coder.clone(),
+                format!("{}", r.rounds),
                 format!("{}", r.messages),
                 format!("{}", r.payload_bytes),
                 format!("{}", r.wire_bytes),
@@ -635,7 +669,7 @@ fn cmd_bench_json(argv: &[String]) -> i32 {
         })
         .collect();
     bench::table(
-        &["scenario", "K", "placer", "coder", "msgs", "payload B", "wire B", "shuffle s"],
+        &["scenario", "K", "placer", "coder", "rounds", "msgs", "payload B", "wire B", "shuffle s"],
         &rows,
     );
     println!(
@@ -704,6 +738,7 @@ fn cmd_bench_json(argv: &[String]) -> i32 {
 }
 
 fn cmd_sweep(argv: &[String]) -> i32 {
+    #[rustfmt::skip]
     let specs: Vec<ArgSpec> = vec![
         ArgSpec { name: "n", help: "number of files N", takes_value: true, default: Some("12") },
         ArgSpec { name: "step", help: "storage grid step", takes_value: true, default: Some("2") },
@@ -750,6 +785,7 @@ fn cmd_sweep(argv: &[String]) -> i32 {
 /// cluster. (The same invariants the test suite property-checks, exposed
 /// operationally.)
 fn cmd_verify(argv: &[String]) -> i32 {
+    #[rustfmt::skip]
     let specs: Vec<ArgSpec> = vec![
         ArgSpec { name: "n", help: "grid file count (exhaustive sweep over storage)", takes_value: true, default: Some("10") },
         ArgSpec { name: "lp", help: "also check LP == Theorem 1 (slower)", takes_value: false, default: None },
@@ -810,6 +846,7 @@ fn cmd_verify(argv: &[String]) -> i32 {
 }
 
 fn cmd_info(argv: &[String]) -> i32 {
+    #[rustfmt::skip]
     let specs: Vec<ArgSpec> = vec![
         ArgSpec { name: "artifacts", help: "artifact directory", takes_value: true, default: None },
         ArgSpec { name: "help", help: "show usage", takes_value: false, default: None },

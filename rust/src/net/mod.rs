@@ -2,4 +2,4 @@
 
 pub mod sim;
 
-pub use sim::{BroadcastNet, NetReport, PhaseLedger};
+pub use sim::{BroadcastNet, NetReport, PhaseLedger, RoundLedger};

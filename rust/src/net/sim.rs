@@ -23,16 +23,37 @@
 
 use crate::error::{HetcdcError, Result};
 
+/// Byte/message/clock accounting of one shuffle *round* — one section of
+/// a [`PhaseLedger`]. `elapsed_s` is the round's own sequential float
+/// fold; the phase total is folded separately (float addition is not
+/// associative, so the per-round sums are not re-added into the total).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct RoundLedger {
+    pub bytes: u64,
+    pub msgs: u64,
+    pub elapsed_s: f64,
+}
+
 /// Byte/message/clock accounting of one phase, separated from the rate
 /// table so it can travel across threads (plain data, `Send + Sync`).
 ///
 /// Records must be appended in broadcast order via [`PhaseLedger::record`]
-/// — the clock is an order-sensitive float fold (see module docs).
+/// — the clock is an order-sensitive float fold (see module docs). Round
+/// boundaries ([`PhaseLedger::begin_round`]) segment the same sequential
+/// pass into per-round sections; they never change the totals.
 #[derive(Clone, Debug, PartialEq)]
 pub struct PhaseLedger {
     bytes_by_node: Vec<u64>,
     msgs_by_node: Vec<u64>,
     clock_s: f64,
+    /// Per-round sections of the current phase (the multi-round shuffle
+    /// IR: the executor opens one section per [`ShuffleRound`]). Records
+    /// arriving before any `begin_round` fall into an implicit first
+    /// section, so round-less callers (ad-hoc benches, prediction of
+    /// legacy plans) still account correctly.
+    ///
+    /// [`ShuffleRound`]: crate::coding::plan::ShuffleRound
+    rounds: Vec<RoundLedger>,
     /// Batch epoch this ledger is accounting: bumped by every
     /// [`PhaseLedger::reset`], so a report is unambiguously tagged with
     /// the batch it measured. The pipelined executor keeps two node-state
@@ -48,8 +69,14 @@ impl PhaseLedger {
             bytes_by_node: vec![0; k],
             msgs_by_node: vec![0; k],
             clock_s: 0.0,
+            rounds: Vec::new(),
             epoch: 0,
         }
+    }
+
+    /// Open the next round section: subsequent records account into it.
+    pub fn begin_round(&mut self) {
+        self.rounds.push(RoundLedger::default());
     }
 
     /// Append one broadcast of `nbytes` from `sender` taking `t_s`
@@ -58,11 +85,23 @@ impl PhaseLedger {
         self.bytes_by_node[sender] += nbytes as u64;
         self.msgs_by_node[sender] += 1;
         self.clock_s += t_s;
+        if self.rounds.is_empty() {
+            self.rounds.push(RoundLedger::default());
+        }
+        let round = self.rounds.last_mut().unwrap();
+        round.bytes += nbytes as u64;
+        round.msgs += 1;
+        round.elapsed_s += t_s;
     }
 
     /// Virtual wall-clock so far (serialized schedule).
     pub fn clock_s(&self) -> f64 {
         self.clock_s
+    }
+
+    /// Per-round sections recorded so far.
+    pub fn rounds(&self) -> &[RoundLedger] {
+        &self.rounds
     }
 
     /// Batch epoch of the current accounting (number of resets so far).
@@ -77,16 +116,19 @@ impl PhaseLedger {
             total_bytes: self.bytes_by_node.iter().sum(),
             total_msgs: self.msgs_by_node.iter().sum(),
             elapsed_s: self.clock_s,
+            rounds: self.rounds.clone(),
             epoch: self.epoch,
         }
     }
 
-    /// Start accounting the next batch: zero the counters, bump the epoch
-    /// tag. O(k), no allocation.
+    /// Start accounting the next batch: zero the counters, drop the round
+    /// sections, bump the epoch tag. O(k), keeps the round buffer's
+    /// capacity.
     pub fn reset(&mut self) {
         self.bytes_by_node.iter_mut().for_each(|b| *b = 0);
         self.msgs_by_node.iter_mut().for_each(|m| *m = 0);
         self.clock_s = 0.0;
+        self.rounds.clear();
         self.epoch += 1;
     }
 }
@@ -111,6 +153,10 @@ pub struct NetReport {
     pub total_msgs: u64,
     /// Virtual wall-clock of the serialized broadcast schedule.
     pub elapsed_s: f64,
+    /// Per-round sections of the shuffle (bytes/messages/clock per
+    /// [`crate::coding::plan::ShuffleRound`]) — identical across
+    /// execution modes, like every other field.
+    pub rounds: Vec<RoundLedger>,
     /// Batch epoch tag (ledger resets so far): after N batches through
     /// one executor this is N, in every execution mode — equality checks
     /// across modes therefore also prove both metered the same batch.
@@ -163,6 +209,12 @@ impl BroadcastNet {
         let t = self.tx_time(sender, nbytes);
         self.ledger.record(sender, nbytes, t);
         t
+    }
+
+    /// Open the next round section of the ledger (see
+    /// [`PhaseLedger::begin_round`]).
+    pub fn begin_round(&mut self) {
+        self.ledger.begin_round();
     }
 
     /// The phase ledger accumulated so far.
@@ -255,6 +307,37 @@ mod tests {
                 "{bad:?}"
             );
         }
+    }
+
+    #[test]
+    fn round_sections_partition_the_phase() {
+        let mut net = BroadcastNet::homogeneous(2, 8e6, 1e-4).unwrap();
+        net.begin_round();
+        net.broadcast(0, 1000);
+        net.broadcast(1, 500);
+        net.begin_round();
+        net.broadcast(0, 250);
+        let r = net.report();
+        assert_eq!(r.rounds.len(), 2);
+        assert_eq!(r.rounds[0].bytes, 1500);
+        assert_eq!(r.rounds[0].msgs, 2);
+        assert_eq!(r.rounds[1].bytes, 250);
+        assert_eq!(r.rounds[1].msgs, 1);
+        assert_eq!(r.rounds.iter().map(|s| s.bytes).sum::<u64>(), r.total_bytes);
+        assert_eq!(r.rounds.iter().map(|s| s.msgs).sum::<u64>(), r.total_msgs);
+        // reset drops the sections with the rest of the phase state.
+        net.reset();
+        assert!(net.report().rounds.is_empty());
+    }
+
+    #[test]
+    fn records_without_begin_round_open_an_implicit_section() {
+        let mut net = BroadcastNet::homogeneous(2, 8e6, 0.0).unwrap();
+        net.broadcast(0, 10);
+        net.broadcast(1, 20);
+        let r = net.report();
+        assert_eq!(r.rounds.len(), 1);
+        assert_eq!(r.rounds[0].bytes, 30);
     }
 
     #[test]

@@ -1,0 +1,237 @@
+//! Combinatorial grid placement for large K — the hypercube/grid design
+//! of the combinatorial CDC line (Woolsey et al.; see PAPERS.md), which
+//! builds multi-group multicast schedules **without** the §V LP's
+//! perfect-collection enumeration (Remark 7): group structure is known by
+//! construction, so plan-build cost is polynomial in K and there is no
+//! enumeration cap to truncate.
+//!
+//! Structure: factor `K = q·r` (`q, r >= 2`) and arrange the nodes as an
+//! `r`-dimensional grid with `q` nodes per dimension. Subfiles are the
+//! lattice points `[q]^r` (subpacketized so every point gets an equal
+//! count); lattice point `(p_1, …, p_r)` is stored at the `r` nodes
+//! `{X_d[p_d]}` — one holder per dimension. Every node stores `N/q` files
+//! worth of subfiles, so the design fits any cluster whose **minimum**
+//! storage is at least `N/q` (capacities are upper bounds, like the
+//! oblivious baseline — surplus storage is unused).
+//!
+//! The matching [`crate::coding::combinatorial`] coder exchanges IVs
+//! inside the `q^r` *transversal* groups (one node per dimension) with
+//! `(r−1)`-segment XOR multicasts: coding gain `r − 1` over uncoded at
+//! subpacketization `q^r` instead of `C(K, r)` — the large-K regime the
+//! ROADMAP's "cascaded / larger-K" item asks for.
+
+use super::alloc::{Allocation, AllocationBuilder, NodeMask};
+use super::homogeneous::gcd;
+use crate::error::{HetcdcError, Result};
+
+/// Guardrails for automatic parameter choice: subpacketization and total
+/// subfile count beyond these make plans large enough to hurt interactive
+/// plan-build latency, so [`choose_grid`] skips such factorizations.
+pub const MAX_SP: u64 = 256;
+pub const MAX_SUBFILES: u64 = 8192;
+
+/// A feasible grid shape for (K, N): `K = q·r`, subpacketization `sp`
+/// (smallest with `q^r | sp·N`), and the per-point subfile multiplicity.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct GridParams {
+    pub q: usize,
+    pub r: usize,
+    pub sp: u32,
+    /// Subfiles per lattice point: `sp·N / q^r`.
+    pub per: u64,
+}
+
+impl GridParams {
+    pub fn n_sub(&self, n: u64) -> usize {
+        (self.sp as u64 * n) as usize
+    }
+
+    /// Coding gain of the matching combinatorial coder over uncoded.
+    pub fn gain(&self) -> usize {
+        self.r - 1
+    }
+}
+
+/// `q^r` with overflow saturation (saturated values always fail the
+/// feasibility caps, so the exact magnitude never matters).
+fn pow_sat(q: u64, r: u32) -> u64 {
+    let mut out = 1u64;
+    for _ in 0..r {
+        out = out.saturating_mul(q);
+    }
+    out
+}
+
+/// Pick the best grid factorization of `K` for `n` files on a cluster
+/// whose smallest node stores `m_min` files: among all `K = q·r` with
+/// `q, r >= 2`, per-node footprint `N/q <= m_min`, segment count
+/// `r − 1 <= 64`, and subpacketization within [`MAX_SP`]/[`MAX_SUBFILES`],
+/// choose the one with the largest coding gain `r − 1` (ties cannot
+/// occur: `r` determines the gain). Typed [`HetcdcError::Unsupported`]
+/// when no factorization fits.
+pub fn choose_grid(k: usize, n: u64, m_min: u64) -> Result<GridParams> {
+    let unsupported = |reason: String| HetcdcError::Unsupported {
+        strategy: "combinatorial placer",
+        reason,
+    };
+    if k < 4 {
+        return Err(unsupported(format!(
+            "K={k} has no q·r factorization with q, r >= 2"
+        )));
+    }
+    let mut best: Option<GridParams> = None;
+    for r in 2..=k / 2 {
+        if k % r != 0 {
+            continue;
+        }
+        let q = k / r;
+        if q < 2 || r - 1 > 64 {
+            continue;
+        }
+        // Per-node footprint: N/q files (sp·N/q subfiles at sp subfiles
+        // per file). Feasible iff N <= q · m_min.
+        if n > q as u64 * m_min {
+            continue;
+        }
+        let lattice = pow_sat(q as u64, r as u32);
+        let sp = lattice / gcd(lattice, n);
+        if sp > MAX_SP || sp.saturating_mul(n) > MAX_SUBFILES {
+            continue;
+        }
+        let params = GridParams {
+            q,
+            r,
+            sp: sp as u32,
+            per: sp * n / lattice,
+        };
+        if best.map(|b| params.r > b.r).unwrap_or(true) {
+            best = Some(params);
+        }
+    }
+    best.ok_or_else(|| {
+        unsupported(format!(
+            "no q·r grid fits K={k}, N={n}, min storage {m_min} \
+             (need N/q <= min storage and subpacketization <= {MAX_SP})"
+        ))
+    })
+}
+
+/// Node `i` of dimension `d` under the contiguous-block convention the
+/// placer lays nodes out with: dimensions are blocks of `q` consecutive
+/// node ids.
+pub fn grid_node(q: usize, d: usize, i: usize) -> usize {
+    d * q + i
+}
+
+/// Build the grid allocation: lattice points enumerated lexicographically
+/// (last coordinate fastest), `per` consecutive subfiles per point, each
+/// held by its transversal `{X_d[p_d]}`.
+pub fn grid_allocation(k: usize, n: u64, g: &GridParams) -> Allocation {
+    debug_assert_eq!(g.q * g.r, k);
+    let n_sub = g.n_sub(n);
+    let lattice = pow_sat(g.q as u64, g.r as u32) as usize;
+    debug_assert_eq!(lattice as u64 * g.per, n_sub as u64);
+    let mut b = AllocationBuilder::new(k, g.sp, n_sub);
+    let mut coords = vec![0usize; g.r];
+    for point in 0..lattice {
+        let mut mask: NodeMask = 0;
+        for (d, &c) in coords.iter().enumerate() {
+            mask |= 1 << grid_node(g.q, d, c);
+        }
+        let lo = point * g.per as usize;
+        b.assign(lo, lo + g.per as usize, mask);
+        // Increment the lattice odometer (last coordinate fastest).
+        for d in (0..g.r).rev() {
+            coords[d] += 1;
+            if coords[d] < g.q {
+                break;
+            }
+            coords[d] = 0;
+        }
+    }
+    b.build()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn choose_grid_picks_max_gain_within_storage() {
+        // K=8, N=8, m_min=4: q=2/r=4 feasible (N/q = 4), gain 3.
+        let g = choose_grid(8, 8, 4).unwrap();
+        assert_eq!((g.q, g.r), (2, 4));
+        assert_eq!(g.gain(), 3);
+        assert_eq!(g.sp, 2); // q^r = 16, gcd(16, 8) = 8
+        assert_eq!(g.per, 1);
+
+        // Same K but m_min=2: only q=4/r=2 fits (N/q = 2), gain 1.
+        let g = choose_grid(8, 8, 2).unwrap();
+        assert_eq!((g.q, g.r), (4, 2));
+        assert_eq!(g.gain(), 1);
+
+        // K=16, N=16, m_min=8: q=2/r=8, gain 7, sp=16.
+        let g = choose_grid(16, 16, 8).unwrap();
+        assert_eq!((g.q, g.r), (2, 8));
+        assert_eq!(g.sp, 16);
+
+        // K=12, N=12, m_min=4: q=2 needs storage 6 -> q=3/r=4, gain 3.
+        let g = choose_grid(12, 12, 4).unwrap();
+        assert_eq!((g.q, g.r), (3, 4));
+        assert_eq!(g.sp, 27);
+        assert_eq!(g.per, 4);
+    }
+
+    #[test]
+    fn choose_grid_rejects_infeasible_shapes() {
+        for (k, n, m) in [
+            (3usize, 6u64, 6u64), // prime K
+            (5, 10, 10),          // prime K
+            (8, 8, 1),            // storage floor below N/q for every q
+            (2, 4, 4),            // K < 4: no q,r >= 2 factorization
+        ] {
+            let err = choose_grid(k, n, m).unwrap_err();
+            assert!(
+                matches!(err, HetcdcError::Unsupported { .. }),
+                "k={k} n={n} m={m}: {err:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn grid_allocation_is_a_uniform_transversal_design() {
+        let g = choose_grid(8, 8, 4).unwrap();
+        let alloc = grid_allocation(8, 8, &g);
+        assert_eq!(alloc.n_sub(), 16);
+        // Every subfile held by exactly r nodes, one per dimension block.
+        for &h in &alloc.holders {
+            assert_eq!(h.count_ones() as usize, g.r);
+            for d in 0..g.r {
+                let block = ((1u32 << g.q) - 1) << (d * g.q);
+                assert_eq!((h & block).count_ones(), 1, "dimension {d}");
+            }
+        }
+        // Uniform multiplicity: every lattice point appears `per` times.
+        let sizes = alloc.subset_sizes();
+        let occupied: Vec<u64> = sizes.iter().copied().filter(|&c| c > 0).collect();
+        assert_eq!(occupied.len(), 16); // q^r distinct transversals
+        assert!(occupied.iter().all(|&c| c == g.per));
+        // Per-node footprint: n_sub/q subfiles.
+        for node in 0..8 {
+            assert_eq!(alloc.node_count(node), (alloc.n_sub() / g.q) as u64);
+        }
+        // Fits a cluster with >= N/q = 4 files everywhere.
+        alloc.validate_le(&[4, 4, 5, 5, 6, 6, 7, 7], 8).unwrap();
+    }
+
+    #[test]
+    fn grid_allocation_with_multiplicity() {
+        // K=12, N=12 -> q=3, r=4, per=4: 81 lattice points, 324 subfiles.
+        let g = choose_grid(12, 12, 4).unwrap();
+        let alloc = grid_allocation(12, 12, &g);
+        assert_eq!(alloc.n_sub(), 324);
+        let sizes = alloc.subset_sizes();
+        assert_eq!(sizes.iter().filter(|&&c| c > 0).count(), 81);
+        assert!(sizes.iter().all(|&c| c == 0 || c == 4));
+    }
+}

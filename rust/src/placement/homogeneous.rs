@@ -49,7 +49,8 @@ pub fn symmetric_allocation(k: usize, r: usize, n: u64) -> Allocation {
     b.build()
 }
 
-fn gcd(mut a: u64, mut b: u64) -> u64 {
+/// Euclid's gcd (shared across the placement constructions).
+pub(crate) fn gcd(mut a: u64, mut b: u64) -> u64 {
     while b != 0 {
         let t = a % b;
         a = b;

@@ -475,7 +475,8 @@ mod tests {
     fn exact_rational_lp_matches_theorem1_exactly() {
         // The §V LP solved in exact arithmetic: no f64 tolerance at all.
         use crate::lp::{solve, Rat};
-        for (m1, m2, m3, n) in [(6u64, 7, 7, 12u64), (4, 5, 6, 12), (5, 11, 11, 12), (2, 3, 12, 12)] {
+        let cases = [(6u64, 7, 7, 12u64), (4, 5, 6, 12), (5, 11, 11, 12), (2, 3, 12, 12)];
+        for (m1, m2, m3, n) in cases {
             let pk = ParamsK::new(vec![m1, m2, m3], n).unwrap();
             let p3 = Params3::new(m1, m2, m3, n).unwrap();
             let model = build_lp::<Rat>(&pk, DEFAULT_COLLECTION_CAP);

@@ -9,7 +9,7 @@
 //! `M1=M2=M3` (verified in tests).
 
 use super::alloc::Allocation;
-use super::homogeneous::symmetric_allocation;
+use super::homogeneous::{gcd, symmetric_allocation};
 use crate::coding::cdc_multicast::plan_homogeneous;
 use crate::coding::plan::ShufflePlan;
 use crate::error::{HetcdcError, Result};
@@ -88,13 +88,12 @@ impl MemShare {
 
     /// Coded shuffle plan for [`Self::allocation`]: per-subfile redundancy
     /// is either `r_lo` or `r_hi`, each handled by [2]'s multicast over
-    /// its own sub-instance.
+    /// its own sub-instance. On the round IR the two regimes' rounds are
+    /// concatenated: the plan's round sequence is the `r_lo` schedule
+    /// followed by the `r_hi` schedule, group structure preserved.
     pub fn plan(&self, alloc: &Allocation) -> ShufflePlan {
         // Split the allocation back into the two r-regular sub-ranges.
-        let mut plan = ShufflePlan {
-            k: self.k,
-            broadcasts: Vec::new(),
-        };
+        let mut plan = ShufflePlan::new(self.k);
         let mut redundancies = vec![self.r_lo];
         if self.r_hi != self.r_lo {
             redundancies.push(self.r_hi);
@@ -121,9 +120,14 @@ impl MemShare {
                 ids.iter().map(|&i| alloc.holders[i]).collect(),
             );
             let sub_plan = plan_homogeneous(&sub_alloc, r as usize);
-            // Remap local subfile ids back to global ids.
-            for b in sub_plan.broadcasts {
-                plan.broadcasts.push(remap(b, &ids));
+            // Remap local subfile ids back to global ids, round by round.
+            for mut round in sub_plan.rounds {
+                for group in &mut round.groups {
+                    for b in &mut group.broadcasts {
+                        remap(b, &ids);
+                    }
+                }
+                plan.push_round(round);
             }
         }
         plan
@@ -143,43 +147,20 @@ impl MemShare {
     }
 }
 
-fn gcd(mut a: u64, mut b: u64) -> u64 {
-    while b != 0 {
-        let t = a % b;
-        a = b;
-        b = t;
-    }
-    a
-}
-
 fn lcm(a: u64, b: u64) -> u64 {
     a / gcd(a, b) * b
 }
 
-fn remap(b: crate::coding::plan::Broadcast, ids: &[usize]) -> crate::coding::plan::Broadcast {
-    use crate::coding::plan::{Broadcast, IvId, Part};
+/// Rewrite a broadcast's local subfile ids to global ids in place.
+fn remap(b: &mut crate::coding::plan::Broadcast, ids: &[usize]) {
+    use crate::coding::plan::Broadcast;
     match b {
-        Broadcast::Uncoded { sender, iv } => Broadcast::Uncoded {
-            sender,
-            iv: IvId {
-                group: iv.group,
-                sub: ids[iv.sub],
-            },
-        },
-        Broadcast::Coded { sender, parts } => Broadcast::Coded {
-            sender,
-            parts: parts
-                .into_iter()
-                .map(|p| Part {
-                    iv: IvId {
-                        group: p.iv.group,
-                        sub: ids[p.iv.sub],
-                    },
-                    seg: p.seg,
-                    nseg: p.nseg,
-                })
-                .collect(),
-        },
+        Broadcast::Uncoded { iv, .. } => iv.sub = ids[iv.sub],
+        Broadcast::Coded { parts, .. } => {
+            for p in parts {
+                p.iv.sub = ids[p.iv.sub];
+            }
+        }
     }
 }
 

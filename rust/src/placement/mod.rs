@@ -1,9 +1,11 @@
 //! File placement: subset algebra over allocations, the paper's optimal
 //! K=3 placements (Figs 5–11), Lemma 1's pairing computation, the
-//! homogeneous cyclic placement of [2], the §V general-K LP — and the
-//! [`Placer`] trait that puts every strategy behind one interface.
+//! homogeneous cyclic placement of [2], the §V general-K LP, the
+//! combinatorial grid design for large K — and the [`Placer`] trait that
+//! puts every strategy behind one interface.
 
 pub mod alloc;
+pub mod combinatorial;
 pub mod homogeneous;
 pub mod k3;
 pub mod lemma1;
@@ -12,4 +14,4 @@ pub mod memshare;
 pub mod placer;
 
 pub use alloc::Allocation;
-pub use placer::{builtin_placers, placer_by_name, Placer};
+pub use placer::{builtin_placers, placer_by_name, Placement, Placer};

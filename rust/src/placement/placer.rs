@@ -10,10 +10,30 @@
 //! output reusable across batches via [`crate::engine::Plan`].
 
 use super::alloc::Allocation;
-use super::{homogeneous, k3, lp_general, memshare};
+use super::{combinatorial, homogeneous, k3, lp_general, memshare};
 use crate::error::{HetcdcError, Result};
 use crate::model::cluster::ClusterSpec;
 use crate::model::job::JobSpec;
+
+/// A placement plus its construction diagnostics: what the placer chose
+/// and anything it had to drop to get there. Travels into
+/// [`crate::engine::Plan`] so reports and the CLI can surface truncation
+/// (e.g. the §V LP's perfect-collection cap) instead of burying it in a
+/// comment.
+#[derive(Clone, Debug)]
+pub struct Placement {
+    pub alloc: Allocation,
+    /// Perfect collections dropped by an enumeration cap, as
+    /// `(subsystem j, dropped count)` — empty for every placer that does
+    /// not enumerate (Remark 7 concerns the LP alone).
+    pub dropped_collections: Vec<(usize, usize)>,
+}
+
+impl Placement {
+    pub fn exact(alloc: Allocation) -> Self {
+        Placement { alloc, dropped_collections: Vec::new() }
+    }
+}
 
 /// A file-placement strategy.
 pub trait Placer {
@@ -23,6 +43,13 @@ pub trait Placer {
 
     /// Build the §II allocation for this cluster/job shape.
     fn place(&self, cluster: &ClusterSpec, job: &JobSpec) -> Result<Allocation>;
+
+    /// Like [`Placer::place`], but with construction diagnostics. The
+    /// default wraps [`Placer::place`] with no diagnostics; placers that
+    /// truncate (the §V LP) override it.
+    fn place_report(&self, cluster: &ClusterSpec, job: &JobSpec) -> Result<Placement> {
+        Ok(Placement::exact(self.place(cluster, job)?))
+    }
 
     /// Name of the [`crate::coding::ShuffleCoder`] that realizes this
     /// placement's coded load (used when the caller does not pick one).
@@ -67,9 +94,19 @@ impl Placer for LpGeneral {
     }
 
     fn place(&self, cluster: &ClusterSpec, job: &JobSpec) -> Result<Allocation> {
+        Ok(self.place_report(cluster, job)?.alloc)
+    }
+
+    /// Surfaces the Remark-7 cap: when [`lp_general::perfect_collections`]
+    /// truncates, the dropped counts ride along on the placement instead
+    /// of vanishing into a comment.
+    fn place_report(&self, cluster: &ClusterSpec, job: &JobSpec) -> Result<Placement> {
         let p = cluster.params_k(job.n_files)?;
         let sol = lp_general::solve_general(&p, self.cap)?;
-        Ok(lp_general::allocation_from_solution(&p, &sol))
+        Ok(Placement {
+            alloc: lp_general::allocation_from_solution(&p, &sol),
+            dropped_collections: sol.dropped.clone(),
+        })
     }
 }
 
@@ -144,6 +181,34 @@ impl Placer for Oblivious {
     }
 }
 
+/// Combinatorial grid placement for large K
+/// ([`crate::placement::combinatorial`]): factor `K = q·r`, lay the nodes
+/// out as an r-dimensional grid, store each lattice-point subfile at its
+/// transversal. Storage-aware only through the smallest node (capacities
+/// are upper bounds, like [`Oblivious`]); its payoff is the matching
+/// `combinatorial` coder's gain `r − 1` with **no** perfect-collection
+/// enumeration — the large-K regime the §V LP cannot reach.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct CombinatorialGrid;
+
+impl Placer for CombinatorialGrid {
+    fn name(&self) -> &'static str {
+        "combinatorial"
+    }
+
+    fn place(&self, cluster: &ClusterSpec, job: &JobSpec) -> Result<Allocation> {
+        let m_min = *cluster.storage().iter().min().ok_or_else(|| {
+            HetcdcError::InvalidParams("cluster has no nodes".into())
+        })?;
+        let g = combinatorial::choose_grid(cluster.k(), job.n_files, m_min)?;
+        Ok(combinatorial::grid_allocation(cluster.k(), job.n_files, &g))
+    }
+
+    fn default_coder(&self) -> &'static str {
+        "combinatorial"
+    }
+}
+
 /// Caller-provided allocation (validated against capacities at plan-build
 /// time like every other placement).
 #[derive(Clone, Debug)]
@@ -167,6 +232,7 @@ pub fn placer_by_name(name: &str, cluster: &ClusterSpec) -> Result<Box<dyn Place
         "lp-general" | "lp" => Ok(Box::new(LpGeneral::default())),
         "homogeneous" => Ok(Box::new(Homogeneous)),
         "oblivious" => Ok(Box::new(Oblivious)),
+        "combinatorial" => Ok(Box::new(CombinatorialGrid)),
         "auto" | "optimal" => {
             if cluster.k() == 3 {
                 Ok(Box::new(OptimalK3))
@@ -189,6 +255,7 @@ pub fn builtin_placers() -> Vec<Box<dyn Placer>> {
         Box::new(LpGeneral::default()),
         Box::new(Homogeneous),
         Box::new(Oblivious),
+        Box::new(CombinatorialGrid),
     ]
 }
 
@@ -250,6 +317,45 @@ mod tests {
     }
 
     #[test]
+    fn combinatorial_places_grids_and_reports_defaults() {
+        // K=8 with storage floor 4: q=2, r=4 grid.
+        let c = cluster(&[4, 4, 5, 5, 6, 6, 7, 7]);
+        let job = JobSpec::terasort(8);
+        let alloc = CombinatorialGrid.place(&c, &job).unwrap();
+        assert!(alloc.holders.iter().all(|h| h.count_ones() == 4));
+        alloc.validate_le(&[4, 4, 5, 5, 6, 6, 7, 7], 8).unwrap();
+        assert_eq!(CombinatorialGrid.default_coder(), "combinatorial");
+        // Prime K cannot factor: typed Unsupported.
+        let c3 = cluster(&[6, 7, 7]);
+        let err = CombinatorialGrid.place(&c3, &JobSpec::terasort(12)).unwrap_err();
+        assert!(matches!(err, HetcdcError::Unsupported { .. }));
+    }
+
+    #[test]
+    fn lp_place_report_surfaces_dropped_collections() {
+        // Default cap: nothing dropped at K=4 (3 collections exist).
+        let c = cluster(&[3, 4, 5, 6]);
+        let job = JobSpec::terasort(8);
+        let placement = LpGeneral::default().place_report(&c, &job).unwrap();
+        assert!(placement.dropped_collections.is_empty());
+        // Cap of 1 forces truncation at j=2, and the report says so.
+        let tight = LpGeneral { cap: 1 };
+        let placement = tight.place_report(&c, &job).unwrap();
+        assert!(
+            placement
+                .dropped_collections
+                .iter()
+                .any(|&(j, d)| j == 2 && d > 0),
+            "expected dropped collections at j=2, got {:?}",
+            placement.dropped_collections
+        );
+        // Non-enumerating placers report no drops via the default impl.
+        let p3 = cluster(&[6, 7, 7]);
+        let placement = OptimalK3.place_report(&p3, &JobSpec::terasort(12)).unwrap();
+        assert!(placement.dropped_collections.is_empty());
+    }
+
+    #[test]
     fn registry_resolves_names_and_auto() {
         let c3 = cluster(&[6, 7, 7]);
         let c4 = cluster(&[3, 4, 5, 6]);
@@ -258,6 +364,10 @@ mod tests {
         assert_eq!(
             placer_by_name("oblivious", &c3).unwrap().default_coder(),
             "memshare"
+        );
+        assert_eq!(
+            placer_by_name("combinatorial", &c4).unwrap().name(),
+            "combinatorial"
         );
         assert!(matches!(
             placer_by_name("nope", &c3).unwrap_err(),

@@ -169,7 +169,8 @@ mod tests {
 
     #[test]
     fn parses_values_flags_positional() {
-        let a = Args::parse(&sv(&["--n", "20", "--verbose", "pos1", "--storage=6,7,7"]), &specs()).unwrap();
+        let argv = sv(&["--n", "20", "--verbose", "pos1", "--storage=6,7,7"]);
+        let a = Args::parse(&argv, &specs()).unwrap();
         assert_eq!(a.get_usize("n").unwrap(), 20);
         assert!(a.flag("verbose"));
         assert_eq!(a.positional, vec!["pos1"]);

@@ -189,6 +189,42 @@ fn run_plan_rejects_conflicting_flags() {
 }
 
 #[test]
+fn plan_and_run_combinatorial_grid_at_k8() {
+    // K=8 grid (q=2, r=4): uncoded load would be 32 IV-equations
+    // (16 subfiles x 4 missing nodes / sp 2); the combinatorial coder's
+    // gain r−1 = 3 brings it to 32/3.
+    let (code, stdout, _) = hetcdc(&[
+        "plan", "--workload", "terasort", "--n", "8",
+        "--storage", "4,4,5,5,6,6,7,7", "--placement", "combinatorial",
+    ]);
+    assert_eq!(code, 0, "{stdout}");
+    let j = hetcdc::util::json::Json::parse(stdout.trim()).expect("valid plan json");
+    assert_eq!(j.get("placer").and_then(|v| v.as_str()), Some("combinatorial"));
+    assert_eq!(j.get("coder").and_then(|v| v.as_str()), Some("combinatorial"));
+    let load = j
+        .get("predicted")
+        .and_then(|p| p.get("load_equations"))
+        .and_then(|v| v.as_f64())
+        .unwrap();
+    assert!((load - 32.0 / 3.0).abs() < 1e-9, "load {load}");
+    // Multi-round IR serializes with round structure (schema v2).
+    let rounds = j
+        .get("shuffle")
+        .and_then(|s| s.get("rounds"))
+        .and_then(|r| r.as_arr())
+        .expect("round-structured shuffle");
+    assert_eq!(rounds.len(), 8);
+
+    let (code, stdout, _) = hetcdc(&[
+        "run", "--workload", "terasort", "--n", "8",
+        "--storage", "4,4,5,5,6,6,7,7", "--mode", "coded",
+        "--backend", "native", "--placement", "combinatorial",
+    ]);
+    assert_eq!(code, 0, "{stdout}");
+    assert!(stdout.contains("verified=true"), "{stdout}");
+}
+
+#[test]
 fn run_rejects_unknown_placement_with_typed_error() {
     let (code, _, stderr) = hetcdc(&[
         "run", "--workload", "terasort", "--n", "12", "--storage", "6,7,7",

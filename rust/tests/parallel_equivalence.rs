@@ -131,6 +131,19 @@ fn check_plan(plan: &Plan, threads: usize, batches: usize, ctx: &str) {
         pipelined.net_report(),
         "{ctx}: pipelined NetReport (bit-exact, including the clock)"
     );
+    // Per-round ledger sections mirror the plan's IR in every mode (the
+    // NetReport equality above already proves the three modes agree).
+    let nr = serial.net_report();
+    assert_eq!(
+        nr.rounds.len(),
+        plan.shuffle.round_count(),
+        "{ctx}: round sections"
+    );
+    assert_eq!(
+        nr.rounds.iter().map(|s| s.msgs).sum::<u64>(),
+        plan.shuffle.n_broadcasts() as u64,
+        "{ctx}: round messages"
+    );
 
     // Complete post-shuffle state of the final batch: every (node,
     // group, subfile) IV slot agrees — both the bytes and the
@@ -203,6 +216,55 @@ fn every_placer_coder_combo_is_mode_equivalent_k3_to_6() {
             );
             check_plan(&plan, 3, batches, &ctx);
         }
+    }
+}
+
+#[test]
+fn combinatorial_grid_is_mode_equivalent_k4_to_k12() {
+    // Grid-feasible shapes (storage floors chosen so the combinatorial
+    // placer factors K = q·r): K=4 (q=2, r=2), K=6 (q=2, r=3),
+    // K=8 (q=2, r=4), K=12 (q=3, r=4) — the larger-K regimes the main
+    // sweep's storage-tight shapes cannot reach. Every coder that serves
+    // a grid allocation must stay bit-identical across all three modes.
+    let grid_shapes: Vec<(Vec<u64>, u64, usize)> = vec![
+        (vec![4, 4, 5, 6], 8, 3),
+        (vec![4, 4, 4, 5, 5, 5], 8, 3),
+        (vec![4, 4, 5, 5, 6, 6, 7, 7], 8, 3),
+        (vec![4, 4, 4, 5, 5, 5, 6, 6, 6, 7, 7, 7], 12, 2),
+    ];
+    let mut batch_gen = Gen::new(0x6B1D_C0DE);
+    for (storage, n, max_batches) in grid_shapes {
+        let cl = cluster(&storage);
+        let job = small_job(n);
+        for coder in ["combinatorial", "greedy", "pairing"] {
+            let plan = JobBuilder::new(&cl, &job)
+                .placer("combinatorial")
+                .coder(coder)
+                .mode(ShuffleMode::Coded)
+                .build()
+                .unwrap_or_else(|e| {
+                    panic!("K={} combinatorial x {coder}: {e}", cl.k())
+                });
+            let batches = batch_gen.usize_in(1..=max_batches);
+            let ctx = format!(
+                "K={} grid combinatorial x {coder} batches={batches}",
+                cl.k()
+            );
+            check_plan(&plan, 3, batches, &ctx);
+        }
+        // The uncoded baseline on the grid placement, too.
+        let plan = JobBuilder::new(&cl, &job)
+            .placer("combinatorial")
+            .mode(ShuffleMode::Uncoded)
+            .build()
+            .unwrap();
+        let batches = batch_gen.usize_in(1..=max_batches);
+        check_plan(
+            &plan,
+            3,
+            batches,
+            &format!("K={} grid x uncoded batches={batches}", cl.k()),
+        );
     }
 }
 
