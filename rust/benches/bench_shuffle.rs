@@ -297,6 +297,64 @@ fn main() {
         &prows,
     );
 
+    section("plan build: serial vs threaded JobBuilder at K ∈ {8, 12, 16}");
+    // The plan-construction path is what `--threads` parallelizes now:
+    // sharded LP enumeration/pricing, parallel grid group/round
+    // construction, and the per-node worklist decode verification. Built
+    // plans are byte-identical at every thread count (asserted below) —
+    // only the build wall-clock changes.
+    let build_threads = hetcdc::engine::resolve_threads(0);
+    let hw_threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    if hw_threads >= 2 {
+        assert!(
+            build_threads >= 2,
+            "threaded plan builds must exercise >= 2 workers on a multicore host"
+        );
+    }
+    let mut brows = Vec::new();
+    for name in [
+        "k8-terasort-combinatorial",
+        "k12-terasort-combinatorial",
+        "k16-terasort-combinatorial",
+    ] {
+        let Some(sc) = hetcdc::bench::default_suite().into_iter().find(|s| s.name == name)
+        else {
+            eprintln!("WARNING: suite scenario '{name}' missing; skipping");
+            continue;
+        };
+        let bcluster = sc.cluster();
+        let bjob = sc.job();
+        let build = |threads: usize| {
+            JobBuilder::new(&bcluster, &bjob)
+                .placer(sc.placer)
+                .mode(sc.mode)
+                .threads(threads)
+                .build()
+                .expect("suite plan builds")
+        };
+        assert_eq!(
+            build(1).to_json_string(),
+            build(0).to_json_string(),
+            "{name}: threaded plan build must be byte-identical to serial"
+        );
+        let sname = format!("{name} plan build (serial)");
+        let st = bench_fn(&sname, &cfg, || build(1).predicted.messages);
+        let tname = format!("{name} plan build ({build_threads} threads)");
+        let tt = bench_fn(&tname, &cfg, || build(0).predicted.messages);
+        brows.push(vec![
+            name.to_string(),
+            format!("{}", bcluster.k()),
+            format!("{:.0}", st.mean_ns / 1e3),
+            format!("{:.0}", tt.mean_ns / 1e3),
+            format!("{:.2}x", st.mean_ns / tt.mean_ns.max(1.0)),
+        ]);
+    }
+    table(
+        &["scenario", "K", "serial µs/build", "threaded µs/build", "speedup"],
+        &brows,
+    );
+    println!("(threaded builds used {build_threads} worker threads; plans byte-identical)");
+
     // PlanCache: the same comparison when job shapes interleave.
     let mut cache = PlanCache::new(16);
     let shapes: Vec<JobSpec> = vec![JobSpec::terasort(n), JobSpec::wordcount(n)];

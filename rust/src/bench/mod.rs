@@ -6,6 +6,6 @@ pub mod suite;
 
 pub use harness::{bench_fn, section, table, Bench, BenchResult};
 pub use suite::{
-    compare_to_baseline, default_suite, run_suite, BaselineStatus, Comparison, Scenario,
-    ScenarioResult, SuiteReport,
+    compare_to_baseline, default_suite, run_suite, BaselineStatus, Comparison, PlanBuildStats,
+    Scenario, ScenarioResult, SuiteReport,
 };

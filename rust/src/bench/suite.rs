@@ -113,6 +113,36 @@ impl Scenario {
     }
 }
 
+/// Deterministic shape of one scenario's plan **construction** — counts,
+/// never timings, so the artifact stays byte-reproducible. Wall-clock
+/// plan-build comparisons live in `bench_shuffle` (`--timing` territory);
+/// this section is what the baseline can diff: a build-path regression
+/// that changes the IR's round/group/broadcast structure shows up here.
+#[derive(Clone, Copy, Debug)]
+pub struct PlanBuildStats {
+    pub rounds: u64,
+    pub groups: u64,
+    pub broadcasts: u64,
+}
+
+impl PlanBuildStats {
+    pub fn of(shuffle: &crate::coding::plan::ShufflePlan) -> Self {
+        PlanBuildStats {
+            rounds: shuffle.round_count() as u64,
+            groups: shuffle.group_count() as u64,
+            broadcasts: shuffle.n_broadcasts() as u64,
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("rounds".into(), Json::Num(self.rounds as f64));
+        m.insert("groups".into(), Json::Num(self.groups as f64));
+        m.insert("broadcasts".into(), Json::Num(self.broadcasts as f64));
+        Json::Obj(m)
+    }
+}
+
 /// Deterministic measurements of one scenario (plus optional wall-clock).
 #[derive(Clone, Debug)]
 pub struct ScenarioResult {
@@ -137,6 +167,9 @@ pub struct ScenarioResult {
     /// outputs and network reports (always true — a divergence aborts
     /// the suite).
     pub modes_identical: bool,
+    /// Plan-construction shape (rounds/groups/broadcasts — counts only,
+    /// timestamp-free).
+    pub plan_build: PlanBuildStats,
     /// Wall-clock of one parallel batch (nondeterministic, optional).
     pub wall: Option<BenchResult>,
     /// Wall-clock of one pipelined [`PIPELINE_BATCHES`]-batch run — the
@@ -168,6 +201,7 @@ impl ScenarioResult {
         m.insert("map_time_s".into(), Json::Num(self.map_time_s));
         m.insert("shuffle_time_s".into(), Json::Num(self.shuffle_time_s));
         m.insert("modes_identical".into(), Json::Bool(self.modes_identical));
+        m.insert("plan_build".into(), self.plan_build.to_json());
         if let Some(w) = &self.wall {
             m.insert("wall".into(), w.to_json());
         }
@@ -201,7 +235,13 @@ pub fn run_scenario(
 ) -> Result<ScenarioResult> {
     let cluster = sc.cluster();
     let job = sc.job();
-    let mut builder = JobBuilder::new(&cluster, &job).placer(sc.placer).mode(sc.mode);
+    // The bench's thread budget drives plan construction too; built
+    // plans are bit-identical at every thread count, so the artifact
+    // stays byte-reproducible (asserted by the determinism test below).
+    let mut builder = JobBuilder::new(&cluster, &job)
+        .placer(sc.placer)
+        .mode(sc.mode)
+        .threads(threads);
     if let Some(coder) = sc.coder {
         builder = builder.coder(coder);
     }
@@ -329,6 +369,7 @@ pub fn run_scenario(
         map_time_s: r_serial.map_time_s,
         shuffle_time_s: r_serial.shuffle_time_s,
         modes_identical: true,
+        plan_build: PlanBuildStats::of(&plan.shuffle),
         wall,
         wall_pipelined,
     })
@@ -579,6 +620,28 @@ mod tests {
         let a = shared_report().to_json().to_string_pretty();
         let b = run_suite(4, None).unwrap().to_json().to_string_pretty();
         assert_eq!(a, b, "suite artifact must not depend on run or thread count");
+    }
+
+    #[test]
+    fn artifact_records_plan_build_shape() {
+        // Every scenario carries a timestamp-free plan_build section whose
+        // rounds agree with the gated top-level rounds field.
+        let j = shared_report().to_json();
+        for sc in j.get("scenarios").unwrap().as_arr().unwrap() {
+            let name = sc.get("name").and_then(|n| n.as_str()).unwrap();
+            let pb = sc.get("plan_build").unwrap_or_else(|| {
+                panic!("{name}: missing plan_build section")
+            });
+            for field in ["rounds", "groups", "broadcasts"] {
+                let v = pb.get(field).and_then(|v| v.as_f64());
+                assert!(v.unwrap_or(0.0) >= 1.0, "{name}: plan_build.{field} = {v:?}");
+            }
+            assert_eq!(
+                pb.get("rounds").and_then(|v| v.as_f64()),
+                sc.get("rounds").and_then(|v| v.as_f64()),
+                "{name}: plan_build.rounds must mirror the gated rounds field"
+            );
+        }
     }
 
     #[test]

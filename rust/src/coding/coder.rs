@@ -27,6 +27,22 @@ pub trait ShuffleCoder {
         job: &JobSpec,
         alloc: &Allocation,
     ) -> Result<ShufflePlan>;
+
+    /// Like [`ShuffleCoder::plan`], but allowed to shard construction
+    /// across up to `threads` worker threads. The emitted plan must be
+    /// **identical** for every thread count (plans are serialized and
+    /// diffed byte-for-byte across `--threads` values). The default
+    /// ignores the budget; coders with parallel constructions (the
+    /// combinatorial grid) override it.
+    fn plan_threaded(
+        &self,
+        cluster: &ClusterSpec,
+        job: &JobSpec,
+        alloc: &Allocation,
+        _threads: usize,
+    ) -> Result<ShufflePlan> {
+        self.plan(cluster, job, alloc)
+    }
 }
 
 /// Fully-uncoded baseline: every delivery as a plain broadcast.
@@ -201,6 +217,20 @@ impl ShuffleCoder for Combinatorial {
     fn plan(&self, _c: &ClusterSpec, _j: &JobSpec, alloc: &Allocation) -> Result<ShufflePlan> {
         let grid = combinatorial::detect_grid(alloc)?;
         Ok(combinatorial::plan_grid(alloc, &grid))
+    }
+
+    /// Grid construction is embarrassingly parallel: groups and rounds
+    /// are pure functions of their lattice/round index, so the sharded
+    /// build emits the identical plan at any thread count.
+    fn plan_threaded(
+        &self,
+        _c: &ClusterSpec,
+        _j: &JobSpec,
+        alloc: &Allocation,
+        threads: usize,
+    ) -> Result<ShufflePlan> {
+        let grid = combinatorial::detect_grid(alloc)?;
+        Ok(combinatorial::plan_grid_threaded(alloc, &grid, threads))
     }
 }
 

@@ -159,6 +159,20 @@ pub fn detect_grid(alloc: &Allocation) -> Result<GridStructure> {
 /// Build the multi-round combinatorial multicast plan for a grid
 /// allocation (call [`detect_grid`] first).
 pub fn plan_grid(alloc: &Allocation, grid: &GridStructure) -> ShufflePlan {
+    plan_grid_threaded(alloc, grid, 1)
+}
+
+/// [`plan_grid`] with construction sharded across up to `threads` scoped
+/// workers (`<= 1` = serial): the `q^r` transversal groups and then the
+/// `(q−1)·per · q^{r−1}` rounds are both built by index-sharded workers
+/// and merged back in index order. Every group and every round is a pure
+/// function of its lattice/round index, so the emitted plan is
+/// **identical** for every thread count.
+pub fn plan_grid_threaded(
+    alloc: &Allocation,
+    grid: &GridStructure,
+    threads: usize,
+) -> ShufflePlan {
     let (q, r, per) = (grid.q, grid.r, grid.per);
     let k = alloc.k;
     let nseg = (r - 1) as u32;
@@ -213,76 +227,84 @@ pub fn plan_grid(alloc: &Allocation, grid: &GridStructure) -> ShufflePlan {
             .collect();
         Group { members, nodes, lists }
     };
-    // All q^r groups, indexed by mixed-radix lattice coordinates (first
-    // coordinate most significant).
-    let lattice: usize = (0..r).map(|_| q).product();
-    let mut groups = Vec::with_capacity(lattice);
-    {
+    // Mixed-radix lattice coordinates of point `i` (first coordinate most
+    // significant, last fastest — the order the serial odometer walked).
+    let coords_of = |i: usize| -> Vec<usize> {
         let mut coords = vec![0usize; r];
-        for _ in 0..lattice {
-            groups.push(group_of(&coords));
-            for d in (0..r).rev() {
-                coords[d] += 1;
-                if coords[d] < q {
-                    break;
-                }
-                coords[d] = 0;
-            }
+        let mut x = i;
+        for d in (0..r).rev() {
+            coords[d] = x % q;
+            x /= q;
         }
-    }
+        coords
+    };
+
+    // All q^r groups, indexed by lattice coordinates. Each group is a
+    // pure function of its lattice index, so construction shards across
+    // workers and merges back in index order — identical at any count.
+    let lattice: usize = (0..r).map(|_| q).product();
+    let groups: Vec<Group> = crate::util::shard::shard_indexed(lattice, threads, |range| {
+        range.map(|i| group_of(&coords_of(i))).collect()
+    });
     let index_of = |coords: &[usize]| -> usize { coords.iter().fold(0, |i, &c| i * q + c) };
 
-    // Diagonal-class representatives: lattice points with first
-    // coordinate 0, lexicographic (last coordinate fastest).
+    // Diagonal-class rounds, one per (slot t, representative): the
+    // representative is a lattice point with first coordinate 0
+    // (lexicographic, last coordinate fastest), and the round's q groups
+    // are its diagonal translates. Like the groups, each round is a pure
+    // function of its flat index, so assembly shards the same way.
     let reps: usize = (0..r - 1).map(|_| q).product();
     let slots = (q - 1) * per;
-    let mut plan = ShufflePlan::new(k);
-    for t in 0..slots {
+    let total_rounds = slots * reps;
+    let groups = &groups;
+    let build_round = |round_idx: usize| -> ShuffleRound {
+        let t = round_idx / reps;
+        let rep_idx = round_idx % reps;
         let mut rep_coords = vec![0usize; r];
-        for _ in 0..reps {
-            let mut round = ShuffleRound::default();
-            for c in 0..q {
-                let coords: Vec<usize> =
-                    rep_coords.iter().map(|&x| (x + c) % q).collect();
-                let g = &groups[index_of(&coords)];
-                let mut group = MulticastGroup {
-                    members: g.members,
-                    broadcasts: Vec::with_capacity(r),
-                };
-                for &ki in &g.nodes {
-                    let mut parts = Vec::with_capacity(r - 1);
-                    for (j_pos, &j) in g.nodes.iter().enumerate() {
-                        if j == ki {
-                            continue;
-                        }
-                        // Position of ki within A\{j} (ascending order).
-                        let seg = g
-                            .nodes
-                            .iter()
-                            .filter(|&&x| x != j)
-                            .position(|&x| x == ki)
-                            .unwrap() as u32;
-                        parts.push(Part {
-                            iv: IvId { group: j, sub: g.lists[j_pos][t] },
-                            seg,
-                            nseg,
-                        });
-                    }
-                    group.broadcasts.push(Broadcast::Coded { sender: ki, parts });
-                }
-                round.groups.push(group);
-            }
-            plan.push_round(round);
-            // Advance the representative odometer over dimensions 1..r
-            // (coordinate 0 stays 0 — it indexes the class member `c`).
-            for d in (1..r).rev() {
-                rep_coords[d] += 1;
-                if rep_coords[d] < q {
-                    break;
-                }
-                rep_coords[d] = 0;
-            }
+        let mut x = rep_idx;
+        for d in (1..r).rev() {
+            rep_coords[d] = x % q;
+            x /= q;
         }
+        let mut round = ShuffleRound::default();
+        for c in 0..q {
+            let coords: Vec<usize> = rep_coords.iter().map(|&v| (v + c) % q).collect();
+            let g = &groups[index_of(&coords)];
+            let mut group = MulticastGroup {
+                members: g.members,
+                broadcasts: Vec::with_capacity(r),
+            };
+            for &ki in &g.nodes {
+                let mut parts = Vec::with_capacity(r - 1);
+                for (j_pos, &j) in g.nodes.iter().enumerate() {
+                    if j == ki {
+                        continue;
+                    }
+                    // Position of ki within A\{j} (ascending order).
+                    let seg = g
+                        .nodes
+                        .iter()
+                        .filter(|&&x| x != j)
+                        .position(|&x| x == ki)
+                        .unwrap() as u32;
+                    parts.push(Part {
+                        iv: IvId { group: j, sub: g.lists[j_pos][t] },
+                        seg,
+                        nseg,
+                    });
+                }
+                group.broadcasts.push(Broadcast::Coded { sender: ki, parts });
+            }
+            round.groups.push(group);
+        }
+        round
+    };
+    let rounds = crate::util::shard::shard_indexed(total_rounds, threads, |range| {
+        range.map(&build_round).collect()
+    });
+    let mut plan = ShufflePlan::new(k);
+    for round in rounds {
+        plan.push_round(round);
     }
     plan
 }
@@ -343,6 +365,21 @@ mod tests {
         );
         // Greedy pairing gains at most 2; the grid exchange gains r−1 = 3.
         assert!(comb.load_units() <= greedy.load_units() * 2.0 / 3.0 + 1e-9);
+    }
+
+    #[test]
+    fn threaded_plan_is_identical_at_every_thread_count() {
+        // Groups and rounds are pure functions of their indices, so the
+        // sharded construction must emit the exact same plan structure —
+        // every round, group, broadcast, part, and segment index.
+        for (k, n, m) in [(8usize, 8u64, 4u64), (12, 12, 4), (16, 16, 8)] {
+            let (alloc, structure) = grid(k, n, m);
+            let serial = plan_grid(&alloc, &structure);
+            for threads in [2usize, 3, 8] {
+                let sharded = plan_grid_threaded(&alloc, &structure, threads);
+                assert_eq!(serial, sharded, "K={k} threads={threads}");
+            }
+        }
     }
 
     #[test]

@@ -193,6 +193,12 @@ impl ShufflePlan {
         self.rounds.len()
     }
 
+    /// Multicast groups across all rounds (the bench artifact's
+    /// `plan_build` section reports this next to rounds and broadcasts).
+    pub fn group_count(&self) -> usize {
+        self.rounds.iter().map(|r| r.groups.len()).sum()
+    }
+
     pub fn n_broadcasts(&self) -> usize {
         self.rounds.iter().map(|r| r.n_broadcasts()).sum()
     }

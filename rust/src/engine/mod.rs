@@ -23,4 +23,4 @@ pub use backend::{MapBackend, NativeBackend, XlaBackend};
 pub use cache::{PlanCache, PlanKey};
 pub use engine::{Engine, RunReport};
 pub use executor::{ExecMode, Executor};
-pub use plan::{shape_fingerprint, JobBuilder, Plan, PredictedLoads};
+pub use plan::{resolve_threads, shape_fingerprint, JobBuilder, Plan, PredictedLoads};

@@ -21,9 +21,24 @@ use crate::error::{HetcdcError, Result};
 use crate::model::cluster::ClusterSpec;
 use crate::model::job::{JobSpec, ShuffleMode};
 use crate::placement::alloc::Allocation;
-use crate::placement::placer::{placer_by_name, Placer};
+use crate::placement::placer::{placer_by_name_cfg, Placer, PlacerConfig};
 use crate::util::json::Json;
 use std::collections::BTreeMap;
+
+/// Resolve a worker-thread request for plan building: `0` = auto-detect
+/// via [`std::thread::available_parallelism`] (falling back to 1 when
+/// the host will not say), anything else is taken literally. Plan builds
+/// are bit-identical at every thread count, so auto-detection cannot
+/// change an artifact — only its wall-clock.
+pub fn resolve_threads(requested: usize) -> usize {
+    if requested == 0 {
+        std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1)
+    } else {
+        requested
+    }
+}
 
 /// Build-time predictions, exact for the deterministic simulator: a
 /// verified [`crate::engine::RunReport`] reproduces these numbers.
@@ -177,6 +192,36 @@ impl Plan {
         shuffle: ShufflePlan,
         dropped_collections: Vec<(usize, usize)>,
     ) -> Result<Plan> {
+        Plan::assemble_threaded(
+            cluster,
+            job,
+            placer,
+            coder,
+            mode,
+            alloc,
+            shuffle,
+            dropped_collections,
+            1,
+        )
+    }
+
+    /// [`Plan::assemble`] with the decode-schedule verification sharded
+    /// across `threads` workers ([`decoder::schedule_threaded`]); the
+    /// schedule — and therefore the plan — is identical for every thread
+    /// count. The metering pass stays serial (the virtual network clock
+    /// is an order-sensitive float fold).
+    #[allow(clippy::too_many_arguments)]
+    pub fn assemble_threaded(
+        cluster: ClusterSpec,
+        job: JobSpec,
+        placer: String,
+        coder: String,
+        mode: ShuffleMode,
+        alloc: Allocation,
+        shuffle: ShufflePlan,
+        dropped_collections: Vec<(usize, usize)>,
+        threads: usize,
+    ) -> Result<Plan> {
         job.validate(cluster.k())?;
         if alloc.k != cluster.k() {
             return Err(HetcdcError::PlanMismatch(format!(
@@ -187,7 +232,7 @@ impl Plan {
         }
         alloc.validate_le(&cluster.storage(), job.n_files)?;
         shuffle.validate(alloc.k, alloc.n_sub())?;
-        let schedule = decoder::schedule(&alloc, &shuffle)?;
+        let schedule = decoder::schedule_threaded(&alloc, &shuffle, threads)?;
         let predicted = PredictedLoads::compute(&cluster, &job, &alloc, &shuffle)?;
         let fingerprint = shape_fingerprint(&cluster, &job);
         Ok(Plan {
@@ -337,6 +382,10 @@ pub struct JobBuilder<'a> {
     coder: Option<String>,
     mode: ShuffleMode,
     custom: Option<Allocation>,
+    /// Worker threads for plan construction (1 = serial, 0 = auto).
+    threads: usize,
+    /// Override of the §V LP's Remark-7 enumeration cap.
+    lp_cap: Option<usize>,
 }
 
 impl<'a> JobBuilder<'a> {
@@ -348,6 +397,8 @@ impl<'a> JobBuilder<'a> {
             coder: None,
             mode: ShuffleMode::Coded,
             custom: None,
+            threads: 1,
+            lp_cap: None,
         }
     }
 
@@ -378,6 +429,29 @@ impl<'a> JobBuilder<'a> {
         self
     }
 
+    /// Worker threads for **plan construction** (default 1 = serial;
+    /// 0 = auto-detect). Threads shard the parallelizable build stages —
+    /// the §V LP's per-subsystem enumeration and pricing scan, the
+    /// combinatorial coder's group/round construction, and the decode-
+    /// schedule verification — and the built plan is **bit-identical**
+    /// for every value: serializing the same shape at `--threads 1` and
+    /// `--threads 8` yields byte-equal JSON. (Execution threading is a
+    /// separate knob: [`crate::engine::Executor::set_threads`].)
+    pub fn threads(mut self, threads: usize) -> Self {
+        self.threads = threads;
+        self
+    }
+
+    /// Override the §V LP's Remark-7 perfect-collection cap (default
+    /// [`crate::placement::lp_general::DEFAULT_COLLECTION_CAP`]). Only
+    /// the `lp-general` placer reads it; raising it trades build time
+    /// for placement quality, and any truncation still lands on
+    /// [`Plan::dropped_collections`].
+    pub fn lp_cap(mut self, cap: usize) -> Self {
+        self.lp_cap = Some(cap);
+        self
+    }
+
     /// Place, code, verify, predict — everything that does not depend on
     /// the data batch.
     pub fn build(self) -> Result<Plan> {
@@ -386,6 +460,11 @@ impl<'a> JobBuilder<'a> {
         // placers and coders never observe a malformed job (n_files = 0
         // would divide-by-zero in the homogeneous placer) or allocation.
         self.job.validate(self.cluster.k())?;
+        let threads = resolve_threads(self.threads);
+        let cfg = PlacerConfig {
+            lp_cap: self.lp_cap.unwrap_or(crate::placement::lp_general::DEFAULT_COLLECTION_CAP),
+            threads,
+        };
         let (placer_name, placement, default_coder) = match self.custom {
             Some(a) => (
                 "custom".to_string(),
@@ -393,7 +472,7 @@ impl<'a> JobBuilder<'a> {
                 "pairing",
             ),
             None => {
-                let placer = placer_by_name(&self.placer, self.cluster)?;
+                let placer = placer_by_name_cfg(&self.placer, self.cluster, &cfg)?;
                 (
                     placer.name().to_string(),
                     placer.place_report(self.cluster, self.job)?,
@@ -408,8 +487,8 @@ impl<'a> JobBuilder<'a> {
             ShuffleMode::Coded => self.coder.unwrap_or_else(|| default_coder.to_string()),
         };
         let coder = coder_by_name(&coder_name)?;
-        let shuffle = coder.plan(self.cluster, self.job, &alloc)?;
-        Plan::assemble(
+        let shuffle = coder.plan_threaded(self.cluster, self.job, &alloc, threads)?;
+        Plan::assemble_threaded(
             self.cluster.clone(),
             self.job.clone(),
             placer_name,
@@ -418,6 +497,7 @@ impl<'a> JobBuilder<'a> {
             alloc,
             shuffle,
             placement.dropped_collections,
+            threads,
         )
     }
 }
@@ -490,6 +570,47 @@ mod tests {
             JobBuilder::new(&c, &job).build().unwrap_err(),
             HetcdcError::InvalidJob(_)
         ));
+    }
+
+    #[test]
+    fn threaded_build_emits_byte_identical_plan_json() {
+        // The builder-level determinism contract: same shape, any thread
+        // budget, byte-equal serialized artifact.
+        let c = cluster(&[3, 4, 5, 6]);
+        let job = JobSpec::terasort(8);
+        let reference = JobBuilder::new(&c, &job).build().unwrap().to_json_string();
+        for threads in [0usize, 2, 8] {
+            let built = JobBuilder::new(&c, &job)
+                .threads(threads)
+                .build()
+                .unwrap()
+                .to_json_string();
+            assert_eq!(reference, built, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn lp_cap_override_reaches_the_placer_and_the_plan() {
+        // A deliberately tight cap truncates the K=4 enumeration; the
+        // dropped count must surface on the built plan (and a default
+        // build must not drop anything at this K).
+        let c = cluster(&[3, 4, 5, 6]);
+        let job = JobSpec::terasort(8);
+        let plan = JobBuilder::new(&c, &job).lp_cap(1).build().unwrap();
+        assert!(
+            plan.dropped_collections.iter().any(|&(j, d)| j == 2 && d > 0),
+            "cap=1 should truncate, got {:?}",
+            plan.dropped_collections
+        );
+        let plan = JobBuilder::new(&c, &job).build().unwrap();
+        assert!(plan.dropped_collections.is_empty());
+    }
+
+    #[test]
+    fn resolve_threads_auto_never_returns_zero() {
+        assert!(resolve_threads(0) >= 1);
+        assert_eq!(resolve_threads(1), 1);
+        assert_eq!(resolve_threads(7), 7);
     }
 
     #[test]

@@ -12,4 +12,4 @@ pub mod simplex;
 
 pub use problem::{Cmp, Lp, Scalar};
 pub use rational::Rat;
-pub use simplex::{solve, LpError, Solution};
+pub use simplex::{solve, solve_with_threads, LpError, Solution};

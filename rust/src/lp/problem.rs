@@ -6,8 +6,9 @@
 use std::fmt::Debug;
 
 /// Scalar field abstraction: implemented for `f64` (tolerance-based) and
-/// [`crate::lp::rational::Rat`] (exact).
-pub trait Scalar: Clone + Debug + PartialEq {
+/// [`crate::lp::rational::Rat`] (exact). `Send + Sync` so tableaux can be
+/// priced by sharded scans (see `simplex::solve_with_threads`).
+pub trait Scalar: Clone + Debug + PartialEq + Send + Sync {
     fn zero() -> Self;
     fn one() -> Self;
     fn from_i64(v: i64) -> Self;

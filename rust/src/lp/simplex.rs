@@ -10,8 +10,21 @@
 //! Phase 1 minimizes the sum of artificial variables to find a basic
 //! feasible solution; phase 2 optimizes the real objective. Bland's rule
 //! (smallest-index entering/leaving) guarantees termination.
+//!
+//! [`solve_with_threads`] shards the entering-variable pricing scan over
+//! contiguous column chunks on scoped worker threads. Each chunk reports
+//! its first negative-reduced-cost column and the lowest index wins, so
+//! the entering column — and therefore the entire pivot sequence, basis,
+//! and solution — is **bit-identical** to the serial scan for every
+//! thread count. Per-column arithmetic is shared between the serial and
+//! sharded paths (same fold order, same zero-cost skips), so chunking
+//! cannot perturb a single float.
 
 use super::problem::{Cmp, Lp, Scalar};
+
+/// Entering-variable pricing floor: below this many candidate columns a
+/// sharded scan costs more in thread spawns than it saves.
+const PAR_MIN_COLS: usize = 128;
 
 #[derive(Clone, Debug, PartialEq)]
 pub enum LpError {
@@ -71,38 +84,70 @@ impl<S: Scalar> Tableau<S> {
         self.basis[r] = c;
     }
 
-    /// Minimize `cost` (length cols-1) starting from the current basis.
-    /// Returns (objective value, pivots) or Unbounded.
+    /// Reduced cost `c_j − z_j` of column `j` under `cost`, with
+    /// `z_j = Σ_i c_B[i]·a[i][j]` folded in row order, skipping zero
+    /// basis costs. The serial and sharded pricing scans both call this,
+    /// so chunking cannot change a bit of any column's value.
+    fn reduced_cost(&self, cost: &[S], j: usize) -> S {
+        let mut zj = S::zero();
+        for i in 0..self.rows {
+            let cb = &cost[self.basis[i]];
+            if !cb.is_zero() {
+                zj = zj.add(&cb.mul(&self.a[i][j]));
+            }
+        }
+        cost[j].sub(&zj)
+    }
+
+    /// Bland pricing: the first column in `0..limit` with negative
+    /// reduced cost, or `None` at optimality. `threads > 1` shards the
+    /// scan over contiguous column chunks on scoped workers; each chunk
+    /// reports its own first hit and the lowest index wins regardless of
+    /// chunking, so the entering column equals the serial scan's.
+    ///
+    /// Bland's rule usually enters at a low index, so the first chunk is
+    /// scanned serially before paying for any thread spawn — most pivots
+    /// resolve without fanning out, and the fan-out (which cannot early-
+    /// exit across chunks) only runs when the low columns are all priced
+    /// out. Either path computes each column identically, so the result
+    /// is the same column (or None) in every configuration.
+    fn price_entering(&self, cost: &[S], limit: usize, threads: usize) -> Option<usize> {
+        if threads <= 1 || limit < PAR_MIN_COLS {
+            return (0..limit).find(|&j| self.reduced_cost(cost, j).is_neg());
+        }
+        let workers = threads.min(limit);
+        let chunk = limit.div_ceil(workers);
+        if let Some(j) = (0..chunk).find(|&j| self.reduced_cost(cost, j).is_neg()) {
+            return Some(j);
+        }
+        let mut firsts: Vec<Option<usize>> = vec![None; workers - 1];
+        std::thread::scope(|s| {
+            for (w, slot) in firsts.iter_mut().enumerate() {
+                let lo = (w + 1) * chunk;
+                let hi = ((w + 2) * chunk).min(limit);
+                let tab = &*self;
+                s.spawn(move || {
+                    *slot = (lo..hi).find(|&j| tab.reduced_cost(cost, j).is_neg());
+                });
+            }
+        });
+        firsts.into_iter().flatten().min()
+    }
+
+    /// Minimize `cost` (length cols-1) over the columns `0..limit`
+    /// starting from the current basis, pricing with up to `threads`
+    /// workers. Returns (objective value, pivots) or Unbounded.
     fn optimize(
         &mut self,
         cost: &[S],
-        allow: &dyn Fn(usize) -> bool,
+        limit: usize,
+        threads: usize,
     ) -> Result<(S, usize), LpError> {
-        let n = self.cols - 1;
         let mut pivots = 0usize;
         loop {
-            // Reduced costs: z_j - c_j = sum_i c_B[i] * a[i][j] - c_j;
-            // entering column has reduced cost > 0 (for minimization with
-            // this sign convention we pick j with  c_j - z_j < 0).
-            let mut entering = None;
-            for j in 0..n {
-                if !allow(j) {
-                    continue;
-                }
-                // c_j - z_j
-                let mut zj = S::zero();
-                for i in 0..self.rows {
-                    let cb = &cost[self.basis[i]];
-                    if !cb.is_zero() {
-                        zj = zj.add(&cb.mul(&self.a[i][j]));
-                    }
-                }
-                let red = cost[j].sub(&zj);
-                if red.is_neg() {
-                    entering = Some(j); // Bland: first (smallest) index
-                    break;
-                }
-            }
+            // Entering column: reduced cost c_j − z_j < 0 (minimization),
+            // smallest index first (Bland).
+            let entering = self.price_entering(cost, limit, threads);
             let Some(c) = entering else {
                 // Optimal: objective = sum_i cost[basis[i]] * rhs[i].
                 let mut obj = S::zero();
@@ -138,8 +183,16 @@ impl<S: Scalar> Tableau<S> {
     }
 }
 
-/// Solve the LP. See module docs.
+/// Solve the LP serially. See module docs.
 pub fn solve<S: Scalar>(lp: &Lp<S>) -> Result<Solution<S>, LpError> {
+    solve_with_threads(lp, 1)
+}
+
+/// Solve the LP with the entering-variable pricing scan sharded across
+/// up to `threads` scoped workers (`<= 1` = serial). The returned basis,
+/// objective, values, and pivot count are **bit-identical** to
+/// [`solve`] for every thread count — sharding changes wall-clock only.
+pub fn solve_with_threads<S: Scalar>(lp: &Lp<S>, threads: usize) -> Result<Solution<S>, LpError> {
     let n = lp.n_vars;
     let m = lp.constraints.len();
 
@@ -231,7 +284,7 @@ pub fn solve<S: Scalar>(lp: &Lp<S>) -> Result<Solution<S>, LpError> {
         for item in cost1.iter_mut().take(total).skip(artif_start) {
             *item = S::one();
         }
-        let (obj1, p1) = tab.optimize(&cost1, &|_| true)?;
+        let (obj1, p1) = tab.optimize(&cost1, total, threads)?;
         total_pivots += p1;
         if obj1.is_pos() {
             return Err(LpError::Infeasible);
@@ -262,7 +315,7 @@ pub fn solve<S: Scalar>(lp: &Lp<S>) -> Result<Solution<S>, LpError> {
     for j in 0..n {
         cost2[j] = lp.objective[j].clone();
     }
-    let (obj, p2) = tab.optimize(&cost2, &|j| j < artif_start)?;
+    let (obj, p2) = tab.optimize(&cost2, artif_start, threads)?;
     total_pivots += p2;
 
     let mut values = vec![S::zero(); n];
@@ -387,6 +440,39 @@ mod tests {
         assert!((sf.objective - sr.objective.to_f64()).abs() < 1e-9);
         // optimum: x=2, y=1 -> obj 5.
         assert_eq!(sr.objective, Rat::int(5));
+    }
+
+    #[test]
+    fn sharded_pricing_is_bit_identical_to_serial() {
+        // Wide LP (past the PAR_MIN_COLS floor) so the sharded scan
+        // actually engages: the basis walk, objective, values, and pivot
+        // count must match the serial solve bit for bit at every thread
+        // count — lowest qualifying index wins regardless of chunking.
+        let mut lp = lp_f64();
+        let n = 2 * PAR_MIN_COLS;
+        for v in 0..n {
+            let c = ((v * 7) % 5) as f64 - 2.0;
+            lp.add_var(format!("v{v}"), c);
+        }
+        for v in 0..n {
+            lp.constrain(vec![(v, 1.0)], Cmp::Le, 3.0);
+        }
+        let coupling: Vec<(usize, f64)> = (0..n).map(|v| (v, 1.0)).collect();
+        lp.constrain(coupling, Cmp::Ge, 5.0);
+        let serial = solve(&lp).unwrap();
+        assert!(lp.is_feasible(&serial.values));
+        for threads in [2usize, 3, 8] {
+            let sharded = solve_with_threads(&lp, threads).unwrap();
+            assert_eq!(
+                serial.objective.to_bits(),
+                sharded.objective.to_bits(),
+                "threads={threads}: objective"
+            );
+            assert_eq!(serial.pivots, sharded.pivots, "threads={threads}: pivots");
+            for (v, (a, b)) in serial.values.iter().zip(&sharded.values).enumerate() {
+                assert_eq!(a.to_bits(), b.to_bits(), "threads={threads}: value {v}");
+            }
+        }
     }
 
     #[test]

@@ -66,11 +66,13 @@ fn print_help() {
          \x20 lp        --storage M1,..,MK --n N     §V LP for general K\n\
          \x20 plan      --workload wordcount|terasort [--storage ... | --config ...]\n\
          \x20           [--placement NAME] [--coder NAME] [--out plan.json]\n\
-         \x20           build + verify an execution plan, emit JSON\n\
+         \x20           [--threads N] [--lp-cap N]\n\
+         \x20           build + verify an execution plan (threaded build), emit JSON\n\
          \x20 run       --workload wordcount|terasort [--backend native|xla]\n\
          \x20           [--config cluster.json | --storage ...] [--mode coded|uncoded]\n\
          \x20           [--plan plan.json] [--batches B] [--threads N] [--pipeline]\n\
-         \x20 bench-json [--out FILE] [--baseline FILE] [--tolerance-pct P]\n\
+         \x20           [--lp-cap N]\n\
+         \x20 bench-json [--out FILE] [--baseline FILE] [--tolerance-pct P] [--check-armed]\n\
          \x20           deterministic shuffle bench suite -> BENCH_shuffle.json\n\
          \x20 sweep     --n N [--max-m M]            L* table over storage grid\n\
          \x20 verify    [--n N]                      full self-check (theory, coding, LP)\n\
@@ -304,7 +306,8 @@ fn cmd_plan(argv: &[String]) -> i32 {
         ArgSpec { name: "coder", help: "pairing | greedy | multicast | memshare | combinatorial (default: placer's)", takes_value: true, default: None },
         ArgSpec { name: "mode", help: "coded | uncoded", takes_value: true, default: Some("coded") },
         ArgSpec { name: "out", help: "write plan JSON here (default: stdout)", takes_value: true, default: None },
-        ArgSpec { name: "threads", help: "certify the plan for sharded execution with N workers (0 = auto)", takes_value: true, default: Some("1") },
+        ArgSpec { name: "threads", help: "build the plan with N worker threads AND certify sharded execution (0 = auto; 1 = serial build, no certification; artifacts are byte-identical at every N)", takes_value: true, default: Some("1") },
+        ArgSpec { name: "lp-cap", help: "max perfect collections per §V LP subsystem (Remark 7 cap; default 4096)", takes_value: true, default: None },
         ArgSpec { name: "help", help: "show usage", takes_value: false, default: None },
     ];
     let args = match Args::parse(argv, &specs) {
@@ -329,9 +332,16 @@ fn cmd_plan(argv: &[String]) -> i32 {
     };
     let mut builder = JobBuilder::new(&cluster, &job)
         .placer(args.get("placement").unwrap_or("auto"))
-        .mode(mode);
+        .mode(mode)
+        .threads(threads);
     if let Some(c) = args.get("coder") {
         builder = builder.coder(c);
+    }
+    if args.provided("lp-cap") {
+        match args.get_usize("lp-cap") {
+            Ok(cap) => builder = builder.lp_cap(cap),
+            Err(e) => return fail(e),
+        }
     }
     let plan = match builder.build() {
         Ok(p) => p,
@@ -480,12 +490,13 @@ fn cmd_run(argv: &[String]) -> i32 {
         ArgSpec { name: "config", help: "cluster JSON config path", takes_value: true, default: None },
         ArgSpec { name: "plan", help: "execute this serialized plan (skips inline planning)", takes_value: true, default: None },
         ArgSpec { name: "batches", help: "data batches to run against the plan", takes_value: true, default: Some("1") },
-        ArgSpec { name: "threads", help: "1 = serial; N > 1 = sharded executor with N workers; 0 = auto (falls back to 1)", takes_value: true, default: Some("1") },
+        ArgSpec { name: "threads", help: "worker threads for BOTH plan build and execution: 1 = serial; N > 1 = sharded; 0 = auto (execution falls back to 1 when undetectable; results identical at every N)", takes_value: true, default: Some("1") },
         ArgSpec { name: "pipeline", help: "overlap Map of batch i+1 with Shuffle of batch i (bit-identical results; needs --batches >= 2 to overlap)", takes_value: false, default: None },
         ArgSpec { name: "mode", help: "coded | uncoded | both", takes_value: true, default: Some("both") },
         ArgSpec { name: "backend", help: "native | xla", takes_value: true, default: Some("native") },
         ArgSpec { name: "placement", help: "auto | optimal-k3 | lp-general | homogeneous | oblivious | combinatorial", takes_value: true, default: Some("auto") },
         ArgSpec { name: "coder", help: "pairing | greedy | multicast | memshare | combinatorial (default: placer's)", takes_value: true, default: None },
+        ArgSpec { name: "lp-cap", help: "max perfect collections per §V LP subsystem (Remark 7 cap; default 4096)", takes_value: true, default: None },
         ArgSpec { name: "artifacts", help: "artifact dir for --backend xla", takes_value: true, default: None },
         ArgSpec { name: "json", help: "emit machine-readable JSON reports", takes_value: false, default: None },
         ArgSpec { name: "help", help: "show usage", takes_value: false, default: None },
@@ -525,7 +536,9 @@ fn cmd_run(argv: &[String]) -> i32 {
     if let Some(path) = args.get("plan") {
         // The plan fixes cluster, job, placement, coder, and mode; accept
         // no conflicting flags rather than silently ignoring them.
-        for conflict in ["workload", "n", "storage", "config", "mode", "placement", "coder"] {
+        for conflict in [
+            "workload", "n", "storage", "config", "mode", "placement", "coder", "lp-cap",
+        ] {
             if args.provided(conflict) {
                 return fail(format!(
                     "--{conflict} conflicts with --plan (the plan already fixes it); \
@@ -570,9 +583,18 @@ fn cmd_run(argv: &[String]) -> i32 {
     };
 
     for mode in modes {
-        let mut builder = JobBuilder::new(&cluster, &job).placer(placement).mode(mode);
+        let mut builder = JobBuilder::new(&cluster, &job)
+            .placer(placement)
+            .mode(mode)
+            .threads(threads);
         if let Some(c) = args.get("coder") {
             builder = builder.coder(c);
+        }
+        if args.provided("lp-cap") {
+            match args.get_usize("lp-cap") {
+                Ok(cap) => builder = builder.lp_cap(cap),
+                Err(e) => return fail(e),
+            }
         }
         let plan = match builder.build() {
             Ok(p) => p,
@@ -619,6 +641,7 @@ fn cmd_bench_json(argv: &[String]) -> i32 {
         ArgSpec { name: "tolerance-pct", help: "max allowed shuffle-byte regression, percent", takes_value: true, default: Some("5") },
         ArgSpec { name: "threads", help: "worker threads for the parallel half of each scenario (0 = auto)", takes_value: true, default: Some("0") },
         ArgSpec { name: "timing", help: "also record wall-clock timings (nondeterministic; never gated)", takes_value: false, default: None },
+        ArgSpec { name: "check-armed", help: "only check that --baseline is a blessed (non-PENDING) artifact: exit 0 if armed, 3 if still the placeholder, 1 on a malformed baseline — runs no benchmarks", takes_value: false, default: None },
         ArgSpec { name: "help", help: "show usage", takes_value: false, default: None },
     ];
     let args = match Args::parse(argv, &specs) {
@@ -631,6 +654,41 @@ fn cmd_bench_json(argv: &[String]) -> i32 {
             usage("hetcdc bench-json", "Deterministic shuffle bench suite + baseline gate", &specs)
         );
         return 0;
+    }
+    // --check-armed: answer "is the regression gate armed?" and nothing
+    // else — no suite run, no artifact. CI uses it on PRs to surface a
+    // still-PENDING committed baseline as a visible warning (the normal
+    // bench run only mentions it in stderr scrollback).
+    if args.flag("check-armed") {
+        let Some(path) = args.get("baseline") else {
+            return fail("--check-armed requires --baseline FILE");
+        };
+        let parsed = std::fs::read_to_string(path)
+            .map_err(|e| HetcdcError::Io(format!("baseline {path}: {e}")))
+            .and_then(|text| {
+                hetcdc::util::json::Json::parse(&text).map_err(HetcdcError::from)
+            });
+        let baseline = match parsed {
+            Ok(j) => j,
+            Err(e) => return fail(e),
+        };
+        return match baseline.get("scenarios").map(|s| s.as_arr().map(|a| a.len())) {
+            Some(Some(0)) => {
+                eprintln!(
+                    "baseline '{path}' is still the PENDING placeholder: the shuffle-byte \
+                     regression gate is DISARMED. Bless a generated artifact \
+                     (cargo run --release -- bench-json --out BENCH_shuffle.json) to arm it."
+                );
+                3
+            }
+            Some(Some(n)) => {
+                println!("baseline '{path}' is armed ({n} scenarios gate this suite)");
+                0
+            }
+            _ => fail(format!(
+                "baseline '{path}' is malformed: 'scenarios' is missing or not an array"
+            )),
+        };
     }
     let threads = match args.get_usize("threads") {
         Ok(t) => t,

@@ -25,70 +25,74 @@ use crate::theory::params::ParamsK;
 /// Default cap on enumerated perfect collections per subsystem.
 pub const DEFAULT_COLLECTION_CAP: usize = 4096;
 
+/// DFS over lexicographic j-subset combinations: extend `chosen` with
+/// masks from `masks[start..]`, recording every completed perfect
+/// collection. `found` counts **all** completions; `out` keeps only the
+/// first `cap` of them (in DFS order), so the caller computes the exact
+/// dropped count as `found − out.len()`.
+#[allow(clippy::too_many_arguments)]
+fn extend_collections(
+    masks: &[u32],
+    start: usize,
+    k: usize,
+    j: usize,
+    chosen: &mut Vec<u32>,
+    degrees: &mut [u32],
+    out: &mut Vec<Vec<u32>>,
+    found: &mut usize,
+    cap: usize,
+) {
+    if chosen.len() == k {
+        if degrees.iter().all(|&d| d == j as u32) {
+            *found += 1;
+            if out.len() < cap {
+                out.push(chosen.clone());
+            }
+        }
+        return;
+    }
+    if masks.len() - start < k - chosen.len() {
+        return;
+    }
+    for idx in start..masks.len() {
+        let m = masks[idx];
+        // Prune: adding m must not push any node past degree j.
+        let mut ok = true;
+        for node in 0..k {
+            if m & (1 << node) != 0 && degrees[node] + 1 > j as u32 {
+                ok = false;
+                break;
+            }
+        }
+        if !ok {
+            continue;
+        }
+        for node in 0..k {
+            if m & (1 << node) != 0 {
+                degrees[node] += 1;
+            }
+        }
+        chosen.push(m);
+        extend_collections(masks, idx + 1, k, j, chosen, degrees, out, found, cap);
+        chosen.pop();
+        for node in 0..k {
+            if m & (1 << node) != 0 {
+                degrees[node] -= 1;
+            }
+        }
+    }
+}
+
 /// Enumerate `C'_j`: K-element sets of distinct j-subsets of `[K]` where
 /// every node appears in exactly j subsets. Returns (collections, dropped)
 /// where each collection is a list of node masks.
 pub fn perfect_collections(k: usize, j: usize, cap: usize) -> (Vec<Vec<u32>>, usize) {
     let masks = subsets_of_size(k, j);
     let mut out = Vec::new();
-    let mut dropped = 0usize;
+    let mut found = 0usize;
     let mut chosen: Vec<u32> = Vec::with_capacity(k);
     let mut degrees = vec![0u32; k];
-
-    fn rec(
-        masks: &[u32],
-        start: usize,
-        k: usize,
-        j: usize,
-        chosen: &mut Vec<u32>,
-        degrees: &mut Vec<u32>,
-        out: &mut Vec<Vec<u32>>,
-        dropped: &mut usize,
-        cap: usize,
-    ) {
-        if chosen.len() == k {
-            if degrees.iter().all(|&d| d == j as u32) {
-                if out.len() < cap {
-                    out.push(chosen.clone());
-                } else {
-                    *dropped += 1;
-                }
-            }
-            return;
-        }
-        if masks.len() - start < k - chosen.len() {
-            return;
-        }
-        for idx in start..masks.len() {
-            let m = masks[idx];
-            // Prune: adding m must not push any node past degree j.
-            let mut ok = true;
-            for node in 0..k {
-                if m & (1 << node) != 0 && degrees[node] + 1 > j as u32 {
-                    ok = false;
-                    break;
-                }
-            }
-            if !ok {
-                continue;
-            }
-            for node in 0..k {
-                if m & (1 << node) != 0 {
-                    degrees[node] += 1;
-                }
-            }
-            chosen.push(m);
-            rec(masks, idx + 1, k, j, chosen, degrees, out, dropped, cap);
-            chosen.pop();
-            for node in 0..k {
-                if m & (1 << node) != 0 {
-                    degrees[node] -= 1;
-                }
-            }
-        }
-    }
-
-    rec(
+    extend_collections(
         &masks,
         0,
         k,
@@ -96,9 +100,86 @@ pub fn perfect_collections(k: usize, j: usize, cap: usize) -> (Vec<Vec<u32>>, us
         &mut chosen,
         &mut degrees,
         &mut out,
-        &mut dropped,
+        &mut found,
         cap,
     );
+    let dropped = found - out.len();
+    (out, dropped)
+}
+
+/// [`perfect_collections`] with the DFS **sharded by first-subset
+/// prefix** across up to `threads` scoped workers: shard `i` enumerates
+/// every collection whose lexicographically-first member is `masks[i]`
+/// (strided over workers), and shards merge back in prefix order. The
+/// serial DFS order is exactly the concatenation of the shards in that
+/// order, so the returned `(collections, dropped)` pair is **identical**
+/// to the serial enumeration for any thread count — including the exact
+/// Remark-7 dropped count (each shard counts all of its completions and
+/// keeps at most `cap`, which is all the global cap can consume).
+pub fn perfect_collections_threaded(
+    k: usize,
+    j: usize,
+    cap: usize,
+    threads: usize,
+) -> (Vec<Vec<u32>>, usize) {
+    let masks = subsets_of_size(k, j);
+    let workers = threads.min(masks.len().max(1));
+    if workers <= 1 {
+        return perfect_collections(k, j, cap);
+    }
+    let masks = &masks[..];
+    let mut shards: Vec<(usize, Vec<Vec<u32>>, usize)> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..workers)
+            .map(|w| {
+                s.spawn(move || {
+                    let mut results = Vec::new();
+                    let mut idx0 = w;
+                    while idx0 < masks.len() {
+                        let mut out = Vec::new();
+                        let mut found = 0usize;
+                        let mut chosen = vec![masks[idx0]];
+                        let mut degrees = vec![0u32; k];
+                        for node in 0..k {
+                            if masks[idx0] & (1 << node) != 0 {
+                                degrees[node] = 1;
+                            }
+                        }
+                        extend_collections(
+                            masks,
+                            idx0 + 1,
+                            k,
+                            j,
+                            &mut chosen,
+                            &mut degrees,
+                            &mut out,
+                            &mut found,
+                            cap,
+                        );
+                        results.push((idx0, out, found));
+                        idx0 += workers;
+                    }
+                    results
+                })
+            })
+            .collect();
+        let mut all = Vec::new();
+        for h in handles {
+            all.extend(h.join().expect("perfect-collection enumeration worker"));
+        }
+        all
+    });
+    shards.sort_by_key(|&(idx0, _, _)| idx0);
+    let mut out = Vec::new();
+    let mut found = 0usize;
+    for (_, shard_out, shard_found) in shards {
+        found += shard_found;
+        for coll in shard_out {
+            if out.len() < cap {
+                out.push(coll);
+            }
+        }
+    }
+    let dropped = found - out.len();
     (out, dropped)
 }
 
@@ -116,6 +197,16 @@ pub struct GeneralLpModel<S> {
 
 /// Build the §V LP for `p` (Steps 0–13), generic over the scalar field.
 pub fn build_lp<S: Scalar>(p: &ParamsK, cap: usize) -> GeneralLpModel<S> {
+    build_lp_threaded(p, cap, 1)
+}
+
+/// [`build_lp`] with the per-subsystem work parallelized: the `C'_j`
+/// enumerations of the middle subsystems run **concurrently** (one
+/// scoped task per `j`, each prefix-sharding its own DFS over its share
+/// of the thread budget). Model assembly then consumes the results in
+/// ascending-`j` order, so variable indices, constraint order, and the
+/// dropped-collection report are identical to the serial build.
+pub fn build_lp_threaded<S: Scalar>(p: &ParamsK, cap: usize, threads: usize) -> GeneralLpModel<S> {
     let k = p.k();
     let mut lp: Lp<S> = Lp::new();
     let mut s_var: Vec<Option<usize>> = vec![None; 1 << k];
@@ -132,9 +223,48 @@ pub fn build_lp<S: Scalar>(p: &ParamsK, cap: usize) -> GeneralLpModel<S> {
     let mut x_vars = Vec::new();
     let mut dropped = Vec::new();
 
-    // Middle subsystems 2 <= j <= K−2 (Steps 1–6).
-    for j in 2..k.saturating_sub(1) {
-        let (collections, drop) = perfect_collections(k, j, cap);
+    // Middle subsystems 2 <= j <= K−2 (Steps 1–6): enumerate every C'_j
+    // up front — concurrently across subsystems when a thread budget is
+    // given — then assemble in ascending j.
+    let js: Vec<usize> = (2..k.saturating_sub(1)).collect();
+    let enumerated: Vec<(usize, (Vec<Vec<u32>>, usize))> = if threads <= 1 {
+        js.iter()
+            .map(|&j| (j, perfect_collections(k, j, cap)))
+            .collect()
+    } else {
+        // Concurrency stays within the caller's budget: at most `threads`
+        // subsystem tasks run at once (strided over `outer` workers), and
+        // each divides the remaining budget into its own prefix shards.
+        // Results are sorted back to ascending j, so model assembly sees
+        // the serial order no matter which worker ran which subsystem.
+        let outer = threads.min(js.len().max(1));
+        let inner = (threads / outer).max(1);
+        let js_ref = &js[..];
+        let mut all: Vec<(usize, (Vec<Vec<u32>>, usize))> = std::thread::scope(|s| {
+            let handles: Vec<_> = (0..outer)
+                .map(|w| {
+                    s.spawn(move || {
+                        let mut results = Vec::new();
+                        let mut idx = w;
+                        while idx < js_ref.len() {
+                            let j = js_ref[idx];
+                            results.push((j, perfect_collections_threaded(k, j, cap, inner)));
+                            idx += outer;
+                        }
+                        results
+                    })
+                })
+                .collect();
+            let mut all = Vec::new();
+            for h in handles {
+                all.extend(h.join().expect("subsystem enumeration worker"));
+            }
+            all
+        });
+        all.sort_by_key(|&(j, _)| j);
+        all
+    };
+    for (j, (collections, drop)) in enumerated {
         if drop > 0 {
             dropped.push((j, drop));
         }
@@ -221,8 +351,20 @@ pub struct GeneralSolution {
 
 /// Run the §V algorithm (f64 simplex).
 pub fn solve_general(p: &ParamsK, cap: usize) -> Result<GeneralSolution, lp::LpError> {
-    let model = build_lp::<f64>(p, cap);
-    let sol = lp::solve(&model.lp)?;
+    solve_general_threaded(p, cap, 1)
+}
+
+/// [`solve_general`] with plan-build parallelism: concurrent per-`j`
+/// perfect-collection enumeration ([`build_lp_threaded`]) and sharded
+/// simplex pricing ([`lp::solve_with_threads`]). The solution is
+/// bit-identical to the serial solve for every thread count.
+pub fn solve_general_threaded(
+    p: &ParamsK,
+    cap: usize,
+    threads: usize,
+) -> Result<GeneralSolution, lp::LpError> {
+    let model = build_lp_threaded::<f64>(p, cap, threads);
+    let sol = lp::solve_with_threads(&model.lp, threads)?;
     let k = p.k();
     let mut s_values = vec![0.0; 1 << k];
     for mask in 1u32..(1 << k) {
@@ -394,6 +536,50 @@ mod tests {
         let (colls, dropped) = perfect_collections(5, 2, 5);
         assert_eq!(colls.len(), 5);
         assert_eq!(dropped, 7);
+    }
+
+    #[test]
+    fn threaded_enumeration_is_identical_to_serial() {
+        // Prefix sharding must reproduce the serial DFS exactly — the
+        // collections, their order, AND the exact dropped count, at every
+        // thread count and cap (including caps that truncate mid-shard).
+        for (k, j) in [(4usize, 2usize), (5, 2), (5, 3), (6, 2), (6, 3)] {
+            for cap in [1usize, 5, 4096] {
+                let serial = perfect_collections(k, j, cap);
+                for threads in [2usize, 3, 8] {
+                    let sharded = perfect_collections_threaded(k, j, cap, threads);
+                    assert_eq!(
+                        serial, sharded,
+                        "K={k} j={j} cap={cap} threads={threads}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn threaded_solve_is_bit_identical_to_serial() {
+        // The full threaded build+solve path (concurrent per-j
+        // enumeration, sharded pricing) against the serial reference.
+        for storage in [vec![6u64, 7, 7], vec![3, 5, 6, 8], vec![3, 4, 5, 6, 7]] {
+            let p = ParamsK::new(storage.clone(), 12).unwrap();
+            let serial = solve_general(&p, DEFAULT_COLLECTION_CAP).unwrap();
+            for threads in [2usize, 8] {
+                let t = solve_general_threaded(&p, DEFAULT_COLLECTION_CAP, threads).unwrap();
+                assert_eq!(
+                    serial.load.to_bits(),
+                    t.load.to_bits(),
+                    "{storage:?} threads={threads}: load"
+                );
+                assert_eq!(serial.pivots, t.pivots, "{storage:?} threads={threads}: pivots");
+                assert_eq!(
+                    serial.s_values.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                    t.s_values.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                    "{storage:?} threads={threads}: S_T values"
+                );
+                assert_eq!(serial.dropped, t.dropped, "{storage:?} threads={threads}");
+            }
+        }
     }
 
     #[test]

@@ -14,4 +14,6 @@ pub mod memshare;
 pub mod placer;
 
 pub use alloc::Allocation;
-pub use placer::{builtin_placers, placer_by_name, Placement, Placer};
+pub use placer::{
+    builtin_placers, placer_by_name, placer_by_name_cfg, Placement, Placer, PlacerConfig,
+};

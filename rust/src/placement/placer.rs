@@ -73,17 +73,46 @@ impl Placer for OptimalK3 {
     }
 }
 
+/// Build-time knobs for registry placers, threaded through from
+/// [`crate::engine::JobBuilder`] (and the CLI's `--lp-cap`/`--threads`):
+/// the §V LP's Remark-7 enumeration cap, and the worker-thread budget
+/// for the parallelizable build stages. Neither knob may change a
+/// placement — `threads` is wall-clock only (parallel builds are
+/// bit-identical by construction), while `lp_cap` deliberately trades
+/// optimality for build time and is surfaced via
+/// [`Placement::dropped_collections`] whenever it truncates.
+#[derive(Clone, Copy, Debug)]
+pub struct PlacerConfig {
+    /// Max perfect collections enumerated per subsystem (Remark 7 cap).
+    pub lp_cap: usize,
+    /// Worker threads for parallel build stages (`<= 1` = serial).
+    pub threads: usize,
+}
+
+impl Default for PlacerConfig {
+    fn default() -> Self {
+        PlacerConfig {
+            lp_cap: lp_general::DEFAULT_COLLECTION_CAP,
+            threads: 1,
+        }
+    }
+}
+
 /// §V LP placement (any K).
 #[derive(Clone, Copy, Debug)]
 pub struct LpGeneral {
     /// Max perfect collections enumerated per subsystem (Remark 7 cap).
     pub cap: usize,
+    /// Worker threads for the enumeration and the simplex pricing scan
+    /// (`<= 1` = serial; the solution is identical either way).
+    pub threads: usize,
 }
 
 impl Default for LpGeneral {
     fn default() -> Self {
         LpGeneral {
             cap: lp_general::DEFAULT_COLLECTION_CAP,
+            threads: 1,
         }
     }
 }
@@ -102,7 +131,7 @@ impl Placer for LpGeneral {
     /// of vanishing into a comment.
     fn place_report(&self, cluster: &ClusterSpec, job: &JobSpec) -> Result<Placement> {
         let p = cluster.params_k(job.n_files)?;
-        let sol = lp_general::solve_general(&p, self.cap)?;
+        let sol = lp_general::solve_general_threaded(&p, self.cap, self.threads)?;
         Ok(Placement {
             alloc: lp_general::allocation_from_solution(&p, &sol),
             dropped_collections: sol.dropped.clone(),
@@ -227,9 +256,21 @@ impl Placer for Custom {
 /// Resolve a registry name to a placer. `"auto"` (and its CLI alias
 /// `"optimal"`) picks Theorem 1 for K=3 clusters and the §V LP otherwise.
 pub fn placer_by_name(name: &str, cluster: &ClusterSpec) -> Result<Box<dyn Placer>> {
+    placer_by_name_cfg(name, cluster, &PlacerConfig::default())
+}
+
+/// [`placer_by_name`] with explicit build knobs: the §V LP placer takes
+/// its Remark-7 cap and worker-thread budget from `cfg` (other placers
+/// have no knobs — their builds are already cheap).
+pub fn placer_by_name_cfg(
+    name: &str,
+    cluster: &ClusterSpec,
+    cfg: &PlacerConfig,
+) -> Result<Box<dyn Placer>> {
+    let lp = || LpGeneral { cap: cfg.lp_cap, threads: cfg.threads };
     match name {
         "optimal-k3" => Ok(Box::new(OptimalK3)),
-        "lp-general" | "lp" => Ok(Box::new(LpGeneral::default())),
+        "lp-general" | "lp" => Ok(Box::new(lp())),
         "homogeneous" => Ok(Box::new(Homogeneous)),
         "oblivious" => Ok(Box::new(Oblivious)),
         "combinatorial" => Ok(Box::new(CombinatorialGrid)),
@@ -237,7 +278,7 @@ pub fn placer_by_name(name: &str, cluster: &ClusterSpec) -> Result<Box<dyn Place
             if cluster.k() == 3 {
                 Ok(Box::new(OptimalK3))
             } else {
-                Ok(Box::new(LpGeneral::default()))
+                Ok(Box::new(lp()))
             }
         }
         other => Err(HetcdcError::UnknownStrategy {
@@ -339,7 +380,7 @@ mod tests {
         let placement = LpGeneral::default().place_report(&c, &job).unwrap();
         assert!(placement.dropped_collections.is_empty());
         // Cap of 1 forces truncation at j=2, and the report says so.
-        let tight = LpGeneral { cap: 1 };
+        let tight = LpGeneral { cap: 1, threads: 1 };
         let placement = tight.place_report(&c, &job).unwrap();
         assert!(
             placement
@@ -352,6 +393,31 @@ mod tests {
         // Non-enumerating placers report no drops via the default impl.
         let p3 = cluster(&[6, 7, 7]);
         let placement = OptimalK3.place_report(&p3, &JobSpec::terasort(12)).unwrap();
+        assert!(placement.dropped_collections.is_empty());
+    }
+
+    #[test]
+    fn config_threads_lp_cap_through_the_registry() {
+        // placer_by_name_cfg hands the Remark-7 cap to the LP placer (and
+        // to "auto" when it resolves to the LP); a tight cap shows up as
+        // dropped collections in the report, exactly like a hand-built
+        // LpGeneral { cap } would.
+        let c4 = cluster(&[3, 4, 5, 6]);
+        let job = JobSpec::terasort(8);
+        let tight = PlacerConfig { lp_cap: 1, threads: 2 };
+        for name in ["lp-general", "auto"] {
+            let placer = placer_by_name_cfg(name, &c4, &tight).unwrap();
+            assert_eq!(placer.name(), "lp-general");
+            let placement = placer.place_report(&c4, &job).unwrap();
+            assert!(
+                placement.dropped_collections.iter().any(|&(j, d)| j == 2 && d > 0),
+                "{name}: cap=1 must truncate, got {:?}",
+                placement.dropped_collections
+            );
+        }
+        // The default config is the default cap: nothing dropped at K=4.
+        let placer = placer_by_name_cfg("lp-general", &c4, &PlacerConfig::default()).unwrap();
+        let placement = placer.place_report(&c4, &job).unwrap();
         assert!(placement.dropped_collections.is_empty());
     }
 

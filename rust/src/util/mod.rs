@@ -8,4 +8,5 @@ pub mod cli;
 pub mod json;
 pub mod logging;
 pub mod rng;
+pub mod shard;
 pub mod stats;

@@ -1,0 +1,62 @@
+//! Deterministic index-sharded fan-out on scoped threads — the one
+//! implementation of "split an index space across workers and merge the
+//! shards back in index order" that every parallel plan-build stage
+//! shares (combinatorial groups and rounds, decoder node sharding).
+
+/// Build `n` items by index with up to `workers` scoped threads: the
+/// index space splits into contiguous per-worker ranges, each worker
+/// maps its range with `build`, and the shards concatenate back in
+/// index order. Because `build` is a pure function of the range, the
+/// result is **identical** for every worker count (including 0/1 =
+/// serial) — this is where the determinism argument of the threaded
+/// build path lives, in one place.
+///
+/// Panics if a worker panics (the panic is propagated on join), like
+/// running `build` inline would.
+pub fn shard_indexed<T, F>(n: usize, workers: usize, build: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(std::ops::Range<usize>) -> Vec<T> + Sync,
+{
+    let workers = workers.clamp(1, n.max(1));
+    if workers <= 1 {
+        return build(0..n);
+    }
+    let chunk = n.div_ceil(workers);
+    let build = &build;
+    std::thread::scope(|s| {
+        let handles: Vec<_> = (0..workers)
+            .map(|w| {
+                let lo = w * chunk;
+                let hi = ((w + 1) * chunk).min(n);
+                s.spawn(move || build(lo..hi))
+            })
+            .collect();
+        let mut all = Vec::with_capacity(n);
+        for h in handles {
+            all.extend(h.join().expect("index-shard worker"));
+        }
+        all
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matches_serial_for_every_worker_count() {
+        let serial: Vec<usize> = (0..37).map(|i| i * i).collect();
+        for workers in [0usize, 1, 2, 3, 5, 8, 64] {
+            let sharded =
+                shard_indexed(37, workers, |r| r.map(|i| i * i).collect());
+            assert_eq!(serial, sharded, "workers={workers}");
+        }
+    }
+
+    #[test]
+    fn empty_and_tiny_inputs_are_fine() {
+        assert!(shard_indexed(0, 4, |r| r.collect::<Vec<_>>()).is_empty());
+        assert_eq!(shard_indexed(1, 4, |r| r.collect::<Vec<_>>()), vec![0]);
+    }
+}

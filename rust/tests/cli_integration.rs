@@ -342,6 +342,79 @@ fn plan_with_threads_certifies_parallel_execution() {
 }
 
 #[test]
+fn plan_threads_emit_byte_identical_artifacts() {
+    // --threads now drives plan CONSTRUCTION too; the serialized plan
+    // must be byte-equal at every worker count (K=8 combinatorial grid
+    // exercises the parallel coder + decoder paths).
+    let storage = "4,4,5,5,6,6,7,7";
+    let base = hetcdc(&[
+        "plan", "--workload", "terasort", "--n", "8", "--storage", storage,
+        "--placement", "combinatorial",
+    ]);
+    assert_eq!(base.0, 0, "{}\n{}", base.1, base.2);
+    for threads in ["2", "0"] {
+        let t = hetcdc(&[
+            "plan", "--workload", "terasort", "--n", "8", "--storage", storage,
+            "--placement", "combinatorial", "--threads", threads,
+        ]);
+        assert_eq!(t.0, 0, "--threads {threads}: {}\n{}", t.1, t.2);
+        assert_eq!(base.1, t.1, "plan JSON differs at --threads {threads}");
+    }
+}
+
+#[test]
+fn lp_cap_flag_reaches_the_placer_and_warns() {
+    // A cap of 1 truncates the K=4 enumeration: the plan must build,
+    // carry dropped_collections, and warn on stderr.
+    let (code, stdout, stderr) = hetcdc(&[
+        "plan", "--workload", "terasort", "--n", "8", "--storage", "3,4,5,6",
+        "--placement", "lp-general", "--lp-cap", "1",
+    ]);
+    assert_eq!(code, 0, "{stdout}\n{stderr}");
+    assert!(stderr.contains("collection"), "expected a cap warning: {stderr}");
+    assert!(stdout.contains("dropped_collections"), "{stdout}");
+    // --lp-cap conflicts with --plan (the plan already fixes placement).
+    let (code, _, stderr) = hetcdc(&[
+        "run", "--plan", "/nonexistent/plan.json", "--lp-cap", "64",
+    ]);
+    assert_eq!(code, 1);
+    assert!(stderr.contains("conflicts with --plan"), "{stderr}");
+}
+
+#[test]
+fn bench_json_check_armed_distinguishes_pending_from_blessed() {
+    let dir = std::env::temp_dir().join(format!("hetcdc_armed_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let pending = dir.join("pending.json");
+    std::fs::write(&pending, r#"{"schema": 1, "scenarios": []}"#).unwrap();
+    let (code, _, stderr) = hetcdc(&[
+        "bench-json", "--check-armed", "--baseline", pending.to_str().unwrap(),
+    ]);
+    assert_eq!(code, 3, "pending placeholder must exit 3: {stderr}");
+    assert!(stderr.contains("DISARMED"), "{stderr}");
+
+    let blessed = dir.join("blessed.json");
+    std::fs::write(&blessed, r#"{"schema": 1, "scenarios": [{"name": "x"}]}"#).unwrap();
+    let (code, stdout, _) = hetcdc(&[
+        "bench-json", "--check-armed", "--baseline", blessed.to_str().unwrap(),
+    ]);
+    assert_eq!(code, 0, "{stdout}");
+    assert!(stdout.contains("armed"), "{stdout}");
+
+    let malformed = dir.join("malformed.json");
+    std::fs::write(&malformed, r#"{"schema": 1}"#).unwrap();
+    let (code, _, stderr) = hetcdc(&[
+        "bench-json", "--check-armed", "--baseline", malformed.to_str().unwrap(),
+    ]);
+    assert_eq!(code, 1, "malformed baseline must fail: {stderr}");
+
+    let (code, _, stderr) = hetcdc(&["bench-json", "--check-armed"]);
+    assert_eq!(code, 1);
+    assert!(stderr.contains("--baseline"), "{stderr}");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
 fn bench_json_emits_deterministic_artifact_and_self_compares() {
     let dir = std::env::temp_dir().join(format!("hetcdc_bench_{}", std::process::id()));
     std::fs::create_dir_all(&dir).unwrap();

@@ -1,0 +1,169 @@
+//! Parallel plan-build determinism — the acceptance gate of the threaded
+//! `JobBuilder` path: for every placer × coder pair that builds at
+//! K ∈ {3, 5, 8, 12}, the serialized Plan JSON (schema v2) must be
+//! **byte-identical** across `--threads ∈ {1, 2, 8}` (and auto), and the
+//! sharded simplex pricing must return the same objective, values, and
+//! pivot walk as the unsharded solve on the §V LPs.
+//!
+//! Threading a plan build may only change wall-clock: the LP enumeration
+//! merges prefix shards in DFS order, the pricing scan takes the lowest
+//! qualifying column regardless of chunking, the grid coder's groups and
+//! rounds are pure functions of their indices, and the decode-schedule
+//! verification shards by node — so not one byte of the artifact may
+//! move. (The K ∈ {8, 12} shapes use the non-enumerating placers; the §V
+//! LP's perfect-collection enumeration is combinatorial in K and stays
+//! out of the smoke path, as in the bench suite.)
+
+use hetcdc::engine::JobBuilder;
+use hetcdc::lp::{solve, solve_with_threads};
+use hetcdc::model::cluster::ClusterSpec;
+use hetcdc::model::job::{JobSpec, ShuffleMode};
+use hetcdc::placement::lp_general::{build_lp, DEFAULT_COLLECTION_CAP};
+use hetcdc::theory::params::ParamsK;
+
+fn cluster(storage: &[u64]) -> ClusterSpec {
+    let mut c = ClusterSpec::homogeneous(storage.len(), 1, 1000.0);
+    for (node, &m) in c.nodes.iter_mut().zip(storage) {
+        node.storage = m;
+    }
+    for (i, node) in c.nodes.iter_mut().enumerate() {
+        node.uplink_mbps = 400.0 + 175.0 * (i % 3) as f64;
+        node.map_files_per_s = 100.0 * (1 + i % 4) as f64;
+    }
+    c
+}
+
+fn small_job(n: u64) -> JobSpec {
+    let mut job = JobSpec::terasort(n);
+    job.t = 8;
+    job.keys_per_file = 16;
+    job
+}
+
+/// (storage, N, placers to try) per K. Placer and coder names that
+/// reject a shape are skipped — the success floor at the end keeps the
+/// sweep from going vacuous. K=12 runs the grid placer only: the
+/// oblivious memory-sharing placement at this shape subpacketizes to
+/// sp=165 (~2000 subfiles), which is bench territory, not debug-mode
+/// test territory.
+#[rustfmt::skip]
+fn shapes() -> Vec<(Vec<u64>, u64, Vec<&'static str>)> {
+    vec![
+        (vec![6, 7, 7], 12, vec!["optimal-k3", "lp-general", "oblivious"]),
+        (vec![3, 4, 5, 6, 7], 10, vec!["lp-general", "oblivious"]),
+        (vec![4, 4, 5, 5, 6, 6, 7, 7], 8, vec!["oblivious", "combinatorial"]),
+        (vec![4, 4, 4, 5, 5, 5, 6, 6, 6, 7, 7, 7], 12, vec!["combinatorial"]),
+    ]
+}
+
+const CODERS: &[&str] = &["pairing", "greedy", "multicast", "memshare", "combinatorial"];
+
+#[test]
+fn plan_json_is_byte_identical_across_thread_counts() {
+    let mut built = 0usize;
+    for (storage, n, placers) in shapes() {
+        let cl = cluster(&storage);
+        let job = small_job(n);
+        for placer in placers {
+            // Every coder that serves the placement, plus the placer's
+            // default and the uncoded baseline.
+            let coder_choices: Vec<Option<&str>> =
+                std::iter::once(None).chain(CODERS.iter().copied().map(Some)).collect();
+            for coder in coder_choices {
+                for mode in [ShuffleMode::Coded, ShuffleMode::Uncoded] {
+                    if mode == ShuffleMode::Uncoded && coder.is_some() {
+                        continue; // uncoded ignores the coder choice
+                    }
+                    let build = |threads: usize| {
+                        let mut b = JobBuilder::new(&cl, &job)
+                            .placer(placer)
+                            .mode(mode)
+                            .threads(threads);
+                        if let Some(c) = coder {
+                            b = b.coder(c);
+                        }
+                        b.build()
+                    };
+                    let reference = match build(1) {
+                        Ok(p) => p.to_json_string(),
+                        Err(_) => continue, // combo rejects this shape
+                    };
+                    for threads in [2usize, 8, 0] {
+                        let plan = build(threads).unwrap_or_else(|e| {
+                            panic!(
+                                "K={} {placer} x {coder:?} {mode:?}: serial build \
+                                 succeeded but threads={threads} failed: {e}",
+                                cl.k()
+                            )
+                        });
+                        assert_eq!(
+                            reference,
+                            plan.to_json_string(),
+                            "K={} {placer} x {coder:?} {mode:?} threads={threads}: \
+                             plan JSON diverged",
+                            cl.k()
+                        );
+                    }
+                    built += 1;
+                }
+            }
+        }
+    }
+    assert!(built >= 20, "sweep too small: only {built} combos built");
+}
+
+#[test]
+fn sharded_simplex_pricing_matches_unsharded_on_section_v_lps() {
+    // The real §V LPs (not toy models): same basis walk — pivot count,
+    // objective, and every variable value, bit for bit.
+    for storage in [vec![6u64, 7, 7], vec![3, 5, 6, 8], vec![3, 4, 5, 6, 7]] {
+        let p = ParamsK::new(storage.clone(), 12).unwrap();
+        let model = build_lp::<f64>(&p, DEFAULT_COLLECTION_CAP);
+        let serial = solve(&model.lp).unwrap();
+        for threads in [2usize, 3, 8] {
+            let sharded = solve_with_threads(&model.lp, threads).unwrap();
+            assert_eq!(
+                serial.objective.to_bits(),
+                sharded.objective.to_bits(),
+                "{storage:?} threads={threads}: objective"
+            );
+            assert_eq!(
+                serial.pivots, sharded.pivots,
+                "{storage:?} threads={threads}: pivot walk"
+            );
+            assert_eq!(
+                serial.values.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                sharded.values.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                "{storage:?} threads={threads}: solution values"
+            );
+        }
+    }
+}
+
+#[test]
+fn lp_cap_builds_are_deterministic_too() {
+    // The --lp-cap knob composes with threading: a truncating cap must
+    // truncate identically (same dropped counts, same placement bytes)
+    // at every thread count.
+    let cl = cluster(&[3, 4, 5, 6]);
+    let job = small_job(8);
+    let reference = JobBuilder::new(&cl, &job)
+        .placer("lp-general")
+        .lp_cap(1)
+        .build()
+        .unwrap();
+    assert!(
+        !reference.dropped_collections.is_empty(),
+        "cap=1 must truncate at K=4"
+    );
+    for threads in [2usize, 8] {
+        let plan = JobBuilder::new(&cl, &job)
+            .placer("lp-general")
+            .lp_cap(1)
+            .threads(threads)
+            .build()
+            .unwrap();
+        assert_eq!(reference.to_json_string(), plan.to_json_string(), "threads={threads}");
+        assert_eq!(reference.dropped_collections, plan.dropped_collections);
+    }
+}
