@@ -37,6 +37,7 @@ fn fleet(k: usize) -> ClusterSpec {
             .map(|(n, s, b, r)| node(n, *s, *b, *r))
             .collect(),
         latency_ms: 0.5,
+        topology: hetcdc::net::Topology::Shared,
     }
 }
 

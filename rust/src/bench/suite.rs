@@ -22,6 +22,7 @@ use crate::engine::{ExecMode, Executor, JobBuilder, NativeBackend};
 use crate::error::{HetcdcError, Result};
 use crate::model::cluster::{ClusterSpec, NodeSpec};
 use crate::model::job::{JobSpec, ShuffleMode, WorkloadKind};
+use crate::net::Topology;
 use crate::util::json::Json;
 use std::collections::BTreeMap;
 
@@ -40,6 +41,12 @@ pub struct Scenario {
     /// Coder registry name; `None` uses the placer's default.
     pub coder: Option<&'static str>,
     pub mode: ShuffleMode,
+    /// Network topology of the scenario's cluster (`Shared` = the
+    /// historical single broadcast medium). Topology changes the
+    /// simulated schedule only — byte/message/round counts of a `-rack`
+    /// scenario are identical to its shared-medium sibling, which the
+    /// suite tests assert.
+    pub topology: Topology,
 }
 
 /// The committed suite: K ∈ {3, 5, 8, 12, 16} heterogeneous clusters,
@@ -57,22 +64,30 @@ pub fn default_suite() -> Vec<Scenario> {
     use ShuffleMode::{Coded, Uncoded};
     use WorkloadKind::{TeraSort, WordCount};
     vec![
-        Scenario { name: "k3-terasort-coded", storage: &[6, 7, 7], n_files: 12, workload: TeraSort, placer: "auto", coder: None, mode: Coded },
-        Scenario { name: "k3-terasort-uncoded", storage: &[6, 7, 7], n_files: 12, workload: TeraSort, placer: "auto", coder: None, mode: Uncoded },
-        Scenario { name: "k3-wordcount-coded", storage: &[4, 8, 12], n_files: 12, workload: WordCount, placer: "auto", coder: None, mode: Coded },
-        Scenario { name: "k5-terasort-coded", storage: &[3, 4, 5, 6, 7], n_files: 10, workload: TeraSort, placer: "auto", coder: None, mode: Coded },
-        Scenario { name: "k5-terasort-uncoded", storage: &[3, 4, 5, 6, 7], n_files: 10, workload: TeraSort, placer: "auto", coder: None, mode: Uncoded },
-        Scenario { name: "k8-terasort-coded", storage: &[2, 3, 3, 4, 4, 5, 5, 6], n_files: 8, workload: TeraSort, placer: "oblivious", coder: None, mode: Coded },
-        Scenario { name: "k8-terasort-uncoded", storage: &[2, 3, 3, 4, 4, 5, 5, 6], n_files: 8, workload: TeraSort, placer: "oblivious", coder: None, mode: Uncoded },
+        Scenario { name: "k3-terasort-coded", storage: &[6, 7, 7], n_files: 12, workload: TeraSort, placer: "auto", coder: None, mode: Coded, topology: Topology::Shared },
+        Scenario { name: "k3-terasort-uncoded", storage: &[6, 7, 7], n_files: 12, workload: TeraSort, placer: "auto", coder: None, mode: Uncoded, topology: Topology::Shared },
+        Scenario { name: "k3-wordcount-coded", storage: &[4, 8, 12], n_files: 12, workload: WordCount, placer: "auto", coder: None, mode: Coded, topology: Topology::Shared },
+        Scenario { name: "k5-terasort-coded", storage: &[3, 4, 5, 6, 7], n_files: 10, workload: TeraSort, placer: "auto", coder: None, mode: Coded, topology: Topology::Shared },
+        Scenario { name: "k5-terasort-uncoded", storage: &[3, 4, 5, 6, 7], n_files: 10, workload: TeraSort, placer: "auto", coder: None, mode: Uncoded, topology: Topology::Shared },
+        Scenario { name: "k8-terasort-coded", storage: &[2, 3, 3, 4, 4, 5, 5, 6], n_files: 8, workload: TeraSort, placer: "oblivious", coder: None, mode: Coded, topology: Topology::Shared },
+        Scenario { name: "k8-terasort-uncoded", storage: &[2, 3, 3, 4, 4, 5, 5, 6], n_files: 8, workload: TeraSort, placer: "oblivious", coder: None, mode: Uncoded, topology: Topology::Shared },
         // Combinatorial grid design (q=2, r=4: gain 3) vs greedy pairing
         // (gain <= 2) on the identical placement — the measured coding
         // gain the acceptance gate checks.
-        Scenario { name: "k8-terasort-combinatorial", storage: &[4, 4, 5, 5, 6, 6, 7, 7], n_files: 8, workload: TeraSort, placer: "combinatorial", coder: None, mode: Coded },
-        Scenario { name: "k8-terasort-grid-greedy", storage: &[4, 4, 5, 5, 6, 6, 7, 7], n_files: 8, workload: TeraSort, placer: "combinatorial", coder: Some("greedy"), mode: Coded },
+        Scenario { name: "k8-terasort-combinatorial", storage: &[4, 4, 5, 5, 6, 6, 7, 7], n_files: 8, workload: TeraSort, placer: "combinatorial", coder: None, mode: Coded, topology: Topology::Shared },
+        Scenario { name: "k8-terasort-grid-greedy", storage: &[4, 4, 5, 5, 6, 6, 7, 7], n_files: 8, workload: TeraSort, placer: "combinatorial", coder: Some("greedy"), mode: Coded, topology: Topology::Shared },
         // Larger-K combinatorial regimes: K=12 (q=3, r=4) and K=16
         // (q=2, r=8) — shapes no enumeration-based coder reaches.
-        Scenario { name: "k12-terasort-combinatorial", storage: &[4, 4, 4, 5, 5, 5, 6, 6, 6, 7, 7, 7], n_files: 12, workload: TeraSort, placer: "combinatorial", coder: None, mode: Coded },
-        Scenario { name: "k16-terasort-combinatorial", storage: &[8, 8, 9, 9, 10, 10, 11, 11, 8, 8, 9, 9, 10, 10, 11, 11], n_files: 16, workload: TeraSort, placer: "combinatorial", coder: None, mode: Coded },
+        Scenario { name: "k12-terasort-combinatorial", storage: &[4, 4, 4, 5, 5, 5, 6, 6, 6, 7, 7, 7], n_files: 12, workload: TeraSort, placer: "combinatorial", coder: None, mode: Coded, topology: Topology::Shared },
+        Scenario { name: "k16-terasort-combinatorial", storage: &[8, 8, 9, 9, 10, 10, 11, 11, 8, 8, 9, 9, 10, 10, 11, 11], n_files: 16, workload: TeraSort, placer: "combinatorial", coder: None, mode: Coded, topology: Topology::Shared },
+        // Rack-switched twins of the combinatorial scenarios: identical
+        // storage/job, 4:1 oversubscribed rack trunks. Byte, message, and
+        // round counts must match the shared sibling exactly; only the
+        // simulated schedule (makespan) improves, because the coder's q
+        // node-disjoint transversal groups per round run concurrently.
+        Scenario { name: "k8-terasort-combinatorial-rack", storage: &[4, 4, 5, 5, 6, 6, 7, 7], n_files: 8, workload: TeraSort, placer: "combinatorial", coder: None, mode: Coded, topology: Topology::Rack { racks: 2, oversub: 4.0 } },
+        Scenario { name: "k12-terasort-combinatorial-rack", storage: &[4, 4, 4, 5, 5, 5, 6, 6, 6, 7, 7, 7], n_files: 12, workload: TeraSort, placer: "combinatorial", coder: None, mode: Coded, topology: Topology::Rack { racks: 3, oversub: 4.0 } },
+        Scenario { name: "k16-terasort-combinatorial-rack", storage: &[8, 8, 9, 9, 10, 10, 11, 11, 8, 8, 9, 9, 10, 10, 11, 11], n_files: 16, workload: TeraSort, placer: "combinatorial", coder: None, mode: Coded, topology: Topology::Rack { racks: 4, oversub: 4.0 } },
     ]
 }
 
@@ -93,6 +108,7 @@ impl Scenario {
                 })
                 .collect(),
             latency_ms: 0.5,
+            topology: self.topology,
         }
     }
 
@@ -163,6 +179,11 @@ pub struct ScenarioResult {
     pub load_equations: f64,
     pub map_time_s: f64,
     pub shuffle_time_s: f64,
+    /// Concurrent schedule length of the shuffle (the net simulator's
+    /// `elapsed_s`): equal to `shuffle_time_s` on the shared medium,
+    /// smaller on switched topologies where link-disjoint groups of one
+    /// round overlap. Gated against the baseline like the byte totals.
+    pub makespan_s: f64,
     /// Serial, parallel, and pipelined execution produced bit-identical
     /// outputs and network reports (always true — a divergence aborts
     /// the suite).
@@ -200,6 +221,7 @@ impl ScenarioResult {
         m.insert("load_equations".into(), Json::Num(self.load_equations));
         m.insert("map_time_s".into(), Json::Num(self.map_time_s));
         m.insert("shuffle_time_s".into(), Json::Num(self.shuffle_time_s));
+        m.insert("makespan_s".into(), Json::Num(self.makespan_s));
         m.insert("modes_identical".into(), Json::Bool(self.modes_identical));
         m.insert("plan_build".into(), self.plan_build.to_json());
         if let Some(w) = &self.wall {
@@ -368,6 +390,7 @@ pub fn run_scenario(
         load_equations: r_serial.load_equations,
         map_time_s: r_serial.map_time_s,
         shuffle_time_s: r_serial.shuffle_time_s,
+        makespan_s: serial.net_report().elapsed_s,
         modes_identical: true,
         plan_build: PlanBuildStats::of(&plan.shuffle),
         wall,
@@ -433,8 +456,24 @@ impl SuiteReport {
 
 /// Run the whole [`default_suite`].
 pub fn run_suite(threads: usize, timing: Option<&Bench>) -> Result<SuiteReport> {
+    run_suite_with(threads, timing, None)
+}
+
+/// [`run_suite`] with an optional topology override applied to every
+/// scenario (the `bench-json --topology` exploration path). Overridden
+/// artifacts are *not* comparable to the committed shared-medium
+/// baseline — the CLI skips the gate when an override is active.
+pub fn run_suite_with(
+    threads: usize,
+    timing: Option<&Bench>,
+    topology: Option<Topology>,
+) -> Result<SuiteReport> {
     let mut results = Vec::new();
     for sc in default_suite() {
+        let mut sc = sc;
+        if let Some(t) = topology {
+            sc.topology = t;
+        }
         results.push(run_scenario(&sc, threads, timing)?);
     }
     Ok(SuiteReport { results })
@@ -533,8 +572,8 @@ pub fn compare_to_baseline(current: &Json, baseline: &Json, tolerance_pct: f64) 
     }
 
     let cur_scenarios = current.get("scenarios").and_then(|s| s.as_arr()).unwrap_or(empty);
-    /// name -> (payload_bytes, rounds if recorded).
-    fn by_name(list: &[Json]) -> BTreeMap<String, (f64, Option<f64>)> {
+    /// name -> (payload_bytes, rounds if recorded, makespan if recorded).
+    fn by_name(list: &[Json]) -> BTreeMap<String, (f64, Option<f64>, Option<f64>)> {
         list.iter()
             .filter_map(|s| {
                 Some((
@@ -542,6 +581,7 @@ pub fn compare_to_baseline(current: &Json, baseline: &Json, tolerance_pct: f64) 
                     (
                         s.get("payload_bytes")?.as_f64()?,
                         s.get("rounds").and_then(|r| r.as_f64()),
+                        s.get("makespan_s").and_then(|r| r.as_f64()),
                     ),
                 ))
             })
@@ -549,13 +589,13 @@ pub fn compare_to_baseline(current: &Json, baseline: &Json, tolerance_pct: f64) 
     }
     let cur_map = by_name(cur_scenarios);
     let base_map = by_name(base_scenarios);
-    for (name, (base_payload, base_rounds)) in &base_map {
+    for (name, (base_payload, base_rounds, base_makespan)) in &base_map {
         match cur_map.get(name) {
             None => {
                 notes.push(format!("scenario '{name}' disappeared (coverage lost)"));
                 status = BaselineStatus::Regression;
             }
-            Some((cur_payload, cur_rounds)) => {
+            Some((cur_payload, cur_rounds, cur_makespan)) => {
                 if *base_payload > 0.0 {
                     let ratio = cur_payload / base_payload;
                     if ratio > 1.0 + tol {
@@ -585,6 +625,36 @@ pub fn compare_to_baseline(current: &Json, baseline: &Json, tolerance_pct: f64) 
                         notes.push(format!(
                             "scenario '{name}' no longer records its shuffle round count \
                              (baseline has {b:.0}): the IR gate lost its input"
+                        ));
+                        status = BaselineStatus::Regression;
+                    }
+                    _ => {}
+                }
+                // Schedule-length drift, tolerance-checked like bytes.
+                // Same asymmetric skip as rounds: a pre-topology baseline
+                // without makespan_s skips the check, but a current
+                // artifact dropping the field the baseline records means
+                // the schedule gate lost its input.
+                match (base_makespan, cur_makespan) {
+                    (Some(b), Some(c)) if *b > 0.0 && c / b > 1.0 + tol => {
+                        notes.push(format!(
+                            "scenario '{name}' shuffle makespan regressed {:+.2}% \
+                             ({b:.6}s -> {c:.6}s, tolerance {tolerance_pct}%)",
+                            100.0 * (c / b - 1.0)
+                        ));
+                        status = BaselineStatus::Regression;
+                    }
+                    (Some(b), Some(c)) if *b > 0.0 && c / b < 1.0 - tol => {
+                        notes.push(format!(
+                            "scenario '{name}' shuffle makespan improved {:.2}% \
+                             ({b:.6}s -> {c:.6}s): consider re-blessing the baseline",
+                            100.0 * (1.0 - c / b)
+                        ));
+                    }
+                    (Some(b), None) => {
+                        notes.push(format!(
+                            "scenario '{name}' no longer records its shuffle makespan \
+                             (baseline has {b:.6}s): the schedule gate lost its input"
                         ));
                         status = BaselineStatus::Regression;
                     }
@@ -684,6 +754,96 @@ mod tests {
             assert!(sc.rounds > 1, "{name}: expected a multi-round plan");
         }
         Ok(())
+    }
+
+    #[test]
+    fn rack_topology_cuts_makespan_at_unchanged_load() -> Result<()> {
+        // The topology acceptance gate: each `-rack` scenario moves the
+        // exact same bytes/messages/rounds as its shared-medium sibling
+        // (the topology never changes what is sent), but finishes the
+        // shuffle strictly sooner because the combinatorial coder's q
+        // node-disjoint transversal groups per round run concurrently on
+        // disjoint access links.
+        let report = shared_report();
+        for k in ["k8", "k12", "k16"] {
+            let shared = report.scenario(&format!("{k}-terasort-combinatorial"))?;
+            let rack = report.scenario(&format!("{k}-terasort-combinatorial-rack"))?;
+            assert_eq!(rack.payload_bytes, shared.payload_bytes, "{k}: payload drift");
+            assert_eq!(rack.wire_bytes, shared.wire_bytes, "{k}: wire drift");
+            assert_eq!(rack.messages, shared.messages, "{k}: message drift");
+            assert_eq!(rack.rounds, shared.rounds, "{k}: round drift");
+            assert!(
+                rack.makespan_s < shared.makespan_s,
+                "{k}: rack makespan {} >= shared {}",
+                rack.makespan_s,
+                shared.makespan_s
+            );
+            // On the shared medium the schedule *is* the serialized fold.
+            assert_eq!(shared.makespan_s.to_bits(), shared.shuffle_time_s.to_bits());
+        }
+        Ok(())
+    }
+
+    #[test]
+    fn suite_topology_override_keeps_bytes_and_rounds() {
+        // `bench-json --topology` path: overriding every scenario onto a
+        // rack fabric must leave all deterministic byte/round metrics
+        // identical to the default suite — only schedules change.
+        let over = run_suite_with(2, None, Some(Topology::Rack { racks: 1, oversub: 2.0 }))
+            .expect("override suite runs");
+        let base = shared_report();
+        for (o, b) in over.results.iter().zip(&base.results) {
+            assert_eq!(o.name, b.name);
+            assert_eq!(o.payload_bytes, b.payload_bytes, "{}", o.name);
+            assert_eq!(o.wire_bytes, b.wire_bytes, "{}", o.name);
+            assert_eq!(o.messages, b.messages, "{}", o.name);
+            assert_eq!(o.rounds, b.rounds, "{}", o.name);
+        }
+    }
+
+    #[test]
+    fn makespan_drift_fails_the_gate() {
+        let current = shared_report().to_json();
+        // Baseline whose first scenario finished 50% faster: the current
+        // artifact "regressed" past any reasonable tolerance.
+        let mut doctored = current.clone();
+        if let Json::Obj(m) = &mut doctored {
+            if let Some(Json::Arr(sc)) = m.get_mut("scenarios") {
+                if let Some(Json::Obj(first)) = sc.first_mut() {
+                    let ms = first.get("makespan_s").and_then(|r| r.as_f64()).unwrap();
+                    first.insert("makespan_s".into(), Json::Num(ms * 0.5));
+                }
+            }
+        }
+        let cmp = compare_to_baseline(&current, &doctored, 5.0);
+        assert_eq!(cmp.status, BaselineStatus::Regression, "{:?}", cmp.notes);
+        assert!(
+            cmp.notes.iter().any(|n| n.contains("makespan regressed")),
+            "{:?}",
+            cmp.notes
+        );
+        // A pre-topology baseline without makespan_s skips the check...
+        let mut legacy = current.clone();
+        if let Json::Obj(m) = &mut legacy {
+            if let Some(Json::Arr(sc)) = m.get_mut("scenarios") {
+                for s in sc.iter_mut() {
+                    if let Json::Obj(obj) = s {
+                        obj.remove("makespan_s");
+                    }
+                }
+            }
+        }
+        let cmp = compare_to_baseline(&current, &legacy, 5.0);
+        assert_eq!(cmp.status, BaselineStatus::Pass, "{:?}", cmp.notes);
+        // ... but a current artifact dropping the field fails, same
+        // asymmetry as the round-count gate.
+        let cmp = compare_to_baseline(&legacy, &current, 5.0);
+        assert_eq!(cmp.status, BaselineStatus::Regression, "{:?}", cmp.notes);
+        assert!(
+            cmp.notes.iter().any(|n| n.contains("schedule gate lost its input")),
+            "{:?}",
+            cmp.notes
+        );
     }
 
     #[test]

@@ -248,6 +248,26 @@ impl ShufflePlan {
         flags
     }
 
+    /// `masks[bi]` = `Some(members)` when flat index `bi` is the first
+    /// broadcast of a multicast group (carrying that group's member
+    /// mask), `None` inside a group. The metering passes call
+    /// [`crate::net::BroadcastNet::begin_group`] exactly where a mask is
+    /// present — the group-boundary counterpart of
+    /// [`Self::round_start_flags`], and the only structural input the
+    /// switched-topology scheduler needs (groups of a round run
+    /// concurrently when their links are disjoint).
+    pub fn group_start_masks(&self) -> Vec<Option<NodeMask>> {
+        let mut masks = Vec::with_capacity(self.n_broadcasts());
+        for round in &self.rounds {
+            for group in &round.groups {
+                for (i, _) in group.broadcasts.iter().enumerate() {
+                    masks.push(if i == 0 { Some(group.members) } else { None });
+                }
+            }
+        }
+        masks
+    }
+
     /// Total load in subfile units (exact rational; integral when all
     /// broadcasts are whole-IV).
     pub fn load_units(&self) -> f64 {
@@ -830,6 +850,32 @@ mod tests {
                 }
             }
             assert!(plan.validate(3, alloc.n_sub()).is_ok());
+        }
+    }
+
+    #[test]
+    fn group_start_masks_mirror_the_flattened_group_structure() {
+        let p = Params3::new(5, 8, 11, 12).unwrap();
+        let alloc = optimal_allocation(&p);
+        for plan in [plan_k3(&alloc), plan_greedy(&alloc), plan_uncoded(&alloc)] {
+            let masks = plan.group_start_masks();
+            assert_eq!(masks.len(), plan.n_broadcasts());
+            // One Some per group, carrying that group's member mask, at
+            // the group's first flat index.
+            let mut want = Vec::new();
+            for round in &plan.rounds {
+                for group in &round.groups {
+                    want.push(Some(group.members));
+                    want.extend(std::iter::repeat(None).take(group.broadcasts.len() - 1));
+                }
+            }
+            assert_eq!(masks, want);
+            // Every round start is also a group start.
+            for (bi, is_start) in plan.round_start_flags().iter().enumerate() {
+                if *is_start {
+                    assert!(masks[bi].is_some(), "round start {bi} opens no group");
+                }
+            }
         }
     }
 

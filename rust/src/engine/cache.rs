@@ -23,6 +23,9 @@ pub struct PlanKey {
     uplink_bits: Vec<u64>,
     map_rate_bits: Vec<u64>,
     latency_bits: u64,
+    /// Canonical topology spec string (`"shared"` by default) — a rack
+    /// cluster and its shared-medium twin must never share a plan.
+    topology: String,
     workload: WorkloadKind,
     n_files: u64,
     t: usize,
@@ -50,6 +53,7 @@ impl PlanKey {
                 .map(|n| n.map_files_per_s.to_bits())
                 .collect(),
             latency_bits: cluster.latency_ms.to_bits(),
+            topology: cluster.topology.spec(),
             workload: job.workload,
             n_files: job.n_files,
             t: job.t,
@@ -205,6 +209,27 @@ mod tests {
             .get_or_build(&c, &job, "auto", None, ShuffleMode::Coded)
             .unwrap();
         assert_eq!(cache.misses, 4);
+    }
+
+    #[test]
+    fn topology_change_is_a_different_key() {
+        let c = cluster(&[6, 7, 7]);
+        let rack = c
+            .clone()
+            .with_topology(crate::net::Topology::Rack { racks: 3, oversub: 2.0 });
+        let job = JobSpec::terasort(12);
+        let mut cache = PlanCache::new(8);
+        cache
+            .get_or_build(&c, &job, "optimal-k3", None, ShuffleMode::Coded)
+            .unwrap();
+        cache
+            .get_or_build(&rack, &job, "optimal-k3", None, ShuffleMode::Coded)
+            .unwrap();
+        assert_eq!((cache.hits, cache.misses), (0, 2));
+        cache
+            .get_or_build(&rack, &job, "optimal-k3", None, ShuffleMode::Coded)
+            .unwrap();
+        assert_eq!((cache.hits, cache.misses), (1, 2));
     }
 
     #[test]

@@ -352,6 +352,7 @@ pub fn execute_planned(
     let mut remaining = schedule_consumers(plan, schedule, k)?;
     let flat: Vec<&Broadcast> = plan.iter_broadcasts().collect();
     let starts_round = plan.round_start_flags();
+    let group_starts = plan.group_start_masks();
     let n_broadcasts = flat.len();
 
     let mut payload_bytes = 0u64;
@@ -361,6 +362,9 @@ pub fn execute_planned(
     for (bi, &b) in flat.iter().enumerate() {
         if starts_round[bi] {
             net.begin_round();
+        }
+        if let Some(members) = group_starts[bi] {
+            net.begin_group(members);
         }
         let msg = assemble_and_meter(b, states, net, &mut payload_bytes, &mut wire_bytes)?;
         if remaining[bi] > 0 {
@@ -501,9 +505,13 @@ pub fn execute_planned_parallel(
     let mut payload_bytes = 0u64;
     let mut wire_bytes = 0u64;
     let starts_round = plan.round_start_flags();
+    let group_starts = plan.group_start_masks();
     for (bi, &b) in flat.iter().enumerate() {
         if starts_round[bi] {
             net.begin_round();
+        }
+        if let Some(members) = group_starts[bi] {
+            net.begin_group(members);
         }
         let (payload, wire) = broadcast_sizes(b, states[b.sender()].iv_bytes);
         payload_bytes += payload as u64;
@@ -566,9 +574,13 @@ pub fn execute_shuffle(
 
     let flat: Vec<&Broadcast> = plan.iter_broadcasts().collect();
     let starts_round = plan.round_start_flags();
+    let group_starts = plan.group_start_masks();
     for (bi, &b) in flat.iter().enumerate() {
         if starts_round[bi] {
             net.begin_round();
+        }
+        if let Some(members) = group_starts[bi] {
+            net.begin_group(members);
         }
         let msg = assemble_and_meter(b, states, net, &mut payload_bytes, &mut wire_bytes)?;
         match b {

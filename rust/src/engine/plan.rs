@@ -20,6 +20,7 @@ use crate::coding::plan::ShufflePlan;
 use crate::error::{HetcdcError, Result};
 use crate::model::cluster::ClusterSpec;
 use crate::model::job::{JobSpec, ShuffleMode};
+use crate::net::Topology;
 use crate::placement::alloc::Allocation;
 use crate::placement::placer::{placer_by_name_cfg, Placer, PlacerConfig};
 use crate::util::json::Json;
@@ -72,14 +73,20 @@ impl PredictedLoads {
         let mut payload_bytes = 0u64;
         let mut wire_bytes = 0u64;
         let mut net = cluster.network()?;
-        // Same round-sectioned, flat-order metering pass as the executor
-        // (same `round_start_flags` encoding — see engine/exec.rs), so
+        // Same round-sectioned, group-flagged, flat-order metering pass
+        // as the executor (same `round_start_flags` /
+        // `group_start_masks` encoding — see engine/exec.rs), so
         // predicted and measured accounting — including the per-round
-        // NetReport sections — cannot drift.
+        // NetReport sections and the switched-topology schedule —
+        // cannot drift.
         let starts_round = shuffle.round_start_flags();
+        let group_starts = shuffle.group_start_masks();
         for (bi, b) in shuffle.iter_broadcasts().enumerate() {
             if starts_round[bi] {
                 net.begin_round();
+            }
+            if let Some(members) = group_starts[bi] {
+                net.begin_group(members);
             }
             let (payload, wire) = broadcast_sizes(b, iv_bytes);
             payload_bytes += payload as u64;
@@ -138,6 +145,12 @@ pub fn shape_fingerprint(cluster: &ClusterSpec, job: &JobSpec) -> u64 {
         eat(&n.map_files_per_s.to_bits().to_le_bytes());
     }
     eat(&cluster.latency_ms.to_bits().to_le_bytes());
+    // The topology is eaten only when switched, so every pre-topology
+    // shape keeps its historical fingerprint (Shared is the default and
+    // is omitted from serialized clusters for the same reason).
+    if !cluster.topology.is_shared() {
+        eat(cluster.topology.spec().as_bytes());
+    }
     eat(&[match job.workload {
         crate::model::job::WorkloadKind::WordCount => 1u8,
         crate::model::job::WorkloadKind::TeraSort => 2u8,
@@ -258,6 +271,7 @@ impl Plan {
         let a = &self.cluster;
         let cluster_eq = a.k() == cluster.k()
             && a.latency_ms.to_bits() == cluster.latency_ms.to_bits()
+            && a.topology == cluster.topology
             && a.nodes.iter().zip(&cluster.nodes).all(|(x, y)| {
                 x.storage == y.storage
                     && x.uplink_mbps.to_bits() == y.uplink_mbps.to_bits()
@@ -386,6 +400,8 @@ pub struct JobBuilder<'a> {
     threads: usize,
     /// Override of the §V LP's Remark-7 enumeration cap.
     lp_cap: Option<usize>,
+    /// Network-topology override applied to the cluster before building.
+    topology: Option<Topology>,
 }
 
 impl<'a> JobBuilder<'a> {
@@ -399,6 +415,7 @@ impl<'a> JobBuilder<'a> {
             custom: None,
             threads: 1,
             lp_cap: None,
+            topology: None,
         }
     }
 
@@ -452,6 +469,16 @@ impl<'a> JobBuilder<'a> {
         self
     }
 
+    /// Override the cluster's network [`Topology`] for this build (CLI
+    /// `--topology`). The topology changes the predicted shuffle
+    /// *schedule* (makespan, per-link metering), never the placement or
+    /// the byte/round counts; it is part of the plan's shape — the
+    /// fingerprint and [`crate::engine::PlanCache`] key include it.
+    pub fn topology(mut self, topology: Topology) -> Self {
+        self.topology = Some(topology);
+        self
+    }
+
     /// Place, code, verify, predict — everything that does not depend on
     /// the data batch.
     pub fn build(self) -> Result<Plan> {
@@ -459,7 +486,21 @@ impl<'a> JobBuilder<'a> {
         // and re-checks job and allocation; the early checks here exist so
         // placers and coders never observe a malformed job (n_files = 0
         // would divide-by-zero in the homogeneous placer) or allocation.
-        self.job.validate(self.cluster.k())?;
+        // Resolve the topology override up front so everything — the
+        // network validation inside prediction, the serialized cluster,
+        // the fingerprint — sees one consistent cluster spec.
+        let with_topology;
+        let cluster: &ClusterSpec = match self.topology {
+            Some(t) => {
+                let mut c = self.cluster.clone();
+                c.topology = t;
+                with_topology = c;
+                &with_topology
+            }
+            None => self.cluster,
+        };
+        cluster.topology.validate(cluster.k())?;
+        self.job.validate(cluster.k())?;
         let threads = resolve_threads(self.threads);
         let cfg = PlacerConfig {
             lp_cap: self.lp_cap.unwrap_or(crate::placement::lp_general::DEFAULT_COLLECTION_CAP),
@@ -472,24 +513,24 @@ impl<'a> JobBuilder<'a> {
                 "pairing",
             ),
             None => {
-                let placer = placer_by_name_cfg(&self.placer, self.cluster, &cfg)?;
+                let placer = placer_by_name_cfg(&self.placer, cluster, &cfg)?;
                 (
                     placer.name().to_string(),
-                    placer.place_report(self.cluster, self.job)?,
+                    placer.place_report(cluster, self.job)?,
                     placer.default_coder(),
                 )
             }
         };
         let alloc = placement.alloc;
-        alloc.validate_le(&self.cluster.storage(), self.job.n_files)?;
+        alloc.validate_le(&cluster.storage(), self.job.n_files)?;
         let coder_name = match self.mode {
             ShuffleMode::Uncoded => "uncoded".to_string(),
             ShuffleMode::Coded => self.coder.unwrap_or_else(|| default_coder.to_string()),
         };
         let coder = coder_by_name(&coder_name)?;
-        let shuffle = coder.plan_threaded(self.cluster, self.job, &alloc, threads)?;
+        let shuffle = coder.plan_threaded(cluster, self.job, &alloc, threads)?;
         Plan::assemble_threaded(
-            self.cluster.clone(),
+            cluster.clone(),
             self.job.clone(),
             placer_name,
             coder.name().to_string(),

@@ -23,6 +23,7 @@ use hetcdc::engine::{
 };
 use hetcdc::model::cluster::ClusterSpec;
 use hetcdc::model::job::{JobSpec, ShuffleMode};
+use hetcdc::net::Topology;
 use hetcdc::placement::{k3, lp_general};
 use hetcdc::runtime::Runtime;
 use hetcdc::theory::params::{Params3, ParamsK};
@@ -66,13 +67,14 @@ fn print_help() {
          \x20 lp        --storage M1,..,MK --n N     §V LP for general K\n\
          \x20 plan      --workload wordcount|terasort [--storage ... | --config ...]\n\
          \x20           [--placement NAME] [--coder NAME] [--out plan.json]\n\
-         \x20           [--threads N] [--lp-cap N]\n\
+         \x20           [--threads N] [--lp-cap N] [--topology SPEC]\n\
          \x20           build + verify an execution plan (threaded build), emit JSON\n\
          \x20 run       --workload wordcount|terasort [--backend native|xla]\n\
          \x20           [--config cluster.json | --storage ...] [--mode coded|uncoded]\n\
          \x20           [--plan plan.json] [--batches B] [--threads N] [--pipeline]\n\
-         \x20           [--lp-cap N]\n\
+         \x20           [--lp-cap N] [--topology SPEC]\n\
          \x20 bench-json [--out FILE] [--baseline FILE] [--tolerance-pct P] [--check-armed]\n\
+         \x20           [--topology SPEC]\n\
          \x20           deterministic shuffle bench suite -> BENCH_shuffle.json\n\
          \x20 sweep     --n N [--max-m M]            L* table over storage grid\n\
          \x20 verify    [--n N]                      full self-check (theory, coding, LP)\n\
@@ -283,6 +285,17 @@ fn parse_cluster_job(args: &Args) -> Result<(ClusterSpec, JobSpec), HetcdcError>
         }
         c
     };
+    // --topology overrides whatever the cluster (JSON or synthesized)
+    // carries; validated against K here so a bad spec fails before any
+    // planning work starts.
+    let cluster = match args.get("topology") {
+        Some(spec) => {
+            let t = Topology::parse(spec)?;
+            t.validate(cluster.k())?;
+            cluster.with_topology(t)
+        }
+        None => cluster,
+    };
     let job = match args.get("workload") {
         Some("wordcount") => JobSpec::wordcount(n),
         Some("terasort") => JobSpec::terasort(n),
@@ -308,6 +321,7 @@ fn cmd_plan(argv: &[String]) -> i32 {
         ArgSpec { name: "out", help: "write plan JSON here (default: stdout)", takes_value: true, default: None },
         ArgSpec { name: "threads", help: "build the plan with N worker threads AND certify sharded execution (0 = auto; 1 = serial build, no certification; artifacts are byte-identical at every N)", takes_value: true, default: Some("1") },
         ArgSpec { name: "lp-cap", help: "max perfect collections per §V LP subsystem (Remark 7 cap; default 4096)", takes_value: true, default: None },
+        ArgSpec { name: "topology", help: "network topology: shared | flat | rack:q=R,oversub=S | fat-tree:q=R (overrides the cluster's; default shared medium)", takes_value: true, default: None },
         ArgSpec { name: "help", help: "show usage", takes_value: false, default: None },
     ];
     let args = match Args::parse(argv, &specs) {
@@ -497,6 +511,7 @@ fn cmd_run(argv: &[String]) -> i32 {
         ArgSpec { name: "placement", help: "auto | optimal-k3 | lp-general | homogeneous | oblivious | combinatorial", takes_value: true, default: Some("auto") },
         ArgSpec { name: "coder", help: "pairing | greedy | multicast | memshare | combinatorial (default: placer's)", takes_value: true, default: None },
         ArgSpec { name: "lp-cap", help: "max perfect collections per §V LP subsystem (Remark 7 cap; default 4096)", takes_value: true, default: None },
+        ArgSpec { name: "topology", help: "network topology: shared | flat | rack:q=R,oversub=S | fat-tree:q=R (overrides the cluster's; default shared medium)", takes_value: true, default: None },
         ArgSpec { name: "artifacts", help: "artifact dir for --backend xla", takes_value: true, default: None },
         ArgSpec { name: "json", help: "emit machine-readable JSON reports", takes_value: false, default: None },
         ArgSpec { name: "help", help: "show usage", takes_value: false, default: None },
@@ -538,6 +553,7 @@ fn cmd_run(argv: &[String]) -> i32 {
         // no conflicting flags rather than silently ignoring them.
         for conflict in [
             "workload", "n", "storage", "config", "mode", "placement", "coder", "lp-cap",
+            "topology",
         ] {
             if args.provided(conflict) {
                 return fail(format!(
@@ -642,6 +658,7 @@ fn cmd_bench_json(argv: &[String]) -> i32 {
         ArgSpec { name: "threads", help: "worker threads for the parallel half of each scenario (0 = auto)", takes_value: true, default: Some("0") },
         ArgSpec { name: "timing", help: "also record wall-clock timings (nondeterministic; never gated)", takes_value: false, default: None },
         ArgSpec { name: "check-armed", help: "only check that --baseline is a blessed (non-PENDING) artifact: exit 0 if armed, 3 if still the placeholder, 1 on a malformed baseline — runs no benchmarks", takes_value: false, default: None },
+        ArgSpec { name: "topology", help: "override every scenario's network topology: shared | flat | rack:q=R,oversub=S | fat-tree:q=R (exploration only; the baseline gate is skipped)", takes_value: true, default: None },
         ArgSpec { name: "help", help: "show usage", takes_value: false, default: None },
     ];
     let args = match Args::parse(argv, &specs) {
@@ -705,7 +722,17 @@ fn cmd_bench_json(argv: &[String]) -> i32 {
     };
     let timing = args.flag("timing").then_some(&timing_cfg);
 
-    let report = match bench::run_suite(threads, timing) {
+    // --topology: exploration mode. Every scenario runs on the given
+    // fabric; the resulting artifact is not comparable to the committed
+    // shared-medium baseline, so the gate is skipped with a warning.
+    let topology_override = match args.get("topology") {
+        Some(spec) => match Topology::parse(spec) {
+            Ok(t) => Some(t),
+            Err(e) => return fail(e),
+        },
+        None => None,
+    };
+    let report = match bench::run_suite_with(threads, timing, topology_override) {
         Ok(r) => r,
         Err(e) => return fail(e),
     };
@@ -723,11 +750,12 @@ fn cmd_bench_json(argv: &[String]) -> i32 {
                 format!("{}", r.payload_bytes),
                 format!("{}", r.wire_bytes),
                 format!("{:.5}", r.shuffle_time_s),
+                format!("{:.5}", r.makespan_s),
             ]
         })
         .collect();
     bench::table(
-        &["scenario", "K", "placer", "coder", "rounds", "msgs", "payload B", "wire B", "shuffle s"],
+        &["scenario", "K", "placer", "coder", "rounds", "msgs", "payload B", "wire B", "shuffle s", "makespan s"],
         &rows,
     );
     println!(
@@ -745,6 +773,14 @@ fn cmd_bench_json(argv: &[String]) -> i32 {
     println!("bench artifact written to {out}");
 
     if let Some(path) = args.get("baseline") {
+        if let Some(t) = topology_override {
+            eprintln!(
+                "WARNING: baseline gate SKIPPED — the suite ran under --topology {} and is \
+                 not comparable to the committed shared-medium baseline '{path}'",
+                t.spec()
+            );
+            return 0;
+        }
         let text = match std::fs::read_to_string(path) {
             Ok(t) => t,
             Err(e) => return fail(format!("baseline {path}: {e}")),

@@ -11,7 +11,7 @@
 //! ```
 
 use crate::error::{HetcdcError, Result};
-use crate::net::BroadcastNet;
+use crate::net::{BroadcastNet, Topology};
 use crate::theory::params::{Params3, ParamsK};
 use crate::util::json::Json;
 use std::collections::BTreeMap;
@@ -32,6 +32,10 @@ pub struct ClusterSpec {
     pub nodes: Vec<NodeSpec>,
     /// Per-message broadcast latency, milliseconds.
     pub latency_ms: f64,
+    /// Network topology between the nodes ([`Topology::Shared`] = the
+    /// paper's single broadcast medium, the default; switched variants
+    /// change the simulated schedule, never the byte/round counts).
+    pub topology: Topology,
 }
 
 impl ClusterSpec {
@@ -63,10 +67,17 @@ impl ClusterSpec {
     }
 
     pub fn network(&self) -> Result<BroadcastNet> {
-        BroadcastNet::new(
+        BroadcastNet::with_topology(
             self.nodes.iter().map(|n| n.uplink_mbps * 1e6).collect(),
             self.latency_ms / 1e3,
+            self.topology,
         )
+    }
+
+    /// Builder-style topology override.
+    pub fn with_topology(mut self, topology: Topology) -> Self {
+        self.topology = topology;
+        self
     }
 
     /// A 3-node heterogeneous cluster shaped like mixed EC2 instances,
@@ -97,6 +108,7 @@ impl ClusterSpec {
                 },
             ],
             latency_ms: 0.5,
+            topology: Topology::Shared,
         }
     }
 
@@ -111,6 +123,7 @@ impl ClusterSpec {
                 })
                 .collect(),
             latency_ms: 0.5,
+            topology: Topology::Shared,
         }
     }
 
@@ -130,6 +143,11 @@ impl ClusterSpec {
         let mut m = BTreeMap::new();
         m.insert("nodes".into(), Json::Arr(nodes));
         m.insert("latency_ms".into(), Json::Num(self.latency_ms));
+        // Omitted when Shared: every pre-topology artifact stays
+        // byte-identical, and older readers never see the key.
+        if !self.topology.is_shared() {
+            m.insert("topology".into(), self.topology.to_json());
+        }
         Json::Obj(m)
     }
 
@@ -165,10 +183,17 @@ impl ClusterSpec {
                 })
             })
             .collect();
-        Ok(ClusterSpec {
+        let topology = match j.get("topology") {
+            Some(t) => Topology::from_json(t)?,
+            None => Topology::Shared,
+        };
+        let spec = ClusterSpec {
             nodes: parsed?,
             latency_ms: j.get("latency_ms").and_then(|v| v.as_f64()).unwrap_or(0.5),
-        })
+            topology,
+        };
+        spec.topology.validate(spec.k())?;
+        Ok(spec)
     }
 
     pub fn from_json_str(text: &str) -> Result<Self> {
@@ -229,5 +254,33 @@ mod tests {
     fn ec2_preset_scales_storage() {
         let c = ClusterSpec::ec2_like_3node(120);
         assert_eq!(c.storage(), vec![60, 70, 70]);
+    }
+
+    #[test]
+    fn topology_roundtrips_and_shared_is_omitted() {
+        let c = ClusterSpec::ec2_like_3node(12);
+        assert!(!c.to_json().to_string_pretty().contains("topology"));
+        let rack = c.clone().with_topology(Topology::Rack { racks: 3, oversub: 2.0 });
+        let text = rack.to_json().to_string_pretty();
+        assert!(text.contains("rack:q=3,oversub=2"));
+        let back = ClusterSpec::from_json_str(&text).unwrap();
+        assert_eq!(rack, back);
+        // A topology that does not fit the node count is a typed error.
+        let mut j = rack.to_json();
+        if let Json::Obj(m) = &mut j {
+            m.insert("topology".into(), Json::Str("rack:q=9".into()));
+        }
+        assert!(matches!(
+            ClusterSpec::from_json(&j),
+            Err(HetcdcError::InvalidParams(_))
+        ));
+    }
+
+    #[test]
+    fn network_inherits_the_cluster_topology() {
+        let c = ClusterSpec::ec2_like_3node(12)
+            .with_topology(Topology::Rack { racks: 3, oversub: 1.0 });
+        let net = c.network().unwrap();
+        assert_eq!(*net.topology(), c.topology);
     }
 }

@@ -1,5 +1,8 @@
-//! Network substrate: simulated heterogeneous broadcast medium.
+//! Network substrate: simulated heterogeneous broadcast medium and
+//! switched-topology variants.
 
 pub mod sim;
+pub mod topology;
 
-pub use sim::{BroadcastNet, NetReport, PhaseLedger, RoundLedger};
+pub use sim::{BroadcastNet, LinkLedger, NetReport, PhaseLedger, RoundLedger};
+pub use topology::{LinkTable, Topology};

@@ -9,36 +9,75 @@
 //! (the EC2-style per-message overhead that makes many small messages
 //! slower than few large ones — why coded shuffle also wins wall-clock).
 //!
+//! Under a switched [`Topology`] the one medium becomes a table of links
+//! (node access links, rack trunks — see [`crate::net::topology`]) and
+//! the clock becomes a **schedule**: multicast groups of the same
+//! [`ShuffleRound`] run concurrently when their links are disjoint, a
+//! round's `makespan_s` is the max over its groups' finish times rather
+//! than the sum, and rounds are barriers (round `i+1` starts when round
+//! `i`'s slowest group finishes). `Topology::Shared` keeps the original
+//! serialized fold bit-for-bit.
+//!
 //! Accounting lives in [`PhaseLedger`], a plain-data (`Send + Sync`)
 //! record separate from the rate table, so the parallel executor can keep
 //! the metering pass on one thread — in exact plan order, preserving the
-//! bit-exact serialized-broadcast clock — while decode workers run
-//! concurrently. The clock is a float fold over per-broadcast times;
-//! float addition is not associative, so the ledger is never merged from
-//! per-worker partials: every broadcast is recorded through the same
-//! sequential [`BroadcastNet::broadcast`] path in both execution modes.
+//! bit-exact clock — while decode workers run concurrently. The clock
+//! (and, under a switched topology, the per-link `free_at` schedule) is a
+//! float fold over per-broadcast times; float arithmetic is not
+//! associative, so the ledger is never merged from per-worker partials:
+//! every broadcast is recorded through the same sequential
+//! [`BroadcastNet::broadcast`] path in every execution mode.
 //!
 //! This substitutes for the paper's EC2 testbed (DESIGN.md §4): the
 //! load metric is exact; the time model preserves the who-wins ordering.
+//!
+//! [`ShuffleRound`]: crate::coding::plan::ShuffleRound
 
 use crate::error::{HetcdcError, Result};
+use crate::net::topology::{LinkTable, Topology};
 
 /// Byte/message/clock accounting of one shuffle *round* — one section of
 /// a [`PhaseLedger`]. `elapsed_s` is the round's own sequential float
-/// fold; the phase total is folded separately (float addition is not
-/// associative, so the per-round sums are not re-added into the total).
+/// fold (the serialized schedule); the phase total is folded separately
+/// (float addition is not associative, so the per-round sums are not
+/// re-added into the total). `makespan_s` is the concurrent schedule
+/// length of the round under the network's [`Topology`]; on the shared
+/// medium nothing is concurrent, so it is the identical fold as
+/// `elapsed_s`, bit for bit.
 #[derive(Clone, Debug, Default, PartialEq)]
 pub struct RoundLedger {
     pub bytes: u64,
     pub msgs: u64,
     pub elapsed_s: f64,
+    /// Concurrent schedule length of the round (== `elapsed_s` on the
+    /// shared medium, <= it on switched topologies).
+    pub makespan_s: f64,
+    /// Index within the round of the multicast group whose finish time
+    /// set the makespan — the round's critical path. `None` on the
+    /// shared medium, where no group is distinguished.
+    pub critical_group: Option<usize>,
+}
+
+/// Byte/occupancy accounting of one link of a switched topology. Empty
+/// on `Topology::Shared`, which has no links.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct LinkLedger {
+    /// Stable link name (`node{i}` access links, `rack{r}` trunks).
+    pub id: String,
+    pub bytes: u64,
+    pub msgs: u64,
+    /// Total time the link was occupied by transmissions.
+    pub busy_s: f64,
+    /// `busy_s / elapsed_s` of the phase (0 when the clock never moved).
+    pub utilization: f64,
 }
 
 /// Byte/message/clock accounting of one phase, separated from the rate
 /// table so it can travel across threads (plain data, `Send + Sync`).
 ///
 /// Records must be appended in broadcast order via [`PhaseLedger::record`]
-/// — the clock is an order-sensitive float fold (see module docs). Round
+/// (or the scheduled path driven by [`BroadcastNet::broadcast`]) — the
+/// clock is an order-sensitive float fold (see module docs). Round
 /// boundaries ([`PhaseLedger::begin_round`]) segment the same sequential
 /// pass into per-round sections; they never change the totals.
 #[derive(Clone, Debug, PartialEq)]
@@ -54,6 +93,30 @@ pub struct PhaseLedger {
     ///
     /// [`ShuffleRound`]: crate::coding::plan::ShuffleRound
     rounds: Vec<RoundLedger>,
+    /// Per-link occupancy of the current phase; empty on the shared
+    /// medium. Link identity/rates live in the net's immutable
+    /// [`LinkTable`]; only the mutable counters live here.
+    links: Vec<LinkLedger>,
+    /// Per-link absolute virtual time at which the link next frees up —
+    /// the scheduler state of the switched-topology path. Same length as
+    /// `links`.
+    free_at: Vec<f64>,
+    /// Absolute clock at which the current round began (= previous
+    /// round's end; rounds are barriers).
+    round_base: f64,
+    /// Absolute clock of the slowest finish seen in the current round.
+    round_end: f64,
+    /// Index the next `begin_group` in this round will take.
+    next_group: usize,
+    /// Currently open multicast group, if any.
+    cur_group: Option<usize>,
+    /// Node bitmask of the open group's members (senders + decoding
+    /// destinations) — decides whether a broadcast leaves its rack.
+    group_members: u32,
+    /// Finish time of the open group's previous broadcast: broadcasts
+    /// within one group chain sequentially (destinations decode them in
+    /// order), concurrency exists only *across* groups.
+    group_prev_finish: f64,
     /// Batch epoch this ledger is accounting: bumped by every
     /// [`PhaseLedger::reset`], so a report is unambiguously tagged with
     /// the batch it measured. The pipelined executor keeps two node-state
@@ -65,22 +128,75 @@ pub struct PhaseLedger {
 
 impl PhaseLedger {
     pub fn new(k: usize) -> Self {
+        Self::with_links(k, Vec::new())
+    }
+
+    /// Ledger over `k` nodes and the named links of a switched topology
+    /// (empty for the shared medium).
+    pub fn with_links(k: usize, link_ids: Vec<String>) -> Self {
+        let links: Vec<LinkLedger> = link_ids
+            .into_iter()
+            .map(|id| LinkLedger {
+                id,
+                ..LinkLedger::default()
+            })
+            .collect();
+        let n_links = links.len();
         PhaseLedger {
             bytes_by_node: vec![0; k],
             msgs_by_node: vec![0; k],
             clock_s: 0.0,
             rounds: Vec::new(),
+            links,
+            free_at: vec![0.0; n_links],
+            round_base: 0.0,
+            round_end: 0.0,
+            next_group: 0,
+            cur_group: None,
+            group_members: 0,
+            group_prev_finish: 0.0,
             epoch: 0,
         }
     }
 
     /// Open the next round section: subsequent records account into it.
+    /// Under a switched topology this is also the round barrier: the new
+    /// round's schedule starts where the previous round's slowest group
+    /// finished.
     pub fn begin_round(&mut self) {
         self.rounds.push(RoundLedger::default());
+        self.round_base = self.round_end;
+        self.next_group = 0;
+        self.cur_group = None;
+        self.group_members = 0;
+        self.group_prev_finish = self.round_base;
+    }
+
+    /// Open the next multicast group of the current round. Scheduled
+    /// (switched-topology) accounting only — on the shared medium groups
+    /// carry no timing meaning and this is a no-op, keeping the original
+    /// serialized fold untouched.
+    pub fn begin_group(&mut self, members: u32) {
+        if self.links.is_empty() {
+            return;
+        }
+        self.cur_group = Some(self.next_group);
+        self.next_group += 1;
+        self.group_members = members;
+        self.group_prev_finish = self.round_base;
+    }
+
+    /// Whether a multicast group is currently open (switched path).
+    pub fn group_open(&self) -> bool {
+        self.cur_group.is_some()
+    }
+
+    pub(crate) fn group_members(&self) -> u32 {
+        self.group_members
     }
 
     /// Append one broadcast of `nbytes` from `sender` taking `t_s`
-    /// seconds on the serialized medium.
+    /// seconds on the serialized shared medium.
     pub fn record(&mut self, sender: usize, nbytes: usize, t_s: f64) {
         self.bytes_by_node[sender] += nbytes as u64;
         self.msgs_by_node[sender] += 1;
@@ -92,9 +208,75 @@ impl PhaseLedger {
         round.bytes += nbytes as u64;
         round.msgs += 1;
         round.elapsed_s += t_s;
+        // Identical fold as elapsed_s — bitwise equal on the shared
+        // medium, by construction.
+        round.makespan_s += t_s;
     }
 
-    /// Virtual wall-clock so far (serialized schedule).
+    /// Append one broadcast of `nbytes` from `sender` onto the
+    /// switched-link schedule. `used` lists the `(link, rate_bps)` pairs
+    /// the transmission occupies (access link, plus the rack trunk when
+    /// it leaves the rack); the transfer rate is the min over used links.
+    /// Returns the broadcast's transmission time.
+    pub(crate) fn record_scheduled(
+        &mut self,
+        sender: usize,
+        nbytes: usize,
+        latency_s: f64,
+        used: &[(usize, f64)],
+    ) -> f64 {
+        self.bytes_by_node[sender] += nbytes as u64;
+        self.msgs_by_node[sender] += 1;
+        if self.rounds.is_empty() {
+            self.rounds.push(RoundLedger::default());
+            self.round_base = self.round_end;
+            self.next_group = 0;
+            self.group_prev_finish = self.round_base;
+        }
+        if self.cur_group.is_none() {
+            // Round-less / group-less caller: open an implicit group so
+            // the schedule still chains deterministically.
+            self.cur_group = Some(self.next_group);
+            self.next_group += 1;
+            self.group_prev_finish = self.round_base;
+        }
+        let bits = nbytes as f64 * 8.0;
+        let mut min_rate = f64::INFINITY;
+        let mut start = self.group_prev_finish;
+        for &(l, rate) in used {
+            if rate < min_rate {
+                min_rate = rate;
+            }
+            if self.free_at[l] > start {
+                start = self.free_at[l];
+            }
+        }
+        let t_total = latency_s + bits / min_rate;
+        let finish = start + t_total;
+        for &(l, rate) in used {
+            let occupancy = latency_s + bits / rate;
+            self.free_at[l] = start + occupancy;
+            let link = &mut self.links[l];
+            link.bytes += nbytes as u64;
+            link.msgs += 1;
+            link.busy_s += occupancy;
+        }
+        self.group_prev_finish = finish;
+        let round = self.rounds.last_mut().unwrap();
+        round.bytes += nbytes as u64;
+        round.msgs += 1;
+        round.elapsed_s += t_total;
+        if finish > self.round_end {
+            self.round_end = finish;
+            round.critical_group = self.cur_group;
+        }
+        round.makespan_s = self.round_end - self.round_base;
+        self.clock_s = self.round_end;
+        t_total
+    }
+
+    /// Virtual wall-clock so far: the serialized schedule on the shared
+    /// medium, the concurrent schedule's end under a switched topology.
     pub fn clock_s(&self) -> f64 {
         self.clock_s
     }
@@ -104,12 +286,29 @@ impl PhaseLedger {
         &self.rounds
     }
 
+    /// Per-link occupancy recorded so far (empty on the shared medium).
+    pub fn links(&self) -> &[LinkLedger] {
+        &self.links
+    }
+
     /// Batch epoch of the current accounting (number of resets so far).
     pub fn epoch(&self) -> u64 {
         self.epoch
     }
 
     pub fn report(&self) -> NetReport {
+        let links = self
+            .links
+            .iter()
+            .map(|l| LinkLedger {
+                utilization: if self.clock_s > 0.0 {
+                    l.busy_s / self.clock_s
+                } else {
+                    0.0
+                },
+                ..l.clone()
+            })
+            .collect();
         NetReport {
             bytes_by_node: self.bytes_by_node.clone(),
             msgs_by_node: self.msgs_by_node.clone(),
@@ -117,30 +316,48 @@ impl PhaseLedger {
             total_msgs: self.msgs_by_node.iter().sum(),
             elapsed_s: self.clock_s,
             rounds: self.rounds.clone(),
+            links,
             epoch: self.epoch,
         }
     }
 
     /// Start accounting the next batch: zero the counters, drop the round
-    /// sections, bump the epoch tag. O(k), keeps the round buffer's
-    /// capacity.
+    /// sections, rewind the link schedule, bump the epoch tag. O(k + L),
+    /// keeps the round buffer's capacity and the link names.
     pub fn reset(&mut self) {
         self.bytes_by_node.iter_mut().for_each(|b| *b = 0);
         self.msgs_by_node.iter_mut().for_each(|m| *m = 0);
         self.clock_s = 0.0;
         self.rounds.clear();
+        for link in &mut self.links {
+            link.bytes = 0;
+            link.msgs = 0;
+            link.busy_s = 0.0;
+            link.utilization = 0.0;
+        }
+        self.free_at.iter_mut().for_each(|t| *t = 0.0);
+        self.round_base = 0.0;
+        self.round_end = 0.0;
+        self.next_group = 0;
+        self.cur_group = None;
+        self.group_members = 0;
+        self.group_prev_finish = 0.0;
         self.epoch += 1;
     }
 }
 
-/// Shared-medium broadcast network simulator: an immutable rate table
-/// plus a [`PhaseLedger`] of the current phase.
+/// Broadcast network simulator: an immutable rate table (per-node
+/// uplinks plus, for switched topologies, a [`LinkTable`]) and a
+/// [`PhaseLedger`] of the current phase.
 #[derive(Clone, Debug)]
 pub struct BroadcastNet {
     /// Per-node uplink rate, bits/second.
     pub uplink_bps: Vec<f64>,
     /// Fixed per-message latency, seconds.
     pub latency_s: f64,
+    topology: Topology,
+    /// Switched-link rate table; `None` on the shared medium.
+    links: Option<LinkTable>,
     ledger: PhaseLedger,
 }
 
@@ -151,12 +368,18 @@ pub struct NetReport {
     pub msgs_by_node: Vec<u64>,
     pub total_bytes: u64,
     pub total_msgs: u64,
-    /// Virtual wall-clock of the serialized broadcast schedule.
+    /// Virtual wall-clock of the broadcast schedule: serialized on the
+    /// shared medium, concurrent-group makespan under a switched
+    /// topology. The topology changes this field only — never the byte
+    /// or message counts.
     pub elapsed_s: f64,
     /// Per-round sections of the shuffle (bytes/messages/clock per
     /// [`crate::coding::plan::ShuffleRound`]) — identical across
     /// execution modes, like every other field.
     pub rounds: Vec<RoundLedger>,
+    /// Per-link occupancy/utilization under a switched topology; empty
+    /// on the shared medium.
+    pub links: Vec<LinkLedger>,
     /// Batch epoch tag (ledger resets so far): after N batches through
     /// one executor this is N, in every execution mode — equality checks
     /// across modes therefore also prove both metered the same batch.
@@ -164,7 +387,20 @@ pub struct NetReport {
 }
 
 impl BroadcastNet {
+    /// Shared-medium network (the §II model; default everywhere).
     pub fn new(uplink_bps: Vec<f64>, latency_s: f64) -> Result<Self> {
+        Self::with_topology(uplink_bps, latency_s, Topology::Shared)
+    }
+
+    /// Network with an explicit [`Topology`]. Rejects empty or
+    /// non-positive/non-finite node and link rates and bad latency with
+    /// typed [`HetcdcError::InvalidParams`] — a zero rate would
+    /// otherwise poison the virtual clock with inf/NaN.
+    pub fn with_topology(
+        uplink_bps: Vec<f64>,
+        latency_s: f64,
+        topology: Topology,
+    ) -> Result<Self> {
         if uplink_bps.is_empty() {
             return Err(HetcdcError::InvalidParams(
                 "network needs at least one node uplink".into(),
@@ -184,37 +420,86 @@ impl BroadcastNet {
                 "latency must be non-negative and finite, got {latency_s}"
             )));
         }
+        let links = topology.link_table(&uplink_bps)?;
         let k = uplink_bps.len();
+        let ledger = match &links {
+            Some(table) => PhaseLedger::with_links(k, table.ids.clone()),
+            None => PhaseLedger::new(k),
+        };
         Ok(Self {
             uplink_bps,
             latency_s,
-            ledger: PhaseLedger::new(k),
+            topology,
+            links,
+            ledger,
         })
     }
 
-    /// Uniform-bandwidth convenience constructor.
+    /// Uniform-bandwidth convenience constructor (shared medium).
     pub fn homogeneous(k: usize, uplink_bps: f64, latency_s: f64) -> Result<Self> {
         Self::new(vec![uplink_bps; k], latency_s)
     }
 
-    /// Transmission time of one broadcast of `nbytes` from `sender` (s),
-    /// without recording it.
+    /// The network's topology.
+    pub fn topology(&self) -> &Topology {
+        &self.topology
+    }
+
+    /// Transmission time of one broadcast of `nbytes` from `sender` (s)
+    /// on the shared medium / the sender's access link, without
+    /// recording it. Under a switched topology the scheduled time can
+    /// exceed this when a slower rack trunk bottlenecks the transfer.
     pub fn tx_time(&self, sender: usize, nbytes: usize) -> f64 {
         self.latency_s + (nbytes as f64 * 8.0) / self.uplink_bps[sender]
     }
 
     /// Record one broadcast of `nbytes` from `sender`; returns its
-    /// transmission time (s).
+    /// transmission time (s). On the shared medium this serializes after
+    /// everything already recorded; under a switched topology it is
+    /// placed on the link schedule (see [`PhaseLedger::record_scheduled`]).
     pub fn broadcast(&mut self, sender: usize, nbytes: usize) -> f64 {
-        let t = self.tx_time(sender, nbytes);
-        self.ledger.record(sender, nbytes, t);
-        t
+        match &self.links {
+            None => {
+                let t = self.tx_time(sender, nbytes);
+                self.ledger.record(sender, nbytes, t);
+                t
+            }
+            Some(table) => {
+                if !self.ledger.group_open() {
+                    // Group-less caller: everything is one implicit
+                    // broadcast-domain group (conservative — trunk
+                    // traffic assumed).
+                    let k = self.uplink_bps.len();
+                    let full = if k >= 32 { u32::MAX } else { (1u32 << k) - 1 };
+                    self.ledger.begin_group(full);
+                }
+                let members = self.ledger.group_members();
+                let mut used = [(0usize, 0.0f64); 2];
+                used[0] = (sender, table.rates_bps[sender]);
+                let mut n_used = 1;
+                if let Some(agg) = table.agg[sender] {
+                    if members & !table.rack_mask[sender] != 0 {
+                        used[n_used] = (agg, table.rates_bps[agg]);
+                        n_used += 1;
+                    }
+                }
+                self.ledger
+                    .record_scheduled(sender, nbytes, self.latency_s, &used[..n_used])
+            }
+        }
     }
 
     /// Open the next round section of the ledger (see
     /// [`PhaseLedger::begin_round`]).
     pub fn begin_round(&mut self) {
         self.ledger.begin_round();
+    }
+
+    /// Open the next multicast group of the current round, naming its
+    /// member set (see [`PhaseLedger::begin_group`]). No-op on the
+    /// shared medium.
+    pub fn begin_group(&mut self, members: u32) {
+        self.ledger.begin_group(members);
     }
 
     /// The phase ledger accumulated so far.
@@ -301,6 +586,21 @@ mod tests {
             BroadcastNet::new(vec![1e6], -1.0),
             BroadcastNet::new(vec![1e6], f64::INFINITY),
             BroadcastNet::homogeneous(0, 1e6, 0.0),
+            BroadcastNet::with_topology(
+                vec![1e6, 1e6],
+                0.0,
+                Topology::Rack { racks: 0, oversub: 2.0 },
+            ),
+            BroadcastNet::with_topology(
+                vec![1e6, 1e6],
+                0.0,
+                Topology::Rack { racks: 2, oversub: 0.0 },
+            ),
+            BroadcastNet::with_topology(
+                vec![1e6, 1e6],
+                0.0,
+                Topology::Rack { racks: 2, oversub: f64::NAN },
+            ),
         ] {
             assert!(
                 matches!(bad, Err(HetcdcError::InvalidParams(_))),
@@ -355,5 +655,131 @@ mod tests {
         assert_eq!(r.elapsed_s.to_bits(), expect.to_bits());
         assert_eq!(r.total_bytes, 900 + 100 + 1200 + 40);
         assert_eq!(r.msgs_by_node, vec![2, 1, 1]);
+    }
+
+    #[test]
+    fn shared_medium_folds_makespan_identically_to_elapsed() {
+        let mut net = BroadcastNet::new(vec![8e6, 2e6], 3e-4).unwrap();
+        net.begin_round();
+        net.begin_group(0b11);
+        net.broadcast(0, 900);
+        net.broadcast(1, 100);
+        net.begin_round();
+        net.broadcast(0, 40);
+        for round in net.report().rounds {
+            assert_eq!(round.makespan_s.to_bits(), round.elapsed_s.to_bits());
+            assert_eq!(round.critical_group, None);
+        }
+        assert!(net.report().links.is_empty());
+    }
+
+    #[test]
+    fn disjoint_groups_run_concurrently_on_flat_topology() {
+        // Two single-broadcast groups from different senders in one
+        // round: flat topology runs them concurrently, so the round's
+        // makespan is the max, not the sum.
+        let mk = |topo| {
+            let mut net =
+                BroadcastNet::with_topology(vec![8e6, 4e6], 0.0, topo).unwrap();
+            net.begin_round();
+            net.begin_group(0b01);
+            net.broadcast(0, 1000); // 1 ms on node0's link
+            net.begin_group(0b10);
+            net.broadcast(1, 1000); // 2 ms on node1's link
+            net.report()
+        };
+        let flat = mk(Topology::Flat);
+        let shared = mk(Topology::Shared);
+        assert_eq!(flat.total_bytes, shared.total_bytes);
+        assert_eq!(flat.rounds.len(), shared.rounds.len());
+        assert!((flat.elapsed_s - 2e-3).abs() < 1e-12);
+        assert!((shared.elapsed_s - 3e-3).abs() < 1e-12);
+        assert_eq!(flat.rounds[0].critical_group, Some(1));
+        assert_eq!(flat.links.len(), 2);
+        assert_eq!(flat.links[0].bytes, 1000);
+        assert_eq!(flat.links[1].bytes, 1000);
+        assert!((flat.links[1].utilization - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn broadcasts_within_a_group_chain_sequentially() {
+        let mut net = BroadcastNet::with_topology(vec![8e6, 8e6], 0.0, Topology::Flat).unwrap();
+        net.begin_round();
+        net.begin_group(0b11);
+        net.broadcast(0, 1000);
+        net.broadcast(1, 1000); // different link, same group: chained
+        let r = net.report();
+        assert!((r.elapsed_s - 2e-3).abs() < 1e-12);
+    }
+
+    #[test]
+    fn rounds_are_barriers_on_switched_topologies() {
+        let mut net = BroadcastNet::with_topology(vec![8e6, 4e6], 0.0, Topology::Flat).unwrap();
+        net.begin_round();
+        net.begin_group(0b10);
+        net.broadcast(1, 1000); // 2 ms: round 1 ends at 2 ms
+        net.begin_round();
+        net.begin_group(0b01);
+        net.broadcast(0, 1000); // starts at the barrier, +1 ms
+        let r = net.report();
+        assert!((r.rounds[0].makespan_s - 2e-3).abs() < 1e-12);
+        assert!((r.rounds[1].makespan_s - 1e-3).abs() < 1e-12);
+        assert!((r.elapsed_s - 3e-3).abs() < 1e-12);
+    }
+
+    #[test]
+    fn rack_trunk_carries_only_cross_rack_traffic() {
+        // 2 racks of 2; trunk rate = (8+8)/4 = 4 Mbit/s.
+        let topo = Topology::Rack { racks: 2, oversub: 4.0 };
+        let mut net =
+            BroadcastNet::with_topology(vec![8e6; 4], 0.0, topo).unwrap();
+        net.begin_round();
+        net.begin_group(0b0011); // stays inside rack 0
+        net.broadcast(0, 1000);
+        net.begin_round();
+        net.begin_group(0b0101); // node0 -> node2 crosses racks
+        net.broadcast(0, 1000);
+        let r = net.report();
+        let trunk0 = &r.links[4];
+        assert_eq!(trunk0.id, "rack0");
+        assert_eq!(trunk0.bytes, 1000, "only the cross-rack broadcast");
+        // In-rack broadcast runs at the access rate (1 ms); cross-rack
+        // is bottlenecked by the 4 Mbit/s trunk (2 ms).
+        assert!((r.rounds[0].makespan_s - 1e-3).abs() < 1e-12);
+        assert!((r.rounds[1].makespan_s - 2e-3).abs() < 1e-12);
+    }
+
+    #[test]
+    fn groups_sharing_a_trunk_serialize_on_it() {
+        // Both senders sit in rack 0 and cross racks: their group
+        // schedules collide on the rack0 trunk.
+        let topo = Topology::Rack { racks: 2, oversub: 2.0 };
+        let mut net =
+            BroadcastNet::with_topology(vec![8e6; 4], 0.0, topo).unwrap();
+        net.begin_round();
+        net.begin_group(0b0101);
+        net.broadcast(0, 1000); // trunk busy 0..1ms (trunk rate 8e6)
+        net.begin_group(0b1010);
+        net.broadcast(1, 1000); // waits for the trunk: 1..2ms
+        let r = net.report();
+        assert!((r.rounds[0].makespan_s - 2e-3).abs() < 1e-12);
+        assert_eq!(r.rounds[0].critical_group, Some(1));
+    }
+
+    #[test]
+    fn switched_reset_rewinds_the_schedule() {
+        let mut net = BroadcastNet::with_topology(vec![8e6, 8e6], 0.0, Topology::Flat).unwrap();
+        net.begin_round();
+        net.begin_group(0b01);
+        net.broadcast(0, 1000);
+        let before = net.report();
+        net.reset();
+        net.begin_round();
+        net.begin_group(0b01);
+        net.broadcast(0, 1000);
+        let after = net.report();
+        assert_eq!(after.elapsed_s.to_bits(), before.elapsed_s.to_bits());
+        assert_eq!(after.links, before.links);
+        assert_eq!(after.epoch, before.epoch + 1);
     }
 }

@@ -1,0 +1,347 @@
+//! Switched-network topology model: per-link rate tables.
+//!
+//! [`Topology`] describes what sits between the nodes' uplinks and the
+//! rest of the cluster. `Shared` is the paper's §II single broadcast
+//! medium (every transmission serializes — the model all previous
+//! artifacts were produced under, preserved bit-for-bit). The switched
+//! variants replace the one medium with a table of **links**:
+//!
+//! - `Flat` — a full-bisection switch: one access link per node, no
+//!   shared trunk. Multicast groups with distinct senders never contend.
+//! - `Rack { racks, oversub }` — nodes are blocked into `racks`
+//!   top-of-rack switches; each rack owns an aggregation uplink whose
+//!   rate is the sum of its members' access rates divided by
+//!   `oversub` (the classic oversubscription ratio). A broadcast
+//!   occupies its sender's access link, plus the sender's rack uplink
+//!   when any destination lives outside the rack (sender-side egress:
+//!   the switch replicates the multicast downstream, so destination
+//!   racks' uplinks carry no copy upward).
+//! - `FatTree { racks }` — the same structure at full bisection
+//!   (`oversub = 1`): rack trunks exist and are metered, but are
+//!   provisioned to never be slower than their members combined.
+//!
+//! Scheduling over these links lives in [`crate::net::sim`]; this module
+//! only names, validates, and sizes the links.
+
+use crate::error::{HetcdcError, Result};
+use crate::util::json::Json;
+
+fn invalid(msg: impl Into<String>) -> HetcdcError {
+    HetcdcError::InvalidParams(msg.into())
+}
+
+/// Network topology of a cluster. Parsed from / rendered to the CLI
+/// `--topology` spec string; `Shared` is the default everywhere and is
+/// omitted from serialized cluster JSON so existing artifacts and
+/// fingerprints are unchanged.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Topology {
+    /// Single shared broadcast medium (§II): all transmissions serialize.
+    Shared,
+    /// Full-bisection switch: per-node access links only.
+    Flat,
+    /// `racks` top-of-rack switches behind oversubscribed uplinks.
+    Rack { racks: usize, oversub: f64 },
+    /// Rack structure at full bisection (`oversub = 1`).
+    FatTree { racks: usize },
+}
+
+impl Default for Topology {
+    fn default() -> Self {
+        Topology::Shared
+    }
+}
+
+impl Topology {
+    /// Parse a CLI/JSON spec string. Accepted forms:
+    /// `shared` | `flat` | `rack:q=R,oversub=X` | `fat-tree:q=R`
+    /// (`racks=` and `oversubscription=` are accepted aliases).
+    pub fn parse(spec: &str) -> Result<Topology> {
+        let spec = spec.trim();
+        match spec {
+            "shared" => return Ok(Topology::Shared),
+            "flat" => return Ok(Topology::Flat),
+            _ => {}
+        }
+        let (head, body) = spec
+            .split_once(':')
+            .ok_or_else(|| invalid(format!("unknown topology '{spec}'")))?;
+        let mut racks: Option<usize> = None;
+        let mut oversub: Option<f64> = None;
+        for pair in body.split(',').filter(|p| !p.trim().is_empty()) {
+            let (key, val) = pair
+                .split_once('=')
+                .ok_or_else(|| invalid(format!("topology option '{pair}' is not key=value")))?;
+            match (key.trim(), val.trim()) {
+                ("q" | "racks", v) => {
+                    racks = Some(v.parse::<usize>().map_err(|_| {
+                        invalid(format!("topology rack count '{v}' is not an integer"))
+                    })?);
+                }
+                ("oversub" | "oversubscription", v) => {
+                    oversub = Some(v.parse::<f64>().map_err(|_| {
+                        invalid(format!("topology oversubscription '{v}' is not a number"))
+                    })?);
+                }
+                (k, _) => return Err(invalid(format!("unknown topology option '{k}'"))),
+            }
+        }
+        let racks =
+            racks.ok_or_else(|| invalid(format!("topology '{head}' needs q=<racks>")))?;
+        match head {
+            "rack" => Ok(Topology::Rack {
+                racks,
+                oversub: oversub.unwrap_or(1.0),
+            }),
+            "fat-tree" | "fattree" => {
+                if oversub.is_some() {
+                    return Err(invalid(
+                        "fat-tree is full-bisection; oversub is not accepted",
+                    ));
+                }
+                Ok(Topology::FatTree { racks })
+            }
+            _ => Err(invalid(format!("unknown topology '{head}'"))),
+        }
+    }
+
+    /// Canonical spec string: `parse(spec()) == self`, and equal
+    /// topologies render equal strings (used in cache keys and
+    /// fingerprints).
+    pub fn spec(&self) -> String {
+        match self {
+            Topology::Shared => "shared".into(),
+            Topology::Flat => "flat".into(),
+            Topology::Rack { racks, oversub } => format!("rack:q={racks},oversub={oversub}"),
+            Topology::FatTree { racks } => format!("fat-tree:q={racks}"),
+        }
+    }
+
+    pub fn is_shared(&self) -> bool {
+        matches!(self, Topology::Shared)
+    }
+
+    /// Oversubscription ratio of the rack trunks (1 when absent).
+    pub fn oversub(&self) -> f64 {
+        match self {
+            Topology::Rack { oversub, .. } => *oversub,
+            _ => 1.0,
+        }
+    }
+
+    /// Validate the topology against a cluster of `k` nodes.
+    pub fn validate(&self, k: usize) -> Result<()> {
+        match *self {
+            Topology::Shared | Topology::Flat => Ok(()),
+            Topology::Rack { racks, oversub } => {
+                check_racks(racks, k)?;
+                if !(oversub.is_finite() && oversub > 0.0) {
+                    return Err(invalid(format!(
+                        "oversubscription must be positive and finite, got {oversub}"
+                    )));
+                }
+                Ok(())
+            }
+            Topology::FatTree { racks } => check_racks(racks, k),
+        }
+    }
+
+    /// Rack index of `node` in a `k`-node cluster (blocked assignment:
+    /// contiguous node ranges map to consecutive racks).
+    pub fn rack_of(&self, node: usize, k: usize) -> usize {
+        match *self {
+            Topology::Rack { racks, .. } | Topology::FatTree { racks } => node * racks / k,
+            _ => 0,
+        }
+    }
+
+    /// Build the per-link rate table for nodes with the given access
+    /// rates (bits/s). `None` for the shared medium: it has no links,
+    /// only the serialized clock.
+    pub fn link_table(&self, uplink_bps: &[f64]) -> Result<Option<LinkTable>> {
+        let k = uplink_bps.len();
+        self.validate(k)?;
+        let (racks, oversub) = match *self {
+            Topology::Shared => return Ok(None),
+            Topology::Flat => (0, 1.0),
+            Topology::Rack { racks, oversub } => (racks, oversub),
+            Topology::FatTree { racks } => (racks, 1.0),
+        };
+        let mut ids: Vec<String> = (0..k).map(|i| format!("node{i}")).collect();
+        let mut rates_bps = uplink_bps.to_vec();
+        let mut agg = vec![None; k];
+        let mut rack_mask = vec![full_mask(k); k];
+        if racks > 0 {
+            let mut rack_sum = vec![0.0f64; racks];
+            let mut masks = vec![0u32; racks];
+            for node in 0..k {
+                let r = self.rack_of(node, k);
+                rack_sum[r] += uplink_bps[node];
+                masks[r] |= 1u32 << node;
+            }
+            for (r, &sum) in rack_sum.iter().enumerate() {
+                let rate = sum / oversub;
+                if !(rate.is_finite() && rate > 0.0) {
+                    return Err(invalid(format!(
+                        "rack {r} uplink rate must be positive and finite, got {rate}"
+                    )));
+                }
+                ids.push(format!("rack{r}"));
+                rates_bps.push(rate);
+            }
+            for node in 0..k {
+                let r = self.rack_of(node, k);
+                agg[node] = Some(k + r);
+                rack_mask[node] = masks[r];
+            }
+        }
+        Ok(Some(LinkTable {
+            ids,
+            rates_bps,
+            agg,
+            rack_mask,
+        }))
+    }
+
+    /// JSON form used inside serialized cluster specs (the spec string).
+    pub fn to_json(&self) -> Json {
+        Json::Str(self.spec())
+    }
+
+    pub fn from_json(j: &Json) -> Result<Topology> {
+        j.as_str()
+            .ok_or_else(|| HetcdcError::Json("topology must be a spec string".into()))
+            .and_then(Topology::parse)
+    }
+}
+
+fn check_racks(racks: usize, k: usize) -> Result<()> {
+    if racks == 0 || (k > 0 && racks > k) {
+        return Err(invalid(format!(
+            "rack count {racks} out of range [1, {k}]"
+        )));
+    }
+    Ok(())
+}
+
+fn full_mask(k: usize) -> u32 {
+    if k >= 32 {
+        u32::MAX
+    } else {
+        (1u32 << k) - 1
+    }
+}
+
+/// Immutable per-link rate table of a switched topology. Links
+/// `0..k` are the node access links; rack trunks (if any) follow.
+#[derive(Clone, Debug, PartialEq)]
+pub struct LinkTable {
+    /// Stable link names (`node{i}`, then `rack{r}`), the identity
+    /// reported in [`crate::net::LinkLedger`].
+    pub ids: Vec<String>,
+    /// Link rates, bits/second, parallel to `ids`.
+    pub rates_bps: Vec<f64>,
+    /// Per node: the rack trunk its egress traffic rides (None on
+    /// `Flat`, where there is no trunk).
+    pub agg: Vec<Option<usize>>,
+    /// Per node: bitmask of the nodes sharing its rack (the full node
+    /// set on `Flat`). A broadcast whose destinations all fall inside
+    /// this mask never leaves the rack.
+    pub rack_mask: Vec<u32>,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_and_spec_roundtrip() {
+        for spec in ["shared", "flat", "rack:q=3,oversub=4", "fat-tree:q=2"] {
+            let t = Topology::parse(spec).unwrap();
+            assert_eq!(t.spec(), spec);
+            assert_eq!(Topology::parse(&t.spec()).unwrap(), t);
+        }
+        assert_eq!(
+            Topology::parse("rack:racks=2,oversubscription=2.5").unwrap(),
+            Topology::Rack { racks: 2, oversub: 2.5 }
+        );
+        assert_eq!(
+            Topology::parse("rack:q=2").unwrap(),
+            Topology::Rack { racks: 2, oversub: 1.0 }
+        );
+    }
+
+    #[test]
+    fn bad_specs_are_typed_errors() {
+        for bad in [
+            "ring",
+            "rack",
+            "rack:oversub=2",
+            "rack:q=two",
+            "rack:q=2,flavor=hot",
+            "fat-tree:q=2,oversub=3",
+        ] {
+            assert!(
+                matches!(Topology::parse(bad), Err(HetcdcError::InvalidParams(_))),
+                "{bad}"
+            );
+        }
+    }
+
+    #[test]
+    fn validate_rejects_bad_shapes() {
+        assert!(Topology::Rack { racks: 0, oversub: 1.0 }.validate(4).is_err());
+        assert!(Topology::Rack { racks: 5, oversub: 1.0 }.validate(4).is_err());
+        assert!(Topology::Rack { racks: 2, oversub: 0.0 }.validate(4).is_err());
+        assert!(Topology::Rack { racks: 2, oversub: -1.0 }.validate(4).is_err());
+        assert!(Topology::Rack { racks: 2, oversub: f64::NAN }.validate(4).is_err());
+        assert!(Topology::FatTree { racks: 9 }.validate(8).is_err());
+        assert!(Topology::Rack { racks: 2, oversub: 4.0 }.validate(4).is_ok());
+    }
+
+    #[test]
+    fn rack_assignment_is_blocked_and_total() {
+        let t = Topology::Rack { racks: 3, oversub: 2.0 };
+        let racks: Vec<usize> = (0..12).map(|n| t.rack_of(n, 12)).collect();
+        assert_eq!(racks, vec![0, 0, 0, 0, 1, 1, 1, 1, 2, 2, 2, 2]);
+        // Non-dividing K still covers every rack monotonically.
+        let racks: Vec<usize> = (0..5).map(|n| t.rack_of(n, 5)).collect();
+        assert_eq!(racks, vec![0, 0, 1, 1, 2]);
+    }
+
+    #[test]
+    fn link_table_sizes_trunks_from_member_rates() {
+        let t = Topology::Rack { racks: 2, oversub: 4.0 };
+        let lt = t.link_table(&[100.0, 200.0, 300.0, 400.0]).unwrap().unwrap();
+        assert_eq!(lt.ids, vec!["node0", "node1", "node2", "node3", "rack0", "rack1"]);
+        assert_eq!(lt.rates_bps[4], (100.0 + 200.0) / 4.0);
+        assert_eq!(lt.rates_bps[5], (300.0 + 400.0) / 4.0);
+        assert_eq!(lt.agg, vec![Some(4), Some(4), Some(5), Some(5)]);
+        assert_eq!(lt.rack_mask, vec![0b0011, 0b0011, 0b1100, 0b1100]);
+    }
+
+    #[test]
+    fn flat_has_access_links_only_and_shared_has_none() {
+        let lt = Topology::Flat.link_table(&[1e6, 2e6]).unwrap().unwrap();
+        assert_eq!(lt.ids, vec!["node0", "node1"]);
+        assert_eq!(lt.agg, vec![None, None]);
+        assert!(Topology::Shared.link_table(&[1e6]).unwrap().is_none());
+    }
+
+    #[test]
+    fn fat_tree_is_full_bisection() {
+        let lt = Topology::FatTree { racks: 2 }
+            .link_table(&[1e6, 1e6, 1e6, 1e6])
+            .unwrap()
+            .unwrap();
+        assert_eq!(lt.rates_bps[4], 2e6);
+        assert_eq!(lt.rates_bps[5], 2e6);
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let t = Topology::Rack { racks: 3, oversub: 4.0 };
+        assert_eq!(Topology::from_json(&t.to_json()).unwrap(), t);
+        assert!(Topology::from_json(&Json::Num(3.0)).is_err());
+    }
+}

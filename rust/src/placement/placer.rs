@@ -350,6 +350,7 @@ mod tests {
         let c = ClusterSpec {
             nodes: vec![],
             latency_ms: 0.0,
+            topology: crate::net::Topology::Shared,
         };
         let err = Oblivious.place(&c, &JobSpec::terasort(12)).unwrap_err();
         assert!(matches!(err, HetcdcError::InvalidParams(_)));

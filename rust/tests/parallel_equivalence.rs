@@ -17,6 +17,7 @@ use hetcdc::coding::plan::IvId;
 use hetcdc::engine::{ExecMode, Executor, JobBuilder, NativeBackend, Plan, RunReport};
 use hetcdc::model::cluster::ClusterSpec;
 use hetcdc::model::job::{JobSpec, ShuffleMode};
+use hetcdc::net::Topology;
 use hetcdc::placement::builtin_placers;
 use hetcdc::prop::Gen;
 
@@ -211,6 +212,76 @@ fn every_placer_coder_combo_is_mode_equivalent_k3_to_6() {
             let batches = batch_gen.usize_in(1..=8);
             let ctx = format!(
                 "K={} storage={storage:?} {} x uncoded batches={batches}",
+                cl.k(),
+                placer.name()
+            );
+            check_plan(&plan, 3, batches, &ctx);
+        }
+    }
+}
+
+#[test]
+fn every_placer_coder_combo_is_mode_equivalent_on_a_rack_topology() {
+    // The concurrent-round scheduler must be as mode-oblivious as the
+    // shared medium: under a 2-rack oversubscribed fabric, every
+    // placer × coder combination (plus uncoded) stays bit-identical
+    // across serial/parallel/pipelined — same `NetReport` including the
+    // per-link ledgers and per-round makespans, which only exist on
+    // switched topologies. `check_plan` compares full `NetReport`s with
+    // `==`, so `links` and `makespan_s`/`critical_group` are in the diff.
+    let mut batch_gen = Gen::new(0x7AC4_0217);
+    let rack = Topology::Rack { racks: 2, oversub: 3.0 };
+    for (storage, n) in shapes() {
+        let cl = cluster(&storage).with_topology(rack);
+        let job = small_job(n);
+        for placer in builtin_placers() {
+            let alloc = match placer.place(&cl, &job) {
+                Ok(a) => a,
+                Err(_) => continue,
+            };
+            for coder in builtin_coders() {
+                let plan = match JobBuilder::new(&cl, &job)
+                    .custom_allocation(alloc.clone())
+                    .coder(coder.name())
+                    .mode(ShuffleMode::Coded)
+                    .build()
+                {
+                    Ok(p) => p,
+                    Err(_) => continue,
+                };
+                let batches = batch_gen.usize_in(1..=3);
+                let ctx = format!(
+                    "rack K={} storage={storage:?} {} x {} batches={batches}",
+                    cl.k(),
+                    placer.name(),
+                    coder.name()
+                );
+                check_plan(&plan, 3, batches, &ctx);
+                // The switched path was actually exercised: the report
+                // carries a ledger per access link plus the rack trunks.
+                let nr = Executor::new(&plan)
+                    .and_then(|mut e| {
+                        e.run_batch(&mut NativeBackend, job.seed).map(|_| e.net_report())
+                    })
+                    .unwrap();
+                assert_eq!(nr.links.len(), cl.k() + 2, "{ctx}: link ledgers");
+                for round in &nr.rounds {
+                    assert!(
+                        round.makespan_s <= round.elapsed_s + 1e-12,
+                        "{ctx}: round makespan {} above serialized bound {}",
+                        round.makespan_s,
+                        round.elapsed_s
+                    );
+                }
+            }
+            let plan = JobBuilder::new(&cl, &job)
+                .custom_allocation(alloc.clone())
+                .mode(ShuffleMode::Uncoded)
+                .build()
+                .unwrap();
+            let batches = batch_gen.usize_in(1..=3);
+            let ctx = format!(
+                "rack K={} storage={storage:?} {} x uncoded batches={batches}",
                 cl.k(),
                 placer.name()
             );

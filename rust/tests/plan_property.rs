@@ -158,7 +158,11 @@ fn engine_plan_panic_paths_are_typed_errors() {
     // min() on storage; both paths must now be typed errors.
     use hetcdc::coding::coder_by_name;
     use hetcdc::placement::{placer_by_name, Allocation};
-    let empty = ClusterSpec { nodes: vec![], latency_ms: 0.0 };
+    let empty = ClusterSpec {
+        nodes: vec![],
+        latency_ms: 0.0,
+        topology: hetcdc::net::Topology::Shared,
+    };
     let job = small_job(12);
     let err = placer_by_name("oblivious", &empty)
         .unwrap()

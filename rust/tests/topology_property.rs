@@ -1,0 +1,223 @@
+//! Topology invariants: a switched fabric reschedules the shuffle — it
+//! never changes what is sent. For random heterogeneous shapes and every
+//! `Placer` × `ShuffleCoder` combination that builds, the rack-topology
+//! run must move exactly the bytes/messages/rounds of the shared-medium
+//! run, and each round's concurrent makespan must stay within its own
+//! serialized fold. `Topology::Shared` itself is pinned bit-for-bit by a
+//! committed v2 plan fixture: the simulated clock must reproduce the
+//! documented `latency + bits/rate` fold exactly, so pre-topology
+//! artifacts and reports survive this PR byte-identical.
+
+use hetcdc::coding::builtin_coders;
+use hetcdc::engine::{Executor, JobBuilder, NativeBackend, Plan};
+use hetcdc::model::cluster::ClusterSpec;
+use hetcdc::model::job::{JobSpec, ShuffleMode};
+use hetcdc::net::{NetReport, Topology};
+use hetcdc::placement::builtin_placers;
+use hetcdc::prop;
+
+fn cluster(storage: &[u64]) -> ClusterSpec {
+    let mut c = ClusterSpec::homogeneous(storage.len(), 1, 1000.0);
+    for (node, &m) in c.nodes.iter_mut().zip(storage) {
+        node.storage = m;
+    }
+    for (i, node) in c.nodes.iter_mut().enumerate() {
+        node.uplink_mbps = 500.0 + 125.0 * (i % 4) as f64;
+        node.map_files_per_s = 100.0 * (1 + i % 3) as f64;
+    }
+    c
+}
+
+fn small_job(n: u64) -> JobSpec {
+    let mut job = JobSpec::terasort(n);
+    job.t = 8;
+    job.keys_per_file = 16;
+    job
+}
+
+fn run_report(plan: &Plan) -> NetReport {
+    let mut be = NativeBackend;
+    let mut exec = Executor::new(plan).expect("executor");
+    let r = exec.run_batch(&mut be, plan.job.seed).expect("batch");
+    assert!(r.verified);
+    exec.net_report()
+}
+
+#[test]
+fn prop_rack_topology_moves_exactly_the_shared_medium_bytes() {
+    // Random storages, K = 2..6, random rack counts and oversubscription:
+    // for every combo that builds, the rack run and the shared run agree
+    // on every byte/message/round count — totals, per-node, and per-round
+    // — and each rack round's makespan is bounded by its own serialized
+    // fold (concurrency can only shorten a round, never grow it).
+    prop::run("rack topology preserves bytes/rounds", 25, |g| {
+        let k = g.usize_in(2..=6);
+        let n = g.u64_in(2..=8);
+        let storage: Vec<u64> = (0..k).map(|_| g.u64_in(1..=n)).collect();
+        if storage.iter().sum::<u64>() < n {
+            return Ok(());
+        }
+        let racks = g.usize_in(1..=k);
+        let oversub = [1.0, 2.0, 4.0][g.usize_in(0..=2)];
+        let shared_cl = cluster(&storage);
+        let rack_cl = shared_cl.clone().with_topology(Topology::Rack { racks, oversub });
+        let job = small_job(n);
+        for placer in builtin_placers() {
+            let alloc = match placer.place(&shared_cl, &job) {
+                Ok(a) => a,
+                Err(_) => continue, // shape not served (e.g. K=3-only)
+            };
+            for coder in builtin_coders() {
+                let built = JobBuilder::new(&shared_cl, &job)
+                    .custom_allocation(alloc.clone())
+                    .coder(coder.name())
+                    .mode(ShuffleMode::Coded)
+                    .build();
+                let shared_plan = match built {
+                    Ok(p) => p,
+                    Err(_) => continue, // combo rejects this shape
+                };
+                let rack_plan = JobBuilder::new(&rack_cl, &job)
+                    .custom_allocation(alloc.clone())
+                    .coder(coder.name())
+                    .mode(ShuffleMode::Coded)
+                    .build()
+                    .map_err(|e| {
+                        format!(
+                            "K={k} racks={racks} {} x {}: shared built but rack failed: {e}",
+                            placer.name(),
+                            coder.name()
+                        )
+                    })?;
+                let s = run_report(&shared_plan);
+                let r = run_report(&rack_plan);
+                let ctx = format!(
+                    "K={k} storage={storage:?} racks={racks} oversub={oversub} {} x {}",
+                    placer.name(),
+                    coder.name()
+                );
+                prop::check(r.total_bytes == s.total_bytes, format!("{ctx}: total_bytes"))?;
+                prop::check(r.total_msgs == s.total_msgs, format!("{ctx}: total_msgs"))?;
+                prop::check(
+                    r.bytes_by_node == s.bytes_by_node && r.msgs_by_node == s.msgs_by_node,
+                    format!("{ctx}: per-node accounting"),
+                )?;
+                prop::check(r.rounds.len() == s.rounds.len(), format!("{ctx}: round count"))?;
+                for (i, (rr, sr)) in r.rounds.iter().zip(&s.rounds).enumerate() {
+                    prop::check(
+                        rr.bytes == sr.bytes && rr.msgs == sr.msgs,
+                        format!("{ctx}: round {i} bytes/msgs"),
+                    )?;
+                    prop::check(
+                        rr.makespan_s <= rr.elapsed_s + 1e-12,
+                        format!(
+                            "{ctx}: round {i} makespan {} above its serialized fold {}",
+                            rr.makespan_s, rr.elapsed_s
+                        ),
+                    )?;
+                }
+                // The switched report carries k access links + one trunk
+                // per rack; the shared one stays link-free.
+                prop::check(s.links.is_empty(), format!("{ctx}: shared links"))?;
+                prop::check(
+                    r.links.len() == k + racks,
+                    format!("{ctx}: rack links {} != {}", r.links.len(), k + racks),
+                )?;
+            }
+        }
+        Ok(())
+    });
+}
+
+/// The committed v2 plan fixture (`fixtures/plan_k3_v2.json`): a
+/// hand-written K=3, N=3, sp=1 cyclic placement with one coded XOR
+/// broadcast (node 0 serves nodes 1 and 2) and one uncoded delivery
+/// (node 1 serves node 0) — small enough that its wire sizes and clock
+/// can be recomputed here from first principles.
+const FIXTURE: &str = include_str!("fixtures/plan_k3_v2.json");
+
+#[test]
+fn shared_medium_reproduces_the_fixture_clock_bit_for_bit() {
+    let plan = Plan::from_json_str(FIXTURE).expect("fixture parses and revalidates");
+    assert!(plan.cluster.topology.is_shared());
+    assert_eq!(plan.shuffle.round_count(), 2);
+
+    let nr = run_report(&plan);
+
+    // Wire framing (engine/exec.rs `broadcast_sizes`): IVs are t*4 = 32
+    // bytes; the coded 2-part broadcast frames 32 + 16 + 2*12 = 72 bytes,
+    // the uncoded one 32 + 16 + 12 = 60.
+    assert_eq!(nr.total_bytes, 72 + 60);
+    assert_eq!(nr.total_msgs, 2);
+    assert_eq!(nr.bytes_by_node, vec![72, 60, 0]);
+
+    // The serialized shared-medium clock, recomputed with the exact same
+    // expressions the simulator uses (`ClusterSpec::network` converts
+    // Mbps/ms; `tx_time` is latency + bits/rate): any drift — a changed
+    // conversion, a reordered fold, a sneaky rescheduling of Shared —
+    // breaks bit-for-bit compatibility with pre-topology artifacts.
+    let latency_s = 0.5 / 1e3;
+    let mut expected = 0.0f64;
+    for (wire, mbps) in [(72u64, 800.0f64), (60, 640.0)] {
+        expected += latency_s + (wire as f64 * 8.0) / (mbps * 1e6);
+    }
+    assert_eq!(
+        nr.elapsed_s.to_bits(),
+        expected.to_bits(),
+        "shared-medium clock drifted: {} != {}",
+        nr.elapsed_s,
+        expected
+    );
+
+    // On the shared medium the concurrent schedule *is* the serialized
+    // fold — per round, bit for bit — no link ledgers, no critical group.
+    assert!(nr.links.is_empty());
+    for round in &nr.rounds {
+        assert_eq!(round.makespan_s.to_bits(), round.elapsed_s.to_bits());
+        assert_eq!(round.critical_group, None);
+    }
+
+    // And the round structure metered as committed: 72 wire bytes in
+    // round 0, 60 in round 1.
+    assert_eq!(nr.rounds[0].bytes, 72);
+    assert_eq!(nr.rounds[1].bytes, 60);
+}
+
+#[test]
+fn fixture_runs_identically_on_a_rack_topology() {
+    // The same committed plan re-homed onto a 2-rack fabric (blocked
+    // assignment: nodes {0, 1} in rack 0, node {2} in rack 1):
+    // byte-identical counts, schedule different. Rebuilding through a
+    // coder could restructure the IR, so the rack twin reruns the *same*
+    // plan with only the cluster swapped through the JSON round trip.
+    let shared = Plan::from_json_str(FIXTURE).unwrap();
+    let rack_cl = shared
+        .cluster
+        .clone()
+        .with_topology(Topology::Rack { racks: 2, oversub: 2.0 });
+    let mut j = hetcdc::util::json::Json::parse(FIXTURE).unwrap();
+    if let hetcdc::util::json::Json::Obj(m) = &mut j {
+        m.insert("cluster".into(), rack_cl.to_json());
+    }
+    let rack_plan = Plan::from_json(&j).expect("rack fixture revalidates");
+    assert_eq!(rack_plan.cluster.topology, rack_cl.topology);
+
+    let s = run_report(&shared);
+    let r = run_report(&rack_plan);
+    assert_eq!(r.total_bytes, s.total_bytes);
+    assert_eq!(r.total_msgs, s.total_msgs);
+    assert_eq!(r.bytes_by_node, s.bytes_by_node);
+    assert_eq!(r.rounds.len(), s.rounds.len());
+    // 3 access links + 2 trunks.
+    assert_eq!(r.links.len(), 5);
+    let busy: Vec<&str> = r
+        .links
+        .iter()
+        .filter(|l| l.msgs > 0)
+        .map(|l| l.id.as_str())
+        .collect();
+    // Egress is sender-side: both broadcasts reach node 2 in the other
+    // rack, so each occupies its sender's access link plus rack 0's
+    // trunk; rack 1's trunk never carries an egress here.
+    assert_eq!(busy, vec!["node0", "node1", "rack0"]);
+}
