@@ -38,6 +38,7 @@ fn fleet(k: usize) -> ClusterSpec {
             .collect(),
         latency_ms: 0.5,
         topology: hetcdc::net::Topology::Shared,
+        faults: hetcdc::net::FaultSpec::default(),
     }
 }
 

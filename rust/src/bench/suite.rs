@@ -18,11 +18,11 @@
 //! the serving path.
 
 use crate::bench::harness::{Bench, BenchResult};
-use crate::engine::{ExecMode, Executor, JobBuilder, NativeBackend};
+use crate::engine::{ExecConfig, ExecMode, Executor, JobBuilder, NativeBackend};
 use crate::error::{HetcdcError, Result};
 use crate::model::cluster::{ClusterSpec, NodeSpec};
 use crate::model::job::{JobSpec, ShuffleMode, WorkloadKind};
-use crate::net::Topology;
+use crate::net::{FaultSpec, Straggle, Topology};
 use crate::util::json::Json;
 use std::collections::BTreeMap;
 
@@ -47,7 +47,41 @@ pub struct Scenario {
     /// scenario are identical to its shared-medium sibling, which the
     /// suite tests assert.
     pub topology: Topology,
+    /// Fault model of the scenario's cluster. Straggler jitter changes
+    /// the simulated schedule only (a `-straggle` scenario's byte, message
+    /// and round counts equal its fault-free twin's — asserted by the
+    /// suite tests); `repair:f=N` changes the plan shape (extra coded
+    /// repair rounds).
+    pub faults: FaultSpec,
+    /// When set, the scenario additionally drops this node after the
+    /// normal run, re-plans on the survivors via
+    /// [`crate::engine::Plan::replan_without`], executes the recovery
+    /// plan, and records the recovery cost deltas.
+    pub drop_node: Option<usize>,
 }
+
+/// Fault-free marker for the scenario table ([`FaultSpec::default`],
+/// spelled as a `const` so the table rows stay literal).
+const NO_FAULTS: FaultSpec = FaultSpec {
+    straggle: None,
+    repair: 0,
+};
+
+/// The committed straggle point: deterministic per-node jitter, amplitude
+/// large enough that the jittered Map tail provably stalls some send.
+const STRAGGLE: FaultSpec = FaultSpec {
+    straggle: Some(Straggle {
+        seed: 0xBE7C,
+        amp: 3.0,
+    }),
+    repair: 0,
+};
+
+/// The committed degraded-decode point: tolerate one lost broadcast.
+const REPAIR1: FaultSpec = FaultSpec {
+    straggle: None,
+    repair: 1,
+};
 
 /// The committed suite: K ∈ {3, 5, 8, 12, 16} heterogeneous clusters,
 /// coded and uncoded, TeraSort plus a WordCount point. Order and names
@@ -64,30 +98,41 @@ pub fn default_suite() -> Vec<Scenario> {
     use ShuffleMode::{Coded, Uncoded};
     use WorkloadKind::{TeraSort, WordCount};
     vec![
-        Scenario { name: "k3-terasort-coded", storage: &[6, 7, 7], n_files: 12, workload: TeraSort, placer: "auto", coder: None, mode: Coded, topology: Topology::Shared },
-        Scenario { name: "k3-terasort-uncoded", storage: &[6, 7, 7], n_files: 12, workload: TeraSort, placer: "auto", coder: None, mode: Uncoded, topology: Topology::Shared },
-        Scenario { name: "k3-wordcount-coded", storage: &[4, 8, 12], n_files: 12, workload: WordCount, placer: "auto", coder: None, mode: Coded, topology: Topology::Shared },
-        Scenario { name: "k5-terasort-coded", storage: &[3, 4, 5, 6, 7], n_files: 10, workload: TeraSort, placer: "auto", coder: None, mode: Coded, topology: Topology::Shared },
-        Scenario { name: "k5-terasort-uncoded", storage: &[3, 4, 5, 6, 7], n_files: 10, workload: TeraSort, placer: "auto", coder: None, mode: Uncoded, topology: Topology::Shared },
-        Scenario { name: "k8-terasort-coded", storage: &[2, 3, 3, 4, 4, 5, 5, 6], n_files: 8, workload: TeraSort, placer: "oblivious", coder: None, mode: Coded, topology: Topology::Shared },
-        Scenario { name: "k8-terasort-uncoded", storage: &[2, 3, 3, 4, 4, 5, 5, 6], n_files: 8, workload: TeraSort, placer: "oblivious", coder: None, mode: Uncoded, topology: Topology::Shared },
+        Scenario { name: "k3-terasort-coded", storage: &[6, 7, 7], n_files: 12, workload: TeraSort, placer: "auto", coder: None, mode: Coded, topology: Topology::Shared, faults: NO_FAULTS, drop_node: None },
+        Scenario { name: "k3-terasort-uncoded", storage: &[6, 7, 7], n_files: 12, workload: TeraSort, placer: "auto", coder: None, mode: Uncoded, topology: Topology::Shared, faults: NO_FAULTS, drop_node: None },
+        Scenario { name: "k3-wordcount-coded", storage: &[4, 8, 12], n_files: 12, workload: WordCount, placer: "auto", coder: None, mode: Coded, topology: Topology::Shared, faults: NO_FAULTS, drop_node: None },
+        Scenario { name: "k5-terasort-coded", storage: &[3, 4, 5, 6, 7], n_files: 10, workload: TeraSort, placer: "auto", coder: None, mode: Coded, topology: Topology::Shared, faults: NO_FAULTS, drop_node: None },
+        Scenario { name: "k5-terasort-uncoded", storage: &[3, 4, 5, 6, 7], n_files: 10, workload: TeraSort, placer: "auto", coder: None, mode: Uncoded, topology: Topology::Shared, faults: NO_FAULTS, drop_node: None },
+        Scenario { name: "k8-terasort-coded", storage: &[2, 3, 3, 4, 4, 5, 5, 6], n_files: 8, workload: TeraSort, placer: "oblivious", coder: None, mode: Coded, topology: Topology::Shared, faults: NO_FAULTS, drop_node: None },
+        Scenario { name: "k8-terasort-uncoded", storage: &[2, 3, 3, 4, 4, 5, 5, 6], n_files: 8, workload: TeraSort, placer: "oblivious", coder: None, mode: Uncoded, topology: Topology::Shared, faults: NO_FAULTS, drop_node: None },
         // Combinatorial grid design (q=2, r=4: gain 3) vs greedy pairing
         // (gain <= 2) on the identical placement — the measured coding
         // gain the acceptance gate checks.
-        Scenario { name: "k8-terasort-combinatorial", storage: &[4, 4, 5, 5, 6, 6, 7, 7], n_files: 8, workload: TeraSort, placer: "combinatorial", coder: None, mode: Coded, topology: Topology::Shared },
-        Scenario { name: "k8-terasort-grid-greedy", storage: &[4, 4, 5, 5, 6, 6, 7, 7], n_files: 8, workload: TeraSort, placer: "combinatorial", coder: Some("greedy"), mode: Coded, topology: Topology::Shared },
+        Scenario { name: "k8-terasort-combinatorial", storage: &[4, 4, 5, 5, 6, 6, 7, 7], n_files: 8, workload: TeraSort, placer: "combinatorial", coder: None, mode: Coded, topology: Topology::Shared, faults: NO_FAULTS, drop_node: None },
+        Scenario { name: "k8-terasort-grid-greedy", storage: &[4, 4, 5, 5, 6, 6, 7, 7], n_files: 8, workload: TeraSort, placer: "combinatorial", coder: Some("greedy"), mode: Coded, topology: Topology::Shared, faults: NO_FAULTS, drop_node: None },
         // Larger-K combinatorial regimes: K=12 (q=3, r=4) and K=16
         // (q=2, r=8) — shapes no enumeration-based coder reaches.
-        Scenario { name: "k12-terasort-combinatorial", storage: &[4, 4, 4, 5, 5, 5, 6, 6, 6, 7, 7, 7], n_files: 12, workload: TeraSort, placer: "combinatorial", coder: None, mode: Coded, topology: Topology::Shared },
-        Scenario { name: "k16-terasort-combinatorial", storage: &[8, 8, 9, 9, 10, 10, 11, 11, 8, 8, 9, 9, 10, 10, 11, 11], n_files: 16, workload: TeraSort, placer: "combinatorial", coder: None, mode: Coded, topology: Topology::Shared },
+        Scenario { name: "k12-terasort-combinatorial", storage: &[4, 4, 4, 5, 5, 5, 6, 6, 6, 7, 7, 7], n_files: 12, workload: TeraSort, placer: "combinatorial", coder: None, mode: Coded, topology: Topology::Shared, faults: NO_FAULTS, drop_node: None },
+        Scenario { name: "k16-terasort-combinatorial", storage: &[8, 8, 9, 9, 10, 10, 11, 11, 8, 8, 9, 9, 10, 10, 11, 11], n_files: 16, workload: TeraSort, placer: "combinatorial", coder: None, mode: Coded, topology: Topology::Shared, faults: NO_FAULTS, drop_node: None },
         // Rack-switched twins of the combinatorial scenarios: identical
         // storage/job, 4:1 oversubscribed rack trunks. Byte, message, and
         // round counts must match the shared sibling exactly; only the
         // simulated schedule (makespan) improves, because the coder's q
         // node-disjoint transversal groups per round run concurrently.
-        Scenario { name: "k8-terasort-combinatorial-rack", storage: &[4, 4, 5, 5, 6, 6, 7, 7], n_files: 8, workload: TeraSort, placer: "combinatorial", coder: None, mode: Coded, topology: Topology::Rack { racks: 2, oversub: 4.0 } },
-        Scenario { name: "k12-terasort-combinatorial-rack", storage: &[4, 4, 4, 5, 5, 5, 6, 6, 6, 7, 7, 7], n_files: 12, workload: TeraSort, placer: "combinatorial", coder: None, mode: Coded, topology: Topology::Rack { racks: 3, oversub: 4.0 } },
-        Scenario { name: "k16-terasort-combinatorial-rack", storage: &[8, 8, 9, 9, 10, 10, 11, 11, 8, 8, 9, 9, 10, 10, 11, 11], n_files: 16, workload: TeraSort, placer: "combinatorial", coder: None, mode: Coded, topology: Topology::Rack { racks: 4, oversub: 4.0 } },
+        Scenario { name: "k8-terasort-combinatorial-rack", storage: &[4, 4, 5, 5, 6, 6, 7, 7], n_files: 8, workload: TeraSort, placer: "combinatorial", coder: None, mode: Coded, topology: Topology::Rack { racks: 2, oversub: 4.0 }, faults: NO_FAULTS, drop_node: None },
+        Scenario { name: "k12-terasort-combinatorial-rack", storage: &[4, 4, 4, 5, 5, 5, 6, 6, 6, 7, 7, 7], n_files: 12, workload: TeraSort, placer: "combinatorial", coder: None, mode: Coded, topology: Topology::Rack { racks: 3, oversub: 4.0 }, faults: NO_FAULTS, drop_node: None },
+        Scenario { name: "k16-terasort-combinatorial-rack", storage: &[8, 8, 9, 9, 10, 10, 11, 11, 8, 8, 9, 9, 10, 10, 11, 11], n_files: 16, workload: TeraSort, placer: "combinatorial", coder: None, mode: Coded, topology: Topology::Rack { racks: 4, oversub: 4.0 }, faults: NO_FAULTS, drop_node: None },
+        // Fault-injection twins of the K=8 combinatorial scenario.
+        // Straggle: identical bytes/messages/rounds, only the simulated
+        // schedule stretches (asserted by the suite tests). Repair f=1:
+        // the plan itself grows verified coded repair rounds, so its
+        // byte/round costs are the *price of loss tolerance*, measured in
+        // the committed artifact. Dropout: after the normal run, node 0
+        // is dropped, the survivors are re-planned, and the recovery cost
+        // (bytes/rounds/makespan deltas) is recorded.
+        Scenario { name: "k8-terasort-combinatorial-straggle", storage: &[4, 4, 5, 5, 6, 6, 7, 7], n_files: 8, workload: TeraSort, placer: "combinatorial", coder: None, mode: Coded, topology: Topology::Shared, faults: STRAGGLE, drop_node: None },
+        Scenario { name: "k8-terasort-combinatorial-repair1", storage: &[4, 4, 5, 5, 6, 6, 7, 7], n_files: 8, workload: TeraSort, placer: "combinatorial", coder: None, mode: Coded, topology: Topology::Shared, faults: REPAIR1, drop_node: None },
+        Scenario { name: "k8-terasort-dropout", storage: &[4, 4, 5, 5, 6, 6, 7, 7], n_files: 8, workload: TeraSort, placer: "combinatorial", coder: None, mode: Coded, topology: Topology::Shared, faults: NO_FAULTS, drop_node: Some(0) },
     ]
 }
 
@@ -109,6 +154,7 @@ impl Scenario {
                 .collect(),
             latency_ms: 0.5,
             topology: self.topology,
+            faults: self.faults,
         }
     }
 
@@ -159,6 +205,38 @@ impl PlanBuildStats {
     }
 }
 
+/// Recovery cost of a dropout scenario: the dropped node, the recovery
+/// plan's absolute metrics, and its deltas against the pre-drop plan.
+/// All deterministic — part of the diffable artifact.
+#[derive(Clone, Copy, Debug)]
+pub struct RecoveryStats {
+    pub dropped_node: usize,
+    /// Recovery plan metrics (one serial batch on the survivors).
+    pub payload_bytes: u64,
+    pub wire_bytes: u64,
+    pub rounds: u64,
+    pub makespan_s: f64,
+    /// Deltas vs the pre-drop plan (positive = recovery costs more).
+    pub delta_payload_bytes: f64,
+    pub delta_rounds: f64,
+    pub delta_makespan_s: f64,
+}
+
+impl RecoveryStats {
+    pub fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("dropped_node".into(), Json::Num(self.dropped_node as f64));
+        m.insert("payload_bytes".into(), Json::Num(self.payload_bytes as f64));
+        m.insert("wire_bytes".into(), Json::Num(self.wire_bytes as f64));
+        m.insert("rounds".into(), Json::Num(self.rounds as f64));
+        m.insert("makespan_s".into(), Json::Num(self.makespan_s));
+        m.insert("delta_payload_bytes".into(), Json::Num(self.delta_payload_bytes));
+        m.insert("delta_rounds".into(), Json::Num(self.delta_rounds));
+        m.insert("delta_makespan_s".into(), Json::Num(self.delta_makespan_s));
+        Json::Obj(m)
+    }
+}
+
 /// Deterministic measurements of one scenario (plus optional wall-clock).
 #[derive(Clone, Debug)]
 pub struct ScenarioResult {
@@ -191,6 +269,13 @@ pub struct ScenarioResult {
     /// Plan-construction shape (rounds/groups/broadcasts — counts only,
     /// timestamp-free).
     pub plan_build: PlanBuildStats,
+    /// Total straggler-induced schedule wait — recorded (and serialized)
+    /// only for scenarios with a straggle spec, so fault-free artifacts
+    /// stay byte-identical to pre-fault ones.
+    pub straggler_delay_s: Option<f64>,
+    /// Dropout recovery cost — recorded (and serialized) only for
+    /// scenarios with a `drop_node`.
+    pub recovery: Option<RecoveryStats>,
     /// Wall-clock of one parallel batch (nondeterministic, optional).
     pub wall: Option<BenchResult>,
     /// Wall-clock of one pipelined [`PIPELINE_BATCHES`]-batch run — the
@@ -224,6 +309,14 @@ impl ScenarioResult {
         m.insert("makespan_s".into(), Json::Num(self.makespan_s));
         m.insert("modes_identical".into(), Json::Bool(self.modes_identical));
         m.insert("plan_build".into(), self.plan_build.to_json());
+        // Fault fields are omitted when no fault spec / no dropout is
+        // configured: fault-free artifacts stay byte-identical.
+        if let Some(d) = self.straggler_delay_s {
+            m.insert("straggler_delay_s".into(), Json::Num(d));
+        }
+        if let Some(r) = &self.recovery {
+            m.insert("recovery".into(), r.to_json());
+        }
         if let Some(w) = &self.wall {
             m.insert("wall".into(), w.to_json());
         }
@@ -269,11 +362,13 @@ pub fn run_scenario(
     }
     let plan = builder.build()?;
 
+    // One config drives all three executors (cfg.faults stays None, so
+    // each meters under the plan's own fault spec).
+    let cfg = ExecConfig::default().threads(threads);
     let mut be = NativeBackend;
-    let mut serial = Executor::new(&plan)?;
+    let mut serial = Executor::with_config(&plan, cfg)?;
     let r_serial = serial.run_batch(&mut be, job.seed)?;
-    let mut parallel = Executor::with_mode(&plan, ExecMode::Parallel)?;
-    parallel.set_threads(threads);
+    let mut parallel = Executor::with_config(&plan, cfg.mode(ExecMode::Parallel))?;
     let r_parallel = parallel.run_batch(&mut be, job.seed)?;
 
     let diverged = |mode: &str, what: &str| {
@@ -315,10 +410,9 @@ pub fn run_scenario(
     // Pipelined multi-batch run vs the same batches run serially: the
     // steady-state serving path must be bit-identical, batch by batch.
     let seeds: Vec<u64> = (0..PIPELINE_BATCHES).map(|b| job.seed.wrapping_add(b)).collect();
-    let mut pipelined = Executor::with_mode(&plan, ExecMode::Pipelined)?;
-    pipelined.set_threads(threads);
+    let mut pipelined = Executor::with_config(&plan, cfg.mode(ExecMode::Pipelined))?;
     let piped = pipelined.run_batches(&mut be, &seeds)?;
-    let mut serial_ref = Executor::new(&plan)?;
+    let mut serial_ref = Executor::with_config(&plan, cfg)?;
     let serial_batches = serial_ref.run_batches(&mut be, &seeds)?;
     for (b, (rp, rs)) in piped.iter().zip(&serial_batches).enumerate() {
         if !rp.verified || !reports_identical(rp, rs) {
@@ -374,6 +468,40 @@ pub fn run_scenario(
         wall_pipelined = Some(wp);
     }
 
+    // Dropout recovery: re-plan on the survivors (reusing their placed
+    // subfiles), execute one serial batch of the recovery plan, and meter
+    // its cost against the pre-drop plan. Deterministic like everything
+    // above.
+    let mut recovery = None;
+    if let Some(node) = sc.drop_node {
+        let replanned = plan.replan_without(node)?;
+        let mut rex = Executor::with_config(&replanned, cfg)?;
+        let rr = rex.run_batch(&mut be, job.seed)?;
+        if !rr.verified {
+            return Err(HetcdcError::Backend(format!(
+                "scenario {}: recovery plan failed oracle verification",
+                sc.name
+            )));
+        }
+        let makespan_s = rex.net_report().elapsed_s;
+        recovery = Some(RecoveryStats {
+            dropped_node: node,
+            payload_bytes: rr.payload_bytes,
+            wire_bytes: rr.wire_bytes,
+            rounds: replanned.shuffle.round_count() as u64,
+            makespan_s,
+            delta_payload_bytes: rr.payload_bytes as f64 - r_serial.payload_bytes as f64,
+            delta_rounds: replanned.shuffle.round_count() as f64
+                - plan.shuffle.round_count() as f64,
+            delta_makespan_s: makespan_s - serial.net_report().elapsed_s,
+        });
+    }
+
+    let straggler_delay_s = cluster
+        .faults
+        .straggle
+        .map(|_| serial.net_report().straggler_delay_s);
+
     Ok(ScenarioResult {
         name: sc.name.to_string(),
         k,
@@ -393,6 +521,8 @@ pub fn run_scenario(
         makespan_s: serial.net_report().elapsed_s,
         modes_identical: true,
         plan_build: PlanBuildStats::of(&plan.shuffle),
+        straggler_delay_s,
+        recovery,
         wall,
         wall_pipelined,
     })
@@ -456,23 +586,28 @@ impl SuiteReport {
 
 /// Run the whole [`default_suite`].
 pub fn run_suite(threads: usize, timing: Option<&Bench>) -> Result<SuiteReport> {
-    run_suite_with(threads, timing, None)
+    run_suite_with(threads, timing, None, None)
 }
 
-/// [`run_suite`] with an optional topology override applied to every
-/// scenario (the `bench-json --topology` exploration path). Overridden
-/// artifacts are *not* comparable to the committed shared-medium
-/// baseline — the CLI skips the gate when an override is active.
+/// [`run_suite`] with optional topology and fault-spec overrides applied
+/// to every scenario (the `bench-json --topology` / `--faults`
+/// exploration paths). Overridden artifacts are *not* comparable to the
+/// committed fault-free shared-medium baseline — the CLI skips the gate
+/// when an override is active.
 pub fn run_suite_with(
     threads: usize,
     timing: Option<&Bench>,
     topology: Option<Topology>,
+    faults: Option<FaultSpec>,
 ) -> Result<SuiteReport> {
     let mut results = Vec::new();
     for sc in default_suite() {
         let mut sc = sc;
         if let Some(t) = topology {
             sc.topology = t;
+        }
+        if let Some(f) = faults {
+            sc.faults = f;
         }
         results.push(run_scenario(&sc, threads, timing)?);
     }
@@ -789,7 +924,7 @@ mod tests {
         // `bench-json --topology` path: overriding every scenario onto a
         // rack fabric must leave all deterministic byte/round metrics
         // identical to the default suite — only schedules change.
-        let over = run_suite_with(2, None, Some(Topology::Rack { racks: 1, oversub: 2.0 }))
+        let over = run_suite_with(2, None, Some(Topology::Rack { racks: 1, oversub: 2.0 }), None)
             .expect("override suite runs");
         let base = shared_report();
         for (o, b) in over.results.iter().zip(&base.results) {
@@ -798,6 +933,108 @@ mod tests {
             assert_eq!(o.wire_bytes, b.wire_bytes, "{}", o.name);
             assert_eq!(o.messages, b.messages, "{}", o.name);
             assert_eq!(o.rounds, b.rounds, "{}", o.name);
+        }
+    }
+
+    #[test]
+    fn straggle_twin_keeps_bytes_and_stretches_schedule() -> Result<()> {
+        // The straggler acceptance gate: the `-straggle` twin moves the
+        // exact same bytes/messages/rounds as the fault-free scenario
+        // (jitter never changes what is sent), its nominal Map barrier is
+        // unchanged, and all the slowdown shows up as schedule waits.
+        let report = shared_report();
+        let clean = report.scenario("k8-terasort-combinatorial")?;
+        let strag = report.scenario("k8-terasort-combinatorial-straggle")?;
+        assert_eq!(strag.payload_bytes, clean.payload_bytes);
+        assert_eq!(strag.wire_bytes, clean.wire_bytes);
+        assert_eq!(strag.messages, clean.messages);
+        assert_eq!(strag.rounds, clean.rounds);
+        assert_eq!(strag.map_time_s.to_bits(), clean.map_time_s.to_bits());
+        let delay = strag.straggler_delay_s.expect("straggle scenario records its delay");
+        assert!(delay > 0.0, "expected a positive straggler delay");
+        assert!(
+            strag.shuffle_time_s > clean.shuffle_time_s,
+            "straggle shuffle {} <= clean {}",
+            strag.shuffle_time_s,
+            clean.shuffle_time_s
+        );
+        assert!(clean.straggler_delay_s.is_none());
+        Ok(())
+    }
+
+    #[test]
+    fn repair_twin_pays_a_measured_loss_tolerance_price() -> Result<()> {
+        // Degraded decode is not free: the f=1 twin's plan carries extra
+        // verified repair rounds, and the artifact records their cost.
+        let report = shared_report();
+        let clean = report.scenario("k8-terasort-combinatorial")?;
+        let rep = report.scenario("k8-terasort-combinatorial-repair1")?;
+        assert!(rep.rounds > clean.rounds, "{} vs {}", rep.rounds, clean.rounds);
+        assert!(rep.wire_bytes > clean.wire_bytes);
+        assert!(rep.payload_bytes > clean.payload_bytes);
+        assert!(rep.straggler_delay_s.is_none(), "repair alone adds no jitter");
+        Ok(())
+    }
+
+    #[test]
+    fn dropout_scenario_records_recovery_cost() -> Result<()> {
+        let report = shared_report();
+        let drop = report.scenario("k8-terasort-dropout")?;
+        let rec = drop.recovery.expect("dropout scenario records recovery stats");
+        assert_eq!(rec.dropped_node, 0);
+        assert!(rec.payload_bytes > 0);
+        assert!(rec.rounds >= 1);
+        assert!(rec.makespan_s > 0.0);
+        assert_eq!(
+            rec.delta_payload_bytes,
+            rec.payload_bytes as f64 - drop.payload_bytes as f64
+        );
+        assert_eq!(rec.delta_makespan_s, rec.makespan_s - drop.makespan_s);
+        // Fault-free scenarios record no recovery section.
+        assert!(report.scenario("k8-terasort-combinatorial")?.recovery.is_none());
+        Ok(())
+    }
+
+    #[test]
+    fn fault_free_scenarios_serialize_without_fault_keys() {
+        // Backward-compat contract of the artifact: fault fields appear
+        // only on scenarios that configured the corresponding fault.
+        let j = shared_report().to_json();
+        for sc in j.get("scenarios").unwrap().as_arr().unwrap() {
+            let name = sc.get("name").and_then(|n| n.as_str()).unwrap();
+            assert_eq!(
+                sc.get("straggler_delay_s").is_some(),
+                name.contains("straggle"),
+                "{name}: straggler_delay_s presence"
+            );
+            assert_eq!(
+                sc.get("recovery").is_some(),
+                name.contains("dropout"),
+                "{name}: recovery presence"
+            );
+        }
+    }
+
+    #[test]
+    fn suite_faults_override_keeps_bytes() {
+        // `bench-json --faults` path: a straggle override stretches
+        // schedules but leaves every byte/message/round metric identical.
+        // Scenarios whose own spec includes repair are skipped — the
+        // override *replaces* the spec, so their plans lose the repair
+        // rounds by design.
+        let f = FaultSpec::parse("straggle:seed=7,amp=2").unwrap();
+        let over = run_suite_with(2, None, None, Some(f)).expect("override suite runs");
+        let base = shared_report();
+        for (o, b) in over.results.iter().zip(&base.results) {
+            assert_eq!(o.name, b.name);
+            if o.name.contains("repair") {
+                continue;
+            }
+            assert_eq!(o.payload_bytes, b.payload_bytes, "{}", o.name);
+            assert_eq!(o.wire_bytes, b.wire_bytes, "{}", o.name);
+            assert_eq!(o.messages, b.messages, "{}", o.name);
+            assert_eq!(o.rounds, b.rounds, "{}", o.name);
+            assert!(o.straggler_delay_s.is_some(), "{}", o.name);
         }
     }
 

@@ -337,6 +337,56 @@ pub fn verify(alloc: &Allocation, plan: &ShufflePlan) -> DecodeReport {
     DecodeReport { missing, passes }
 }
 
+/// Degraded-decode gate: prove `plan` recovers every IV under **every**
+/// loss pattern of up to `f` broadcasts. Enumerates all single losses
+/// (`f >= 1`) and all unordered pairs (`f >= 2`) over the flattened
+/// order, re-running [`verify`] on each pruned plan
+/// ([`ShufflePlan::without_broadcast`]); the typed error names the first
+/// failing pattern. `f` is capped at
+/// [`crate::net::faults::MAX_REPAIR_F`] — the enumeration is
+/// combinatorial in `f`.
+pub fn verify_loss_patterns(alloc: &Allocation, plan: &ShufflePlan, f: usize) -> Result<()> {
+    if f > crate::net::faults::MAX_REPAIR_F {
+        return Err(HetcdcError::InvalidParams(format!(
+            "loss-pattern verification supports f <= {}, got {f}",
+            crate::net::faults::MAX_REPAIR_F
+        )));
+    }
+    let check = |pruned: &ShufflePlan, lost: &[usize]| -> Result<()> {
+        let report = verify(alloc, pruned);
+        if report.is_complete() {
+            return Ok(());
+        }
+        let node = report
+            .missing
+            .iter()
+            .position(|m| !m.is_empty())
+            .expect("incomplete report has a missing node");
+        Err(HetcdcError::PlanMismatch(format!(
+            "degraded decode: losing broadcast(s) {lost:?} leaves node {node} missing \
+             {} IVs — the plan does not tolerate f={f} losses",
+            report.missing[node].len()
+        )))
+    };
+    let nb = plan.n_broadcasts();
+    if f >= 1 {
+        for i in 0..nb {
+            check(&plan.without_broadcast(i), &[i])?;
+        }
+    }
+    if f >= 2 {
+        for j in 1..nb {
+            // Remove the higher index first so `i < j` stays valid in
+            // the already-pruned plan.
+            let minus_j = plan.without_broadcast(j);
+            for i in 0..j {
+                check(&minus_j.without_broadcast(i), &[i, j])?;
+            }
+        }
+    }
+    Ok(())
+}
+
 /// Verify `plan` and return its [`DecodeSchedule`]; typed error when some
 /// node would end the Shuffle phase missing IVs.
 pub fn schedule(alloc: &Allocation, plan: &ShufflePlan) -> Result<DecodeSchedule> {
@@ -619,6 +669,35 @@ mod tests {
         assert!(passes_new <= 2, "quiescence, not a cap ({passes_new} passes)");
         // Either way the plan is genuinely incomplete for node 1.
         assert!(!verify(&alloc, &plan).is_complete());
+    }
+
+    #[test]
+    fn loss_patterns_verify_on_repaired_plans_and_fail_on_bare_ones() {
+        use crate::coding::plan::with_repair_rounds;
+        let p = Params3::new(6, 7, 7, 12).unwrap();
+        let alloc = optimal_allocation(&p);
+        for base in [plan_k3(&alloc), plan_greedy(&alloc), plan_uncoded(&alloc)] {
+            // f=0 is vacuous everywhere.
+            assert!(verify_loss_patterns(&alloc, &base, 0).is_ok());
+            // Bare plans have critical broadcasts: some single loss fails.
+            assert!(matches!(
+                verify_loss_patterns(&alloc, &base, 1),
+                Err(HetcdcError::PlanMismatch(_))
+            ));
+            // Repaired at f=1: every single loss recovers.
+            let r1 = with_repair_rounds(&base, &alloc, 1).unwrap();
+            assert!(verify_loss_patterns(&alloc, &r1, 1).is_ok());
+            // ...but a single repair round need not survive pair losses.
+            // Repaired at f=2: every pair loss recovers.
+            let r2 = with_repair_rounds(&base, &alloc, 2).unwrap();
+            assert!(verify_loss_patterns(&alloc, &r2, 2).is_ok());
+        }
+        // f beyond the supported maximum is a typed error, not a hang.
+        let plan = plan_uncoded(&alloc);
+        assert!(matches!(
+            verify_loss_patterns(&alloc, &plan, crate::net::faults::MAX_REPAIR_F + 1),
+            Err(HetcdcError::InvalidParams(_))
+        ));
     }
 
     #[test]

@@ -24,4 +24,7 @@ pub mod plan;
 pub mod xor;
 
 pub use coder::{builtin_coders, coder_by_name, ShuffleCoder};
-pub use plan::{Broadcast, IvId, MulticastGroup, Part, ShufflePlan, ShuffleRound};
+pub use decoder::verify_loss_patterns;
+pub use plan::{
+    with_repair_rounds, Broadcast, IvId, MulticastGroup, Part, ShufflePlan, ShuffleRound,
+};

@@ -390,6 +390,37 @@ impl ShufflePlan {
         Ok(())
     }
 
+    /// Clone of the plan with the broadcast at `flat_index` (flattened
+    /// round-major, group-major order) removed, pruning any group or
+    /// round the removal empties; an out-of-range index returns an
+    /// unmodified clone. Loss-pattern verification builds "plan minus
+    /// the lost broadcasts" this way — flat indices after `flat_index`
+    /// shift down by one, so the result is for completeness checks
+    /// ([`crate::coding::decoder::verify`]), not for reusing a
+    /// [`crate::coding::decoder::DecodeSchedule`] built on `self`.
+    pub fn without_broadcast(&self, flat_index: usize) -> ShufflePlan {
+        let mut out = ShufflePlan::new(self.k);
+        let mut at = 0usize;
+        for round in &self.rounds {
+            let mut new_round = ShuffleRound::default();
+            for group in &round.groups {
+                let mut copy =
+                    MulticastGroup { members: group.members, broadcasts: Vec::new() };
+                for b in &group.broadcasts {
+                    if at != flat_index {
+                        copy.broadcasts.push(b.clone());
+                    }
+                    at += 1;
+                }
+                if !copy.broadcasts.is_empty() {
+                    new_round.groups.push(copy);
+                }
+            }
+            out.push_round(new_round);
+        }
+        out
+    }
+
     /// JSON form used inside serialized [`crate::engine::Plan`] artifacts
     /// (Shuffle IR v2; schema in DESIGN.md).
     pub fn to_json(&self) -> Json {
@@ -771,6 +802,77 @@ pub fn plan_uncoded(alloc: &Allocation) -> ShufflePlan {
     plan
 }
 
+/// Degraded-decode construction (`repair:f=N` in a
+/// [`crate::net::FaultSpec`]): append repair rounds so the returned plan
+/// tolerates any `f` lost broadcasts.
+///
+/// - `f == 1`: a single loss can only break decode through a broadcast
+///   whose individual removal makes the base plan incomplete (call it
+///   *critical*). One repair round duplicates exactly the critical
+///   broadcasts, mirroring their original group members; losing the
+///   duplicate instead is harmless because the base stays intact.
+/// - `f >= 2`: joint losses can break decode through broadcasts that are
+///   individually non-critical, so pruning is unsound — `f` full-copy
+///   rounds are appended (`f + 1` copies of every broadcast survive any
+///   `f` losses).
+///
+/// Duplicates are decoder-safe: a copy's unknown-part counter reaches
+/// zero once the original decodes, so it never enters a
+/// [`crate::coding::decoder::DecodeSchedule`] twice. The builder calls
+/// [`crate::coding::decoder::verify_loss_patterns`] on the result, so
+/// the tolerance claim is proved, not assumed.
+pub fn with_repair_rounds(
+    base: &ShufflePlan,
+    alloc: &Allocation,
+    f: usize,
+) -> Result<ShufflePlan> {
+    if f == 0 {
+        return Ok(base.clone());
+    }
+    if !super::decoder::verify(alloc, base).is_complete() {
+        return Err(HetcdcError::PlanMismatch(
+            "repair rounds need a base plan that already decodes completely".into(),
+        ));
+    }
+    let mut out = base.clone();
+    if f == 1 {
+        let critical: Vec<bool> = (0..base.n_broadcasts())
+            .map(|bi| {
+                !super::decoder::verify(alloc, &base.without_broadcast(bi)).is_complete()
+            })
+            .collect();
+        let mut round = ShuffleRound::default();
+        let mut at = 0usize;
+        for r in &base.rounds {
+            for group in &r.groups {
+                let mut copy =
+                    MulticastGroup { members: group.members, broadcasts: Vec::new() };
+                for b in &group.broadcasts {
+                    if critical[at] {
+                        copy.broadcasts.push(b.clone());
+                    }
+                    at += 1;
+                }
+                if !copy.broadcasts.is_empty() {
+                    round.groups.push(copy);
+                }
+            }
+        }
+        // No critical broadcasts => the empty round is dropped and the
+        // base already tolerates one loss for free.
+        out.push_round(round);
+    } else {
+        for _ in 0..f {
+            let mut round = ShuffleRound::default();
+            for r in &base.rounds {
+                round.groups.extend(r.groups.iter().cloned());
+            }
+            out.push_round(round);
+        }
+    }
+    Ok(out)
+}
+
 // Re-export for doc link resolution.
 #[allow(unused_imports)]
 use xor as _xor_doc;
@@ -1074,6 +1176,81 @@ mod tests {
         assert_eq!(plan.pop_broadcast(), Some(b));
         assert_eq!(plan.n_broadcasts(), 0);
         assert_eq!(plan.round_count(), 0, "emptied rounds are pruned");
+    }
+
+    #[test]
+    fn without_broadcast_removes_one_flat_index_and_prunes() {
+        let p = Params3::new(6, 7, 7, 12).unwrap();
+        let alloc = optimal_allocation(&p);
+        let plan = plan_k3(&alloc);
+        let flat: Vec<Broadcast> = plan.iter_broadcasts().cloned().collect();
+        for bi in 0..plan.n_broadcasts() {
+            let pruned = plan.without_broadcast(bi);
+            assert_eq!(pruned.n_broadcasts(), plan.n_broadcasts() - 1);
+            let mut want = flat.clone();
+            want.remove(bi);
+            let got: Vec<Broadcast> = pruned.iter_broadcasts().cloned().collect();
+            assert_eq!(got, want, "removal at {bi} shifted the wrong index");
+            assert!(pruned.validate(3, alloc.n_sub()).is_ok());
+        }
+        // Out-of-range = unmodified clone.
+        assert_eq!(plan.without_broadcast(plan.n_broadcasts()), plan);
+        // Pruning: a plan of one single-broadcast group loses the round.
+        let mut tiny = ShufflePlan::new(3);
+        tiny.push_broadcast(
+            0b001,
+            Broadcast::Uncoded { sender: 0, iv: IvId { group: 1, sub: 0 } },
+        );
+        assert_eq!(tiny.without_broadcast(0).round_count(), 0);
+    }
+
+    #[test]
+    fn repair_rounds_duplicate_critical_broadcasts_at_f1() {
+        let p = Params3::new(6, 7, 7, 12).unwrap();
+        let alloc = optimal_allocation(&p);
+        let base = plan_uncoded(&alloc);
+        // Every uncoded delivery is critical: dropping any one loses an IV.
+        let repaired = with_repair_rounds(&base, &alloc, 1).unwrap();
+        assert_eq!(repaired.round_count(), base.round_count() + 1);
+        assert_eq!(repaired.n_broadcasts(), 2 * base.n_broadcasts());
+        assert!(repaired.validate(3, alloc.n_sub()).is_ok());
+        // The repair round mirrors the original group member masks.
+        let orig: Vec<NodeMask> =
+            base.rounds[0].groups.iter().map(|g| g.members).collect();
+        let rep: Vec<NodeMask> = repaired.rounds.last().unwrap().groups.iter()
+            .map(|g| g.members)
+            .collect();
+        assert_eq!(rep, orig);
+        // f=0 is the identity; f on an incomplete base is a typed error.
+        assert_eq!(with_repair_rounds(&base, &alloc, 0).unwrap(), base);
+        let mut broken = base.clone();
+        broken.pop_broadcast();
+        assert!(matches!(
+            with_repair_rounds(&broken, &alloc, 1),
+            Err(HetcdcError::PlanMismatch(_))
+        ));
+    }
+
+    #[test]
+    fn repair_rounds_full_copy_at_f2() {
+        let p = Params3::new(6, 7, 7, 12).unwrap();
+        let alloc = optimal_allocation(&p);
+        let base = plan_k3(&alloc);
+        let repaired = with_repair_rounds(&base, &alloc, 2).unwrap();
+        assert_eq!(repaired.round_count(), base.round_count() + 2);
+        assert_eq!(repaired.n_broadcasts(), 3 * base.n_broadcasts());
+        assert!(repaired.validate(3, alloc.n_sub()).is_ok());
+        // The two appended rounds are byte-for-byte copies of the base's
+        // flattened broadcast order.
+        let flat: Vec<Broadcast> = base.iter_broadcasts().cloned().collect();
+        for round in &repaired.rounds[base.round_count()..] {
+            let copy: Vec<Broadcast> = round
+                .groups
+                .iter()
+                .flat_map(|g| g.broadcasts.iter().cloned())
+                .collect();
+            assert_eq!(copy, flat);
+        }
     }
 
     #[test]

@@ -26,6 +26,10 @@ pub struct PlanKey {
     /// Canonical topology spec string (`"shared"` by default) — a rack
     /// cluster and its shared-medium twin must never share a plan.
     topology: String,
+    /// Canonical fault spec string (`"none"` by default) — a repair-f
+    /// plan has extra rounds and a straggling one different clocks, so
+    /// neither may share a plan with its fault-free twin.
+    faults: String,
     workload: WorkloadKind,
     n_files: u64,
     t: usize,
@@ -54,6 +58,7 @@ impl PlanKey {
                 .collect(),
             latency_bits: cluster.latency_ms.to_bits(),
             topology: cluster.topology.spec(),
+            faults: cluster.faults.spec(),
             workload: job.workload,
             n_files: job.n_files,
             t: job.t,
@@ -228,6 +233,27 @@ mod tests {
         assert_eq!((cache.hits, cache.misses), (0, 2));
         cache
             .get_or_build(&rack, &job, "optimal-k3", None, ShuffleMode::Coded)
+            .unwrap();
+        assert_eq!((cache.hits, cache.misses), (1, 2));
+    }
+
+    #[test]
+    fn fault_spec_change_is_a_different_key() {
+        let c = cluster(&[6, 7, 7]);
+        let faulty = c
+            .clone()
+            .with_faults(crate::net::FaultSpec::parse("straggle:seed=1,amp=0.5").unwrap());
+        let job = JobSpec::terasort(12);
+        let mut cache = PlanCache::new(8);
+        cache
+            .get_or_build(&c, &job, "optimal-k3", None, ShuffleMode::Coded)
+            .unwrap();
+        cache
+            .get_or_build(&faulty, &job, "optimal-k3", None, ShuffleMode::Coded)
+            .unwrap();
+        assert_eq!((cache.hits, cache.misses), (0, 2));
+        cache
+            .get_or_build(&faulty, &job, "optimal-k3", None, ShuffleMode::Coded)
             .unwrap();
         assert_eq!((cache.hits, cache.misses), (1, 2));
     }

@@ -9,7 +9,7 @@
 //! [`crate::engine::Executor`].
 
 use super::backend::MapBackend;
-use super::executor::Executor;
+use super::executor::{ExecConfig, Executor};
 use super::plan::{shape_fingerprint, JobBuilder, Plan};
 use crate::error::{HetcdcError, Result};
 use crate::model::cluster::ClusterSpec;
@@ -146,8 +146,9 @@ impl<'a> Engine<'a> {
             )));
         }
         // The engine's job picks the data batch; the plan only fixes the
-        // shape (its embedded seed is whatever job first built it).
-        Executor::new(plan)?.run_batch(self.backend, self.job.seed)
+        // shape (its embedded seed is whatever job first built it). The
+        // default config meters under the plan's own fault spec.
+        Executor::with_config(plan, ExecConfig::default())?.run_batch(self.backend, self.job.seed)
     }
 }
 

@@ -33,11 +33,11 @@
 use super::backend::MapBackend;
 use super::engine::RunReport;
 use super::exec::{execute_planned, execute_planned_parallel, NodeState};
-use super::plan::Plan;
+use super::plan::{straggler_ready, Plan};
 use crate::coding::plan::IvId;
 use crate::error::{HetcdcError, Result};
 use crate::model::job::JobSpec;
-use crate::net::{BroadcastNet, NetReport};
+use crate::net::{BroadcastNet, FaultSpec, NetReport};
 use crate::workloads;
 
 /// How a batch run schedules its per-node work.
@@ -68,6 +68,64 @@ impl ExecMode {
     }
 }
 
+/// Everything an [`Executor`] can be configured with, in one typed value.
+/// [`Executor::with_config`] is the single construction path — the engine,
+/// the bench suite, and the CLI all build executors through it; the old
+/// [`Executor::new`] / [`Executor::with_mode`] constructors are thin shims
+/// over a default config.
+///
+/// Which runs read which field:
+/// * `mode` — read by [`Executor::run_batch`] (Map sharding + decode
+///   threads) and [`Executor::run_batches`] (whether to pipeline).
+/// * `threads` — read by every parallel phase; `0` = auto-detect from
+///   [`std::thread::available_parallelism`]. Never changes results.
+/// * `faults` — `None` (the default) meters under the plan's own
+///   [`crate::model::cluster::ClusterSpec::faults`]; `Some(spec)` is an
+///   execution-time override installed into this executor's network
+///   simulator at construction. Metering-only: straggler jitter shifts
+///   clocks (`shuffle_time_s`, `straggler_delay_s`) but never bytes,
+///   messages, rounds, or decoded payloads, so the bit-identity contract
+///   across modes holds under every fault spec. Repair rounds are plan
+///   *shape* and cannot be overridden here — rebuild the plan for that.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ExecConfig {
+    pub mode: ExecMode,
+    /// Worker threads for the parallel phases; `0` = auto-detect.
+    pub threads: usize,
+    /// Execution-time fault override; `None` = use the plan's spec.
+    pub faults: Option<FaultSpec>,
+}
+
+impl Default for ExecConfig {
+    fn default() -> Self {
+        ExecConfig {
+            mode: ExecMode::Serial,
+            threads: 0,
+            faults: None,
+        }
+    }
+}
+
+impl ExecConfig {
+    /// Builder-style mode override.
+    pub fn mode(mut self, mode: ExecMode) -> Self {
+        self.mode = mode;
+        self
+    }
+
+    /// Builder-style thread-cap override.
+    pub fn threads(mut self, threads: usize) -> Self {
+        self.threads = threads;
+        self
+    }
+
+    /// Builder-style fault override.
+    pub fn faults(mut self, faults: FaultSpec) -> Self {
+        self.faults = Some(faults);
+        self
+    }
+}
+
 /// Runs batches against one [`Plan`]. Holds the per-node byte buffers,
 /// the per-node held-subfile lists, and the network simulator; buffers
 /// are reset (not reallocated) per batch, and all shape-derived work
@@ -91,16 +149,32 @@ pub struct Executor<'p> {
     mode: ExecMode,
     /// Worker threads for parallel phases; `0` = auto-detect.
     threads: usize,
+    /// The fault spec this executor meters under (the config override if
+    /// one was given, else the plan's own).
+    faults: FaultSpec,
+    /// Set when a pipelined multi-batch run had to degrade to the
+    /// sequential loop because the backend cannot Map concurrently.
+    pipeline_degraded: bool,
     batches_run: u64,
 }
 
 impl<'p> Executor<'p> {
-    /// Serial executor (the reference mode).
+    /// Serial executor (the reference mode). Shim over
+    /// [`Self::with_config`] with [`ExecConfig::default`].
     pub fn new(plan: &'p Plan) -> Result<Self> {
-        Self::with_mode(plan, ExecMode::Serial)
+        Self::with_config(plan, ExecConfig::default())
     }
 
+    /// Shim over [`Self::with_config`] setting only the mode.
     pub fn with_mode(plan: &'p Plan, mode: ExecMode) -> Result<Self> {
+        Self::with_config(plan, ExecConfig::default().mode(mode))
+    }
+
+    /// The single construction path: every field of `cfg` is applied
+    /// here, including installing the effective fault spec's straggler
+    /// jitter into the network simulator so all subsequent batch runs
+    /// meter under it.
+    pub fn with_config(plan: &'p Plan, cfg: ExecConfig) -> Result<Self> {
         let k = plan.cluster.k();
         let q = k; // Q = K (one reduce-function group per node, as in the paper)
         let n_sub = plan.alloc.n_sub();
@@ -114,14 +188,27 @@ impl<'p> Executor<'p> {
                     .collect()
             })
             .collect();
+        let faults = cfg.faults.unwrap_or(plan.cluster.faults);
+        faults.validate(k)?;
+        let mut net = plan.cluster.network()?;
+        if faults.straggle.is_some() {
+            // straggler_ready reads the spec off the cluster, so apply
+            // the effective spec to a throwaway clone when overriding.
+            let cluster = plan.cluster.clone().with_faults(faults);
+            if let Some(ready) = straggler_ready(&cluster, &plan.alloc) {
+                net.set_straggle(&ready)?;
+            }
+        }
         Ok(Executor {
             plan,
             states,
             back: Vec::new(),
             held,
-            net: plan.cluster.network()?,
-            mode,
-            threads: 0,
+            net,
+            mode: cfg.mode,
+            threads: cfg.threads,
+            faults,
+            pipeline_degraded: false,
             batches_run: 0,
         })
     }
@@ -157,6 +244,21 @@ impl<'p> Executor<'p> {
         };
         let t = if self.threads == 0 { hw() } else { self.threads };
         t.clamp(1, self.plan.cluster.k().max(1))
+    }
+
+    /// The fault spec this executor meters under: the
+    /// [`ExecConfig::faults`] override when one was given, else the
+    /// plan's own cluster spec.
+    pub fn faults(&self) -> FaultSpec {
+        self.faults
+    }
+
+    /// `true` once a [`ExecMode::Pipelined`] multi-batch run has degraded
+    /// to the sequential loop because [`MapBackend::worker_clone`]
+    /// returned `None`. Results are unaffected — only the Map/Shuffle
+    /// overlap (and with it the steady-state throughput) is lost.
+    pub fn pipeline_degraded(&self) -> bool {
+        self.pipeline_degraded
     }
 
     /// Batches executed so far.
@@ -254,7 +356,16 @@ impl<'p> Executor<'p> {
 
     /// Run one data batch: same plan, batch-specific `seed`. The report's
     /// loads and times must equal the plan's predictions (deterministic
-    /// simulator); only the payload bytes differ between batches.
+    /// simulator); only the payload bytes differ between batches. When an
+    /// [`ExecConfig::faults`] override diverges from the plan's spec, the
+    /// clock fields (`shuffle_time_s`, and the report's straggler delay)
+    /// diverge from the prediction too — bytes, messages, and rounds
+    /// never do.
+    ///
+    /// Config fields read: `mode` (Map sharding + decode threads),
+    /// `threads` (worker count), and `faults` (already installed in the
+    /// network simulator at construction — jitter survives the per-batch
+    /// ledger reset by design).
     pub fn run_batch(&mut self, backend: &mut dyn MapBackend, seed: u64) -> Result<RunReport> {
         let q = self.plan.cluster.k();
         let mut job = self.plan.job.clone();
@@ -294,7 +405,14 @@ impl<'p> Executor<'p> {
     /// batch `i+1` with the Shuffle/Reduce of batch `i` on the two epoch
     /// banks. Per-batch results are **bit-identical** across all three
     /// modes; a backend whose [`MapBackend::worker_clone`] returns `None`
-    /// (it cannot Map concurrently) degrades to the sequential loop.
+    /// (it cannot Map concurrently) degrades to the sequential loop. That
+    /// degradation is no longer silent: it is noted once on stderr and
+    /// latched on [`Self::pipeline_degraded`] so callers can surface it
+    /// on their reports.
+    ///
+    /// Config fields read: `mode` (pipeline vs loop), `threads` (worker
+    /// split between the Map-ahead stage and the front-batch decode), and
+    /// `faults` (installed at construction; every batch meters under it).
     pub fn run_batches(
         &mut self,
         backend: &mut dyn MapBackend,
@@ -305,7 +423,19 @@ impl<'p> Executor<'p> {
         }
         match backend.worker_clone() {
             Some(worker) => self.run_batches_pipelined(backend, worker, seeds),
-            None => seeds.iter().map(|&s| self.run_batch(backend, s)).collect(),
+            None => {
+                if !self.pipeline_degraded {
+                    self.pipeline_degraded = true;
+                    eprintln!(
+                        "hetcdc: warning: backend '{}' cannot Map concurrently \
+                         (worker_clone() returned None); pipelined run degrades \
+                         to sequential batches — results are identical, only \
+                         the Map/Shuffle overlap is lost",
+                        backend.name()
+                    );
+                }
+                seeds.iter().map(|&s| self.run_batch(backend, s)).collect()
+            }
         }
     }
 
@@ -677,6 +807,133 @@ mod tests {
         assert_eq!(one.len(), 1);
         assert!(one[0].verified);
         assert_eq!(exec.batches_run(), 1);
+    }
+
+    /// Delegates to [`NativeBackend`] but refuses concurrent workers, so
+    /// pipelined runs must degrade to the sequential loop.
+    struct NoCloneBackend(NativeBackend);
+
+    impl MapBackend for NoCloneBackend {
+        fn map_subfiles(
+            &mut self,
+            job: &JobSpec,
+            q: usize,
+            subs: &[usize],
+        ) -> Result<Vec<Vec<Vec<u8>>>> {
+            self.0.map_subfiles(job, q, subs)
+        }
+
+        fn reduce_group(&mut self, job: &JobSpec, payloads: &[&[u8]]) -> Result<Vec<f64>> {
+            self.0.reduce_group(job, payloads)
+        }
+
+        // worker_clone: default None.
+
+        fn name(&self) -> &'static str {
+            "native-noclone"
+        }
+    }
+
+    #[test]
+    fn pipelined_fallback_is_latched_and_bit_identical() {
+        let c = cluster(&[6, 7, 7]);
+        let mut job = JobSpec::terasort(12);
+        job.t = 8;
+        job.keys_per_file = 32;
+        let plan = JobBuilder::new(&c, &job).build().unwrap();
+        let seeds = [20u64, 21, 22];
+
+        let mut be = NativeBackend;
+        let mut reference = Executor::new(&plan).unwrap();
+        let expect = reference.run_batches(&mut be, &seeds).unwrap();
+        assert!(!reference.pipeline_degraded());
+
+        let mut noclone = NoCloneBackend(NativeBackend);
+        let mut exec = Executor::with_config(
+            &plan,
+            ExecConfig::default().mode(ExecMode::Pipelined).threads(2),
+        )
+        .unwrap();
+        let got = exec.run_batches(&mut noclone, &seeds).unwrap();
+        assert!(exec.pipeline_degraded(), "fallback must be observable");
+        for (a, b) in expect.iter().zip(&got) {
+            assert!(b.verified);
+            assert_eq!(a.payload_bytes, b.payload_bytes);
+            assert_eq!(a.shuffle_time_s.to_bits(), b.shuffle_time_s.to_bits());
+        }
+        assert_eq!(reference.net_report(), exec.net_report());
+    }
+
+    #[test]
+    fn config_shims_match_with_config() {
+        let c = cluster(&[6, 7, 7]);
+        let mut job = JobSpec::terasort(12);
+        job.t = 8;
+        job.keys_per_file = 32;
+        let plan = JobBuilder::new(&c, &job).build().unwrap();
+        let mut be = NativeBackend;
+
+        let mut via_new = Executor::new(&plan).unwrap();
+        let mut via_cfg = Executor::with_config(&plan, ExecConfig::default()).unwrap();
+        assert_eq!(via_new.mode(), via_cfg.mode());
+        assert_eq!(via_new.faults(), via_cfg.faults());
+        let a = via_new.run_batch(&mut be, 5).unwrap();
+        let b = via_cfg.run_batch(&mut be, 5).unwrap();
+        assert_eq!(a.shuffle_time_s.to_bits(), b.shuffle_time_s.to_bits());
+        assert_eq!(via_new.net_report(), via_cfg.net_report());
+
+        let via_mode = Executor::with_mode(&plan, ExecMode::Parallel).unwrap();
+        assert_eq!(via_mode.mode(), ExecMode::Parallel);
+        assert_eq!(via_mode.faults(), FaultSpec::default());
+    }
+
+    #[test]
+    fn fault_override_shifts_clocks_but_never_bytes() {
+        let c = cluster(&[4, 8, 12]);
+        let mut job = JobSpec::terasort(12);
+        job.t = 8;
+        job.keys_per_file = 32;
+        let plan = JobBuilder::new(&c, &job).placer("optimal-k3").build().unwrap();
+        let mut be = NativeBackend;
+
+        let mut base = Executor::new(&plan).unwrap();
+        let clean = base.run_batch(&mut be, 42).unwrap();
+        assert_eq!(base.net_report().straggler_delay_s, 0.0);
+
+        // Amplitude large enough that the jittered Map tail dwarfs the
+        // shuffle duration, so some send provably stalls.
+        let faults = FaultSpec::parse("straggle:seed=0xbe7c,amp=1000").unwrap();
+        let cfg = ExecConfig::default().faults(faults);
+        let mut slow = Executor::with_config(&plan, cfg).unwrap();
+        assert_eq!(slow.faults(), faults);
+        let jittered = slow.run_batch(&mut be, 42).unwrap();
+
+        assert!(jittered.verified);
+        assert_eq!(clean.payload_bytes, jittered.payload_bytes);
+        assert_eq!(clean.wire_bytes, jittered.wire_bytes);
+        assert_eq!(clean.messages, jittered.messages);
+        assert_eq!(clean.map_time_s.to_bits(), jittered.map_time_s.to_bits());
+        assert!(jittered.shuffle_time_s > clean.shuffle_time_s);
+        assert!(slow.net_report().straggler_delay_s > 0.0);
+
+        // The override is deterministic and mode-independent: a parallel
+        // run under the same config is bit-identical.
+        let mut slow_par =
+            Executor::with_config(&plan, cfg.mode(ExecMode::Parallel).threads(3)).unwrap();
+        let jittered_par = slow_par.run_batch(&mut be, 42).unwrap();
+        assert_eq!(
+            jittered.shuffle_time_s.to_bits(),
+            jittered_par.shuffle_time_s.to_bits()
+        );
+        assert_eq!(slow.net_report(), slow_par.net_report());
+
+        // Jitter survives the per-batch reset: a second batch meters the
+        // same delay.
+        let again = slow.run_batch(&mut be, 43).unwrap();
+        assert_eq!(
+            again.shuffle_time_s.to_bits(),
+            jittered.shuffle_time_s.to_bits()
+        );
     }
 
     #[test]

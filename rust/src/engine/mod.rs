@@ -22,5 +22,7 @@ pub mod plan;
 pub use backend::{MapBackend, NativeBackend, XlaBackend};
 pub use cache::{PlanCache, PlanKey};
 pub use engine::{Engine, RunReport};
-pub use executor::{ExecMode, Executor};
-pub use plan::{resolve_threads, shape_fingerprint, JobBuilder, Plan, PredictedLoads};
+pub use executor::{ExecConfig, ExecMode, Executor};
+pub use plan::{
+    resolve_threads, shape_fingerprint, straggler_ready, JobBuilder, Plan, PredictedLoads,
+};

@@ -20,7 +20,7 @@ use crate::coding::plan::ShufflePlan;
 use crate::error::{HetcdcError, Result};
 use crate::model::cluster::ClusterSpec;
 use crate::model::job::{JobSpec, ShuffleMode};
-use crate::net::Topology;
+use crate::net::{FaultSpec, Topology};
 use crate::placement::alloc::Allocation;
 use crate::placement::placer::{placer_by_name_cfg, Placer, PlacerConfig};
 use crate::util::json::Json;
@@ -41,6 +41,40 @@ pub fn resolve_threads(requested: usize) -> usize {
     }
 }
 
+/// Per-node straggler readiness times under the cluster's fault spec:
+/// seconds past the *nominal* Map barrier before each node may start
+/// sending in the Shuffle. `None` when no straggle is configured.
+///
+/// The shuffle clock's zero is the fault-free barrier
+/// `B0 = max_n base_t_n` (the exact `map_time_s` fold of
+/// [`PredictedLoads`], bit for bit — `map_time_s` stays nominal and all
+/// straggle delay appears as shuffle-schedule waits, so
+/// `map_time_s + shuffle_time_s` remains the job makespan). Node `n`
+/// with slowdown `s_n` finishes Mapping at `s_n · base_t_n` and is ready
+/// `max(0, s_n · base_t_n − B0)` seconds late. Deterministic in
+/// `(seed, node)` alone ([`FaultSpec::slowdowns`]), so every batch,
+/// thread count, and execution mode replays the same readiness times.
+pub fn straggler_ready(cluster: &ClusterSpec, alloc: &Allocation) -> Option<Vec<f64>> {
+    cluster.faults.straggle?;
+    let slow = cluster.faults.slowdowns(cluster.k());
+    let base: Vec<f64> = cluster
+        .nodes
+        .iter()
+        .enumerate()
+        .map(|(node, spec)| {
+            let files_equiv = alloc.node_count(node) as f64 / alloc.sp as f64;
+            files_equiv / spec.map_files_per_s.max(1e-9)
+        })
+        .collect();
+    let b0 = base.iter().fold(0f64, |acc, &t| acc.max(t));
+    Some(
+        base.iter()
+            .zip(&slow)
+            .map(|(&t, &s)| (s * t - b0).max(0.0))
+            .collect(),
+    )
+}
+
 /// Build-time predictions, exact for the deterministic simulator: a
 /// verified [`crate::engine::RunReport`] reproduces these numbers.
 #[derive(Clone, Debug, PartialEq)]
@@ -57,9 +91,16 @@ pub struct PredictedLoads {
     pub payload_bytes: u64,
     pub wire_bytes: u64,
     /// Map barrier time under the per-node compute rates (virtual s).
+    /// Always the **nominal** barrier: straggler slowdowns surface as
+    /// shuffle-schedule waits (`straggler_delay_s`), never here.
     pub map_time_s: f64,
-    /// Serialized broadcast time on the simulated network (virtual s).
+    /// Serialized broadcast time on the simulated network (virtual s),
+    /// including any straggler waits.
     pub shuffle_time_s: f64,
+    /// Time the shuffle schedule sat waiting for straggling senders
+    /// (see [`crate::net::NetReport::straggler_delay_s`]); 0 when the
+    /// cluster has no straggle spec, and omitted from JSON then.
+    pub straggler_delay_s: f64,
 }
 
 impl PredictedLoads {
@@ -73,6 +114,9 @@ impl PredictedLoads {
         let mut payload_bytes = 0u64;
         let mut wire_bytes = 0u64;
         let mut net = cluster.network()?;
+        if let Some(ready) = straggler_ready(cluster, alloc) {
+            net.set_straggle(&ready)?;
+        }
         // Same round-sectioned, group-flagged, flat-order metering pass
         // as the executor (same `round_start_flags` /
         // `group_start_masks` encoding — see engine/exec.rs), so
@@ -98,6 +142,7 @@ impl PredictedLoads {
             let files_equiv = alloc.node_count(node) as f64 / alloc.sp as f64;
             map_time_s = map_time_s.max(files_equiv / spec.map_files_per_s.max(1e-9));
         }
+        let report = net.report();
         Ok(PredictedLoads {
             load_equations: shuffle.load_equations(alloc),
             load_units: shuffle.load_units(),
@@ -107,7 +152,8 @@ impl PredictedLoads {
             payload_bytes,
             wire_bytes,
             map_time_s,
-            shuffle_time_s: net.report().elapsed_s,
+            shuffle_time_s: report.elapsed_s,
+            straggler_delay_s: report.straggler_delay_s,
         })
     }
 
@@ -122,6 +168,11 @@ impl PredictedLoads {
         m.insert("wire_bytes".into(), Json::Num(self.wire_bytes as f64));
         m.insert("map_time_s".into(), Json::Num(self.map_time_s));
         m.insert("shuffle_time_s".into(), Json::Num(self.shuffle_time_s));
+        // Omitted when zero: fault-free artifacts stay byte-identical to
+        // the pre-fault schema (same contract as the topology key).
+        if self.straggler_delay_s > 0.0 {
+            m.insert("straggler_delay_s".into(), Json::Num(self.straggler_delay_s));
+        }
         Json::Obj(m)
     }
 }
@@ -150,6 +201,11 @@ pub fn shape_fingerprint(cluster: &ClusterSpec, job: &JobSpec) -> u64 {
     // is omitted from serialized clusters for the same reason).
     if !cluster.topology.is_shared() {
         eat(cluster.topology.spec().as_bytes());
+    }
+    // Same omit-when-default contract for the fault model: fault-free
+    // shapes keep their historical fingerprint.
+    if !cluster.faults.is_none() {
+        eat(cluster.faults.spec().as_bytes());
     }
     eat(&[match job.workload {
         crate::model::job::WorkloadKind::WordCount => 1u8,
@@ -246,6 +302,13 @@ impl Plan {
         alloc.validate_le(&cluster.storage(), job.n_files)?;
         shuffle.validate(alloc.k, alloc.n_sub())?;
         let schedule = decoder::schedule_threaded(&alloc, &shuffle, threads)?;
+        // Degraded-decode gate: a plan whose cluster claims `repair:f=N`
+        // must actually tolerate every loss pattern up to N — built *and*
+        // deserialized artifacts prove it here (a tampered artifact that
+        // dropped a repair round fails typed).
+        if cluster.faults.repair > 0 {
+            decoder::verify_loss_patterns(&alloc, &shuffle, cluster.faults.repair)?;
+        }
         let predicted = PredictedLoads::compute(&cluster, &job, &alloc, &shuffle)?;
         let fingerprint = shape_fingerprint(&cluster, &job);
         Ok(Plan {
@@ -272,6 +335,7 @@ impl Plan {
         let cluster_eq = a.k() == cluster.k()
             && a.latency_ms.to_bits() == cluster.latency_ms.to_bits()
             && a.topology == cluster.topology
+            && a.faults == cluster.faults
             && a.nodes.iter().zip(&cluster.nodes).all(|(x, y)| {
                 x.storage == y.storage
                     && x.uplink_mbps.to_bits() == y.uplink_mbps.to_bits()
@@ -284,6 +348,64 @@ impl Plan {
             && b.t == job.t
             && b.vocab == job.vocab
             && b.keys_per_file == job.keys_per_file
+    }
+
+    /// Re-plan after losing `node` (dropout recovery): the surviving
+    /// nodes keep their subfile placement — each holder mask is
+    /// compacted by deleting the lost node's bit — and the shuffle is
+    /// re-coded for the K−1 survivors with this plan's own coder
+    /// (falling back to the any-K `pairing` coder when that coder
+    /// cannot serve the reduced shape). Typed
+    /// [`HetcdcError::InvalidPlacement`] when some subfile was held
+    /// *only* by the dropped node: recovery then needs re-placement
+    /// (data movement), which re-coding cannot express.
+    ///
+    /// Recovery cost is the delta between the two plans' predictions
+    /// (wire bytes, rounds, `map + shuffle` makespan); the bench suite's
+    /// dropout scenarios meter exactly that.
+    pub fn replan_without(&self, node: usize) -> Result<Plan> {
+        let k = self.cluster.k();
+        if node >= k {
+            return Err(HetcdcError::InvalidParams(format!(
+                "replan_without: node {node} out of range [0, {k})"
+            )));
+        }
+        if k <= 2 {
+            return Err(HetcdcError::InvalidParams(
+                "replan_without needs at least 3 nodes to lose one".into(),
+            ));
+        }
+        let mut cluster = self.cluster.clone();
+        cluster.nodes.remove(node);
+        cluster.topology.validate(cluster.k())?;
+        let low = (1u64 << node) - 1;
+        let mut holders = Vec::with_capacity(self.alloc.holders.len());
+        for (sub, &h) in self.alloc.holders.iter().enumerate() {
+            let h = h as u64;
+            let compacted = ((h & low) | ((h >> (node + 1)) << node)) as u32;
+            if compacted == 0 {
+                return Err(HetcdcError::InvalidPlacement(format!(
+                    "subfile {sub} was held only by dropped node {node}; \
+                     recovery needs re-placement, not re-coding"
+                )));
+            }
+            holders.push(compacted);
+        }
+        let alloc = Allocation::new(cluster.k(), self.alloc.sp, holders);
+        let build = |coder: &str| {
+            JobBuilder::new(&cluster, &self.job)
+                .custom_allocation(alloc.clone())
+                .coder(coder)
+                .mode(self.mode)
+                .build()
+        };
+        match build(&self.coder) {
+            Ok(plan) => Ok(plan),
+            // The original coder may be shape-bound (K=3-only, grid
+            // designs); the greedy pairing coder serves any allocation.
+            Err(_) if self.coder != "pairing" => build("pairing"),
+            Err(e) => Err(e),
+        }
     }
 
     pub fn to_json(&self) -> Json {
@@ -402,6 +524,8 @@ pub struct JobBuilder<'a> {
     lp_cap: Option<usize>,
     /// Network-topology override applied to the cluster before building.
     topology: Option<Topology>,
+    /// Fault-model override applied to the cluster before building.
+    faults: Option<FaultSpec>,
 }
 
 impl<'a> JobBuilder<'a> {
@@ -416,6 +540,7 @@ impl<'a> JobBuilder<'a> {
             threads: 1,
             lp_cap: None,
             topology: None,
+            faults: None,
         }
     }
 
@@ -479,6 +604,20 @@ impl<'a> JobBuilder<'a> {
         self
     }
 
+    /// Override the cluster's [`FaultSpec`] for this build (CLI
+    /// `--faults`). A straggle clause changes the predicted shuffle
+    /// *schedule* (`straggler_delay_s`, makespan) but never the
+    /// placement or the byte/round counts; a repair clause appends
+    /// verified repair rounds to the shuffle IR
+    /// ([`crate::coding::plan::with_repair_rounds`]), which does add
+    /// bytes and rounds — that is the recovery budget being bought. The
+    /// fault spec is part of the plan's shape: fingerprint and
+    /// [`crate::engine::PlanCache`] key include it.
+    pub fn faults(mut self, faults: FaultSpec) -> Self {
+        self.faults = Some(faults);
+        self
+    }
+
     /// Place, code, verify, predict — everything that does not depend on
     /// the data batch.
     pub fn build(self) -> Result<Plan> {
@@ -486,20 +625,25 @@ impl<'a> JobBuilder<'a> {
         // and re-checks job and allocation; the early checks here exist so
         // placers and coders never observe a malformed job (n_files = 0
         // would divide-by-zero in the homogeneous placer) or allocation.
-        // Resolve the topology override up front so everything — the
-        // network validation inside prediction, the serialized cluster,
-        // the fingerprint — sees one consistent cluster spec.
-        let with_topology;
-        let cluster: &ClusterSpec = match self.topology {
-            Some(t) => {
-                let mut c = self.cluster.clone();
+        // Resolve the topology/fault overrides up front so everything —
+        // the network validation inside prediction, the serialized
+        // cluster, the fingerprint — sees one consistent cluster spec.
+        let overridden;
+        let cluster: &ClusterSpec = if self.topology.is_some() || self.faults.is_some() {
+            let mut c = self.cluster.clone();
+            if let Some(t) = self.topology {
                 c.topology = t;
-                with_topology = c;
-                &with_topology
             }
-            None => self.cluster,
+            if let Some(f) = self.faults {
+                c.faults = f;
+            }
+            overridden = c;
+            &overridden
+        } else {
+            self.cluster
         };
         cluster.topology.validate(cluster.k())?;
+        cluster.faults.validate(cluster.k())?;
         self.job.validate(cluster.k())?;
         let threads = resolve_threads(self.threads);
         let cfg = PlacerConfig {
@@ -528,7 +672,17 @@ impl<'a> JobBuilder<'a> {
             ShuffleMode::Coded => self.coder.unwrap_or_else(|| default_coder.to_string()),
         };
         let coder = coder_by_name(&coder_name)?;
-        let shuffle = coder.plan_threaded(cluster, self.job, &alloc, threads)?;
+        let mut shuffle = coder.plan_threaded(cluster, self.job, &alloc, threads)?;
+        // Degraded-decode mode: append repair rounds so the plan
+        // tolerates `repair:f=N` lost broadcasts; `Plan::assemble`
+        // then proves every loss pattern up to N still decodes.
+        if cluster.faults.repair > 0 {
+            shuffle = crate::coding::plan::with_repair_rounds(
+                &shuffle,
+                &alloc,
+                cluster.faults.repair,
+            )?;
+        }
         Plan::assemble_threaded(
             cluster.clone(),
             self.job.clone(),
@@ -739,6 +893,141 @@ mod tests {
             Err(HetcdcError::PlanMismatch(_)) | Err(HetcdcError::Undecodable { .. }) => {}
             other => panic!("expected typed rejection, got {other:?}"),
         }
+    }
+
+    #[test]
+    fn straggle_build_changes_schedule_fields_only() {
+        let c = cluster(&[6, 7, 7]);
+        let job = JobSpec::terasort(12);
+        let base = JobBuilder::new(&c, &job).placer("optimal-k3").build().unwrap();
+        // Amplitude large enough that the jittered Map tail dwarfs the
+        // shuffle duration, so some send provably stalls.
+        let faults = FaultSpec::parse("straggle:seed=0xbe7c,amp=1000").unwrap();
+        let slow = JobBuilder::new(&c, &job)
+            .placer("optimal-k3")
+            .faults(faults)
+            .build()
+            .unwrap();
+        // Byte/message/round counts and the nominal Map barrier are
+        // untouched; only the shuffle schedule stretches.
+        assert_eq!(slow.predicted.payload_bytes, base.predicted.payload_bytes);
+        assert_eq!(slow.predicted.wire_bytes, base.predicted.wire_bytes);
+        assert_eq!(slow.predicted.messages, base.predicted.messages);
+        assert_eq!(slow.predicted.rounds, base.predicted.rounds);
+        assert_eq!(slow.predicted.map_time_s.to_bits(), base.predicted.map_time_s.to_bits());
+        assert!(slow.predicted.straggler_delay_s > 0.0);
+        assert!(slow.predicted.shuffle_time_s > base.predicted.shuffle_time_s);
+        assert_eq!(base.predicted.straggler_delay_s, 0.0);
+        // The fault spec is part of the shape.
+        assert_ne!(slow.fingerprint, base.fingerprint);
+        assert!(!slow.shape_matches(&c, &job));
+        assert!(base.shape_matches(&c, &job));
+        // Fault-free artifacts never carry the fault keys.
+        assert!(!base.to_json_string().contains("straggler_delay_s"));
+        assert!(!base.to_json_string().contains("faults"));
+        assert!(slow.to_json_string().contains("straggler_delay_s"));
+        // Fault plans roundtrip (re-validated, predictions recomputed).
+        let back = Plan::from_json_str(&slow.to_json_string()).unwrap();
+        assert_eq!(back.predicted, slow.predicted);
+        assert_eq!(back.fingerprint, slow.fingerprint);
+    }
+
+    #[test]
+    fn straggler_ready_is_zero_at_the_barrier_and_scales_past_it() {
+        let mut c = cluster(&[6, 7, 7]);
+        let job = JobSpec::terasort(12);
+        let plan = JobBuilder::new(&c, &job).placer("optimal-k3").build().unwrap();
+        assert!(straggler_ready(&c, &plan.alloc).is_none());
+        c.faults = FaultSpec::parse("straggle:seed=0x1,amp=1.5").unwrap();
+        let ready = straggler_ready(&c, &plan.alloc).unwrap();
+        assert_eq!(ready.len(), 3);
+        let slow = c.faults.slowdowns(3);
+        for (node, &r) in ready.iter().enumerate() {
+            assert!(r >= 0.0);
+            let files = plan.alloc.node_count(node) as f64 / plan.alloc.sp as f64;
+            let base = files / c.nodes[node].map_files_per_s.max(1e-9);
+            let b0 = plan.predicted.map_time_s;
+            assert_eq!(r.to_bits(), (slow[node] * base - b0).max(0.0).to_bits());
+        }
+        // amp=0 jitters nothing: every node still makes the barrier.
+        c.faults = FaultSpec::parse("straggle:seed=0x1,amp=0").unwrap();
+        assert_eq!(straggler_ready(&c, &plan.alloc).unwrap(), vec![0.0; 3]);
+    }
+
+    #[test]
+    fn repair_build_appends_verified_rounds() {
+        let c = cluster(&[6, 7, 7]);
+        let job = JobSpec::terasort(12);
+        let base = JobBuilder::new(&c, &job).placer("optimal-k3").build().unwrap();
+        let plan = JobBuilder::new(&c, &job)
+            .placer("optimal-k3")
+            .faults(FaultSpec::parse("repair:f=1").unwrap())
+            .build()
+            .unwrap();
+        assert!(plan.shuffle.n_broadcasts() > base.shuffle.n_broadcasts());
+        assert_eq!(plan.shuffle.round_count(), base.shuffle.round_count() + 1);
+        assert!(plan.predicted.wire_bytes > base.predicted.wire_bytes);
+        // The artifact roundtrips — the loss-pattern gate re-proves it.
+        let back = Plan::from_json_str(&plan.to_json_string()).unwrap();
+        assert_eq!(back.shuffle, plan.shuffle);
+        // Tampering a repair round away fails the gate typed.
+        let mut broken = plan.clone();
+        broken.shuffle.pop_broadcast();
+        assert!(Plan::from_json_str(&broken.to_json_string()).is_err());
+    }
+
+    #[test]
+    fn replan_without_drops_a_node_and_meters_recovery() {
+        let c = cluster(&[3, 4, 5, 6]);
+        let job = JobSpec::terasort(8);
+        let plan = JobBuilder::new(&c, &job).build().unwrap();
+        for node in 0..4 {
+            let re = match plan.replan_without(node) {
+                Ok(re) => re,
+                // A node that solely held some subfile is a typed error.
+                Err(HetcdcError::InvalidPlacement(_)) => continue,
+                Err(e) => panic!("unexpected: {e}"),
+            };
+            assert_eq!(re.cluster.k(), 3);
+            assert_eq!(re.alloc.n_sub(), plan.alloc.n_sub());
+            // Survivors keep their subfile sets: mask bits shift down.
+            for (sub, &h) in plan.alloc.holders.iter().enumerate() {
+                for old in 0..4usize {
+                    if old == node {
+                        continue;
+                    }
+                    let new = if old > node { old - 1 } else { old };
+                    assert_eq!(
+                        h & (1 << old) != 0,
+                        re.alloc.holders[sub] & (1 << new) != 0,
+                        "node {old} subfile {sub}"
+                    );
+                }
+            }
+            // The replanned artifact is fully valid on its own.
+            assert!(Plan::from_json_str(&re.to_json_string()).is_ok());
+        }
+        assert!(plan.replan_without(9).is_err());
+    }
+
+    #[test]
+    fn replan_without_rejects_solely_held_subfiles() {
+        // Hand-build an allocation where node 0 is the only holder of
+        // subfile 0.
+        let c = cluster(&[6, 7, 7]);
+        let job = JobSpec::terasort(12);
+        let plan = JobBuilder::new(&c, &job).placer("optimal-k3").build().unwrap();
+        let solely = plan
+            .alloc
+            .holders
+            .iter()
+            .position(|&h| h.count_ones() == 1)
+            .expect("the K=3 optimal placement has single-held subfiles");
+        let node = plan.alloc.holders[solely].trailing_zeros() as usize;
+        assert!(matches!(
+            plan.replan_without(node),
+            Err(HetcdcError::InvalidPlacement(_))
+        ));
     }
 
     #[test]

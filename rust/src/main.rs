@@ -19,16 +19,17 @@
 
 use hetcdc::bench::{self, BaselineStatus, Bench};
 use hetcdc::engine::{
-    ExecMode, Executor, JobBuilder, MapBackend, NativeBackend, Plan, RunReport, XlaBackend,
+    ExecConfig, ExecMode, Executor, JobBuilder, MapBackend, NativeBackend, Plan, RunReport,
+    XlaBackend,
 };
 use hetcdc::model::cluster::ClusterSpec;
 use hetcdc::model::job::{JobSpec, ShuffleMode};
-use hetcdc::net::Topology;
+use hetcdc::net::{FaultSpec, Topology};
 use hetcdc::placement::{k3, lp_general};
 use hetcdc::runtime::Runtime;
 use hetcdc::theory::params::{Params3, ParamsK};
 use hetcdc::theory::{converse, homogeneous as th_hom, load};
-use hetcdc::util::cli::{usage, ArgSpec, Args};
+use hetcdc::util::cli::{common, usage, ArgSpec, Args};
 use hetcdc::HetcdcError;
 
 fn main() {
@@ -67,14 +68,14 @@ fn print_help() {
          \x20 lp        --storage M1,..,MK --n N     §V LP for general K\n\
          \x20 plan      --workload wordcount|terasort [--storage ... | --config ...]\n\
          \x20           [--placement NAME] [--coder NAME] [--out plan.json]\n\
-         \x20           [--threads N] [--lp-cap N] [--topology SPEC]\n\
+         \x20           [--threads N] [--lp-cap N] [--topology SPEC] [--faults SPEC]\n\
          \x20           build + verify an execution plan (threaded build), emit JSON\n\
          \x20 run       --workload wordcount|terasort [--backend native|xla]\n\
          \x20           [--config cluster.json | --storage ...] [--mode coded|uncoded]\n\
          \x20           [--plan plan.json] [--batches B] [--threads N] [--pipeline]\n\
-         \x20           [--lp-cap N] [--topology SPEC]\n\
+         \x20           [--lp-cap N] [--topology SPEC] [--faults SPEC]\n\
          \x20 bench-json [--out FILE] [--baseline FILE] [--tolerance-pct P] [--check-armed]\n\
-         \x20           [--topology SPEC]\n\
+         \x20           [--topology SPEC] [--faults SPEC]\n\
          \x20           deterministic shuffle bench suite -> BENCH_shuffle.json\n\
          \x20 sweep     --n N [--max-m M]            L* table over storage grid\n\
          \x20 verify    [--n N]                      full self-check (theory, coding, LP)\n\
@@ -296,6 +297,16 @@ fn parse_cluster_job(args: &Args) -> Result<(ClusterSpec, JobSpec), HetcdcError>
         }
         None => cluster,
     };
+    // --faults mirrors --topology: it overrides the cluster's fault
+    // model and is validated against K before any planning work.
+    let cluster = match args.get("faults") {
+        Some(spec) => {
+            let f = FaultSpec::parse(spec)?;
+            f.validate(cluster.k())?;
+            cluster.with_faults(f)
+        }
+        None => cluster,
+    };
     let job = match args.get("workload") {
         Some("wordcount") => JobSpec::wordcount(n),
         Some("terasort") => JobSpec::terasort(n),
@@ -315,14 +326,15 @@ fn cmd_plan(argv: &[String]) -> i32 {
         ArgSpec { name: "n", help: "number of files N", takes_value: true, default: Some("12") },
         ArgSpec { name: "storage", help: "per-node storage (ignored with --config)", takes_value: true, default: Some("6,7,7") },
         ArgSpec { name: "config", help: "cluster JSON config path", takes_value: true, default: None },
-        ArgSpec { name: "placement", help: "auto | optimal-k3 | lp-general | homogeneous | oblivious | combinatorial", takes_value: true, default: Some("auto") },
-        ArgSpec { name: "coder", help: "pairing | greedy | multicast | memshare | combinatorial (default: placer's)", takes_value: true, default: None },
+        common::PLACEMENT,
+        common::CODER,
         ArgSpec { name: "mode", help: "coded | uncoded", takes_value: true, default: Some("coded") },
         ArgSpec { name: "out", help: "write plan JSON here (default: stdout)", takes_value: true, default: None },
-        ArgSpec { name: "threads", help: "build the plan with N worker threads AND certify sharded execution (0 = auto; 1 = serial build, no certification; artifacts are byte-identical at every N)", takes_value: true, default: Some("1") },
-        ArgSpec { name: "lp-cap", help: "max perfect collections per §V LP subsystem (Remark 7 cap; default 4096)", takes_value: true, default: None },
-        ArgSpec { name: "topology", help: "network topology: shared | flat | rack:q=R,oversub=S | fat-tree:q=R (overrides the cluster's; default shared medium)", takes_value: true, default: None },
-        ArgSpec { name: "help", help: "show usage", takes_value: false, default: None },
+        common::THREADS,
+        common::LP_CAP,
+        common::TOPOLOGY,
+        common::FAULTS,
+        common::HELP,
     ];
     let args = match Args::parse(argv, &specs) {
         Ok(a) => a,
@@ -423,10 +435,12 @@ fn print_report(report: &RunReport, json_out: bool) -> bool {
 /// produce bit-identical reports and network accounting.
 fn certify_parallel(plan: &Plan, threads: usize) -> Result<(), HetcdcError> {
     let mut be = NativeBackend;
-    let mut serial = Executor::new(plan)?;
+    let mut serial = Executor::with_config(plan, ExecConfig::default())?;
     let a = serial.run_batch(&mut be, plan.job.seed)?;
-    let mut parallel = Executor::with_mode(plan, ExecMode::Parallel)?;
-    parallel.set_threads(threads);
+    let mut parallel = Executor::with_config(
+        plan,
+        ExecConfig::default().mode(ExecMode::Parallel).threads(threads),
+    )?;
     let b = parallel.run_batch(&mut be, plan.job.seed)?;
     if !a.verified || !b.verified {
         return Err(HetcdcError::Backend("certification batch failed verification".into()));
@@ -465,8 +479,11 @@ fn run_batches(
     } else {
         ExecMode::Parallel
     };
-    let mut exec = Executor::with_mode(plan, mode)?;
-    exec.set_threads(threads);
+    // Single construction path: cfg.faults stays None, so the executor
+    // meters under the plan's own fault spec (the CLI's --faults was
+    // already resolved into the cluster at plan-build time).
+    let mut exec =
+        Executor::with_config(plan, ExecConfig::default().mode(mode).threads(threads))?;
     if mode == ExecMode::Pipelined {
         // The pipeline consumes the whole seed list (batch i+1 Maps while
         // batch i shuffles), so reports arrive together at the end.
@@ -504,17 +521,18 @@ fn cmd_run(argv: &[String]) -> i32 {
         ArgSpec { name: "config", help: "cluster JSON config path", takes_value: true, default: None },
         ArgSpec { name: "plan", help: "execute this serialized plan (skips inline planning)", takes_value: true, default: None },
         ArgSpec { name: "batches", help: "data batches to run against the plan", takes_value: true, default: Some("1") },
-        ArgSpec { name: "threads", help: "worker threads for BOTH plan build and execution: 1 = serial; N > 1 = sharded; 0 = auto (execution falls back to 1 when undetectable; results identical at every N)", takes_value: true, default: Some("1") },
+        common::THREADS,
         ArgSpec { name: "pipeline", help: "overlap Map of batch i+1 with Shuffle of batch i (bit-identical results; needs --batches >= 2 to overlap)", takes_value: false, default: None },
         ArgSpec { name: "mode", help: "coded | uncoded | both", takes_value: true, default: Some("both") },
         ArgSpec { name: "backend", help: "native | xla", takes_value: true, default: Some("native") },
-        ArgSpec { name: "placement", help: "auto | optimal-k3 | lp-general | homogeneous | oblivious | combinatorial", takes_value: true, default: Some("auto") },
-        ArgSpec { name: "coder", help: "pairing | greedy | multicast | memshare | combinatorial (default: placer's)", takes_value: true, default: None },
-        ArgSpec { name: "lp-cap", help: "max perfect collections per §V LP subsystem (Remark 7 cap; default 4096)", takes_value: true, default: None },
-        ArgSpec { name: "topology", help: "network topology: shared | flat | rack:q=R,oversub=S | fat-tree:q=R (overrides the cluster's; default shared medium)", takes_value: true, default: None },
+        common::PLACEMENT,
+        common::CODER,
+        common::LP_CAP,
+        common::TOPOLOGY,
+        common::FAULTS,
         ArgSpec { name: "artifacts", help: "artifact dir for --backend xla", takes_value: true, default: None },
         ArgSpec { name: "json", help: "emit machine-readable JSON reports", takes_value: false, default: None },
-        ArgSpec { name: "help", help: "show usage", takes_value: false, default: None },
+        common::HELP,
     ];
     let args = match Args::parse(argv, &specs) {
         Ok(a) => a,
@@ -553,7 +571,7 @@ fn cmd_run(argv: &[String]) -> i32 {
         // no conflicting flags rather than silently ignoring them.
         for conflict in [
             "workload", "n", "storage", "config", "mode", "placement", "coder", "lp-cap",
-            "topology",
+            "topology", "faults",
         ] {
             if args.provided(conflict) {
                 return fail(format!(
@@ -658,8 +676,9 @@ fn cmd_bench_json(argv: &[String]) -> i32 {
         ArgSpec { name: "threads", help: "worker threads for the parallel half of each scenario (0 = auto)", takes_value: true, default: Some("0") },
         ArgSpec { name: "timing", help: "also record wall-clock timings (nondeterministic; never gated)", takes_value: false, default: None },
         ArgSpec { name: "check-armed", help: "only check that --baseline is a blessed (non-PENDING) artifact: exit 0 if armed, 3 if still the placeholder, 1 on a malformed baseline — runs no benchmarks", takes_value: false, default: None },
-        ArgSpec { name: "topology", help: "override every scenario's network topology: shared | flat | rack:q=R,oversub=S | fat-tree:q=R (exploration only; the baseline gate is skipped)", takes_value: true, default: None },
-        ArgSpec { name: "help", help: "show usage", takes_value: false, default: None },
+        common::TOPOLOGY,
+        common::FAULTS,
+        common::HELP,
     ];
     let args = match Args::parse(argv, &specs) {
         Ok(a) => a,
@@ -722,8 +741,9 @@ fn cmd_bench_json(argv: &[String]) -> i32 {
     };
     let timing = args.flag("timing").then_some(&timing_cfg);
 
-    // --topology: exploration mode. Every scenario runs on the given
-    // fabric; the resulting artifact is not comparable to the committed
+    // --topology / --faults: exploration modes. Every scenario runs on
+    // the given fabric / under the given fault spec; the resulting
+    // artifact is not comparable to the committed fault-free
     // shared-medium baseline, so the gate is skipped with a warning.
     let topology_override = match args.get("topology") {
         Some(spec) => match Topology::parse(spec) {
@@ -732,7 +752,14 @@ fn cmd_bench_json(argv: &[String]) -> i32 {
         },
         None => None,
     };
-    let report = match bench::run_suite_with(threads, timing, topology_override) {
+    let faults_override = match args.get("faults") {
+        Some(spec) => match FaultSpec::parse(spec) {
+            Ok(f) => Some(f),
+            Err(e) => return fail(e),
+        },
+        None => None,
+    };
+    let report = match bench::run_suite_with(threads, timing, topology_override, faults_override) {
         Ok(r) => r,
         Err(e) => return fail(e),
     };
@@ -778,6 +805,14 @@ fn cmd_bench_json(argv: &[String]) -> i32 {
                 "WARNING: baseline gate SKIPPED — the suite ran under --topology {} and is \
                  not comparable to the committed shared-medium baseline '{path}'",
                 t.spec()
+            );
+            return 0;
+        }
+        if let Some(f) = faults_override {
+            eprintln!(
+                "WARNING: baseline gate SKIPPED — the suite ran under --faults {} and is \
+                 not comparable to the committed fault-free baseline '{path}'",
+                f.spec()
             );
             return 0;
         }

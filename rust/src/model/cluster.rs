@@ -11,7 +11,7 @@
 //! ```
 
 use crate::error::{HetcdcError, Result};
-use crate::net::{BroadcastNet, Topology};
+use crate::net::{BroadcastNet, FaultSpec, Topology};
 use crate::theory::params::{Params3, ParamsK};
 use crate::util::json::Json;
 use std::collections::BTreeMap;
@@ -36,6 +36,10 @@ pub struct ClusterSpec {
     /// paper's single broadcast medium, the default; switched variants
     /// change the simulated schedule, never the byte/round counts).
     pub topology: Topology,
+    /// Fault model the cluster is planned and metered under
+    /// ([`FaultSpec::default`] = no faults, the implicit state of every
+    /// pre-fault artifact; the JSON key is omitted in that case).
+    pub faults: FaultSpec,
 }
 
 impl ClusterSpec {
@@ -80,6 +84,12 @@ impl ClusterSpec {
         self
     }
 
+    /// Builder-style fault-model override.
+    pub fn with_faults(mut self, faults: FaultSpec) -> Self {
+        self.faults = faults;
+        self
+    }
+
     /// A 3-node heterogeneous cluster shaped like mixed EC2 instances,
     /// sized for the paper's Fig 3 example (storage 6, 7, 7).
     pub fn ec2_like_3node(n_files_hint: u64) -> Self {
@@ -109,6 +119,7 @@ impl ClusterSpec {
             ],
             latency_ms: 0.5,
             topology: Topology::Shared,
+            faults: FaultSpec::default(),
         }
     }
 
@@ -124,6 +135,7 @@ impl ClusterSpec {
                 .collect(),
             latency_ms: 0.5,
             topology: Topology::Shared,
+            faults: FaultSpec::default(),
         }
     }
 
@@ -147,6 +159,10 @@ impl ClusterSpec {
         // byte-identical, and older readers never see the key.
         if !self.topology.is_shared() {
             m.insert("topology".into(), self.topology.to_json());
+        }
+        // Same contract for faults: omitted when none are configured.
+        if !self.faults.is_none() {
+            m.insert("faults".into(), self.faults.to_json());
         }
         Json::Obj(m)
     }
@@ -187,12 +203,18 @@ impl ClusterSpec {
             Some(t) => Topology::from_json(t)?,
             None => Topology::Shared,
         };
+        let faults = match j.get("faults") {
+            Some(f) => FaultSpec::from_json(f)?,
+            None => FaultSpec::default(),
+        };
         let spec = ClusterSpec {
             nodes: parsed?,
             latency_ms: j.get("latency_ms").and_then(|v| v.as_f64()).unwrap_or(0.5),
             topology,
+            faults,
         };
         spec.topology.validate(spec.k())?;
+        spec.faults.validate(spec.k())?;
         Ok(spec)
     }
 
@@ -269,6 +291,28 @@ mod tests {
         let mut j = rack.to_json();
         if let Json::Obj(m) = &mut j {
             m.insert("topology".into(), Json::Str("rack:q=9".into()));
+        }
+        assert!(matches!(
+            ClusterSpec::from_json(&j),
+            Err(HetcdcError::InvalidParams(_))
+        ));
+    }
+
+    #[test]
+    fn faults_roundtrip_and_none_is_omitted() {
+        let c = ClusterSpec::ec2_like_3node(12);
+        assert!(!c.to_json().to_string_pretty().contains("faults"));
+        let faulty = c
+            .clone()
+            .with_faults(FaultSpec::parse("straggle:seed=0xbe7c,amp=0.5;repair:f=1").unwrap());
+        let text = faulty.to_json().to_string_pretty();
+        assert!(text.contains("straggle:seed=0xbe7c,amp=0.5"));
+        let back = ClusterSpec::from_json_str(&text).unwrap();
+        assert_eq!(faulty, back);
+        // An invalid fault spec is a typed error.
+        let mut j = faulty.to_json();
+        if let Json::Obj(m) = &mut j {
+            m.insert("faults".into(), Json::Str("repair:f=99".into()));
         }
         assert!(matches!(
             ClusterSpec::from_json(&j),

@@ -1,0 +1,306 @@
+//! Fault-injection specs: stragglers, broadcast-loss repair, dropout.
+//!
+//! [`FaultSpec`] names the faults a plan is built (and metered) under.
+//! It is parsed from / rendered to the CLI `--faults` spec string the
+//! same way [`crate::net::Topology`] handles `--topology`: a canonical
+//! string that feeds cache keys and plan fingerprints, omitted from
+//! serialized cluster JSON when no fault is configured so every
+//! fault-free artifact stays byte-identical to the pre-fault era.
+//!
+//! Two orthogonal clauses:
+//!
+//! - `straggle:seed=S,amp=A` — deterministic per-node compute-rate
+//!   jitter. Node `i` Maps `slowdown(i) = 1 + A·u_i` times slower than
+//!   its nominal rate, where `u_i ∈ [0,1)` is drawn from a fixed-seed
+//!   generator keyed by `(S, i)` alone — independent of K, batch, or
+//!   thread count, so every executor mode sees the same jitter. The
+//!   slowdown delays the node's *sends* in the shuffle (it joins the
+//!   schedule late); metering stays one plan-order pass, see
+//!   [`crate::net::sim`].
+//! - `repair:f=N` — degraded-decode mode: the plan must tolerate any
+//!   `N` lost broadcasts. The coder's shuffle IR gains appended repair
+//!   rounds and the worklist decoder proves every loss pattern up to
+//!   `N` still recovers all IVs at build time, see
+//!   [`crate::coding::plan::with_repair_rounds`].
+//!
+//! Dropout (a node lost *after* planning) is not a spec clause: it is
+//! handled by re-planning, see `Plan::replan_without`.
+
+use crate::error::{HetcdcError, Result};
+use crate::util::json::Json;
+use crate::util::rng::Xoshiro256;
+
+fn invalid(msg: impl Into<String>) -> HetcdcError {
+    HetcdcError::InvalidParams(msg.into())
+}
+
+/// Largest supported loss tolerance: build-time verification enumerates
+/// every loss pattern of up to `f` broadcasts, which is combinatorial.
+pub const MAX_REPAIR_F: usize = 2;
+
+/// Deterministic per-node compute-rate jitter (the straggler model).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Straggle {
+    /// Seed of the per-node jitter stream.
+    pub seed: u64,
+    /// Jitter amplitude: node `i` is slowed by a factor in `[1, 1+amp)`.
+    pub amp: f64,
+}
+
+/// Fault model a plan is built and metered under. `FaultSpec::default()`
+/// (no faults) is the implicit state of every pre-fault artifact.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct FaultSpec {
+    /// Straggler jitter; `None` = every node Maps at its nominal rate.
+    pub straggle: Option<Straggle>,
+    /// Tolerated lost broadcasts (degraded decode); 0 = none.
+    pub repair: usize,
+}
+
+impl FaultSpec {
+    /// True when no fault is configured (the default everywhere).
+    pub fn is_none(&self) -> bool {
+        self.straggle.is_none() && self.repair == 0
+    }
+
+    /// Parse a CLI/JSON spec string: `;`-separated clauses out of
+    /// `straggle:seed=S,amp=A` and `repair:f=N` (`none` for the empty
+    /// spec). Seeds accept decimal or `0x` hex.
+    pub fn parse(spec: &str) -> Result<FaultSpec> {
+        let spec = spec.trim();
+        if spec.is_empty() || spec == "none" {
+            return Ok(FaultSpec::default());
+        }
+        let mut out = FaultSpec::default();
+        for clause in spec.split(';').filter(|c| !c.trim().is_empty()) {
+            let clause = clause.trim();
+            let (head, body) = clause
+                .split_once(':')
+                .ok_or_else(|| invalid(format!("unknown fault clause '{clause}'")))?;
+            match head.trim() {
+                "straggle" => {
+                    if out.straggle.is_some() {
+                        return Err(invalid("duplicate straggle clause"));
+                    }
+                    out.straggle = Some(parse_straggle(body)?);
+                }
+                "repair" => {
+                    if out.repair != 0 {
+                        return Err(invalid("duplicate repair clause"));
+                    }
+                    out.repair = parse_repair(body)?;
+                }
+                h => return Err(invalid(format!("unknown fault clause '{h}'"))),
+            }
+        }
+        Ok(out)
+    }
+
+    /// Canonical spec string: `parse(spec()) == self`, and equal specs
+    /// render equal strings (used in cache keys and fingerprints).
+    /// The empty spec renders as `none`.
+    pub fn spec(&self) -> String {
+        let mut clauses = Vec::new();
+        if let Some(s) = &self.straggle {
+            clauses.push(format!("straggle:seed={:#x},amp={}", s.seed, s.amp));
+        }
+        if self.repair != 0 {
+            clauses.push(format!("repair:f={}", self.repair));
+        }
+        if clauses.is_empty() {
+            "none".into()
+        } else {
+            clauses.join(";")
+        }
+    }
+
+    /// Validate against a cluster of `k` nodes.
+    pub fn validate(&self, _k: usize) -> Result<()> {
+        if let Some(s) = &self.straggle {
+            if !(s.amp.is_finite() && s.amp >= 0.0) {
+                return Err(invalid(format!(
+                    "straggle amplitude must be finite and >= 0, got {}",
+                    s.amp
+                )));
+            }
+        }
+        if self.repair > MAX_REPAIR_F {
+            return Err(invalid(format!(
+                "repair f={} exceeds the supported maximum {MAX_REPAIR_F} \
+                 (loss-pattern verification is combinatorial in f)",
+                self.repair
+            )));
+        }
+        Ok(())
+    }
+
+    /// Per-node Map slowdown factors (>= 1), length `k`. Node `i`'s
+    /// factor depends only on `(seed, i)`: stable under K growth, batch
+    /// index, and thread count. All ones when no straggle is configured.
+    pub fn slowdowns(&self, k: usize) -> Vec<f64> {
+        match &self.straggle {
+            None => vec![1.0; k],
+            Some(s) => (0..k)
+                .map(|i| {
+                    let node_seed =
+                        s.seed.wrapping_add((i as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15));
+                    1.0 + s.amp * Xoshiro256::seed_from_u64(node_seed).f64_unit()
+                })
+                .collect(),
+        }
+    }
+
+    /// JSON form used inside serialized cluster specs (the spec string).
+    pub fn to_json(&self) -> Json {
+        Json::Str(self.spec())
+    }
+
+    pub fn from_json(j: &Json) -> Result<FaultSpec> {
+        j.as_str()
+            .ok_or_else(|| HetcdcError::Json("faults must be a spec string".into()))
+            .and_then(FaultSpec::parse)
+    }
+}
+
+fn parse_straggle(body: &str) -> Result<Straggle> {
+    let mut seed: Option<u64> = None;
+    let mut amp: Option<f64> = None;
+    for pair in body.split(',').filter(|p| !p.trim().is_empty()) {
+        let (key, val) = pair
+            .split_once('=')
+            .ok_or_else(|| invalid(format!("straggle option '{pair}' is not key=value")))?;
+        match (key.trim(), val.trim()) {
+            ("seed", v) => {
+                let parsed = match v.strip_prefix("0x").or_else(|| v.strip_prefix("0X")) {
+                    Some(hex) => u64::from_str_radix(hex, 16),
+                    None => v.parse::<u64>(),
+                };
+                seed = Some(parsed.map_err(|_| {
+                    invalid(format!("straggle seed '{v}' is not an integer"))
+                })?);
+            }
+            ("amp", v) => {
+                amp = Some(v.parse::<f64>().map_err(|_| {
+                    invalid(format!("straggle amplitude '{v}' is not a number"))
+                })?);
+            }
+            (k, _) => return Err(invalid(format!("unknown straggle option '{k}'"))),
+        }
+    }
+    Ok(Straggle {
+        seed: seed.ok_or_else(|| invalid("straggle needs seed=<int>"))?,
+        amp: amp.ok_or_else(|| invalid("straggle needs amp=<number>"))?,
+    })
+}
+
+fn parse_repair(body: &str) -> Result<usize> {
+    let mut f: Option<usize> = None;
+    for pair in body.split(',').filter(|p| !p.trim().is_empty()) {
+        let (key, val) = pair
+            .split_once('=')
+            .ok_or_else(|| invalid(format!("repair option '{pair}' is not key=value")))?;
+        match (key.trim(), val.trim()) {
+            ("f", v) => {
+                f = Some(v.parse::<usize>().map_err(|_| {
+                    invalid(format!("repair tolerance '{v}' is not an integer"))
+                })?);
+            }
+            (k, _) => return Err(invalid(format!("unknown repair option '{k}'"))),
+        }
+    }
+    let f = f.ok_or_else(|| invalid("repair needs f=<int>"))?;
+    if f == 0 {
+        return Err(invalid("repair f must be >= 1 (omit the clause for none)"));
+    }
+    Ok(f)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_and_spec_roundtrip() {
+        for spec in [
+            "none",
+            "straggle:seed=0xbe7c,amp=0.5",
+            "repair:f=1",
+            "straggle:seed=0x7,amp=0.25;repair:f=2",
+        ] {
+            let f = FaultSpec::parse(spec).unwrap();
+            assert_eq!(f.spec(), spec);
+            assert_eq!(FaultSpec::parse(&f.spec()).unwrap(), f);
+        }
+        // Decimal seeds canonicalize to hex.
+        let f = FaultSpec::parse("straggle:seed=16,amp=1").unwrap();
+        assert_eq!(f.spec(), "straggle:seed=0x10,amp=1");
+        assert!(FaultSpec::parse("").unwrap().is_none());
+        assert!(FaultSpec::parse("none").unwrap().is_none());
+    }
+
+    #[test]
+    fn bad_specs_are_typed_errors() {
+        for bad in [
+            "jitter",
+            "straggle",
+            "straggle:amp=0.5",
+            "straggle:seed=0x1",
+            "straggle:seed=zz,amp=0.5",
+            "straggle:seed=1,amp=fast",
+            "straggle:seed=1,amp=0.5,extra=1",
+            "repair:f=0",
+            "repair:f=one",
+            "repair:g=1",
+            "straggle:seed=1,amp=0.5;straggle:seed=2,amp=0.5",
+            "repair:f=1;repair:f=2",
+        ] {
+            assert!(
+                matches!(FaultSpec::parse(bad), Err(HetcdcError::InvalidParams(_))),
+                "{bad}"
+            );
+        }
+    }
+
+    #[test]
+    fn validate_rejects_bad_values() {
+        let mut f = FaultSpec::parse("straggle:seed=1,amp=0.5").unwrap();
+        assert!(f.validate(4).is_ok());
+        f.straggle = Some(Straggle { seed: 1, amp: -0.5 });
+        assert!(f.validate(4).is_err());
+        f.straggle = Some(Straggle { seed: 1, amp: f64::NAN });
+        assert!(f.validate(4).is_err());
+        let f = FaultSpec { straggle: None, repair: MAX_REPAIR_F + 1 };
+        assert!(f.validate(4).is_err());
+        assert!(FaultSpec { straggle: None, repair: MAX_REPAIR_F }.validate(4).is_ok());
+    }
+
+    #[test]
+    fn slowdowns_are_deterministic_and_prefix_stable() {
+        let f = FaultSpec::parse("straggle:seed=0xbe7c,amp=0.5").unwrap();
+        let a = f.slowdowns(4);
+        let b = f.slowdowns(4);
+        assert_eq!(a, b);
+        // Node i's factor does not change when the cluster grows.
+        let wide = f.slowdowns(8);
+        assert_eq!(&wide[..4], &a[..]);
+        for &s in &wide {
+            assert!((1.0..1.5).contains(&s), "{s}");
+        }
+        // No straggle => exactly 1.0 everywhere.
+        assert_eq!(FaultSpec::default().slowdowns(3), vec![1.0; 3]);
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let a = FaultSpec::parse("straggle:seed=1,amp=0.5").unwrap().slowdowns(6);
+        let b = FaultSpec::parse("straggle:seed=2,amp=0.5").unwrap().slowdowns(6);
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let f = FaultSpec::parse("straggle:seed=0x5,amp=0.75;repair:f=1").unwrap();
+        assert_eq!(FaultSpec::from_json(&f.to_json()).unwrap(), f);
+        assert!(FaultSpec::from_json(&Json::Num(1.0)).is_err());
+    }
+}

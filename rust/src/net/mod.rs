@@ -1,8 +1,10 @@
-//! Network substrate: simulated heterogeneous broadcast medium and
-//! switched-topology variants.
+//! Network substrate: simulated heterogeneous broadcast medium,
+//! switched-topology variants, and fault-injection specs.
 
+pub mod faults;
 pub mod sim;
 pub mod topology;
 
+pub use faults::{FaultSpec, Straggle};
 pub use sim::{BroadcastNet, LinkLedger, NetReport, PhaseLedger, RoundLedger};
 pub use topology::{LinkTable, Topology};

@@ -50,12 +50,23 @@ pub struct RoundLedger {
     pub msgs: u64,
     pub elapsed_s: f64,
     /// Concurrent schedule length of the round (== `elapsed_s` on the
-    /// shared medium, <= it on switched topologies).
+    /// shared medium, <= it on switched topologies). Straggler waits
+    /// (below) are part of the schedule, so they extend this field but
+    /// never `elapsed_s`, which stays the pure transmission fold.
     pub makespan_s: f64,
     /// Index within the round of the multicast group whose finish time
     /// set the makespan — the round's critical path. `None` on the
     /// shared medium, where no group is distinguished.
     pub critical_group: Option<usize>,
+    /// Total time this round's schedule sat waiting for straggling
+    /// senders (nodes whose Map overran the nominal barrier — see
+    /// [`crate::net::FaultSpec`]). 0 when no straggle is configured, so
+    /// fault-free ledgers are unchanged.
+    pub straggler_delay_s: f64,
+    /// The sender whose readiness wait in this round was largest — the
+    /// slowest transversal of the straggler critical path. `None` when
+    /// no send waited.
+    pub critical_node: Option<usize>,
 }
 
 /// Byte/occupancy accounting of one link of a switched topology. Empty
@@ -117,6 +128,16 @@ pub struct PhaseLedger {
     /// within one group chain sequentially (destinations decode them in
     /// order), concurrency exists only *across* groups.
     group_prev_finish: f64,
+    /// Per-node readiness times of the straggler model: node `i` may not
+    /// transmit before `ready[i]` (its Map overran the nominal barrier
+    /// by that much). Empty when no straggle is configured — every wait
+    /// computation is skipped and the fault-free fold is bit-identical
+    /// to the pre-fault code path. Survives [`PhaseLedger::reset`]: the
+    /// jitter is a property of the cluster, not of one batch.
+    ready: Vec<f64>,
+    /// Largest single readiness wait seen in the current round (drives
+    /// [`RoundLedger::critical_node`]).
+    round_max_wait: f64,
     /// Batch epoch this ledger is accounting: bumped by every
     /// [`PhaseLedger::reset`], so a report is unambiguously tagged with
     /// the batch it measured. The pipelined executor keeps two node-state
@@ -155,7 +176,22 @@ impl PhaseLedger {
             cur_group: None,
             group_members: 0,
             group_prev_finish: 0.0,
+            ready: Vec::new(),
+            round_max_wait: 0.0,
             epoch: 0,
+        }
+    }
+
+    /// Install per-node readiness times (seconds past the nominal Map
+    /// barrier at which each node may start sending). Clears the
+    /// straggler path when every entry is zero, keeping the fault-free
+    /// fold on the exact pre-fault code path.
+    pub fn set_straggle(&mut self, ready: &[f64]) {
+        assert_eq!(ready.len(), self.bytes_by_node.len(), "ready times per node");
+        if ready.iter().all(|&t| t == 0.0) {
+            self.ready.clear();
+        } else {
+            self.ready = ready.to_vec();
         }
     }
 
@@ -170,6 +206,7 @@ impl PhaseLedger {
         self.cur_group = None;
         self.group_members = 0;
         self.group_prev_finish = self.round_base;
+        self.round_max_wait = 0.0;
     }
 
     /// Open the next multicast group of the current round. Scheduled
@@ -196,20 +233,37 @@ impl PhaseLedger {
     }
 
     /// Append one broadcast of `nbytes` from `sender` taking `t_s`
-    /// seconds on the serialized shared medium.
+    /// seconds on the serialized shared medium. A straggling sender
+    /// whose readiness time lies past the current clock first stalls the
+    /// medium until it is ready; the stall is accounted as
+    /// [`RoundLedger::straggler_delay_s`], never as `elapsed_s`.
     pub fn record(&mut self, sender: usize, nbytes: usize, t_s: f64) {
         self.bytes_by_node[sender] += nbytes as u64;
         self.msgs_by_node[sender] += 1;
-        self.clock_s += t_s;
         if self.rounds.is_empty() {
             self.rounds.push(RoundLedger::default());
+            self.round_max_wait = 0.0;
         }
+        if !self.ready.is_empty() {
+            let wait = self.ready[sender] - self.clock_s;
+            if wait > 0.0 {
+                self.clock_s += wait;
+                let round = self.rounds.last_mut().unwrap();
+                round.straggler_delay_s += wait;
+                round.makespan_s += wait;
+                if wait > self.round_max_wait {
+                    self.round_max_wait = wait;
+                    round.critical_node = Some(sender);
+                }
+            }
+        }
+        self.clock_s += t_s;
         let round = self.rounds.last_mut().unwrap();
         round.bytes += nbytes as u64;
         round.msgs += 1;
         round.elapsed_s += t_s;
         // Identical fold as elapsed_s — bitwise equal on the shared
-        // medium, by construction.
+        // medium (without stragglers), by construction.
         round.makespan_s += t_s;
     }
 
@@ -232,6 +286,7 @@ impl PhaseLedger {
             self.round_base = self.round_end;
             self.next_group = 0;
             self.group_prev_finish = self.round_base;
+            self.round_max_wait = 0.0;
         }
         if self.cur_group.is_none() {
             // Round-less / group-less caller: open an implicit group so
@@ -251,6 +306,13 @@ impl PhaseLedger {
                 start = self.free_at[l];
             }
         }
+        // A straggling sender holds its whole transmission (and the
+        // links it occupies) until it is ready.
+        let mut wait = 0.0;
+        if !self.ready.is_empty() && self.ready[sender] > start {
+            wait = self.ready[sender] - start;
+            start = self.ready[sender];
+        }
         let t_total = latency_s + bits / min_rate;
         let finish = start + t_total;
         for &(l, rate) in used {
@@ -266,6 +328,13 @@ impl PhaseLedger {
         round.bytes += nbytes as u64;
         round.msgs += 1;
         round.elapsed_s += t_total;
+        if wait > 0.0 {
+            round.straggler_delay_s += wait;
+            if wait > self.round_max_wait {
+                self.round_max_wait = wait;
+                round.critical_node = Some(sender);
+            }
+        }
         if finish > self.round_end {
             self.round_end = finish;
             round.critical_group = self.cur_group;
@@ -315,6 +384,7 @@ impl PhaseLedger {
             total_bytes: self.bytes_by_node.iter().sum(),
             total_msgs: self.msgs_by_node.iter().sum(),
             elapsed_s: self.clock_s,
+            straggler_delay_s: self.rounds.iter().map(|r| r.straggler_delay_s).sum(),
             rounds: self.rounds.clone(),
             links,
             epoch: self.epoch,
@@ -342,6 +412,9 @@ impl PhaseLedger {
         self.cur_group = None;
         self.group_members = 0;
         self.group_prev_finish = 0.0;
+        // `ready` is deliberately kept: the straggler jitter belongs to
+        // the cluster, and every batch replays the same schedule.
+        self.round_max_wait = 0.0;
         self.epoch += 1;
     }
 }
@@ -371,8 +444,14 @@ pub struct NetReport {
     /// Virtual wall-clock of the broadcast schedule: serialized on the
     /// shared medium, concurrent-group makespan under a switched
     /// topology. The topology changes this field only — never the byte
-    /// or message counts.
+    /// or message counts. Straggler waits are part of the schedule and
+    /// are included here (and broken out in `straggler_delay_s`).
     pub elapsed_s: f64,
+    /// Total time the schedule sat waiting for straggling senders,
+    /// summed over rounds. 0 when no straggle is configured — like the
+    /// topology, a fault spec changes schedule fields only, never a
+    /// byte, message, or round count.
+    pub straggler_delay_s: f64,
     /// Per-round sections of the shuffle (bytes/messages/clock per
     /// [`crate::coding::plan::ShuffleRound`]) — identical across
     /// execution modes, like every other field.
@@ -487,6 +566,28 @@ impl BroadcastNet {
                     .record_scheduled(sender, nbytes, self.latency_s, &used[..n_used])
             }
         }
+    }
+
+    /// Install the straggler readiness times (seconds past the nominal
+    /// Map barrier before each node may send — see
+    /// [`PhaseLedger::set_straggle`]). Rejects negative or non-finite
+    /// times. The times persist across [`BroadcastNet::reset`]: every
+    /// batch replays the same jitter.
+    pub fn set_straggle(&mut self, ready: &[f64]) -> Result<()> {
+        if ready.len() != self.uplink_bps.len() {
+            return Err(HetcdcError::InvalidParams(format!(
+                "straggler readiness needs one time per node: got {} for {} nodes",
+                ready.len(),
+                self.uplink_bps.len()
+            )));
+        }
+        if let Some(&bad) = ready.iter().find(|t| !(t.is_finite() && **t >= 0.0)) {
+            return Err(HetcdcError::InvalidParams(format!(
+                "straggler readiness times must be non-negative and finite, got {bad}"
+            )));
+        }
+        self.ledger.set_straggle(ready);
+        Ok(())
     }
 
     /// Open the next round section of the ledger (see
@@ -764,6 +865,97 @@ mod tests {
         let r = net.report();
         assert!((r.rounds[0].makespan_s - 2e-3).abs() < 1e-12);
         assert_eq!(r.rounds[0].critical_group, Some(1));
+    }
+
+    #[test]
+    fn straggler_wait_stalls_shared_medium_and_is_accounted() {
+        // 8 Mbit/s -> 1000 bytes = 1 ms. Node 1 is ready only at 5 ms.
+        let mut net = BroadcastNet::homogeneous(2, 8e6, 0.0).unwrap();
+        net.set_straggle(&[0.0, 5e-3]).unwrap();
+        net.begin_round();
+        net.broadcast(0, 1000); // 0..1 ms
+        net.broadcast(1, 1000); // waits 4 ms, 5..6 ms
+        let r = net.report();
+        assert!((r.elapsed_s - 6e-3).abs() < 1e-12);
+        assert!((r.straggler_delay_s - 4e-3).abs() < 1e-12);
+        let round = &r.rounds[0];
+        assert!((round.straggler_delay_s - 4e-3).abs() < 1e-12);
+        assert!((round.makespan_s - 6e-3).abs() < 1e-12);
+        // elapsed_s stays the pure transmission fold.
+        assert!((round.elapsed_s - 2e-3).abs() < 1e-12);
+        assert_eq!(round.critical_node, Some(1));
+        // Totals are untouched: faults reschedule, they never change bytes.
+        assert_eq!(r.total_bytes, 2000);
+        assert_eq!(r.total_msgs, 2);
+    }
+
+    #[test]
+    fn straggler_waits_only_once_the_clock_catches_up() {
+        let mut net = BroadcastNet::homogeneous(2, 8e6, 0.0).unwrap();
+        net.set_straggle(&[0.0, 5e-4]).unwrap();
+        net.broadcast(0, 1000); // clock at 1 ms > ready[1]
+        net.broadcast(1, 1000); // no wait
+        let r = net.report();
+        assert_eq!(r.straggler_delay_s, 0.0);
+        assert_eq!(r.rounds[0].critical_node, None);
+        assert!((r.elapsed_s - 2e-3).abs() < 1e-12);
+    }
+
+    #[test]
+    fn all_zero_straggle_is_the_identical_fault_free_fold() {
+        let mk = |straggle: bool| {
+            let mut net = BroadcastNet::new(vec![8e6, 2e6], 3e-4).unwrap();
+            if straggle {
+                net.set_straggle(&[0.0, 0.0]).unwrap();
+            }
+            net.begin_round();
+            net.broadcast(0, 900);
+            net.broadcast(1, 100);
+            net.report()
+        };
+        assert_eq!(mk(true), mk(false));
+    }
+
+    #[test]
+    fn straggler_delay_persists_across_batch_resets() {
+        let mut net = BroadcastNet::homogeneous(2, 8e6, 0.0).unwrap();
+        net.set_straggle(&[0.0, 5e-3]).unwrap();
+        net.broadcast(1, 1000);
+        let first = net.report();
+        net.reset();
+        net.broadcast(1, 1000);
+        let second = net.report();
+        assert_eq!(
+            first.straggler_delay_s.to_bits(),
+            second.straggler_delay_s.to_bits()
+        );
+        assert_eq!(first.elapsed_s.to_bits(), second.elapsed_s.to_bits());
+    }
+
+    #[test]
+    fn straggler_holds_links_on_switched_topologies() {
+        let mut net =
+            BroadcastNet::with_topology(vec![8e6, 8e6], 0.0, Topology::Flat).unwrap();
+        net.set_straggle(&[0.0, 5e-3]).unwrap();
+        net.begin_round();
+        net.begin_group(0b01);
+        net.broadcast(0, 1000); // 0..1 ms
+        net.begin_group(0b10);
+        net.broadcast(1, 1000); // held to 5 ms, 5..6 ms
+        let r = net.report();
+        assert!((r.elapsed_s - 6e-3).abs() < 1e-12);
+        assert!((r.straggler_delay_s - 5e-3).abs() < 1e-12);
+        assert_eq!(r.rounds[0].critical_node, Some(1));
+        assert_eq!(r.rounds[0].critical_group, Some(1));
+    }
+
+    #[test]
+    fn bad_straggle_times_are_typed_errors() {
+        let mut net = BroadcastNet::homogeneous(2, 8e6, 0.0).unwrap();
+        assert!(net.set_straggle(&[0.0]).is_err());
+        assert!(net.set_straggle(&[0.0, -1.0]).is_err());
+        assert!(net.set_straggle(&[0.0, f64::NAN]).is_err());
+        assert!(net.set_straggle(&[0.0, 1.0]).is_ok());
     }
 
     #[test]

@@ -351,6 +351,7 @@ mod tests {
             nodes: vec![],
             latency_ms: 0.0,
             topology: crate::net::Topology::Shared,
+            faults: crate::net::FaultSpec::default(),
         };
         let err = Oblivious.place(&c, &JobSpec::terasort(12)).unwrap_err();
         assert!(matches!(err, HetcdcError::InvalidParams(_)));

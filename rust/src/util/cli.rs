@@ -131,6 +131,71 @@ impl Args {
     }
 }
 
+/// Option specs shared verbatim by the planning/execution subcommands
+/// (`plan`, `run`, and — where applicable — `bench-json`), so the three
+/// help outputs can never drift apart on the flags they share. Each
+/// subcommand flattens the consts it supports into its own spec table;
+/// `cli_integration` asserts the help texts agree.
+///
+/// `bench-json` deliberately keeps its *own* `--threads` spec: its
+/// default is `0` (auto) where `plan`/`run` default to `1` (serial), and
+/// changing either default would change behavior.
+pub mod common {
+    use super::ArgSpec;
+
+    pub const THREADS: ArgSpec = ArgSpec {
+        name: "threads",
+        help: "worker threads for plan build and execution: 1 = serial; N > 1 = sharded; \
+               0 = auto-detect (results are byte-identical at every N)",
+        takes_value: true,
+        default: Some("1"),
+    };
+
+    pub const PLACEMENT: ArgSpec = ArgSpec {
+        name: "placement",
+        help: "auto | optimal-k3 | lp-general | homogeneous | oblivious | combinatorial",
+        takes_value: true,
+        default: Some("auto"),
+    };
+
+    pub const CODER: ArgSpec = ArgSpec {
+        name: "coder",
+        help: "pairing | greedy | multicast | memshare | combinatorial (default: placer's)",
+        takes_value: true,
+        default: None,
+    };
+
+    pub const LP_CAP: ArgSpec = ArgSpec {
+        name: "lp-cap",
+        help: "max perfect collections per §V LP subsystem (Remark 7 cap; default 4096)",
+        takes_value: true,
+        default: None,
+    };
+
+    pub const TOPOLOGY: ArgSpec = ArgSpec {
+        name: "topology",
+        help: "network topology: shared | flat | rack:q=R,oversub=S | fat-tree:q=R \
+               (overrides the cluster's; default shared medium)",
+        takes_value: true,
+        default: None,
+    };
+
+    pub const FAULTS: ArgSpec = ArgSpec {
+        name: "faults",
+        help: "fault model: none | straggle:seed=S,amp=A | repair:f=N | \
+               straggle:...;repair:... (overrides the cluster's; default none)",
+        takes_value: true,
+        default: None,
+    };
+
+    pub const HELP: ArgSpec = ArgSpec {
+        name: "help",
+        help: "show usage",
+        takes_value: false,
+        default: None,
+    };
+}
+
 pub fn usage(program: &str, about: &str, specs: &[ArgSpec]) -> String {
     let mut s = format!("{about}\n\nUsage: {program} [options]\n\nOptions:\n");
     for spec in specs {
@@ -199,5 +264,32 @@ mod tests {
     fn usage_mentions_options() {
         let u = usage("hetcdc", "about", &specs());
         assert!(u.contains("--n") && u.contains("--storage") && u.contains("--verbose"));
+    }
+
+    #[test]
+    fn common_specs_are_well_formed() {
+        let all = [
+            common::THREADS,
+            common::PLACEMENT,
+            common::CODER,
+            common::LP_CAP,
+            common::TOPOLOGY,
+            common::FAULTS,
+            common::HELP,
+        ];
+        for spec in &all {
+            assert!(!spec.name.is_empty() && !spec.help.is_empty(), "{spec:?}");
+        }
+        // --help is the only shared flag; everything else takes a value.
+        assert!(!common::HELP.takes_value);
+        assert!(all.iter().filter(|s| s.takes_value).count() == all.len() - 1);
+        // A spec table built from the consts parses normally.
+        let argv: Vec<String> = ["--faults", "straggle:seed=1,amp=0.5", "--threads", "2"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect();
+        let a = Args::parse(&argv, &all).unwrap();
+        assert_eq!(a.get("faults"), Some("straggle:seed=1,amp=0.5"));
+        assert_eq!(a.get_usize("threads").unwrap(), 2);
     }
 }

@@ -472,6 +472,86 @@ fn bench_json_emits_deterministic_artifact_and_self_compares() {
 }
 
 #[test]
+fn subcommand_help_agrees_on_shared_flags() {
+    // `plan`, `run`, and `bench-json` flatten the same `common::` specs
+    // into their option tables; their help outputs must never drift
+    // apart on a shared flag (same usage line, same description, same
+    // default).
+    let (pc, plan_help, _) = hetcdc(&["plan", "--help"]);
+    let (rc, run_help, _) = hetcdc(&["run", "--help"]);
+    let (bc, bench_help, _) = hetcdc(&["bench-json", "--help"]);
+    assert_eq!((pc, rc, bc), (0, 0, 0));
+    let block = |help: &str, flag: &str| -> String {
+        let head = format!("  --{flag}");
+        let mut lines = help.lines();
+        while let Some(l) = lines.next() {
+            if l == head || l.starts_with(&format!("{head} ")) {
+                let desc = lines.next().unwrap_or_default();
+                return format!("{l}\n{desc}");
+            }
+        }
+        panic!("--{flag} missing from help:\n{help}");
+    };
+    // plan and run share the whole planning option set.
+    for flag in ["threads", "placement", "coder", "lp-cap", "topology", "faults", "help"] {
+        assert_eq!(
+            block(&plan_help, flag),
+            block(&run_help, flag),
+            "--{flag} drifted between `plan` and `run` help"
+        );
+    }
+    // bench-json shares the exploration overrides (it keeps its own
+    // --threads: the default there is 0 = auto, not 1 = serial).
+    for flag in ["topology", "faults", "help"] {
+        assert_eq!(
+            block(&plan_help, flag),
+            block(&bench_help, flag),
+            "--{flag} drifted between `plan` and `bench-json` help"
+        );
+    }
+    assert_ne!(
+        block(&plan_help, "threads"),
+        block(&bench_help, "threads"),
+        "bench-json --threads is deliberately its own spec (default 0 = auto)"
+    );
+}
+
+#[test]
+fn faults_flag_reaches_the_planner_and_conflicts_with_plan_files() {
+    // A straggle spec shifts only the schedule: the run still verifies
+    // with the same IV-equation load.
+    let (code, stdout, _) = hetcdc(&[
+        "run", "--workload", "terasort", "--n", "12", "--storage", "6,7,7",
+        "--mode", "coded", "--backend", "native",
+        "--faults", "straggle:seed=7,amp=4",
+    ]);
+    assert_eq!(code, 0, "{stdout}");
+    assert!(stdout.contains("load 12 IV-equations"), "{stdout}");
+    assert!(stdout.contains("verified=true"), "{stdout}");
+    // The fault spec lands in the emitted plan artifact and round-trips.
+    let (code, stdout, _) = hetcdc(&[
+        "plan", "--workload", "terasort", "--n", "12", "--storage", "6,7,7",
+        "--faults", "repair:f=1",
+    ]);
+    assert_eq!(code, 0, "{stdout}");
+    let plan = hetcdc::engine::Plan::from_json_str(stdout.trim()).expect("faulted plan loads");
+    assert_eq!(plan.cluster.faults.repair, 1);
+    // Bad specs die with a typed error, not a panic.
+    let (code, _, stderr) = hetcdc(&[
+        "run", "--workload", "terasort", "--n", "12", "--storage", "6,7,7",
+        "--faults", "straggle:amp=nope",
+    ]);
+    assert_eq!(code, 1);
+    assert!(stderr.contains("error"), "{stderr}");
+    // A plan file already fixes the fault model: --faults conflicts.
+    let (code, _, stderr) = hetcdc(&[
+        "run", "--plan", "/nonexistent/plan.json", "--faults", "repair:f=1",
+    ]);
+    assert_eq!(code, 1);
+    assert!(stderr.contains("conflicts with --plan"), "{stderr}");
+}
+
+#[test]
 fn verify_subcommand_passes_with_lp() {
     let (code, stdout, _) = hetcdc(&["verify", "--n", "6", "--lp"]);
     assert_eq!(code, 0, "{stdout}");

@@ -162,6 +162,7 @@ fn engine_plan_panic_paths_are_typed_errors() {
         nodes: vec![],
         latency_ms: 0.0,
         topology: hetcdc::net::Topology::Shared,
+        faults: hetcdc::net::FaultSpec::default(),
     };
     let job = small_job(12);
     let err = placer_by_name("oblivious", &empty)
