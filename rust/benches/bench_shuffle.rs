@@ -9,7 +9,7 @@
 
 use hetcdc::bench::{bench_fn, section, table, Bench};
 use hetcdc::engine::{
-    Engine, ExecMode, Executor, JobBuilder, NativeBackend, PlanCache, XlaBackend,
+    Engine, ExecConfig, ExecMode, Executor, JobBuilder, NativeBackend, PlanCache, XlaBackend,
 };
 use hetcdc::model::cluster::ClusterSpec;
 use hetcdc::model::job::{JobSpec, ShuffleMode};
@@ -198,7 +198,8 @@ fn main() {
             .mode(ShuffleMode::Coded)
             .build()
             .expect("plan");
-        let mut exec = Executor::new(&plan).expect("executor");
+        let mut exec =
+            Executor::with_config(&plan, ExecConfig::default()).expect("executor");
         let r = exec.run_batch(&mut be, batch_seed).expect("run");
         assert!(r.verified);
         r.payload_bytes
@@ -208,7 +209,7 @@ fn main() {
         .mode(ShuffleMode::Coded)
         .build()
         .expect("plan");
-    let mut exec = Executor::new(&plan).expect("executor");
+    let mut exec = Executor::with_config(&plan, ExecConfig::default()).expect("executor");
     let reused = bench_fn("plan reuse (one Plan, one Executor)", &cfg, || {
         batch_seed = batch_seed.wrapping_add(1);
         let r = exec.run_batch(&mut be, batch_seed).expect("run");
@@ -235,8 +236,8 @@ fn main() {
         assert!(r.verified);
         r.payload_bytes
     });
-    let mut par_exec =
-        Executor::with_mode(&plan, ExecMode::Parallel).expect("parallel executor");
+    let mut par_exec = Executor::with_config(&plan, ExecConfig::default().mode(ExecMode::Parallel))
+        .expect("parallel executor");
     let par_t = bench_fn("executor e2e (parallel, auto threads)", &cfg, || {
         batch_seed = batch_seed.wrapping_add(1);
         let r = par_exec.run_batch(&mut be, batch_seed).expect("parallel batch");
@@ -272,12 +273,14 @@ fn main() {
             .expect("suite plan");
         let seeds: Vec<u64> = (0..PIPE_BATCHES).map(|b| pjob.seed.wrapping_add(b)).collect();
         let mut pbe = NativeBackend;
-        let mut sexec = Executor::new(&pplan).expect("serial executor");
+        let mut sexec =
+            Executor::with_config(&pplan, ExecConfig::default()).expect("serial executor");
         let st = bench_fn(&format!("{name} serial x{PIPE_BATCHES}"), &cfg, || {
             sexec.run_batches(&mut pbe, &seeds).expect("serial batches").len()
         });
         let mut pexec =
-            Executor::with_mode(&pplan, ExecMode::Pipelined).expect("pipelined executor");
+            Executor::with_config(&pplan, ExecConfig::default().mode(ExecMode::Pipelined))
+                .expect("pipelined executor");
         let pt = bench_fn(&format!("{name} pipelined x{PIPE_BATCHES}"), &cfg, || {
             pexec.run_batches(&mut pbe, &seeds).expect("pipelined batches").len()
         });
@@ -364,7 +367,8 @@ fn main() {
         let plan = cache
             .get_or_build(&cluster, jb, "optimal-k3", None, ShuffleMode::Coded)
             .expect("cached plan");
-        let mut exec = Executor::new(&plan).expect("executor");
+        let mut exec =
+            Executor::with_config(&plan, ExecConfig::default()).expect("executor");
         let r = exec.run_batch(&mut be, batch_seed).expect("run");
         assert!(r.verified);
         r.payload_bytes

@@ -6,7 +6,7 @@
 //! cargo run --release --offline --example quickstart
 //! ```
 
-use hetcdc::engine::{Engine, ExecMode, Executor, JobBuilder, NativeBackend};
+use hetcdc::engine::{Engine, ExecConfig, ExecMode, Executor, JobBuilder, NativeBackend};
 use hetcdc::model::cluster::ClusterSpec;
 use hetcdc::model::job::{JobSpec, ShuffleMode};
 use hetcdc::theory::load;
@@ -50,7 +50,7 @@ fn main() {
 
     // Stage 3: Executor — many data batches, one plan, reused buffers.
     let mut backend = NativeBackend;
-    let mut exec = Executor::new(&plan).expect("executor");
+    let mut exec = Executor::with_config(&plan, ExecConfig::default()).expect("executor");
     for batch in 0u64..3 {
         let r = exec.run_batch(&mut backend, job.seed + batch).expect("batch run");
         assert!(r.verified, "reduce outputs must match the single-node oracle");
@@ -65,7 +65,8 @@ fn main() {
     // batch i+1 while batch i shuffles (CLI: `hetcdc run --pipeline`).
     // Reports are bit-identical to the serial loop above; only the
     // steady-state batches/sec changes.
-    let mut piped = Executor::with_mode(&plan, ExecMode::Pipelined).expect("executor");
+    let mut piped = Executor::with_config(&plan, ExecConfig::default().mode(ExecMode::Pipelined))
+        .expect("executor");
     let seeds: Vec<u64> = (0..3).map(|b| job.seed + b).collect();
     let reports = piped.run_batches(&mut backend, &seeds).expect("pipelined batches");
     assert!(reports.iter().all(|r| r.verified));

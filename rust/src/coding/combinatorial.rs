@@ -29,7 +29,7 @@
 use super::plan::{Broadcast, IvId, MulticastGroup, Part, ShufflePlan, ShuffleRound};
 use crate::error::{HetcdcError, Result};
 use crate::placement::alloc::{Allocation, NodeMask};
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 
 fn unsupported(reason: String) -> HetcdcError {
     HetcdcError::Unsupported {
@@ -141,7 +141,9 @@ pub fn detect_grid(alloc: &Allocation) -> Result<GridStructure> {
         )));
     }
     let per = (alloc.n_sub() as u64 / lattice) as usize;
-    let mut counts: HashMap<NodeMask, usize> = HashMap::new();
+    // BTreeMap (not HashMap): `xtask lint` bans hash-ordered iteration in
+    // artifact-affecting modules, and `counts` is iterated below.
+    let mut counts: BTreeMap<NodeMask, usize> = BTreeMap::new();
     for &h in &alloc.holders {
         *counts.entry(h).or_insert(0) += 1;
     }
@@ -178,7 +180,7 @@ pub fn plan_grid_threaded(
     let nseg = (r - 1) as u32;
 
     // Subfiles per holder mask, ascending subfile order.
-    let mut by_mask: HashMap<NodeMask, Vec<usize>> = HashMap::new();
+    let mut by_mask: BTreeMap<NodeMask, Vec<usize>> = BTreeMap::new();
     for (sub, &h) in alloc.holders.iter().enumerate() {
         by_mask.entry(h).or_default().push(sub);
     }

@@ -71,8 +71,9 @@ impl ExecMode {
 /// Everything an [`Executor`] can be configured with, in one typed value.
 /// [`Executor::with_config`] is the single construction path — the engine,
 /// the bench suite, and the CLI all build executors through it; the old
-/// [`Executor::new`] / [`Executor::with_mode`] constructors are thin shims
-/// over a default config.
+/// [`Executor::new`] / [`Executor::with_mode`] constructors are deprecated
+/// shims over a default config, and `xtask lint` bans them outside this
+/// file and test code (rule `construction-path`).
 ///
 /// Which runs read which field:
 /// * `mode` — read by [`Executor::run_batch`] (Map sharding + decode
@@ -161,11 +162,13 @@ pub struct Executor<'p> {
 impl<'p> Executor<'p> {
     /// Serial executor (the reference mode). Shim over
     /// [`Self::with_config`] with [`ExecConfig::default`].
+    #[deprecated(note = "use with_config")]
     pub fn new(plan: &'p Plan) -> Result<Self> {
         Self::with_config(plan, ExecConfig::default())
     }
 
     /// Shim over [`Self::with_config`] setting only the mode.
+    #[deprecated(note = "use with_config")]
     pub fn with_mode(plan: &'p Plan, mode: ExecMode) -> Result<Self> {
         Self::with_config(plan, ExecConfig::default().mode(mode))
     }
@@ -229,6 +232,7 @@ impl<'p> Executor<'p> {
     /// uses [`std::thread::available_parallelism`], falling back to 1
     /// worker when the parallelism of the host cannot be queried. No
     /// effect on results — only on wall-clock.
+    #[deprecated(note = "use with_config")]
     pub fn set_threads(&mut self, threads: usize) {
         self.threads = threads;
     }
@@ -669,7 +673,7 @@ mod tests {
         job.keys_per_file = 32;
         let plan = JobBuilder::new(&c, &job).placer("optimal-k3").build().unwrap();
         let mut be = NativeBackend;
-        let mut exec = Executor::new(&plan).unwrap();
+        let mut exec = Executor::with_config(&plan, ExecConfig::default()).unwrap();
         let mut reports = Vec::new();
         for batch in 0u64..3 {
             let r = exec.run_batch(&mut be, job.seed + batch).unwrap();
@@ -708,9 +712,10 @@ mod tests {
         job.keys_per_file = 32;
         let plan = JobBuilder::new(&c, &job).placer("optimal-k3").build().unwrap();
         let mut be = NativeBackend;
-        let mut serial = Executor::new(&plan).unwrap();
-        let mut parallel = Executor::with_mode(&plan, ExecMode::Parallel).unwrap();
-        parallel.set_threads(3);
+        let mut serial = Executor::with_config(&plan, ExecConfig::default()).unwrap();
+        let mut parallel =
+            Executor::with_config(&plan, ExecConfig::default().mode(ExecMode::Parallel).threads(3))
+                .unwrap();
         let a = serial.run_batch(&mut be, 42).unwrap();
         let b = parallel.run_batch(&mut be, 42).unwrap();
         assert!(a.verified && b.verified);
@@ -738,11 +743,11 @@ mod tests {
         job.keys_per_file = 32;
         let plan = JobBuilder::new(&c, &job).build().unwrap();
         let mut be = NativeBackend;
-        let mut reference = Executor::new(&plan).unwrap();
+        let mut reference = Executor::with_config(&plan, ExecConfig::default()).unwrap();
         let base = reference.run_batch(&mut be, 7).unwrap();
         for threads in [1usize, 2, 3, 8] {
-            let mut exec = Executor::with_mode(&plan, ExecMode::Parallel).unwrap();
-            exec.set_threads(threads);
+            let cfg = ExecConfig::default().mode(ExecMode::Parallel).threads(threads);
+            let mut exec = Executor::with_config(&plan, cfg).unwrap();
             let r = exec.run_batch(&mut be, 7).unwrap();
             assert_eq!(r.payload_bytes, base.payload_bytes, "threads={threads}");
             assert_eq!(r.shuffle_time_s.to_bits(), base.shuffle_time_s.to_bits());
@@ -760,10 +765,11 @@ mod tests {
         let mut be = NativeBackend;
         let seeds: Vec<u64> = (0..4u64).map(|b| 0x51EDu64 + b).collect();
 
-        let mut serial = Executor::new(&plan).unwrap();
+        let mut serial = Executor::with_config(&plan, ExecConfig::default()).unwrap();
         let rs = serial.run_batches(&mut be, &seeds).unwrap();
-        let mut pipelined = Executor::with_mode(&plan, ExecMode::Pipelined).unwrap();
-        pipelined.set_threads(2);
+        let mut pipelined =
+            Executor::with_config(&plan, ExecConfig::default().mode(ExecMode::Pipelined).threads(2))
+                .unwrap();
         let rp = pipelined.run_batches(&mut be, &seeds).unwrap();
 
         assert_eq!(rs.len(), seeds.len());
@@ -801,7 +807,8 @@ mod tests {
         job.keys_per_file = 32;
         let plan = JobBuilder::new(&c, &job).build().unwrap();
         let mut be = NativeBackend;
-        let mut exec = Executor::with_mode(&plan, ExecMode::Pipelined).unwrap();
+        let mut exec =
+            Executor::with_config(&plan, ExecConfig::default().mode(ExecMode::Pipelined)).unwrap();
         assert!(exec.run_batches(&mut be, &[]).unwrap().is_empty());
         let one = exec.run_batches(&mut be, &[9]).unwrap();
         assert_eq!(one.len(), 1);
@@ -844,7 +851,7 @@ mod tests {
         let seeds = [20u64, 21, 22];
 
         let mut be = NativeBackend;
-        let mut reference = Executor::new(&plan).unwrap();
+        let mut reference = Executor::with_config(&plan, ExecConfig::default()).unwrap();
         let expect = reference.run_batches(&mut be, &seeds).unwrap();
         assert!(!reference.pipeline_degraded());
 
@@ -865,6 +872,7 @@ mod tests {
     }
 
     #[test]
+    #[allow(deprecated)] // the deprecated shims are exactly what this test covers
     fn config_shims_match_with_config() {
         let c = cluster(&[6, 7, 7]);
         let mut job = JobSpec::terasort(12);
@@ -885,6 +893,12 @@ mod tests {
         let via_mode = Executor::with_mode(&plan, ExecMode::Parallel).unwrap();
         assert_eq!(via_mode.mode(), ExecMode::Parallel);
         assert_eq!(via_mode.faults(), FaultSpec::default());
+
+        let mut via_set = Executor::with_config(&plan, ExecConfig::default()).unwrap();
+        via_set.set_threads(3);
+        let via_cfg_threads =
+            Executor::with_config(&plan, ExecConfig::default().threads(3)).unwrap();
+        assert_eq!(via_set.effective_threads(), via_cfg_threads.effective_threads());
     }
 
     #[test]
@@ -896,7 +910,7 @@ mod tests {
         let plan = JobBuilder::new(&c, &job).placer("optimal-k3").build().unwrap();
         let mut be = NativeBackend;
 
-        let mut base = Executor::new(&plan).unwrap();
+        let mut base = Executor::with_config(&plan, ExecConfig::default()).unwrap();
         let clean = base.run_batch(&mut be, 42).unwrap();
         assert_eq!(base.net_report().straggler_delay_s, 0.0);
 
@@ -947,8 +961,9 @@ mod tests {
         job.keys_per_file = 32;
         let plan = JobBuilder::new(&c, &job).build().unwrap();
         let mut be = NativeBackend;
-        let mut exec = Executor::with_mode(&plan, ExecMode::Pipelined).unwrap();
-        exec.set_threads(2);
+        let mut exec =
+            Executor::with_config(&plan, ExecConfig::default().mode(ExecMode::Pipelined).threads(2))
+                .unwrap();
 
         // First pipelined run allocates both banks (one swap for 2 batches).
         exec.run_batches(&mut be, &[10, 11]).unwrap();

@@ -497,7 +497,7 @@ impl Plan {
 /// choices, then [`JobBuilder::build`] a validated [`Plan`].
 ///
 /// ```no_run
-/// use hetcdc::engine::{Executor, JobBuilder, NativeBackend};
+/// use hetcdc::engine::{ExecConfig, Executor, JobBuilder, NativeBackend};
 /// use hetcdc::model::cluster::ClusterSpec;
 /// use hetcdc::model::job::JobSpec;
 ///
@@ -505,7 +505,7 @@ impl Plan {
 /// let job = JobSpec::terasort(12);
 /// let plan = JobBuilder::new(&cluster, &job).placer("optimal-k3").build().unwrap();
 /// let mut backend = NativeBackend;
-/// let mut exec = Executor::new(&plan).unwrap();
+/// let mut exec = Executor::with_config(&plan, ExecConfig::default()).unwrap();
 /// for batch in 0u64..3 {
 ///     let report = exec.run_batch(&mut backend, job.seed + batch).unwrap();
 ///     assert!(report.verified);
@@ -578,7 +578,7 @@ impl<'a> JobBuilder<'a> {
     /// schedule verification — and the built plan is **bit-identical**
     /// for every value: serializing the same shape at `--threads 1` and
     /// `--threads 8` yields byte-equal JSON. (Execution threading is a
-    /// separate knob: [`crate::engine::Executor::set_threads`].)
+    /// separate knob: [`crate::engine::ExecConfig::threads`].)
     pub fn threads(mut self, threads: usize) -> Self {
         self.threads = threads;
         self

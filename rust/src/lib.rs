@@ -22,7 +22,7 @@
 //! *data*:
 //!
 //! ```text
-//! JobBuilder ──build()──▶ Plan ──Executor::new()──▶ Executor ──run_batch()──▶ RunReport
+//! JobBuilder ──build()──▶ Plan ──with_config()──▶ Executor ──run_batch()──▶ RunReport
 //!  (cluster, job,          immutable, validated,      reusable buffers,        per-batch
 //!   placer, coder, mode)   serializable artifact      many data batches        measurements
 //! ```

@@ -121,6 +121,7 @@ impl<S: Scalar> Tableau<S> {
             return Some(j);
         }
         let mut firsts: Vec<Option<usize>> = vec![None; workers - 1];
+        // lint: allow(unordered-merge): each worker writes its own chunk slot; min() over slots is finish-order independent
         std::thread::scope(|s| {
             for (w, slot) in firsts.iter_mut().enumerate() {
                 let lo = (w + 1) * chunk;

@@ -954,7 +954,10 @@ fn cmd_verify(argv: &[String]) -> i32 {
                     return fail(format!("{p}: {e}"));
                 }
                 if args.flag("lp") {
-                    let pk = ParamsK::new(vec![m1, m2, m3], n).unwrap();
+                    let pk = match ParamsK::new(vec![m1, m2, m3], n) {
+                        Ok(pk) => pk,
+                        Err(e) => return fail(format!("{p}: {e}")),
+                    };
                     match lp_general::solve_general(&pk, 4096) {
                         Ok(sol) if (sol.load - load::lstar(&p)).abs() < 1e-6 => {}
                         Ok(sol) => {

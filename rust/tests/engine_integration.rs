@@ -165,7 +165,7 @@ fn larger_n_scales_losslessly() {
 fn plan_roundtrips_through_json_and_executes() {
     // plan -> serialize -> deserialize (re-validated) -> execute: the
     // `hetcdc plan` / `hetcdc run --plan` contract, in-process.
-    use hetcdc::engine::{Executor, JobBuilder, Plan};
+    use hetcdc::engine::{ExecConfig, Executor, JobBuilder, Plan};
     let cl = cluster(&[6, 7, 7]);
     let job = small_job(WorkloadKind::TeraSort, 12);
     let plan = JobBuilder::new(&cl, &job)
@@ -175,7 +175,7 @@ fn plan_roundtrips_through_json_and_executes() {
         .unwrap();
     let restored = Plan::from_json_str(&plan.to_json_string()).unwrap();
     let mut be = NativeBackend;
-    let mut exec = Executor::new(&restored).unwrap();
+    let mut exec = Executor::with_config(&restored, ExecConfig::default()).unwrap();
     let r1 = exec.run_batch(&mut be, 1).unwrap();
     let r2 = exec.run_batch(&mut be, 2).unwrap();
     assert!(r1.verified && r2.verified);
@@ -187,7 +187,7 @@ fn plan_roundtrips_through_json_and_executes() {
 
 #[test]
 fn plan_cache_serves_repeated_shapes() {
-    use hetcdc::engine::{Executor, PlanCache};
+    use hetcdc::engine::{ExecConfig, Executor, PlanCache};
     let cl = cluster(&[6, 7, 7]);
     let mut cache = PlanCache::new(8);
     let mut be = NativeBackend;
@@ -197,7 +197,10 @@ fn plan_cache_serves_repeated_shapes() {
         let plan = cache
             .get_or_build(&cl, &job, "auto", None, ShuffleMode::Coded)
             .unwrap();
-        let r = Executor::new(&plan).unwrap().run_batch(&mut be, batch).unwrap();
+        let r = Executor::with_config(&plan, ExecConfig::default())
+            .unwrap()
+            .run_batch(&mut be, batch)
+            .unwrap();
         assert!(r.verified);
         assert_eq!(r.load_equations, 12.0);
     }

@@ -15,7 +15,7 @@
 use hetcdc::coding::builtin_coders;
 use hetcdc::coding::plan::IvId;
 use hetcdc::coding::decoder;
-use hetcdc::engine::{ExecMode, Executor, JobBuilder, NativeBackend, Plan, RunReport};
+use hetcdc::engine::{ExecConfig, ExecMode, Executor, JobBuilder, NativeBackend, Plan, RunReport};
 use hetcdc::model::cluster::ClusterSpec;
 use hetcdc::model::job::{JobSpec, ShuffleMode};
 use hetcdc::net::{FaultSpec, Topology};
@@ -95,18 +95,17 @@ fn check_plan(plan: &Plan, threads: usize, batches: usize, ctx: &str) {
         .map(|b| plan.job.seed ^ 0xA5A5 ^ (b << 8))
         .collect();
 
-    let mut serial = Executor::new(plan).unwrap();
+    let mut serial = Executor::with_config(plan, ExecConfig::default()).unwrap();
     assert_eq!(serial.mode().as_str(), "serial");
     let rs = serial.run_batches(&mut be, &seeds).unwrap();
 
-    let mut parallel = Executor::with_mode(plan, ExecMode::Parallel).unwrap();
-    parallel.set_threads(threads);
+    let cfg = ExecConfig::default().threads(threads);
+    let mut parallel = Executor::with_config(plan, cfg.mode(ExecMode::Parallel)).unwrap();
     assert_eq!(parallel.mode(), ExecMode::Parallel);
     assert_eq!(parallel.mode().as_str(), "parallel");
     let rp = parallel.run_batches(&mut be, &seeds).unwrap();
 
-    let mut pipelined = Executor::with_mode(plan, ExecMode::Pipelined).unwrap();
-    pipelined.set_threads(threads);
+    let mut pipelined = Executor::with_config(plan, cfg.mode(ExecMode::Pipelined)).unwrap();
     assert_eq!(pipelined.mode().as_str(), "pipelined");
     let rq = pipelined.run_batches(&mut be, &seeds).unwrap();
 
@@ -260,7 +259,7 @@ fn every_placer_coder_combo_is_mode_equivalent_on_a_rack_topology() {
                 check_plan(&plan, 3, batches, &ctx);
                 // The switched path was actually exercised: the report
                 // carries a ledger per access link plus the rack trunks.
-                let nr = Executor::new(&plan)
+                let nr = Executor::with_config(&plan, ExecConfig::default())
                     .and_then(|mut e| {
                         e.run_batch(&mut NativeBackend, job.seed).map(|_| e.net_report())
                     })
@@ -381,7 +380,7 @@ fn every_placer_coder_combo_is_mode_equivalent_under_stragglers() {
                 // The jitter actually bit: the ledger records a positive
                 // aggregate wait, and it is identical batch over batch
                 // (the spec belongs to the cluster, not the batch).
-                let mut exec = Executor::new(&plan).unwrap();
+                let mut exec = Executor::with_config(&plan, ExecConfig::default()).unwrap();
                 exec.run_batch(&mut NativeBackend, job.seed).unwrap();
                 let first = exec.net_report().straggler_delay_s;
                 assert!(first > 0.0, "{ctx}: straggler_delay_s = {first}");
@@ -467,7 +466,8 @@ fn parallel_batches_still_match_plan_predictions() {
     let job = small_job(10);
     let plan = JobBuilder::new(&cl, &job).build().unwrap();
     let mut be = NativeBackend;
-    let mut exec = Executor::with_mode(&plan, ExecMode::Parallel).unwrap();
+    let mut exec =
+        Executor::with_config(&plan, ExecConfig::default().mode(ExecMode::Parallel)).unwrap();
     for batch in 0..3u64 {
         let r = exec.run_batch(&mut be, job.seed + batch).unwrap();
         assert!(r.verified);
@@ -490,7 +490,8 @@ fn pipelined_batches_still_match_plan_predictions() {
     let job = small_job(10);
     let plan = JobBuilder::new(&cl, &job).build().unwrap();
     let mut be = NativeBackend;
-    let mut exec = Executor::with_mode(&plan, ExecMode::Pipelined).unwrap();
+    let mut exec =
+        Executor::with_config(&plan, ExecConfig::default().mode(ExecMode::Pipelined)).unwrap();
     let seeds: Vec<u64> = (0..4u64).map(|b| job.seed + b).collect();
     let reports = exec.run_batches(&mut be, &seeds).unwrap();
     assert_eq!(reports.len(), 4);

@@ -6,7 +6,7 @@
 //! same loads.
 
 use hetcdc::coding::{builtin_coders, decoder, ShuffleCoder};
-use hetcdc::engine::{Executor, JobBuilder, NativeBackend};
+use hetcdc::engine::{ExecConfig, Executor, JobBuilder, NativeBackend};
 use hetcdc::model::cluster::ClusterSpec;
 use hetcdc::model::job::{JobSpec, ShuffleMode};
 use hetcdc::placement::{builtin_placers, Placer};
@@ -114,7 +114,7 @@ fn prop_built_plans_execute_verified_across_k() {
             Err(e) => return prop::fail(format!("K={k} storage={storage:?} N={n}: {e}")),
         };
         let mut be = NativeBackend;
-        let r = Executor::new(&plan)
+        let r = Executor::with_config(&plan, ExecConfig::default())
             .and_then(|mut exec| exec.run(&mut be))
             .map_err(|e| format!("K={k} storage={storage:?} N={n}: {e}"))?;
         prop::check(
@@ -133,7 +133,7 @@ fn two_executor_runs_of_one_plan_produce_identical_loads() {
     let job = small_job(12);
     let plan = JobBuilder::new(&cl, &job).placer("optimal-k3").build().unwrap();
     let mut be = NativeBackend;
-    let mut exec = Executor::new(&plan).unwrap();
+    let mut exec = Executor::with_config(&plan, ExecConfig::default()).unwrap();
     let a = exec.run_batch(&mut be, 7).unwrap();
     let b = exec.run_batch(&mut be, 99).unwrap();
     assert!(a.verified && b.verified);
@@ -150,6 +150,32 @@ fn two_executor_runs_of_one_plan_produce_identical_loads() {
     assert_eq!(a.wire_bytes, plan.predicted.wire_bytes);
     assert_eq!(a.shuffle_time_s, plan.predicted.shuffle_time_s);
     assert_eq!(a.map_time_s, plan.predicted.map_time_s);
+}
+
+#[test]
+fn combinatorial_grid_plan_json_is_byte_identical_across_builds() {
+    // Guards the BTreeMap-backed lattice bookkeeping in the combinatorial
+    // coder (`xtask lint` rule `unordered-iter`): two independent builds
+    // of the same grid plan must serialize to identical bytes.
+    let cl = cluster(&[4, 4, 4, 4, 4, 4, 4, 4]);
+    let job = small_job(8);
+    let build = || {
+        JobBuilder::new(&cl, &job)
+            .placer("combinatorial")
+            .mode(ShuffleMode::Coded)
+            .build()
+            .expect("grid plan build")
+    };
+    let (a, b) = (build(), build());
+    assert_eq!(a.fingerprint, b.fingerprint);
+    assert_eq!(a.to_json_string(), b.to_json_string());
+    // And the plan actually runs verified.
+    let mut be = NativeBackend;
+    let r = Executor::with_config(&a, ExecConfig::default())
+        .unwrap()
+        .run(&mut be)
+        .unwrap();
+    assert!(r.verified);
 }
 
 #[test]

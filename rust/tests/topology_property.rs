@@ -9,7 +9,7 @@
 //! artifacts and reports survive this PR byte-identical.
 
 use hetcdc::coding::builtin_coders;
-use hetcdc::engine::{Executor, JobBuilder, NativeBackend, Plan};
+use hetcdc::engine::{ExecConfig, Executor, JobBuilder, NativeBackend, Plan};
 use hetcdc::model::cluster::ClusterSpec;
 use hetcdc::model::job::{JobSpec, ShuffleMode};
 use hetcdc::net::{NetReport, Topology};
@@ -37,7 +37,7 @@ fn small_job(n: u64) -> JobSpec {
 
 fn run_report(plan: &Plan) -> NetReport {
     let mut be = NativeBackend;
-    let mut exec = Executor::new(plan).expect("executor");
+    let mut exec = Executor::with_config(plan, ExecConfig::default()).expect("executor");
     let r = exec.run_batch(&mut be, plan.job.seed).expect("batch");
     assert!(r.verified);
     exec.net_report()

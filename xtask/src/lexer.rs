@@ -1,0 +1,333 @@
+//! A minimal Rust source "lexer" for the determinism linter: strips
+//! comments, string literals, and char literals (replacing their bytes
+//! with spaces so line/column structure survives), and computes which
+//! lines live inside test-only code (`#[cfg(test)]` items, `#[test]`
+//! functions).
+//!
+//! This is deliberately *not* a real parser. The rules it feeds are
+//! repo-local conventions over a codebase with rustfmt-normalized style,
+//! so a line-oriented scan over comment-free text plus brace-depth
+//! tracking is enough — and keeps `xtask` at zero dependencies, matching
+//! the crate's no-deps ethos.
+
+/// One scanned source file.
+#[derive(Debug)]
+pub struct SourceFile {
+    /// Repo-relative path, `/`-separated (stable across platforms).
+    pub path: String,
+    /// Raw source lines, as read (used to find `// lint: allow(...)`
+    /// justification directives, which live in comments).
+    pub raw: Vec<String>,
+    /// Source lines with comments and string/char literal *contents*
+    /// blanked to spaces. Rule patterns match against these, so a rule
+    /// can never fire on prose inside a doc comment or a format string.
+    pub code: Vec<String>,
+    /// `test[i]` is true when line `i` (0-based) belongs to test-only
+    /// code: a `#[cfg(test)]` item (typically `mod tests { ... }`) or a
+    /// `#[test]` function, including the attribute lines themselves.
+    pub test: Vec<bool>,
+}
+
+impl SourceFile {
+    /// Scan one file's source text.
+    pub fn scan(path: String, source: &str) -> SourceFile {
+        let raw: Vec<String> = source.lines().map(|l| l.to_string()).collect();
+        let code = strip(source);
+        let test = test_mask(&code);
+        SourceFile { path, raw, code, test }
+    }
+
+    /// True when 1-based `line` is inside test-only code.
+    pub fn is_test_line(&self, line: usize) -> bool {
+        self.test.get(line.saturating_sub(1)).copied().unwrap_or(false)
+    }
+}
+
+/// Strip comments and literal contents from `source`, preserving the
+/// line structure. Handles nested block comments, raw strings with any
+/// number of `#`s, and the `'a` lifetime vs `'a'` char-literal
+/// ambiguity (a lifetime has no closing quote within two characters).
+fn strip(source: &str) -> Vec<String> {
+    #[derive(PartialEq)]
+    enum St {
+        Code,
+        Line,            // // comment (to end of line)
+        Block(usize),    // /* ... */ with nesting depth
+        Str,             // "..."
+        RawStr(usize),   // r##"..."## with `usize` hashes
+        Char,            // '...'
+    }
+    let mut st = St::Code;
+    let mut out = String::with_capacity(source.len());
+    let b = source.as_bytes();
+    let mut i = 0;
+    while i < b.len() {
+        let c = b[i];
+        match st {
+            St::Code => {
+                if c == b'/' && b.get(i + 1) == Some(&b'/') {
+                    st = St::Line;
+                    out.push_str("  ");
+                    i += 2;
+                } else if c == b'/' && b.get(i + 1) == Some(&b'*') {
+                    st = St::Block(1);
+                    out.push_str("  ");
+                    i += 2;
+                } else if c == b'"' {
+                    st = St::Str;
+                    out.push('"');
+                    i += 1;
+                } else if c == b'r' && matches!(b.get(i + 1), Some(b'"') | Some(b'#'))
+                    && raw_str_hashes(b, i).is_some()
+                {
+                    let h = raw_str_hashes(b, i).unwrap();
+                    st = St::RawStr(h);
+                    for _ in 0..(2 + h) {
+                        out.push(' ');
+                    }
+                    i += 2 + h; // r, hashes, opening quote
+                } else if c == b'\'' && is_char_literal(b, i) {
+                    st = St::Char;
+                    out.push('\'');
+                    i += 1;
+                } else {
+                    out.push(c as char);
+                    i += 1;
+                }
+            }
+            St::Line => {
+                if c == b'\n' {
+                    st = St::Code;
+                    out.push('\n');
+                } else {
+                    out.push(' ');
+                }
+                i += 1;
+            }
+            St::Block(d) => {
+                if c == b'*' && b.get(i + 1) == Some(&b'/') {
+                    st = if d == 1 { St::Code } else { St::Block(d - 1) };
+                    out.push_str("  ");
+                    i += 2;
+                } else if c == b'/' && b.get(i + 1) == Some(&b'*') {
+                    st = St::Block(d + 1);
+                    out.push_str("  ");
+                    i += 2;
+                } else {
+                    out.push(if c == b'\n' { '\n' } else { ' ' });
+                    i += 1;
+                }
+            }
+            St::Str => {
+                if c == b'\\' && i + 1 < b.len() {
+                    // Keep line structure across `\`-newline continuations.
+                    out.push(' ');
+                    out.push(if b[i + 1] == b'\n' { '\n' } else { ' ' });
+                    i += 2;
+                } else if c == b'"' {
+                    st = St::Code;
+                    out.push('"');
+                    i += 1;
+                } else {
+                    out.push(if c == b'\n' { '\n' } else { ' ' });
+                    i += 1;
+                }
+            }
+            St::RawStr(h) => {
+                if c == b'"' && b[i + 1..].iter().take(h).filter(|&&x| x == b'#').count() == h {
+                    st = St::Code;
+                    for _ in 0..(1 + h) {
+                        out.push(' ');
+                    }
+                    i += 1 + h;
+                } else {
+                    out.push(if c == b'\n' { '\n' } else { ' ' });
+                    i += 1;
+                }
+            }
+            St::Char => {
+                if c == b'\\' && i + 1 < b.len() {
+                    out.push_str("  ");
+                    i += 2;
+                } else if c == b'\'' {
+                    st = St::Code;
+                    out.push('\'');
+                    i += 1;
+                } else {
+                    out.push(' ');
+                    i += 1;
+                }
+            }
+        }
+    }
+    out.lines().map(|l| l.to_string()).collect()
+}
+
+/// At byte `i` (pointing at `r`), return `Some(hashes)` if this starts a
+/// raw string literal `r"`, `r#"`, `r##"`, ...
+fn raw_str_hashes(b: &[u8], i: usize) -> Option<usize> {
+    let mut j = i + 1;
+    let mut h = 0;
+    while b.get(j) == Some(&b'#') {
+        h += 1;
+        j += 1;
+    }
+    if b.get(j) == Some(&b'"') {
+        Some(h)
+    } else {
+        None
+    }
+}
+
+/// At byte `i` (pointing at `'`), decide char literal vs lifetime: a
+/// char literal closes its quote within a few bytes (`'x'`, `'\n'`,
+/// `'\u{1F600}'`); a lifetime (`'a`, `'static`) never closes.
+fn is_char_literal(b: &[u8], i: usize) -> bool {
+    if b.get(i + 1) == Some(&b'\\') {
+        return true; // escape sequence: always a char literal
+    }
+    // `'x'` — one scalar then a closing quote. Multi-byte UTF-8 chars
+    // also land within the lookahead window.
+    for j in (i + 2)..(i + 6).min(b.len()) {
+        if b[j] == b'\'' {
+            return true;
+        }
+        if b[j] == b'\n' {
+            return false;
+        }
+    }
+    false
+}
+
+/// Compute the test-only mask from comment-free lines: any item
+/// introduced by `#[cfg(test)]` (or `#[cfg(all(test, ...))]`) or
+/// `#[test]` is test code through its balanced-brace extent (or through
+/// its terminating `;` for brace-less items).
+fn test_mask(code: &[String]) -> Vec<bool> {
+    let mut mask = vec![false; code.len()];
+    let mut depth: i32 = 0;
+    // When inside a test region: the depth the region must return to,
+    // and whether we've entered the region's braces yet.
+    let mut region: Option<(i32, bool)> = None;
+    let mut attr_pending = false; // saw the attribute, awaiting the item
+    for (ln, line) in code.iter().enumerate() {
+        let t = line.trim();
+        let is_test_attr = t.starts_with("#[cfg(test)")
+            || t.starts_with("#[cfg(all(test")
+            || t == "#[test]"
+            || t.starts_with("#[test]");
+        if region.is_none() && is_test_attr {
+            attr_pending = true;
+        }
+        if region.is_some() || attr_pending {
+            mask[ln] = true;
+        }
+        for c in line.chars() {
+            match c {
+                '{' => {
+                    if attr_pending && region.is_none() {
+                        region = Some((depth, true));
+                        attr_pending = false;
+                    }
+                    depth += 1;
+                }
+                '}' => {
+                    depth -= 1;
+                    if let Some((d, entered)) = region {
+                        if entered && depth == d {
+                            region = None;
+                        }
+                    }
+                }
+                ';' => {
+                    // Brace-less test item (e.g. `#[cfg(test)] use ...;`)
+                    if attr_pending && region.is_none() {
+                        attr_pending = false;
+                    }
+                }
+                _ => {}
+            }
+        }
+    }
+    mask
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn strips_comments_and_strings() {
+        let src = concat!(
+            "let a = 1; // HashMap::new()\n",
+            "let s = \"Instant::now\"; /* unwrap() */ let b = 2;\n"
+        );
+        let code = strip(src);
+        assert!(!code[0].contains("HashMap"));
+        assert!(code[0].contains("let a = 1;"));
+        assert!(!code[1].contains("Instant"));
+        assert!(!code[1].contains("unwrap"));
+        assert!(code[1].contains("let b = 2;"));
+    }
+
+    #[test]
+    fn raw_strings_and_lifetimes() {
+        let src = "fn f<'a>(x: &'a str) { let r = r#\"panic!( \"#; let c = '\\''; let d = 'x'; }";
+        let code = strip(src).join("\n");
+        assert!(!code.contains("panic!"));
+        assert!(code.contains("fn f<'a>(x: &'a str)"));
+        assert!(!code.contains("'x'") || code.contains("''"), "{code}");
+    }
+
+    #[test]
+    fn nested_block_comments() {
+        let src = "/* outer /* inner unwrap() */ still comment */ let x = 1;";
+        let code = strip(src).join("\n");
+        assert!(!code.contains("unwrap"));
+        assert!(code.contains("let x = 1;"));
+    }
+
+    #[test]
+    fn test_mask_covers_cfg_test_mod_and_test_fn() {
+        let src = "\
+fn real() {
+    x.unwrap();
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn t() {
+        y.unwrap();
+    }
+}
+
+fn also_real() {}
+";
+        let f = SourceFile::scan("a.rs".into(), src);
+        assert!(!f.is_test_line(2)); // x.unwrap() in real()
+        assert!(f.is_test_line(5)); // #[cfg(test)]
+        assert!(f.is_test_line(9)); // y.unwrap()
+        assert!(!f.is_test_line(13)); // also_real
+    }
+
+    #[test]
+    fn test_mask_handles_braceless_items_and_inline_test_fn() {
+        let src = "\
+#[cfg(test)]
+use std::collections::HashSet;
+
+fn real() {}
+
+#[test]
+fn t() { z.unwrap(); }
+
+fn real2() {}
+";
+        let f = SourceFile::scan("a.rs".into(), src);
+        assert!(f.is_test_line(2)); // the use item
+        assert!(!f.is_test_line(4)); // real()
+        assert!(f.is_test_line(7)); // z.unwrap()
+        assert!(!f.is_test_line(9)); // real2()
+    }
+}

@@ -1,0 +1,131 @@
+//! `xtask`: repo-local developer tooling — currently the determinism
+//! linter (`cargo run -p xtask -- lint`).
+//!
+//! The linter machine-checks the invariants behind the crate's
+//! byte-identical-artifact contract (see DESIGN.md "Machine-checked
+//! determinism invariants"): no hash-ordered iteration in
+//! artifact-affecting modules, no wall-clock outside `bench/`, a
+//! panic-path ratchet that only goes down, a single `Executor`
+//! construction path, and index-ordered merges for plan-build fan-outs.
+//! Zero external dependencies, matching the main crate's ethos.
+
+pub mod lexer;
+pub mod ratchet;
+pub mod rules;
+
+use lexer::SourceFile;
+use rules::LintOutcome;
+use std::path::{Path, PathBuf};
+
+/// Directories scanned relative to the workspace root. `rust/tests/` is
+/// deliberately absent: integration tests are test code end to end.
+pub const SCAN_ROOTS: &[&str] = &["rust/src", "rust/benches", "rust/examples"];
+
+/// Result of a full repo lint.
+pub struct RepoLint {
+    pub outcome: LintOutcome,
+    pub ratchet: ratchet::RatchetReport,
+    pub files_scanned: usize,
+}
+
+impl RepoLint {
+    /// True when the lint passes: no hard violations and no file over
+    /// its panic ratchet.
+    pub fn clean(&self) -> bool {
+        self.outcome.violations.is_empty() && !self.ratchet.is_over()
+    }
+}
+
+/// Collect the repo-relative `/`-separated paths of every `.rs` file
+/// under the scan roots, sorted for deterministic report order.
+pub fn collect_sources(root: &Path) -> Result<Vec<PathBuf>, String> {
+    let mut files = Vec::new();
+    for scan in SCAN_ROOTS {
+        let dir = root.join(scan);
+        if dir.is_dir() {
+            walk(&dir, &mut files)?;
+        }
+    }
+    files.sort();
+    Ok(files)
+}
+
+fn walk(dir: &Path, out: &mut Vec<PathBuf>) -> Result<(), String> {
+    let entries =
+        std::fs::read_dir(dir).map_err(|e| format!("read_dir {}: {e}", dir.display()))?;
+    for entry in entries {
+        let entry = entry.map_err(|e| format!("read_dir {}: {e}", dir.display()))?;
+        let path = entry.path();
+        if path.is_dir() {
+            walk(&path, out)?;
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+/// Lint the repository at `root` against its committed ratchet baseline.
+pub fn lint_repo(root: &Path) -> Result<RepoLint, String> {
+    let files = collect_sources(root)?;
+    let mut outcome = LintOutcome::default();
+    for path in &files {
+        let rel = path
+            .strip_prefix(root)
+            .map_err(|_| format!("{} escapes the repo root", path.display()))?;
+        let rel = rel
+            .components()
+            .map(|c| c.as_os_str().to_string_lossy())
+            .collect::<Vec<_>>()
+            .join("/");
+        let source = std::fs::read_to_string(path)
+            .map_err(|e| format!("read {}: {e}", path.display()))?;
+        let scanned = SourceFile::scan(rel, &source);
+        rules::check_file(&scanned, &mut outcome);
+    }
+    let baseline = ratchet::load(root)?;
+    let ratchet = ratchet::compare(&outcome.panic_counts, &baseline);
+    Ok(RepoLint { outcome, ratchet, files_scanned: files.len() })
+}
+
+/// Render a full lint report to a string (the CLI prints this).
+pub fn render_report(lint: &RepoLint) -> String {
+    let mut s = String::new();
+    for v in &lint.outcome.violations {
+        s.push_str(&v.render());
+        s.push('\n');
+    }
+    for (file, cur, allowed) in &lint.ratchet.over {
+        s.push_str(&format!(
+            "{file}: [{}] {cur} non-test panic site(s), ratchet allows {allowed}\n",
+            rules::PANIC_PATH
+        ));
+        for site in lint
+            .outcome
+            .panic_sites
+            .iter()
+            .filter(|site| &site.path == file)
+        {
+            s.push_str(&format!("  {}\n", site.render()));
+        }
+    }
+    for (file, cur, allowed) in &lint.ratchet.under {
+        s.push_str(&format!(
+            "note: {file} is below its panic ratchet ({cur} < {allowed}) — \
+             run `cargo run -p xtask -- lint --bless` to lock in the progress\n"
+        ));
+    }
+    for file in &lint.ratchet.stale {
+        s.push_str(&format!(
+            "note: baseline entry for {file} is stale (file gone) — re-bless to drop it\n"
+        ));
+    }
+    let status = if lint.clean() { "clean" } else { "FAILED" };
+    s.push_str(&format!(
+        "lint {status}: {} file(s), {} violation(s), {} file(s) over the panic ratchet\n",
+        lint.files_scanned,
+        lint.outcome.violations.len(),
+        lint.ratchet.over.len()
+    ));
+    s
+}

@@ -1,0 +1,104 @@
+//! `cargo run -p xtask -- lint [--bless] [--root <path>]`
+//!
+//! Exit codes: 0 = clean, 1 = violations or ratchet regression,
+//! 2 = usage or I/O error.
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+const USAGE: &str = "\
+xtask — repo-local developer tooling
+
+USAGE:
+    cargo run -p xtask -- lint [--bless] [--root <path>]
+
+COMMANDS:
+    lint        run the determinism linter over rust/src, rust/benches,
+                rust/examples (see DESIGN.md \"Machine-checked
+                determinism invariants\")
+
+OPTIONS:
+    --bless     rewrite lint_baseline.json with the current panic-path
+                counts (only meaningful after a deliberate burndown)
+    --root      workspace root to lint (default: parent of xtask/,
+                via CARGO_MANIFEST_DIR)
+";
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let mut cmd = None;
+    let mut bless = false;
+    let mut root: Option<PathBuf> = None;
+    let mut it = args.iter();
+    while let Some(a) = it.next() {
+        match a.as_str() {
+            "lint" if cmd.is_none() => cmd = Some("lint"),
+            "--bless" => bless = true,
+            "--root" => match it.next() {
+                Some(p) => root = Some(PathBuf::from(p)),
+                None => {
+                    eprintln!("--root requires a path\n\n{USAGE}");
+                    return ExitCode::from(2);
+                }
+            },
+            "--help" | "-h" | "help" => {
+                print!("{USAGE}");
+                return ExitCode::SUCCESS;
+            }
+            other => {
+                eprintln!("unknown argument `{other}`\n\n{USAGE}");
+                return ExitCode::from(2);
+            }
+        }
+    }
+    if cmd != Some("lint") {
+        print!("{USAGE}");
+        return ExitCode::from(2);
+    }
+
+    // Default root: the workspace root, i.e. the parent of this crate.
+    let root = root.unwrap_or_else(|| {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+            .parent()
+            .map(|p| p.to_path_buf())
+            .unwrap_or_else(|| PathBuf::from("."))
+    });
+
+    let lint = match xtask::lint_repo(&root) {
+        Ok(l) => l,
+        Err(e) => {
+            eprintln!("xtask lint: {e}");
+            return ExitCode::from(2);
+        }
+    };
+
+    if bless {
+        if let Err(e) = xtask::ratchet::bless(&root, &lint.outcome.panic_counts) {
+            eprintln!("xtask lint --bless: {e}");
+            return ExitCode::from(2);
+        }
+        println!(
+            "blessed {}: {} file(s) with non-test panic sites",
+            xtask::ratchet::BASELINE_FILE,
+            lint.outcome.panic_counts.values().filter(|&&c| c > 0).count()
+        );
+        // Report against the freshly blessed baseline (always clean on
+        // the ratchet axis; hard violations still fail).
+        let lint = match xtask::lint_repo(&root) {
+            Ok(l) => l,
+            Err(e) => {
+                eprintln!("xtask lint: {e}");
+                return ExitCode::from(2);
+            }
+        };
+        print!("{}", xtask::render_report(&lint));
+        return if lint.clean() { ExitCode::SUCCESS } else { ExitCode::FAILURE };
+    }
+
+    print!("{}", xtask::render_report(&lint));
+    if lint.clean() {
+        ExitCode::SUCCESS
+    } else {
+        ExitCode::FAILURE
+    }
+}

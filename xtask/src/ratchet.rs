@@ -1,0 +1,179 @@
+//! The panic-path ratchet: a committed per-file count baseline
+//! (`lint_baseline.json`) that can only go down.
+//!
+//! The file is a flat `{"counts": {"path": n, ...}}` object; the parser
+//! below reads exactly that shape (written by `--bless`), keeping xtask
+//! at zero dependencies. Counts cover non-test panic sites (`unwrap`,
+//! `expect`, `panic!`, `unreachable!`, `todo!`, `unimplemented!`) in
+//! `rust/src/**`; files with zero sites are omitted.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// Baseline file name, committed at the workspace root.
+pub const BASELINE_FILE: &str = "lint_baseline.json";
+
+/// Outcome of comparing current counts against the baseline.
+#[derive(Debug, Default)]
+pub struct RatchetReport {
+    /// Files whose count exceeds the baseline (file, current, allowed):
+    /// hard failures.
+    pub over: Vec<(String, usize, usize)>,
+    /// Files now strictly below their baseline (file, current, allowed):
+    /// informational — re-bless to lock in the progress.
+    pub under: Vec<(String, usize, usize)>,
+    /// Baseline entries whose file is no longer scanned (deleted or
+    /// moved): informational — re-bless to drop them.
+    pub stale: Vec<String>,
+}
+
+impl RatchetReport {
+    pub fn is_over(&self) -> bool {
+        !self.over.is_empty()
+    }
+
+    pub fn can_tighten(&self) -> bool {
+        !self.under.is_empty() || !self.stale.is_empty()
+    }
+}
+
+/// Compare current per-file counts against the committed baseline.
+/// Files absent from the baseline have an allowance of zero — new code
+/// must be panic-free from the start.
+pub fn compare(
+    current: &BTreeMap<String, usize>,
+    baseline: &BTreeMap<String, usize>,
+) -> RatchetReport {
+    let mut report = RatchetReport::default();
+    for (file, &count) in current {
+        let allowed = baseline.get(file).copied().unwrap_or(0);
+        if count > allowed {
+            report.over.push((file.clone(), count, allowed));
+        } else if count < allowed {
+            report.under.push((file.clone(), count, allowed));
+        }
+    }
+    for (file, &allowed) in baseline {
+        if allowed > 0 && !current.contains_key(file) {
+            report.stale.push(file.clone());
+        }
+    }
+    report
+}
+
+/// Serialize counts (nonzero entries only, sorted by path) to the
+/// baseline JSON text.
+pub fn to_json(counts: &BTreeMap<String, usize>) -> String {
+    let mut s = String::from("{\n  \"rule\": \"panic-path\",\n  \"counts\": {\n");
+    let nonzero: Vec<_> = counts.iter().filter(|(_, &c)| c > 0).collect();
+    for (i, (file, count)) in nonzero.iter().enumerate() {
+        let comma = if i + 1 == nonzero.len() { "" } else { "," };
+        s.push_str(&format!("    \"{file}\": {count}{comma}\n"));
+    }
+    s.push_str("  }\n}\n");
+    s
+}
+
+/// Parse the baseline JSON. Only the exact shape written by
+/// [`to_json`] is supported: a `"counts"` object of string keys to
+/// non-negative integers (other top-level keys are ignored).
+pub fn parse(text: &str) -> Result<BTreeMap<String, usize>, String> {
+    let counts_pos = text
+        .find("\"counts\"")
+        .ok_or_else(|| "baseline: missing \"counts\" key".to_string())?;
+    let rest = &text[counts_pos + "\"counts\"".len()..];
+    let brace = rest
+        .find('{')
+        .ok_or_else(|| "baseline: \"counts\" is not an object".to_string())?;
+    let body = &rest[brace + 1..];
+    let end = body
+        .find('}')
+        .ok_or_else(|| "baseline: unterminated counts object".to_string())?;
+    let mut counts = BTreeMap::new();
+    for entry in body[..end].split(',') {
+        let entry = entry.trim();
+        if entry.is_empty() {
+            continue;
+        }
+        let (key, value) = entry
+            .split_once(':')
+            .ok_or_else(|| format!("baseline: malformed entry `{entry}`"))?;
+        let key = key.trim();
+        let key = key
+            .strip_prefix('"')
+            .and_then(|k| k.strip_suffix('"'))
+            .ok_or_else(|| format!("baseline: unquoted key `{key}`"))?;
+        let value: usize = value
+            .trim()
+            .parse()
+            .map_err(|_| format!("baseline: non-integer count for `{key}`"))?;
+        counts.insert(key.to_string(), value);
+    }
+    Ok(counts)
+}
+
+/// Load the baseline from `<root>/lint_baseline.json`. A missing file is
+/// an empty baseline (zero allowance everywhere) — the ratchet then
+/// fails until `--bless` commits one.
+pub fn load(root: &Path) -> Result<BTreeMap<String, usize>, String> {
+    let path = root.join(BASELINE_FILE);
+    if !path.exists() {
+        return Ok(BTreeMap::new());
+    }
+    let text = std::fs::read_to_string(&path)
+        .map_err(|e| format!("read {}: {e}", path.display()))?;
+    parse(&text)
+}
+
+/// Write counts to `<root>/lint_baseline.json` (the `--bless` path).
+pub fn bless(root: &Path, counts: &BTreeMap<String, usize>) -> Result<(), String> {
+    let path = root.join(BASELINE_FILE);
+    std::fs::write(&path, to_json(counts)).map_err(|e| format!("write {}: {e}", path.display()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn counts(pairs: &[(&str, usize)]) -> BTreeMap<String, usize> {
+        pairs.iter().map(|(k, v)| (k.to_string(), *v)).collect()
+    }
+
+    #[test]
+    fn roundtrip() {
+        let c = counts(&[("rust/src/a.rs", 3), ("rust/src/b.rs", 1), ("rust/src/z.rs", 0)]);
+        let parsed = parse(&to_json(&c)).unwrap();
+        // zero-count entries are dropped on write
+        assert_eq!(parsed, counts(&[("rust/src/a.rs", 3), ("rust/src/b.rs", 1)]));
+    }
+
+    #[test]
+    fn empty_counts_roundtrip() {
+        assert_eq!(parse(&to_json(&BTreeMap::new())).unwrap(), BTreeMap::new());
+    }
+
+    #[test]
+    fn ratchet_direction() {
+        let baseline = counts(&[("a.rs", 3), ("gone.rs", 2)]);
+        let current = counts(&[("a.rs", 2), ("new.rs", 1)]);
+        let r = compare(&current, &baseline);
+        assert_eq!(r.over, vec![("new.rs".to_string(), 1, 0)]);
+        assert_eq!(r.under, vec![("a.rs".to_string(), 2, 3)]);
+        assert_eq!(r.stale, vec!["gone.rs".to_string()]);
+        assert!(r.is_over() && r.can_tighten());
+    }
+
+    #[test]
+    fn regression_is_over() {
+        let baseline = counts(&[("a.rs", 1)]);
+        let current = counts(&[("a.rs", 2)]);
+        let r = compare(&current, &baseline);
+        assert_eq!(r.over, vec![("a.rs".to_string(), 2, 1)]);
+    }
+
+    #[test]
+    fn malformed_baseline_is_an_error() {
+        assert!(parse("{}").is_err());
+        assert!(parse(r#"{"counts": {"a.rs": "x"}}"#).is_err());
+    }
+}

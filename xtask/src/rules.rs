@@ -1,0 +1,625 @@
+//! The determinism rules. Each rule is a line-and-scope-aware scan over
+//! a [`SourceFile`]'s comment-free text; every rule maps to one
+//! invariant of the crate's byte-identical-artifact contract (see
+//! DESIGN.md "Machine-checked determinism invariants").
+//!
+//! Justifications: a site can be exempted with a written reason using
+//!
+//! ```text
+//! // lint: allow(<rule>): <why>
+//! ```
+//!
+//! on the offending line or the line immediately above it. The reason is
+//! mandatory — a bare `allow` without a `why` does not count. The
+//! panic-path rule is the exception: it is governed by the committed
+//! ratchet baseline (`lint_baseline.json`), not by per-site allows.
+
+use crate::lexer::SourceFile;
+use std::collections::{BTreeMap, BTreeSet};
+
+/// Stable rule identifiers — these are the names the `allow(...)`
+/// grammar, the reports, and DESIGN.md use.
+pub const UNORDERED_ITER: &str = "unordered-iter";
+pub const WALL_CLOCK: &str = "wall-clock";
+pub const PANIC_PATH: &str = "panic-path";
+pub const CONSTRUCTION_PATH: &str = "construction-path";
+pub const UNORDERED_MERGE: &str = "unordered-merge";
+
+/// One rule violation at a specific site.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Violation {
+    pub rule: &'static str,
+    pub path: String,
+    /// 1-based line number.
+    pub line: usize,
+    pub message: String,
+}
+
+impl Violation {
+    pub fn render(&self) -> String {
+        format!("{}:{}: [{}] {}", self.path, self.line, self.rule, self.message)
+    }
+}
+
+/// Everything one lint pass produces.
+#[derive(Debug, Default)]
+pub struct LintOutcome {
+    /// Hard violations (rules 1, 2, 4, 5) net of justifications.
+    pub violations: Vec<Violation>,
+    /// Non-test panic-path site count per file (rule 3), to be compared
+    /// against the committed ratchet baseline.
+    pub panic_counts: BTreeMap<String, usize>,
+    /// The individual panic sites, for reporting when a file exceeds its
+    /// ratchet budget.
+    pub panic_sites: Vec<Violation>,
+}
+
+/// Run every rule over one file, appending into `out`.
+pub fn check_file(f: &SourceFile, out: &mut LintOutcome) {
+    if in_artifact_modules(&f.path) {
+        rule_unordered_iter(f, out);
+    }
+    if rule2_scope(&f.path) {
+        rule_wall_clock(f, out);
+    }
+    if rule3_scope(&f.path) {
+        rule_panic_paths(f, out);
+    }
+    if rule4_scope(&f.path) {
+        rule_construction_path(f, out);
+    }
+    if in_plan_build_modules(&f.path) {
+        rule_unordered_merge(f, out);
+    }
+}
+
+// ---------------------------------------------------------------- scoping
+
+/// Artifact-affecting modules: everything whose in-memory order can leak
+/// into plan JSON bytes or metered costs (rule 1).
+fn in_artifact_modules(path: &str) -> bool {
+    path.starts_with("rust/src/placement/")
+        || path.starts_with("rust/src/coding/")
+        || path.starts_with("rust/src/lp/")
+        || path == "rust/src/engine/plan.rs"
+        || path == "rust/src/engine/cache.rs"
+}
+
+/// Plan-build modules: where `thread::scope` fan-outs construct plan
+/// structure and must merge in index order (rule 5).
+fn in_plan_build_modules(path: &str) -> bool {
+    path.starts_with("rust/src/placement/")
+        || path.starts_with("rust/src/coding/")
+        || path.starts_with("rust/src/lp/")
+        || path == "rust/src/engine/plan.rs"
+}
+
+/// Wall-clock sources are banned everywhere in the library except the
+/// opt-in timing harness (rule 2): the virtual clock in `net/sim.rs` is
+/// the only time source metering may read.
+fn rule2_scope(path: &str) -> bool {
+    path.starts_with("rust/src/") && !path.starts_with("rust/src/bench/")
+}
+
+/// Panic paths are ratcheted across the whole library (rule 3).
+fn rule3_scope(path: &str) -> bool {
+    path.starts_with("rust/src/")
+}
+
+/// The deprecated `Executor` construction shims may appear only in
+/// `engine/executor.rs` itself (their definition + shim-equivalence
+/// test) and in test code (rule 4).
+fn rule4_scope(path: &str) -> bool {
+    (path.starts_with("rust/src/")
+        || path.starts_with("rust/benches/")
+        || path.starts_with("rust/examples/"))
+        && path != "rust/src/engine/executor.rs"
+}
+
+// ----------------------------------------------------------- justifications
+
+/// True when 1-based `line` (or the line immediately above it) carries a
+/// `// lint: allow(<rule>): <why>` directive with a non-empty reason.
+pub fn justified(f: &SourceFile, line: usize, rule: &str) -> bool {
+    let has = |l: usize| -> bool {
+        l >= 1
+            && f.raw
+                .get(l - 1)
+                .map(|raw| directive_allows(raw, rule))
+                .unwrap_or(false)
+    };
+    has(line) || has(line - 1)
+}
+
+/// Parse `lint: allow(<rule>): <why>` out of one raw line.
+fn directive_allows(raw: &str, rule: &str) -> bool {
+    let Some(pos) = raw.find("lint: allow(") else { return false };
+    let rest = &raw[pos + "lint: allow(".len()..];
+    let Some(close) = rest.find(')') else { return false };
+    if rest[..close].trim() != rule {
+        return false;
+    }
+    let after = &rest[close + 1..];
+    let Some(why) = after.strip_prefix(':') else { return false };
+    !why.trim().is_empty()
+}
+
+// ------------------------------------------------- rule 1: unordered-iter
+
+/// Methods whose results depend on `HashMap`/`HashSet` internal order.
+const ITER_METHODS: &[&str] = &[
+    "iter",
+    "iter_mut",
+    "into_iter",
+    "keys",
+    "into_keys",
+    "values",
+    "values_mut",
+    "into_values",
+    "drain",
+    "retain",
+];
+
+/// Ban `HashMap`/`HashSet` iteration in artifact-affecting modules: any
+/// hash-ordered walk there can leak nondeterministic order into plan
+/// JSON bytes. Keyed lookups (`get`, `contains_key`, `map[&k]` indexing)
+/// are fine — only *iteration* is order-dependent.
+fn rule_unordered_iter(f: &SourceFile, out: &mut LintOutcome) {
+    let hashed = hash_typed_names(f);
+    for (i, line) in f.code.iter().enumerate() {
+        let ln = i + 1;
+        if f.is_test_line(ln) {
+            continue;
+        }
+        // `name.iter()` / `name.keys()` / ... on a hash-typed binding.
+        for (name, method) in ident_method_calls(line, ITER_METHODS) {
+            if hashed.contains(&name) && !justified(f, ln, UNORDERED_ITER) {
+                out.violations.push(Violation {
+                    rule: UNORDERED_ITER,
+                    path: f.path.clone(),
+                    line: ln,
+                    message: format!(
+                        "`{name}.{method}()` iterates a HashMap/HashSet in an \
+                         artifact-affecting module; use BTreeMap/BTreeSet or sort \
+                         before anything order-dependent"
+                    ),
+                });
+            }
+        }
+        // `for x in &name` / `for x in name` over a hash-typed binding.
+        if let Some(target) = for_loop_target(line) {
+            let last = target.rsplit('.').next().unwrap_or(&target);
+            if hashed.contains(last) && !justified(f, ln, UNORDERED_ITER) {
+                out.violations.push(Violation {
+                    rule: UNORDERED_ITER,
+                    path: f.path.clone(),
+                    line: ln,
+                    message: format!(
+                        "`for .. in {target}` iterates a HashMap/HashSet in an \
+                         artifact-affecting module; use BTreeMap/BTreeSet or sort first"
+                    ),
+                });
+            }
+        }
+    }
+}
+
+/// Collect identifiers bound or declared with a `HashMap`/`HashSet`
+/// type in this file: `let [mut] x = HashMap::new()`, `x: HashMap<..>`
+/// (bindings, params, struct fields), `let [mut] x: HashSet<..> = ..`,
+/// and turbofish collects `let x = ...collect::<HashMap<..>>()`.
+fn hash_typed_names(f: &SourceFile) -> BTreeSet<String> {
+    let mut names = BTreeSet::new();
+    for line in &f.code {
+        if !line.contains("HashMap") && !line.contains("HashSet") {
+            continue;
+        }
+        // `ident: HashMap<` / `ident: HashSet<` — fields, params, ascriptions.
+        for marker in ["HashMap", "HashSet"] {
+            let mut start = 0;
+            while let Some(p) = line[start..].find(marker) {
+                let at = start + p;
+                if let Some(name) = ident_before_colon(&line[..at]) {
+                    names.insert(name);
+                }
+                start = at + marker.len();
+            }
+        }
+        // `let [mut] ident = HashMap::new()` etc (and turbofish collect).
+        if let Some(eq) = line.find('=') {
+            let (lhs, rhs) = line.split_at(eq);
+            if rhs.contains("HashMap") || rhs.contains("HashSet") {
+                if let Some(name) = let_binding_name(lhs) {
+                    names.insert(name);
+                }
+            }
+        }
+    }
+    names
+}
+
+/// From text ending just before a `HashMap`/`HashSet` token, extract the
+/// identifier of an `ident:` prefix (allowing whitespace, `&`, `&mut`).
+fn ident_before_colon(before: &str) -> Option<String> {
+    let mut t = before.trim_end();
+    t = t.strip_suffix("mut").unwrap_or(t).trim_end();
+    while let Some(s) = t.strip_suffix('&') {
+        t = s.trim_end();
+    }
+    let t = t.strip_suffix(':')?;
+    let t = t.trim_end();
+    let name: String = t
+        .chars()
+        .rev()
+        .take_while(|c| c.is_alphanumeric() || *c == '_')
+        .collect::<String>()
+        .chars()
+        .rev()
+        .collect();
+    if name.is_empty() || name.chars().next().is_some_and(|c| c.is_ascii_digit()) {
+        None
+    } else {
+        Some(name)
+    }
+}
+
+/// From the left-hand side of an `=`, extract a `let [mut] name` binding.
+fn let_binding_name(lhs: &str) -> Option<String> {
+    let t = lhs.trim();
+    let t = t.strip_prefix("let ")?;
+    let t = t.trim_start();
+    let t = t.strip_prefix("mut ").unwrap_or(t).trim_start();
+    let name: String = t
+        .chars()
+        .take_while(|c| c.is_alphanumeric() || *c == '_')
+        .collect();
+    if name.is_empty() {
+        None
+    } else {
+        Some(name)
+    }
+}
+
+/// Find `ident.method(` call sites on one line for methods in `set`,
+/// returning (ident, method) pairs. The ident is the path segment
+/// immediately before the dot (`a.b.iter()` yields `b`).
+fn ident_method_calls(line: &str, set: &[&str]) -> Vec<(String, String)> {
+    let mut found = Vec::new();
+    let b = line.as_bytes();
+    for &m in set {
+        let pat = format!(".{m}");
+        let mut start = 0;
+        while let Some(p) = line[start..].find(&pat) {
+            let at = start + p;
+            start = at + pat.len();
+            // must be a call: next non-space char after the method name is `(`
+            let after = &line[at + pat.len()..];
+            if !after.trim_start().starts_with('(') {
+                continue;
+            }
+            // method name must end exactly here (`.iter(` not `.iterate(`)
+            if after
+                .chars()
+                .next()
+                .is_some_and(|c| c.is_alphanumeric() || c == '_')
+            {
+                continue;
+            }
+            // walk back over the identifier before the dot
+            let mut j = at;
+            while j > 0 && (b[j - 1].is_ascii_alphanumeric() || b[j - 1] == b'_') {
+                j -= 1;
+            }
+            if j == at {
+                continue; // `.iter()` chained off `)` or `]` — not a named binding
+            }
+            found.push((line[j..at].to_string(), m.to_string()));
+        }
+    }
+    found
+}
+
+/// Extract the iterated expression of a `for .. in EXPR {` line when it
+/// is a plain (possibly `&`-borrowed) path. Returns `None` for indexed
+/// expressions (`map[&k]` yields the *value*, not map order) and calls
+/// (handled by the method scan).
+fn for_loop_target(line: &str) -> Option<String> {
+    let t = line.trim_start();
+    if !t.starts_with("for ") {
+        return None;
+    }
+    let in_pos = t.find(" in ")?;
+    let expr = t[in_pos + 4..].trim();
+    let expr = expr.split('{').next().unwrap_or(expr).trim();
+    let expr = expr.strip_prefix("&mut ").unwrap_or(expr);
+    let expr = expr.strip_prefix('&').unwrap_or(expr);
+    // plain path only: idents and dots
+    if expr.is_empty() || !expr.chars().all(|c| c.is_alphanumeric() || c == '_' || c == '.') {
+        return None;
+    }
+    Some(expr.to_string())
+}
+
+// -------------------------------------------------- rule 2: wall-clock
+
+/// Wall-clock reads are banned outside `bench/`: metering must go
+/// through the deterministic virtual clock, or artifacts grow
+/// machine-dependent bytes.
+fn rule_wall_clock(f: &SourceFile, out: &mut LintOutcome) {
+    for (i, line) in f.code.iter().enumerate() {
+        let ln = i + 1;
+        if f.is_test_line(ln) {
+            continue;
+        }
+        for tok in ["Instant::now", "SystemTime"] {
+            if line.contains(tok) && !justified(f, ln, WALL_CLOCK) {
+                out.violations.push(Violation {
+                    rule: WALL_CLOCK,
+                    path: f.path.clone(),
+                    line: ln,
+                    message: format!(
+                        "`{tok}` outside bench/: the net simulator's virtual clock \
+                         is the only time source for metering"
+                    ),
+                });
+            }
+        }
+    }
+}
+
+// -------------------------------------------------- rule 3: panic paths
+
+/// Panic-path tokens (method calls and macros) counted by the ratchet.
+const PANIC_TOKENS: &[&str] = &[
+    ".unwrap()",
+    ".expect(",
+    "panic!(",
+    "unreachable!(",
+    "todo!(",
+    "unimplemented!(",
+];
+
+/// Count non-test panic sites per file. Enforcement happens against the
+/// committed `lint_baseline.json` ratchet, not per-site allows: the
+/// count may only go down (re-bless with `--bless` after a burndown).
+fn rule_panic_paths(f: &SourceFile, out: &mut LintOutcome) {
+    let mut count = 0usize;
+    for (i, line) in f.code.iter().enumerate() {
+        let ln = i + 1;
+        if f.is_test_line(ln) {
+            continue;
+        }
+        for tok in PANIC_TOKENS {
+            let mut start = 0;
+            while let Some(p) = line[start..].find(tok) {
+                let at = start + p;
+                start = at + tok.len();
+                // `.unwrap()` must not also double-count `.unwrap().expect(`
+                // sites — each token occurrence is one site, which is what
+                // we want; but avoid matching `.expect(` inside
+                // `.expect_err(` style names: the token already ends in
+                // `(` so a longer method name cannot match.
+                count += 1;
+                out.panic_sites.push(Violation {
+                    rule: PANIC_PATH,
+                    path: f.path.clone(),
+                    line: ln,
+                    message: format!("`{}` in non-test library code", tok.trim_matches('.')),
+                });
+            }
+        }
+    }
+    if count > 0 || f.path.starts_with("rust/src/") {
+        out.panic_counts.insert(f.path.clone(), count);
+    }
+}
+
+// ------------------------------------------- rule 4: construction path
+
+/// The deprecated `Executor::new` / `Executor::with_mode` /
+/// `.set_threads(..)` shims are banned outside their definition site and
+/// tests: `Executor::with_config` is the single construction path, so
+/// every executor in the codebase is configured the same way.
+fn rule_construction_path(f: &SourceFile, out: &mut LintOutcome) {
+    for (i, line) in f.code.iter().enumerate() {
+        let ln = i + 1;
+        if f.is_test_line(ln) {
+            continue;
+        }
+        for tok in ["Executor::new", "Executor::with_mode", ".set_threads("] {
+            if line.contains(tok) && !justified(f, ln, CONSTRUCTION_PATH) {
+                out.violations.push(Violation {
+                    rule: CONSTRUCTION_PATH,
+                    path: f.path.clone(),
+                    line: ln,
+                    message: format!(
+                        "deprecated construction shim `{tok}`: use \
+                         `Executor::with_config(plan, ExecConfig ..)`"
+                    ),
+                });
+            }
+        }
+    }
+}
+
+// ---------------------------------------------- rule 5: ordered merge
+
+/// Markers that indicate an index-ordered merge of fan-out results.
+const MERGE_MARKERS: &[&str] = &["shard_indexed", "sort_by_key", "sort_unstable_by_key", ".sort("];
+
+/// `thread::scope` fan-outs in plan-build modules must merge their
+/// results in index order — through `util/shard.rs::shard_indexed` or an
+/// explicit index sort — or plan bytes could depend on thread finish
+/// order. Heuristic: the scope's closure body (balanced parens from the
+/// `scope(` call) plus a few following lines must contain a merge
+/// marker, or the site carries a justification.
+fn rule_unordered_merge(f: &SourceFile, out: &mut LintOutcome) {
+    for (i, line) in f.code.iter().enumerate() {
+        let ln = i + 1;
+        if f.is_test_line(ln) {
+            continue;
+        }
+        if !line.contains("thread::scope") {
+            continue;
+        }
+        let end = scope_call_end(f, i);
+        let window_end = (end + 10).min(f.code.len());
+        let window = &f.code[i..window_end];
+        let merged = window.iter().any(|l| MERGE_MARKERS.iter().any(|m| l.contains(m)));
+        if !merged && !justified(f, ln, UNORDERED_MERGE) {
+            out.violations.push(Violation {
+                rule: UNORDERED_MERGE,
+                path: f.path.clone(),
+                line: ln,
+                message: "`thread::scope` fan-out without an index-ordered merge \
+                          (`shard_indexed` / `sort_by_key`) in a plan-build module"
+                    .to_string(),
+            });
+        }
+    }
+}
+
+/// Find the 0-based line index just past the `thread::scope(..)` call
+/// starting on line `start`, by balancing parens from the first `(`
+/// after the `scope` token.
+fn scope_call_end(f: &SourceFile, start: usize) -> usize {
+    let mut depth = 0i32;
+    let mut seen_open = false;
+    for (off, line) in f.code[start..].iter().enumerate() {
+        let text: &str = if off == 0 {
+            let p = line.find("thread::scope").unwrap_or(0);
+            &line[p..]
+        } else {
+            line
+        };
+        for c in text.chars() {
+            match c {
+                '(' => {
+                    depth += 1;
+                    seen_open = true;
+                }
+                ')' => {
+                    depth -= 1;
+                    if seen_open && depth == 0 {
+                        return start + off + 1;
+                    }
+                }
+                _ => {}
+            }
+        }
+    }
+    f.code.len()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lexer::SourceFile;
+
+    fn lint(path: &str, src: &str) -> LintOutcome {
+        let f = SourceFile::scan(path.to_string(), src);
+        let mut out = LintOutcome::default();
+        check_file(&f, &mut out);
+        out
+    }
+
+    #[test]
+    fn hashmap_iteration_flagged_only_in_artifact_modules() {
+        let src = "\
+use std::collections::HashMap;
+fn f() {
+    let mut m: HashMap<u32, u32> = HashMap::new();
+    for (k, v) in &m { use_it(k, v); }
+    let s: u32 = m.values().sum();
+}
+";
+        let out = lint("rust/src/coding/x.rs", src);
+        let iters: Vec<_> =
+            out.violations.iter().filter(|v| v.rule == UNORDERED_ITER).collect();
+        assert_eq!(iters.len(), 2, "{:?}", out.violations);
+        // Same file outside the artifact modules: no iteration rule.
+        let out = lint("rust/src/net/x.rs", src);
+        assert!(out.violations.iter().all(|v| v.rule != UNORDERED_ITER));
+    }
+
+    #[test]
+    fn keyed_lookup_and_indexing_not_flagged() {
+        let src = "\
+fn f(m: &HashMap<u32, Vec<u32>>) {
+    let v = m.get(&3);
+    if m.contains_key(&4) {}
+    for x in &m[&5] { use_it(x); }
+}
+";
+        let out = lint("rust/src/coding/x.rs", src);
+        assert!(out.violations.is_empty(), "{:?}", out.violations);
+    }
+
+    #[test]
+    fn justified_iteration_passes() {
+        let src = "\
+fn f(m: &HashMap<u32, u32>) {
+    // lint: allow(unordered-iter): order-insensitive reduction (sum)
+    let s: u32 = m.values().sum();
+}
+";
+        let out = lint("rust/src/coding/x.rs", src);
+        assert!(out.violations.is_empty(), "{:?}", out.violations);
+        // A bare allow without a reason does NOT count.
+        let src = src.replace(": order-insensitive reduction (sum)", ":");
+        let out = lint("rust/src/coding/x.rs", &src);
+        assert_eq!(out.violations.len(), 1);
+    }
+
+    #[test]
+    fn wall_clock_flagged_outside_bench() {
+        let src = "fn f() { let t = std::time::Instant::now(); }\n";
+        assert_eq!(lint("rust/src/engine/x.rs", src).violations.len(), 1);
+        assert!(lint("rust/src/bench/x.rs", src).violations.is_empty());
+    }
+
+    #[test]
+    fn panic_paths_counted_not_hard_failed() {
+        let src = "\
+fn f(x: Option<u32>) -> u32 {
+    x.unwrap()
+}
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn t() { Some(1).unwrap(); }
+}
+";
+        let out = lint("rust/src/engine/x.rs", src);
+        assert!(out.violations.is_empty());
+        assert_eq!(out.panic_counts.get("rust/src/engine/x.rs"), Some(&1));
+    }
+
+    #[test]
+    fn construction_shims_flagged_outside_executor_rs() {
+        let src = "fn f(p: &Plan) { let e = Executor::new(p); }\n";
+        assert_eq!(lint("rust/src/engine/exec.rs", src).violations.len(), 1);
+        assert!(lint("rust/src/engine/executor.rs", src).violations.is_empty());
+        let test_src = format!("#[test]\nfn t() {{ {} }}\n", "let e = Executor::new(p);");
+        assert!(lint("rust/src/engine/exec.rs", &test_src).violations.is_empty());
+    }
+
+    #[test]
+    fn unmerged_thread_scope_flagged_in_plan_build() {
+        let src = "\
+fn build() -> Vec<u32> {
+    let mut all = Vec::new();
+    std::thread::scope(|s| {
+        s.spawn(|| all.push(1));
+    });
+    all
+}
+";
+        let out = lint("rust/src/placement/x.rs", src);
+        assert_eq!(out.violations.len(), 1, "{:?}", out.violations);
+        assert_eq!(out.violations[0].rule, UNORDERED_MERGE);
+        // An index-ordered merge right after the scope satisfies the rule.
+        let merged = src.replace("    all\n", "    all.sort_by_key(|&x| x);\n    all\n");
+        assert!(lint("rust/src/placement/x.rs", &merged).violations.is_empty());
+    }
+}

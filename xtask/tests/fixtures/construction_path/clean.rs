@@ -1,0 +1,15 @@
+//! Fixture: the single construction path.
+fn run(plan: &Plan) -> Result<()> {
+    let mut exec = Executor::with_config(plan, ExecConfig::default())?;
+    let cfg = ExecConfig::default().mode(ExecMode::Parallel).threads(4);
+    let mut par = Executor::with_config(plan, cfg)?;
+    exec.run(())
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn shims_allowed_in_tests() {
+        let _ = Executor::new(&plan());
+    }
+}

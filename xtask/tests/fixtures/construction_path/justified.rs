@@ -1,0 +1,7 @@
+//! Fixture: a justified shim use (e.g. an FFI boundary pinned to the
+//! old signature).
+fn legacy_entry(plan: &Plan) -> Result<()> {
+    // lint: allow(construction-path): C ABI wrapper pinned to the 0.1 signature
+    let mut exec = Executor::new(plan)?;
+    exec.run(())
+}

@@ -1,0 +1,7 @@
+//! Fixture: deprecated Executor construction shims outside executor.rs.
+fn run(plan: &Plan) -> Result<()> {
+    let mut exec = Executor::new(plan)?;
+    let mut par = Executor::with_mode(plan, ExecMode::Parallel)?;
+    par.set_threads(4);
+    exec.run(())
+}

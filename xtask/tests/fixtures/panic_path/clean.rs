@@ -1,0 +1,12 @@
+//! Fixture: typed-error style; test code may panic freely.
+fn f(x: Option<u32>) -> Result<u32, String> {
+    x.ok_or_else(|| "x must be set".to_string())
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn tests_may_unwrap() {
+        assert_eq!(super::f(Some(3)).unwrap(), 3);
+    }
+}

@@ -1,0 +1,12 @@
+//! Fixture: panic paths in non-test library code (ratcheted, 4 sites).
+fn f(x: Option<u32>, y: Result<u32, ()>) -> u32 {
+    let a = x.unwrap();
+    let b = y.expect("y must be set");
+    if a > b {
+        panic!("a > b");
+    }
+    match a {
+        0 => a + b,
+        _ => unreachable!("only zero reaches here"),
+    }
+}

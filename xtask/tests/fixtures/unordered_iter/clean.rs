@@ -1,0 +1,34 @@
+//! Fixture: ordered collections iterate freely; hash maps are only
+//! used for keyed lookup (never iterated), and `map[&k]` indexing
+//! yields the value, not map order.
+use std::collections::{BTreeMap, HashMap};
+
+fn build(holders: &[u32], index: &HashMap<u32, Vec<u32>>) -> Vec<u32> {
+    let mut counts: BTreeMap<u32, usize> = BTreeMap::new();
+    for &h in holders {
+        *counts.entry(h).or_insert(0) += 1;
+    }
+    let mut out = Vec::new();
+    for (mask, n) in &counts {
+        out.push(mask + *n as u32);
+    }
+    if index.contains_key(&7) {
+        for x in &index[&7] {
+            out.push(*x);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use std::collections::HashSet;
+
+    #[test]
+    fn test_code_is_exempt() {
+        let s: HashSet<u32> = [1, 2].into_iter().collect();
+        for x in &s {
+            assert!(*x > 0);
+        }
+    }
+}

@@ -1,0 +1,7 @@
+//! Fixture: a hash iteration with a written order-insensitivity argument.
+use std::collections::HashMap;
+
+fn uniform(counts: &HashMap<u32, usize>, per: usize) -> bool {
+    // lint: allow(unordered-iter): any()/all() over values is order-insensitive
+    counts.values().all(|&c| c == per)
+}

@@ -1,0 +1,16 @@
+//! Fixture: HashMap/HashSet iteration in an artifact-affecting module.
+use std::collections::{HashMap, HashSet};
+
+fn build(holders: &[u32]) -> Vec<u32> {
+    let mut counts: HashMap<u32, usize> = HashMap::new();
+    for &h in holders {
+        *counts.entry(h).or_insert(0) += 1;
+    }
+    let mut out = Vec::new();
+    for (mask, n) in &counts {
+        out.push(mask + *n as u32);
+    }
+    let seen: HashSet<u32> = holders.iter().copied().collect();
+    out.extend(seen.iter().copied());
+    out
+}

@@ -1,0 +1,15 @@
+//! Fixture: fan-out merged in index order.
+fn build(n: usize, workers: usize) -> Vec<(usize, u32)> {
+    let mut shards: Vec<(usize, Vec<u32>)> = Vec::new();
+    let m = std::sync::Mutex::new(&mut shards);
+    std::thread::scope(|s| {
+        for w in 0..workers {
+            let m = &m;
+            s.spawn(move || {
+                m.lock().unwrap().push((w, vec![w as u32]));
+            });
+        }
+    });
+    shards.sort_by_key(|&(w, _)| w);
+    shards.into_iter().flat_map(|(w, v)| v.into_iter().map(move |x| (w, x))).collect()
+}

@@ -1,0 +1,13 @@
+//! Fixture: a fan-out whose merge is order-insensitive by construction.
+fn min_over_chunks(chunks: &[Vec<u32>]) -> Option<u32> {
+    let mut firsts: Vec<Option<u32>> = vec![None; chunks.len()];
+    // lint: allow(unordered-merge): each worker writes its own slot; min() is finish-order independent
+    std::thread::scope(|s| {
+        for (slot, chunk) in firsts.iter_mut().zip(chunks) {
+            s.spawn(move || {
+                *slot = chunk.iter().copied().min();
+            });
+        }
+    });
+    firsts.into_iter().flatten().min()
+}

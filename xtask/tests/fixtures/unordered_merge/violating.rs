@@ -1,0 +1,13 @@
+//! Fixture: a thread::scope fan-out whose merge depends on finish order.
+fn build(n: usize, workers: usize) -> Vec<u32> {
+    let results = std::sync::Mutex::new(Vec::new());
+    std::thread::scope(|s| {
+        for w in 0..workers {
+            let results = &results;
+            s.spawn(move || {
+                results.lock().unwrap().push(w as u32);
+            });
+        }
+    });
+    results.into_inner().unwrap()
+}

@@ -1,0 +1,4 @@
+//! Fixture: metering through the deterministic virtual clock only.
+fn meter(elapsed_s: f64, bytes: u64, mbps: f64) -> f64 {
+    elapsed_s + (bytes as f64 * 8.0) / (mbps * 1e6)
+}

@@ -1,0 +1,5 @@
+//! Fixture: a justified wall-clock read (never part of an artifact).
+fn jitter_seed() -> u64 {
+    // lint: allow(wall-clock): seeds a log tag only, never an artifact byte
+    std::time::SystemTime::now().elapsed().map(|d| d.as_nanos() as u64).unwrap_or(0)
+}

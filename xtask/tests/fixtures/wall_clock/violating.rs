@@ -1,0 +1,6 @@
+//! Fixture: wall-clock reads outside bench/.
+fn meter() -> f64 {
+    let t0 = std::time::Instant::now();
+    let _epoch = std::time::SystemTime::now();
+    t0.elapsed().as_secs_f64()
+}

@@ -1,0 +1,199 @@
+//! Per-rule fixture coverage for the determinism linter, plus the
+//! tier-1 repo gate: the real repository must lint clean against the
+//! committed `lint_baseline.json` ratchet.
+//!
+//! The fixtures under `tests/fixtures/` are never compiled — they are
+//! lexed and linted as text, under pseudo-paths that place them in each
+//! rule's scope.
+
+use std::path::Path;
+use xtask::lexer::SourceFile;
+use xtask::rules::{self, LintOutcome};
+
+/// Lint `source` as if it lived at `pseudo_path` inside the repo.
+fn lint_fixture(pseudo_path: &str, source: &str) -> LintOutcome {
+    let f = SourceFile::scan(pseudo_path.to_string(), source);
+    let mut out = LintOutcome::default();
+    rules::check_file(&f, &mut out);
+    out
+}
+
+fn rules_hit(out: &LintOutcome) -> Vec<&'static str> {
+    out.violations.iter().map(|v| v.rule).collect()
+}
+
+// ------------------------------------------------ rule 1: unordered-iter
+
+#[test]
+fn unordered_iter_violating_fixture_is_flagged() {
+    let src = include_str!("fixtures/unordered_iter/violating.rs");
+    let out = lint_fixture("rust/src/coding/fixture.rs", src);
+    // The for-loop over `counts` and `seen.iter()` are both hash-ordered.
+    assert_eq!(rules_hit(&out), vec![rules::UNORDERED_ITER, rules::UNORDERED_ITER]);
+    // Outside the artifact-affecting modules the same code is legal.
+    let out = lint_fixture("rust/src/net/fixture.rs", src);
+    assert!(out.violations.is_empty(), "{:?}", out.violations);
+}
+
+#[test]
+fn unordered_iter_clean_fixture_passes() {
+    let src = include_str!("fixtures/unordered_iter/clean.rs");
+    let out = lint_fixture("rust/src/coding/fixture.rs", src);
+    assert!(out.violations.is_empty(), "{:?}", out.violations);
+}
+
+#[test]
+fn unordered_iter_justified_fixture_passes() {
+    let src = include_str!("fixtures/unordered_iter/justified.rs");
+    let out = lint_fixture("rust/src/coding/fixture.rs", src);
+    assert!(out.violations.is_empty(), "{:?}", out.violations);
+    // Stripping the reason invalidates the directive.
+    let bare = src.replace(": any()/all() over values is order-insensitive", ":");
+    let out = lint_fixture("rust/src/coding/fixture.rs", &bare);
+    assert_eq!(rules_hit(&out), vec![rules::UNORDERED_ITER]);
+}
+
+// --------------------------------------------------- rule 2: wall-clock
+
+#[test]
+fn wall_clock_violating_fixture_is_flagged() {
+    let src = include_str!("fixtures/wall_clock/violating.rs");
+    let out = lint_fixture("rust/src/engine/fixture.rs", src);
+    assert_eq!(rules_hit(&out), vec![rules::WALL_CLOCK, rules::WALL_CLOCK]);
+    // bench/ is the opt-in timing harness: wall clock is legal there.
+    let out = lint_fixture("rust/src/bench/fixture.rs", src);
+    assert!(out.violations.is_empty(), "{:?}", out.violations);
+}
+
+#[test]
+fn wall_clock_clean_fixture_passes() {
+    let src = include_str!("fixtures/wall_clock/clean.rs");
+    let out = lint_fixture("rust/src/engine/fixture.rs", src);
+    assert!(out.violations.is_empty(), "{:?}", out.violations);
+}
+
+#[test]
+fn wall_clock_justified_fixture_passes() {
+    let src = include_str!("fixtures/wall_clock/justified.rs");
+    let out = lint_fixture("rust/src/engine/fixture.rs", src);
+    assert!(out.violations.is_empty(), "{:?}", out.violations);
+}
+
+// -------------------------------------------------- rule 3: panic paths
+
+#[test]
+fn panic_path_violating_fixture_is_counted_not_hard_failed() {
+    let src = include_str!("fixtures/panic_path/violating.rs");
+    let out = lint_fixture("rust/src/engine/fixture.rs", src);
+    // Panic paths never hard-fail: they feed the ratchet.
+    assert!(out.violations.is_empty(), "{:?}", out.violations);
+    assert_eq!(out.panic_counts.get("rust/src/engine/fixture.rs"), Some(&4));
+    assert_eq!(out.panic_sites.len(), 4);
+}
+
+#[test]
+fn panic_path_clean_fixture_counts_zero() {
+    let src = include_str!("fixtures/panic_path/clean.rs");
+    let out = lint_fixture("rust/src/engine/fixture.rs", src);
+    assert!(out.violations.is_empty(), "{:?}", out.violations);
+    // The `#[cfg(test)]` unwrap is exempt; non-test code is panic-free.
+    assert_eq!(out.panic_counts.get("rust/src/engine/fixture.rs"), Some(&0));
+}
+
+#[test]
+fn panic_ratchet_rejects_regression_and_notes_progress() {
+    let src = include_str!("fixtures/panic_path/violating.rs");
+    let out = lint_fixture("rust/src/engine/fixture.rs", src);
+    // Baseline below the current count: over-budget, lint must fail.
+    let mut tight = std::collections::BTreeMap::new();
+    tight.insert("rust/src/engine/fixture.rs".to_string(), 3usize);
+    let report = xtask::ratchet::compare(&out.panic_counts, &tight);
+    assert!(report.is_over());
+    assert_eq!(report.over, vec![("rust/src/engine/fixture.rs".to_string(), 4, 3)]);
+    // Baseline above the current count: passes, but can tighten.
+    let mut loose = std::collections::BTreeMap::new();
+    loose.insert("rust/src/engine/fixture.rs".to_string(), 9usize);
+    let report = xtask::ratchet::compare(&out.panic_counts, &loose);
+    assert!(!report.is_over() && report.can_tighten());
+    // Absent from the baseline entirely: allowance is zero.
+    let report = xtask::ratchet::compare(&out.panic_counts, &std::collections::BTreeMap::new());
+    assert!(report.is_over());
+}
+
+// ------------------------------------------- rule 4: construction path
+
+#[test]
+fn construction_path_violating_fixture_is_flagged() {
+    let src = include_str!("fixtures/construction_path/violating.rs");
+    let out = lint_fixture("rust/src/engine/fixture.rs", src);
+    assert_eq!(
+        rules_hit(&out),
+        vec![rules::CONSTRUCTION_PATH, rules::CONSTRUCTION_PATH, rules::CONSTRUCTION_PATH]
+    );
+    // The definition site itself is exempt.
+    let out = lint_fixture("rust/src/engine/executor.rs", src);
+    assert!(out.violations.is_empty(), "{:?}", out.violations);
+}
+
+#[test]
+fn construction_path_clean_fixture_passes() {
+    let src = include_str!("fixtures/construction_path/clean.rs");
+    let out = lint_fixture("rust/src/engine/fixture.rs", src);
+    // `with_config` + the test-module shim use are both legal.
+    assert!(out.violations.is_empty(), "{:?}", out.violations);
+}
+
+#[test]
+fn construction_path_justified_fixture_passes() {
+    let src = include_str!("fixtures/construction_path/justified.rs");
+    let out = lint_fixture("rust/src/engine/fixture.rs", src);
+    assert!(out.violations.is_empty(), "{:?}", out.violations);
+}
+
+// ---------------------------------------------- rule 5: ordered merge
+
+#[test]
+fn unordered_merge_violating_fixture_is_flagged() {
+    let src = include_str!("fixtures/unordered_merge/violating.rs");
+    let out = lint_fixture("rust/src/placement/fixture.rs", src);
+    assert_eq!(rules_hit(&out), vec![rules::UNORDERED_MERGE]);
+    // engine/cache.rs is artifact-affecting but not plan-build: rule 5
+    // does not apply there.
+    let out = lint_fixture("rust/src/engine/cache.rs", src);
+    assert!(out.violations.is_empty(), "{:?}", out.violations);
+}
+
+#[test]
+fn unordered_merge_clean_fixture_passes() {
+    let src = include_str!("fixtures/unordered_merge/clean.rs");
+    let out = lint_fixture("rust/src/placement/fixture.rs", src);
+    assert!(out.violations.is_empty(), "{:?}", out.violations);
+}
+
+#[test]
+fn unordered_merge_justified_fixture_passes() {
+    let src = include_str!("fixtures/unordered_merge/justified.rs");
+    let out = lint_fixture("rust/src/placement/fixture.rs", src);
+    assert!(out.violations.is_empty(), "{:?}", out.violations);
+}
+
+// ------------------------------------------------- the tier-1 repo gate
+
+/// The real repository lints clean against the committed ratchet. This
+/// is the test CI leans on: any hash-ordered iteration, wall-clock read,
+/// deprecated shim, unmerged fan-out, or panic-path regression in the
+/// scanned tree fails `cargo test` even before the dedicated lint job
+/// runs.
+#[test]
+fn repo_lints_clean_against_committed_ratchet() {
+    let root = Path::new(env!("CARGO_MANIFEST_DIR")).join("..");
+    let lint = xtask::lint_repo(&root).expect("repo lint must run");
+    assert!(lint.files_scanned > 50, "scan roots missing? saw {}", lint.files_scanned);
+    let report = xtask::render_report(&lint);
+    assert!(lint.outcome.violations.is_empty(), "hard violations:\n{report}");
+    assert!(!lint.ratchet.is_over(), "panic ratchet exceeded:\n{report}");
+    assert!(lint.clean());
+    // The committed baseline has no stale entries for files that no
+    // longer exist.
+    assert!(lint.ratchet.stale.is_empty(), "stale baseline entries:\n{report}");
+}
