@@ -6,6 +6,7 @@ pub mod suite;
 
 pub use harness::{bench_fn, section, table, Bench, BenchResult};
 pub use suite::{
-    compare_to_baseline, default_suite, run_suite, BaselineStatus, Comparison, PlanBuildStats,
-    Scenario, ScenarioResult, SuiteReport,
+    compare_to_baseline, default_suite, extended_suite, run_extended_suite_with, run_suite,
+    run_suite_with, BaselineStatus, Comparison, PlanBuildStats, Scenario, ScenarioResult,
+    SuiteReport,
 };

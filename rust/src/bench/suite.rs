@@ -86,13 +86,16 @@ const REPAIR1: FaultSpec = FaultSpec {
 /// The committed suite: K ∈ {3, 5, 8, 12, 16} heterogeneous clusters,
 /// coded and uncoded, TeraSort plus a WordCount point. Order and names
 /// are stable — the baseline comparison keys on `name`. K=3 uses
-/// Theorem 1, K=5 the §V LP; K=8 runs three ways — the storage-oblivious
-/// memory-sharing placement (the LP's perfect-collection enumeration is
-/// combinatorial in K — kept out of the smoke path), the combinatorial
+/// Theorem 1, K=5 the §V LP; K=8 runs four ways — the storage-oblivious
+/// memory-sharing placement, the dual-certified exact §V LP (cyclic
+/// shift-orbit seeding keeps the master debug-sized), the combinatorial
 /// grid with its own coder, and the *same grid placement* under greedy
 /// pairing, so the grid coder's gain over pairwise XOR is **measured**
 /// in the committed artifact, not asserted. K ∈ {12, 16} extend the
-/// combinatorial design into the larger-K cascaded regime.
+/// combinatorial design into the larger-K cascaded regime; their
+/// exact-LP points live in [`extended_suite`] (release `bench-json`
+/// territory — the K=12/16 masters are too heavy for the 4×-repeated
+/// debug test runs).
 #[rustfmt::skip]
 pub fn default_suite() -> Vec<Scenario> {
     use ShuffleMode::{Coded, Uncoded};
@@ -110,6 +113,10 @@ pub fn default_suite() -> Vec<Scenario> {
         // gain the acceptance gate checks.
         Scenario { name: "k8-terasort-combinatorial", storage: &[4, 4, 5, 5, 6, 6, 7, 7], n_files: 8, workload: TeraSort, placer: "combinatorial", coder: None, mode: Coded, topology: Topology::Shared, faults: NO_FAULTS, drop_node: None },
         Scenario { name: "k8-terasort-grid-greedy", storage: &[4, 4, 5, 5, 6, 6, 7, 7], n_files: 8, workload: TeraSort, placer: "combinatorial", coder: Some("greedy"), mode: Coded, topology: Topology::Shared, faults: NO_FAULTS, drop_node: None },
+        // Exact §V LP at K=8: cap-free dual-certified placement — the
+        // artifact records the solver's work counters (plan_build.lp_solver)
+        // and gates dropped_collections at 0.
+        Scenario { name: "k8-terasort-lp-exact", storage: &[4, 4, 5, 5, 6, 6, 7, 7], n_files: 8, workload: TeraSort, placer: "lp-general", coder: None, mode: Coded, topology: Topology::Shared, faults: NO_FAULTS, drop_node: None },
         // Larger-K combinatorial regimes: K=12 (q=3, r=4) and K=16
         // (q=2, r=8) — shapes no enumeration-based coder reaches.
         Scenario { name: "k12-terasort-combinatorial", storage: &[4, 4, 4, 5, 5, 5, 6, 6, 6, 7, 7, 7], n_files: 12, workload: TeraSort, placer: "combinatorial", coder: None, mode: Coded, topology: Topology::Shared, faults: NO_FAULTS, drop_node: None },
@@ -134,6 +141,22 @@ pub fn default_suite() -> Vec<Scenario> {
         Scenario { name: "k8-terasort-combinatorial-repair1", storage: &[4, 4, 5, 5, 6, 6, 7, 7], n_files: 8, workload: TeraSort, placer: "combinatorial", coder: None, mode: Coded, topology: Topology::Shared, faults: REPAIR1, drop_node: None },
         Scenario { name: "k8-terasort-dropout", storage: &[4, 4, 5, 5, 6, 6, 7, 7], n_files: 8, workload: TeraSort, placer: "combinatorial", coder: None, mode: Coded, topology: Topology::Shared, faults: NO_FAULTS, drop_node: Some(0) },
     ]
+}
+
+/// [`default_suite`] plus the large-K exact-LP points — the suite
+/// `bench-json` actually runs. The K=12 and K=16 masters (cyclic-seeded,
+/// dual-certified) solve in seconds in release builds but would dominate
+/// the 4×-repeated debug test runs, so they live here rather than in the
+/// default (test-visible) suite. Names and order extend the default
+/// suite, so a default-suite baseline sees them as new scenarios.
+#[rustfmt::skip]
+pub fn extended_suite() -> Vec<Scenario> {
+    use ShuffleMode::Coded;
+    use WorkloadKind::TeraSort;
+    let mut suite = default_suite();
+    suite.push(Scenario { name: "k12-terasort-lp-exact", storage: &[4, 4, 4, 5, 5, 5, 6, 6, 6, 7, 7, 7], n_files: 12, workload: TeraSort, placer: "lp-general", coder: None, mode: Coded, topology: Topology::Shared, faults: NO_FAULTS, drop_node: None });
+    suite.push(Scenario { name: "k16-terasort-lp-exact", storage: &[4, 4, 4, 4, 5, 5, 5, 5, 6, 6, 6, 6, 7, 7, 7, 7], n_files: 12, workload: TeraSort, placer: "lp-general", coder: None, mode: Coded, topology: Topology::Shared, faults: NO_FAULTS, drop_node: None });
+    suite
 }
 
 impl Scenario {
@@ -269,6 +292,16 @@ pub struct ScenarioResult {
     /// Plan-construction shape (rounds/groups/broadcasts — counts only,
     /// timestamp-free).
     pub plan_build: PlanBuildStats,
+    /// Perfect collections the placement's enumeration dropped, summed
+    /// over subsystems. Serialized only when nonzero (so pre-exact
+    /// artifacts stay byte-identical) and gated like `rounds`: a
+    /// baseline without the field reads as 0, and a scenario regressing
+    /// from 0 fails the baseline comparison.
+    pub dropped_collections: u64,
+    /// Exact §V LP work counters — recorded only for exact-LP scenarios,
+    /// serialized as `plan_build.lp_solver`. Deterministic like every
+    /// other `plan_build` field.
+    pub lp_solver: Option<crate::placement::lp_general::LpWorkStats>,
     /// Total straggler-induced schedule wait — recorded (and serialized)
     /// only for scenarios with a straggle spec, so fault-free artifacts
     /// stay byte-identical to pre-fault ones.
@@ -308,7 +341,20 @@ impl ScenarioResult {
         m.insert("shuffle_time_s".into(), Json::Num(self.shuffle_time_s));
         m.insert("makespan_s".into(), Json::Num(self.makespan_s));
         m.insert("modes_identical".into(), Json::Bool(self.modes_identical));
-        m.insert("plan_build".into(), self.plan_build.to_json());
+        let mut plan_build = self.plan_build.to_json();
+        if let (Json::Obj(pb), Some(stats)) = (&mut plan_build, &self.lp_solver) {
+            pb.insert("lp_solver".into(), stats.to_json());
+        }
+        m.insert("plan_build".into(), plan_build);
+        // Omitted-when-trivial fields: dropped_collections appears only
+        // when the enumeration actually truncated, so cap-free artifacts
+        // (and pre-exact baselines) read identically as 0.
+        if self.dropped_collections > 0 {
+            m.insert(
+                "dropped_collections".into(),
+                Json::Num(self.dropped_collections as f64),
+            );
+        }
         // Fault fields are omitted when no fault spec / no dropout is
         // configured: fault-free artifacts stay byte-identical.
         if let Some(d) = self.straggler_delay_s {
@@ -521,6 +567,8 @@ pub fn run_scenario(
         makespan_s: serial.net_report().elapsed_s,
         modes_identical: true,
         plan_build: PlanBuildStats::of(&plan.shuffle),
+        dropped_collections: plan.dropped_collections.iter().map(|&(_, d)| d as u64).sum(),
+        lp_solver: plan.lp_stats,
         straggler_delay_s,
         recovery,
         wall,
@@ -600,8 +648,30 @@ pub fn run_suite_with(
     topology: Option<Topology>,
     faults: Option<FaultSpec>,
 ) -> Result<SuiteReport> {
+    run_scenarios(default_suite(), threads, timing, topology, faults)
+}
+
+/// [`run_suite_with`] over the [`extended_suite`] — the `bench-json`
+/// path, which runs in release builds where the large-K exact-LP
+/// masters solve in seconds.
+pub fn run_extended_suite_with(
+    threads: usize,
+    timing: Option<&Bench>,
+    topology: Option<Topology>,
+    faults: Option<FaultSpec>,
+) -> Result<SuiteReport> {
+    run_scenarios(extended_suite(), threads, timing, topology, faults)
+}
+
+fn run_scenarios(
+    scenarios: Vec<Scenario>,
+    threads: usize,
+    timing: Option<&Bench>,
+    topology: Option<Topology>,
+    faults: Option<FaultSpec>,
+) -> Result<SuiteReport> {
     let mut results = Vec::new();
-    for sc in default_suite() {
+    for sc in scenarios {
         let mut sc = sc;
         if let Some(t) = topology {
             sc.topology = t;
@@ -707,8 +777,9 @@ pub fn compare_to_baseline(current: &Json, baseline: &Json, tolerance_pct: f64) 
     }
 
     let cur_scenarios = current.get("scenarios").and_then(|s| s.as_arr()).unwrap_or(empty);
-    /// name -> (payload_bytes, rounds if recorded, makespan if recorded).
-    fn by_name(list: &[Json]) -> BTreeMap<String, (f64, Option<f64>, Option<f64>)> {
+    /// name -> (payload_bytes, rounds if recorded, makespan if recorded,
+    /// dropped collections — omitted in the artifact means 0).
+    fn by_name(list: &[Json]) -> BTreeMap<String, (f64, Option<f64>, Option<f64>, f64)> {
         list.iter()
             .filter_map(|s| {
                 Some((
@@ -717,6 +788,7 @@ pub fn compare_to_baseline(current: &Json, baseline: &Json, tolerance_pct: f64) 
                         s.get("payload_bytes")?.as_f64()?,
                         s.get("rounds").and_then(|r| r.as_f64()),
                         s.get("makespan_s").and_then(|r| r.as_f64()),
+                        s.get("dropped_collections").and_then(|r| r.as_f64()).unwrap_or(0.0),
                     ),
                 ))
             })
@@ -724,13 +796,13 @@ pub fn compare_to_baseline(current: &Json, baseline: &Json, tolerance_pct: f64) 
     }
     let cur_map = by_name(cur_scenarios);
     let base_map = by_name(base_scenarios);
-    for (name, (base_payload, base_rounds, base_makespan)) in &base_map {
+    for (name, (base_payload, base_rounds, base_makespan, base_dropped)) in &base_map {
         match cur_map.get(name) {
             None => {
                 notes.push(format!("scenario '{name}' disappeared (coverage lost)"));
                 status = BaselineStatus::Regression;
             }
-            Some((cur_payload, cur_rounds, cur_makespan)) => {
+            Some((cur_payload, cur_rounds, cur_makespan, cur_dropped)) => {
                 if *base_payload > 0.0 {
                     let ratio = cur_payload / base_payload;
                     if ratio > 1.0 + tol {
@@ -794,6 +866,26 @@ pub fn compare_to_baseline(current: &Json, baseline: &Json, tolerance_pct: f64) 
                         status = BaselineStatus::Regression;
                     }
                     _ => {}
+                }
+                // Dropped-collection drift is exact and asymmetric by
+                // construction: the field is omitted when 0 on both
+                // sides, so a legacy baseline reads as 0 and a scenario
+                // that starts truncating (regressing from an exact,
+                // cap-free placement) fails loudly. Dropping *fewer*
+                // collections is an improvement note.
+                if cur_dropped > base_dropped {
+                    notes.push(format!(
+                        "scenario '{name}' dropped_collections regressed \
+                         {base_dropped:.0} -> {cur_dropped:.0}: the placement lost \
+                         exactness (enumeration cap truncated)"
+                    ));
+                    status = BaselineStatus::Regression;
+                } else if cur_dropped < base_dropped {
+                    notes.push(format!(
+                        "scenario '{name}' dropped_collections improved \
+                         {base_dropped:.0} -> {cur_dropped:.0}: consider re-blessing \
+                         the baseline"
+                    ));
                 }
             }
         }
@@ -998,7 +1090,9 @@ mod tests {
     #[test]
     fn fault_free_scenarios_serialize_without_fault_keys() {
         // Backward-compat contract of the artifact: fault fields appear
-        // only on scenarios that configured the corresponding fault.
+        // only on scenarios that configured the corresponding fault, the
+        // lp_solver block only on exact-LP scenarios, and
+        // dropped_collections never on a cap-free suite.
         let j = shared_report().to_json();
         for sc in j.get("scenarios").unwrap().as_arr().unwrap() {
             let name = sc.get("name").and_then(|n| n.as_str()).unwrap();
@@ -1012,7 +1106,75 @@ mod tests {
                 name.contains("dropout"),
                 "{name}: recovery presence"
             );
+            let placer = sc.get("placer").and_then(|p| p.as_str()).unwrap();
+            assert_eq!(
+                sc.get("plan_build").and_then(|pb| pb.get("lp_solver")).is_some(),
+                placer == "lp-general",
+                "{name}: plan_build.lp_solver presence (placer {placer})"
+            );
+            assert!(
+                sc.get("dropped_collections").is_none(),
+                "{name}: cap-free suite must not drop collections"
+            );
         }
+    }
+
+    #[test]
+    fn exact_lp_scenario_records_certified_counters() -> Result<()> {
+        // The perf claim of the exact path, measured in the committed
+        // artifact: the revised simplex's factorized work
+        // (eta_applications) is strictly below the dense-tableau
+        // counterfactual over the same pivot walk, and the solve is
+        // dual-certified with nothing dropped.
+        let report = shared_report();
+        let sc = report.scenario("k8-terasort-lp-exact")?;
+        assert_eq!(sc.placer, "lp-general");
+        assert_eq!(sc.dropped_collections, 0);
+        let stats = sc.lp_solver.expect("exact-LP scenario records lp_solver");
+        assert!(stats.certified, "K=8 must certify: {stats:?}");
+        assert!(stats.pivots > 0);
+        assert!(
+            stats.eta_applications < stats.dense_cells,
+            "revised simplex must beat the dense counterfactual: {stats:?}"
+        );
+        assert!(stats.z_exact > 0.0);
+        // k5 routes through `auto` -> exact LP too.
+        let k5 = report.scenario("k5-terasort-coded")?;
+        assert!(k5.lp_solver.expect("k5 exact counters").certified);
+        Ok(())
+    }
+
+    #[test]
+    fn dropped_collections_regression_fails_the_gate() {
+        let current = shared_report().to_json();
+        // Baseline identical to current (both omit the field = 0): a
+        // doctored CURRENT artifact that starts dropping collections
+        // must regress — this is the "regressing from 0 fails" arm that
+        // also covers legacy baselines predating the field.
+        let mut doctored = current.clone();
+        if let Json::Obj(m) = &mut doctored {
+            if let Some(Json::Arr(sc)) = m.get_mut("scenarios") {
+                if let Some(Json::Obj(first)) = sc.first_mut() {
+                    first.insert("dropped_collections".into(), Json::Num(3.0));
+                }
+            }
+        }
+        let cmp = compare_to_baseline(&doctored, &current, 5.0);
+        assert_eq!(cmp.status, BaselineStatus::Regression, "{:?}", cmp.notes);
+        assert!(
+            cmp.notes.iter().any(|n| n.contains("dropped_collections regressed")),
+            "{:?}",
+            cmp.notes
+        );
+        // The reverse direction (baseline dropped, current exact) is an
+        // improvement note, not a failure.
+        let cmp = compare_to_baseline(&current, &doctored, 5.0);
+        assert_eq!(cmp.status, BaselineStatus::Pass, "{:?}", cmp.notes);
+        assert!(
+            cmp.notes.iter().any(|n| n.contains("dropped_collections improved")),
+            "{:?}",
+            cmp.notes
+        );
     }
 
     #[test]

@@ -239,9 +239,16 @@ pub struct Plan {
     pub predicted: PredictedLoads,
     /// Perfect collections the placer's enumeration cap dropped, as
     /// `(subsystem j, count)` — non-empty only for the §V LP when
-    /// Remark 7's cap truncated. Surfaced by the CLI as a warning;
-    /// informational in serialized artifacts.
+    /// Remark 7's cap truncated (the exact path drops nothing when it
+    /// certifies). Surfaced by the CLI as a warning; informational in
+    /// serialized artifacts.
     pub dropped_collections: Vec<(usize, usize)>,
+    /// Deterministic work counters from the exact §V LP solve
+    /// ([`crate::placement::lp_general::LpWorkStats`]) — `None` for
+    /// every other placer. Serialized as the `lp_solver` object;
+    /// informational (not validated on deserialization, like
+    /// `dropped_collections`).
+    pub lp_stats: Option<crate::placement::lp_general::LpWorkStats>,
     /// [`shape_fingerprint`] of (cluster, job shape).
     pub fingerprint: u64,
 }
@@ -322,6 +329,9 @@ impl Plan {
             schedule,
             predicted,
             dropped_collections,
+            // Informational; callers that have counters (JobBuilder,
+            // from_json) set them after assembly.
+            lp_stats: None,
             fingerprint,
         })
     }
@@ -433,6 +443,9 @@ impl Plan {
                 ),
             );
         }
+        if let Some(stats) = self.lp_stats {
+            m.insert("lp_solver".into(), stats.to_json());
+        }
         Json::Obj(m)
     }
 
@@ -485,7 +498,26 @@ impl Plan {
                     .collect()
             })
             .unwrap_or_default();
-        Plan::assemble(cluster, job, placer, coder, mode, alloc, shuffle, dropped)
+        // Informational like `dropped_collections`: absent in pre-exact
+        // artifacts and for non-LP placers; malformed objects read as None.
+        let lp_stats = j.get("lp_solver").and_then(|v| {
+            let num = |key: &str| v.get(key).and_then(Json::as_f64);
+            Some(crate::placement::lp_general::LpWorkStats {
+                pivots: num("pivots")? as u64,
+                eta_applications: num("eta_applications")? as u64,
+                dense_cells: num("dense_cells")? as u64,
+                reinversions: num("reinversions")? as u64,
+                exact_rounds: num("exact_rounds")? as u64,
+                enumerated_collections: num("enumerated_collections")? as u64,
+                grown_subsystems: num("grown_subsystems")? as u64,
+                z_exact: num("z_exact")?,
+                certified: v.get("certified").and_then(Json::as_bool)?,
+            })
+        });
+        let mut plan =
+            Plan::assemble(cluster, job, placer, coder, mode, alloc, shuffle, dropped)?;
+        plan.lp_stats = lp_stats;
+        Ok(plan)
     }
 
     pub fn from_json_str(text: &str) -> Result<Plan> {
@@ -665,6 +697,7 @@ impl<'a> JobBuilder<'a> {
                 )
             }
         };
+        let lp_stats = placement.lp_stats;
         let alloc = placement.alloc;
         alloc.validate_le(&cluster.storage(), self.job.n_files)?;
         let coder_name = match self.mode {
@@ -683,7 +716,7 @@ impl<'a> JobBuilder<'a> {
                 cluster.faults.repair,
             )?;
         }
-        Plan::assemble_threaded(
+        let mut plan = Plan::assemble_threaded(
             cluster.clone(),
             self.job.clone(),
             placer_name,
@@ -693,7 +726,9 @@ impl<'a> JobBuilder<'a> {
             shuffle,
             placement.dropped_collections,
             threads,
-        )
+        )?;
+        plan.lp_stats = lp_stats;
+        Ok(plan)
     }
 }
 
@@ -786,17 +821,27 @@ mod tests {
 
     #[test]
     fn lp_cap_override_reaches_the_placer_and_the_plan() {
-        // A deliberately tight cap truncates the K=4 enumeration; the
-        // dropped count must surface on the built plan (and a default
-        // build must not drop anything at this K).
+        // A deliberately tight cap truncates the K=4 enumeration on the
+        // legacy capped route; the dropped count must surface on the
+        // built plan. The exact default outgrows the same cap, certifies,
+        // and drops nothing — and its work counters land on the plan.
         let c = cluster(&[3, 4, 5, 6]);
         let job = JobSpec::terasort(8);
-        let plan = JobBuilder::new(&c, &job).lp_cap(1).build().unwrap();
+        let plan = JobBuilder::new(&c, &job)
+            .placer("lp-capped")
+            .lp_cap(1)
+            .build()
+            .unwrap();
         assert!(
             plan.dropped_collections.iter().any(|&(j, d)| j == 2 && d > 0),
             "cap=1 should truncate, got {:?}",
             plan.dropped_collections
         );
+        assert!(plan.lp_stats.is_none(), "capped route carries no counters");
+        let plan = JobBuilder::new(&c, &job).lp_cap(1).build().unwrap();
+        assert!(plan.dropped_collections.is_empty());
+        let stats = plan.lp_stats.expect("exact route records counters");
+        assert!(stats.certified);
         let plan = JobBuilder::new(&c, &job).build().unwrap();
         assert!(plan.dropped_collections.is_empty());
     }
@@ -823,7 +868,30 @@ mod tests {
         assert_eq!(back.schedule, plan.schedule);
         assert_eq!(back.predicted, plan.predicted);
         assert_eq!(back.dropped_collections, plan.dropped_collections);
+        assert_eq!(back.lp_stats, plan.lp_stats);
         assert_eq!(back.fingerprint, plan.fingerprint);
+    }
+
+    #[test]
+    fn lp_solver_counters_roundtrip_through_json() {
+        // An exact-LP plan serializes its `lp_solver` object and the
+        // counters survive deserialization bit-for-bit; non-LP plans
+        // omit the key entirely.
+        let c = cluster(&[3, 4, 5, 6]);
+        let job = JobSpec::terasort(8);
+        let plan = JobBuilder::new(&c, &job).placer("lp-general").build().unwrap();
+        let stats = plan.lp_stats.expect("exact route records counters");
+        assert!(stats.certified);
+        let text = plan.to_json_string();
+        assert!(text.contains("\"lp_solver\""));
+        let back = Plan::from_json_str(&text).unwrap();
+        assert_eq!(back.lp_stats, plan.lp_stats);
+
+        let c3 = cluster(&[6, 7, 7]);
+        let job3 = JobSpec::terasort(12);
+        let p3 = JobBuilder::new(&c3, &job3).placer("optimal-k3").build().unwrap();
+        assert!(p3.lp_stats.is_none());
+        assert!(!p3.to_json_string().contains("\"lp_solver\""));
     }
 
     #[test]

@@ -26,10 +26,29 @@ pub trait Scalar: Clone + Debug + PartialEq + Send + Sync {
     fn is_zero(&self) -> bool {
         !self.is_pos() && !self.is_neg()
     }
+    /// Exact (tolerance-free) strict order `self < o`. Dantzig pricing and
+    /// the Harris ratio test break ties with this: a tolerance-based
+    /// comparison is not associative, so chunk-local winners merged across
+    /// threads could disagree with a serial scan.
+    fn lt(&self, o: &Self) -> bool;
+    /// True when a reduced cost this close to zero cannot certify an
+    /// unbounded ray (see the ray guard in `simplex`). Exact fields carry
+    /// no rounding noise, so the default never skips a candidate ray.
+    fn is_ray_noise(&self) -> bool {
+        let _ = self;
+        false
+    }
     fn to_f64(&self) -> f64;
 }
 
 pub const F64_EPS: f64 = 1e-9;
+
+/// Reduced costs in `(-F64_RAY_TOL, -F64_EPS]` are treated as rounding
+/// noise by the unboundedness check (`Scalar::is_ray_noise`): a basic
+/// free-variable pair can leave its negated twin with a noise-level
+/// reduced cost whose FTRAN direction is exactly `-e_r`, which would
+/// otherwise be mistaken for a ray.
+pub const F64_RAY_TOL: f64 = 1e-6;
 
 impl Scalar for f64 {
     fn zero() -> Self {
@@ -64,6 +83,12 @@ impl Scalar for f64 {
     }
     fn is_neg(&self) -> bool {
         *self < -F64_EPS
+    }
+    fn lt(&self, o: &Self) -> bool {
+        self < o
+    }
+    fn is_ray_noise(&self) -> bool {
+        *self >= -F64_RAY_TOL
     }
     fn to_f64(&self) -> f64 {
         *self

@@ -119,6 +119,9 @@ impl Scalar for Rat {
     fn is_neg(&self) -> bool {
         self.num < 0
     }
+    fn lt(&self, o: &Self) -> bool {
+        self < o
+    }
     fn to_f64(&self) -> f64 {
         self.num as f64 / self.den as f64
     }

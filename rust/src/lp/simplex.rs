@@ -1,4 +1,5 @@
-//! Two-phase dense primal simplex with Bland's anti-cycling rule.
+//! Two-phase **revised** primal simplex: hybrid Dantzig/Bland pricing, a
+//! Harris-style two-pass ratio test, and periodic basis refactorization.
 //!
 //! Generic over [`Scalar`], so the same code runs in `f64` (production) and
 //! exact rationals (test oracle). Solves
@@ -7,18 +8,67 @@
 //! min c'x  s.t.  A x {<=,=,>=} b,  x >= 0
 //! ```
 //!
-//! Phase 1 minimizes the sum of artificial variables to find a basic
-//! feasible solution; phase 2 optimizes the real objective. Bland's rule
-//! (smallest-index entering/leaving) guarantees termination.
+//! The constraint matrix is stored as **sparse columns** and the basis
+//! inverse as a **product-form eta file**: every pivot appends one eta
+//! vector instead of rewriting a dense `rows × cols` tableau. Each
+//! iteration prices by the factorization —
 //!
-//! [`solve_with_threads`] shards the entering-variable pricing scan over
-//! contiguous column chunks on scoped worker threads. Each chunk reports
-//! its first negative-reduced-cost column and the lowest index wins, so
-//! the entering column — and therefore the entire pivot sequence, basis,
-//! and solution — is **bit-identical** to the serial scan for every
-//! thread count. Per-column arithmetic is shared between the serial and
-//! sharded paths (same fold order, same zero-cost skips), so chunking
-//! cannot perturb a single float.
+//! * BTRAN: `y = c_B B⁻¹` (apply etas newest-first to the basis costs),
+//! * reduced cost `d_j = c_j − y·A_j` per sparse column,
+//! * FTRAN: `w = B⁻¹ A_e` for the entering column's ratio test,
+//!
+//! so per-pivot work is `O(nnz(etas) + nnz(A))` instead of the dense
+//! rewrite's `O(rows · cols)`. [`Solution::eta_applications`] counts the
+//! scalar work actually spent in eta applications and
+//! [`Solution::dense_cells`] the counterfactual cells a dense per-pivot
+//! rewrite would have touched, so callers assert the speedup in
+//! deterministic counters rather than wall clock.
+//!
+//! **Pricing** is Dantzig's rule — the most negative reduced cost enters,
+//! ties broken toward the lowest index with the exact comparison
+//! [`Scalar::lt`] — under an anti-stall governor: after [`STALL_WINDOW`]
+//! consecutive degenerate pivots the solve falls back to Bland's rule
+//! (lowest-index entering *and* leaving) until a non-degenerate pivot
+//! lands. Bland's theorem rules out cycling while the governor is
+//! engaged and every non-degenerate pivot strictly improves the
+//! objective, so the solve is finite; outside stalls, Dantzig keeps the
+//! pivot count far below pure Bland's on degenerate §V masters.
+//!
+//! **Leaving** uses a Harris-style two-pass ratio test: pass 1 finds the
+//! minimum ratio `θ`, pass 2 picks, among rows within tolerance of `θ`,
+//! the row with the largest pivot magnitude (tie → smallest basis
+//! index). Large pivots keep the eta file well-conditioned; in exact
+//! arithmetic the tolerance band degenerates to exact ties and the test
+//! stays deterministic.
+//!
+//! A **ray guard** protects the unboundedness check: when the entering
+//! column's FTRAN direction has no positive entry but its reduced cost is
+//! within [`super::problem::F64_RAY_TOL`] of zero
+//! ([`Scalar::is_ray_noise`]), the column is rounding noise — e.g. the
+//! negated twin of a basic free-variable pair — not a certified ray; it
+//! is skipped for the current pricing round instead of aborting the
+//! solve. Exact scalars never take this path.
+//!
+//! The eta file is **refactorized** whenever it outgrows
+//! `max(64, 2·rows)` etas: the basis columns are re-eliminated in basis
+//! order (pivot row = largest magnitude among unplaced rows, lowest index
+//! on ties) and the basic solution recomputed from the stored rhs, so
+//! FTRAN/BTRAN cost stays proportional to the basis size instead of the
+//! pivot history. Reinversion is triggered by eta *count* and pivots by
+//! magnitude, so it is deterministic at every thread count.
+//!
+//! Phase 1 minimizes the sum of artificial variables to find a basic
+//! feasible solution; phase 2 optimizes the real objective.
+//!
+//! [`solve_with_threads`] shards the pricing scan over contiguous column
+//! chunks on scoped worker threads. The dual vector `y` is computed
+//! **once per iteration** before any fan-out, each chunk reports its own
+//! best `(reduced cost, column)` pair, and the lexicographic minimum wins
+//! — an associative merge, so the entering column (and therefore the
+//! entire pivot sequence, eta file, and solution) is **bit-identical** to
+//! the serial scan for every thread count. Per-column arithmetic is
+//! shared between the serial and sharded paths (same fold order over the
+//! same sparse entries), so chunking cannot perturb a single float.
 
 use super::problem::{Cmp, Lp, Scalar};
 
@@ -26,10 +76,20 @@ use super::problem::{Cmp, Lp, Scalar};
 /// sharded scan costs more in thread spawns than it saves.
 const PAR_MIN_COLS: usize = 128;
 
+/// Anti-stall governor: after this many consecutive degenerate pivots
+/// (ratio-test minimum of zero), pricing falls back to Bland's rule until
+/// a non-degenerate pivot resets the counter.
+const STALL_WINDOW: usize = 16;
+
 #[derive(Clone, Debug, PartialEq)]
 pub enum LpError {
     Infeasible,
     Unbounded,
+    /// Reinversion could not re-eliminate the basis columns (every
+    /// remaining pivot candidate was below tolerance). Exact arithmetic
+    /// never produces this; in `f64` it flags an eta file degraded past
+    /// recovery.
+    Singular,
 }
 
 impl std::fmt::Display for LpError {
@@ -37,6 +97,7 @@ impl std::fmt::Display for LpError {
         match self {
             LpError::Infeasible => write!(f, "LP is infeasible"),
             LpError::Unbounded => write!(f, "LP is unbounded"),
+            LpError::Singular => write!(f, "numerically singular basis at reinversion"),
         }
     }
 }
@@ -50,60 +111,149 @@ pub struct Solution<S> {
     pub values: Vec<S>,
     /// Simplex pivots performed (both phases) — used by bench_simplex.
     pub pivots: usize,
+    /// Scalar multiply-add slots touched applying eta vectors across all
+    /// FTRAN/BTRAN passes and basic-solution updates — the revised
+    /// simplex's actual factorization work, deterministic at every
+    /// thread count.
+    pub eta_applications: u64,
+    /// Counterfactual: the cells a dense-tableau solver's per-pivot
+    /// `O(rows · cols)` rewrite would have touched over the same pivot
+    /// sequence (`pivots × rows × cols`). Compare against
+    /// [`Solution::eta_applications`] to assert the factorization did
+    /// strictly less work.
+    pub dense_cells: u64,
+    /// Eta-file refactorizations performed (deterministic: triggered by
+    /// eta count alone).
+    pub reinversions: usize,
+    /// Dual value per input constraint at phase-2 optimality
+    /// (`y = c_B B⁻¹`, sign-corrected for rows the rhs normalization
+    /// flipped, so signs refer to the constraints as given). Under
+    /// minimization a binding `<=` row has `y <= 0`, a `>=` row
+    /// `y >= 0`; reduced costs `c_j − y·A_j` are `>= 0` for every
+    /// column within scalar tolerance.
+    pub duals: Vec<S>,
 }
 
-struct Tableau<S> {
-    /// `rows x cols` coefficient matrix; last column is the RHS.
-    a: Vec<Vec<S>>,
+/// One product-form eta vector: `B⁻¹_new = E · B⁻¹_old` where `E` is the
+/// identity except for column `r`, holding `1/w_r` on the diagonal and
+/// `−w_i/w_r` off it (`w` = the FTRAN'd entering column).
+struct Eta<S> {
+    r: u32,
+    diag: S,
+    /// Off-diagonal entries `(row, −w_row/w_r)`, ascending row order.
+    rest: Vec<(u32, S)>,
+}
+
+/// Revised-simplex state: sparse columns + eta-file basis factorization.
+struct Revised<S> {
+    /// Sparse columns (ascending row order), structural then
+    /// slack/surplus then artificial. No rhs column — see `b_vals`.
+    cols: Vec<Vec<(u32, S)>>,
+    /// Product-form representation of `B⁻¹`, oldest first.
+    etas: Vec<Eta<S>>,
     /// Basis variable per row.
     basis: Vec<usize>,
+    /// Whether each column is currently basic (pricing skips these:
+    /// their reduced cost is exactly zero in exact arithmetic, and
+    /// skipping keeps float drift from ever re-entering one).
+    in_basis: Vec<bool>,
+    /// Current basic solution, by row (`x_B = B⁻¹ b`).
+    b_vals: Vec<S>,
+    /// Normalized right-hand side as of basis construction, so
+    /// reinversion can recompute `x_B = B⁻¹ b` from scratch.
+    rhs0: Vec<S>,
     rows: usize,
-    cols: usize, // total columns incl. rhs
+    /// Scalar slots touched by eta applications (see
+    /// [`Solution::eta_applications`]).
+    eta_ops: u64,
+    /// Refactorize once the eta file exceeds this many etas.
+    reinvert_every: usize,
+    reinversions: usize,
 }
 
-impl<S: Scalar> Tableau<S> {
-    fn rhs(&self, r: usize) -> &S {
-        &self.a[r][self.cols - 1]
+impl<S: Scalar> Revised<S> {
+    /// Scatter column `j` into a dense vector.
+    fn dense_col(&self, j: usize) -> Vec<S> {
+        let mut x = vec![S::zero(); self.rows];
+        for (r, a) in &self.cols[j] {
+            x[*r as usize] = a.clone();
+        }
+        x
     }
 
-    fn pivot(&mut self, r: usize, c: usize) {
-        let piv = self.a[r][c].clone();
-        debug_assert!(!piv.is_zero());
-        for j in 0..self.cols {
-            self.a[r][j] = self.a[r][j].div(&piv);
+    /// FTRAN: overwrite `x` with `B⁻¹ x` by applying the eta file oldest
+    /// first. Skips etas whose pivot-row entry is zero (the usual
+    /// sparse-column fast path; deterministic — the skip depends only on
+    /// the vector, never on thread count).
+    fn ftran(&mut self, x: &mut [S]) {
+        for eta in &self.etas {
+            let t = x[eta.r as usize].clone();
+            if t.is_zero() {
+                continue;
+            }
+            x[eta.r as usize] = t.mul(&eta.diag);
+            for (i, v) in &eta.rest {
+                x[*i as usize] = x[*i as usize].add(&t.mul(v));
+            }
+            self.eta_ops += 1 + eta.rest.len() as u64;
         }
-        for i in 0..self.rows {
-            if i != r && !self.a[i][c].is_zero() {
-                let factor = self.a[i][c].clone();
-                for j in 0..self.cols {
-                    let delta = factor.mul(&self.a[r][j]);
-                    self.a[i][j] = self.a[i][j].sub(&delta);
+    }
+
+    /// BTRAN: overwrite `y` with `y B⁻¹` by applying the eta file newest
+    /// first; each eta only rewrites `y[r] = y·E_col(r)`, folded diagonal
+    /// term first then off-diagonals in ascending row order.
+    fn btran(&mut self, y: &mut [S]) {
+        for eta in self.etas.iter().rev() {
+            let mut acc = y[eta.r as usize].mul(&eta.diag);
+            for (i, v) in &eta.rest {
+                let yi = &y[*i as usize];
+                if !yi.is_zero() {
+                    acc = acc.add(&yi.mul(v));
                 }
             }
+            y[eta.r as usize] = acc;
+            self.eta_ops += 1 + eta.rest.len() as u64;
         }
-        self.basis[r] = c;
     }
 
-    /// Reduced cost `c_j − z_j` of column `j` under `cost`, with
-    /// `z_j = Σ_i c_B[i]·a[i][j]` folded in row order, skipping zero
-    /// basis costs. The serial and sharded pricing scans both call this,
-    /// so chunking cannot change a bit of any column's value.
-    fn reduced_cost(&self, cost: &[S], j: usize) -> S {
+    /// Simplex multipliers for `cost`: `y = c_B B⁻¹`.
+    fn multipliers(&mut self, cost: &[S]) -> Vec<S> {
+        let mut y: Vec<S> = self.basis.iter().map(|&b| cost[b].clone()).collect();
+        self.btran(&mut y);
+        y
+    }
+
+    /// Row `i` of `B⁻¹` (BTRAN of the unit vector), for the phase-1
+    /// artificial drive-out.
+    fn inverse_row(&mut self, i: usize) -> Vec<S> {
+        let mut rho = vec![S::zero(); self.rows];
+        rho[i] = S::one();
+        self.btran(&mut rho);
+        rho
+    }
+
+    /// Reduced cost `c_j − y·A_j`, folded over the sparse column in
+    /// ascending row order, skipping zero multipliers. The serial and
+    /// sharded pricing scans both call this, so chunking cannot change a
+    /// bit of any column's value.
+    fn reduced_cost(&self, y: &[S], cost: &[S], j: usize) -> S {
         let mut zj = S::zero();
-        for i in 0..self.rows {
-            let cb = &cost[self.basis[i]];
-            if !cb.is_zero() {
-                zj = zj.add(&cb.mul(&self.a[i][j]));
+        for (r, a) in &self.cols[j] {
+            let yr = &y[*r as usize];
+            if !yr.is_zero() {
+                zj = zj.add(&yr.mul(a));
             }
         }
         cost[j].sub(&zj)
     }
 
-    /// Bland pricing: the first column in `0..limit` with negative
-    /// reduced cost, or `None` at optimality. `threads > 1` shards the
-    /// scan over contiguous column chunks on scoped workers; each chunk
-    /// reports its own first hit and the lowest index wins regardless of
-    /// chunking, so the entering column equals the serial scan's.
+    /// Bland pricing: the first non-basic, non-skipped column in
+    /// `0..limit` with negative reduced cost under the (per-iteration,
+    /// thread-independent) multipliers `y`, or `None` at optimality.
+    /// `threads > 1` shards the scan over contiguous column chunks on
+    /// scoped workers; each chunk reports its own first hit and the
+    /// lowest index wins regardless of chunking, so the entering column
+    /// equals the serial scan's.
     ///
     /// Bland's rule usually enters at a low index, so the first chunk is
     /// scanned serially before paying for any thread spawn — most pivots
@@ -111,33 +261,225 @@ impl<S: Scalar> Tableau<S> {
     /// exit across chunks) only runs when the low columns are all priced
     /// out. Either path computes each column identically, so the result
     /// is the same column (or None) in every configuration.
-    fn price_entering(&self, cost: &[S], limit: usize, threads: usize) -> Option<usize> {
-        if threads <= 1 || limit < PAR_MIN_COLS {
-            return (0..limit).find(|&j| self.reduced_cost(cost, j).is_neg());
-        }
-        let workers = threads.min(limit);
-        let chunk = limit.div_ceil(workers);
-        if let Some(j) = (0..chunk).find(|&j| self.reduced_cost(cost, j).is_neg()) {
-            return Some(j);
-        }
-        let mut firsts: Vec<Option<usize>> = vec![None; workers - 1];
-        // lint: allow(unordered-merge): each worker writes its own chunk slot; min() over slots is finish-order independent
-        std::thread::scope(|s| {
-            for (w, slot) in firsts.iter_mut().enumerate() {
-                let lo = (w + 1) * chunk;
-                let hi = ((w + 2) * chunk).min(limit);
-                let tab = &*self;
-                s.spawn(move || {
-                    *slot = (lo..hi).find(|&j| tab.reduced_cost(cost, j).is_neg());
+    fn price_bland(
+        &self,
+        y: &[S],
+        cost: &[S],
+        limit: usize,
+        threads: usize,
+        skipped: &[usize],
+    ) -> Option<(usize, S)> {
+        let candidate = |j: &usize| {
+            !self.in_basis[*j]
+                && !skipped.contains(j)
+                && self.reduced_cost(y, cost, *j).is_neg()
+        };
+        let j = if threads <= 1 || limit < PAR_MIN_COLS {
+            (0..limit).find(candidate)
+        } else {
+            let workers = threads.min(limit);
+            let chunk = limit.div_ceil(workers);
+            if let Some(j) = (0..chunk).find(candidate) {
+                Some(j)
+            } else {
+                let mut firsts: Vec<Option<usize>> = vec![None; workers - 1];
+                // lint: allow(unordered-merge): each worker writes its own chunk slot; min() over slots is finish-order independent
+                std::thread::scope(|s| {
+                    for (w, slot) in firsts.iter_mut().enumerate() {
+                        let lo = (w + 1) * chunk;
+                        let hi = ((w + 2) * chunk).min(limit);
+                        let this = &*self;
+                        s.spawn(move || {
+                            *slot = (lo..hi).find(|j| {
+                                !this.in_basis[*j]
+                                    && !skipped.contains(j)
+                                    && this.reduced_cost(y, cost, *j).is_neg()
+                            });
+                        });
+                    }
                 });
+                firsts.into_iter().flatten().min()
             }
-        });
-        firsts.into_iter().flatten().min()
+        }?;
+        Some((j, self.reduced_cost(y, cost, j)))
     }
 
-    /// Minimize `cost` (length cols-1) over the columns `0..limit`
-    /// starting from the current basis, pricing with up to `threads`
-    /// workers. Returns (objective value, pivots) or Unbounded.
+    /// One contiguous chunk of the Dantzig pricing scan: the most
+    /// negative reduced cost in `lo..hi` as a `(rc, column)` pair, ties
+    /// broken toward the lower column by the ascending scan order. Both
+    /// the serial path and every worker chunk run exactly this code.
+    fn scan_dantzig(
+        &self,
+        y: &[S],
+        cost: &[S],
+        lo: usize,
+        hi: usize,
+        skipped: &[usize],
+    ) -> Option<(S, usize)> {
+        let mut best: Option<(S, usize)> = None;
+        for j in lo..hi {
+            if self.in_basis[j] || skipped.contains(&j) {
+                continue;
+            }
+            let rc = self.reduced_cost(y, cost, j);
+            if rc.is_neg() {
+                let better = match &best {
+                    None => true,
+                    Some((brc, _)) => rc.lt(brc),
+                };
+                if better {
+                    best = Some((rc, j));
+                }
+            }
+        }
+        best
+    }
+
+    /// Dantzig pricing: the most negative reduced cost enters (tie →
+    /// lowest column index), or `None` at optimality. The tie-break uses
+    /// the exact comparison [`Scalar::lt`] — a tolerance-based one is not
+    /// associative, so chunk merges could disagree with a serial scan.
+    /// Unlike Bland, Dantzig needs the full scan every iteration, so
+    /// `threads > 1` shards all of `0..limit` (first chunk on the calling
+    /// thread) and folds the chunk winners with the lexicographic
+    /// `(rc, j)` minimum, which is associative and therefore
+    /// chunking-independent.
+    fn price_dantzig(
+        &self,
+        y: &[S],
+        cost: &[S],
+        limit: usize,
+        threads: usize,
+        skipped: &[usize],
+    ) -> Option<(usize, S)> {
+        let merged = if threads <= 1 || limit < PAR_MIN_COLS {
+            self.scan_dantzig(y, cost, 0, limit, skipped)
+        } else {
+            let workers = threads.min(limit);
+            let chunk = limit.div_ceil(workers);
+            let mut bests: Vec<Option<(S, usize)>> = vec![None; workers - 1];
+            // lint: allow(unordered-merge): each worker writes its own chunk slot; the lexicographic (rc, j) fold below is associative and finish-order independent
+            let first = std::thread::scope(|s| {
+                for (w, slot) in bests.iter_mut().enumerate() {
+                    let lo = (w + 1) * chunk;
+                    let hi = ((w + 2) * chunk).min(limit);
+                    let this = &*self;
+                    s.spawn(move || {
+                        *slot = this.scan_dantzig(y, cost, lo, hi, skipped);
+                    });
+                }
+                self.scan_dantzig(y, cost, 0, chunk, skipped)
+            });
+            let mut best = first;
+            for b in bests.into_iter().flatten() {
+                let better = match &best {
+                    None => true,
+                    Some((brc, bj)) => b.0.lt(brc) || (!brc.lt(&b.0) && b.1 < *bj),
+                };
+                if better {
+                    best = Some(b);
+                }
+            }
+            best
+        };
+        merged.map(|(rc, j)| (j, rc))
+    }
+
+    /// Build the eta vector that pivots row `r` on the FTRAN'd entering
+    /// column `w` (shared by [`Revised::pivot`] and
+    /// [`Revised::reinvert`]).
+    fn make_eta(&self, r: usize, w: &[S]) -> Eta<S> {
+        let piv = w[r].clone();
+        debug_assert!(!piv.is_zero());
+        let diag = S::one().div(&piv);
+        let mut rest = Vec::new();
+        for (i, wi) in w.iter().enumerate() {
+            if i != r && !wi.is_zero() {
+                rest.push((i as u32, wi.div(&piv).neg()));
+            }
+        }
+        Eta {
+            r: r as u32,
+            diag,
+            rest,
+        }
+    }
+
+    /// Pivot column `c` into the basis at row `r`: append the eta built
+    /// from the FTRAN'd entering column `w` and update the basic
+    /// solution through it (the same arithmetic every later FTRAN sees).
+    /// Refactorizes when the eta file outgrows `reinvert_every`.
+    fn pivot(&mut self, r: usize, c: usize, w: &[S]) -> Result<(), LpError> {
+        let eta = self.make_eta(r, w);
+        // Update x_B by applying the new eta (skip-free: the pivot row's
+        // value may be zero on degenerate pivots, and the update must
+        // still install it).
+        let t = self.b_vals[eta.r as usize].clone();
+        self.b_vals[eta.r as usize] = t.mul(&eta.diag);
+        for (i, v) in &eta.rest {
+            self.b_vals[*i as usize] = self.b_vals[*i as usize].add(&t.mul(v));
+        }
+        self.eta_ops += 1 + eta.rest.len() as u64;
+        self.in_basis[self.basis[r]] = false;
+        self.in_basis[c] = true;
+        self.basis[r] = c;
+        self.etas.push(eta);
+        if self.etas.len() > self.reinvert_every {
+            self.reinvert()?;
+        }
+        Ok(())
+    }
+
+    /// Refactorize: rebuild the eta file from the current basis columns
+    /// (Gaussian elimination in basis order, pivot row = the largest
+    /// magnitude among unplaced rows, lowest index on ties), then
+    /// recompute `x_B` from the stored rhs. The rebuilt file represents
+    /// the same `B⁻¹` in `O(rows)` etas regardless of how many pivots
+    /// produced the old one. Deterministic: triggered by eta count,
+    /// pivots chosen by (magnitude, index).
+    fn reinvert(&mut self) -> Result<(), LpError> {
+        self.reinversions += 1;
+        let cols_in = self.basis.clone();
+        self.etas.clear();
+        let mut placed = vec![false; self.rows];
+        let mut new_basis = vec![0usize; self.rows];
+        for c in cols_in {
+            let mut w = self.dense_col(c);
+            self.ftran(&mut w);
+            let mut best: Option<(S, usize)> = None;
+            for (i, wi) in w.iter().enumerate() {
+                if placed[i] {
+                    continue;
+                }
+                let a = if wi.is_neg() { wi.neg() } else { wi.clone() };
+                if a.is_pos() {
+                    let better = match &best {
+                        None => true,
+                        Some((ba, _)) => ba.lt(&a),
+                    };
+                    if better {
+                        best = Some((a, i));
+                    }
+                }
+            }
+            let Some((_, r)) = best else {
+                return Err(LpError::Singular);
+            };
+            let eta = self.make_eta(r, &w);
+            self.etas.push(eta);
+            placed[r] = true;
+            new_basis[r] = c;
+        }
+        self.basis = new_basis;
+        let mut b = self.rhs0.clone();
+        self.ftran(&mut b);
+        self.b_vals = b;
+        Ok(())
+    }
+
+    /// Minimize `cost` over the columns `0..limit` starting from the
+    /// current basis, pricing with up to `threads` workers. Returns
+    /// (objective value, pivots) or Unbounded/Singular.
     fn optimize(
         &mut self,
         cost: &[S],
@@ -145,40 +487,96 @@ impl<S: Scalar> Tableau<S> {
         threads: usize,
     ) -> Result<(S, usize), LpError> {
         let mut pivots = 0usize;
+        let mut stall = 0usize;
+        // Ray-guard skip list: columns whose noise-level reduced cost
+        // produced a nonpositive FTRAN direction this pricing round.
+        // Cleared on every pivot, so it stays tiny; membership tests
+        // only, so a Vec suffices.
+        let mut skipped: Vec<usize> = Vec::new();
         loop {
-            // Entering column: reduced cost c_j − z_j < 0 (minimization),
-            // smallest index first (Bland).
-            let entering = self.price_entering(cost, limit, threads);
-            let Some(c) = entering else {
-                // Optimal: objective = sum_i cost[basis[i]] * rhs[i].
+            let y = self.multipliers(cost);
+            let governed = stall >= STALL_WINDOW;
+            let priced = if governed {
+                self.price_bland(&y, cost, limit, threads, &skipped)
+            } else {
+                self.price_dantzig(&y, cost, limit, threads, &skipped)
+            };
+            let Some((c, rc)) = priced else {
+                // Optimal: objective = sum_i cost[basis[i]] * x_B[i].
                 let mut obj = S::zero();
                 for i in 0..self.rows {
-                    obj = obj.add(&cost[self.basis[i]].mul(self.rhs(i)));
+                    obj = obj.add(&cost[self.basis[i]].mul(&self.b_vals[i]));
                 }
                 return Ok((obj, pivots));
             };
-            // Ratio test (Bland tie-break on smallest basis index).
-            let mut leave: Option<(usize, S)> = None;
-            for i in 0..self.rows {
-                if self.a[i][c].is_pos() {
-                    let ratio = self.rhs(i).div(&self.a[i][c]);
-                    let better = match &leave {
+            let mut w = self.dense_col(c);
+            self.ftran(&mut w);
+            // Harris two-pass ratio test. Pass 1: minimum ratio θ.
+            let mut theta: Option<S> = None;
+            for (wi, bi) in w.iter().zip(&self.b_vals) {
+                if wi.is_pos() {
+                    let ratio = bi.div(wi);
+                    let better = match &theta {
                         None => true,
-                        Some((li, lr)) => {
-                            let diff = ratio.sub(lr);
-                            diff.is_neg()
-                                || (diff.is_zero() && self.basis[i] < self.basis[*li])
-                        }
+                        Some(t) => ratio.lt(t),
                     };
                     if better {
-                        leave = Some((i, ratio));
+                        theta = Some(ratio);
                     }
                 }
             }
-            let Some((r, _)) = leave else {
+            let Some(theta) = theta else {
+                // Ray guard: a noise-level reduced cost (e.g. the negated
+                // twin of a basic free-variable pair) whose direction has
+                // no positive entry is not a certified ray; exclude the
+                // column for this round and re-price.
+                if rc.is_ray_noise() {
+                    skipped.push(c);
+                    continue;
+                }
                 return Err(LpError::Unbounded);
             };
-            self.pivot(r, c);
+            // Pass 2: among rows within tolerance of θ, the largest
+            // pivot magnitude leaves (tie → smallest basis index). Under
+            // the governor, Bland's leaving rule instead: the smallest
+            // basis index among qualifying rows, completing Bland's
+            // anti-cycling pair.
+            let mut leave: Option<usize> = None;
+            let mut best_piv = S::zero();
+            for (i, wi) in w.iter().enumerate() {
+                if !wi.is_pos() {
+                    continue;
+                }
+                let ratio = self.b_vals[i].div(wi);
+                if ratio.sub(&theta).is_pos() {
+                    continue;
+                }
+                let better = match leave {
+                    None => true,
+                    Some(l) => {
+                        if governed {
+                            self.basis[i] < self.basis[l]
+                        } else {
+                            best_piv.lt(wi) || (!wi.lt(&best_piv) && self.basis[i] < self.basis[l])
+                        }
+                    }
+                };
+                if better {
+                    leave = Some(i);
+                    best_piv = wi.clone();
+                }
+            }
+            let Some(r) = leave else {
+                // Unreachable: the row attaining θ always qualifies.
+                return Err(LpError::Singular);
+            };
+            if theta.is_pos() {
+                stall = 0;
+            } else {
+                stall += 1;
+            }
+            self.pivot(r, c, &w)?;
+            skipped.clear();
             pivots += 1;
         }
     }
@@ -186,48 +584,69 @@ impl<S: Scalar> Tableau<S> {
 
 /// Solve the LP serially. See module docs.
 pub fn solve<S: Scalar>(lp: &Lp<S>) -> Result<Solution<S>, LpError> {
-    solve_with_threads(lp, 1)
+    solve_inner(lp, 1, 0)
 }
 
-/// Solve the LP with the entering-variable pricing scan sharded across
-/// up to `threads` scoped workers (`<= 1` = serial). The returned basis,
-/// objective, values, and pivot count are **bit-identical** to
+/// Solve the LP with the pricing scan sharded across up to `threads`
+/// scoped workers (`<= 1` = serial). The returned basis, objective,
+/// values, duals, and every work counter are **bit-identical** to
 /// [`solve`] for every thread count — sharding changes wall-clock only.
 pub fn solve_with_threads<S: Scalar>(lp: &Lp<S>, threads: usize) -> Result<Solution<S>, LpError> {
+    solve_inner(lp, threads, 0)
+}
+
+/// Shared implementation; `reinvert_every == 0` selects the default
+/// refactorization period `max(64, 2·rows)` (tests pass a small value to
+/// exercise reinversion on small LPs).
+fn solve_inner<S: Scalar>(
+    lp: &Lp<S>,
+    threads: usize,
+    reinvert_every: usize,
+) -> Result<Solution<S>, LpError> {
     let n = lp.n_vars;
     let m = lp.constraints.len();
+    let reinvert_every = if reinvert_every == 0 {
+        64.max(2 * m)
+    } else {
+        reinvert_every
+    };
 
-    // Column layout: [original n] [slack/surplus per row as needed] [artificials] [rhs]
+    // Column layout: [original n] [slack/surplus per row as needed]
+    // [artificials]. Rows are normalized so rhs >= 0 (flipping the
+    // comparison when the input rhs was negative); `flipped` remembers
+    // which, so the reported duals keep the caller's row orientation.
     let mut n_slack = 0usize;
     for c in &lp.constraints {
         if matches!(c.cmp, Cmp::Le | Cmp::Ge) {
             n_slack += 1;
         }
     }
-    // Artificials: Ge and Eq rows always; Le rows only if rhs < 0 after
-    // normalization (we instead normalize rows so rhs >= 0 first).
-    // Build dense rows with rhs >= 0.
-    let mut rows: Vec<(Vec<S>, Cmp, S)> = Vec::with_capacity(m);
-    for c in &lp.constraints {
-        let mut row = vec![S::zero(); n];
-        for (i, a) in &c.coeffs {
-            row[*i] = row[*i].add(a);
+    let mut rows: Vec<(Vec<(usize, S)>, Cmp, S)> = Vec::with_capacity(m);
+    let mut flipped = vec![false; m];
+    for (i, c) in lp.constraints.iter().enumerate() {
+        // Merge duplicate variable mentions (ascending variable order so
+        // column entries come out in a canonical order).
+        let mut merged: std::collections::BTreeMap<usize, S> = std::collections::BTreeMap::new();
+        for (v, a) in &c.coeffs {
+            let slot = merged.entry(*v).or_insert_with(S::zero);
+            *slot = slot.add(a);
         }
-        let (row, cmp, rhs) = if c.rhs.is_neg() {
-            let flipped = match c.cmp {
+        let (coeffs, cmp, rhs) = if c.rhs.is_neg() {
+            flipped[i] = true;
+            let f = match c.cmp {
                 Cmp::Le => Cmp::Ge,
                 Cmp::Ge => Cmp::Le,
                 Cmp::Eq => Cmp::Eq,
             };
             (
-                row.iter().map(|x| x.neg()).collect::<Vec<_>>(),
-                flipped,
+                merged.into_iter().map(|(v, a)| (v, a.neg())).collect(),
+                f,
                 c.rhs.neg(),
             )
         } else {
-            (row, c.cmp, c.rhs.clone())
+            (merged.into_iter().collect(), c.cmp, c.rhs.clone())
         };
-        rows.push((row, cmp, rhs));
+        rows.push((coeffs, cmp, rhs));
     }
 
     let mut n_artif = 0usize;
@@ -237,44 +656,55 @@ pub fn solve_with_threads<S: Scalar>(lp: &Lp<S>, threads: usize) -> Result<Solut
         }
     }
     let total = n + n_slack + n_artif;
-    let cols = total + 1;
-
-    let mut a = vec![vec![S::zero(); cols]; m];
-    let mut basis = vec![0usize; m];
-    let mut slack_idx = n;
-    let mut artif_idx = n + n_slack;
     let artif_start = n + n_slack;
-    for (i, (row, cmp, rhs)) in rows.iter().enumerate() {
-        for j in 0..n {
-            a[i][j] = row[j].clone();
+
+    let mut cols: Vec<Vec<(u32, S)>> = vec![Vec::new(); total];
+    let mut basis = vec![0usize; m];
+    let mut in_basis = vec![false; total];
+    let mut b_vals = Vec::with_capacity(m);
+    let mut slack_idx = n;
+    let mut artif_idx = artif_start;
+    for (i, (coeffs, cmp, rhs)) in rows.iter().enumerate() {
+        for (v, a) in coeffs {
+            if !a.is_zero() {
+                cols[*v].push((i as u32, a.clone()));
+            }
         }
-        a[i][cols - 1] = rhs.clone();
+        b_vals.push(rhs.clone());
         match cmp {
             Cmp::Le => {
-                a[i][slack_idx] = S::one();
+                cols[slack_idx].push((i as u32, S::one()));
                 basis[i] = slack_idx;
                 slack_idx += 1;
             }
             Cmp::Ge => {
-                a[i][slack_idx] = S::one().neg();
+                cols[slack_idx].push((i as u32, S::one().neg()));
                 slack_idx += 1;
-                a[i][artif_idx] = S::one();
+                cols[artif_idx].push((i as u32, S::one()));
                 basis[i] = artif_idx;
                 artif_idx += 1;
             }
             Cmp::Eq => {
-                a[i][artif_idx] = S::one();
+                cols[artif_idx].push((i as u32, S::one()));
                 basis[i] = artif_idx;
                 artif_idx += 1;
             }
         }
+        in_basis[basis[i]] = true;
     }
 
-    let mut tab = Tableau {
-        a,
-        basis,
-        rows: m,
+    let rhs0 = b_vals.clone();
+    let mut rev = Revised {
         cols,
+        etas: Vec::new(),
+        basis,
+        in_basis,
+        b_vals,
+        rhs0,
+        rows: m,
+        eta_ops: 0,
+        reinvert_every,
+        reinversions: 0,
     };
 
     let mut total_pivots = 0usize;
@@ -285,24 +715,37 @@ pub fn solve_with_threads<S: Scalar>(lp: &Lp<S>, threads: usize) -> Result<Solut
         for item in cost1.iter_mut().take(total).skip(artif_start) {
             *item = S::one();
         }
-        let (obj1, p1) = tab.optimize(&cost1, total, threads)?;
+        let (obj1, p1) = rev.optimize(&cost1, total, threads)?;
         total_pivots += p1;
         if obj1.is_pos() {
             return Err(LpError::Infeasible);
         }
-        // Drive any artificial still in the basis out (degenerate rows).
+        // Drive any artificial still in the basis out (degenerate rows):
+        // row i of B⁻¹A is priced per column via one BTRAN of e_i, and
+        // the first real column with a nonzero entry pivots in.
         for i in 0..m {
-            if tab.basis[i] >= artif_start {
-                // Find a non-artificial column with nonzero coefficient.
+            if rev.basis[i] >= artif_start {
+                let rho = rev.inverse_row(i);
                 let mut found = None;
                 for j in 0..artif_start {
-                    if !tab.a[i][j].is_zero() {
-                        found = Some(j);
-                        break;
+                    if !rev.in_basis[j] {
+                        let mut entry = S::zero();
+                        for (r, a) in &rev.cols[j] {
+                            let rr = &rho[*r as usize];
+                            if !rr.is_zero() {
+                                entry = entry.add(&rr.mul(a));
+                            }
+                        }
+                        if !entry.is_zero() {
+                            found = Some(j);
+                            break;
+                        }
                     }
                 }
                 if let Some(j) = found {
-                    tab.pivot(i, j);
+                    let mut w = rev.dense_col(j);
+                    rev.ftran(&mut w);
+                    rev.pivot(i, j, &w)?;
                     total_pivots += 1;
                 }
                 // else: the row is all-zero over real columns — redundant
@@ -316,19 +759,31 @@ pub fn solve_with_threads<S: Scalar>(lp: &Lp<S>, threads: usize) -> Result<Solut
     for j in 0..n {
         cost2[j] = lp.objective[j].clone();
     }
-    let (obj, p2) = tab.optimize(&cost2, artif_start, threads)?;
+    let (obj, p2) = rev.optimize(&cost2, artif_start, threads)?;
     total_pivots += p2;
 
     let mut values = vec![S::zero(); n];
     for i in 0..m {
-        if tab.basis[i] < n {
-            values[tab.basis[i]] = tab.rhs(i).clone();
+        if rev.basis[i] < n {
+            values[rev.basis[i]] = rev.b_vals[i].clone();
         }
     }
+    // Duals at optimality, restored to the caller's row orientation.
+    let mut duals = rev.multipliers(&cost2);
+    for (i, f) in flipped.iter().enumerate() {
+        if *f {
+            duals[i] = duals[i].neg();
+        }
+    }
+    let dense_cells = total_pivots as u64 * m as u64 * (total as u64 + 1);
     Ok(Solution {
         objective: obj,
         values,
         pivots: total_pivots,
+        eta_applications: rev.eta_ops,
+        dense_cells,
+        reinversions: rev.reinversions,
+        duals,
     })
 }
 
@@ -393,8 +848,11 @@ mod tests {
 
     #[test]
     fn detects_unbounded() {
+        // max x with no upper bound: the entering column's reduced cost
+        // is -1, far below the ray-noise tolerance, so the ray guard
+        // must not swallow the genuine ray.
         let mut lp = lp_f64();
-        let x = lp.add_var("x", -1.0); // maximize x, no upper bound
+        let x = lp.add_var("x", -1.0);
         lp.constrain(vec![(x, 1.0)], Cmp::Ge, 0.0);
         assert_eq!(solve(&lp).unwrap_err(), LpError::Unbounded);
     }
@@ -444,11 +902,78 @@ mod tests {
     }
 
     #[test]
+    fn duals_price_the_binding_constraints() {
+        // min x + y s.t. x + y >= 4, x <= 3: only the >= row binds the
+        // optimum, so its shadow price is 1 and the slack row's is 0.
+        // Dual feasibility must hold for every column.
+        let mut lp = lp_f64();
+        let x = lp.add_var("x", 1.0);
+        let y = lp.add_var("y", 1.0);
+        lp.constrain(vec![(x, 1.0), (y, 1.0)], Cmp::Ge, 4.0);
+        lp.constrain(vec![(x, 1.0)], Cmp::Le, 3.0);
+        let sol = solve(&lp).unwrap();
+        assert!((sol.duals[0] - 1.0).abs() < 1e-9, "duals {:?}", sol.duals);
+        assert!(sol.duals[1].abs() < 1e-9, "duals {:?}", sol.duals);
+        // Reduced costs c_j − y·A_j >= 0 for both structural columns.
+        let rc_x = 1.0 - (sol.duals[0] + sol.duals[1]);
+        let rc_y = 1.0 - sol.duals[0];
+        assert!(rc_x > -1e-9 && rc_y > -1e-9);
+    }
+
+    #[test]
+    fn duals_keep_caller_row_orientation_after_rhs_flip() {
+        // x − y <= −2 is normalized to −x + y >= 2 internally; the
+        // reported dual must still carry the <=-row sign (y <= 0 under
+        // minimization). min y s.t. x − y <= −2 -> y = 2, dual = −1.
+        let mut lp = lp_f64();
+        let _x = lp.add_var("x", 0.0);
+        let y = lp.add_var("y", 1.0);
+        lp.constrain(vec![(0, 1.0), (y, -1.0)], Cmp::Le, -2.0);
+        let sol = solve(&lp).unwrap();
+        assert!((sol.objective - 2.0).abs() < 1e-9);
+        assert!((sol.duals[0] + 1.0).abs() < 1e-9, "duals {:?}", sol.duals);
+    }
+
+    #[test]
+    fn eta_work_undercuts_the_dense_counterfactual() {
+        // On a wide LP the factorization's actual scalar work must come
+        // in strictly under the dense rewrite's pivots × rows × cols —
+        // the counter pair the bench suite asserts on.
+        let mut lp = lp_f64();
+        let n = 2 * PAR_MIN_COLS;
+        for v in 0..n {
+            let c = ((v * 7) % 5) as f64 - 2.0;
+            lp.add_var(format!("v{v}"), c);
+        }
+        for v in 0..n {
+            lp.constrain(vec![(v, 1.0)], Cmp::Le, 3.0);
+        }
+        let coupling: Vec<(usize, f64)> = (0..n).map(|v| (v, 1.0)).collect();
+        lp.constrain(coupling, Cmp::Ge, 5.0);
+        let sol = solve(&lp).unwrap();
+        assert!(sol.pivots > 0);
+        // rows = n + 1; columns = n structural + (n+1) slack + 1
+        // artificial + rhs = 2n + 3.
+        assert_eq!(
+            sol.dense_cells,
+            sol.pivots as u64 * (n as u64 + 1) * (2 * n as u64 + 3)
+        );
+        assert!(
+            sol.eta_applications < sol.dense_cells,
+            "eta work {} >= dense counterfactual {}",
+            sol.eta_applications,
+            sol.dense_cells
+        );
+    }
+
+    #[test]
     fn sharded_pricing_is_bit_identical_to_serial() {
         // Wide LP (past the PAR_MIN_COLS floor) so the sharded scan
-        // actually engages: the basis walk, objective, values, and pivot
-        // count must match the serial solve bit for bit at every thread
-        // count — lowest qualifying index wins regardless of chunking.
+        // actually engages: the basis walk, objective, values, duals,
+        // and work counters must match the serial solve bit for bit at
+        // every thread count — the lexicographic (rc, column) chunk
+        // merge is associative, so chunking cannot change the entering
+        // column.
         let mut lp = lp_f64();
         let n = 2 * PAR_MIN_COLS;
         for v in 0..n {
@@ -470,10 +995,100 @@ mod tests {
                 "threads={threads}: objective"
             );
             assert_eq!(serial.pivots, sharded.pivots, "threads={threads}: pivots");
+            assert_eq!(
+                serial.eta_applications, sharded.eta_applications,
+                "threads={threads}: eta work"
+            );
+            assert_eq!(
+                serial.reinversions, sharded.reinversions,
+                "threads={threads}: reinversions"
+            );
             for (v, (a, b)) in serial.values.iter().zip(&sharded.values).enumerate() {
                 assert_eq!(a.to_bits(), b.to_bits(), "threads={threads}: value {v}");
             }
+            for (r, (a, b)) in serial.duals.iter().zip(&sharded.duals).enumerate() {
+                assert_eq!(a.to_bits(), b.to_bits(), "threads={threads}: dual {r}");
+            }
         }
+    }
+
+    #[test]
+    fn reinversion_reproduces_the_default_solution() {
+        // Force a refactorization every 2 pivots: the rebuilt eta file
+        // represents the same B⁻¹, so in exact arithmetic the pivot walk
+        // and solution are unchanged bit for bit; in f64 the result
+        // stays feasible and optimal within tolerance.
+        let mut lpr: Lp<Rat> = Lp::new();
+        let mut lpf = lp_f64();
+        let costs = [2i128, 3, 4, 5];
+        for (v, c) in costs.iter().enumerate() {
+            lpr.add_var(format!("v{v}"), Rat::int(*c));
+            lpf.add_var(format!("v{v}"), *c as f64);
+        }
+        let rows: [(&[usize], i128); 4] = [
+            (&[0, 1, 2, 3], 10),
+            (&[0, 1], 4),
+            (&[2, 3], 3),
+            (&[1, 2], 5),
+        ];
+        for (vs, rhs) in rows {
+            lpr.constrain(
+                vs.iter().map(|v| (*v, Rat::int(1))).collect(),
+                Cmp::Ge,
+                Rat::int(rhs),
+            );
+            lpf.constrain(vs.iter().map(|v| (*v, 1.0)).collect(), Cmp::Ge, rhs as f64);
+        }
+        let base = solve(&lpr).unwrap();
+        assert_eq!(base.reinversions, 0, "default period fired on a tiny LP");
+        let reinv = solve_inner(&lpr, 1, 2).unwrap();
+        assert!(reinv.reinversions > 0, "reinversion never triggered");
+        assert_eq!(base.objective, reinv.objective);
+        assert_eq!(base.values, reinv.values);
+        assert_eq!(base.pivots, reinv.pivots);
+        let f = solve_inner(&lpf, 1, 2).unwrap();
+        assert!(f.reinversions > 0);
+        assert!((f.objective - base.objective.to_f64()).abs() < 1e-6);
+        assert!(lpf.is_feasible(&f.values));
+    }
+
+    #[test]
+    fn degenerate_lp_terminates_and_matches_oracle() {
+        // Pile redundant binding rows on one vertex so most ratio tests
+        // return zero: the Dantzig walk must still terminate (the stall
+        // governor caps degenerate runs) and agree with the exact field.
+        let mut lpf = lp_f64();
+        let mut lpr: Lp<Rat> = Lp::new();
+        for v in 0..3 {
+            lpf.add_var(format!("v{v}"), -1.0);
+            lpr.add_var(format!("v{v}"), Rat::int(-1));
+        }
+        for _ in 0..5 {
+            lpf.constrain(vec![(0, 1.0), (1, 1.0), (2, 1.0)], Cmp::Le, 4.0);
+            lpr.constrain(
+                vec![(0, Rat::int(1)), (1, Rat::int(1)), (2, Rat::int(1))],
+                Cmp::Le,
+                Rat::int(4),
+            );
+        }
+        lpf.constrain(vec![(0, 1.0), (1, 2.0)], Cmp::Le, 4.0);
+        lpr.constrain(vec![(0, Rat::int(1)), (1, Rat::int(2))], Cmp::Le, Rat::int(4));
+        let sf = solve(&lpf).unwrap();
+        let sr = solve(&lpr).unwrap();
+        assert!((sf.objective - sr.objective.to_f64()).abs() < 1e-9);
+        assert!(lpf.is_feasible(&sf.values));
+        assert_eq!(sr.objective, Rat::int(-4));
+    }
+
+    #[test]
+    fn ray_noise_is_an_f64_only_tolerance() {
+        // The ray guard must treat noise-level f64 reduced costs as
+        // non-rays while exact rationals always certify theirs.
+        assert!((-1e-7f64).is_ray_noise());
+        assert!(0.5f64.is_ray_noise());
+        assert!(!(-1e-3f64).is_ray_noise());
+        assert!(!Rat::new(-1, 1_000_000_000).is_ray_noise());
+        assert!(!Rat::int(-1).is_ray_noise());
     }
 
     #[test]

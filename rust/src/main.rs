@@ -200,6 +200,7 @@ fn cmd_lp(argv: &[String]) -> i32 {
         ArgSpec { name: "storage", help: "comma-separated per-node storage", takes_value: true, default: Some("3,5,6,8") },
         ArgSpec { name: "n", help: "number of files N", takes_value: true, default: Some("12") },
         ArgSpec { name: "cap", help: "max perfect collections per subsystem", takes_value: true, default: Some("4096") },
+        ArgSpec { name: "capped", help: "legacy capped relaxation (skip the exact dual-certified path)", takes_value: false, default: None },
         ArgSpec { name: "help", help: "show usage", takes_value: false, default: None },
     ];
     let args = match Args::parse(argv, &specs) {
@@ -223,9 +224,16 @@ fn cmd_lp(argv: &[String]) -> i32 {
         Ok(p) => p,
         Err(e) => return fail(e),
     };
-    let sol = match lp_general::solve_general(&p, cap) {
-        Ok(s) => s,
-        Err(e) => return fail(e),
+    let sol = if args.flag("capped") {
+        match lp_general::solve_general(&p, cap) {
+            Ok(s) => s,
+            Err(e) => return fail(e),
+        }
+    } else {
+        match lp_general::solve_general_exact(&p, cap) {
+            Ok(s) => s,
+            Err(e) => return fail(e),
+        }
     };
     let k = p.k();
     println!("K={k} storage={m:?} N={n}");
@@ -233,6 +241,20 @@ fn cmd_lp(argv: &[String]) -> i32 {
         "LP: {} vars, {} constraints, {} pivots",
         sol.n_vars, sol.n_constraints, sol.pivots
     );
+    if let Some(stats) = &sol.stats {
+        println!(
+            "exact: z_exact={:.6} certified={} rounds={} enumerated={} grown={}",
+            stats.z_exact,
+            stats.certified,
+            stats.exact_rounds,
+            stats.enumerated_collections,
+            stats.grown_subsystems
+        );
+        println!(
+            "work: pivots={} eta_applications={} dense_cells={} reinversions={}",
+            stats.pivots, stats.eta_applications, stats.dense_cells, stats.reinversions
+        );
+    }
     for (j, d) in &sol.dropped {
         println!("  note: subsystem j={j} dropped {d} collections (cap {cap})");
     }
@@ -759,7 +781,7 @@ fn cmd_bench_json(argv: &[String]) -> i32 {
         },
         None => None,
     };
-    let report = match bench::run_suite_with(threads, timing, topology_override, faults_override) {
+    let report = match bench::run_extended_suite_with(threads, timing, topology_override, faults_override) {
         Ok(r) => r,
         Err(e) => return fail(e),
     };

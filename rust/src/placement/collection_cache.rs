@@ -1,0 +1,115 @@
+//! Cross-shape memo store for perfect-collection enumeration.
+//!
+//! The set `C'_j` of perfect collections depends only on `(K, j)` — not
+//! on the storage vector, file count, or any other plan input — so two
+//! plan builds at different cluster shapes with the same `K` redo
+//! byte-identical DFS (or cyclic-orbit) work. The `PlanCache` cannot
+//! help: its key includes the storage profile, so a cache miss there
+//! still pays full enumeration here. This store memoizes enumeration
+//! results behind a deterministic key `(K, j, cap, mode)` shared by
+//! every plan build in the process.
+//!
+//! Determinism: enumeration is a pure function of the key, so
+//! first-writer-wins insertion cannot change any artifact byte — a hit
+//! returns exactly what a fresh enumeration would. Access is keyed only
+//! (no iteration), and the mutex recovers from poisoning by taking the
+//! inner value: a panicking enumeration elsewhere must not wedge
+//! unrelated plan builds.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Mutex, MutexGuard, OnceLock, PoisonError};
+
+/// Which enumerator produced the entry. `Full` entries count every
+/// completion past the cap (the legacy capped LP); `Seeded` entries
+/// carry only a truncation flag (the exact path's growing masters).
+/// The two are keyed apart because they cap differently even at equal
+/// `cap` values.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum CacheMode {
+    Full,
+    Seeded,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+struct Key {
+    k: u8,
+    j: u8,
+    cap: usize,
+    mode: CacheMode,
+}
+
+/// Collections plus the enumerator's count payload (dropped count for
+/// `Full`, 0/1 truncation flag for `Seeded`).
+type Entry = (Vec<Vec<u32>>, usize);
+
+static CACHE: OnceLock<Mutex<HashMap<Key, Entry>>> = OnceLock::new();
+static HITS: AtomicU64 = AtomicU64::new(0);
+static MISSES: AtomicU64 = AtomicU64::new(0);
+
+fn lock() -> MutexGuard<'static, HashMap<Key, Entry>> {
+    CACHE
+        .get_or_init(|| Mutex::new(HashMap::new()))
+        .lock()
+        .unwrap_or_else(PoisonError::into_inner)
+}
+
+/// Return the memoized enumeration for `(k, j, cap, mode)`, running
+/// `enumerate` outside the lock on a miss. Concurrent misses on the
+/// same key may both enumerate; the first insertion wins and both
+/// results are identical by purity.
+pub fn get_or_enumerate(
+    k: usize,
+    j: usize,
+    cap: usize,
+    mode: CacheMode,
+    enumerate: impl FnOnce() -> Entry,
+) -> Entry {
+    let key = Key {
+        k: k as u8,
+        j: j as u8,
+        cap,
+        mode,
+    };
+    if let Some(hit) = lock().get(&key).cloned() {
+        HITS.fetch_add(1, Ordering::Relaxed);
+        return hit;
+    }
+    MISSES.fetch_add(1, Ordering::Relaxed);
+    let fresh = enumerate();
+    lock().entry(key).or_insert_with(|| fresh.clone());
+    fresh
+}
+
+/// `(hits, misses)` since process start — monotone counters for bench
+/// reporting; not part of any deterministic artifact.
+pub fn stats() -> (u64, u64) {
+    (HITS.load(Ordering::Relaxed), MISSES.load(Ordering::Relaxed))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Keys use a cap no real caller reaches so concurrent test binaries
+    // within this process cannot collide with these entries.
+
+    #[test]
+    fn keyed_store_memoizes_the_first_result() {
+        let a = get_or_enumerate(5, 2, 999_983, CacheMode::Seeded, || (vec![vec![3, 5]], 7));
+        // A second call must return the cached value, not this closure's.
+        let b = get_or_enumerate(5, 2, 999_983, CacheMode::Seeded, || (vec![vec![9]], 1));
+        assert_eq!(a, b);
+        assert_eq!(b, (vec![vec![3, 5]], 7));
+        let (h, m) = stats();
+        assert!(h >= 1 && m >= 1, "hit/miss counters must both have moved");
+    }
+
+    #[test]
+    fn mode_is_part_of_the_key() {
+        let seeded =
+            get_or_enumerate(6, 3, 999_979, CacheMode::Seeded, || (vec![vec![1, 2]], 1));
+        let full = get_or_enumerate(6, 3, 999_979, CacheMode::Full, || (vec![vec![4, 8]], 2));
+        assert_ne!(seeded, full, "Full and Seeded entries must not alias");
+    }
+}

@@ -14,22 +14,64 @@
 //! Constraints: per-subset consumption (`Σ x <= S_T`), file-count and
 //! per-node storage equalities (Step 12). Objective: total shuffle load.
 //!
-//! The enumeration of `C'_j` grows combinatorially (Remark 7); we cap it
-//! and report how many collections were dropped — never silently.
+//! The enumeration of `C'_j` grows combinatorially (Remark 7). The legacy
+//! capped path ([`solve_general`]) truncates it and reports how many
+//! collections were dropped — never silently. The **exact path**
+//! ([`solve_general_exact`]) removes the cap's approximation error
+//! entirely without enumerating `C'_j`:
+//!
+//! 1. solve the full LP's dual collapsed to `K + 2` variables
+//!    ([`exact_load`]) — every collection of subsystem `j` prices to the
+//!    same constant, so the exponentially many collection cuts fold into
+//!    one row per `j` and the optimum equals the uncapped LP's load at
+//!    any `K`, in microseconds;
+//! 2. solve a *seeded* master over a small collection subset (exhaustive
+//!    DFS at `K <= 6`, cyclic shift-orbits beyond — see
+//!    [`cyclic_collections`]);
+//! 3. the master is a restriction, so its objective upper-bounds and the
+//!    collapsed dual lower-bounds the true load: when they meet within
+//!    [`OBJ_CERT_EPS`] the placement is **certified exact**. Otherwise
+//!    the caps of the dual-tight subsystems double and the master
+//!    re-solves, at most [`MAX_EXACT_ROUNDS`] times.
+//!
+//! Enumeration results are memoized across shapes and plan builds in
+//! [`super::collection_cache`] — `C'_j` depends only on `(K, j)`.
 
 use super::alloc::{Allocation, AllocationBuilder};
+use super::collection_cache::{self, CacheMode};
 use super::homogeneous::subsets_of_size;
 use crate::lp::{self, Cmp, Lp, Scalar};
 use crate::theory::params::ParamsK;
+use crate::util::json::Json;
 
 /// Default cap on enumerated perfect collections per subsystem.
 pub const DEFAULT_COLLECTION_CAP: usize = 4096;
+
+/// Per-subsystem seed size for the exact path's first master at `K > 6`
+/// (cyclic shift-orbit seeds; the full DFS is intractable there).
+pub const SEED_CAP_LARGE_K: usize = 64;
+
+/// Certification gap: the seeded master (an upper bound) is accepted as
+/// exact when it comes within this of the collapsed dual (a lower bound).
+pub const OBJ_CERT_EPS: f64 = 1e-6;
+
+/// Hard ceiling on master-rebuild rounds in the exact path.
+pub const MAX_EXACT_ROUNDS: usize = 32;
+
+/// A subsystem's collection cut is considered binding at the dual optimum
+/// when its slack is below this; only binding subsystems can carry primal
+/// mass, so only they are grown when a certification gap remains.
+const TIGHT_SLACK_EPS: f64 = 1e-7;
 
 /// DFS over lexicographic j-subset combinations: extend `chosen` with
 /// masks from `masks[start..]`, recording every completed perfect
 /// collection. `found` counts **all** completions; `out` keeps only the
 /// first `cap` of them (in DFS order), so the caller computes the exact
-/// dropped count as `found − out.len()`.
+/// dropped count as `found − out.len()`. With `early_exit` the DFS
+/// aborts once `found` exceeds `cap`: one completion past the cap proves
+/// truncation, and cutting on `found` (not on `out` being full) keeps
+/// the kept set *and* the flag identical to the exhaustive walk's first
+/// `cap` completions at every thread count.
 #[allow(clippy::too_many_arguments)]
 fn extend_collections(
     masks: &[u32],
@@ -41,6 +83,7 @@ fn extend_collections(
     out: &mut Vec<Vec<u32>>,
     found: &mut usize,
     cap: usize,
+    early_exit: bool,
 ) {
     if chosen.len() == k {
         if degrees.iter().all(|&d| d == j as u32) {
@@ -55,6 +98,9 @@ fn extend_collections(
         return;
     }
     for idx in start..masks.len() {
+        if early_exit && *found > cap {
+            return;
+        }
         let m = masks[idx];
         // Prune: adding m must not push any node past degree j.
         let mut ok = true;
@@ -73,7 +119,9 @@ fn extend_collections(
             }
         }
         chosen.push(m);
-        extend_collections(masks, idx + 1, k, j, chosen, degrees, out, found, cap);
+        extend_collections(
+            masks, idx + 1, k, j, chosen, degrees, out, found, cap, early_exit,
+        );
         chosen.pop();
         for node in 0..k {
             if m & (1 << node) != 0 {
@@ -102,9 +150,39 @@ pub fn perfect_collections(k: usize, j: usize, cap: usize) -> (Vec<Vec<u32>>, us
         &mut out,
         &mut found,
         cap,
+        false,
     );
     let dropped = found - out.len();
     (out, dropped)
+}
+
+/// Early-exit variant of [`perfect_collections`] for seeding the exact
+/// path: the DFS aborts one completion past `cap`, so the returned flag
+/// is exactly "`C'_j` has more than `cap` members" while the work stays
+/// proportional to `cap` instead of `|C'_j|`. The kept collections are
+/// the same first-`cap` DFS prefix the exhaustive walk keeps. Unlike
+/// [`perfect_collections`] it cannot say how *many* were dropped — the
+/// exact path never needs that (certified solutions drop nothing;
+/// uncertified ones report the flag).
+pub fn perfect_collections_capped(k: usize, j: usize, cap: usize) -> (Vec<Vec<u32>>, bool) {
+    let masks = subsets_of_size(k, j);
+    let mut out = Vec::new();
+    let mut found = 0usize;
+    let mut chosen: Vec<u32> = Vec::with_capacity(k);
+    let mut degrees = vec![0u32; k];
+    extend_collections(
+        &masks,
+        0,
+        k,
+        j,
+        &mut chosen,
+        &mut degrees,
+        &mut out,
+        &mut found,
+        cap,
+        true,
+    );
+    (out, found > cap)
 }
 
 /// [`perfect_collections`] with the DFS **sharded by first-subset
@@ -154,6 +232,7 @@ pub fn perfect_collections_threaded(
                             &mut out,
                             &mut found,
                             cap,
+                            false,
                         );
                         results.push((idx0, out, found));
                         idx0 += workers;
@@ -183,6 +262,90 @@ pub fn perfect_collections_threaded(
     (out, dropped)
 }
 
+/// Constructive large-K seeding: the K cyclic shifts of an **aperiodic**
+/// j-subset of `Z_K` are K distinct j-subsets covering every node exactly
+/// j times — a perfect collection, with no search. Enumerates canonical
+/// orbit representatives (masks containing node 0, lexicographically
+/// minimal among their K rotations) in ascending mask order, up to `cap`
+/// orbits; the flag reports whether more exist. The lexicographic DFS
+/// behind [`perfect_collections`] cannot even reach its *first*
+/// completion at `K >= 12` for middle j in reasonable time, while the
+/// cyclic family builds in one `O(2^(K−1))` mask scan and certifies
+/// against the collapsed dual on every validated shape (see
+/// `exact_certifies_*` tests and DESIGN.md).
+pub fn cyclic_collections(k: usize, j: usize, cap: usize) -> (Vec<Vec<u32>>, bool) {
+    let full: u32 = (1u32 << k) - 1;
+    let mut out: Vec<Vec<u32>> = Vec::new();
+    for m in 0u32..(1u32 << (k - 1)) {
+        let mm = (m << 1) | 1; // always contains node 0
+        if mm.count_ones() as usize != j {
+            continue;
+        }
+        let rots: Vec<u32> = (0..k)
+            .map(|r| ((mm >> r) | (mm << (k - r))) & full)
+            .collect();
+        if rots.iter().any(|&rot| rot < mm) {
+            continue; // not the canonical rotation representative
+        }
+        let mut orbit = rots;
+        orbit.sort_unstable();
+        orbit.dedup();
+        if orbit.len() != k {
+            continue; // periodic subset: rotations collide
+        }
+        if out.len() == cap {
+            return (out, true); // one more orbit proves truncation
+        }
+        out.push(orbit);
+    }
+    (out, false)
+}
+
+/// Seed cap for the exact path's first master: the caller's full `cap`
+/// at `K <= 6` (the DFS is cheap and exhaustive there), bounded by
+/// [`SEED_CAP_LARGE_K`] per subsystem beyond.
+pub fn seed_cap_for(k: usize, cap: usize) -> usize {
+    if k <= 6 {
+        cap
+    } else {
+        cap.min(SEED_CAP_LARGE_K)
+    }
+}
+
+/// Seed collections for one subsystem of the exact path's master:
+/// exhaustive early-exit DFS at `K <= 6` (where an un-hit cap proves the
+/// master *is* the full §V LP), cyclic shift-orbits beyond.
+fn seed_collections(k: usize, j: usize, cap: usize) -> (Vec<Vec<u32>>, bool) {
+    if k <= 6 {
+        perfect_collections_capped(k, j, cap)
+    } else {
+        cyclic_collections(k, j, cap)
+    }
+}
+
+/// Memoized full enumeration (legacy capped path). The cache key is
+/// `(K, j, cap)` — enumeration is independent of storage and file count,
+/// so every same-K plan build in the process shares one DFS.
+fn cached_full(k: usize, j: usize, cap: usize, threads: usize) -> (Vec<Vec<u32>>, usize) {
+    collection_cache::get_or_enumerate(k, j, cap, CacheMode::Full, || {
+        if threads <= 1 {
+            perfect_collections(k, j, cap)
+        } else {
+            perfect_collections_threaded(k, j, cap, threads)
+        }
+    })
+}
+
+/// Memoized seed enumeration (exact path); the payload's count slot
+/// carries the truncation flag as 0/1.
+fn cached_seed(k: usize, j: usize, cap: usize) -> (Vec<Vec<u32>>, bool) {
+    let (colls, flag) = collection_cache::get_or_enumerate(k, j, cap, CacheMode::Seeded, || {
+        let (colls, hit) = seed_collections(k, j, cap);
+        (colls, usize::from(hit))
+    });
+    (colls, flag > 0)
+}
+
 /// Variable bookkeeping for the general LP.
 #[derive(Clone, Debug)]
 pub struct GeneralLpModel<S> {
@@ -192,21 +355,21 @@ pub struct GeneralLpModel<S> {
     /// (j, collection masks, variable index) for every coding variable.
     pub x_vars: Vec<(usize, Vec<u32>, usize)>,
     /// Collections dropped by the enumeration cap, per subsystem j.
+    /// Full builds report exact counts; seeded builds report a 0/1
+    /// truncation flag per subsystem.
     pub dropped: Vec<(usize, usize)>,
 }
 
-/// Build the §V LP for `p` (Steps 0–13), generic over the scalar field.
-pub fn build_lp<S: Scalar>(p: &ParamsK, cap: usize) -> GeneralLpModel<S> {
-    build_lp_threaded(p, cap, 1)
-}
-
-/// [`build_lp`] with the per-subsystem work parallelized: the `C'_j`
-/// enumerations of the middle subsystems run **concurrently** (one
-/// scoped task per `j`, each prefix-sharding its own DFS over its share
-/// of the thread budget). Model assembly then consumes the results in
-/// ascending-`j` order, so variable indices, constraint order, and the
-/// dropped-collection report are identical to the serial build.
-pub fn build_lp_threaded<S: Scalar>(p: &ParamsK, cap: usize, threads: usize) -> GeneralLpModel<S> {
+/// Assemble the §V LP from pre-enumerated middle-subsystem collections
+/// (ascending j, each with its dropped count/flag). Shared by the full
+/// and seeded builds so the exact path's variable indices and constraint
+/// order coincide with the exhaustive build's whenever the collection
+/// lists do — which is what makes the `K <= 6` exact path bit-identical
+/// to the uncapped solve.
+fn assemble_lp<S: Scalar>(
+    p: &ParamsK,
+    enumerated: Vec<(usize, Vec<Vec<u32>>, usize)>,
+) -> GeneralLpModel<S> {
     let k = p.k();
     let mut lp: Lp<S> = Lp::new();
     let mut s_var: Vec<Option<usize>> = vec![None; 1 << k];
@@ -223,48 +386,8 @@ pub fn build_lp_threaded<S: Scalar>(p: &ParamsK, cap: usize, threads: usize) -> 
     let mut x_vars = Vec::new();
     let mut dropped = Vec::new();
 
-    // Middle subsystems 2 <= j <= K−2 (Steps 1–6): enumerate every C'_j
-    // up front — concurrently across subsystems when a thread budget is
-    // given — then assemble in ascending j.
-    let js: Vec<usize> = (2..k.saturating_sub(1)).collect();
-    let enumerated: Vec<(usize, (Vec<Vec<u32>>, usize))> = if threads <= 1 {
-        js.iter()
-            .map(|&j| (j, perfect_collections(k, j, cap)))
-            .collect()
-    } else {
-        // Concurrency stays within the caller's budget: at most `threads`
-        // subsystem tasks run at once (strided over `outer` workers), and
-        // each divides the remaining budget into its own prefix shards.
-        // Results are sorted back to ascending j, so model assembly sees
-        // the serial order no matter which worker ran which subsystem.
-        let outer = threads.min(js.len().max(1));
-        let inner = (threads / outer).max(1);
-        let js_ref = &js[..];
-        let mut all: Vec<(usize, (Vec<Vec<u32>>, usize))> = std::thread::scope(|s| {
-            let handles: Vec<_> = (0..outer)
-                .map(|w| {
-                    s.spawn(move || {
-                        let mut results = Vec::new();
-                        let mut idx = w;
-                        while idx < js_ref.len() {
-                            let j = js_ref[idx];
-                            results.push((j, perfect_collections_threaded(k, j, cap, inner)));
-                            idx += outer;
-                        }
-                        results
-                    })
-                })
-                .collect();
-            let mut all = Vec::new();
-            for h in handles {
-                all.extend(h.join().expect("subsystem enumeration worker"));
-            }
-            all
-        });
-        all.sort_by_key(|&(j, _)| j);
-        all
-    };
-    for (j, (collections, drop)) in enumerated {
+    // Middle subsystems 2 <= j <= K−2 (Steps 1–6).
+    for (j, collections, drop) in enumerated {
         if drop > 0 {
             dropped.push((j, drop));
         }
@@ -284,8 +407,7 @@ pub fn build_lp_threaded<S: Scalar>(p: &ParamsK, cap: usize, threads: usize) -> 
             if vars.is_empty() {
                 continue;
             }
-            let mut coeffs: Vec<(usize, S)> =
-                vars.iter().map(|&v| (v, S::one())).collect();
+            let mut coeffs: Vec<(usize, S)> = vars.iter().map(|&v| (v, S::one())).collect();
             coeffs.push((s_var[mask as usize].unwrap(), S::one().neg()));
             lp.constrain(coeffs, Cmp::Le, S::zero());
         }
@@ -333,6 +455,133 @@ pub fn build_lp_threaded<S: Scalar>(p: &ParamsK, cap: usize, threads: usize) -> 
     }
 }
 
+/// Build the §V LP for `p` (Steps 0–13), generic over the scalar field.
+pub fn build_lp<S: Scalar>(p: &ParamsK, cap: usize) -> GeneralLpModel<S> {
+    build_lp_threaded(p, cap, 1)
+}
+
+/// [`build_lp`] with the per-subsystem work parallelized: the `C'_j`
+/// enumerations of the middle subsystems run **concurrently** (one
+/// scoped task per `j`, each prefix-sharding its own DFS over its share
+/// of the thread budget) and land in the cross-shape collection cache.
+/// Model assembly then consumes the results in ascending-`j` order, so
+/// variable indices, constraint order, and the dropped-collection report
+/// are identical to the serial build.
+pub fn build_lp_threaded<S: Scalar>(p: &ParamsK, cap: usize, threads: usize) -> GeneralLpModel<S> {
+    let k = p.k();
+    let js: Vec<usize> = (2..k.saturating_sub(1)).collect();
+    let enumerated: Vec<(usize, Vec<Vec<u32>>, usize)> = if threads <= 1 {
+        js.iter()
+            .map(|&j| {
+                let (colls, drop) = cached_full(k, j, cap, 1);
+                (j, colls, drop)
+            })
+            .collect()
+    } else {
+        // Concurrency stays within the caller's budget: at most `threads`
+        // subsystem tasks run at once (strided over `outer` workers), and
+        // each divides the remaining budget into its own prefix shards.
+        // Results are sorted back to ascending j, so model assembly sees
+        // the serial order no matter which worker ran which subsystem.
+        let outer = threads.min(js.len().max(1));
+        let inner = (threads / outer).max(1);
+        let js_ref = &js[..];
+        let mut all: Vec<(usize, Vec<Vec<u32>>, usize)> = std::thread::scope(|s| {
+            let handles: Vec<_> = (0..outer)
+                .map(|w| {
+                    s.spawn(move || {
+                        let mut results = Vec::new();
+                        let mut idx = w;
+                        while idx < js_ref.len() {
+                            let j = js_ref[idx];
+                            let (colls, drop) = cached_full(k, j, cap, inner);
+                            results.push((j, colls, drop));
+                            idx += outer;
+                        }
+                        results
+                    })
+                })
+                .collect();
+            let mut all = Vec::new();
+            for h in handles {
+                all.extend(h.join().expect("subsystem enumeration worker"));
+            }
+            all
+        });
+        all.sort_by_key(|&(j, _, _)| j);
+        all
+    };
+    assemble_lp(p, enumerated)
+}
+
+/// Build a seeded master for the exact path: per-subsystem caps indexed
+/// by `j` (entries outside `2..=K−2` are ignored), seeds from the
+/// collection cache. Dropped entries are 0/1 truncation flags.
+fn build_lp_seeded<S: Scalar>(p: &ParamsK, caps: &[usize]) -> GeneralLpModel<S> {
+    let k = p.k();
+    let enumerated: Vec<(usize, Vec<Vec<u32>>, usize)> = (2..k.saturating_sub(1))
+        .map(|j| {
+            let (colls, hit) = cached_seed(k, j, caps[j]);
+            (j, colls, usize::from(hit))
+        })
+        .collect();
+    assemble_lp(p, enumerated)
+}
+
+/// Deterministic work counters for the exact LP path. Every field is a
+/// pure function of the problem instance — byte-identical across thread
+/// counts and collection-cache state — so they may appear in plan
+/// artifacts. (Raw DFS branch-node counts are deliberately absent: they
+/// vary with sharding and cache warmth.)
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct LpWorkStats {
+    /// Simplex pivots across all master rounds (excludes the tiny dual).
+    pub pivots: u64,
+    /// Scalar slots touched applying eta vectors — the revised simplex's
+    /// actual factorization work (see [`lp::Solution::eta_applications`]).
+    pub eta_applications: u64,
+    /// Counterfactual cells a dense-tableau per-pivot rewrite would have
+    /// touched over the same pivot walk (`pivots × rows × cols`).
+    pub dense_cells: u64,
+    /// Eta-file refactorizations across all master rounds.
+    pub reinversions: u64,
+    /// Master build/solve rounds taken (1 = certified immediately).
+    pub exact_rounds: u64,
+    /// Collection columns in the final master — the enumeration actually
+    /// paid for, vs. the `|C'_j|` an exhaustive build would enumerate.
+    pub enumerated_collections: u64,
+    /// Subsystem cap-doubling events across all growth rounds.
+    pub grown_subsystems: u64,
+    /// The collapsed dual's optimum — the full (uncapped) §V LP load.
+    pub z_exact: f64,
+    /// True when the final master's objective met `z_exact` within
+    /// [`OBJ_CERT_EPS`], or (at `K <= 6` only) the seed enumeration
+    /// provably covered all of `C'_j`.
+    pub certified: bool,
+}
+
+impl LpWorkStats {
+    /// The `lp_solver` object of plan and bench artifacts. Counters are
+    /// exact in f64 (they stay far below 2^53); key order is fixed by
+    /// the artifact's BTreeMap serialization.
+    pub fn to_json(&self) -> Json {
+        let mut m = std::collections::BTreeMap::new();
+        m.insert("pivots".into(), Json::Num(self.pivots as f64));
+        m.insert("eta_applications".into(), Json::Num(self.eta_applications as f64));
+        m.insert("dense_cells".into(), Json::Num(self.dense_cells as f64));
+        m.insert("reinversions".into(), Json::Num(self.reinversions as f64));
+        m.insert("exact_rounds".into(), Json::Num(self.exact_rounds as f64));
+        m.insert(
+            "enumerated_collections".into(),
+            Json::Num(self.enumerated_collections as f64),
+        );
+        m.insert("grown_subsystems".into(), Json::Num(self.grown_subsystems as f64));
+        m.insert("z_exact".into(), Json::Num(self.z_exact));
+        m.insert("certified".into(), Json::Bool(self.certified));
+        Json::Obj(m)
+    }
+}
+
 /// Solved general-K design.
 #[derive(Clone, Debug)]
 pub struct GeneralSolution {
@@ -345,11 +594,46 @@ pub struct GeneralSolution {
     pub pivots: usize,
     pub n_vars: usize,
     pub n_constraints: usize,
-    /// Collections dropped by the enumeration cap (j, count).
+    /// Collections dropped by the enumeration cap (j, count). The exact
+    /// path reports an empty list when certified and per-subsystem 0/1
+    /// truncation flags when it exhausted its growth budget uncertified.
     pub dropped: Vec<(usize, usize)>,
+    /// Work counters — present on the exact path, `None` on the legacy
+    /// capped path.
+    pub stats: Option<LpWorkStats>,
 }
 
-/// Run the §V algorithm (f64 simplex).
+/// Read a [`GeneralSolution`] out of a solved model (no counters).
+fn extract_solution(
+    p: &ParamsK,
+    model: &GeneralLpModel<f64>,
+    sol: &lp::Solution<f64>,
+) -> GeneralSolution {
+    let k = p.k();
+    let mut s_values = vec![0.0; 1 << k];
+    for mask in 1usize..(1 << k) {
+        if let Some(v) = model.s_var[mask] {
+            s_values[mask] = sol.values[v];
+        }
+    }
+    let x_values = model
+        .x_vars
+        .iter()
+        .map(|(j, coll, v)| (*j, coll.clone(), sol.values[*v]))
+        .collect();
+    GeneralSolution {
+        load: sol.objective,
+        s_values,
+        x_values,
+        pivots: sol.pivots,
+        n_vars: model.lp.n_vars,
+        n_constraints: model.lp.constraints.len(),
+        dropped: model.dropped.clone(),
+        stats: None,
+    }
+}
+
+/// Run the §V algorithm (f64 simplex) on the cap-truncated LP.
 pub fn solve_general(p: &ParamsK, cap: usize) -> Result<GeneralSolution, lp::LpError> {
     solve_general_threaded(p, cap, 1)
 }
@@ -365,25 +649,203 @@ pub fn solve_general_threaded(
 ) -> Result<GeneralSolution, lp::LpError> {
     let model = build_lp_threaded::<f64>(p, cap, threads);
     let sol = lp::solve_with_threads(&model.lp, threads)?;
-    let k = p.k();
-    let mut s_values = vec![0.0; 1 << k];
-    for mask in 1u32..(1 << k) {
-        s_values[mask as usize] = sol.values[model.s_var[mask as usize].unwrap()];
+    Ok(extract_solution(p, &model, &sol))
+}
+
+/// Build the full §V LP's dual collapsed to `K + 2` decision variables
+/// (`σ` for the file-count row, `π_i` per storage row), plus epigraph
+/// helpers. With the consumption duals saturated, every perfect
+/// collection of subsystem `j` prices to the same constant
+/// `K(K−j) − Kσ − jΣπ` — collections are balanced — so the exponentially
+/// many collection cuts collapse to one row per `j`:
+///
+/// ```text
+/// max  Nσ + Σ_i M_i π_i
+/// s.t. sum-of-s-largest(π) <= (K−s) − σ     for s = 1..K   [S_T >= 0]
+///      Kσ + jΣπ <= K(K−j) − save_j          for middle j   [x_jq cuts]
+///      (K−1)σ + (K−2)Σπ + π_q <= 1          for each q     [j=K−1 cuts]
+/// ```
+///
+/// `sum-of-s-largest(π) <= c` is the epigraph `∃λ: sλ + Σ_i ρ_i <= c`,
+/// `ρ_i >= π_i − λ`. Free variables are difference-of-nonnegative pairs.
+/// Returns the minimization LP (objective negated), `σ`'s pair, and the
+/// `π` pairs.
+#[allow(clippy::type_complexity)]
+fn exact_load_lp(p: &ParamsK) -> (Lp<f64>, (usize, usize), Vec<(usize, usize)>) {
+    fn free(lp: &mut Lp<f64>, name: &str) -> (usize, usize) {
+        (
+            lp.add_var(format!("{name}+"), 0.0),
+            lp.add_var(format!("{name}-"), 0.0),
+        )
     }
-    let x_values = model
-        .x_vars
-        .iter()
-        .map(|(j, coll, v)| (*j, coll.clone(), sol.values[*v]))
-        .collect();
-    Ok(GeneralSolution {
-        load: sol.objective,
-        s_values,
-        x_values,
-        pivots: sol.pivots,
-        n_vars: model.lp.n_vars,
-        n_constraints: model.lp.constraints.len(),
-        dropped: model.dropped,
-    })
+    fn add_terms(coeffs: &mut Vec<(usize, f64)>, var: (usize, usize), c: f64) {
+        coeffs.push((var.0, c));
+        coeffs.push((var.1, -c));
+    }
+
+    let k = p.k();
+    let mut lp: Lp<f64> = Lp::new();
+    let sigma = free(&mut lp, "sigma");
+    let pi: Vec<(usize, usize)> = (0..k).map(|i| free(&mut lp, &format!("pi{i}"))).collect();
+    // Maximize Nσ + Σ M_i π_i == minimize the negation.
+    lp.set_cost(sigma.0, -(p.n as f64));
+    lp.set_cost(sigma.1, p.n as f64);
+    for i in 0..k {
+        lp.set_cost(pi[i].0, -(p.m[i] as f64));
+        lp.set_cost(pi[i].1, p.m[i] as f64);
+    }
+
+    // S_T >= 0 for every size s: sum-of-s-largest(π) + σ <= K − s.
+    for s in 1..=k {
+        let lam = free(&mut lp, &format!("lam{s}"));
+        let rho: Vec<usize> = (0..k)
+            .map(|i| lp.add_var(format!("rho{s}_{i}"), 0.0))
+            .collect();
+        for i in 0..k {
+            let mut coeffs = Vec::new();
+            add_terms(&mut coeffs, pi[i], 1.0);
+            add_terms(&mut coeffs, lam, -1.0);
+            coeffs.push((rho[i], -1.0));
+            lp.constrain(coeffs, Cmp::Le, 0.0);
+        }
+        let mut coeffs = Vec::new();
+        add_terms(&mut coeffs, lam, s as f64);
+        for &r in &rho {
+            coeffs.push((r, 1.0));
+        }
+        add_terms(&mut coeffs, sigma, 1.0);
+        lp.constrain(coeffs, Cmp::Le, (k - s) as f64);
+    }
+
+    // Middle-subsystem collection cuts (one per j).
+    for j in 2..k.saturating_sub(1) {
+        let save = (k * (k - j) * (j - 1)) as f64 / j as f64;
+        let mut coeffs = Vec::new();
+        add_terms(&mut coeffs, sigma, k as f64);
+        for i in 0..k {
+            add_terms(&mut coeffs, pi[i], j as f64);
+        }
+        lp.constrain(coeffs, Cmp::Le, (k * (k - j)) as f64 - save);
+    }
+
+    // j = K−1 node-variable cuts.
+    if k >= 2 {
+        for q in 0..k {
+            let mut coeffs = Vec::new();
+            add_terms(&mut coeffs, sigma, (k - 1) as f64);
+            for i in 0..k {
+                let c = (k - 2) as f64 + if i == q { 1.0 } else { 0.0 };
+                add_terms(&mut coeffs, pi[i], c);
+            }
+            lp.constrain(coeffs, Cmp::Le, 1.0);
+        }
+    }
+    (lp, sigma, pi)
+}
+
+/// Exact load of the **full** (uncapped) §V LP via the collapsed dual —
+/// `O(K²)` variables regardless of `K`, solved serially in microseconds.
+/// Returns `(load, σ*, π*)`; the multipliers drive the exact path's
+/// growth heuristic (only subsystems whose cut binds at the dual optimum
+/// can carry primal mass).
+pub fn exact_load(p: &ParamsK) -> Result<(f64, f64, Vec<f64>), lp::LpError> {
+    let (lp, sigma, pi) = exact_load_lp(p);
+    let sol = lp::solve(&lp)?;
+    let val = |fv: (usize, usize)| sol.values[fv.0] - sol.values[fv.1];
+    Ok((
+        -sol.objective,
+        val(sigma),
+        pi.iter().map(|&fv| val(fv)).collect(),
+    ))
+}
+
+/// Exact §V placement without enumerating `C'_j`: seeded master +
+/// collapsed-dual certificate + lazy growth of the binding subsystems
+/// until the primal/dual gap closes (see the module docs). `cap` bounds
+/// the *initial* per-subsystem seed via [`seed_cap_for`]; growth may
+/// exceed it.
+pub fn solve_general_exact(p: &ParamsK, cap: usize) -> Result<GeneralSolution, lp::LpError> {
+    solve_general_exact_threaded(p, cap, 1)
+}
+
+/// [`solve_general_exact`] with sharded simplex pricing. All counters
+/// and solution bytes are thread-invariant: the tiny dual solves
+/// serially, seeding is deterministic, and the sharded pricing walks the
+/// same pivot sequence as the serial scan.
+pub fn solve_general_exact_threaded(
+    p: &ParamsK,
+    cap: usize,
+    threads: usize,
+) -> Result<GeneralSolution, lp::LpError> {
+    exact_inner(p, seed_cap_for(p.k(), cap), threads)
+}
+
+fn exact_inner(p: &ParamsK, seed: usize, threads: usize) -> Result<GeneralSolution, lp::LpError> {
+    let k = p.k();
+    let (z_exact, sigma, pi) = exact_load(p)?;
+    let p_sum: f64 = pi.iter().sum();
+
+    // Subsystems whose collection cut binds at the dual optimum are the
+    // only ones worth growing when a certification gap remains.
+    let mut tight = vec![false; k.max(1)];
+    let mut caps = vec![0usize; k.max(1)];
+    for j in 2..k.saturating_sub(1) {
+        let save = (k * (k - j) * (j - 1)) as f64 / j as f64;
+        let slack = (k * (k - j)) as f64 - k as f64 * sigma - j as f64 * p_sum - save;
+        tight[j] = slack < TIGHT_SLACK_EPS;
+        caps[j] = seed.max(1);
+    }
+
+    let mut stats = LpWorkStats {
+        pivots: 0,
+        eta_applications: 0,
+        dense_cells: 0,
+        reinversions: 0,
+        exact_rounds: 0,
+        enumerated_collections: 0,
+        grown_subsystems: 0,
+        z_exact,
+        certified: false,
+    };
+    loop {
+        stats.exact_rounds += 1;
+        let model = build_lp_seeded::<f64>(p, &caps);
+        let sol = lp::solve_with_threads(&model.lp, threads)?;
+        stats.pivots += sol.pivots as u64;
+        stats.eta_applications += sol.eta_applications;
+        stats.dense_cells += sol.dense_cells;
+        stats.reinversions += sol.reinversions as u64;
+        let truncated = !model.dropped.is_empty();
+        // The objective-gap arm is the workhorse. The exhaustion arm is
+        // only sound at K <= 6, where the seed enumerator is the full
+        // DFS over C'_j: beyond that the cyclic family is a strict
+        // subset, so an un-truncated master may still omit columns.
+        let certified = sol.objective <= z_exact + OBJ_CERT_EPS || (k <= 6 && !truncated);
+        let mut grew = false;
+        if !certified && (stats.exact_rounds as usize) < MAX_EXACT_ROUNDS {
+            let any_tight_truncated = model.dropped.iter().any(|&(j, _)| tight[j]);
+            for &(j, _) in &model.dropped {
+                if tight[j] || !any_tight_truncated {
+                    caps[j] = caps[j].saturating_mul(2);
+                    stats.grown_subsystems += 1;
+                    grew = true;
+                }
+            }
+        }
+        if certified || !grew {
+            stats.enumerated_collections = model.x_vars.len() as u64;
+            stats.certified = certified;
+            let mut out = extract_solution(p, &model, &sol);
+            out.pivots = stats.pivots as usize;
+            // Certified means the cap cost nothing: nothing the full LP
+            // needed was dropped. Uncertified exits keep the flags.
+            if certified {
+                out.dropped.clear();
+            }
+            out.stats = Some(stats);
+            return Ok(out);
+        }
+    }
 }
 
 /// Step 14: realize the LP's `S_T` values as a concrete allocation.
@@ -539,6 +1001,22 @@ mod tests {
     }
 
     #[test]
+    fn capped_enumeration_flags_truncation_exactly() {
+        // The early-exit DFS must keep the same first-`cap` prefix as the
+        // exhaustive walk and flag truncation iff |C'_j| > cap — at the
+        // boundary too (cap == |C'_j| must NOT flag).
+        for (k, j, n_colls) in [(4usize, 2usize, 3usize), (5, 2, 12), (6, 2, 70)] {
+            for cap in [1usize, 2, n_colls - 1, n_colls, n_colls + 1, 4096] {
+                let (full, _) = perfect_collections(k, j, usize::MAX);
+                let (kept, hit) = perfect_collections_capped(k, j, cap);
+                assert_eq!(kept.len(), cap.min(n_colls), "K={k} j={j} cap={cap}");
+                assert_eq!(kept[..], full[..kept.len()], "K={k} j={j} cap={cap}: prefix");
+                assert_eq!(hit, n_colls > cap, "K={k} j={j} cap={cap}: flag");
+            }
+        }
+    }
+
+    #[test]
     fn threaded_enumeration_is_identical_to_serial() {
         // Prefix sharding must reproduce the serial DFS exactly — the
         // collections, their order, AND the exact dropped count, at every
@@ -558,9 +1036,44 @@ mod tests {
     }
 
     #[test]
+    fn cyclic_collections_are_perfect_and_canonical() {
+        for (k, j) in [(8usize, 2usize), (8, 3), (8, 5), (12, 5), (16, 7)] {
+            let (colls, truncated) = cyclic_collections(k, j, 64);
+            assert!(!colls.is_empty(), "K={k} j={j}: no cyclic orbits");
+            for coll in &colls {
+                assert_eq!(coll.len(), k, "K={k} j={j}: orbit size");
+                let mut deg = vec![0u32; k];
+                let mut sorted = coll.clone();
+                sorted.dedup();
+                assert_eq!(sorted.len(), k, "K={k} j={j}: duplicate masks");
+                for &m in coll {
+                    assert_eq!(m.count_ones() as usize, j, "K={k} j={j}: subset size");
+                    for node in 0..k {
+                        if m & (1 << node) != 0 {
+                            deg[node] += 1;
+                        }
+                    }
+                }
+                assert!(
+                    deg.iter().all(|&d| d == j as u32),
+                    "K={k} j={j}: not perfect: {deg:?}"
+                );
+            }
+            // Truncation flag: asking for one fewer must flag.
+            if !truncated && colls.len() > 1 {
+                let (fewer, hit) = cyclic_collections(k, j, colls.len() - 1);
+                assert_eq!(fewer.len(), colls.len() - 1);
+                assert!(hit, "K={k} j={j}: truncation unflagged");
+                assert_eq!(fewer[..], colls[..fewer.len()], "K={k} j={j}: prefix");
+            }
+        }
+    }
+
+    #[test]
     fn threaded_solve_is_bit_identical_to_serial() {
         // The full threaded build+solve path (concurrent per-j
-        // enumeration, sharded pricing) against the serial reference.
+        // enumeration through the collection cache, sharded pricing)
+        // against the serial reference.
         for storage in [vec![6u64, 7, 7], vec![3, 5, 6, 8], vec![3, 4, 5, 6, 7]] {
             let p = ParamsK::new(storage.clone(), 12).unwrap();
             let serial = solve_general(&p, DEFAULT_COLLECTION_CAP).unwrap();
@@ -580,6 +1093,23 @@ mod tests {
                 assert_eq!(serial.dropped, t.dropped, "{storage:?} threads={threads}");
             }
         }
+    }
+
+    #[test]
+    fn repeated_builds_hit_the_collection_cache() {
+        let p = ParamsK::new(vec![3, 4, 5, 6, 7], 10).unwrap();
+        let first = build_lp::<f64>(&p, DEFAULT_COLLECTION_CAP);
+        let (hits_before, _) = collection_cache::stats();
+        let second = build_lp::<f64>(&p, DEFAULT_COLLECTION_CAP);
+        let (hits_after, _) = collection_cache::stats();
+        assert_eq!(first.x_vars, second.x_vars);
+        assert_eq!(first.dropped, second.dropped);
+        // K=5 has middle subsystems j ∈ {2, 3}: both must hit now.
+        // (Counters are global and monotone; concurrent tests only add.)
+        assert!(
+            hits_after >= hits_before + 2,
+            "cache hits {hits_before} -> {hits_after}"
+        );
     }
 
     #[test]
@@ -629,6 +1159,168 @@ mod tests {
         let unc = (4.0 * 12.0) - 22.0; // KN − M deliveries
         assert!(sol.load < unc, "LP {} >= uncoded {unc}", sol.load);
         assert!(sol.load >= 0.0);
+    }
+
+    #[test]
+    fn exact_load_matches_lp_optimum() {
+        // The collapsed dual must equal the uncapped primal LP's load.
+        prop::run("tiny dual == full LP", 20, |g| {
+            let k = g.usize_in(3..=5);
+            let n = g.u64_in(2..=10);
+            let m: Vec<u64> = (0..k).map(|_| g.u64_in(1..=n)).collect();
+            let Ok(p) = ParamsK::new(m.clone(), n) else {
+                return Ok(());
+            };
+            let sol = solve_general(&p, DEFAULT_COLLECTION_CAP)
+                .map_err(|e| format!("{m:?} n={n}: {e}"))?;
+            let (z, _, _) = exact_load(&p).map_err(|e| format!("{m:?} n={n}: dual {e}"))?;
+            prop::check(
+                (sol.load - z).abs() < 1e-6,
+                format!("{m:?} n={n}: primal {} vs dual {z}", sol.load),
+            )
+        });
+    }
+
+    #[test]
+    fn exact_path_reproduces_exhaustive_bit_for_bit() {
+        // At K <= 6 the exact path's first master IS the full §V LP
+        // (full-cap DFS seed), so load, S_T values, and the pivot walk
+        // must match the uncapped legacy solve exactly — and certify in
+        // one round having dropped nothing.
+        let shapes: [(&[u64], u64); 4] = [
+            (&[6, 7, 7], 12),
+            (&[3, 5, 6, 8], 12),
+            (&[3, 4, 5, 6, 7], 10),
+            (&[4, 4, 6, 6, 8, 8], 12),
+        ];
+        for (storage, n) in shapes {
+            let p = ParamsK::new(storage.to_vec(), n).unwrap();
+            let exhaustive = solve_general(&p, DEFAULT_COLLECTION_CAP).unwrap();
+            let exact = solve_general_exact(&p, DEFAULT_COLLECTION_CAP).unwrap();
+            assert_eq!(
+                exhaustive.load.to_bits(),
+                exact.load.to_bits(),
+                "{storage:?}: load"
+            );
+            assert_eq!(
+                exhaustive.s_values.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                exact.s_values.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                "{storage:?}: S_T values"
+            );
+            assert_eq!(exhaustive.pivots, exact.pivots, "{storage:?}: pivots");
+            let stats = exact.stats.expect("exact path carries stats");
+            assert!(stats.certified, "{storage:?}: uncertified");
+            assert_eq!(stats.exact_rounds, 1, "{storage:?}: extra rounds");
+            assert!(exact.dropped.is_empty(), "{storage:?}: dropped {:?}", exact.dropped);
+            assert!(
+                stats.eta_applications < stats.dense_cells,
+                "{storage:?}: factorized work {} not below dense counterfactual {}",
+                stats.eta_applications,
+                stats.dense_cells
+            );
+        }
+    }
+
+    #[test]
+    fn prop_exact_path_matches_exhaustive_random() {
+        prop::run("exact == exhaustive (K<=5)", 30, |g| {
+            let k = g.usize_in(3..=5);
+            let n = g.u64_in(2..=10);
+            let m: Vec<u64> = (0..k).map(|_| g.u64_in(1..=n)).collect();
+            let Ok(p) = ParamsK::new(m.clone(), n) else {
+                return Ok(());
+            };
+            let exhaustive = solve_general(&p, DEFAULT_COLLECTION_CAP)
+                .map_err(|e| format!("{m:?} n={n}: {e}"))?;
+            let exact = solve_general_exact(&p, DEFAULT_COLLECTION_CAP)
+                .map_err(|e| format!("{m:?} n={n}: exact {e}"))?;
+            let certified = exact.stats.map(|s| s.certified).unwrap_or(false);
+            prop::check(
+                exhaustive.load.to_bits() == exact.load.to_bits() && certified,
+                format!(
+                    "{m:?} n={n}: exhaustive {} vs exact {} certified={certified}",
+                    exhaustive.load, exact.load
+                ),
+            )
+        });
+    }
+
+    #[test]
+    fn tiny_seed_growth_converges() {
+        // Starting from a deliberately starved seed (2 collections per
+        // subsystem at K=5, where |C'_2| = 12), cap doubling must close
+        // the gap and certify against the collapsed dual.
+        let p = ParamsK::new(vec![3, 4, 5, 6, 7], 10).unwrap();
+        let reference = solve_general(&p, DEFAULT_COLLECTION_CAP).unwrap();
+        let exact = solve_general_exact(&p, 2).unwrap();
+        let stats = exact.stats.expect("exact path carries stats");
+        assert!(stats.certified, "starved seed never certified");
+        assert!(exact.dropped.is_empty());
+        assert!(
+            (exact.load - reference.load).abs() < 1e-7,
+            "grown load {} vs reference {}",
+            exact.load,
+            reference.load
+        );
+        assert!(
+            stats.exact_rounds > 1 && stats.grown_subsystems > 0,
+            "seed 2 certified without growing (rounds {}, grown {})",
+            stats.exact_rounds,
+            stats.grown_subsystems
+        );
+    }
+
+    #[test]
+    fn exact_certifies_k8_with_cyclic_seeds() {
+        // K=8 is beyond the DFS regime: the master seeds from cyclic
+        // shift-orbits and must still meet the collapsed dual. This is
+        // the heterogeneous bench shape.
+        let p = ParamsK::new(vec![4, 4, 5, 5, 6, 6, 7, 7], 8).unwrap();
+        let sol = solve_general_exact(&p, DEFAULT_COLLECTION_CAP).unwrap();
+        let stats = sol.stats.expect("exact path carries stats");
+        assert!(stats.certified, "K=8 cyclic seeds failed to certify");
+        assert!(sol.dropped.is_empty());
+        // Master is a restriction: load ∈ [z_exact − eps, z_exact + eps].
+        assert!(
+            (sol.load - stats.z_exact).abs() <= OBJ_CERT_EPS,
+            "load {} vs z_exact {}",
+            sol.load,
+            stats.z_exact
+        );
+        assert!(stats.enumerated_collections > 0);
+        assert!(
+            stats.eta_applications < stats.dense_cells,
+            "factorized work {} not below dense counterfactual {}",
+            stats.eta_applications,
+            stats.dense_cells
+        );
+    }
+
+    #[test]
+    fn exact_solve_is_bit_identical_across_threads() {
+        // Exact-path artifacts (values AND counters) may not move with
+        // the thread count: the tiny dual is serial, seeding is pure,
+        // and sharded pricing replays the serial pivot walk.
+        for storage in [vec![3u64, 4, 5, 6, 7], vec![4, 4, 5, 5, 6, 6, 7, 7]] {
+            let n = if storage.len() == 5 { 10 } else { 8 };
+            let p = ParamsK::new(storage.clone(), n).unwrap();
+            let serial = solve_general_exact(&p, DEFAULT_COLLECTION_CAP).unwrap();
+            for threads in [2usize, 8] {
+                let t = solve_general_exact_threaded(&p, DEFAULT_COLLECTION_CAP, threads)
+                    .unwrap();
+                assert_eq!(
+                    serial.load.to_bits(),
+                    t.load.to_bits(),
+                    "{storage:?} threads={threads}: load"
+                );
+                assert_eq!(
+                    serial.s_values.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                    t.s_values.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                    "{storage:?} threads={threads}: S_T values"
+                );
+                assert_eq!(serial.stats, t.stats, "{storage:?} threads={threads}: stats");
+            }
+        }
     }
 
     #[test]

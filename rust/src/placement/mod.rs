@@ -5,6 +5,7 @@
 //! puts every strategy behind one interface.
 
 pub mod alloc;
+pub mod collection_cache;
 pub mod combinatorial;
 pub mod homogeneous;
 pub mod k3;

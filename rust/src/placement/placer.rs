@@ -25,13 +25,21 @@ pub struct Placement {
     pub alloc: Allocation,
     /// Perfect collections dropped by an enumeration cap, as
     /// `(subsystem j, dropped count)` — empty for every placer that does
-    /// not enumerate (Remark 7 concerns the LP alone).
+    /// not enumerate (Remark 7 concerns the LP alone). The exact LP path
+    /// leaves this empty whenever it certifies.
     pub dropped_collections: Vec<(usize, usize)>,
+    /// Deterministic solver work counters — present only for the exact
+    /// §V LP path; `None` for every other placer.
+    pub lp_stats: Option<lp_general::LpWorkStats>,
 }
 
 impl Placement {
     pub fn exact(alloc: Allocation) -> Self {
-        Placement { alloc, dropped_collections: Vec::new() }
+        Placement {
+            alloc,
+            dropped_collections: Vec::new(),
+            lp_stats: None,
+        }
     }
 }
 
@@ -98,14 +106,21 @@ impl Default for PlacerConfig {
     }
 }
 
-/// §V LP placement (any K).
+/// §V LP placement (any K). Exact by default: the solve is certified
+/// against the full LP's collapsed dual ([`lp_general::exact_load`]), so
+/// the Remark-7 cap costs nothing. `exact: false` keeps the legacy
+/// cap-truncated behavior (registry name `"lp-capped"`).
 #[derive(Clone, Copy, Debug)]
 pub struct LpGeneral {
-    /// Max perfect collections enumerated per subsystem (Remark 7 cap).
+    /// Max perfect collections enumerated per subsystem (Remark 7 cap) —
+    /// the initial seed size on the exact path.
     pub cap: usize,
     /// Worker threads for the enumeration and the simplex pricing scan
     /// (`<= 1` = serial; the solution is identical either way).
     pub threads: usize,
+    /// Certify against the collapsed dual and grow past the cap until
+    /// exact (default), vs. accept the cap's truncation.
+    pub exact: bool,
 }
 
 impl Default for LpGeneral {
@@ -113,28 +128,40 @@ impl Default for LpGeneral {
         LpGeneral {
             cap: lp_general::DEFAULT_COLLECTION_CAP,
             threads: 1,
+            exact: true,
         }
     }
 }
 
 impl Placer for LpGeneral {
     fn name(&self) -> &'static str {
-        "lp-general"
+        if self.exact {
+            "lp-general"
+        } else {
+            "lp-capped"
+        }
     }
 
     fn place(&self, cluster: &ClusterSpec, job: &JobSpec) -> Result<Allocation> {
         Ok(self.place_report(cluster, job)?.alloc)
     }
 
-    /// Surfaces the Remark-7 cap: when [`lp_general::perfect_collections`]
-    /// truncates, the dropped counts ride along on the placement instead
-    /// of vanishing into a comment.
+    /// Surfaces the Remark-7 cap: when the enumeration truncates (legacy
+    /// path) or the exact path exhausts its growth budget uncertified,
+    /// the dropped counts ride along on the placement instead of
+    /// vanishing into a comment. The exact path also attaches its
+    /// deterministic work counters.
     fn place_report(&self, cluster: &ClusterSpec, job: &JobSpec) -> Result<Placement> {
         let p = cluster.params_k(job.n_files)?;
-        let sol = lp_general::solve_general_threaded(&p, self.cap, self.threads)?;
+        let sol = if self.exact {
+            lp_general::solve_general_exact_threaded(&p, self.cap, self.threads)?
+        } else {
+            lp_general::solve_general_threaded(&p, self.cap, self.threads)?
+        };
         Ok(Placement {
             alloc: lp_general::allocation_from_solution(&p, &sol),
             dropped_collections: sol.dropped.clone(),
+            lp_stats: sol.stats,
         })
     }
 }
@@ -267,10 +294,11 @@ pub fn placer_by_name_cfg(
     cluster: &ClusterSpec,
     cfg: &PlacerConfig,
 ) -> Result<Box<dyn Placer>> {
-    let lp = || LpGeneral { cap: cfg.lp_cap, threads: cfg.threads };
+    let lp = |exact: bool| LpGeneral { cap: cfg.lp_cap, threads: cfg.threads, exact };
     match name {
         "optimal-k3" => Ok(Box::new(OptimalK3)),
-        "lp-general" | "lp" => Ok(Box::new(lp())),
+        "lp-general" | "lp" => Ok(Box::new(lp(true))),
+        "lp-capped" => Ok(Box::new(lp(false))),
         "homogeneous" => Ok(Box::new(Homogeneous)),
         "oblivious" => Ok(Box::new(Oblivious)),
         "combinatorial" => Ok(Box::new(CombinatorialGrid)),
@@ -278,7 +306,7 @@ pub fn placer_by_name_cfg(
             if cluster.k() == 3 {
                 Ok(Box::new(OptimalK3))
             } else {
-                Ok(Box::new(lp()))
+                Ok(Box::new(lp(true)))
             }
         }
         other => Err(HetcdcError::UnknownStrategy {
@@ -376,13 +404,16 @@ mod tests {
 
     #[test]
     fn lp_place_report_surfaces_dropped_collections() {
-        // Default cap: nothing dropped at K=4 (3 collections exist).
+        // Exact default: nothing dropped, certified counters attached.
         let c = cluster(&[3, 4, 5, 6]);
         let job = JobSpec::terasort(8);
         let placement = LpGeneral::default().place_report(&c, &job).unwrap();
         assert!(placement.dropped_collections.is_empty());
-        // Cap of 1 forces truncation at j=2, and the report says so.
-        let tight = LpGeneral { cap: 1, threads: 1 };
+        let stats = placement.lp_stats.expect("exact path attaches counters");
+        assert!(stats.certified);
+        // Legacy capped route: cap of 1 forces truncation at j=2, and the
+        // report says so (and carries no exact-path counters).
+        let tight = LpGeneral { cap: 1, threads: 1, exact: false };
         let placement = tight.place_report(&c, &job).unwrap();
         assert!(
             placement
@@ -392,30 +423,48 @@ mod tests {
             "expected dropped collections at j=2, got {:?}",
             placement.dropped_collections
         );
+        assert!(placement.lp_stats.is_none());
+        // The exact route outgrows the same starved cap: certified, no
+        // drops — the cap only sizes the seed.
+        let grown = LpGeneral { cap: 1, threads: 1, exact: true };
+        let placement = grown.place_report(&c, &job).unwrap();
+        assert!(placement.dropped_collections.is_empty());
+        assert!(placement.lp_stats.expect("counters").certified);
         // Non-enumerating placers report no drops via the default impl.
         let p3 = cluster(&[6, 7, 7]);
         let placement = OptimalK3.place_report(&p3, &JobSpec::terasort(12)).unwrap();
         assert!(placement.dropped_collections.is_empty());
+        assert!(placement.lp_stats.is_none());
     }
 
     #[test]
     fn config_threads_lp_cap_through_the_registry() {
-        // placer_by_name_cfg hands the Remark-7 cap to the LP placer (and
-        // to "auto" when it resolves to the LP); a tight cap shows up as
-        // dropped collections in the report, exactly like a hand-built
-        // LpGeneral { cap } would.
+        // placer_by_name_cfg hands the Remark-7 cap to the LP placer; on
+        // the legacy "lp-capped" route a tight cap shows up as dropped
+        // collections in the report, exactly like a hand-built
+        // LpGeneral { cap, exact: false } would.
         let c4 = cluster(&[3, 4, 5, 6]);
         let job = JobSpec::terasort(8);
         let tight = PlacerConfig { lp_cap: 1, threads: 2 };
+        let placer = placer_by_name_cfg("lp-capped", &c4, &tight).unwrap();
+        assert_eq!(placer.name(), "lp-capped");
+        let placement = placer.place_report(&c4, &job).unwrap();
+        assert!(
+            placement.dropped_collections.iter().any(|&(j, d)| j == 2 && d > 0),
+            "lp-capped: cap=1 must truncate, got {:?}",
+            placement.dropped_collections
+        );
+        // The exact routes get the same knobs but certify past the cap.
         for name in ["lp-general", "auto"] {
             let placer = placer_by_name_cfg(name, &c4, &tight).unwrap();
             assert_eq!(placer.name(), "lp-general");
             let placement = placer.place_report(&c4, &job).unwrap();
             assert!(
-                placement.dropped_collections.iter().any(|&(j, d)| j == 2 && d > 0),
-                "{name}: cap=1 must truncate, got {:?}",
+                placement.dropped_collections.is_empty(),
+                "{name}: exact path must outgrow cap=1, got {:?}",
                 placement.dropped_collections
             );
+            assert!(placement.lp_stats.expect("counters").certified, "{name}");
         }
         // The default config is the default cap: nothing dropped at K=4.
         let placer = placer_by_name_cfg("lp-general", &c4, &PlacerConfig::default()).unwrap();
@@ -437,6 +486,7 @@ mod tests {
             placer_by_name("combinatorial", &c4).unwrap().name(),
             "combinatorial"
         );
+        assert_eq!(placer_by_name("lp-capped", &c4).unwrap().name(), "lp-capped");
         assert!(matches!(
             placer_by_name("nope", &c3).unwrap_err(),
             HetcdcError::UnknownStrategy { .. }

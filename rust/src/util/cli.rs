@@ -153,7 +153,8 @@ pub mod common {
 
     pub const PLACEMENT: ArgSpec = ArgSpec {
         name: "placement",
-        help: "auto | optimal-k3 | lp-general | homogeneous | oblivious | combinatorial",
+        help: "auto | optimal-k3 | lp-general (exact) | lp-capped | homogeneous | oblivious \
+               | combinatorial",
         takes_value: true,
         default: Some("auto"),
     };

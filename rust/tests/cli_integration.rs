@@ -364,15 +364,26 @@ fn plan_threads_emit_byte_identical_artifacts() {
 
 #[test]
 fn lp_cap_flag_reaches_the_placer_and_warns() {
-    // A cap of 1 truncates the K=4 enumeration: the plan must build,
-    // carry dropped_collections, and warn on stderr.
+    // A cap of 1 truncates the K=4 enumeration on the legacy capped
+    // route: the plan must build, carry dropped_collections, and warn
+    // on stderr.
+    let (code, stdout, stderr) = hetcdc(&[
+        "plan", "--workload", "terasort", "--n", "8", "--storage", "3,4,5,6",
+        "--placement", "lp-capped", "--lp-cap", "1",
+    ]);
+    assert_eq!(code, 0, "{stdout}\n{stderr}");
+    assert!(stderr.contains("collection"), "expected a cap warning: {stderr}");
+    assert!(stdout.contains("dropped_collections"), "{stdout}");
+    // The exact default outgrows the same cap: no truncation, no
+    // warning, and the certified solver counters land in the artifact.
     let (code, stdout, stderr) = hetcdc(&[
         "plan", "--workload", "terasort", "--n", "8", "--storage", "3,4,5,6",
         "--placement", "lp-general", "--lp-cap", "1",
     ]);
     assert_eq!(code, 0, "{stdout}\n{stderr}");
-    assert!(stderr.contains("collection"), "expected a cap warning: {stderr}");
-    assert!(stdout.contains("dropped_collections"), "{stdout}");
+    assert!(!stdout.contains("dropped_collections"), "{stdout}");
+    assert!(stdout.contains("\"lp_solver\""), "{stdout}");
+    assert!(stdout.contains("\"certified\": true"), "{stdout}");
     // --lp-cap conflicts with --plan (the plan already fixes placement).
     let (code, _, stderr) = hetcdc(&[
         "run", "--plan", "/nonexistent/plan.json", "--lp-cap", "64",

@@ -10,9 +10,10 @@
 //! qualifying column regardless of chunking, the grid coder's groups and
 //! rounds are pure functions of their indices, and the decode-schedule
 //! verification shards by node — so not one byte of the artifact may
-//! move. (The K ∈ {8, 12} shapes use the non-enumerating placers; the §V
-//! LP's perfect-collection enumeration is combinatorial in K and stays
-//! out of the smoke path, as in the bench suite.)
+//! move. The K=8 shape now includes the §V LP via the exact path (cyclic
+//! shift-orbit seeding keeps the master small); K=12 still uses the
+//! non-enumerating grid placer only — the exact K=12 solve is bench
+//! territory, not debug-mode test territory.
 
 use hetcdc::engine::JobBuilder;
 use hetcdc::lp::{solve, solve_with_threads};
@@ -51,7 +52,7 @@ fn shapes() -> Vec<(Vec<u64>, u64, Vec<&'static str>)> {
     vec![
         (vec![6, 7, 7], 12, vec!["optimal-k3", "lp-general", "oblivious"]),
         (vec![3, 4, 5, 6, 7], 10, vec!["lp-general", "oblivious"]),
-        (vec![4, 4, 5, 5, 6, 6, 7, 7], 8, vec!["oblivious", "combinatorial"]),
+        (vec![4, 4, 5, 5, 6, 6, 7, 7], 8, vec!["lp-general", "oblivious", "combinatorial"]),
         (vec![4, 4, 4, 5, 5, 5, 6, 6, 6, 7, 7, 7], 12, vec!["combinatorial"]),
     ]
 }
@@ -144,11 +145,11 @@ fn sharded_simplex_pricing_matches_unsharded_on_section_v_lps() {
 fn lp_cap_builds_are_deterministic_too() {
     // The --lp-cap knob composes with threading: a truncating cap must
     // truncate identically (same dropped counts, same placement bytes)
-    // at every thread count.
+    // at every thread count on the legacy capped route.
     let cl = cluster(&[3, 4, 5, 6]);
     let job = small_job(8);
     let reference = JobBuilder::new(&cl, &job)
-        .placer("lp-general")
+        .placer("lp-capped")
         .lp_cap(1)
         .build()
         .unwrap();
@@ -158,12 +159,38 @@ fn lp_cap_builds_are_deterministic_too() {
     );
     for threads in [2usize, 8] {
         let plan = JobBuilder::new(&cl, &job)
-            .placer("lp-general")
+            .placer("lp-capped")
             .lp_cap(1)
             .threads(threads)
             .build()
             .unwrap();
         assert_eq!(reference.to_json_string(), plan.to_json_string(), "threads={threads}");
         assert_eq!(reference.dropped_collections, plan.dropped_collections);
+    }
+}
+
+#[test]
+fn exact_lp_builds_are_byte_identical_across_thread_counts() {
+    // The exact path adds threaded pricing inside the revised simplex
+    // and a seeded grow-and-certify loop; none of it may move a byte of
+    // the artifact — including the serialized `lp_solver` work counters.
+    let cl = cluster(&[4, 4, 5, 5, 6, 6, 7, 7]);
+    let job = small_job(8);
+    let reference = JobBuilder::new(&cl, &job).placer("lp-general").build().unwrap();
+    let stats = reference.lp_stats.expect("exact route records counters");
+    assert!(stats.certified, "K=8 must certify: {stats:?}");
+    assert!(reference.dropped_collections.is_empty());
+    for threads in [2usize, 8, 0] {
+        let plan = JobBuilder::new(&cl, &job)
+            .placer("lp-general")
+            .threads(threads)
+            .build()
+            .unwrap();
+        assert_eq!(
+            reference.to_json_string(),
+            plan.to_json_string(),
+            "threads={threads}: exact-LP plan JSON diverged"
+        );
+        assert_eq!(reference.lp_stats, plan.lp_stats, "threads={threads}");
     }
 }
