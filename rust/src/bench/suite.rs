@@ -22,7 +22,7 @@ use crate::engine::{ExecConfig, ExecMode, Executor, JobBuilder, NativeBackend};
 use crate::error::{HetcdcError, Result};
 use crate::model::cluster::{ClusterSpec, NodeSpec};
 use crate::model::job::{JobSpec, ShuffleMode, WorkloadKind};
-use crate::net::{FaultSpec, Straggle, Topology};
+use crate::net::{Dropout, Erase, FaultSpec, Straggle, Topology};
 use crate::util::json::Json;
 use std::collections::BTreeMap;
 
@@ -30,7 +30,7 @@ use std::collections::BTreeMap;
 pub const SCHEMA_VERSION: usize = 1;
 
 /// One fixed-shape benchmark point.
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Debug)]
 pub struct Scenario {
     pub name: &'static str,
     pub storage: &'static [u64],
@@ -65,6 +65,8 @@ pub struct Scenario {
 const NO_FAULTS: FaultSpec = FaultSpec {
     straggle: None,
     repair: 0,
+    erase: None,
+    dropout: None,
 };
 
 /// The committed straggle point: deterministic per-node jitter, amplitude
@@ -75,12 +77,44 @@ const STRAGGLE: FaultSpec = FaultSpec {
         amp: 3.0,
     }),
     repair: 0,
+    erase: None,
+    dropout: None,
 };
 
 /// The committed degraded-decode point: tolerate one lost broadcast.
 const REPAIR1: FaultSpec = FaultSpec {
     straggle: None,
     repair: 1,
+    erase: None,
+    dropout: None,
+};
+
+/// The committed runtime-erasure point: seeded per-broadcast erasures at
+/// p=0.05 on an f=1 repaired plan. Single losses are absorbed by the
+/// repair rounds at decode time; anything beyond tolerance is recovered
+/// by metered retransmission rounds — both outcomes land in the
+/// artifact's `recovery` counters.
+const ERASE_REPAIR1: FaultSpec = FaultSpec {
+    straggle: None,
+    repair: 1,
+    erase: Some(Erase::Seeded {
+        seed: 0x5EED,
+        p: 0.05,
+    }),
+    dropout: None,
+};
+
+/// The committed mid-run dropout point: node 0 is lost after two batches
+/// of the multi-batch run; the executor re-plans on the survivors and
+/// resumes the remaining batches on the recovery plan.
+const MIDRUN_DROP: FaultSpec = FaultSpec {
+    straggle: None,
+    repair: 0,
+    erase: None,
+    dropout: Some(Dropout {
+        node: 0,
+        at_batch: 2,
+    }),
 };
 
 /// The committed suite: K ∈ {3, 5, 8, 12, 16} heterogeneous clusters,
@@ -136,10 +170,19 @@ pub fn default_suite() -> Vec<Scenario> {
         // byte/round costs are the *price of loss tolerance*, measured in
         // the committed artifact. Dropout: after the normal run, node 0
         // is dropped, the survivors are re-planned, and the recovery cost
-        // (bytes/rounds/makespan deltas) is recorded.
+        // (bytes/rounds/makespan deltas) is recorded. Runtime erasure:
+        // seeded per-broadcast losses on the f=1 repaired plan — decoded
+        // output stays bit-identical to the fault-free run, and the
+        // artifact records how the losses were absorbed (erased count,
+        // retransmit rounds, recovery bytes, makespan delta vs an
+        // erase-stripped twin). Mid-run dropout: node 0 dies between
+        // batches of the pipelined run; the executor re-plans on the
+        // survivors and the same survivor-plan recovery cost is recorded.
         Scenario { name: "k8-terasort-combinatorial-straggle", storage: &[4, 4, 5, 5, 6, 6, 7, 7], n_files: 8, workload: TeraSort, placer: "combinatorial", coder: None, mode: Coded, topology: Topology::Shared, faults: STRAGGLE, drop_node: None },
         Scenario { name: "k8-terasort-combinatorial-repair1", storage: &[4, 4, 5, 5, 6, 6, 7, 7], n_files: 8, workload: TeraSort, placer: "combinatorial", coder: None, mode: Coded, topology: Topology::Shared, faults: REPAIR1, drop_node: None },
         Scenario { name: "k8-terasort-dropout", storage: &[4, 4, 5, 5, 6, 6, 7, 7], n_files: 8, workload: TeraSort, placer: "combinatorial", coder: None, mode: Coded, topology: Topology::Shared, faults: NO_FAULTS, drop_node: Some(0) },
+        Scenario { name: "k8-terasort-combinatorial-erase", storage: &[4, 4, 5, 5, 6, 6, 7, 7], n_files: 8, workload: TeraSort, placer: "combinatorial", coder: None, mode: Coded, topology: Topology::Shared, faults: ERASE_REPAIR1, drop_node: None },
+        Scenario { name: "k8-terasort-midrun-dropout", storage: &[4, 4, 5, 5, 6, 6, 7, 7], n_files: 8, workload: TeraSort, placer: "combinatorial", coder: None, mode: Coded, topology: Topology::Shared, faults: MIDRUN_DROP, drop_node: None },
     ]
 }
 
@@ -177,7 +220,7 @@ impl Scenario {
                 .collect(),
             latency_ms: 0.5,
             topology: self.topology,
-            faults: self.faults,
+            faults: self.faults.clone(),
         }
     }
 
@@ -228,27 +271,41 @@ impl PlanBuildStats {
     }
 }
 
-/// Recovery cost of a dropout scenario: the dropped node, the recovery
-/// plan's absolute metrics, and its deltas against the pre-drop plan.
-/// All deterministic — part of the diffable artifact.
+/// Recovery cost of a fault scenario — dropout and/or runtime erasure.
+/// For dropout the absolute metrics are the survivor plan's (one serial
+/// batch on the re-planned survivors) and the deltas compare it to the
+/// pre-drop plan; for runtime erasure they are the faulted run's own
+/// metrics and the deltas compare it to an erase-stripped twin of the
+/// same plan (so `delta_makespan_s` is exactly the schedule cost of
+/// recovery). All deterministic — part of the diffable artifact.
 #[derive(Clone, Copy, Debug)]
 pub struct RecoveryStats {
-    pub dropped_node: usize,
-    /// Recovery plan metrics (one serial batch on the survivors).
+    /// Dropped node — present on dropout records, `None` on
+    /// erasure-only records.
+    pub dropped_node: Option<usize>,
     pub payload_bytes: u64,
     pub wire_bytes: u64,
     pub rounds: u64,
     pub makespan_s: f64,
-    /// Deltas vs the pre-drop plan (positive = recovery costs more).
+    /// Deltas vs the fault-free reference (positive = recovery costs
+    /// more).
     pub delta_payload_bytes: f64,
     pub delta_rounds: f64,
     pub delta_makespan_s: f64,
+    /// Runtime-erasure counters (from the serial run's [`crate::net::NetReport`]) —
+    /// present only when the scenario has an `erase` clause, so dropout
+    /// and legacy artifacts stay byte-identical.
+    pub erased_broadcasts: Option<u64>,
+    pub retransmit_rounds: Option<u64>,
+    pub recovery_bytes: Option<u64>,
 }
 
 impl RecoveryStats {
     pub fn to_json(&self) -> Json {
         let mut m = BTreeMap::new();
-        m.insert("dropped_node".into(), Json::Num(self.dropped_node as f64));
+        if let Some(n) = self.dropped_node {
+            m.insert("dropped_node".into(), Json::Num(n as f64));
+        }
         m.insert("payload_bytes".into(), Json::Num(self.payload_bytes as f64));
         m.insert("wire_bytes".into(), Json::Num(self.wire_bytes as f64));
         m.insert("rounds".into(), Json::Num(self.rounds as f64));
@@ -256,6 +313,15 @@ impl RecoveryStats {
         m.insert("delta_payload_bytes".into(), Json::Num(self.delta_payload_bytes));
         m.insert("delta_rounds".into(), Json::Num(self.delta_rounds));
         m.insert("delta_makespan_s".into(), Json::Num(self.delta_makespan_s));
+        if let Some(e) = self.erased_broadcasts {
+            m.insert("erased_broadcasts".into(), Json::Num(e as f64));
+        }
+        if let Some(r) = self.retransmit_rounds {
+            m.insert("retransmit_rounds".into(), Json::Num(r as f64));
+        }
+        if let Some(b) = self.recovery_bytes {
+            m.insert("recovery_bytes".into(), Json::Num(b as f64));
+        }
         Json::Obj(m)
     }
 }
@@ -306,8 +372,9 @@ pub struct ScenarioResult {
     /// only for scenarios with a straggle spec, so fault-free artifacts
     /// stay byte-identical to pre-fault ones.
     pub straggler_delay_s: Option<f64>,
-    /// Dropout recovery cost — recorded (and serialized) only for
-    /// scenarios with a `drop_node`.
+    /// Fault recovery cost — recorded (and serialized) only for
+    /// scenarios with a `drop_node`, a `drop:` clause, or an `erase:`
+    /// clause.
     pub recovery: Option<RecoveryStats>,
     /// Wall-clock of one parallel batch (nondeterministic, optional).
     pub wall: Option<BenchResult>,
@@ -382,6 +449,7 @@ fn reports_identical(a: &crate::engine::RunReport, b: &crate::engine::RunReport)
         && a.shuffle_time_s.to_bits() == b.shuffle_time_s.to_bits()
         && a.map_time_s.to_bits() == b.map_time_s.to_bits()
         && a.max_abs_err.to_bits() == b.max_abs_err.to_bits()
+        && a.replanned_without == b.replanned_without
 }
 
 /// Run one scenario: build the plan, execute serial, parallel, and
@@ -412,9 +480,9 @@ pub fn run_scenario(
     // each meters under the plan's own fault spec).
     let cfg = ExecConfig::default().threads(threads);
     let mut be = NativeBackend;
-    let mut serial = Executor::with_config(&plan, cfg)?;
+    let mut serial = Executor::with_config(&plan, cfg.clone())?;
     let r_serial = serial.run_batch(&mut be, job.seed)?;
-    let mut parallel = Executor::with_config(&plan, cfg.mode(ExecMode::Parallel))?;
+    let mut parallel = Executor::with_config(&plan, cfg.clone().mode(ExecMode::Parallel))?;
     let r_parallel = parallel.run_batch(&mut be, job.seed)?;
 
     let diverged = |mode: &str, what: &str| {
@@ -456,9 +524,9 @@ pub fn run_scenario(
     // Pipelined multi-batch run vs the same batches run serially: the
     // steady-state serving path must be bit-identical, batch by batch.
     let seeds: Vec<u64> = (0..PIPELINE_BATCHES).map(|b| job.seed.wrapping_add(b)).collect();
-    let mut pipelined = Executor::with_config(&plan, cfg.mode(ExecMode::Pipelined))?;
+    let mut pipelined = Executor::with_config(&plan, cfg.clone().mode(ExecMode::Pipelined))?;
     let piped = pipelined.run_batches(&mut be, &seeds)?;
-    let mut serial_ref = Executor::with_config(&plan, cfg)?;
+    let mut serial_ref = Executor::with_config(&plan, cfg.clone())?;
     let serial_batches = serial_ref.run_batches(&mut be, &seeds)?;
     for (b, (rp, rs)) in piped.iter().zip(&serial_batches).enumerate() {
         if !rp.verified || !reports_identical(rp, rs) {
@@ -517,11 +585,14 @@ pub fn run_scenario(
     // Dropout recovery: re-plan on the survivors (reusing their placed
     // subfiles), execute one serial batch of the recovery plan, and meter
     // its cost against the pre-drop plan. Deterministic like everything
-    // above.
+    // above. A mid-run `drop:` clause records the same survivor-plan
+    // metrics — its actual switchover is exercised by the multi-batch
+    // pipelined/serial runs above.
     let mut recovery = None;
-    if let Some(node) = sc.drop_node {
+    let dropped = sc.drop_node.or(cluster.faults.dropout.map(|d| d.node));
+    if let Some(node) = dropped {
         let replanned = plan.replan_without(node)?;
-        let mut rex = Executor::with_config(&replanned, cfg)?;
+        let mut rex = Executor::with_config(&replanned, cfg.clone())?;
         let rr = rex.run_batch(&mut be, job.seed)?;
         if !rr.verified {
             return Err(HetcdcError::Backend(format!(
@@ -531,7 +602,7 @@ pub fn run_scenario(
         }
         let makespan_s = rex.net_report().elapsed_s;
         recovery = Some(RecoveryStats {
-            dropped_node: node,
+            dropped_node: Some(node),
             payload_bytes: rr.payload_bytes,
             wire_bytes: rr.wire_bytes,
             rounds: replanned.shuffle.round_count() as u64,
@@ -540,7 +611,46 @@ pub fn run_scenario(
             delta_rounds: replanned.shuffle.round_count() as f64
                 - plan.shuffle.round_count() as f64,
             delta_makespan_s: makespan_s - serial.net_report().elapsed_s,
+            erased_broadcasts: None,
+            retransmit_rounds: None,
+            recovery_bytes: None,
         });
+    }
+
+    // Runtime-erasure recovery: the runs above already executed under
+    // the erasure mask (and run_batch verified bit-identity against the
+    // oracle). Record the serial run's recovery counters plus the
+    // schedule cost of recovery — the makespan delta against an
+    // erase-stripped twin executing the identical plan.
+    if cluster.faults.erase.is_some() {
+        let mut stripped = cluster.faults.clone();
+        stripped.erase = None;
+        let mut cex =
+            Executor::with_config(&plan, cfg.clone().faults(stripped))?;
+        let cr = cex.run_batch(&mut be, job.seed)?;
+        if !cr.verified {
+            return Err(HetcdcError::Backend(format!(
+                "scenario {}: erase-stripped twin failed oracle verification",
+                sc.name
+            )));
+        }
+        let net = serial.net_report();
+        let stats = recovery.get_or_insert(RecoveryStats {
+            dropped_node: None,
+            payload_bytes: r_serial.payload_bytes,
+            wire_bytes: r_serial.wire_bytes,
+            rounds: plan.shuffle.round_count() as u64,
+            makespan_s: net.elapsed_s,
+            delta_payload_bytes: r_serial.payload_bytes as f64 - cr.payload_bytes as f64,
+            delta_rounds: 0.0,
+            delta_makespan_s: net.elapsed_s - cex.net_report().elapsed_s,
+            erased_broadcasts: None,
+            retransmit_rounds: None,
+            recovery_bytes: None,
+        });
+        stats.erased_broadcasts = Some(net.erased_broadcasts);
+        stats.retransmit_rounds = Some(net.retransmit_rounds);
+        stats.recovery_bytes = Some(net.recovery_bytes);
     }
 
     let straggler_delay_s = cluster
@@ -676,8 +786,8 @@ fn run_scenarios(
         if let Some(t) = topology {
             sc.topology = t;
         }
-        if let Some(f) = faults {
-            sc.faults = f;
+        if let Some(f) = &faults {
+            sc.faults = f.clone();
         }
         results.push(run_scenario(&sc, threads, timing)?);
     }
@@ -777,32 +887,57 @@ pub fn compare_to_baseline(current: &Json, baseline: &Json, tolerance_pct: f64) 
     }
 
     let cur_scenarios = current.get("scenarios").and_then(|s| s.as_arr()).unwrap_or(empty);
-    /// name -> (payload_bytes, rounds if recorded, makespan if recorded,
-    /// dropped collections — omitted in the artifact means 0).
-    fn by_name(list: &[Json]) -> BTreeMap<String, (f64, Option<f64>, Option<f64>, f64)> {
+    /// Per-scenario gate inputs pulled out of one artifact entry.
+    /// `Option` fields distinguish "not recorded" (legacy artifacts —
+    /// the gate skips) from a recorded value; `dropped` is omitted in
+    /// the artifact when 0.
+    #[derive(Clone, Copy)]
+    struct GateInputs {
+        payload: f64,
+        rounds: Option<f64>,
+        makespan: Option<f64>,
+        dropped: f64,
+        /// Runtime-erasure recovery counters (`recovery.retransmit_rounds`
+        /// / `recovery.recovery_bytes`) — recorded only by erase
+        /// scenarios of post-erasure artifacts.
+        retransmit_rounds: Option<f64>,
+        recovery_bytes: Option<f64>,
+    }
+    fn by_name(list: &[Json]) -> BTreeMap<String, GateInputs> {
         list.iter()
             .filter_map(|s| {
+                let recovery = s.get("recovery");
                 Some((
                     s.get("name")?.as_str()?.to_string(),
-                    (
-                        s.get("payload_bytes")?.as_f64()?,
-                        s.get("rounds").and_then(|r| r.as_f64()),
-                        s.get("makespan_s").and_then(|r| r.as_f64()),
-                        s.get("dropped_collections").and_then(|r| r.as_f64()).unwrap_or(0.0),
-                    ),
+                    GateInputs {
+                        payload: s.get("payload_bytes")?.as_f64()?,
+                        rounds: s.get("rounds").and_then(|r| r.as_f64()),
+                        makespan: s.get("makespan_s").and_then(|r| r.as_f64()),
+                        dropped: s.get("dropped_collections").and_then(|r| r.as_f64()).unwrap_or(0.0),
+                        retransmit_rounds: recovery
+                            .and_then(|r| r.get("retransmit_rounds"))
+                            .and_then(|v| v.as_f64()),
+                        recovery_bytes: recovery
+                            .and_then(|r| r.get("recovery_bytes"))
+                            .and_then(|v| v.as_f64()),
+                    },
                 ))
             })
             .collect()
     }
     let cur_map = by_name(cur_scenarios);
     let base_map = by_name(base_scenarios);
-    for (name, (base_payload, base_rounds, base_makespan, base_dropped)) in &base_map {
+    for (name, base_in) in &base_map {
+        let (base_payload, base_rounds, base_makespan, base_dropped) =
+            (&base_in.payload, &base_in.rounds, &base_in.makespan, &base_in.dropped);
         match cur_map.get(name) {
             None => {
                 notes.push(format!("scenario '{name}' disappeared (coverage lost)"));
                 status = BaselineStatus::Regression;
             }
-            Some((cur_payload, cur_rounds, cur_makespan, cur_dropped)) => {
+            Some(cur_in) => {
+                let (cur_payload, cur_rounds, cur_makespan, cur_dropped) =
+                    (&cur_in.payload, &cur_in.rounds, &cur_in.makespan, &cur_in.dropped);
                 if *base_payload > 0.0 {
                     let ratio = cur_payload / base_payload;
                     if ratio > 1.0 + tol {
@@ -886,6 +1021,56 @@ pub fn compare_to_baseline(current: &Json, baseline: &Json, tolerance_pct: f64) 
                          {base_dropped:.0} -> {cur_dropped:.0}: consider re-blessing \
                          the baseline"
                     ));
+                }
+                // Runtime-recovery counters, gated with the same
+                // asymmetric legacy skip as rounds: a baseline predating
+                // the erasure fields skips the check, but a current
+                // artifact dropping a counter the baseline records means
+                // the recovery gate lost its input. Retransmit rounds are
+                // exact (deterministic protocol — any drift is a recovery
+                // regression or a deliberate change); recovery bytes get
+                // the byte tolerance.
+                match (&base_in.retransmit_rounds, &cur_in.retransmit_rounds) {
+                    (Some(b), Some(c)) if b != c => {
+                        notes.push(format!(
+                            "scenario '{name}' recovery retransmit_rounds changed \
+                             {b:.0} -> {c:.0} (recovery-protocol change: re-bless if \
+                             intended)"
+                        ));
+                        status = BaselineStatus::Regression;
+                    }
+                    (Some(b), None) => {
+                        notes.push(format!(
+                            "scenario '{name}' no longer records recovery \
+                             retransmit_rounds (baseline has {b:.0}): the recovery \
+                             gate lost its input"
+                        ));
+                        status = BaselineStatus::Regression;
+                    }
+                    _ => {}
+                }
+                match (&base_in.recovery_bytes, &cur_in.recovery_bytes) {
+                    (Some(b), Some(c)) if *c > b * (1.0 + tol) => {
+                        notes.push(format!(
+                            "scenario '{name}' recovery bytes regressed \
+                             {b:.0} -> {c:.0} (tolerance {tolerance_pct}%)"
+                        ));
+                        status = BaselineStatus::Regression;
+                    }
+                    (Some(b), Some(c)) if *b > 0.0 && *c < b * (1.0 - tol) => {
+                        notes.push(format!(
+                            "scenario '{name}' recovery bytes improved \
+                             {b:.0} -> {c:.0}: consider re-blessing the baseline"
+                        ));
+                    }
+                    (Some(b), None) => {
+                        notes.push(format!(
+                            "scenario '{name}' no longer records recovery bytes \
+                             (baseline has {b:.0}): the recovery gate lost its input"
+                        ));
+                        status = BaselineStatus::Regression;
+                    }
+                    _ => {}
                 }
             }
         }
@@ -1073,7 +1258,8 @@ mod tests {
         let report = shared_report();
         let drop = report.scenario("k8-terasort-dropout")?;
         let rec = drop.recovery.expect("dropout scenario records recovery stats");
-        assert_eq!(rec.dropped_node, 0);
+        assert_eq!(rec.dropped_node, Some(0));
+        assert!(rec.retransmit_rounds.is_none(), "dropout-only record has no erase counters");
         assert!(rec.payload_bytes > 0);
         assert!(rec.rounds >= 1);
         assert!(rec.makespan_s > 0.0);
@@ -1084,6 +1270,91 @@ mod tests {
         assert_eq!(rec.delta_makespan_s, rec.makespan_s - drop.makespan_s);
         // Fault-free scenarios record no recovery section.
         assert!(report.scenario("k8-terasort-combinatorial")?.recovery.is_none());
+        Ok(())
+    }
+
+    #[test]
+    fn erasure_twin_records_runtime_recovery() -> Result<()> {
+        let report = shared_report();
+        let er = report.scenario("k8-terasort-combinatorial-erase")?;
+        let rec = er.recovery.expect("erase scenario records recovery stats");
+        assert!(rec.dropped_node.is_none(), "erasure-only record has no dropped node");
+        // The recorded erased count must equal what the committed seed/p
+        // deterministically erases on this plan's coordinates at epoch 1
+        // (the first batch of a fresh executor) — the artifact is a pure
+        // function of the spec, never of run order or thread count.
+        let row = default_suite()
+            .into_iter()
+            .find(|s| s.name == "k8-terasort-combinatorial-erase")
+            .expect("suite has the erase twin");
+        let cluster = row.cluster();
+        let erase = cluster.faults.erase.clone().expect("erase twin has an erase clause");
+        let plan = JobBuilder::new(&cluster, &row.job())
+            .placer(row.placer)
+            .mode(row.mode)
+            .build()?;
+        let expected = plan
+            .shuffle
+            .coords()
+            .iter()
+            .filter(|&&(r, g, b)| erase.erased(1, r, g, b))
+            .count() as u64;
+        assert_eq!(rec.erased_broadcasts, Some(expected));
+        // Erasures never change what the planned schedule sends: the
+        // faulted run's plan metrics equal the erase-stripped twin's.
+        assert_eq!(rec.payload_bytes, er.payload_bytes);
+        assert_eq!(rec.delta_payload_bytes, 0.0);
+        assert_eq!(rec.delta_rounds, 0.0);
+        // With f=1 repair rounds, single per-group losses are absorbed at
+        // decode time for free; anything beyond tolerance is recovered by
+        // retransmission rounds metered on top of the schedule.
+        let retx = rec.retransmit_rounds.expect("erase scenario records retransmit rounds");
+        let bytes = rec.recovery_bytes.expect("erase scenario records recovery bytes");
+        if retx == 0 {
+            assert_eq!(bytes, 0);
+            assert_eq!(rec.delta_makespan_s, 0.0, "absorbed losses cost no schedule time");
+        } else {
+            assert!(bytes > 0);
+            assert!(rec.delta_makespan_s > 0.0, "retransmissions must cost schedule time");
+        }
+        Ok(())
+    }
+
+    #[test]
+    fn midrun_dropout_scenario_switches_to_the_survivor_plan() -> Result<()> {
+        let report = shared_report();
+        let sc = report.scenario("k8-terasort-midrun-dropout")?;
+        let rec = sc.recovery.expect("mid-run dropout records recovery stats");
+        assert_eq!(rec.dropped_node, Some(0));
+        assert!(rec.retransmit_rounds.is_none(), "dropout-only record has no erase counters");
+        // The scenario's multi-batch runs actually switch over: batches
+        // before `at_batch` execute the original plan, the rest are
+        // stamped with the survivor re-plan.
+        let row = default_suite()
+            .into_iter()
+            .find(|s| s.name == "k8-terasort-midrun-dropout")
+            .expect("suite has the mid-run dropout twin");
+        let cluster = row.cluster();
+        let d = cluster.faults.dropout.expect("mid-run twin has a drop clause");
+        let job = row.job();
+        let plan = JobBuilder::new(&cluster, &job)
+            .placer(row.placer)
+            .mode(row.mode)
+            .build()?;
+        let mut be = NativeBackend;
+        let mut ex = Executor::with_config(&plan, ExecConfig::default().threads(2))?;
+        let seeds: Vec<u64> =
+            (0..PIPELINE_BATCHES).map(|b| job.seed.wrapping_add(b)).collect();
+        let reports = ex.run_batches(&mut be, &seeds)?;
+        assert_eq!(reports.len(), seeds.len());
+        for (i, r) in reports.iter().enumerate() {
+            assert!(r.verified, "batch {i} failed verification");
+            assert_eq!(
+                r.replanned_without,
+                (i as u64 >= d.at_batch).then_some(d.node),
+                "batch {i}: switchover stamp"
+            );
+        }
         Ok(())
     }
 
@@ -1103,8 +1374,16 @@ mod tests {
             );
             assert_eq!(
                 sc.get("recovery").is_some(),
-                name.contains("dropout"),
+                name.contains("dropout") || name.contains("erase"),
                 "{name}: recovery presence"
+            );
+            // Erasure counters live only inside erase-scenario recovery
+            // blocks; dropout records stay byte-identical to pre-erasure
+            // artifacts.
+            assert_eq!(
+                sc.get("recovery").and_then(|r| r.get("erased_broadcasts")).is_some(),
+                name.contains("erase"),
+                "{name}: recovery.erased_broadcasts presence"
             );
             let placer = sc.get("placer").and_then(|p| p.as_str()).unwrap();
             assert_eq!(
@@ -1183,13 +1462,13 @@ mod tests {
         // schedules but leaves every byte/message/round metric identical.
         // Scenarios whose own spec includes repair are skipped — the
         // override *replaces* the spec, so their plans lose the repair
-        // rounds by design.
+        // rounds by design (the erase twin carries repair:f=1 too).
         let f = FaultSpec::parse("straggle:seed=7,amp=2").unwrap();
         let over = run_suite_with(2, None, None, Some(f)).expect("override suite runs");
         let base = shared_report();
         for (o, b) in over.results.iter().zip(&base.results) {
             assert_eq!(o.name, b.name);
-            if o.name.contains("repair") {
+            if o.name.contains("repair") || o.name.contains("erase") {
                 continue;
             }
             assert_eq!(o.payload_bytes, b.payload_bytes, "{}", o.name);

@@ -145,7 +145,9 @@ struct Occ {
 /// The shared (node-independent) decode index: every part occurrence in
 /// flat order, the per-broadcast occurrence ranges, and the inverted
 /// IV → occurrences map. Built once per simulation, read by every node.
-struct DecodeIndex {
+/// `pub(crate)` so the runtime erasure path ([`runtime_recovery`]) can
+/// reuse the same index instead of rebuilding its own inverted map.
+pub(crate) struct DecodeIndex {
     occs: Vec<Occ>,
     /// `part_start[bi]..part_start[bi + 1]` = occurrence ids of broadcast
     /// `bi` (length `n_broadcasts + 1`).
@@ -156,7 +158,7 @@ struct DecodeIndex {
 }
 
 impl DecodeIndex {
-    fn build(plan: &ShufflePlan) -> Self {
+    pub(crate) fn build(plan: &ShufflePlan) -> Self {
         let mut occs: Vec<Occ> = Vec::new();
         let mut part_start = Vec::with_capacity(plan.n_broadcasts() + 1);
         for (bi, b) in plan.iter_broadcasts().enumerate() {
@@ -197,7 +199,12 @@ impl DecodeIndex {
 /// simulation reaches true quiescence even on adversarial plans where a
 /// mixed-granularity learn cannot advance knowledge (the legacy rescan
 /// re-queued such broadcasts every pass until its pass cap tripped).
-fn run_node(know: &mut Knowledge, index: &DecodeIndex) -> (Vec<usize>, usize) {
+///
+/// `erased[bi] == true` marks a broadcast the node never received (the
+/// runtime erasure model): it is pre-marked `done`, so it neither decodes
+/// nor teaches anything, but survivors still propagate through every
+/// dependency edge. An empty slice means nothing was erased.
+fn run_node(know: &mut Knowledge, index: &DecodeIndex, erased: &[bool]) -> (Vec<usize>, usize) {
     let nb = index.n_broadcasts();
     let mut known = vec![false; index.occs.len()];
     let mut unknown = vec![0u32; nb];
@@ -209,10 +216,15 @@ fn run_node(know: &mut Knowledge, index: &DecodeIndex) -> (Vec<usize>, usize) {
         }
     }
     let mut done = vec![false; nb];
+    for (bi, d) in done.iter_mut().enumerate() {
+        if erased.get(bi).copied().unwrap_or(false) {
+            *d = true;
+        }
+    }
     let mut ready_now: BTreeSet<usize> = unknown
         .iter()
         .enumerate()
-        .filter(|&(_, &u)| u == 1)
+        .filter(|&(bi, &u)| u == 1 && !done[bi])
         .map(|(bi, _)| bi)
         .collect();
     let mut ready_next: BTreeSet<usize> = BTreeSet::new();
@@ -269,7 +281,7 @@ fn run_node(know: &mut Knowledge, index: &DecodeIndex) -> (Vec<usize>, usize) {
 }
 
 /// Map-phase knowledge of one node.
-fn node_knowledge(alloc: &Allocation, node: usize) -> Knowledge {
+pub(crate) fn node_knowledge(alloc: &Allocation, node: usize) -> Knowledge {
     let mut know = Knowledge::new(alloc.n_sub());
     for (sub, &h) in alloc.holders.iter().enumerate() {
         if h & (1 << node) != 0 {
@@ -304,7 +316,7 @@ fn simulate(
             range
                 .map(|node| {
                     let mut know = node_knowledge(alloc, node);
-                    let (order, waves) = run_node(&mut know, index);
+                    let (order, waves) = run_node(&mut know, index, &[]);
                     (know, order, waves)
                 })
                 .collect()
@@ -335,6 +347,57 @@ pub fn verify(alloc: &Allocation, plan: &ShufflePlan) -> DecodeReport {
         })
         .collect();
     DecodeReport { missing, passes }
+}
+
+/// Runtime-recovery worklist result for one erasure pattern: per-node
+/// decode orders over the surviving broadcasts, plus the IVs the
+/// erasures strand.
+#[derive(Clone, Debug)]
+pub(crate) struct RuntimeRecovery {
+    /// Per-node decode order over the survivors — same flat index space
+    /// as [`DecodeSchedule::order`]; erased indices never appear. With no
+    /// erasures this is bit-equal to the baked schedule.
+    pub orders: Vec<Vec<usize>>,
+    /// `(node, iv)` pairs stranded by the erasures: complete in the
+    /// fault-free propagation, incomplete over the survivors (losses
+    /// exceeded the plan's repair tolerance for that node). Ordered by
+    /// node ascending, then `(group, sub)` — the deterministic
+    /// retransmission order the executor replays.
+    pub stranded: Vec<(usize, IvId)>,
+}
+
+/// Rerun the worklist decoder over the broadcasts that survived an
+/// erasure pattern (`erased[bi]` = flat index `bi` was lost in transit).
+/// Diffing each node's final knowledge against its fault-free propagation
+/// names exactly the IVs retransmission must restore: resending those —
+/// and nothing else — makes the full-IV state of every node bit-equal to
+/// the fault-free run, which is the runtime half of the recovery
+/// contract ([`verify_loss_patterns`] is the build-time half).
+pub(crate) fn runtime_recovery(
+    alloc: &Allocation,
+    plan: &ShufflePlan,
+    erased: &[bool],
+) -> RuntimeRecovery {
+    let index = DecodeIndex::build(plan);
+    let k = alloc.k;
+    let mut orders = Vec::with_capacity(k);
+    let mut stranded = Vec::new();
+    for node in 0..k {
+        let mut full = node_knowledge(alloc, node);
+        run_node(&mut full, &index, &[]);
+        let mut know = node_knowledge(alloc, node);
+        let (order, _) = run_node(&mut know, &index, erased);
+        for group in 0..k {
+            for sub in 0..alloc.n_sub() {
+                let iv = IvId { group, sub };
+                if full.knows_iv(iv) && !know.knows_iv(iv) {
+                    stranded.push((node, iv));
+                }
+            }
+        }
+        orders.push(order);
+    }
+    RuntimeRecovery { orders, stranded }
 }
 
 /// Degraded-decode gate: prove `plan` recovers every IV under **every**
@@ -698,6 +761,50 @@ mod tests {
             verify_loss_patterns(&alloc, &plan, crate::net::faults::MAX_REPAIR_F + 1),
             Err(HetcdcError::InvalidParams(_))
         ));
+    }
+
+    #[test]
+    fn runtime_recovery_mirrors_schedule_and_strands_only_above_tolerance() {
+        use crate::coding::plan::with_repair_rounds;
+        let p = Params3::new(6, 7, 7, 12).unwrap();
+        let alloc = optimal_allocation(&p);
+        let base = plan_k3(&alloc);
+
+        // No erasures: orders bit-equal the baked schedule, nothing
+        // stranded.
+        let clean = runtime_recovery(&alloc, &base, &[]);
+        assert_eq!(clean.orders, schedule(&alloc, &base).unwrap().order);
+        assert!(clean.stranded.is_empty());
+
+        // The bare plan has critical broadcasts: some single erasure
+        // strands an IV, and the erased index never appears in an order.
+        let nb = base.n_broadcasts();
+        let mut any_stranded = false;
+        for bi in 0..nb {
+            let mut erased = vec![false; nb];
+            erased[bi] = true;
+            let rec = runtime_recovery(&alloc, &base, &erased);
+            assert!(rec.orders.iter().all(|o| !o.contains(&bi)));
+            // Stranded pairs are sorted: node asc, then (group, sub).
+            let keys: Vec<_> = rec
+                .stranded
+                .iter()
+                .map(|(n, iv)| (*n, iv.group, iv.sub))
+                .collect();
+            assert!(keys.windows(2).all(|w| w[0] < w[1]));
+            any_stranded |= !rec.stranded.is_empty();
+        }
+        assert!(any_stranded, "bare plan tolerated every single loss");
+
+        // Repaired at f=1 every single erasure decodes without stranding
+        // — the runtime mirror of verify_loss_patterns.
+        let r1 = with_repair_rounds(&base, &alloc, 1).unwrap();
+        for bi in 0..r1.n_broadcasts() {
+            let mut erased = vec![false; r1.n_broadcasts()];
+            erased[bi] = true;
+            let rec = runtime_recovery(&alloc, &r1, &erased);
+            assert!(rec.stranded.is_empty(), "erasing {bi} stranded IVs at f=1");
+        }
     }
 
     #[test]

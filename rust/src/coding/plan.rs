@@ -268,6 +268,26 @@ impl ShufflePlan {
         masks
     }
 
+    /// `(round, group, broadcast)` coordinates of every broadcast in
+    /// flattened order: `coords()[bi]` names flat index `bi` by its round
+    /// index, within-round group index, and within-group broadcast index.
+    /// This is the addressing scheme both erasure forms use —
+    /// `erase:list=r.g.b` matches these triples literally, and the seeded
+    /// model keys its per-broadcast hash on them — so the same broadcast
+    /// is erased no matter which exec mode or thread count replays the
+    /// plan.
+    pub fn coords(&self) -> Vec<(usize, usize, usize)> {
+        let mut coords = Vec::with_capacity(self.n_broadcasts());
+        for (r, round) in self.rounds.iter().enumerate() {
+            for (g, group) in round.groups.iter().enumerate() {
+                for b in 0..group.broadcasts.len() {
+                    coords.push((r, g, b));
+                }
+            }
+        }
+        coords
+    }
+
     /// Total load in subfile units (exact rational; integral when all
     /// broadcasts are whole-IV).
     pub fn load_units(&self) -> f64 {
@@ -977,6 +997,35 @@ mod tests {
                 if *is_start {
                     assert!(masks[bi].is_some(), "round start {bi} opens no group");
                 }
+            }
+        }
+    }
+
+    #[test]
+    fn coords_name_every_flat_index_by_round_group_broadcast() {
+        let p = Params3::new(5, 8, 11, 12).unwrap();
+        let alloc = optimal_allocation(&p);
+        for plan in [plan_k3(&alloc), plan_greedy(&alloc), plan_uncoded(&alloc)] {
+            let coords = plan.coords();
+            assert_eq!(coords.len(), plan.n_broadcasts());
+            // Strictly increasing: the coords walk the same round-major,
+            // group-major order as iter_broadcasts, with no duplicates.
+            assert!(coords.windows(2).all(|w| w[0] < w[1]));
+            let flat: Vec<&Broadcast> = plan.iter_broadcasts().collect();
+            for (bi, &(r, g, b)) in coords.iter().enumerate() {
+                assert!(r < plan.round_count());
+                let group = &plan.rounds[r].groups[g];
+                assert!(b < group.broadcasts.len(), "flat {bi} out of group");
+                // Indexing by the coordinate recovers the flat broadcast.
+                assert!(std::ptr::eq(flat[bi], &group.broadcasts[b]));
+            }
+            // Round boundaries agree with round_start_flags.
+            for (bi, is_start) in plan.round_start_flags().iter().enumerate() {
+                assert_eq!(
+                    *is_start,
+                    coords[bi].1 == 0 && coords[bi].2 == 0,
+                    "flat {bi} round-start disagreement"
+                );
             }
         }
     }

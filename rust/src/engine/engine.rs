@@ -46,6 +46,12 @@ pub struct RunReport {
     pub verified: bool,
     /// Max |output − oracle| over all groups (absolute).
     pub max_abs_err: f64,
+    /// Set on batches executed *after* a mid-run dropout
+    /// (`drop:node=i,at_batch=b`): the index of the node the survivor
+    /// plan was rebuilt without ([`crate::engine::Plan::replan_without`]).
+    /// `None` on every fault-free batch, and omitted from JSON so
+    /// fault-free reports stay byte-identical to pre-dropout artifacts.
+    pub replanned_without: Option<usize>,
 }
 
 impl RunReport {
@@ -88,6 +94,9 @@ impl RunReport {
         put("shuffle_fraction", Json::Num(self.shuffle_fraction()));
         put("verified", Json::Bool(self.verified));
         put("max_abs_err", Json::Num(self.max_abs_err));
+        if let Some(node) = self.replanned_without {
+            put("replanned_without", Json::Num(node as f64));
+        }
         Json::Obj(m)
     }
 }

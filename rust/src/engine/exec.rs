@@ -21,11 +21,12 @@
 //! reset and re-filled by the Map of batch `i+1` while the front bank
 //! drains batch `i`'s shuffle; an O(1) bank swap promotes it afterwards.
 
-use crate::coding::decoder::DecodeSchedule;
+use crate::coding::decoder::{runtime_recovery, DecodeSchedule};
 use crate::coding::plan::{Broadcast, IvId, Part, ShufflePlan};
 use crate::coding::xor::xor_into;
 use crate::error::{HetcdcError, Result};
 use crate::net::BroadcastNet;
+use crate::placement::alloc::Allocation;
 use std::collections::HashMap;
 
 /// Fixed per-message wire overhead (sender id, kind, part descriptors) —
@@ -185,15 +186,19 @@ impl NodeState {
             return; // mixed granularity not used by any built-in plan
         }
         entry.1[p.seg as usize] = Some(bytes.to_vec());
-        if entry.1.iter().all(|s| s.is_some()) {
-            let (nseg, segs) = self.partial.remove(&p.iv).unwrap();
-            let mut payload = Vec::with_capacity(self.iv_bytes);
-            for (i, seg_bytes) in segs.into_iter().enumerate() {
-                let (s, e) = seg_range(self.iv_bytes, i as u32, nseg);
-                payload.extend_from_slice(&seg_bytes.unwrap()[..e - s]);
-            }
-            self.set_full(p.iv, payload);
+        if entry.1.iter().any(|s| s.is_none()) {
+            return;
         }
+        let Some((nseg, segs)) = self.partial.remove(&p.iv) else {
+            return;
+        };
+        let mut payload = Vec::with_capacity(self.iv_bytes);
+        for (i, seg_bytes) in segs.into_iter().enumerate() {
+            let Some(seg_bytes) = seg_bytes else { continue };
+            let (s, e) = seg_range(self.iv_bytes, i as u32, nseg);
+            payload.extend_from_slice(&seg_bytes[..e - s]);
+        }
+        self.set_full(p.iv, payload);
     }
 
     /// Try to decode a coded message; true on progress.
@@ -208,7 +213,12 @@ impl NodeState {
         let mut recovered = msg.to_vec();
         for (i, p) in parts.iter().enumerate() {
             if i != target {
-                let known = self.part_bytes(p).expect("knows_part checked");
+                // knows_part passed above, so part_bytes is Some; a miss
+                // would mean inconsistent state — report no progress
+                // rather than panic.
+                let Some(known) = self.part_bytes(p) else {
+                    return false;
+                };
                 xor_into(&mut recovered, &known);
             }
         }
@@ -347,13 +357,43 @@ pub fn execute_planned(
     states: &mut [NodeState],
     net: &mut BroadcastNet,
 ) -> Result<ShuffleOutcome> {
-    let k = states.len();
     // Consumers per broadcast, from the schedule (bounds-checked here).
-    let mut remaining = schedule_consumers(plan, schedule, k)?;
+    schedule_consumers(plan, schedule, states.len())?;
     let flat: Vec<&Broadcast> = plan.iter_broadcasts().collect();
+    execute_serial_orders(plan, &flat, &schedule.order, states, net, &[])
+}
+
+/// The serial transmit-and-decode cursor loop shared by
+/// [`execute_planned`] (baked schedule, nothing erased) and the runtime
+/// erasure path (worklist orders over survivors). Broadcasts are metered
+/// in flat plan order; an index flagged in `erased` is transmitted and
+/// metered exactly like a survivor — the sender cannot know the medium
+/// lost it — but its message is delivered to nobody and
+/// [`BroadcastNet::note_erased`] records the loss. `orders` must never
+/// reference an erased index (the worklist pass guarantees this).
+fn execute_serial_orders(
+    plan: &ShufflePlan,
+    flat: &[&Broadcast],
+    orders: &[Vec<usize>],
+    states: &mut [NodeState],
+    net: &mut BroadcastNet,
+    erased: &[bool],
+) -> Result<ShuffleOutcome> {
+    let k = states.len();
     let starts_round = plan.round_start_flags();
     let group_starts = plan.group_start_masks();
     let n_broadcasts = flat.len();
+    let mut remaining = vec![0u32; n_broadcasts];
+    for order in orders {
+        for &bi in order {
+            if bi >= n_broadcasts {
+                return Err(HetcdcError::Shuffle(format!(
+                    "decode order references broadcast {bi} out of range"
+                )));
+            }
+            remaining[bi] += 1;
+        }
+    }
 
     let mut payload_bytes = 0u64;
     let mut wire_bytes = 0u64;
@@ -367,6 +407,10 @@ pub fn execute_planned(
             net.begin_group(members);
         }
         let msg = assemble_and_meter(b, states, net, &mut payload_bytes, &mut wire_bytes)?;
+        if erased.get(bi).copied().unwrap_or(false) {
+            net.note_erased();
+            continue;
+        }
         if remaining[bi] > 0 {
             msgs[bi] = Some(msg);
         }
@@ -375,7 +419,7 @@ pub fn execute_planned(
         // index decodable only after a later one): entries wait until
         // their own index is reached, then drain in dependency order.
         for node in 0..k {
-            while let Some(&next) = schedule.order[node].get(cursors[node]) {
+            while let Some(&next) = orders[node].get(cursors[node]) {
                 if next > bi {
                     break;
                 }
@@ -459,49 +503,79 @@ pub fn execute_planned_parallel(
     }
 
     // ---- Phase 1: assemble all messages from post-Map sender state.
-    let mut msgs: Vec<Option<Vec<u8>>> = vec![None; n_broadcasts];
-    let assembled_all = {
-        let shared: &[NodeState] = states;
-        let flat_ref: &[&Broadcast] = &flat;
-        let chunk = n_broadcasts.div_ceil(threads);
-        std::thread::scope(|scope| {
-            let mut handles = Vec::new();
-            for (ci, out) in msgs.chunks_mut(chunk).enumerate() {
-                let base = ci * chunk;
-                handles.push(scope.spawn(move || {
-                    for (off, slot) in out.iter_mut().enumerate() {
-                        match assemble_message(flat_ref[base + off], shared) {
-                            Some(m) => *slot = Some(m),
-                            None => return false,
-                        }
-                    }
-                    true
-                }));
-            }
-            // Join every worker before deciding: returning early would
-            // make thread::scope re-panic on a second panicked worker.
-            let joined: Vec<_> = handles.into_iter().map(|h| h.join()).collect();
-            let mut all = true;
-            for j in joined {
-                match j {
-                    Ok(ok) => all = all && ok,
-                    Err(_) => {
-                        return Err(HetcdcError::Shuffle("assembly worker panicked".into()))
-                    }
-                }
-            }
-            Ok(all)
-        })?
-    };
-    if !assembled_all {
+    let Some(msgs) = assemble_all_parallel(&flat, states, threads)? else {
         // A sender transmits something it only learns mid-shuffle: replay
         // serially (states and net are still untouched).
         return execute_planned(plan, schedule, states, net);
-    }
+    };
 
     // ---- Phase 2: meter in flattened plan order (identical to the
     // serial path, including the per-sender iv_bytes lookup and the
     // per-round ledger sections).
+    let (payload_bytes, wire_bytes) = meter_plan_order(plan, &flat, states, net, &[]);
+
+    // ---- Phase 3: per-node decode replay, sharded across workers.
+    replay_all_parallel(&schedule.order, &flat, &msgs, states, threads)?;
+
+    Ok(ShuffleOutcome {
+        payload_bytes,
+        wire_bytes,
+        messages: n_broadcasts as u64,
+    })
+}
+
+/// Phase-1 helper of the parallel paths: assemble every broadcast's wire
+/// message from post-Map sender state on scoped workers. `Ok(None)` =
+/// some sender needs mid-shuffle knowledge, so the caller must fall back
+/// to the serial interleaved path (states and net are untouched).
+fn assemble_all_parallel(
+    flat: &[&Broadcast],
+    states: &[NodeState],
+    threads: usize,
+) -> Result<Option<Vec<Option<Vec<u8>>>>> {
+    let n_broadcasts = flat.len();
+    let mut msgs: Vec<Option<Vec<u8>>> = vec![None; n_broadcasts];
+    let chunk = n_broadcasts.div_ceil(threads).max(1);
+    let assembled_all = std::thread::scope(|scope| {
+        let mut handles = Vec::new();
+        for (ci, out) in msgs.chunks_mut(chunk).enumerate() {
+            let base = ci * chunk;
+            handles.push(scope.spawn(move || {
+                for (off, slot) in out.iter_mut().enumerate() {
+                    match assemble_message(flat[base + off], states) {
+                        Some(m) => *slot = Some(m),
+                        None => return false,
+                    }
+                }
+                true
+            }));
+        }
+        // Join every worker before deciding: returning early would
+        // make thread::scope re-panic on a second panicked worker.
+        let joined: Vec<_> = handles.into_iter().map(|h| h.join()).collect();
+        let mut all = true;
+        for j in joined {
+            match j {
+                Ok(ok) => all = all && ok,
+                Err(_) => return Err(HetcdcError::Shuffle("assembly worker panicked".into())),
+            }
+        }
+        Ok(all)
+    })?;
+    Ok(if assembled_all { Some(msgs) } else { None })
+}
+
+/// Phase-2 helper of the parallel paths: the exact [`BroadcastNet`] call
+/// sequence of the serial path, in flat plan order. Erased indices are
+/// metered like survivors (the wire carried them) and then recorded via
+/// [`BroadcastNet::note_erased`]. Returns `(payload_bytes, wire_bytes)`.
+fn meter_plan_order(
+    plan: &ShufflePlan,
+    flat: &[&Broadcast],
+    states: &[NodeState],
+    net: &mut BroadcastNet,
+    erased: &[bool],
+) -> (u64, u64) {
     let mut payload_bytes = 0u64;
     let mut wire_bytes = 0u64;
     let starts_round = plan.round_start_flags();
@@ -517,45 +591,188 @@ pub fn execute_planned_parallel(
         payload_bytes += payload as u64;
         wire_bytes += wire as u64;
         net.broadcast(b.sender(), wire);
+        if erased.get(bi).copied().unwrap_or(false) {
+            net.note_erased();
+        }
     }
+    (payload_bytes, wire_bytes)
+}
 
-    // ---- Phase 3: per-node decode replay, sharded across workers.
-    {
-        let msgs_ref: &[Option<Vec<u8>>] = &msgs;
-        let flat_ref: &[&Broadcast] = &flat;
-        let chunk = k.div_ceil(threads);
-        std::thread::scope(|scope| {
-            let mut handles = Vec::new();
-            for (ci, st_chunk) in states.chunks_mut(chunk).enumerate() {
-                let base = ci * chunk;
-                handles.push(scope.spawn(move || -> Result<()> {
-                    for (off, st) in st_chunk.iter_mut().enumerate() {
-                        let node = base + off;
-                        replay_node_schedule(
-                            node,
-                            st,
-                            &schedule.order[node],
-                            flat_ref,
-                            msgs_ref,
-                        )?;
-                    }
-                    Ok(())
-                }));
-            }
-            // Join all workers first (see phase 1), then propagate.
-            let joined: Vec<_> = handles.into_iter().map(|h| h.join()).collect();
-            for j in joined {
-                j.map_err(|_| HetcdcError::Shuffle("decode worker panicked".into()))??;
-            }
-            Ok::<(), HetcdcError>(())
-        })?;
-    }
-
-    Ok(ShuffleOutcome {
-        payload_bytes,
-        wire_bytes,
-        messages: n_broadcasts as u64,
+/// Phase-3 helper of the parallel paths: every node replays its own
+/// decode order on scoped workers; decoding touches only that node's
+/// state plus the shared read-only message buffers.
+fn replay_all_parallel(
+    orders: &[Vec<usize>],
+    flat: &[&Broadcast],
+    msgs: &[Option<Vec<u8>>],
+    states: &mut [NodeState],
+    threads: usize,
+) -> Result<()> {
+    let k = states.len();
+    let chunk = k.div_ceil(threads).max(1);
+    std::thread::scope(|scope| {
+        let mut handles = Vec::new();
+        for (ci, st_chunk) in states.chunks_mut(chunk).enumerate() {
+            let base = ci * chunk;
+            handles.push(scope.spawn(move || -> Result<()> {
+                for (off, st) in st_chunk.iter_mut().enumerate() {
+                    let node = base + off;
+                    replay_node_schedule(node, st, &orders[node], flat, msgs)?;
+                }
+                Ok(())
+            }));
+        }
+        // Join all workers first (see assemble_all_parallel), then
+        // propagate the first failure.
+        let joined: Vec<_> = handles.into_iter().map(|h| h.join()).collect();
+        for j in joined {
+            j.map_err(|_| HetcdcError::Shuffle("decode worker panicked".into()))??;
+        }
+        Ok::<(), HetcdcError>(())
     })
+}
+
+/// Execute `plan` under a runtime erasure pattern: every broadcast is
+/// assembled and metered in flat plan order exactly as fault-free — the
+/// sender cannot know the medium lost its transmission, so plan-round
+/// bytes, messages, and clocks match the fault-free run — but an erased
+/// broadcast reaches no receiver. Decoding replays the runtime worklist
+/// orders over the survivors ([`runtime_recovery`] reuses the symbolic
+/// decoder's `DecodeIndex`), and any IV the survivors cannot complete
+/// (losses exceeded the plan's repair tolerance) is restored by
+/// deterministic NACK-driven unicast retransmission, metered on top.
+///
+/// `threads > 1` uses the same three-phase parallel split as
+/// [`execute_planned_parallel`]; the outcome is bit-identical to the
+/// serial path for every thread count. The returned [`ShuffleOutcome`]
+/// counts **plan** traffic only (identical to fault-free); recovery
+/// traffic is metered in the ledger's recovery counters
+/// ([`crate::net::NetReport::recovery_bytes`] et al.).
+pub fn execute_planned_erased(
+    plan: &ShufflePlan,
+    alloc: &Allocation,
+    states: &mut [NodeState],
+    net: &mut BroadcastNet,
+    erased: &[bool],
+    threads: usize,
+) -> Result<ShuffleOutcome> {
+    let k = states.len();
+    let rec = runtime_recovery(alloc, plan, erased);
+    if rec.orders.len() != k {
+        return Err(HetcdcError::Shuffle(format!(
+            "recovery orders cover {} nodes, cluster has {k}",
+            rec.orders.len()
+        )));
+    }
+    let flat: Vec<&Broadcast> = plan.iter_broadcasts().collect();
+    let n_broadcasts = flat.len();
+    let threads = threads.clamp(1, k.max(1));
+
+    let outcome = if threads <= 1 || n_broadcasts == 0 {
+        execute_serial_orders(plan, &flat, &rec.orders, states, net, erased)?
+    } else {
+        match assemble_all_parallel(&flat, states, threads)? {
+            None => {
+                // A sender needs mid-shuffle knowledge: serial fallback
+                // (states and net are still untouched).
+                execute_serial_orders(plan, &flat, &rec.orders, states, net, erased)?
+            }
+            Some(msgs) => {
+                let (payload_bytes, wire_bytes) =
+                    meter_plan_order(plan, &flat, states, net, erased);
+                replay_all_parallel(&rec.orders, &flat, &msgs, states, threads)?;
+                ShuffleOutcome {
+                    payload_bytes,
+                    wire_bytes,
+                    messages: n_broadcasts as u64,
+                }
+            }
+        }
+    };
+
+    retransmit_stranded(alloc, states, net, &rec.stranded)?;
+    Ok(outcome)
+}
+
+/// Restore stranded IVs by deterministic NACK-driven unicast
+/// retransmissions. For each stranded `(dest, iv)` — ordered node
+/// ascending, then `(group, sub)` — the lowest-indexed surviving holder
+/// of `iv.sub` resends exactly the segments `dest` is missing (the whole
+/// IV when it has no partial assembly) as **reliable** point-to-point
+/// messages: the erasure model applies only to plan broadcasts, so
+/// recovery terminates even at `p = 1`. Each retransmission round pays
+/// an exponentially backed-off penalty before its resends and each
+/// resend a NACK round trip ([`BroadcastNet::retransmit_unicast`]); one
+/// round always suffices for the built-in plans — a holder of the
+/// subfile knows every group's IV from its own Map — so the outer loop
+/// is defensive structure, bounded rather than unbounded.
+fn retransmit_stranded(
+    alloc: &Allocation,
+    states: &mut [NodeState],
+    net: &mut BroadcastNet,
+    stranded: &[(usize, IvId)],
+) -> Result<()> {
+    if stranded.is_empty() {
+        return Ok(());
+    }
+    let k = states.len();
+    let mut pending: Vec<(usize, IvId)> = stranded.to_vec();
+    let mut round = 0usize;
+    while !pending.is_empty() {
+        round += 1;
+        if round > k.max(8) {
+            return Err(HetcdcError::Shuffle(
+                "retransmission did not converge".into(),
+            ));
+        }
+        net.begin_retransmit_round(round);
+        for (dest, iv) in std::mem::take(&mut pending) {
+            let holders = alloc.holders[iv.sub];
+            let holder = (0..k).find(|&n| n != dest && holders & (1 << n) != 0);
+            let Some(holder) = holder else {
+                return Err(HetcdcError::Shuffle(format!(
+                    "no surviving holder can retransmit {iv:?} to node {dest}"
+                )));
+            };
+            let iv_bytes = states[holder].iv_bytes;
+            let full = states[holder]
+                .get_full(iv)
+                .map(<[u8]>::to_vec)
+                .ok_or_else(|| {
+                    HetcdcError::Shuffle(format!(
+                        "holder {holder} lacks {iv:?} needed for retransmission"
+                    ))
+                })?;
+            // Resend at the dest's partial granularity when it has one —
+            // only the missing segments ride the wire.
+            let missing: Vec<(u32, u32)> = match states[dest].partial.get(&iv) {
+                Some((nseg, segs)) => segs
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, s)| s.is_none())
+                    .map(|(i, _)| (i as u32, *nseg))
+                    .collect(),
+                None => vec![(0, 1)],
+            };
+            let wire = missing
+                .iter()
+                .map(|&(_, nseg)| seg_wire_len(iv_bytes, nseg))
+                .sum::<usize>()
+                + HEADER_BYTES
+                + PER_PART_BYTES * missing.len();
+            net.retransmit_unicast(holder, wire);
+            for (seg, nseg) in missing {
+                let (s, e) = seg_range(iv_bytes, seg, nseg);
+                let mut bytes = full[s..e].to_vec();
+                bytes.resize(seg_wire_len(iv_bytes, nseg), 0);
+                states[dest].learn_part(&Part { iv, seg, nseg }, &bytes);
+            }
+            if states[dest].get_full(iv).is_none() {
+                pending.push((dest, iv));
+            }
+        }
+    }
+    Ok(())
 }
 
 /// Execute `plan` without a schedule: senders read `states[sender]`,
@@ -774,6 +991,122 @@ mod tests {
                     s2[node].get_full(iv).expect("planned complete"),
                     "node {node} sub {sub}"
                 );
+            }
+        }
+    }
+
+    #[test]
+    fn erased_execution_recovers_bit_identical_state_and_meters_on_top() {
+        let p = crate::theory::params::Params3::new(5, 8, 11, 12).unwrap();
+        let alloc = crate::placement::k3::optimal_allocation(&p);
+        let plan = crate::coding::plan::plan_k3(&alloc);
+        let sched = decoder::schedule(&alloc, &plan).unwrap();
+        let iv_bytes = 32;
+        let net = || BroadcastNet::new(vec![4.5e8, 7.5e8, 1e9], 5e-4).unwrap();
+
+        // Fault-free reference.
+        let mut s0 = seeded_states(&alloc, iv_bytes);
+        let mut n0 = net();
+        let o0 = execute_planned(&plan, &sched, &mut s0, &mut n0).unwrap();
+        let r0 = n0.report();
+
+        // Nothing erased: the erased path is the planned path, byte for
+        // byte — states, outcome, and NetReport.
+        let nb = plan.n_broadcasts();
+        let mut s_clean = seeded_states(&alloc, iv_bytes);
+        let mut n_clean = net();
+        let o_clean = execute_planned_erased(
+            &plan, &alloc, &mut s_clean, &mut n_clean, &vec![false; nb], 1,
+        )
+        .unwrap();
+        assert_eq!(o0.wire_bytes, o_clean.wire_bytes);
+        assert_eq!(r0, n_clean.report());
+
+        let mut any_retransmit = false;
+        for bi in 0..nb {
+            let mut erased = vec![false; nb];
+            erased[bi] = true;
+            let mut reports = Vec::new();
+            for threads in [1usize, 3] {
+                let mut s1 = seeded_states(&alloc, iv_bytes);
+                let mut n1 = net();
+                let o1 = execute_planned_erased(
+                    &plan, &alloc, &mut s1, &mut n1, &erased, threads,
+                )
+                .unwrap();
+                // Plan traffic is identical to fault-free: the sender
+                // transmitted; only delivery was lost.
+                assert_eq!(o0.payload_bytes, o1.payload_bytes);
+                assert_eq!(o0.wire_bytes, o1.wire_bytes);
+                assert_eq!(o0.messages, o1.messages);
+                let r = n1.report();
+                assert_eq!(r.erased_broadcasts, 1, "bi={bi}");
+                // Full-IV state everywhere bit-equal to fault-free.
+                for node in 0..3 {
+                    for g in 0..3 {
+                        for sub in 0..alloc.n_sub() {
+                            let iv = IvId { group: g, sub };
+                            assert_eq!(
+                                s0[node].get_full(iv),
+                                s1[node].get_full(iv),
+                                "bi={bi} threads={threads} node={node} {iv:?}"
+                            );
+                        }
+                    }
+                }
+                // Recovery rides on top of (never replaces) plan bytes.
+                if r.retransmit_rounds > 0 {
+                    any_retransmit = true;
+                    assert!(r.recovery_bytes > 0 && r.nack_rtts > 0, "bi={bi}");
+                    assert!(r.total_bytes > r0.total_bytes, "bi={bi}");
+                } else {
+                    assert_eq!(r.recovery_bytes, 0);
+                    assert_eq!(r.total_bytes, r0.total_bytes);
+                }
+                reports.push(r);
+            }
+            // Serial and parallel meter identically, recovery included.
+            assert_eq!(reports[0], reports[1], "bi={bi}");
+        }
+        // The bare k3 plan has critical broadcasts, so at least one
+        // erasure must exercise the retransmission path.
+        assert!(any_retransmit, "no erasure needed retransmission");
+    }
+
+    #[test]
+    fn repair_rounds_absorb_single_erasures_without_retransmission() {
+        use crate::coding::plan::with_repair_rounds;
+        let p = crate::theory::params::Params3::new(5, 8, 11, 12).unwrap();
+        let alloc = crate::placement::k3::optimal_allocation(&p);
+        let base = crate::coding::plan::plan_k3(&alloc);
+        let plan = with_repair_rounds(&base, &alloc, 1).unwrap();
+        let sched = decoder::schedule(&alloc, &plan).unwrap();
+        let iv_bytes = 16;
+
+        let mut s0 = seeded_states(&alloc, iv_bytes);
+        let mut n0 = BroadcastNet::homogeneous(3, 1e9, 1e-4).unwrap();
+        execute_planned(&plan, &sched, &mut s0, &mut n0).unwrap();
+
+        for bi in 0..plan.n_broadcasts() {
+            let mut erased = vec![false; plan.n_broadcasts()];
+            erased[bi] = true;
+            let mut s1 = seeded_states(&alloc, iv_bytes);
+            let mut n1 = BroadcastNet::homogeneous(3, 1e9, 1e-4).unwrap();
+            execute_planned_erased(&plan, &alloc, &mut s1, &mut n1, &erased, 1).unwrap();
+            let r = n1.report();
+            // f=1 repair absorbs every single loss: recovery counters
+            // stay zero and every node ends bit-equal to fault-free.
+            assert_eq!(r.retransmit_rounds, 0, "bi={bi}");
+            assert_eq!(r.recovery_bytes, 0, "bi={bi}");
+            for node in 0..3 {
+                for sub in 0..alloc.n_sub() {
+                    let iv = IvId { group: node, sub };
+                    assert_eq!(
+                        s0[node].get_full(iv),
+                        s1[node].get_full(iv),
+                        "bi={bi} node={node} sub={sub}"
+                    );
+                }
             }
         }
     }

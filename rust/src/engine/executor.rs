@@ -32,7 +32,7 @@
 
 use super::backend::MapBackend;
 use super::engine::RunReport;
-use super::exec::{execute_planned, execute_planned_parallel, NodeState};
+use super::exec::{execute_planned, execute_planned_erased, execute_planned_parallel, NodeState};
 use super::plan::{straggler_ready, Plan};
 use crate::coding::plan::IvId;
 use crate::error::{HetcdcError, Result};
@@ -70,10 +70,9 @@ impl ExecMode {
 
 /// Everything an [`Executor`] can be configured with, in one typed value.
 /// [`Executor::with_config`] is the single construction path — the engine,
-/// the bench suite, and the CLI all build executors through it; the old
-/// [`Executor::new`] / [`Executor::with_mode`] constructors are deprecated
-/// shims over a default config, and `xtask lint` bans them outside this
-/// file and test code (rule `construction-path`).
+/// the bench suite, and the CLI all build executors through it, and
+/// `xtask lint` bans the legacy constructor names everywhere outside test
+/// code (rule `construction-path`).
 ///
 /// Which runs read which field:
 /// * `mode` — read by [`Executor::run_batch`] (Map sharding + decode
@@ -83,12 +82,15 @@ impl ExecMode {
 /// * `faults` — `None` (the default) meters under the plan's own
 ///   [`crate::model::cluster::ClusterSpec::faults`]; `Some(spec)` is an
 ///   execution-time override installed into this executor's network
-///   simulator at construction. Metering-only: straggler jitter shifts
-///   clocks (`shuffle_time_s`, `straggler_delay_s`) but never bytes,
-///   messages, rounds, or decoded payloads, so the bit-identity contract
-///   across modes holds under every fault spec. Repair rounds are plan
-///   *shape* and cannot be overridden here — rebuild the plan for that.
-#[derive(Clone, Copy, Debug, PartialEq)]
+///   simulator at construction. Straggler jitter shifts clocks
+///   (`shuffle_time_s`, `straggler_delay_s`) but never bytes; runtime
+///   erasures (`erase:`) drop broadcast deliveries and meter the
+///   recovery traffic on top; mid-run dropout (`drop:`) re-plans the
+///   remaining batches without the lost node. Under *every* spec the
+///   decoded IVs are bit-equal to the fault-free run and the bit-identity
+///   contract across modes holds. Repair rounds are plan *shape* and
+///   cannot be overridden here — rebuild the plan for that.
+#[derive(Clone, Debug, PartialEq)]
 pub struct ExecConfig {
     pub mode: ExecMode,
     /// Worker threads for the parallel phases; `0` = auto-detect.
@@ -160,19 +162,6 @@ pub struct Executor<'p> {
 }
 
 impl<'p> Executor<'p> {
-    /// Serial executor (the reference mode). Shim over
-    /// [`Self::with_config`] with [`ExecConfig::default`].
-    #[deprecated(note = "use with_config")]
-    pub fn new(plan: &'p Plan) -> Result<Self> {
-        Self::with_config(plan, ExecConfig::default())
-    }
-
-    /// Shim over [`Self::with_config`] setting only the mode.
-    #[deprecated(note = "use with_config")]
-    pub fn with_mode(plan: &'p Plan, mode: ExecMode) -> Result<Self> {
-        Self::with_config(plan, ExecConfig::default().mode(mode))
-    }
-
     /// The single construction path: every field of `cfg` is applied
     /// here, including installing the effective fault spec's straggler
     /// jitter into the network simulator so all subsequent batch runs
@@ -191,13 +180,15 @@ impl<'p> Executor<'p> {
                     .collect()
             })
             .collect();
-        let faults = cfg.faults.unwrap_or(plan.cluster.faults);
+        let faults = cfg
+            .faults
+            .unwrap_or_else(|| plan.cluster.faults.clone());
         faults.validate(k)?;
         let mut net = plan.cluster.network()?;
         if faults.straggle.is_some() {
             // straggler_ready reads the spec off the cluster, so apply
             // the effective spec to a throwaway clone when overriding.
-            let cluster = plan.cluster.clone().with_faults(faults);
+            let cluster = plan.cluster.clone().with_faults(faults.clone());
             if let Some(ready) = straggler_ready(&cluster, &plan.alloc) {
                 net.set_straggle(&ready)?;
             }
@@ -228,15 +219,6 @@ impl<'p> Executor<'p> {
         self.mode = mode;
     }
 
-    /// Cap the worker count for the parallel phases; `0` (the default)
-    /// uses [`std::thread::available_parallelism`], falling back to 1
-    /// worker when the parallelism of the host cannot be queried. No
-    /// effect on results — only on wall-clock.
-    #[deprecated(note = "use with_config")]
-    pub fn set_threads(&mut self, threads: usize) {
-        self.threads = threads;
-    }
-
     /// Worker count a parallel phase would use right now. Never errors:
     /// an unqueryable [`std::thread::available_parallelism`] degrades to
     /// one worker.
@@ -253,14 +235,18 @@ impl<'p> Executor<'p> {
     /// The fault spec this executor meters under: the
     /// [`ExecConfig::faults`] override when one was given, else the
     /// plan's own cluster spec.
-    pub fn faults(&self) -> FaultSpec {
-        self.faults
+    pub fn faults(&self) -> &FaultSpec {
+        &self.faults
     }
 
-    /// `true` once a [`ExecMode::Pipelined`] multi-batch run has degraded
-    /// to the sequential loop because [`MapBackend::worker_clone`]
-    /// returned `None`. Results are unaffected — only the Map/Shuffle
-    /// overlap (and with it the steady-state throughput) is lost.
+    /// `true` once a [`ExecMode::Pipelined`] multi-batch run lost its
+    /// Map/Shuffle overlap — either because [`MapBackend::worker_clone`]
+    /// returned `None` (the backend cannot Map concurrently, so the whole
+    /// run degrades to the sequential loop) or because a fault spec
+    /// forced a batch to serialize erasure-recovery retransmission rounds
+    /// on the front stage. Results are unaffected in both cases — only
+    /// the overlap (and with it the steady-state throughput) is lost;
+    /// each trigger warns once on stderr and latches here.
     pub fn pipeline_degraded(&self) -> bool {
         self.pipeline_degraded
     }
@@ -273,7 +259,10 @@ impl<'p> Executor<'p> {
     /// Network accounting of the most recent batch (equal across
     /// [`ExecMode`]s for the same batch — asserted by tier-1 tests). The
     /// report's `epoch` equals [`Self::batches_run`]: each batch is
-    /// metered by exactly one ledger epoch, pipelined or not.
+    /// metered by exactly one ledger epoch, pipelined or not. Exception:
+    /// after a mid-run dropout switchover this ledger froze at the last
+    /// pre-switchover batch (the survivor plan metered on its own
+    /// executor), so `epoch` stops short of [`Self::batches_run`].
     pub fn net_report(&self) -> NetReport {
         self.net.report()
     }
@@ -398,9 +387,28 @@ impl<'p> Executor<'p> {
             backend,
             &job,
             decode_threads,
+            &self.faults,
         )?;
         self.batches_run += 1;
         Ok(report)
+    }
+
+    /// Second degradation trigger (see [`Self::pipeline_degraded`]):
+    /// called after each pipelined batch — retransmission rounds run
+    /// serialized on the front stage, so the first batch that needed any
+    /// warns once and latches.
+    fn note_recovery_serialized(&mut self) {
+        if self.pipeline_degraded {
+            return;
+        }
+        if self.net.report().retransmit_rounds > 0 {
+            self.pipeline_degraded = true;
+            eprintln!(
+                "hetcdc: warning: erasure recovery serialized retransmission \
+                 round(s) on the pipelined front stage; results are identical, \
+                 only the Map/Shuffle overlap of the affected batches is lost"
+            );
+        }
     }
 
     /// Execute one batch per seed, in order, returning one report per
@@ -418,6 +426,62 @@ impl<'p> Executor<'p> {
     /// split between the Map-ahead stage and the front-batch decode), and
     /// `faults` (installed at construction; every batch meters under it).
     pub fn run_batches(
+        &mut self,
+        backend: &mut dyn MapBackend,
+        seeds: &[u64],
+    ) -> Result<Vec<RunReport>> {
+        if let Some(drop) = self.faults.dropout {
+            return self.run_batches_with_dropout(backend, seeds, drop);
+        }
+        self.run_batches_inner(backend, seeds)
+    }
+
+    /// Mid-run dropout: batches before `drop.at_batch` (counted on this
+    /// executor's global [`Self::batches_run`]) finish in flight on the
+    /// original plan; the remainder re-plan without the lost node
+    /// ([`Plan::replan_without`]) and resume on a survivor executor with
+    /// the same mode/threads/faults (minus the dropout), their reports
+    /// tagged with `replanned_without`. After the switchover, this
+    /// executor's [`Self::net_report`] and [`Self::iv`] still reflect the
+    /// last pre-switchover batch — the survivor plan has its own shape.
+    fn run_batches_with_dropout(
+        &mut self,
+        backend: &mut dyn MapBackend,
+        seeds: &[u64],
+        drop: crate::net::Dropout,
+    ) -> Result<Vec<RunReport>> {
+        let boundary = drop
+            .at_batch
+            .saturating_sub(self.batches_run)
+            .min(seeds.len() as u64) as usize;
+        let (before, after) = seeds.split_at(boundary);
+        let mut reports = self.run_batches_inner(backend, before)?;
+        if !after.is_empty() {
+            let survivor = self.plan.replan_without(drop.node)?;
+            let mut faults = self.faults.clone();
+            faults.dropout = None;
+            let cfg = ExecConfig {
+                mode: self.mode,
+                threads: self.threads,
+                faults: Some(faults),
+            };
+            let mut inner = Executor::with_config(&survivor, cfg)?;
+            let mut rest = inner.run_batches(backend, after)?;
+            if inner.pipeline_degraded() {
+                self.pipeline_degraded = true;
+            }
+            for r in &mut rest {
+                r.replanned_without = Some(drop.node);
+            }
+            self.batches_run += rest.len() as u64;
+            reports.append(&mut rest);
+        }
+        Ok(reports)
+    }
+
+    /// [`Self::run_batches`] minus the dropout handling (the fault-free /
+    /// erasure / straggle flow).
+    fn run_batches_inner(
         &mut self,
         backend: &mut dyn MapBackend,
         seeds: &[u64],
@@ -492,6 +556,7 @@ impl<'p> Executor<'p> {
                     back,
                     held,
                     net,
+                    faults,
                     ..
                 } = self;
                 let plan: &'p Plan = *plan;
@@ -515,7 +580,8 @@ impl<'p> Executor<'p> {
                     });
                     // Stage B (this thread): Shuffle + Reduce + verify
                     // batch i on the front bank.
-                    let finished = finish_batch(plan, states, net, backend, &job, decode_threads);
+                    let finished =
+                        finish_batch(plan, states, net, backend, &job, decode_threads, faults);
                     // Join the Map stage before propagating any error so
                     // thread::scope never re-panics over a live worker.
                     let mapped = match map_handle {
@@ -534,6 +600,7 @@ impl<'p> Executor<'p> {
             };
             self.batches_run += 1;
             reports.push(report);
+            self.note_recovery_serialized();
             if next_seed.is_some() {
                 // O(1) bank swap: batch i+1's freshly Mapped state
                 // becomes the front; batch i's drained state becomes the
@@ -558,6 +625,7 @@ fn finish_batch(
     backend: &mut dyn MapBackend,
     job: &JobSpec,
     decode_threads: usize,
+    faults: &FaultSpec,
 ) -> Result<RunReport> {
     let k = plan.cluster.k();
     let q = k;
@@ -566,12 +634,35 @@ fn finish_batch(
     net.reset();
 
     // ---- Shuffle phase: replay the decode schedule proven at plan
-    // build time — no re-verification, no fixpoint.
+    // build time — no re-verification, no fixpoint. Under an `erase:`
+    // fault the erasure mask is keyed on the fresh ledger epoch (== the
+    // batch index on this executor), so which broadcasts vanish is a pure
+    // function of (spec, batch) — identical across threads and modes.
     let map_time_s = plan.predicted.map_time_s;
-    let outcome = if decode_threads <= 1 {
-        execute_planned(&plan.shuffle, &plan.schedule, states, net)?
-    } else {
-        execute_planned_parallel(&plan.shuffle, &plan.schedule, states, net, decode_threads)?
+    let outcome = match &faults.erase {
+        None => {
+            if decode_threads <= 1 {
+                execute_planned(&plan.shuffle, &plan.schedule, states, net)?
+            } else {
+                execute_planned_parallel(
+                    &plan.shuffle,
+                    &plan.schedule,
+                    states,
+                    net,
+                    decode_threads,
+                )?
+            }
+        }
+        Some(er) => {
+            let epoch = net.ledger().epoch();
+            let erased: Vec<bool> = plan
+                .shuffle
+                .coords()
+                .iter()
+                .map(|&(r, g, b)| er.erased(epoch, r, g, b))
+                .collect();
+            execute_planned_erased(&plan.shuffle, alloc, states, net, &erased, decode_threads)?
+        }
     };
     let shuffle_time_s = net.report().elapsed_s;
 
@@ -626,6 +717,7 @@ fn finish_batch(
         job_time_s: map_time_s + shuffle_time_s,
         verified,
         max_abs_err,
+        replanned_without: None,
     })
 }
 
@@ -872,36 +964,6 @@ mod tests {
     }
 
     #[test]
-    #[allow(deprecated)] // the deprecated shims are exactly what this test covers
-    fn config_shims_match_with_config() {
-        let c = cluster(&[6, 7, 7]);
-        let mut job = JobSpec::terasort(12);
-        job.t = 8;
-        job.keys_per_file = 32;
-        let plan = JobBuilder::new(&c, &job).build().unwrap();
-        let mut be = NativeBackend;
-
-        let mut via_new = Executor::new(&plan).unwrap();
-        let mut via_cfg = Executor::with_config(&plan, ExecConfig::default()).unwrap();
-        assert_eq!(via_new.mode(), via_cfg.mode());
-        assert_eq!(via_new.faults(), via_cfg.faults());
-        let a = via_new.run_batch(&mut be, 5).unwrap();
-        let b = via_cfg.run_batch(&mut be, 5).unwrap();
-        assert_eq!(a.shuffle_time_s.to_bits(), b.shuffle_time_s.to_bits());
-        assert_eq!(via_new.net_report(), via_cfg.net_report());
-
-        let via_mode = Executor::with_mode(&plan, ExecMode::Parallel).unwrap();
-        assert_eq!(via_mode.mode(), ExecMode::Parallel);
-        assert_eq!(via_mode.faults(), FaultSpec::default());
-
-        let mut via_set = Executor::with_config(&plan, ExecConfig::default()).unwrap();
-        via_set.set_threads(3);
-        let via_cfg_threads =
-            Executor::with_config(&plan, ExecConfig::default().threads(3)).unwrap();
-        assert_eq!(via_set.effective_threads(), via_cfg_threads.effective_threads());
-    }
-
-    #[test]
     fn fault_override_shifts_clocks_but_never_bytes() {
         let c = cluster(&[4, 8, 12]);
         let mut job = JobSpec::terasort(12);
@@ -917,9 +979,9 @@ mod tests {
         // Amplitude large enough that the jittered Map tail dwarfs the
         // shuffle duration, so some send provably stalls.
         let faults = FaultSpec::parse("straggle:seed=0xbe7c,amp=1000").unwrap();
-        let cfg = ExecConfig::default().faults(faults);
-        let mut slow = Executor::with_config(&plan, cfg).unwrap();
-        assert_eq!(slow.faults(), faults);
+        let cfg = ExecConfig::default().faults(faults.clone());
+        let mut slow = Executor::with_config(&plan, cfg.clone()).unwrap();
+        assert_eq!(slow.faults(), &faults);
         let jittered = slow.run_batch(&mut be, 42).unwrap();
 
         assert!(jittered.verified);
@@ -947,6 +1009,122 @@ mod tests {
         assert_eq!(
             again.shuffle_time_s.to_bits(),
             jittered.shuffle_time_s.to_bits()
+        );
+    }
+
+    #[test]
+    fn mid_run_dropout_replans_and_resumes_on_survivors() {
+        // `drop:node=i,at_batch=b`: batches before b run on the original
+        // plan, the rest re-plan without the node and resume — and the
+        // whole sequence is bit-identical across all three exec modes.
+        let c = cluster(&[3, 4, 5, 6]);
+        let mut job = JobSpec::terasort(8);
+        job.t = 8;
+        job.keys_per_file = 32;
+        let plan = JobBuilder::new(&c, &job).build().unwrap();
+        let node = (0..4)
+            .find(|&n| plan.replan_without(n).is_ok())
+            .expect("some node must be droppable without re-placement");
+        let faults = FaultSpec::parse(&format!("drop:node={node},at_batch=2")).unwrap();
+        let seeds = [50u64, 51, 52, 53];
+
+        let run = |mode: ExecMode, threads: usize| {
+            let cfg = ExecConfig {
+                mode,
+                threads,
+                faults: Some(faults.clone()),
+            };
+            let mut be = NativeBackend;
+            let mut exec = Executor::with_config(&plan, cfg).unwrap();
+            let reports = exec.run_batches(&mut be, &seeds).unwrap();
+            assert_eq!(exec.batches_run(), seeds.len() as u64);
+            reports
+        };
+        let rs = run(ExecMode::Serial, 0);
+        let rp = run(ExecMode::Parallel, 3);
+        let rl = run(ExecMode::Pipelined, 2);
+
+        assert_eq!(rs.len(), seeds.len());
+        for (i, r) in rs.iter().enumerate() {
+            assert!(r.verified, "batch {i} failed verification");
+            assert_eq!(r.seed, seeds[i]);
+            if i < 2 {
+                assert_eq!(r.replanned_without, None, "batch {i} ran pre-drop");
+                assert_eq!(r.k, 4);
+            } else {
+                assert_eq!(r.replanned_without, Some(node), "batch {i} ran post-drop");
+                assert_eq!(r.k, 3);
+            }
+        }
+        for other in [&rp, &rl] {
+            for (a, b) in rs.iter().zip(other.iter()) {
+                assert_eq!(a.seed, b.seed);
+                assert_eq!(a.replanned_without, b.replanned_without);
+                assert_eq!(a.payload_bytes, b.payload_bytes);
+                assert_eq!(a.wire_bytes, b.wire_bytes);
+                assert_eq!(a.messages, b.messages);
+                assert_eq!(a.shuffle_time_s.to_bits(), b.shuffle_time_s.to_bits());
+                assert_eq!(a.max_abs_err.to_bits(), b.max_abs_err.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn pipelined_recovery_serialization_latches_and_stays_bit_identical() {
+        // Second pipeline_degraded trigger: a fault spec that forces a
+        // retransmission round serializes recovery on the front stage —
+        // the pipelined run must latch the degradation, warn once, and
+        // still be bit-identical to serial. Erasures the plan absorbs
+        // without retransmission must NOT trip the latch.
+        let c = cluster(&[4, 8, 12]);
+        let mut job = JobSpec::terasort(12);
+        job.t = 8;
+        job.keys_per_file = 32;
+        let plan = JobBuilder::new(&c, &job).placer("optimal-k3").build().unwrap();
+        let seeds = [31u64, 32];
+        let mut be = NativeBackend;
+        let mut triggered = false;
+        for (r, g, b) in plan.shuffle.coords() {
+            let faults = FaultSpec::parse(&format!("erase:list={r}.{g}.{b}")).unwrap();
+            let mut serial = Executor::with_config(
+                &plan,
+                ExecConfig::default().faults(faults.clone()),
+            )
+            .unwrap();
+            let rs = serial.run_batches(&mut be, &seeds).unwrap();
+            let mut pipe = Executor::with_config(
+                &plan,
+                ExecConfig::default()
+                    .mode(ExecMode::Pipelined)
+                    .threads(2)
+                    .faults(faults),
+            )
+            .unwrap();
+            let rp = pipe.run_batches(&mut be, &seeds).unwrap();
+            for (a, b) in rs.iter().zip(&rp) {
+                assert!(a.verified && b.verified);
+                assert_eq!(a.payload_bytes, b.payload_bytes);
+                assert_eq!(a.wire_bytes, b.wire_bytes);
+                assert_eq!(a.shuffle_time_s.to_bits(), b.shuffle_time_s.to_bits());
+            }
+            assert_eq!(serial.net_report(), pipe.net_report());
+            if pipe.net_report().retransmit_rounds > 0 {
+                assert!(
+                    pipe.pipeline_degraded(),
+                    "retransmission rounds must latch pipeline degradation \
+                     (erased {r}.{g}.{b})"
+                );
+                triggered = true;
+            } else {
+                assert!(
+                    !pipe.pipeline_degraded(),
+                    "absorbed erasure {r}.{g}.{b} must not trip the latch"
+                );
+            }
+        }
+        assert!(
+            triggered,
+            "some single erasure on the bare plan must need a retransmission"
         );
     }
 

@@ -506,9 +506,12 @@ fn run_batches(
     // already resolved into the cluster at plan-build time).
     let mut exec =
         Executor::with_config(plan, ExecConfig::default().mode(mode).threads(threads))?;
-    if mode == ExecMode::Pipelined {
+    if mode == ExecMode::Pipelined || exec.faults().dropout.is_some() {
         // The pipeline consumes the whole seed list (batch i+1 Maps while
-        // batch i shuffles), so reports arrive together at the end.
+        // batch i shuffles), so reports arrive together at the end. A
+        // mid-run dropout clause also needs the whole list: the executor
+        // splits it at the departure boundary and re-plans on the
+        // survivors, which single-batch `run_batch` calls cannot see.
         let seeds: Vec<u64> = (0..batches)
             .map(|b| plan.job.seed.wrapping_add(b))
             .collect();
@@ -781,7 +784,12 @@ fn cmd_bench_json(argv: &[String]) -> i32 {
         },
         None => None,
     };
-    let report = match bench::run_extended_suite_with(threads, timing, topology_override, faults_override) {
+    let report = match bench::run_extended_suite_with(
+        threads,
+        timing,
+        topology_override,
+        faults_override.clone(),
+    ) {
         Ok(r) => r,
         Err(e) => return fail(e),
     };

@@ -7,7 +7,7 @@
 //! serialized cluster JSON when no fault is configured so every
 //! fault-free artifact stays byte-identical to the pre-fault era.
 //!
-//! Two orthogonal clauses:
+//! Four orthogonal clauses:
 //!
 //! - `straggle:seed=S,amp=A` — deterministic per-node compute-rate
 //!   jitter. Node `i` Maps `slowdown(i) = 1 + A·u_i` times slower than
@@ -22,9 +22,19 @@
 //!   rounds and the worklist decoder proves every loss pattern up to
 //!   `N` still recovers all IVs at build time, see
 //!   [`crate::coding::plan::with_repair_rounds`].
-//!
-//! Dropout (a node lost *after* planning) is not a spec clause: it is
-//! handled by re-planning, see `Plan::replan_without`.
+//! - `erase:seed=S,p=P` (or the targeted `erase:list=r.g.b,...` form) —
+//!   runtime broadcast erasure: a shuffle multicast is transmitted and
+//!   metered but reaches *no* receiver. The seeded form erases each
+//!   broadcast independently with probability `p`, keyed by
+//!   `(S, batch-epoch, round, group, broadcast-in-group)` alone — like
+//!   straggler jitter, the outcome never depends on thread count or
+//!   execution mode. The executor decodes from the survivors (repair
+//!   rounds absorb what they can) and recovers still-stranded IVs via
+//!   deterministic unicast retransmission, see [`crate::engine::exec`].
+//! - `drop:node=i,at_batch=b` — mid-run dropout: node `i` is lost once
+//!   `b` batches have completed. The executor finishes in-flight work,
+//!   re-plans without the node (`Plan::replan_without`), and resumes the
+//!   remaining batches on the survivor plan.
 
 use crate::error::{HetcdcError, Result};
 use crate::util::json::Json;
@@ -47,25 +57,79 @@ pub struct Straggle {
     pub amp: f64,
 }
 
+/// Deterministic runtime broadcast-erasure model: which shuffle
+/// multicasts are transmitted but received by nobody.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Erase {
+    /// Erase each broadcast independently with probability `p`, keyed by
+    /// `(seed, batch-epoch, round, group, broadcast-in-group)` alone —
+    /// thread- and mode-invariant by construction.
+    Seeded { seed: u64, p: f64 },
+    /// Targeted test form: erase exactly the listed
+    /// `(round, group, broadcast-in-group)` coordinates, every batch.
+    /// Canonically sorted and deduplicated.
+    List(Vec<(usize, usize, usize)>),
+}
+
+impl Erase {
+    /// Whether the broadcast at `(round, group, b)` of batch `epoch` is
+    /// erased. Pure function of the spec and the coordinates: every
+    /// execution mode, thread count, and replay answers identically.
+    pub fn erased(&self, epoch: u64, round: usize, group: usize, b: usize) -> bool {
+        match self {
+            Erase::Seeded { seed, p } => {
+                // Distinct odd mixing constants per coordinate, so no two
+                // coordinates alias (same keying idiom as `slowdowns`).
+                let key = seed
+                    .wrapping_add(epoch.wrapping_mul(0x9E37_79B9_7F4A_7C15))
+                    .wrapping_add((round as u64).wrapping_mul(0xBF58_476D_1CE4_E5B9))
+                    .wrapping_add((group as u64).wrapping_mul(0x94D0_49BB_1331_11EB))
+                    .wrapping_add((b as u64).wrapping_mul(0xD6E8_FEB8_6659_FD93));
+                Xoshiro256::seed_from_u64(key).f64_unit() < *p
+            }
+            Erase::List(list) => list.binary_search(&(round, group, b)).is_ok(),
+        }
+    }
+}
+
+/// Mid-run node dropout: `node` is lost once `at_batch` batches have
+/// completed; the remaining batches run on a survivor re-plan.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Dropout {
+    /// Node index that drops out.
+    pub node: usize,
+    /// Global batch index at which it drops (0 = before the first batch).
+    pub at_batch: u64,
+}
+
 /// Fault model a plan is built and metered under. `FaultSpec::default()`
 /// (no faults) is the implicit state of every pre-fault artifact.
-#[derive(Clone, Copy, Debug, Default, PartialEq)]
+#[derive(Clone, Debug, Default, PartialEq)]
 pub struct FaultSpec {
     /// Straggler jitter; `None` = every node Maps at its nominal rate.
     pub straggle: Option<Straggle>,
     /// Tolerated lost broadcasts (degraded decode); 0 = none.
     pub repair: usize,
+    /// Runtime broadcast erasures; `None` = every broadcast lands.
+    pub erase: Option<Erase>,
+    /// Mid-run node dropout; `None` = every node survives the run.
+    pub dropout: Option<Dropout>,
 }
 
 impl FaultSpec {
     /// True when no fault is configured (the default everywhere).
     pub fn is_none(&self) -> bool {
-        self.straggle.is_none() && self.repair == 0
+        self.straggle.is_none()
+            && self.repair == 0
+            && self.erase.is_none()
+            && self.dropout.is_none()
     }
 
     /// Parse a CLI/JSON spec string: `;`-separated clauses out of
-    /// `straggle:seed=S,amp=A` and `repair:f=N` (`none` for the empty
-    /// spec). Seeds accept decimal or `0x` hex.
+    /// `straggle:seed=S,amp=A`, `repair:f=N`, `erase:seed=S,p=P` /
+    /// `erase:list=r.g.b,...`, and `drop:node=i,at_batch=b` (`none` for
+    /// the empty spec). Seeds accept decimal or `0x` hex. At most one
+    /// clause of each kind.
     pub fn parse(spec: &str) -> Result<FaultSpec> {
         let spec = spec.trim();
         if spec.is_empty() || spec == "none" {
@@ -90,6 +154,18 @@ impl FaultSpec {
                     }
                     out.repair = parse_repair(body)?;
                 }
+                "erase" => {
+                    if out.erase.is_some() {
+                        return Err(invalid("duplicate erase clause (at most one)"));
+                    }
+                    out.erase = Some(parse_erase(body)?);
+                }
+                "drop" => {
+                    if out.dropout.is_some() {
+                        return Err(invalid("duplicate drop clause"));
+                    }
+                    out.dropout = Some(parse_drop(body)?);
+                }
                 h => return Err(invalid(format!("unknown fault clause '{h}'"))),
             }
         }
@@ -107,6 +183,22 @@ impl FaultSpec {
         if self.repair != 0 {
             clauses.push(format!("repair:f={}", self.repair));
         }
+        match &self.erase {
+            Some(Erase::Seeded { seed, p }) => {
+                clauses.push(format!("erase:seed={seed:#x},p={p}"));
+            }
+            Some(Erase::List(list)) => {
+                let entries: Vec<String> = list
+                    .iter()
+                    .map(|&(r, g, b)| format!("{r}.{g}.{b}"))
+                    .collect();
+                clauses.push(format!("erase:list={}", entries.join(",")));
+            }
+            None => {}
+        }
+        if let Some(d) = &self.dropout {
+            clauses.push(format!("drop:node={},at_batch={}", d.node, d.at_batch));
+        }
         if clauses.is_empty() {
             "none".into()
         } else {
@@ -115,7 +207,7 @@ impl FaultSpec {
     }
 
     /// Validate against a cluster of `k` nodes.
-    pub fn validate(&self, _k: usize) -> Result<()> {
+    pub fn validate(&self, k: usize) -> Result<()> {
         if let Some(s) = &self.straggle {
             if !(s.amp.is_finite() && s.amp >= 0.0) {
                 return Err(invalid(format!(
@@ -130,6 +222,35 @@ impl FaultSpec {
                  (loss-pattern verification is combinatorial in f)",
                 self.repair
             )));
+        }
+        match &self.erase {
+            Some(Erase::Seeded { p, .. }) => {
+                if !(p.is_finite() && *p > 0.0 && *p <= 1.0) {
+                    return Err(invalid(format!(
+                        "erase probability must satisfy 0 < p <= 1, got {p}"
+                    )));
+                }
+            }
+            Some(Erase::List(list)) => {
+                if list.is_empty() {
+                    return Err(invalid("erase list must name at least one broadcast"));
+                }
+                if !list.windows(2).all(|w| w[0] < w[1]) {
+                    return Err(invalid(
+                        "erase list must be sorted and deduplicated \
+                         (parse canonicalizes; construct sorted)",
+                    ));
+                }
+            }
+            None => {}
+        }
+        if let Some(d) = &self.dropout {
+            if d.node >= k {
+                return Err(invalid(format!(
+                    "drop node {} out of range for a {k}-node cluster",
+                    d.node
+                )));
+            }
         }
         Ok(())
     }
@@ -215,6 +336,85 @@ fn parse_repair(body: &str) -> Result<usize> {
     Ok(f)
 }
 
+fn parse_u64(v: &str, what: &str) -> Result<u64> {
+    let parsed = match v.strip_prefix("0x").or_else(|| v.strip_prefix("0X")) {
+        Some(hex) => u64::from_str_radix(hex, 16),
+        None => v.parse::<u64>(),
+    };
+    parsed.map_err(|_| invalid(format!("{what} '{v}' is not an integer")))
+}
+
+fn parse_erase(body: &str) -> Result<Erase> {
+    if let Some(list) = body.trim().strip_prefix("list=") {
+        let mut entries = Vec::new();
+        for entry in list.split(',').filter(|e| !e.trim().is_empty()) {
+            let parts: Vec<&str> = entry.trim().split('.').collect();
+            let coords: Option<Vec<usize>> = if parts.len() == 3 {
+                parts.iter().map(|p| p.parse::<usize>().ok()).collect()
+            } else {
+                None
+            };
+            match coords {
+                Some(c) => entries.push((c[0], c[1], c[2])),
+                None => {
+                    return Err(invalid(format!(
+                        "erase list entry '{entry}' is not round.group.broadcast"
+                    )))
+                }
+            }
+        }
+        if entries.is_empty() {
+            return Err(invalid("erase list must name at least one broadcast"));
+        }
+        entries.sort_unstable();
+        entries.dedup();
+        return Ok(Erase::List(entries));
+    }
+    let mut seed: Option<u64> = None;
+    let mut p: Option<f64> = None;
+    for pair in body.split(',').filter(|p| !p.trim().is_empty()) {
+        let (key, val) = pair
+            .split_once('=')
+            .ok_or_else(|| invalid(format!("erase option '{pair}' is not key=value")))?;
+        match (key.trim(), val.trim()) {
+            ("seed", v) => seed = Some(parse_u64(v, "erase seed")?),
+            ("p", v) => {
+                p = Some(v.parse::<f64>().map_err(|_| {
+                    invalid(format!("erase probability '{v}' is not a number"))
+                })?);
+            }
+            (k, _) => return Err(invalid(format!("unknown erase option '{k}'"))),
+        }
+    }
+    Ok(Erase::Seeded {
+        seed: seed.ok_or_else(|| invalid("erase needs seed=<int> (or list=...)"))?,
+        p: p.ok_or_else(|| invalid("erase needs p=<probability>"))?,
+    })
+}
+
+fn parse_drop(body: &str) -> Result<Dropout> {
+    let mut node: Option<usize> = None;
+    let mut at_batch: Option<u64> = None;
+    for pair in body.split(',').filter(|p| !p.trim().is_empty()) {
+        let (key, val) = pair
+            .split_once('=')
+            .ok_or_else(|| invalid(format!("drop option '{pair}' is not key=value")))?;
+        match (key.trim(), val.trim()) {
+            ("node", v) => {
+                node = Some(v.parse::<usize>().map_err(|_| {
+                    invalid(format!("drop node '{v}' is not an integer"))
+                })?);
+            }
+            ("at_batch", v) => at_batch = Some(parse_u64(v, "drop at_batch")?),
+            (k, _) => return Err(invalid(format!("unknown drop option '{k}'"))),
+        }
+    }
+    Ok(Dropout {
+        node: node.ok_or_else(|| invalid("drop needs node=<index>"))?,
+        at_batch: at_batch.ok_or_else(|| invalid("drop needs at_batch=<int>"))?,
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -226,6 +426,10 @@ mod tests {
             "straggle:seed=0xbe7c,amp=0.5",
             "repair:f=1",
             "straggle:seed=0x7,amp=0.25;repair:f=2",
+            "erase:seed=0x5eed,p=0.05",
+            "erase:list=0.1.2,1.0.0",
+            "drop:node=2,at_batch=3",
+            "straggle:seed=0x7,amp=0.25;repair:f=1;erase:seed=0x1,p=0.5;drop:node=0,at_batch=1",
         ] {
             let f = FaultSpec::parse(spec).unwrap();
             assert_eq!(f.spec(), spec);
@@ -234,6 +438,9 @@ mod tests {
         // Decimal seeds canonicalize to hex.
         let f = FaultSpec::parse("straggle:seed=16,amp=1").unwrap();
         assert_eq!(f.spec(), "straggle:seed=0x10,amp=1");
+        // Erase lists canonicalize sorted and deduplicated.
+        let f = FaultSpec::parse("erase:list=1.0.0,0.1.2,1.0.0").unwrap();
+        assert_eq!(f.spec(), "erase:list=0.1.2,1.0.0");
         assert!(FaultSpec::parse("").unwrap().is_none());
         assert!(FaultSpec::parse("none").unwrap().is_none());
     }
@@ -253,6 +460,20 @@ mod tests {
             "repair:g=1",
             "straggle:seed=1,amp=0.5;straggle:seed=2,amp=0.5",
             "repair:f=1;repair:f=2",
+            "erase:p=0.5",
+            "erase:seed=0x1",
+            "erase:seed=zz,p=0.5",
+            "erase:seed=1,p=fast",
+            "erase:seed=1,p=0.5,extra=1",
+            "erase:list=",
+            "erase:list=1.2",
+            "erase:list=1.2.3.4",
+            "erase:list=a.b.c",
+            "erase:seed=1,p=0.5;erase:list=0.0.0",
+            "drop:node=1",
+            "drop:at_batch=2",
+            "drop:node=x,at_batch=2",
+            "drop:node=1,at_batch=2;drop:node=2,at_batch=3",
         ] {
             assert!(
                 matches!(FaultSpec::parse(bad), Err(HetcdcError::InvalidParams(_))),
@@ -269,9 +490,83 @@ mod tests {
         assert!(f.validate(4).is_err());
         f.straggle = Some(Straggle { seed: 1, amp: f64::NAN });
         assert!(f.validate(4).is_err());
-        let f = FaultSpec { straggle: None, repair: MAX_REPAIR_F + 1 };
+        let f = FaultSpec { repair: MAX_REPAIR_F + 1, ..FaultSpec::default() };
         assert!(f.validate(4).is_err());
-        assert!(FaultSpec { straggle: None, repair: MAX_REPAIR_F }.validate(4).is_ok());
+        let f = FaultSpec { repair: MAX_REPAIR_F, ..FaultSpec::default() };
+        assert!(f.validate(4).is_ok());
+        // Erase probability must lie in (0, 1].
+        for p in [0.0, -0.5, 1.5, f64::NAN, f64::INFINITY] {
+            let f = FaultSpec {
+                erase: Some(Erase::Seeded { seed: 1, p }),
+                ..FaultSpec::default()
+            };
+            assert!(f.validate(4).is_err(), "p={p}");
+        }
+        let f = FaultSpec {
+            erase: Some(Erase::Seeded { seed: 1, p: 1.0 }),
+            ..FaultSpec::default()
+        };
+        assert!(f.validate(4).is_ok());
+        // Hand-built erase lists must already be canonical.
+        let f = FaultSpec {
+            erase: Some(Erase::List(vec![(1, 0, 0), (0, 1, 2)])),
+            ..FaultSpec::default()
+        };
+        assert!(f.validate(4).is_err());
+        let f = FaultSpec {
+            erase: Some(Erase::List(vec![(0, 1, 2), (1, 0, 0)])),
+            ..FaultSpec::default()
+        };
+        assert!(f.validate(4).is_ok());
+        // Drop node must exist in the cluster.
+        let f = FaultSpec {
+            dropout: Some(Dropout { node: 4, at_batch: 0 }),
+            ..FaultSpec::default()
+        };
+        assert!(f.validate(4).is_err());
+        assert!(f.validate(5).is_ok());
+    }
+
+    #[test]
+    fn erasure_draws_are_deterministic_and_coordinate_keyed() {
+        let e = Erase::Seeded { seed: 0x5EED, p: 0.5 };
+        // Pure function of the coordinates: identical on every call.
+        for epoch in 0..4u64 {
+            for r in 0..3 {
+                for g in 0..3 {
+                    for b in 0..3 {
+                        assert_eq!(
+                            e.erased(epoch, r, g, b),
+                            e.erased(epoch, r, g, b)
+                        );
+                    }
+                }
+            }
+        }
+        // At p=0.5 over 256 coordinates, both outcomes must occur, and
+        // the pattern must vary across epochs and seeds.
+        let draws = |e: &Erase, epoch: u64| -> Vec<bool> {
+            (0..256).map(|i| e.erased(epoch, i / 64, (i / 8) % 8, i % 8)).collect()
+        };
+        let a = draws(&e, 0);
+        assert!(a.iter().any(|&x| x) && a.iter().any(|&x| !x));
+        assert_ne!(a, draws(&e, 1), "epoch must re-key the draws");
+        let other = Erase::Seeded { seed: 0x5EEE, p: 0.5 };
+        assert_ne!(a, draws(&other, 0), "seed must re-key the draws");
+        // p=1 erases everything.
+        let all = Erase::Seeded { seed: 9, p: 1.0 };
+        assert!(draws(&all, 3).iter().all(|&x| x));
+    }
+
+    #[test]
+    fn erase_list_matches_exact_coordinates() {
+        let e = Erase::List(vec![(0, 1, 2), (2, 0, 0)]);
+        for epoch in 0..3u64 {
+            assert!(e.erased(epoch, 0, 1, 2));
+            assert!(e.erased(epoch, 2, 0, 0));
+            assert!(!e.erased(epoch, 0, 1, 1));
+            assert!(!e.erased(epoch, 1, 1, 2));
+        }
     }
 
     #[test]
@@ -299,8 +594,14 @@ mod tests {
 
     #[test]
     fn json_roundtrip() {
-        let f = FaultSpec::parse("straggle:seed=0x5,amp=0.75;repair:f=1").unwrap();
-        assert_eq!(FaultSpec::from_json(&f.to_json()).unwrap(), f);
+        for spec in [
+            "straggle:seed=0x5,amp=0.75;repair:f=1",
+            "erase:seed=0x5eed,p=0.05;drop:node=1,at_batch=2",
+            "erase:list=0.0.0,1.2.3",
+        ] {
+            let f = FaultSpec::parse(spec).unwrap();
+            assert_eq!(FaultSpec::from_json(&f.to_json()).unwrap(), f);
+        }
         assert!(FaultSpec::from_json(&Json::Num(1.0)).is_err());
     }
 }

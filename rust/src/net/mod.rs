@@ -5,6 +5,6 @@ pub mod faults;
 pub mod sim;
 pub mod topology;
 
-pub use faults::{FaultSpec, Straggle};
+pub use faults::{Dropout, Erase, FaultSpec, Straggle};
 pub use sim::{BroadcastNet, LinkLedger, NetReport, PhaseLedger, RoundLedger};
 pub use topology::{LinkTable, Topology};

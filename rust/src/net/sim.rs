@@ -138,6 +138,16 @@ pub struct PhaseLedger {
     /// Largest single readiness wait seen in the current round (drives
     /// [`RoundLedger::critical_node`]).
     round_max_wait: f64,
+    /// Broadcasts transmitted but received by nobody this batch (the
+    /// runtime erasure model, [`crate::net::Erase`]). 0 when fault-free.
+    erased_broadcasts: u64,
+    /// Retransmission recovery sweeps this batch (see
+    /// [`PhaseLedger::begin_retransmit_round`]).
+    retransmit_rounds: u64,
+    /// Wire bytes moved by recovery unicasts this batch.
+    recovery_bytes: u64,
+    /// NACK round trips paid by recovery unicasts this batch.
+    nack_rtts: u64,
     /// Batch epoch this ledger is accounting: bumped by every
     /// [`PhaseLedger::reset`], so a report is unambiguously tagged with
     /// the batch it measured. The pipelined executor keeps two node-state
@@ -178,8 +188,61 @@ impl PhaseLedger {
             group_prev_finish: 0.0,
             ready: Vec::new(),
             round_max_wait: 0.0,
+            erased_broadcasts: 0,
+            retransmit_rounds: 0,
+            recovery_bytes: 0,
+            nack_rtts: 0,
             epoch: 0,
         }
+    }
+
+    /// Note one erased broadcast: it was transmitted (and recorded via
+    /// the usual path — the sender's bytes and clock are unchanged by
+    /// the loss) but reached no receiver.
+    pub fn note_erased(&mut self) {
+        self.erased_broadcasts += 1;
+    }
+
+    /// Open one retransmission recovery sweep: the stranded receivers'
+    /// NACK/backoff window of `backoff_s` elapses before any resend. The
+    /// wait extends the schedule (clock and the current round's
+    /// makespan) but never `elapsed_s`, which stays the pure
+    /// transmission fold — the same split the straggler model uses.
+    pub fn begin_retransmit_round(&mut self, backoff_s: f64) {
+        self.retransmit_rounds += 1;
+        if self.rounds.is_empty() {
+            self.rounds.push(RoundLedger::default());
+        }
+        if backoff_s > 0.0 {
+            self.clock_s += backoff_s;
+            if let Some(round) = self.rounds.last_mut() {
+                round.makespan_s += backoff_s;
+            }
+            self.round_end = self.clock_s;
+        }
+    }
+
+    /// Append one recovery unicast of `nbytes` from `sender`, preceded
+    /// by its NACK travel time `nack_wait_s` and taking `t_s` on the
+    /// sender's uplink. Recovery traffic accounts into the current
+    /// (last) round section, so per-round byte sums still re-add to the
+    /// phase total; `recovery_bytes`/`nack_rtts` break it out.
+    pub fn record_retransmit(&mut self, sender: usize, nbytes: usize, nack_wait_s: f64, t_s: f64) {
+        self.bytes_by_node[sender] += nbytes as u64;
+        self.msgs_by_node[sender] += 1;
+        self.recovery_bytes += nbytes as u64;
+        self.nack_rtts += 1;
+        if self.rounds.is_empty() {
+            self.rounds.push(RoundLedger::default());
+        }
+        self.clock_s += nack_wait_s + t_s;
+        if let Some(round) = self.rounds.last_mut() {
+            round.bytes += nbytes as u64;
+            round.msgs += 1;
+            round.elapsed_s += t_s;
+            round.makespan_s += nack_wait_s + t_s;
+        }
+        self.round_end = self.clock_s;
     }
 
     /// Install per-node readiness times (seconds past the nominal Map
@@ -387,6 +450,10 @@ impl PhaseLedger {
             straggler_delay_s: self.rounds.iter().map(|r| r.straggler_delay_s).sum(),
             rounds: self.rounds.clone(),
             links,
+            erased_broadcasts: self.erased_broadcasts,
+            retransmit_rounds: self.retransmit_rounds,
+            recovery_bytes: self.recovery_bytes,
+            nack_rtts: self.nack_rtts,
             epoch: self.epoch,
         }
     }
@@ -415,6 +482,10 @@ impl PhaseLedger {
         // `ready` is deliberately kept: the straggler jitter belongs to
         // the cluster, and every batch replays the same schedule.
         self.round_max_wait = 0.0;
+        self.erased_broadcasts = 0;
+        self.retransmit_rounds = 0;
+        self.recovery_bytes = 0;
+        self.nack_rtts = 0;
         self.epoch += 1;
     }
 }
@@ -459,6 +530,18 @@ pub struct NetReport {
     /// Per-link occupancy/utilization under a switched topology; empty
     /// on the shared medium.
     pub links: Vec<LinkLedger>,
+    /// Broadcasts transmitted but received by nobody (the runtime
+    /// erasure model). All four recovery counters are 0 on fault-free
+    /// runs and omitted from serialized reports when 0, keeping
+    /// fault-free artifacts byte-identical to the pre-erasure era.
+    pub erased_broadcasts: u64,
+    /// Retransmission recovery sweeps run after the planned rounds.
+    pub retransmit_rounds: u64,
+    /// Wire bytes moved by recovery unicasts (included in the totals,
+    /// broken out here).
+    pub recovery_bytes: u64,
+    /// NACK round trips paid by recovery unicasts.
+    pub nack_rtts: u64,
     /// Batch epoch tag (ledger resets so far): after N batches through
     /// one executor this is N, in every execution mode — equality checks
     /// across modes therefore also prove both metered the same batch.
@@ -566,6 +649,33 @@ impl BroadcastNet {
                     .record_scheduled(sender, nbytes, self.latency_s, &used[..n_used])
             }
         }
+    }
+
+    /// Note one erased broadcast (already transmitted and recorded via
+    /// [`BroadcastNet::broadcast`] — the loss is at the receivers, so
+    /// bytes and clock are unchanged; only the counter moves).
+    pub fn note_erased(&mut self) {
+        self.ledger.note_erased();
+    }
+
+    /// Open retransmission recovery sweep `round` (1-based): the NACK
+    /// backoff window `latency * 2^(round-1)` elapses before resends.
+    pub fn begin_retransmit_round(&mut self, round: usize) {
+        let backoff_s = self.latency_s * f64::powi(2.0, round.saturating_sub(1) as i32);
+        self.ledger.begin_retransmit_round(backoff_s);
+    }
+
+    /// Record one reliable recovery unicast of `nbytes` from `sender`:
+    /// one NACK travel (`latency`) plus the resend on the sender's
+    /// uplink ([`BroadcastNet::tx_time`], which pays the per-message
+    /// latency again — together the NACK round trip). Returns the total
+    /// time charged. Recovery unicasts bypass the erasure model: they
+    /// are acknowledged point-to-point resends, so recovery always
+    /// terminates, even at `p=1`.
+    pub fn retransmit_unicast(&mut self, sender: usize, nbytes: usize) -> f64 {
+        let t = self.tx_time(sender, nbytes);
+        self.ledger.record_retransmit(sender, nbytes, self.latency_s, t);
+        self.latency_s + t
     }
 
     /// Install the straggler readiness times (seconds past the nominal
@@ -956,6 +1066,48 @@ mod tests {
         assert!(net.set_straggle(&[0.0, -1.0]).is_err());
         assert!(net.set_straggle(&[0.0, f64::NAN]).is_err());
         assert!(net.set_straggle(&[0.0, 1.0]).is_ok());
+    }
+
+    #[test]
+    fn recovery_counters_meter_and_reset() {
+        // 8 Mbit/s -> 1000 bytes = 1 ms; latency 0.1 ms.
+        let mut net = BroadcastNet::homogeneous(2, 8e6, 1e-4).unwrap();
+        net.begin_round();
+        net.broadcast(0, 1000);
+        net.note_erased();
+        let plan_only = net.report();
+        assert_eq!(plan_only.erased_broadcasts, 1);
+        assert_eq!(plan_only.retransmit_rounds, 0);
+        assert_eq!(plan_only.recovery_bytes, 0);
+
+        net.begin_retransmit_round(1); // backoff = latency * 2^0
+        net.retransmit_unicast(1, 1000);
+        let r = net.report();
+        assert_eq!(r.retransmit_rounds, 1);
+        assert_eq!(r.recovery_bytes, 1000);
+        assert_eq!(r.nack_rtts, 1);
+        // Totals include the recovery unicast; the round partition holds.
+        assert_eq!(r.total_bytes, 2000);
+        assert_eq!(r.msgs_by_node, vec![1, 1]);
+        assert_eq!(r.rounds.iter().map(|s| s.bytes).sum::<u64>(), r.total_bytes);
+        // Clock: plan tx (1.1ms) + backoff (0.1ms) + NACK (0.1ms) + resend (1.1ms).
+        assert!((r.elapsed_s - (1.1e-3 + 1e-4 + 1e-4 + 1.1e-3)).abs() < 1e-12);
+        // elapsed_s of the round stays the pure transmission fold; the
+        // waits land in makespan only.
+        assert!((r.rounds[0].elapsed_s - 2.2e-3).abs() < 1e-12);
+        assert!((r.rounds[0].makespan_s - r.elapsed_s).abs() < 1e-12);
+        // Exponential backoff doubles per sweep.
+        net.begin_retransmit_round(2);
+        let r2 = net.report();
+        assert!((r2.elapsed_s - (r.elapsed_s + 2e-4)).abs() < 1e-12);
+        assert_eq!(r2.retransmit_rounds, 2);
+        // All four counters are per-batch: reset zeroes them.
+        net.reset();
+        let clean = net.report();
+        assert_eq!(clean.erased_broadcasts, 0);
+        assert_eq!(clean.retransmit_rounds, 0);
+        assert_eq!(clean.recovery_bytes, 0);
+        assert_eq!(clean.nack_rtts, 0);
     }
 
     #[test]

@@ -184,7 +184,9 @@ pub mod common {
     pub const FAULTS: ArgSpec = ArgSpec {
         name: "faults",
         help: "fault model: none | straggle:seed=S,amp=A | repair:f=N | \
-               straggle:...;repair:... (overrides the cluster's; default none)",
+               erase:seed=S,p=P | erase:list=r.g.b,... | \
+               drop:node=I,at_batch=B | clauses joined with ';' \
+               (overrides the cluster's; default none)",
         takes_value: true,
         default: None,
     };

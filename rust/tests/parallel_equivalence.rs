@@ -140,9 +140,11 @@ fn check_plan(plan: &Plan, threads: usize, batches: usize, ctx: &str) {
         plan.shuffle.round_count(),
         "{ctx}: round sections"
     );
+    // Recovery unicasts (if a fault spec forced any) account into the
+    // round sections too, one message per NACK round trip.
     assert_eq!(
         nr.rounds.iter().map(|s| s.msgs).sum::<u64>(),
-        plan.shuffle.n_broadcasts() as u64,
+        plan.shuffle.n_broadcasts() as u64 + nr.nack_rtts,
         "{ctx}: round messages"
     );
 
@@ -352,7 +354,7 @@ fn every_placer_coder_combo_is_mode_equivalent_under_stragglers() {
     let straggle = FaultSpec::parse("straggle:seed=0x5EED,amp=50").unwrap();
     let mut batch_gen = Gen::new(0xFA17_0BAD);
     for (storage, n) in shapes() {
-        let cl = cluster(&storage).with_faults(straggle);
+        let cl = cluster(&storage).with_faults(straggle.clone());
         let job = small_job(n);
         for placer in builtin_placers() {
             let alloc = match placer.place(&cl, &job) {
@@ -404,7 +406,7 @@ fn repair_f1_plans_survive_every_single_broadcast_loss() {
     // test proves the shipped plan artifact, not just the build gate.)
     let repair = FaultSpec::parse("repair:f=1").unwrap();
     for (storage, n) in shapes() {
-        let cl = cluster(&storage).with_faults(repair);
+        let cl = cluster(&storage).with_faults(repair.clone());
         let job = small_job(n);
         for placer in builtin_placers() {
             let alloc = match placer.place(&cl, &job) {
@@ -444,6 +446,105 @@ fn repair_f1_plans_survive_every_single_broadcast_loss() {
                 // three modes.
                 check_plan(&plan, 3, 2, &ctx);
             }
+        }
+    }
+}
+
+#[test]
+fn repair_f1_recovers_every_single_runtime_erasure() {
+    // Runtime counterpart of `repair_f1_plans_survive_every_single_broadcast_loss`:
+    // not just the symbolic decoder, but the *executor* must absorb any
+    // one erased broadcast on an f=1 plan — decoded IVs bit-equal to the
+    // fault-free run, no retransmission needed — in all three exec modes
+    // at K = 3..6.
+    let repair = FaultSpec::parse("repair:f=1").unwrap();
+    for (storage, n) in shapes() {
+        let cl = cluster(&storage).with_faults(repair.clone());
+        let job = small_job(n);
+        let plan = JobBuilder::new(&cl, &job).build().unwrap();
+        let k = cl.k();
+        let n_sub = plan.alloc.n_sub();
+        let mut be = NativeBackend;
+        let mut reference = Executor::with_config(&plan, ExecConfig::default()).unwrap();
+        let clean = reference.run_batch(&mut be, job.seed).unwrap();
+        assert!(clean.verified);
+        let clean_net = reference.net_report();
+        for (r, g, b) in plan.shuffle.coords() {
+            let faults =
+                FaultSpec::parse(&format!("repair:f=1;erase:list={r}.{g}.{b}")).unwrap();
+            for (mode, threads) in [
+                (ExecMode::Serial, 0usize),
+                (ExecMode::Parallel, 3),
+                (ExecMode::Pipelined, 2),
+            ] {
+                let ctx = format!("K={k} erase={r}.{g}.{b} mode={}", mode.as_str());
+                let cfg = ExecConfig {
+                    mode,
+                    threads,
+                    faults: Some(faults.clone()),
+                };
+                let mut exec = Executor::with_config(&plan, cfg).unwrap();
+                let rr = exec.run_batch(&mut be, job.seed).unwrap();
+                assert!(rr.verified, "{ctx}: verification");
+                // Plan traffic is exactly the fault-free run's.
+                assert_eq!(rr.payload_bytes, clean.payload_bytes, "{ctx}: payload");
+                assert_eq!(rr.wire_bytes, clean.wire_bytes, "{ctx}: wire");
+                assert_eq!(rr.messages, clean.messages, "{ctx}: messages");
+                let nr = exec.net_report();
+                assert_eq!(nr.erased_broadcasts, 1, "{ctx}: erased count");
+                assert_eq!(
+                    nr.retransmit_rounds, 0,
+                    "{ctx}: f=1 must absorb a single erasure without resends"
+                );
+                assert_eq!(nr.recovery_bytes, 0, "{ctx}: recovery bytes");
+                assert_eq!(nr.total_bytes, clean_net.total_bytes, "{ctx}: totals");
+                // Decoded IVs bit-equal to fault-free, at every slot.
+                for node in 0..k {
+                    for group in 0..k {
+                        for sub in 0..n_sub {
+                            let iv = IvId { group, sub };
+                            assert_eq!(
+                                reference.iv(node, iv),
+                                exec.iv(node, iv),
+                                "{ctx}: node {node} {iv:?}"
+                            );
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn seeded_erasure_sweep_is_mode_equivalent() {
+    // The erasure layer must be as mode-oblivious as the fabric: with a
+    // seeded erasure spec baked into the cluster — both on a bare plan
+    // (stranded IVs force retransmission recovery) and on an f=1 repaired
+    // plan — multi-batch runs stay bit-identical across
+    // serial/parallel/pipelined: same `RunReport`s, same `NetReport`
+    // including the four recovery counters, same decoded IV bytes.
+    for (storage, n) in shapes() {
+        for spec in ["erase:seed=0x5eed,p=0.25", "repair:f=1;erase:seed=0x5eed,p=0.25"] {
+            let faults = FaultSpec::parse(spec).unwrap();
+            let cl = cluster(&storage).with_faults(faults);
+            let job = small_job(n);
+            let plan = JobBuilder::new(&cl, &job).build().unwrap();
+            check_plan(&plan, 3, 3, &format!("K={} {spec}", cl.k()));
+            // The erased path was actually exercised at p=0.25 over 3
+            // batches — the keyed hash must hit at least once.
+            let mut exec = Executor::with_config(&plan, ExecConfig::default()).unwrap();
+            let mut erased_total = 0;
+            for batch in 0..3u64 {
+                let r = exec.run_batch(&mut NativeBackend, job.seed + batch).unwrap();
+                assert!(r.verified, "K={} {spec} batch {batch}", cl.k());
+                erased_total += exec.net_report().erased_broadcasts;
+            }
+            assert!(
+                erased_total > 0,
+                "K={} {spec}: no broadcast erased across 3 batches",
+                cl.k()
+            );
         }
     }
 }

@@ -106,14 +106,13 @@ fn rule3_scope(path: &str) -> bool {
     path.starts_with("rust/src/")
 }
 
-/// The deprecated `Executor` construction shims may appear only in
-/// `engine/executor.rs` itself (their definition + shim-equivalence
-/// test) and in test code (rule 4).
+/// The removed `Executor` construction shims may not reappear anywhere
+/// in library, bench, or example code (rule 4); test code is exempt so
+/// the shims can be named in assertions about their absence.
 fn rule4_scope(path: &str) -> bool {
-    (path.starts_with("rust/src/")
+    path.starts_with("rust/src/")
         || path.starts_with("rust/benches/")
-        || path.starts_with("rust/examples/"))
-        && path != "rust/src/engine/executor.rs"
+        || path.starts_with("rust/examples/")
 }
 
 // ----------------------------------------------------------- justifications
@@ -416,10 +415,10 @@ fn rule_panic_paths(f: &SourceFile, out: &mut LintOutcome) {
 
 // ------------------------------------------- rule 4: construction path
 
-/// The deprecated `Executor::new` / `Executor::with_mode` /
-/// `.set_threads(..)` shims are banned outside their definition site and
-/// tests: `Executor::with_config` is the single construction path, so
-/// every executor in the codebase is configured the same way.
+/// The removed `Executor::new` / `Executor::with_mode` /
+/// `.set_threads(..)` shims are banned outside tests:
+/// `Executor::with_config` is the single construction path, so every
+/// executor in the codebase is configured the same way.
 fn rule_construction_path(f: &SourceFile, out: &mut LintOutcome) {
     for (i, line) in f.code.iter().enumerate() {
         let ln = i + 1;
@@ -596,10 +595,13 @@ mod tests {
     }
 
     #[test]
-    fn construction_shims_flagged_outside_executor_rs() {
+    fn construction_shims_flagged_everywhere_outside_tests() {
+        // The shims are deleted: reintroducing one anywhere in library
+        // code — including executor.rs, their former definition site —
+        // is a violation. Test code stays exempt.
         let src = "fn f(p: &Plan) { let e = Executor::new(p); }\n";
         assert_eq!(lint("rust/src/engine/exec.rs", src).violations.len(), 1);
-        assert!(lint("rust/src/engine/executor.rs", src).violations.is_empty());
+        assert_eq!(lint("rust/src/engine/executor.rs", src).violations.len(), 1);
         let test_src = format!("#[test]\nfn t() {{ {} }}\n", "let e = Executor::new(p);");
         assert!(lint("rust/src/engine/exec.rs", &test_src).violations.is_empty());
     }
